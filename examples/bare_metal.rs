@@ -1,0 +1,48 @@
+//! BM-Cylon baseline usage: run the same operations *without* the pilot
+//! layer (direct BSP launch, the paper's Bare-Metal comparator), and print
+//! a side-by-side with Radical-Cylon.
+//!
+//! ```sh
+//! cargo run --release --example bare_metal
+//! ```
+
+use radical_cylon::exec::{BareMetalEngine, Engine, HeterogeneousEngine};
+use radical_cylon::prelude::*;
+
+fn main() -> Result<()> {
+    let machine = MachineSpec::rivanna();
+    let ranks = 8;
+    let tasks = vec![
+        TaskDescription::join("join-ws", ranks, 20_000, DataDist::Uniform),
+        TaskDescription::sort("sort-ws", ranks, 20_000, DataDist::Uniform),
+    ];
+
+    println!("running {} tasks at {} ranks on {}", tasks.len(), ranks, machine.name);
+
+    let bm = BareMetalEngine::new(machine.clone(), KernelBackend::Native);
+    let bm_suite = bm.run_suite(&tasks)?;
+
+    let rp = HeterogeneousEngine::new(machine, KernelBackend::Native, ranks);
+    let rp_suite = rp.run_suite(&tasks)?;
+
+    println!("\n{:<14} {:>14} {:>14}", "task", "bare-metal (s)", "radical (s)");
+    for (b, r) in bm_suite.per_task.iter().zip(&rp_suite.per_task) {
+        println!(
+            "{:<14} {:>14.4} {:>14.4}",
+            b.name,
+            b.measurement.total_s(),
+            r.measurement.total_s()
+        );
+    }
+    println!(
+        "\nmakespan: bare-metal {:.3}s (startup {:.3}s) vs radical {:.3}s (startup {:.3}s)",
+        bm_suite.makespan_s, bm_suite.startup_s, rp_suite.makespan_s, rp_suite.startup_s
+    );
+    println!(
+        "mean RP overhead per task: {:.6}s (bare-metal: {:.6}s by construction)",
+        rp_suite.mean_overhead_s(),
+        bm_suite.mean_overhead_s()
+    );
+    println!("bare_metal OK");
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! **End-to-end driver** (DESIGN.md §5, recorded in EXPERIMENTS.md): the
+//! paper's headline experiment on a real small workload.
+//!
+//! Generates a synthetic multi-source dataset (the "heterogeneous data" of
+//! the title: a sensor-readings table + a device-catalog table), then runs
+//! the paper's §4.3 heterogeneous workload — join + sort, weak and strong
+//! scaling — through BOTH execution models on the simulated Summit machine:
+//!
+//! * batch      (separate LSF-style jobs per operation), and
+//! * Radical-Cylon (one pilot, tasks with private communicators),
+//!
+//! reporting the headline metric: heterogeneous execution is 4–15% faster
+//! at equal resources. Uses the PJRT kernel backend when artifacts are
+//! present (exercises all three layers), falling back to native otherwise.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example etl_pipeline
+//! ```
+
+use radical_cylon::config::preset;
+use radical_cylon::df::{gen_two_tables, GenSpec};
+use radical_cylon::exec::run_hetero_vs_batch;
+use radical_cylon::ops::local::{hash_join, JoinType};
+use radical_cylon::prelude::*;
+use radical_cylon::runtime::KernelService;
+
+fn main() -> Result<()> {
+    // --- the "real small workload": materialize + sanity-check the data ---
+    let spec = GenSpec::uniform(35_000, 20_000, 0xE71);
+    let (sensors, catalog) = gen_two_tables(&spec, 0);
+    let joined = hash_join(&sensors, &catalog, 0, 0, JoinType::Inner)?;
+    println!(
+        "workload: sensors {} rows x catalog {} rows -> {} joined rows/rank",
+        sensors.num_rows(),
+        catalog.num_rows(),
+        joined.num_rows()
+    );
+
+    // --- backend: all three layers if artifacts are built ---
+    let backend = match KernelService::start(&ArtifactStore::default_dir(), 2) {
+        Ok(svc) => {
+            println!("kernel backend: pjrt (AOT Pallas artifacts loaded)");
+            KernelBackend::Pjrt(svc)
+        }
+        Err(e) => {
+            println!("kernel backend: native ({e})");
+            KernelBackend::Native
+        }
+    };
+
+    // --- the paper's Fig 10/11 comparison, scaled (DESIGN.md §2) ---
+    let mut config = preset("fig10-weak").expect("preset exists");
+    config.parallelisms = vec![2, 4, 8, 16];
+    let reps = 3;
+    println!(
+        "\nhetero vs batch on simulated {}: join+sort pair, {} reps/config",
+        config.machine, reps
+    );
+
+    let rows = run_hetero_vs_batch(&config, &backend, reps)?;
+    println!(
+        "\n{:>6} {:>22} {:>22} {:>12}",
+        "ranks", "radical-cylon (s)", "batch (s)", "improvement"
+    );
+    let mut improvements = Vec::new();
+    for r in &rows {
+        println!(
+            "{:>6} {:>22} {:>22} {:>11.1}%",
+            r.parallelism,
+            r.hetero_makespan.pm(),
+            r.batch_makespan.pm(),
+            r.improvement_pct()
+        );
+        improvements.push(r.improvement_pct());
+    }
+
+    let min = improvements.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = improvements.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "\nheadline: Radical-Cylon is {min:.1}%..{max:.1}% faster than batch \
+         (paper: 4-15% across configurations)"
+    );
+    if let KernelBackend::Pjrt(svc) = &backend {
+        svc.shutdown();
+    }
+    assert!(
+        improvements.iter().all(|&i| i > 0.0),
+        "heterogeneous execution must beat batch"
+    );
+    println!("etl_pipeline OK");
+    Ok(())
+}

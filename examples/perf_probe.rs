@@ -1,0 +1,157 @@
+//! Perf probe (EXPERIMENTS.md §Perf): wall-clock timings of the L3 hot
+//! paths with the network model disabled, so optimizations are measurable
+//! without the simulated seconds.
+//!
+//! ```sh
+//! cargo run --release --example perf_probe [rows] [ranks]
+//! ```
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use radical_cylon::comm::{CommWorld, NetModel};
+use radical_cylon::df::{gen_table, gen_two_tables, GenSpec, Table};
+use radical_cylon::ops::dist::{dist_hash_join, dist_sort, shuffle_by_key, KernelBackend};
+use radical_cylon::ops::local::{merge_sorted, sort_table, JoinType, SortKey};
+use radical_cylon::util::hash::SplitMixBuild;
+use radical_cylon::util::Rng;
+
+fn time<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+/// The pre-optimization k-way merge (row-at-a-time slice+extend), kept here
+/// verbatim for an honest same-run before/after (EXPERIMENTS.md §Perf).
+fn merge_sorted_naive(parts: &[Table], col: usize) -> Table {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let keys: Vec<&[i64]> =
+        parts.iter().map(|p| p.column(col).as_i64().unwrap()).collect();
+    let mut heap = BinaryHeap::new();
+    for (pi, k) in keys.iter().enumerate() {
+        if !k.is_empty() {
+            heap.push(Reverse((k[0], pi, 0usize)));
+        }
+    }
+    let mut out_cols: Vec<radical_cylon::df::Column> =
+        parts[0].columns().iter().map(|c| c.empty_like()).collect();
+    while let Some(Reverse((_, pi, ri))) = heap.pop() {
+        for (dst, src) in out_cols.iter_mut().zip(parts[pi].columns()) {
+            dst.extend(&src.slice(ri, 1)).unwrap();
+        }
+        if ri + 1 < keys[pi].len() {
+            heap.push(Reverse((keys[pi][ri + 1], pi, ri + 1)));
+        }
+    }
+    Table::new(parts[0].schema().clone(), out_cols).unwrap()
+}
+
+/// Microbench the three optimized hot paths against their naive twins.
+fn micro_before_after(rows: usize) {
+    println!("\n-- §Perf microbenches ({rows} rows, same-run before/after) --");
+    let mut rng = Rng::new(1);
+    let keys: Vec<i64> = (0..rows).map(|_| rng.gen_i64(0, rows as i64)).collect();
+
+    // 1. k-way merge: naive slice+extend vs columnar gather.
+    let parts: Vec<Table> = (0..4)
+        .map(|r| {
+            let t = gen_table(&GenSpec::uniform(rows / 4, rows as i64, r as u64), 0);
+            sort_table(&t, SortKey::asc(0)).unwrap()
+        })
+        .collect();
+    let naive = time(3, || {
+        let _ = merge_sorted_naive(&parts, 0);
+    });
+    let opt = time(3, || {
+        let _ = merge_sorted(&parts, 0).unwrap();
+    });
+    println!(
+        "merge_sorted   : naive {:.4}s -> columnar {:.4}s  ({:.1}x)",
+        naive, opt, naive / opt
+    );
+
+    // 2. join build hashmap: SipHash vs SplitMix.
+    let sip = time(3, || {
+        let mut m: HashMap<i64, Vec<u32>> = HashMap::with_capacity(keys.len());
+        for (i, &k) in keys.iter().enumerate() {
+            m.entry(k).or_default().push(i as u32);
+        }
+        std::hint::black_box(&m);
+    });
+    let smx = time(3, || {
+        let mut m: HashMap<i64, Vec<u32>, SplitMixBuild> =
+            HashMap::with_capacity_and_hasher(keys.len(), SplitMixBuild);
+        for (i, &k) in keys.iter().enumerate() {
+            m.entry(k).or_default().push(i as u32);
+        }
+        std::hint::black_box(&m);
+    });
+    println!(
+        "join build map : siphash {:.4}s -> splitmix {:.4}s  ({:.1}x)",
+        sip, smx, sip / smx
+    );
+
+    // 3. single-key sort: generic comparator vs (key,row)-pair fast path.
+    let t = gen_table(&GenSpec::uniform(rows, rows as i64, 9), 0);
+    let generic = time(3, || {
+        // The generic multi-key path (descending defeats the fast path but
+        // costs the same comparator structure).
+        let _ = sort_table(&t, SortKey::desc(0)).unwrap();
+    });
+    let fast = time(3, || {
+        let _ = sort_table(&t, SortKey::asc(0)).unwrap();
+    });
+    println!(
+        "sort (1 x i64) : generic {:.4}s -> pair fast path {:.4}s  ({:.1}x)",
+        generic, fast, generic / fast
+    );
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let rows: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(500_000);
+    let ranks: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    println!("perf probe: {rows} rows/rank x {ranks} ranks (netmodel off)");
+
+    for (name, iters) in [("shuffle", 3), ("dist_sort", 3), ("dist_join", 3)] {
+        let mut samples = Vec::new();
+        for _ in 0..iters {
+            let w = CommWorld::new(ranks, NetModel::disabled());
+            let op = name.to_string();
+            let t0 = Instant::now();
+            w.run(move |c| {
+                let spec = GenSpec::uniform(rows, rows as i64, 42);
+                match op.as_str() {
+                    "shuffle" => {
+                        let t = gen_table(&spec, c.rank());
+                        shuffle_by_key(&c, &t, 0, &KernelBackend::Native).unwrap();
+                    }
+                    "dist_sort" => {
+                        let t = gen_table(&spec, c.rank());
+                        dist_sort(&c, &t, 0, &KernelBackend::Native).unwrap();
+                    }
+                    _ => {
+                        let (l, r) = gen_two_tables(&spec, c.rank());
+                        dist_hash_join(
+                            &c, &l, &r, 0, 0,
+                            JoinType::Inner,
+                            &KernelBackend::Native,
+                        )
+                        .unwrap();
+                    }
+                }
+            })
+            .unwrap();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let stats = radical_cylon::metrics::Stats::from_samples(&samples);
+        println!("{name:<10} {:.3} ± {:.3} s  (rows/s/rank {:.2}M)",
+            stats.mean, stats.std, rows as f64 / stats.mean / 1e6);
+    }
+
+    micro_before_after(rows);
+}

@@ -1,0 +1,12 @@
+"""Build-time compile package: Layer-2 JAX model + Layer-1 Pallas kernels.
+
+Nothing in this package is imported at runtime; ``python -m compile.aot``
+lowers the jitted entry points to HLO text once, and the Rust coordinator
+loads the artifacts through PJRT.
+"""
+
+import jax
+
+# The data plane hashes/sorts int64 keys; 64-bit lanes must be enabled
+# before any tracing happens.
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,74 @@
+"""AOT-lower the Layer-2 entry points to HLO text artifacts.
+
+HLO *text* (never ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla_extension
+0.5.1 bundled with the Rust ``xla`` crate rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+
+Also writes ``manifest.txt`` (one line per artifact:
+``name<TAB>file<TAB>arg-shapes<TAB>result-shapes``) which the Rust
+``runtime::ArtifactStore`` uses to validate call sites at load time.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# name -> (jitted fn, arg specs)
+ENTRY_POINTS = {
+    "shuffle_plan": (model.shuffle_plan, model.shuffle_plan_spec()),
+    "block_sort": (model.block_sort, model.block_sort_spec()),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _fmt_specs(specs) -> str:
+    return ",".join(f"{s.dtype}[{'x'.join(map(str, s.shape))}]" for s in specs)
+
+
+def lower_all(out_dir: str) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    written = []
+    for name, (fn, specs) in ENTRY_POINTS.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        out_specs = jax.eval_shape(fn, *specs)
+        manifest_lines.append(
+            f"{name}\t{fname}\t{_fmt_specs(specs)}\t{_fmt_specs(out_specs)}"
+        )
+        written.append(path)
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {os.path.join(out_dir, 'manifest.txt')}")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    lower_all(args.out)
+
+
+if __name__ == "__main__":
+    main()

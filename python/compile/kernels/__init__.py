@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels for the Radical-Cylon data plane.
+
+Both kernels are authored for the TPU-shaped Pallas model but lowered with
+``interpret=True`` so the resulting HLO runs on any PJRT backend (the Rust
+coordinator executes them on the CPU PJRT client).  See DESIGN.md
+§Hardware-Adaptation for the VMEM/BlockSpec rationale.
+"""
+
+from .hash_partition import hash_partition_kernel, HASH_BLOCK
+from .bitonic import bitonic_sort_kernel, SORT_BLOCK
+
+__all__ = [
+    "hash_partition_kernel",
+    "bitonic_sort_kernel",
+    "HASH_BLOCK",
+    "SORT_BLOCK",
+]

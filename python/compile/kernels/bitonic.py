@@ -1,0 +1,68 @@
+"""Pallas kernel: bitonic block sort of (key, payload) pairs.
+
+Local sort is the other data-plane hot-spot (Cylon sample-sort sorts each
+rank's partition locally before/after the shuffle).  The bitonic network is
+the canonical accelerator sort: oblivious (no data-dependent control flow),
+every stage a vectorized compare-exchange over the whole VMEM-resident
+block — the same role threadblock shared-memory sorts play in GPU shuffle
+implementations (DESIGN.md §Hardware-Adaptation).
+
+The payload column carries row indices so the Rust caller can apply the
+permutation to arbitrarily-typed tables.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 1 Ki lanes * (8 B key + 4 B payload) = 12 KiB per block in VMEM; the
+# network has log2(N)*(log2(N)+1)/2 = 55 unrolled stages at this size,
+# keeping the lowered HLO compact enough for fast PJRT compile.
+SORT_BLOCK = 1024
+
+
+def _compare_exchange(keys, payload, j, k):
+    """One bitonic stage: exchange lane i with lane i^j, direction by bit k."""
+    n = keys.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    partner = idx ^ j
+    pk = keys[partner]
+    pp = payload[partner]
+    ascending = (idx & k) == 0
+    is_low = idx < partner
+    # Lane keeps min if it is the low lane of an ascending pair (or the high
+    # lane of a descending pair).
+    keep_min = is_low == ascending
+    swap = jnp.where(keep_min, keys > pk, keys < pk)
+    new_keys = jnp.where(swap, pk, keys)
+    new_payload = jnp.where(swap, pp, payload)
+    return new_keys, new_payload
+
+
+def _kernel(keys_ref, payload_ref, out_keys_ref, out_payload_ref):
+    keys = keys_ref[...]
+    payload = payload_ref[...]
+    n = keys.shape[0]
+    k = 2
+    while k <= n:  # static python loops -> fully unrolled network
+        j = k // 2
+        while j >= 1:
+            keys, payload = _compare_exchange(keys, payload, j, k)
+            j //= 2
+        k *= 2
+    out_keys_ref[...] = keys
+    out_payload_ref[...] = payload
+
+
+def bitonic_sort_kernel(keys, payload):
+    """Sort a SORT_BLOCK-sized block of i64 keys, permuting i32 payload."""
+    n = keys.shape[0]
+    assert n == SORT_BLOCK and (n & (n - 1)) == 0
+    return pl.pallas_call(
+        _kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.int64),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ),
+        interpret=True,
+    )(keys, payload)

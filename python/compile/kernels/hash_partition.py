@@ -1,0 +1,66 @@
+"""Pallas kernel: SplitMix64 avalanche hash + partition assignment.
+
+This is the compute hot-spot of Cylon's distributed shuffle: every row key is
+hashed and mapped to a destination rank.  The kernel is bit-for-bit
+compatible with the Rust ``util::hash::splitmix64`` implementation so the
+Rust coordinator can interchange native and PJRT execution paths.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): pure element-wise VPU work;
+the grid tiles the key vector into VMEM-resident blocks of ``HASH_BLOCK``
+int64 lanes (128 KiB per block, far under the ~16 MiB VMEM budget), one
+HBM->VMEM round-trip per block, no MXU involvement.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Keys per grid step.  16 Ki * 8 B = 128 KiB of VMEM per input block.
+HASH_BLOCK = 16384
+
+# numpy scalars (not jnp arrays): pallas_call rejects closure-captured
+# constant *arrays*, while numpy scalars are inlined as jaxpr literals; raw
+# python ints overflow the default int64 promotion path.
+_GAMMA = np.uint64(0x9E3779B97F4A7C15)
+_MIX1 = np.uint64(0xBF58476D1CE4E5B9)
+_MIX2 = np.uint64(0x94D049BB133111EB)
+
+
+def splitmix64(z):
+    """SplitMix64 finalizer over uint64 lanes (wrapping arithmetic)."""
+    z = z + _GAMMA
+    z = (z ^ (z >> np.uint64(30))) * _MIX1
+    z = (z ^ (z >> np.uint64(27))) * _MIX2
+    return z ^ (z >> np.uint64(31))
+
+
+def _kernel(nparts_ref, keys_ref, out_ref):
+    keys = keys_ref[...]
+    h = splitmix64(keys.astype(jnp.uint64))
+    nparts = nparts_ref[0].astype(jnp.uint64)
+    out_ref[...] = (h % nparts).astype(jnp.int32)
+
+
+def hash_partition_kernel(keys, nparts):
+    """Map ``keys`` (i64[N]) to partition ids (i32[N]) in [0, nparts).
+
+    ``nparts`` is a u32[1] runtime argument so a single AOT artifact serves
+    every communicator size the coordinator constructs.  N must be a
+    multiple of HASH_BLOCK (the Rust caller pads the tail block).
+    """
+    n = keys.shape[0]
+    assert n % HASH_BLOCK == 0, f"N={n} must be a multiple of {HASH_BLOCK}"
+    grid = (n // HASH_BLOCK,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            # nparts is broadcast to every block (scalar prefetch analogue).
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((HASH_BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((HASH_BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(nparts, keys)

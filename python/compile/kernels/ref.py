@@ -1,0 +1,17 @@
+"""Pure-jnp oracles for the Layer-1 kernels (correctness only, no Pallas)."""
+
+import jax.numpy as jnp
+
+from .hash_partition import splitmix64
+
+
+def hash_partition_ref(keys, nparts):
+    """Reference for hash_partition_kernel: i64[N], u32[1] -> i32[N]."""
+    h = splitmix64(keys.astype(jnp.uint64))
+    return (h % nparts[0].astype(jnp.uint64)).astype(jnp.int32)
+
+
+def bitonic_sort_ref(keys, payload):
+    """Reference for bitonic_sort_kernel: stable argsort by key."""
+    order = jnp.argsort(keys, stable=True)
+    return keys[order], payload[order].astype(jnp.int32)

@@ -1,0 +1,62 @@
+"""Layer-2 JAX compute graph for the Radical-Cylon data plane.
+
+Two jitted entry points wrap the Layer-1 Pallas kernels:
+
+* ``shuffle_plan``  — partition assignment for Cylon's distributed shuffle
+  (used by distributed join and sample-sort repartitioning).
+* ``block_sort``    — local bitonic block sort feeding Cylon's local
+  sort/merge phase.
+
+Each is lowered once by ``aot.py`` to HLO text; the Rust coordinator
+compiles the text on its PJRT CPU client and invokes the executables from
+the data-plane hot path.  Python never runs at request time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    HASH_BLOCK,
+    SORT_BLOCK,
+    bitonic_sort_kernel,
+    hash_partition_kernel,
+)
+
+
+def shuffle_plan(keys, nparts):
+    """Partition ids for a block of join/sort keys.
+
+    Args:
+      keys: i64[N] row keys (N a multiple of HASH_BLOCK; caller pads).
+      nparts: u32[1] number of destination ranks in the task's private
+        communicator.
+
+    Returns:
+      (part_ids,): i32[N] destination rank per row.
+    """
+    return (hash_partition_kernel(keys, nparts),)
+
+
+def block_sort(keys, payload):
+    """Sort one SORT_BLOCK of keys, permuting the i32 payload with them.
+
+    Returns a 2-tuple ``(sorted_keys, permuted_payload)``; payload carries
+    row indices so the caller can permute arbitrary table columns.
+    """
+    return bitonic_sort_kernel(keys, payload)
+
+
+def shuffle_plan_spec(n=HASH_BLOCK):
+    """ShapeDtypeStructs matching ``shuffle_plan``'s AOT signature."""
+    return (
+        jax.ShapeDtypeStruct((n,), jnp.int64),
+        jax.ShapeDtypeStruct((1,), jnp.uint32),
+    )
+
+
+def block_sort_spec(n=SORT_BLOCK):
+    """ShapeDtypeStructs matching ``block_sort``'s AOT signature."""
+    return (
+        jax.ShapeDtypeStruct((n,), jnp.int64),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+    )

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Make `compile` (and its x64 config side-effect) importable from python/.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import compile  # noqa: F401  (enables jax x64 before any test traces)

@@ -1,0 +1,76 @@
+"""L1 bitonic block-sort kernel vs argsort oracle (+ hypothesis sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import SORT_BLOCK, bitonic_sort_kernel
+from compile.kernels.ref import bitonic_sort_ref
+
+
+def _case(seed, dupes=False):
+    rng = np.random.default_rng(seed)
+    if dupes:
+        keys = rng.integers(0, 16, size=SORT_BLOCK)
+    else:
+        keys = rng.permutation(SORT_BLOCK).astype(np.int64)
+    payload = np.arange(SORT_BLOCK, dtype=np.int32)
+    return jnp.asarray(keys, jnp.int64), jnp.asarray(payload)
+
+
+def test_sorts_permutation():
+    keys, payload = _case(0)
+    sk, sp = bitonic_sort_kernel(keys, payload)
+    rk, _ = bitonic_sort_ref(keys, payload)
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(rk))
+    # payload is the inverse permutation: keys[payload] == sorted keys
+    np.testing.assert_array_equal(
+        np.asarray(keys)[np.asarray(sp)], np.asarray(sk)
+    )
+
+
+def test_sorts_with_duplicates():
+    keys, payload = _case(1, dupes=True)
+    sk, sp = bitonic_sort_kernel(keys, payload)
+    np.testing.assert_array_equal(np.asarray(sk), np.sort(np.asarray(keys)))
+    np.testing.assert_array_equal(
+        np.asarray(keys)[np.asarray(sp)], np.asarray(sk)
+    )
+
+
+def test_already_sorted_and_reversed():
+    base = jnp.arange(SORT_BLOCK, dtype=jnp.int64)
+    payload = jnp.arange(SORT_BLOCK, dtype=jnp.int32)
+    sk, _ = bitonic_sort_kernel(base, payload)
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(base))
+    sk, sp = bitonic_sort_kernel(base[::-1], payload)
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(base))
+    np.testing.assert_array_equal(np.asarray(sp), np.asarray(payload)[::-1])
+
+
+def test_extreme_values():
+    keys = np.zeros(SORT_BLOCK, dtype=np.int64)
+    keys[0] = np.iinfo(np.int64).max
+    keys[1] = np.iinfo(np.int64).min
+    keys[2] = -1
+    sk, sp = bitonic_sort_kernel(jnp.asarray(keys), jnp.arange(SORT_BLOCK, dtype=jnp.int32))
+    np.testing.assert_array_equal(np.asarray(sk), np.sort(keys))
+    np.testing.assert_array_equal(keys[np.asarray(sp)], np.asarray(sk))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    lo=st.integers(-(2**62), 0),
+    hi=st.integers(1, 2**62),
+)
+def test_hypothesis_sweep(seed, lo, hi):
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.integers(lo, hi, size=SORT_BLOCK), jnp.int64)
+    payload = jnp.arange(SORT_BLOCK, dtype=jnp.int32)
+    sk, sp = bitonic_sort_kernel(keys, payload)
+    np.testing.assert_array_equal(np.asarray(sk), np.sort(np.asarray(keys)))
+    np.testing.assert_array_equal(
+        np.asarray(keys)[np.asarray(sp)], np.asarray(sk)
+    )

@@ -1,0 +1,51 @@
+//! Regenerates **Fig 10**: heterogeneous vs batch execution of the
+//! join+sort pair, strong (left) + weak (right) scaling on Summit.
+//!
+//! Paper anchor (weak scaling, 84 CPUs): heterogeneous 417.33s vs batch
+//! 488.33s. Shape claims: heterogeneous <= batch at every configuration.
+
+use radical_cylon::config::{preset, SCALE_NOTE, SUMMIT_PAPER_RANKS};
+use radical_cylon::exec::run_hetero_vs_batch;
+use radical_cylon::metrics::render_table;
+use radical_cylon::ops::dist::KernelBackend;
+use radical_cylon::util::bench_harness::bench_iters;
+
+fn main() {
+    println!("=== Fig 10: heterogeneous vs batch (Summit) ===");
+    println!("{SCALE_NOTE}");
+    println!("paper anchor @84 CPUs weak: hetero 417.33s vs batch 488.33s");
+    for id in ["fig10-strong", "fig10-weak"] {
+        let config = preset(id).expect("preset");
+        let reps = bench_iters(3);
+        let rows = run_hetero_vs_batch(&config, &KernelBackend::Native, reps)
+            .expect("comparison");
+        let table: Vec<Vec<String>> = rows
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                vec![
+                    format!("{} (paper {})", r.parallelism, SUMMIT_PAPER_RANKS[i]),
+                    r.hetero_makespan.pm(),
+                    r.batch_makespan.pm(),
+                    format!("{:+.1}%", r.improvement_pct()),
+                ]
+            })
+            .collect();
+        println!("\n--- {id} ---");
+        print!(
+            "{}",
+            render_table(
+                &["ranks", "radical-cylon (s)", "batch (s)", "improvement"],
+                &table
+            )
+        );
+        for r in &rows {
+            assert!(
+                r.hetero_makespan.mean <= r.batch_makespan.mean,
+                "hetero must not lose to batch at p={}",
+                r.parallelism
+            );
+        }
+    }
+    println!("\nfig10 bench done");
+}

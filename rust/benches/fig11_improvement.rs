@@ -1,0 +1,45 @@
+//! Regenerates **Fig 11**: Radical-Cylon's improvement over batch
+//! execution, as percentage bars per configuration (the paper's headline
+//! 4–15% band).
+
+use radical_cylon::config::{preset, SCALE_NOTE, SUMMIT_PAPER_RANKS};
+use radical_cylon::exec::run_hetero_vs_batch;
+use radical_cylon::ops::dist::KernelBackend;
+use radical_cylon::util::bench_harness::bench_iters;
+
+fn bar(pct: f64) -> String {
+    let blocks = (pct.max(0.0) * 2.0).round() as usize;
+    "#".repeat(blocks.min(60))
+}
+
+fn main() {
+    println!("=== Fig 11: improvement of heterogeneous over batch (Summit) ===");
+    println!("{SCALE_NOTE}");
+    let mut all = Vec::new();
+    for id in ["fig11", "fig10-strong"] {
+        let config = preset(id).expect("preset");
+        let reps = bench_iters(3);
+        let rows = run_hetero_vs_batch(&config, &KernelBackend::Native, reps)
+            .expect("comparison");
+        let label = if id == "fig11" { "weak" } else { "strong" };
+        println!("\n--- {label} scaling ---");
+        for (i, r) in rows.iter().enumerate() {
+            let pct = r.improvement_pct();
+            println!(
+                "{:>6} ranks (paper {:>5}): {:>5.1}% {}",
+                r.parallelism,
+                SUMMIT_PAPER_RANKS[i],
+                pct,
+                bar(pct)
+            );
+            all.push(pct);
+        }
+    }
+    let min = all.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = all.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "\nmeasured improvement band: {min:.1}%..{max:.1}% (paper: 4-15%)"
+    );
+    assert!(min > 0.0, "heterogeneous must beat batch everywhere");
+    println!("\nfig11 bench done");
+}

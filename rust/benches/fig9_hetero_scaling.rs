@@ -1,0 +1,65 @@
+//! Regenerates **Fig 9**: heterogeneous executions — the 4-op workload
+//! (join WS, sort WS, join SS, sort SS) inside one pilot, swept over Summit
+//! parallelisms. Plots execution time per op class vs parallelism.
+
+use radical_cylon::config::{preset, SCALE_NOTE, SUMMIT_PAPER_RANKS};
+use radical_cylon::exec::{runner::hetero_workload, Engine, HeterogeneousEngine};
+use radical_cylon::metrics::{render_table, Stats};
+use radical_cylon::ops::dist::KernelBackend;
+use radical_cylon::util::bench_harness::bench_iters;
+
+fn main() {
+    println!("=== Fig 9: 4-op heterogeneous scaling (Summit) ===");
+    println!("{SCALE_NOTE}");
+    let mut config = preset("fig9").expect("preset");
+    config.iterations = bench_iters(3);
+    let machine = config.machine_spec().expect("machine");
+
+    let mut table = Vec::new();
+    let mut weak_series: Vec<f64> = Vec::new();
+    let mut strong_series: Vec<f64> = Vec::new();
+    for (pi, &p) in config.parallelisms.iter().enumerate() {
+        // iterations repetitions of the 4-op suite in one pilot each.
+        let mut per_op: Vec<Vec<f64>> = vec![Vec::new(); 4];
+        for iter in 0..config.iterations {
+            let tasks = hetero_workload(&config, p, iter);
+            let eng =
+                HeterogeneousEngine::new(machine.clone(), KernelBackend::Native, p);
+            let suite = eng.run_suite(&tasks).expect("suite");
+            for (k, r) in suite.per_task.iter().enumerate() {
+                per_op[k].push(r.measurement.total_s());
+            }
+        }
+        let stats: Vec<Stats> =
+            per_op.iter().map(|s| Stats::from_samples(s)).collect();
+        weak_series.push(stats[0].mean.max(stats[1].mean));
+        strong_series.push(stats[2].mean.max(stats[3].mean));
+        table.push(vec![
+            format!("{p} (paper {})", SUMMIT_PAPER_RANKS[pi]),
+            stats[0].pm(), // join WS
+            stats[1].pm(), // sort WS
+            stats[2].pm(), // join SS
+            stats[3].pm(), // sort SS
+        ]);
+    }
+    print!(
+        "{}",
+        render_table(
+            &["ranks", "join WS (s)", "sort WS (s)", "join SS (s)", "sort SS (s)"],
+            &table
+        )
+    );
+    // Shape: WS rises gently; SS falls with ranks.
+    assert!(
+        strong_series.first().unwrap() > strong_series.last().unwrap(),
+        "strong-scaling ops must speed up with ranks"
+    );
+    println!(
+        "shape: weak {:.3}->{:.3}s (gentle rise), strong {:.3}->{:.3}s (~1/p fall)",
+        weak_series.first().unwrap(),
+        weak_series.last().unwrap(),
+        strong_series.first().unwrap(),
+        strong_series.last().unwrap()
+    );
+    println!("\nfig9 bench done");
+}

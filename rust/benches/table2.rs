@@ -1,0 +1,95 @@
+//! Regenerates **Table 2**: Radical-Cylon execution time and overheads for
+//! join/sort x weak/strong scaling on (simulated) Rivanna.
+//!
+//! Paper values are printed side-by-side. Absolute seconds differ (rows
+//! scaled /1000, threads not InfiniBand ranks — DESIGN.md §2); the *shape*
+//! claims to check are: weak-scaling time slowly rising, strong-scaling
+//! time ~1/ranks, and overheads small + constant in parallelism.
+
+use radical_cylon::config::{preset, RIVANNA_PAPER_RANKS, SCALE_NOTE};
+use radical_cylon::exec::{run_scaling, EngineKind};
+use radical_cylon::metrics::render_table;
+use radical_cylon::ops::dist::KernelBackend;
+use radical_cylon::util::bench_harness::bench_iters;
+
+/// Paper Table 2 means: (exec seconds, overhead seconds) per parallelism.
+const PAPER: &[(&str, [f64; 6], [f64; 6])] = &[
+    (
+        "table2-join-weak",
+        [215.64, 226.12, 237.01, 239.87, 241.59, 253.66],
+        [2.9, 2.3, 2.8, 2.5, 2.9, 3.2],
+    ),
+    (
+        "table2-join-strong",
+        [144.80, 98.03, 78.14, 61.80, 52.72, 47.10],
+        [2.79, 2.51, 2.45, 2.81, 3.0, 3.5],
+    ),
+    (
+        "table2-sort-weak",
+        [192.74, 204.44, 207.20, 212.81, 215.05, 223.88],
+        [3.87, 3.4, 3.85, 2.59, 2.61, 3.23],
+    ),
+    (
+        "table2-sort-strong",
+        [125.53, 84.20, 63.76, 51.31, 44.46, 39.52],
+        [2.42, 2.37, 2.42, 2.65, 2.91, 3.5],
+    ),
+];
+
+fn main() {
+    println!("=== Table 2: RP-Cylon execution time + overheads (Rivanna) ===");
+    println!("{SCALE_NOTE}");
+    for (id, paper_exec, paper_ovh) in PAPER {
+        let mut config = preset(id).expect("preset");
+        config.iterations = bench_iters(5);
+        let rows = run_scaling(&config, EngineKind::Heterogeneous, &KernelBackend::Native)
+            .expect("sweep runs");
+        let table: Vec<Vec<String>> = rows
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                vec![
+                    format!("{} (paper {})", r.parallelism, RIVANNA_PAPER_RANKS[i]),
+                    r.total.pm(),
+                    format!("{:.2}", paper_exec[i]),
+                    format!("{:.4}", r.overhead.mean),
+                    format!("{:.2}", paper_ovh[i]),
+                ]
+            })
+            .collect();
+        println!("\n--- {id} ---");
+        print!(
+            "{}",
+            render_table(
+                &[
+                    "ranks",
+                    "measured exec (s)",
+                    "paper exec (s)",
+                    "measured ovh (s)",
+                    "paper ovh (s)",
+                ],
+                &table,
+            )
+        );
+        // Shape checks (who wins / trend), not absolute numbers.
+        let first = rows.first().unwrap().total.mean;
+        let last = rows.last().unwrap().total.mean;
+        if id.ends_with("strong") {
+            assert!(
+                last < first,
+                "{id}: strong scaling must reduce time ({first:.3} -> {last:.3})"
+            );
+        } else {
+            assert!(
+                last >= first * 0.8,
+                "{id}: weak scaling should not collapse ({first:.3} -> {last:.3})"
+            );
+        }
+        let ovh_first = rows.first().unwrap().overhead.mean;
+        let ovh_last = rows.last().unwrap().overhead.mean;
+        println!(
+            "shape: exec {first:.3}s -> {last:.3}s | overhead {ovh_first:.5}s -> {ovh_last:.5}s (paper: constant ~3s)"
+        );
+    }
+    println!("\ntable2 bench done");
+}

@@ -1,0 +1,251 @@
+//! Launcher CLI (hand-rolled parser; clap is unavailable offline).
+//!
+//! ```text
+//! radical-cylon info [--experiments]
+//! radical-cylon run --experiment <id> [--engine bm|batch|rp] [--backend native|pjrt]
+//!                   [--iterations N] [--parallelisms 2,4,8] [--config file.ini]
+//! radical-cylon pipeline-demo [--ranks N]
+//! ```
+
+use crate::config::{parse_ini, preset, preset_ids, ExperimentConfig, SCALE_NOTE};
+use crate::error::{Error, Result};
+use crate::exec::{run_hetero_vs_batch, run_scaling, EngineKind};
+use crate::metrics::render_table;
+use crate::ops::dist::KernelBackend;
+use crate::runtime::{ArtifactStore, KernelService};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    /// Parse `--key value` / `--key` / bare-command argument lists.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".into());
+        let mut flags = Vec::new();
+        while let Some(arg) = it.next() {
+            let Some(key) = arg.strip_prefix("--") else {
+                return Err(Error::Config(format!(
+                    "unexpected positional argument '{arg}'"
+                )));
+            };
+            let value = match it.peek() {
+                Some(v) if !v.starts_with("--") => Some(it.next().unwrap()),
+                _ => None,
+            };
+            flags.push((key.to_string(), value));
+        }
+        Ok(Args { command, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.iter().any(|(k, _)| k == key)
+    }
+}
+
+fn backend_from(args: &Args) -> Result<KernelBackend> {
+    match args.get("backend").unwrap_or("native") {
+        "native" => Ok(KernelBackend::Native),
+        "pjrt" => {
+            let svc = KernelService::start(&ArtifactStore::default_dir(), 2)?;
+            Ok(KernelBackend::Pjrt(svc))
+        }
+        other => Err(Error::Config(format!("unknown backend '{other}'"))),
+    }
+}
+
+fn config_from(args: &Args) -> Result<ExperimentConfig> {
+    let mut config = if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)?;
+        ExperimentConfig::from_ini(&parse_ini(&text)?)
+    } else {
+        let id = args
+            .get("experiment")
+            .ok_or_else(|| Error::Config("--experiment <id> required".into()))?;
+        preset(id).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown experiment '{id}' (try: {})",
+                preset_ids().join(", ")
+            ))
+        })
+    }?;
+    if let Some(iters) = args.get("iterations") {
+        config.iterations = iters
+            .parse()
+            .map_err(|_| Error::Config("bad --iterations".into()))?;
+    }
+    if let Some(ps) = args.get("parallelisms") {
+        config.parallelisms = ps
+            .split(',')
+            .map(|s| s.trim().parse().map_err(|_| Error::Config("bad --parallelisms".into())))
+            .collect::<Result<_>>()?;
+    }
+    Ok(config)
+}
+
+fn cmd_info(args: &Args) -> Result<String> {
+    let mut out = String::new();
+    out.push_str("radical-cylon: Radical-Cylon reproduction (CS.DC 2024)\n");
+    out.push_str(&format!("{SCALE_NOTE}\n\n"));
+    if args.has("experiments") {
+        out.push_str("experiments (paper Table 1 + Figs 5-11):\n");
+        let rows: Vec<Vec<String>> = preset_ids()
+            .iter()
+            .filter_map(|id| preset(id))
+            .map(|c| {
+                vec![
+                    c.id.clone(),
+                    c.machine.clone(),
+                    c.op.clone(),
+                    c.scaling.name().into(),
+                    format!("{:?}", c.parallelisms),
+                ]
+            })
+            .collect();
+        out.push_str(&render_table(
+            &["id", "machine", "op", "scaling", "parallelisms"],
+            &rows,
+        ));
+    }
+    Ok(out)
+}
+
+fn cmd_run(args: &Args) -> Result<String> {
+    let config = config_from(args)?;
+    let backend = backend_from(args)?;
+    let mut out = format!(
+        "experiment {} on {} ({} scaling), {} iterations [{}]\n",
+        config.id,
+        config.machine,
+        config.scaling.name(),
+        config.iterations,
+        backend.name(),
+    );
+    if config.op == "hetero" {
+        let rows = run_hetero_vs_batch(&config, &backend, config.iterations)?;
+        let table: Vec<Vec<String>> = rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.parallelism.to_string(),
+                    r.hetero_makespan.pm(),
+                    r.batch_makespan.pm(),
+                    format!("{:+.1}%", r.improvement_pct()),
+                ]
+            })
+            .collect();
+        out.push_str(&render_table(
+            &["ranks", "radical-cylon (s)", "batch (s)", "improvement"],
+            &table,
+        ));
+    } else {
+        let kind = match args.get("engine").unwrap_or("rp") {
+            "bm" => EngineKind::BareMetal,
+            "batch" => EngineKind::Batch,
+            "rp" => EngineKind::Heterogeneous,
+            other => return Err(Error::Config(format!("unknown engine '{other}'"))),
+        };
+        let rows = run_scaling(&config, kind, &backend)?;
+        let table: Vec<Vec<String>> = rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.parallelism.to_string(),
+                    r.rows_per_rank.to_string(),
+                    r.total.pm(),
+                    r.overhead.pm(),
+                    r.output_rows.to_string(),
+                ]
+            })
+            .collect();
+        out.push_str(&render_table(
+            &["ranks", "rows/rank", "exec time (s)", "overhead (s)", "out rows"],
+            &table,
+        ));
+    }
+    Ok(out)
+}
+
+fn cmd_help() -> String {
+    "usage:\n  radical-cylon info [--experiments]\n  radical-cylon run --experiment <id> \
+     [--engine bm|batch|rp] [--backend native|pjrt] [--iterations N] \
+     [--parallelisms 2,4,8] [--config file.ini]\n"
+        .to_string()
+}
+
+/// CLI entrypoint: returns the text to print, or an error.
+pub fn dispatch(argv: Vec<String>) -> Result<String> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "info" => cmd_info(&args),
+        "run" => cmd_run(&args),
+        "help" | "--help" | "-h" => Ok(cmd_help()),
+        other => Err(Error::Config(format!(
+            "unknown command '{other}'\n{}",
+            cmd_help()
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags() {
+        let a = Args::parse(argv("run --experiment fig5-weak --iterations 3 --flag")).unwrap();
+        assert_eq!(a.command, "run");
+        assert_eq!(a.get("experiment"), Some("fig5-weak"));
+        assert_eq!(a.get("iterations"), Some("3"));
+        assert!(a.has("flag"));
+        assert!(!a.has("nope"));
+    }
+
+    #[test]
+    fn info_lists_experiments() {
+        let out = dispatch(argv("info --experiments")).unwrap();
+        assert!(out.contains("fig10-weak"));
+        assert!(out.contains("table2-join-weak"));
+    }
+
+    #[test]
+    fn run_small_experiment_end_to_end() {
+        let out = dispatch(argv(
+            "run --experiment overhead --iterations 2 --parallelisms 2,3",
+        ))
+        .unwrap();
+        assert!(out.contains("exec time"), "{out}");
+        // two parallelism rows
+        assert!(out.lines().count() >= 4, "{out}");
+    }
+
+    #[test]
+    fn errors_are_helpful() {
+        let e = dispatch(argv("run")).unwrap_err().to_string();
+        assert!(e.contains("--experiment"), "{e}");
+        let e2 = dispatch(argv("run --experiment nope")).unwrap_err().to_string();
+        assert!(e2.contains("unknown experiment"), "{e2}");
+        let e3 = dispatch(argv("frobnicate")).unwrap_err().to_string();
+        assert!(e3.contains("unknown command"), "{e3}");
+    }
+
+    #[test]
+    fn help_shown() {
+        assert!(dispatch(argv("help")).unwrap().contains("usage"));
+    }
+}

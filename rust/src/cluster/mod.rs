@@ -1,0 +1,9 @@
+//! Simulated HPC clusters and their resource managers — the stand-in for
+//! UVA-Rivanna (SLURM, 37 cores/node) and ORNL-Summit (LSF, 42 cores/node)
+//! from the paper's Table 1 (DESIGN.md §2 substitution log).
+
+mod machine;
+mod rm;
+
+pub use machine::{FabricClass, MachineSpec};
+pub use rm::{rm_for, Allocation, LsfRM, ResourceManager, RmPolicy, SlurmRM};

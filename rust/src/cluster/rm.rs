@@ -1,0 +1,345 @@
+//! Resource managers: SLURM-like (Rivanna) and LSF-like (Summit) allocation
+//! semantics over a simulated cluster.
+//!
+//! The scheduling-relevant differences the paper's batch-vs-heterogeneous
+//! comparison depends on are modeled: every *job* (allocation) pays a
+//! dispatch latency before its resources are usable, separate jobs never
+//! share cores, and core accounting is per-node. Latencies are *virtual*
+//! seconds (recorded, not slept) so experiments stay fast and deterministic.
+
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+use super::machine::MachineSpec;
+
+/// A granted set of cores with exact per-node bookkeeping.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    pub id: u64,
+    /// (node index, cores taken on that node).
+    pub taken: Vec<(usize, usize)>,
+    /// Cores the caller asked for (exclusive jobs may consume more).
+    pub requested: usize,
+    /// Virtual seconds spent queued + dispatching before the allocation
+    /// became usable.
+    pub startup_latency: f64,
+}
+
+impl Allocation {
+    pub fn nodes(&self) -> Vec<usize> {
+        self.taken.iter().map(|(n, _)| *n).collect()
+    }
+
+    /// Cores actually consumed (≥ requested for exclusive jobs).
+    pub fn cores_taken(&self) -> usize {
+        self.taken.iter().map(|(_, c)| *c).sum()
+    }
+}
+
+/// Dispatch-latency policy knobs shared by both RM flavors.
+#[derive(Clone, Copy, Debug)]
+pub struct RmPolicy {
+    /// Mean dispatch latency per job (virtual seconds).
+    pub dispatch_mean: f64,
+    /// Extra per-node dispatch cost (virtual seconds).
+    pub per_node: f64,
+    /// Deterministic seed for latency jitter.
+    pub seed: u64,
+}
+
+impl RmPolicy {
+    pub fn for_machine(m: &MachineSpec) -> RmPolicy {
+        RmPolicy { dispatch_mean: m.rm_dispatch_latency, per_node: 0.02, seed: 0x5eed }
+    }
+}
+
+struct RmState {
+    free_cores_per_node: Vec<usize>,
+    next_id: u64,
+    rng: Rng,
+}
+
+/// Common allocation interface; SLURM/LSF differ in latency shape.
+pub trait ResourceManager: Send + Sync {
+    fn machine(&self) -> &MachineSpec;
+
+    /// Request `cores` cores; `exclusive` jobs take whole nodes (LSF batch
+    /// semantics on Summit).
+    fn allocate(&self, cores: usize, exclusive: bool) -> Result<Allocation>;
+
+    /// Return an allocation's cores to the pool.
+    fn release(&self, alloc: &Allocation);
+
+    /// Cores currently available.
+    fn free_cores(&self) -> usize;
+
+    /// Scheduler flavor name ("slurm" / "lsf").
+    fn flavor(&self) -> &'static str;
+}
+
+fn new_state(m: &MachineSpec, policy: &RmPolicy) -> Mutex<RmState> {
+    Mutex::new(RmState {
+        free_cores_per_node: vec![m.cores_per_node; m.max_nodes],
+        next_id: 1,
+        rng: Rng::new(policy.seed),
+    })
+}
+
+fn do_allocate(
+    m: &MachineSpec,
+    policy: &RmPolicy,
+    st: &mut RmState,
+    cores: usize,
+    exclusive: bool,
+    latency_shape: fn(&mut Rng, f64) -> f64,
+) -> Result<Allocation> {
+    if cores == 0 {
+        return Err(Error::Resource("allocation of zero cores".into()));
+    }
+    let mut taken: Vec<(usize, usize)> = Vec::new();
+    if exclusive {
+        // Whole fully-free nodes until the request is covered.
+        let nodes_needed = cores.div_ceil(m.cores_per_node);
+        for (n, free) in st.free_cores_per_node.iter().enumerate() {
+            if taken.len() == nodes_needed {
+                break;
+            }
+            if *free == m.cores_per_node {
+                taken.push((n, m.cores_per_node));
+            }
+        }
+        if taken.len() < nodes_needed {
+            return Err(Error::Resource(format!(
+                "cannot satisfy {cores} cores exclusively ({} free nodes, need {nodes_needed})",
+                st.free_cores_per_node
+                    .iter()
+                    .filter(|&&f| f == m.cores_per_node)
+                    .count()
+            )));
+        }
+    } else {
+        // First-fit over partially-free nodes.
+        let mut remaining = cores;
+        for (n, free) in st.free_cores_per_node.iter().enumerate() {
+            if remaining == 0 {
+                break;
+            }
+            if *free > 0 {
+                let take = (*free).min(remaining);
+                taken.push((n, take));
+                remaining -= take;
+            }
+        }
+        if remaining > 0 {
+            return Err(Error::Resource(format!(
+                "cannot satisfy {cores} cores (free={})",
+                st.free_cores_per_node.iter().sum::<usize>()
+            )));
+        }
+    }
+    // Commit.
+    for &(n, c) in &taken {
+        st.free_cores_per_node[n] -= c;
+    }
+    let latency = latency_shape(&mut st.rng, policy.dispatch_mean)
+        + policy.per_node * taken.len() as f64;
+    let id = st.next_id;
+    st.next_id += 1;
+    Ok(Allocation { id, taken, requested: cores, startup_latency: latency })
+}
+
+fn do_release(st: &mut RmState, alloc: &Allocation) {
+    for &(n, c) in &alloc.taken {
+        st.free_cores_per_node[n] += c;
+    }
+}
+
+/// SLURM-flavored RM (Rivanna): shared nodes, near-deterministic dispatch.
+pub struct SlurmRM {
+    machine: MachineSpec,
+    policy: RmPolicy,
+    state: Mutex<RmState>,
+}
+
+impl SlurmRM {
+    pub fn new(machine: MachineSpec) -> SlurmRM {
+        let policy = RmPolicy::for_machine(&machine);
+        let state = new_state(&machine, &policy);
+        SlurmRM { machine, policy, state }
+    }
+}
+
+impl ResourceManager for SlurmRM {
+    fn machine(&self) -> &MachineSpec {
+        &self.machine
+    }
+
+    fn allocate(&self, cores: usize, exclusive: bool) -> Result<Allocation> {
+        let mut st = self.state.lock().unwrap();
+        // SLURM srun dispatch: low jitter around the mean.
+        do_allocate(&self.machine, &self.policy, &mut st, cores, exclusive, |rng, mean| {
+            mean * (0.9 + 0.2 * rng.gen_f64())
+        })
+    }
+
+    fn release(&self, alloc: &Allocation) {
+        do_release(&mut self.state.lock().unwrap(), alloc);
+    }
+
+    fn free_cores(&self) -> usize {
+        self.state.lock().unwrap().free_cores_per_node.iter().sum()
+    }
+
+    fn flavor(&self) -> &'static str {
+        "slurm"
+    }
+}
+
+/// LSF-flavored RM (Summit): exponential-tailed dispatch latency (bsub
+/// queue behaviour).
+pub struct LsfRM {
+    machine: MachineSpec,
+    policy: RmPolicy,
+    state: Mutex<RmState>,
+}
+
+impl LsfRM {
+    pub fn new(machine: MachineSpec) -> LsfRM {
+        let policy = RmPolicy::for_machine(&machine);
+        let state = new_state(&machine, &policy);
+        LsfRM { machine, policy, state }
+    }
+}
+
+impl ResourceManager for LsfRM {
+    fn machine(&self) -> &MachineSpec {
+        &self.machine
+    }
+
+    fn allocate(&self, cores: usize, exclusive: bool) -> Result<Allocation> {
+        let mut st = self.state.lock().unwrap();
+        do_allocate(&self.machine, &self.policy, &mut st, cores, exclusive, |rng, mean| {
+            rng.gen_exp(mean)
+        })
+    }
+
+    fn release(&self, alloc: &Allocation) {
+        do_release(&mut self.state.lock().unwrap(), alloc);
+    }
+
+    fn free_cores(&self) -> usize {
+        self.state.lock().unwrap().free_cores_per_node.iter().sum()
+    }
+
+    fn flavor(&self) -> &'static str {
+        "lsf"
+    }
+}
+
+/// RM for a machine, by its native flavor (Table 1).
+pub fn rm_for(machine: MachineSpec) -> Box<dyn ResourceManager> {
+    match machine.name.as_str() {
+        "summit" => Box::new(LsfRM::new(machine)),
+        _ => Box::new(SlurmRM::new(machine)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit;
+
+    #[test]
+    fn allocate_and_release_roundtrip() {
+        let rm = SlurmRM::new(MachineSpec::rivanna());
+        let total = rm.free_cores();
+        assert_eq!(total, 518);
+        let a = rm.allocate(100, false).unwrap();
+        assert_eq!(rm.free_cores(), total - 100);
+        assert_eq!(a.cores_taken(), 100);
+        assert!(a.startup_latency > 0.0);
+        rm.release(&a);
+        assert_eq!(rm.free_cores(), total);
+    }
+
+    #[test]
+    fn over_allocation_fails() {
+        let rm = SlurmRM::new(MachineSpec::rivanna());
+        assert!(rm.allocate(519, false).is_err());
+        let _a = rm.allocate(518, false).unwrap();
+        assert!(rm.allocate(1, false).is_err());
+    }
+
+    #[test]
+    fn exclusive_takes_whole_nodes() {
+        let rm = LsfRM::new(MachineSpec::summit());
+        let a = rm.allocate(50, true).unwrap(); // 50 cores -> 2 whole nodes
+        assert_eq!(a.nodes().len(), 2);
+        assert_eq!(a.cores_taken(), 84);
+        assert_eq!(rm.free_cores(), 2688 - 84);
+        rm.release(&a);
+        assert_eq!(rm.free_cores(), 2688);
+    }
+
+    #[test]
+    fn exclusive_needs_free_nodes() {
+        let rm = LsfRM::new(MachineSpec::local(4));
+        let _a = rm.allocate(1, false).unwrap(); // dirty the only node
+        assert!(rm.allocate(1, true).is_err());
+    }
+
+    #[test]
+    fn zero_core_request_rejected() {
+        let rm = SlurmRM::new(MachineSpec::local(4));
+        assert!(rm.allocate(0, false).is_err());
+    }
+
+    #[test]
+    fn separate_jobs_never_share_cores() {
+        let rm = SlurmRM::new(MachineSpec::local(8));
+        let a = rm.allocate(5, false).unwrap();
+        let b = rm.allocate(3, false).unwrap();
+        assert_eq!(rm.free_cores(), 0);
+        assert!(rm.allocate(1, false).is_err());
+        rm.release(&a);
+        rm.release(&b);
+        assert_eq!(rm.free_cores(), 8);
+    }
+
+    #[test]
+    fn prop_alloc_release_conserves_cores() {
+        testkit::check("rm conservation", 16, |rng| {
+            let rm = SlurmRM::new(MachineSpec::rivanna());
+            let total = rm.free_cores();
+            let mut live = Vec::new();
+            for _ in 0..20 {
+                if rng.gen_f64() < 0.6 {
+                    let want = 1 + rng.gen_range(60) as usize;
+                    if let Ok(a) = rm.allocate(want, false) {
+                        live.push(a);
+                    }
+                } else if !live.is_empty() {
+                    let i = rng.gen_range(live.len() as u64) as usize;
+                    let a = live.swap_remove(i);
+                    rm.release(&a);
+                }
+                let used: usize = live.iter().map(|a| a.cores_taken()).sum();
+                assert_eq!(rm.free_cores(), total - used);
+            }
+            for a in &live {
+                rm.release(a);
+            }
+            assert_eq!(rm.free_cores(), total);
+        });
+    }
+
+    #[test]
+    fn lsf_latency_is_variable() {
+        let rm = LsfRM::new(MachineSpec::summit());
+        let a = rm.allocate(42, false).unwrap();
+        let b = rm.allocate(42, false).unwrap();
+        assert_ne!(a.startup_latency, b.startup_latency);
+    }
+}

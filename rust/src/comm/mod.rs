@@ -1,0 +1,745 @@
+//! Communicator substrate — the stand-in for Cylon's MPI/UCX/GLOO channel
+//! abstraction (paper §3.2, Fig 2).
+//!
+//! Ranks are OS threads inside one process; point-to-point messages travel
+//! through per-rank mailboxes (mutex + condvar), and MPI-style collectives
+//! are composed from them. Every collective also charges the calling rank's
+//! *simulated clock* via [`NetModel`], which is how cluster-scale network
+//! behaviour (the part we cannot run on real InfiniBand) enters the
+//! reproduced figures.
+//!
+//! The key capability the paper gets from RAPTOR — **private communicators
+//! of task-requested size carved out of a bigger world at runtime** — is
+//! [`Communicator::subgroup`]: any subset of world ranks can rendezvous into
+//! a fresh, isolated communication context without involving other ranks.
+
+mod netmodel;
+
+pub use netmodel::{Backend, NetModel};
+
+use std::any::Any;
+use std::cell::Cell;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::df::Table;
+use crate::error::{Error, Result};
+
+/// Payloads that can travel through the communicator. `approx_bytes` feeds
+/// the network cost model.
+pub trait CommData: Send + 'static {
+    fn approx_bytes(&self) -> usize;
+}
+
+macro_rules! fixed_size {
+    ($($t:ty),*) => {$(
+        impl CommData for $t {
+            fn approx_bytes(&self) -> usize { std::mem::size_of::<$t>() }
+        }
+    )*};
+}
+fixed_size!(u8, u32, u64, i32, i64, f64, usize, bool, ());
+
+macro_rules! vec_size {
+    ($($t:ty),*) => {$(
+        impl CommData for Vec<$t> {
+            fn approx_bytes(&self) -> usize { self.len() * std::mem::size_of::<$t>() }
+        }
+    )*};
+}
+vec_size!(u8, u32, u64, i32, i64, f64, usize);
+
+impl CommData for String {
+    fn approx_bytes(&self) -> usize {
+        self.len()
+    }
+}
+
+impl CommData for Table {
+    fn approx_bytes(&self) -> usize {
+        self.byte_size()
+    }
+}
+
+impl CommData for Vec<Table> {
+    fn approx_bytes(&self) -> usize {
+        self.iter().map(|t| t.byte_size()).sum()
+    }
+}
+
+impl<A: CommData, B: CommData> CommData for (A, B) {
+    fn approx_bytes(&self) -> usize {
+        self.0.approx_bytes() + self.1.approx_bytes()
+    }
+}
+
+impl CommData for Vec<(i64, i64)> {
+    fn approx_bytes(&self) -> usize {
+        self.len() * 16
+    }
+}
+
+type MailKey = (u64, usize, u64); // (context, src group-rank, tag)
+type Payload = Box<dyn Any + Send>;
+
+/// One rank's incoming-message store.
+#[derive(Default)]
+struct Mailbox {
+    slots: Mutex<HashMap<MailKey, VecDeque<Payload>>>,
+    cv: Condvar,
+}
+
+impl Mailbox {
+    fn put(&self, key: MailKey, payload: Payload) {
+        let mut slots = self.slots.lock().unwrap();
+        slots.entry(key).or_default().push_back(payload);
+        self.cv.notify_all();
+    }
+
+    fn take(&self, key: MailKey) -> Payload {
+        let mut slots = self.slots.lock().unwrap();
+        loop {
+            if let Some(q) = slots.get_mut(&key) {
+                if let Some(p) = q.pop_front() {
+                    if q.is_empty() {
+                        slots.remove(&key);
+                    }
+                    return p;
+                }
+            }
+            slots = self.cv.wait(slots).unwrap();
+        }
+    }
+}
+
+/// Rendezvous state for one communication context (barrier generations).
+struct GroupShared {
+    barrier: Mutex<(usize, u64)>, // (arrived, generation)
+    cv: Condvar,
+}
+
+impl GroupShared {
+    fn new() -> GroupShared {
+        GroupShared { barrier: Mutex::new((0, 0)), cv: Condvar::new() }
+    }
+
+    fn wait(&self, group_size: usize) {
+        let mut st = self.barrier.lock().unwrap();
+        let gen = st.1;
+        st.0 += 1;
+        if st.0 == group_size {
+            st.0 = 0;
+            st.1 = st.1.wrapping_add(1);
+            self.cv.notify_all();
+        } else {
+            while st.1 == gen {
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+    }
+}
+
+/// Process-wide state shared by every rank of a world.
+struct WorldInner {
+    size: usize,
+    mailboxes: Vec<Mailbox>,
+    groups: Mutex<HashMap<u64, Arc<GroupShared>>>,
+    netmodel: NetModel,
+}
+
+impl WorldInner {
+    fn group(&self, ctx: u64) -> Arc<GroupShared> {
+        let mut groups = self.groups.lock().unwrap();
+        groups
+            .entry(ctx)
+            .or_insert_with(|| Arc::new(GroupShared::new()))
+            .clone()
+    }
+}
+
+/// A communication world of `size` ranks (the pilot's full allocation).
+#[derive(Clone)]
+pub struct CommWorld {
+    inner: Arc<WorldInner>,
+}
+
+/// World context id; subgroup contexts must be distinct from this.
+pub const WORLD_CTX: u64 = 0;
+
+impl CommWorld {
+    pub fn new(size: usize, netmodel: NetModel) -> CommWorld {
+        assert!(size > 0, "world of zero ranks");
+        CommWorld {
+            inner: Arc::new(WorldInner {
+                size,
+                mailboxes: (0..size).map(|_| Mailbox::default()).collect(),
+                groups: Mutex::new(HashMap::new()),
+                netmodel,
+            }),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.inner.size
+    }
+
+    /// Communicator handle for `world_rank` over the full world.
+    pub fn communicator(&self, world_rank: usize) -> Communicator {
+        assert!(world_rank < self.inner.size);
+        Communicator {
+            world: self.inner.clone(),
+            ctx: WORLD_CTX,
+            ranks: Arc::new((0..self.inner.size).collect()),
+            my_rank: world_rank,
+            seq: Cell::new(0),
+            clock: Cell::new(0.0),
+        }
+    }
+
+    /// Run `f(rank_communicator)` on every rank (one thread each), BSP
+    /// style, and collect the per-rank results in rank order. Panics on any
+    /// rank surface as `Error::TaskFailed`.
+    pub fn run<R, F>(&self, f: F) -> Result<Vec<R>>
+    where
+        R: Send + 'static,
+        F: Fn(Communicator) -> R + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let handles: Vec<_> = (0..self.inner.size)
+            .map(|rank| {
+                let comm = self.communicator(rank);
+                let f = f.clone();
+                std::thread::Builder::new()
+                    .name(format!("rank-{rank}"))
+                    .spawn(move || f(comm))
+                    .expect("spawn rank thread")
+            })
+            .collect();
+        let mut out = Vec::with_capacity(self.inner.size);
+        let mut failure = None;
+        for (rank, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(r) => out.push(r),
+                Err(p) => {
+                    let msg = p
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "<panic>".into());
+                    failure.get_or_insert(format!("rank {rank} panicked: {msg}"));
+                }
+            }
+        }
+        match failure {
+            None => Ok(out),
+            Some(msg) => Err(Error::TaskFailed(msg)),
+        }
+    }
+}
+
+/// One rank's handle on a communication context (world or private group).
+///
+/// Not `Sync`: each rank thread owns its communicator, mirroring MPI rank
+/// semantics. Collective calls must be made by *all* group members in the
+/// same order (standard MPI contract).
+pub struct Communicator {
+    world: Arc<WorldInner>,
+    ctx: u64,
+    /// Group-rank -> world-rank translation (sorted, unique).
+    ranks: Arc<Vec<usize>>,
+    my_rank: usize,
+    seq: Cell<u64>,
+    clock: Cell<f64>,
+}
+
+impl Communicator {
+    pub fn rank(&self) -> usize {
+        self.my_rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// World rank behind a group rank.
+    pub fn world_rank(&self, group_rank: usize) -> usize {
+        self.ranks[group_rank]
+    }
+
+    /// Accumulated simulated network seconds for this rank.
+    pub fn sim_clock(&self) -> f64 {
+        self.clock.get()
+    }
+
+    /// Reset the simulated clock (engines do this per task iteration).
+    pub fn reset_sim_clock(&self) {
+        self.clock.set(0.0);
+    }
+
+    pub fn netmodel(&self) -> &NetModel {
+        &self.world.netmodel
+    }
+
+    fn charge(&self, cost: f64) {
+        self.clock.set(self.clock.get() + cost);
+    }
+
+    fn next_tag(&self) -> u64 {
+        let t = self.seq.get();
+        self.seq.set(t + 1);
+        t
+    }
+
+    /// Point-to-point send to a group rank (charges the α–β p2p cost).
+    pub fn send<T: CommData>(&self, dst: usize, tag: u64, value: T) {
+        debug_assert!(dst < self.size(), "send to rank {dst} of {}", self.size());
+        self.charge(self.world.netmodel.p2p(value.approx_bytes()));
+        let world_dst = self.ranks[dst];
+        self.world.mailboxes[world_dst].put(
+            (self.ctx, self.my_rank, tag),
+            Box::new(value),
+        );
+    }
+
+    /// Blocking typed receive from a group rank.
+    pub fn recv<T: CommData>(&self, src: usize, tag: u64) -> T {
+        debug_assert!(src < self.size());
+        let payload =
+            self.world.mailboxes[self.ranks[self.my_rank]].take((self.ctx, src, tag));
+        *payload
+            .downcast::<T>()
+            .unwrap_or_else(|_| panic!("recv type mismatch (src={src}, tag={tag})"))
+    }
+
+    /// Barrier across the group.
+    pub fn barrier(&self) {
+        self.charge(self.world.netmodel.barrier(self.size()));
+        self.world.group(self.ctx).wait(self.size());
+    }
+
+    /// Broadcast `value` from `root` to every group member.
+    pub fn bcast<T: CommData + Clone>(&self, root: usize, value: Option<T>) -> T {
+        let tag = self.next_tag();
+        self.charge(self.world.netmodel.bcast(
+            self.size(),
+            value.as_ref().map(|v| v.approx_bytes()).unwrap_or(0),
+        ));
+        if self.my_rank == root {
+            let v = value.expect("root must supply a value to bcast");
+            for dst in 0..self.size() {
+                if dst != root {
+                    // bytes already charged via the tree model above; use a
+                    // zero-cost raw put to avoid double-charging.
+                    let world_dst = self.ranks[dst];
+                    self.world.mailboxes[world_dst]
+                        .put((self.ctx, self.my_rank, tag), Box::new(v.clone()));
+                }
+            }
+            v
+        } else {
+            self.recv::<T>(root, tag)
+        }
+    }
+
+    /// Gather every rank's value at `root` (rank order). Non-roots get None.
+    pub fn gather<T: CommData>(&self, root: usize, value: T) -> Option<Vec<T>> {
+        let tag = self.next_tag();
+        self.charge(
+            self.world
+                .netmodel
+                .gather(self.size(), value.approx_bytes()),
+        );
+        if self.my_rank == root {
+            let mut out: Vec<Option<T>> = (0..self.size()).map(|_| None).collect();
+            out[root] = Some(value);
+            for src in 0..self.size() {
+                if src != root {
+                    let world_me = self.ranks[self.my_rank];
+                    let payload =
+                        self.world.mailboxes[world_me].take((self.ctx, src, tag));
+                    out[src] = Some(*payload.downcast::<T>().unwrap_or_else(|_| {
+                        panic!("gather type mismatch from {src}")
+                    }));
+                }
+            }
+            Some(out.into_iter().map(|v| v.unwrap()).collect())
+        } else {
+            let world_root = self.ranks[root];
+            self.world.mailboxes[world_root]
+                .put((self.ctx, self.my_rank, tag), Box::new(value));
+            None
+        }
+    }
+
+    /// Allgather: every rank receives every rank's value, in rank order.
+    pub fn allgather<T: CommData + Clone>(&self, value: T) -> Vec<T> {
+        self.charge(
+            self.world
+                .netmodel
+                .allgather(self.size(), value.approx_bytes()),
+        );
+        // Implemented as gather-to-0 + bcast over raw puts (cost charged
+        // once above with the ring-algorithm model).
+        let tag = self.next_tag();
+        let root = 0usize;
+        if self.my_rank == root {
+            let mut out: Vec<Option<T>> = (0..self.size()).map(|_| None).collect();
+            out[root] = Some(value);
+            for src in 1..self.size() {
+                let world_me = self.ranks[self.my_rank];
+                let payload = self.world.mailboxes[world_me].take((self.ctx, src, tag));
+                out[src] = Some(*payload.downcast::<T>().unwrap());
+            }
+            let all: Vec<T> = out.into_iter().map(|v| v.unwrap()).collect();
+            let tag2 = self.next_tag();
+            for dst in 1..self.size() {
+                let world_dst = self.ranks[dst];
+                self.world.mailboxes[world_dst]
+                    .put((self.ctx, root, tag2), Box::new(all.clone()));
+            }
+            all
+        } else {
+            let world_root = self.ranks[root];
+            self.world.mailboxes[world_root]
+                .put((self.ctx, self.my_rank, tag), Box::new(value));
+            let tag2 = self.next_tag();
+            let world_me = self.ranks[self.my_rank];
+            let payload = self.world.mailboxes[world_me].take((self.ctx, root, tag2));
+            *payload.downcast::<Vec<T>>().unwrap()
+        }
+    }
+
+    /// Alltoall: `sends[d]` goes to rank `d`; returns what each rank sent to
+    /// us, in rank order. The workhorse of the distributed shuffle.
+    pub fn alltoall<T: CommData>(&self, sends: Vec<T>) -> Vec<T> {
+        assert_eq!(
+            sends.len(),
+            self.size(),
+            "alltoall requires one payload per rank"
+        );
+        let total: usize = sends.iter().map(|s| s.approx_bytes()).sum();
+        self.charge(self.world.netmodel.alltoall(self.size(), total));
+        let tag = self.next_tag();
+        let mut mine: Option<T> = None;
+        for (dst, payload) in sends.into_iter().enumerate() {
+            if dst == self.my_rank {
+                mine = Some(payload);
+            } else {
+                let world_dst = self.ranks[dst];
+                self.world.mailboxes[world_dst]
+                    .put((self.ctx, self.my_rank, tag), Box::new(payload));
+            }
+        }
+        let world_me = self.ranks[self.my_rank];
+        (0..self.size())
+            .map(|src| {
+                if src == self.my_rank {
+                    mine.take().expect("own alltoall slot")
+                } else {
+                    let payload =
+                        self.world.mailboxes[world_me].take((self.ctx, src, tag));
+                    *payload.downcast::<T>().unwrap_or_else(|_| {
+                        panic!("alltoall type mismatch from {src}")
+                    })
+                }
+            })
+            .collect()
+    }
+
+    /// Allreduce a f64 with the given associative op.
+    pub fn allreduce_f64(&self, value: f64, op: ReduceOp) -> f64 {
+        self.charge(self.world.netmodel.allreduce(self.size(), 8));
+        let all = self.allgather_uncharged(value);
+        all.into_iter().reduce(|a, b| op.apply(a, b)).unwrap()
+    }
+
+    /// Allreduce a u64.
+    pub fn allreduce_u64(&self, value: u64, op: ReduceOp) -> u64 {
+        self.charge(self.world.netmodel.allreduce(self.size(), 8));
+        let all = self.allgather_uncharged(value);
+        all.into_iter()
+            .reduce(|a, b| op.apply_u64(a, b))
+            .unwrap()
+    }
+
+    /// Allgather without charging the model (internal building block for
+    /// already-charged composite collectives).
+    fn allgather_uncharged<T: CommData + Clone>(&self, value: T) -> Vec<T> {
+        let saved = self.clock.get();
+        let out = self.allgather(value);
+        self.clock.set(saved); // discard allgather's charge; caller charged already
+        out
+    }
+
+    /// Rendezvous a subset of *world* ranks into a private communicator —
+    /// the RAPTOR capability (paper §3.4, Fig 3-6). All listed ranks must
+    /// call with identical `ctx_id` and `world_ranks`; `ctx_id` must be
+    /// unique per construction (the raptor master allocates them).
+    pub fn subgroup(&self, ctx_id: u64, world_ranks: &[usize]) -> Result<Communicator> {
+        if ctx_id == WORLD_CTX {
+            return Err(Error::Comm("subgroup ctx must not be WORLD_CTX".into()));
+        }
+        let mut sorted = world_ranks.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted.len() != world_ranks.len() {
+            return Err(Error::Comm("duplicate ranks in subgroup".into()));
+        }
+        let my_world_rank = self.ranks[self.my_rank];
+        let Some(my_rank) = sorted.iter().position(|&r| r == my_world_rank) else {
+            return Err(Error::Comm(format!(
+                "rank {my_world_rank} not a member of subgroup {ctx_id}"
+            )));
+        };
+        if sorted.iter().any(|&r| r >= self.world.size) {
+            return Err(Error::Comm("subgroup rank out of world range".into()));
+        }
+        let sub = Communicator {
+            world: self.world.clone(),
+            ctx: ctx_id,
+            ranks: Arc::new(sorted),
+            my_rank,
+            seq: Cell::new(0),
+            clock: Cell::new(0.0),
+        };
+        // Construction rendezvous: mirrors MPI_Comm_create_group semantics
+        // and is what the paper measures as communicator-construction
+        // overhead.
+        sub.charge(self.world.netmodel.barrier(sub.size()));
+        self.world.group(ctx_id).wait(sub.size());
+        Ok(sub)
+    }
+
+    /// Drop the context registry entry for a finished task's communicator
+    /// (master calls this after collecting results).
+    pub fn release_ctx(&self, ctx_id: u64) {
+        self.world.groups.lock().unwrap().remove(&ctx_id);
+    }
+}
+
+/// Reduction operators for allreduce.
+#[derive(Clone, Copy, Debug)]
+pub enum ReduceOp {
+    Sum,
+    Min,
+    Max,
+}
+
+impl ReduceOp {
+    fn apply(&self, a: f64, b: f64) -> f64 {
+        match self {
+            ReduceOp::Sum => a + b,
+            ReduceOp::Min => a.min(b),
+            ReduceOp::Max => a.max(b),
+        }
+    }
+    fn apply_u64(&self, a: u64, b: u64) -> u64 {
+        match self {
+            ReduceOp::Sum => a.wrapping_add(b), // fingerprint sums wrap by design
+            ReduceOp::Min => a.min(b),
+            ReduceOp::Max => a.max(b),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit;
+
+    fn world(p: usize) -> CommWorld {
+        CommWorld::new(p, NetModel::disabled())
+    }
+
+    #[test]
+    fn p2p_roundtrip() {
+        let w = world(2);
+        let out = w
+            .run(|c| {
+                if c.rank() == 0 {
+                    c.send(1, 7, vec![1i64, 2, 3]);
+                    0i64
+                } else {
+                    let v: Vec<i64> = c.recv(0, 7);
+                    v.iter().sum()
+                }
+            })
+            .unwrap();
+        assert_eq!(out, vec![0, 6]);
+    }
+
+    #[test]
+    fn barrier_and_bcast() {
+        let w = world(4);
+        let out = w
+            .run(|c| {
+                c.barrier();
+                let v = c.bcast(2, (c.rank() == 2).then_some(41u64));
+                c.barrier();
+                v + 1
+            })
+            .unwrap();
+        assert_eq!(out, vec![42; 4]);
+    }
+
+    #[test]
+    fn gather_and_allgather() {
+        let w = world(5);
+        let out = w
+            .run(|c| {
+                let g = c.gather(0, c.rank() as u64);
+                let all = c.allgather(c.rank() as u64 * 10);
+                (g, all)
+            })
+            .unwrap();
+        assert_eq!(out[0].0, Some(vec![0, 1, 2, 3, 4]));
+        for (i, (g, all)) in out.iter().enumerate() {
+            if i != 0 {
+                assert!(g.is_none());
+            }
+            assert_eq!(all, &vec![0, 10, 20, 30, 40]);
+        }
+    }
+
+    #[test]
+    fn alltoall_transposes() {
+        let w = world(3);
+        let out = w
+            .run(|c| {
+                let sends: Vec<u64> =
+                    (0..3).map(|d| (c.rank() * 10 + d) as u64).collect();
+                c.alltoall(sends)
+            })
+            .unwrap();
+        // rank r receives [0r, 10+r, 20+r]
+        assert_eq!(out[0], vec![0, 10, 20]);
+        assert_eq!(out[1], vec![1, 11, 21]);
+        assert_eq!(out[2], vec![2, 12, 22]);
+    }
+
+    #[test]
+    fn allreduce_ops() {
+        let w = world(4);
+        let out = w
+            .run(|c| {
+                let s = c.allreduce_f64(c.rank() as f64, ReduceOp::Sum);
+                let mx = c.allreduce_u64(c.rank() as u64, ReduceOp::Max);
+                let mn = c.allreduce_u64(c.rank() as u64 + 5, ReduceOp::Min);
+                (s, mx, mn)
+            })
+            .unwrap();
+        for (s, mx, mn) in out {
+            assert_eq!(s, 6.0);
+            assert_eq!(mx, 3);
+            assert_eq!(mn, 5);
+        }
+    }
+
+    #[test]
+    fn subgroup_isolated_contexts() {
+        // Two disjoint subgroups run concurrent collectives without
+        // interference — the RAPTOR private-communicator property.
+        let w = world(6);
+        let out = w
+            .run(|c| {
+                let my_world = c.rank();
+                let (ctx, members) = if my_world < 3 {
+                    (1u64, vec![0usize, 1, 2])
+                } else {
+                    (2u64, vec![3usize, 4, 5])
+                };
+                let sub = c.subgroup(ctx, &members).unwrap();
+                assert_eq!(sub.size(), 3);
+                let sum = sub.allreduce_u64(my_world as u64, ReduceOp::Sum);
+                sub.barrier();
+                sum
+            })
+            .unwrap();
+        assert_eq!(out, vec![3, 3, 3, 12, 12, 12]);
+    }
+
+    #[test]
+    fn subgroup_validation() {
+        let w = world(2);
+        let out = w
+            .run(|c| {
+                if c.rank() == 0 {
+                    let dup = c.subgroup(5, &[0, 0]).err().map(|e| e.to_string());
+                    let non_member =
+                        c.subgroup(6, &[1]).err().map(|e| e.to_string());
+                    let world_ctx =
+                        c.subgroup(WORLD_CTX, &[0]).err().map(|e| e.to_string());
+                    (dup, non_member, world_ctx)
+                } else {
+                    (None, None, None)
+                }
+            })
+            .unwrap();
+        let (dup, non_member, world_ctx) = &out[0];
+        assert!(dup.as_ref().unwrap().contains("duplicate"));
+        assert!(non_member.as_ref().unwrap().contains("not a member"));
+        assert!(world_ctx.as_ref().unwrap().contains("WORLD_CTX"));
+    }
+
+    #[test]
+    fn panic_in_rank_becomes_error() {
+        let w = world(2);
+        let err = w
+            .run(|c| {
+                if c.rank() == 1 {
+                    panic!("injected fault");
+                }
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("injected fault"), "{err}");
+    }
+
+    #[test]
+    fn netmodel_charges_clock() {
+        let w = CommWorld::new(4, NetModel::new(Backend::Mpi, 1.0));
+        let clocks = w
+            .run(|c| {
+                let _ = c.allgather(vec![0u8; 1024]);
+                let _ = c.alltoall(vec![vec![0u8; 256]; 4]);
+                c.sim_clock()
+            })
+            .unwrap();
+        for clk in clocks {
+            assert!(clk > 0.0);
+        }
+    }
+
+    #[test]
+    fn prop_alltoall_conservation() {
+        testkit::check("alltoall conserves elements", 8, |rng| {
+            let p = 2 + rng.gen_range(4) as usize;
+            let seed = rng.next_u64();
+            let w = world(p);
+            let results = w
+                .run(move |c| {
+                    let mut rng = crate::util::Rng::new(
+                        seed ^ crate::util::splitmix64(c.rank() as u64),
+                    );
+                    let sends: Vec<Vec<i64>> = (0..c.size())
+                        .map(|_| {
+                            (0..rng.gen_range(20)).map(|_| rng.gen_i64(0, 100)).collect()
+                        })
+                        .collect();
+                    let sent_total: i64 =
+                        sends.iter().flat_map(|v| v.iter()).sum();
+                    let recvd = c.alltoall(sends);
+                    let recv_total: i64 =
+                        recvd.iter().flat_map(|v| v.iter()).sum();
+                    let global_sent =
+                        c.allreduce_u64(sent_total as u64, ReduceOp::Sum);
+                    let global_recv =
+                        c.allreduce_u64(recv_total as u64, ReduceOp::Sum);
+                    (global_sent, global_recv)
+                })
+                .unwrap();
+            for (s, r) in results {
+                assert_eq!(s, r);
+            }
+        });
+    }
+}

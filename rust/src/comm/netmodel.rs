@@ -1,0 +1,179 @@
+//! Network cost model — the calibrated stand-in for the paper's
+//! MPI/UCX/GLOO over InfiniBand fabrics (DESIGN.md §2).
+//!
+//! Every collective charges virtual seconds to the calling rank's simulated
+//! clock using the classic α–β (latency–bandwidth) model with per-algorithm
+//! terms (ring allgather, pairwise alltoall, binomial broadcast/reduce).
+//! `alpha`/`beta` are per *backend* (MPI / UCX / GLOO channel, paper Fig 2)
+//! and scaled by a per-*fabric* factor (Rivanna vs Summit interconnects).
+//! The model is what makes weak-scaling curves rise gently with rank count
+//! (α·p allgather terms) while strong-scaling falls ~1/p — the shapes the
+//! paper reports.
+
+/// Communication backend flavor (paper Fig 2: Open-MPI / UCX / GLOO).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Mpi,
+    Ucx,
+    Gloo,
+}
+
+impl Backend {
+    /// (alpha seconds/hop, beta seconds/byte) — relative magnitudes follow
+    /// published microbenchmarks: UCX lowest latency, GLOO highest; all
+    /// scaled so modeled times land in the same range as the paper's
+    /// scaled-down workloads.
+    fn params(&self) -> (f64, f64) {
+        match self {
+            Backend::Ucx => (4.0e-6, 0.8e-9),
+            Backend::Mpi => (6.0e-6, 1.0e-9),
+            Backend::Gloo => (18.0e-6, 1.6e-9),
+        }
+    }
+}
+
+/// α–β network model with per-fabric scaling.
+#[derive(Clone, Copy, Debug)]
+pub struct NetModel {
+    /// Per-hop latency in seconds.
+    pub alpha: f64,
+    /// Per-byte transfer cost in seconds.
+    pub beta: f64,
+    /// Disabled models charge nothing (pure in-memory execution).
+    pub enabled: bool,
+}
+
+impl NetModel {
+    pub fn disabled() -> NetModel {
+        NetModel { alpha: 0.0, beta: 0.0, enabled: false }
+    }
+
+    /// Model for a backend on a fabric with the given scaling factor
+    /// (1.0 = EDR InfiniBand-class; larger = slower fabric).
+    pub fn new(backend: Backend, fabric_scale: f64) -> NetModel {
+        let (alpha, beta) = backend.params();
+        NetModel {
+            alpha: alpha * fabric_scale,
+            beta: beta * fabric_scale,
+            enabled: true,
+        }
+    }
+
+    /// Scale only the per-byte term: used for the rows-/1000 substitution
+    /// (each simulated byte stands for `scale` real bytes; per-hop latency
+    /// is unaffected because message *counts* are preserved).
+    pub fn with_data_scale(mut self, scale: f64) -> NetModel {
+        self.beta *= scale;
+        self
+    }
+
+    #[inline]
+    fn on(&self, cost: f64) -> f64 {
+        if self.enabled {
+            cost
+        } else {
+            0.0
+        }
+    }
+
+    /// Point-to-point message.
+    pub fn p2p(&self, bytes: usize) -> f64 {
+        self.on(self.alpha + self.beta * bytes as f64)
+    }
+
+    /// Binomial-tree broadcast of `bytes` to `p` ranks.
+    pub fn bcast(&self, p: usize, bytes: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let stages = (p as f64).log2().ceil();
+        self.on(stages * (self.alpha + self.beta * bytes as f64))
+    }
+
+    /// Ring allgather: each rank contributes `bytes`, receives from p-1.
+    pub fn allgather(&self, p: usize, bytes: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let steps = (p - 1) as f64;
+        self.on(steps * self.alpha + steps * self.beta * bytes as f64)
+    }
+
+    /// Gather to root (binomial): root pays the aggregate receive.
+    pub fn gather(&self, p: usize, bytes_per_rank: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let stages = (p as f64).log2().ceil();
+        self.on(
+            stages * self.alpha
+                + self.beta * ((p - 1) as f64) * bytes_per_rank as f64,
+        )
+    }
+
+    /// Pairwise-exchange alltoall: p-1 steps, `total_send_bytes` leaves the
+    /// rank over the whole exchange.
+    pub fn alltoall(&self, p: usize, total_send_bytes: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        self.on(
+            (p - 1) as f64 * self.alpha + self.beta * total_send_bytes as f64,
+        )
+    }
+
+    /// Recursive-doubling allreduce of `bytes`.
+    pub fn allreduce(&self, p: usize, bytes: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let stages = (p as f64).log2().ceil();
+        self.on(stages * (self.alpha + self.beta * bytes as f64))
+    }
+
+    /// Barrier = zero-byte allreduce.
+    pub fn barrier(&self, p: usize) -> f64 {
+        self.allreduce(p, 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_charges_nothing() {
+        let m = NetModel::disabled();
+        assert_eq!(m.p2p(1 << 20), 0.0);
+        assert_eq!(m.alltoall(64, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn costs_scale_with_bytes_and_ranks() {
+        let m = NetModel::new(Backend::Mpi, 1.0);
+        assert!(m.p2p(1 << 20) > m.p2p(1 << 10));
+        assert!(m.allgather(64, 1024) > m.allgather(8, 1024));
+        assert!(m.alltoall(8, 1 << 20) > m.alltoall(8, 1 << 10));
+        assert_eq!(m.bcast(1, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn backend_ordering() {
+        // Latency: UCX < MPI < GLOO, per the channel microbenchmarks the
+        // Cylon papers report.
+        let (ucx, mpi, gloo) = (
+            NetModel::new(Backend::Ucx, 1.0),
+            NetModel::new(Backend::Mpi, 1.0),
+            NetModel::new(Backend::Gloo, 1.0),
+        );
+        assert!(ucx.alpha < mpi.alpha && mpi.alpha < gloo.alpha);
+        assert!(ucx.beta <= mpi.beta && mpi.beta <= gloo.beta);
+    }
+
+    #[test]
+    fn fabric_scale_multiplies() {
+        let fast = NetModel::new(Backend::Mpi, 1.0);
+        let slow = NetModel::new(Backend::Mpi, 4.0);
+        assert!((slow.p2p(1000) - 4.0 * fast.p2p(1000)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,172 @@
+//! Experiment configuration: an INI-subset parser (offline substitute for
+//! serde-based config) plus presets for every experiment in the paper
+//! (Table 1 and Figs 5–11), scaled per DESIGN.md §2.
+
+mod parser;
+mod presets;
+
+pub use parser::{parse_ini, IniDoc};
+pub use presets::{
+    preset, preset_ids, RIVANNA_PAPER_RANKS, RIVANNA_SCALED_RANKS, SCALE_NOTE,
+    SUMMIT_PAPER_RANKS, SUMMIT_SCALED_RANKS,
+};
+
+use crate::error::{Error, Result};
+
+/// Weak vs strong scaling (paper Table 1 WS/SS).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scaling {
+    Weak,
+    Strong,
+}
+
+impl Scaling {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scaling::Weak => "weak",
+            Scaling::Strong => "strong",
+        }
+    }
+}
+
+/// One experiment: which machine, op mix, scaling mode, rank sweep, data
+/// sizes, and iteration count.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Experiment id ("table2", "fig5", ... — DESIGN.md §4).
+    pub id: String,
+    /// "rivanna" | "summit" | "local".
+    pub machine: String,
+    /// "join" | "sort" | "hetero" (join+sort mix).
+    pub op: String,
+    pub scaling: Scaling,
+    /// Rank counts to sweep (scaled-down from the paper's).
+    pub parallelisms: Vec<usize>,
+    /// Rows per rank for weak scaling (scaled: paper 35 M -> 35 K).
+    pub rows_per_rank: usize,
+    /// Total rows for strong scaling (scaled: paper 3.5 B -> 3.5 M).
+    pub total_rows: usize,
+    /// Repetitions per configuration (paper: 10).
+    pub iterations: usize,
+    pub seed: u64,
+}
+
+impl ExperimentConfig {
+    /// Parse from an INI document with an `[experiment]` section.
+    pub fn from_ini(doc: &IniDoc) -> Result<ExperimentConfig> {
+        let sec = doc
+            .section("experiment")
+            .ok_or_else(|| Error::Config("missing [experiment] section".into()))?;
+        let get = |k: &str| {
+            sec.get(k)
+                .ok_or_else(|| Error::Config(format!("missing key '{k}'")))
+        };
+        let parse_usize = |k: &str| -> Result<usize> {
+            get(k)?
+                .parse()
+                .map_err(|_| Error::Config(format!("key '{k}' is not an integer")))
+        };
+        let scaling = match get("scaling")?.as_str() {
+            "weak" => Scaling::Weak,
+            "strong" => Scaling::Strong,
+            other => {
+                return Err(Error::Config(format!("unknown scaling '{other}'")))
+            }
+        };
+        let parallelisms: Vec<usize> = get("parallelisms")?
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| Error::Config(format!("bad parallelism '{s}'")))
+            })
+            .collect::<Result<_>>()?;
+        if parallelisms.is_empty() {
+            return Err(Error::Config("empty parallelism sweep".into()));
+        }
+        Ok(ExperimentConfig {
+            id: get("id")?.clone(),
+            machine: get("machine")?.clone(),
+            op: get("op")?.clone(),
+            scaling,
+            parallelisms,
+            rows_per_rank: parse_usize("rows_per_rank")?,
+            total_rows: parse_usize("total_rows")?,
+            iterations: parse_usize("iterations")?,
+            seed: sec
+                .get("seed")
+                .map(|s| s.parse().unwrap_or(0xC71))
+                .unwrap_or(0xC71),
+        })
+    }
+
+    /// Rows per rank at a given parallelism under this config's scaling.
+    pub fn rows_at(&self, ranks: usize) -> usize {
+        match self.scaling {
+            Scaling::Weak => self.rows_per_rank,
+            Scaling::Strong => self.total_rows.div_ceil(ranks.max(1)),
+        }
+    }
+
+    /// The machine spec this experiment targets.
+    pub fn machine_spec(&self) -> Result<crate::cluster::MachineSpec> {
+        match self.machine.as_str() {
+            "rivanna" => Ok(crate::cluster::MachineSpec::rivanna()),
+            "summit" => Ok(crate::cluster::MachineSpec::summit()),
+            "local" => Ok(crate::cluster::MachineSpec::local(8)),
+            other => Err(Error::Config(format!("unknown machine '{other}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment definition
+[experiment]
+id = custom
+machine = rivanna
+op = join
+scaling = strong
+parallelisms = 8, 12, 16
+rows_per_rank = 35000
+total_rows = 3500000
+iterations = 5
+"#;
+
+    #[test]
+    fn parses_full_config() {
+        let doc = parse_ini(SAMPLE).unwrap();
+        let c = ExperimentConfig::from_ini(&doc).unwrap();
+        assert_eq!(c.id, "custom");
+        assert_eq!(c.scaling, Scaling::Strong);
+        assert_eq!(c.parallelisms, vec![8, 12, 16]);
+        assert_eq!(c.rows_at(8), 437_500);
+        assert_eq!(c.machine_spec().unwrap().cores_per_node, 37);
+    }
+
+    #[test]
+    fn weak_scaling_rows_constant() {
+        let doc = parse_ini(&SAMPLE.replace("strong", "weak")).unwrap();
+        let c = ExperimentConfig::from_ini(&doc).unwrap();
+        assert_eq!(c.rows_at(8), 35000);
+        assert_eq!(c.rows_at(64), 35000);
+    }
+
+    #[test]
+    fn missing_key_is_informative() {
+        let doc = parse_ini("[experiment]\nid = x\n").unwrap();
+        let err = ExperimentConfig::from_ini(&doc).unwrap_err().to_string();
+        assert!(err.contains("missing key"), "{err}");
+    }
+
+    #[test]
+    fn bad_scaling_rejected() {
+        let doc =
+            parse_ini(&SAMPLE.replace("scaling = strong", "scaling = diagonal"))
+                .unwrap();
+        assert!(ExperimentConfig::from_ini(&doc).is_err());
+    }
+}

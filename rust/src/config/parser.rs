@@ -1,0 +1,100 @@
+//! Minimal INI parser: `[section]` headers, `key = value` pairs, `#`/`;`
+//! comments, blank lines. Sufficient for experiment configs without a
+//! serde dependency (offline environment — DESIGN.md §2).
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed INI document: section name -> key -> value.
+#[derive(Clone, Debug, Default)]
+pub struct IniDoc {
+    sections: HashMap<String, HashMap<String, String>>,
+}
+
+impl IniDoc {
+    pub fn section(&self, name: &str) -> Option<&HashMap<String, String>> {
+        self.sections.get(name)
+    }
+
+    pub fn section_names(&self) -> Vec<&str> {
+        self.sections.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+}
+
+/// Parse INI text. Keys outside any section go into section `""`.
+pub fn parse_ini(text: &str) -> Result<IniDoc> {
+    let mut doc = IniDoc::default();
+    let mut current = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                return Err(Error::Config(format!(
+                    "line {}: unterminated section header '{raw}'",
+                    lineno + 1
+                )));
+            };
+            current = name.trim().to_string();
+            doc.sections.entry(current.clone()).or_default();
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            return Err(Error::Config(format!(
+                "line {}: expected 'key = value', got '{raw}'",
+                lineno + 1
+            )));
+        };
+        doc.sections
+            .entry(current.clone())
+            .or_default()
+            .insert(key.trim().to_string(), value.trim().to_string());
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sections_and_comments() {
+        let doc = parse_ini(
+            "# top\nglobal = 1\n[a]\nx = 2\n; note\ny = hello world\n[b]\nx = 3\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "global"), Some("1"));
+        assert_eq!(doc.get("a", "x"), Some("2"));
+        assert_eq!(doc.get("a", "y"), Some("hello world"));
+        assert_eq!(doc.get("b", "x"), Some("3"));
+        assert_eq!(doc.get("b", "zzz"), None);
+        assert!(doc.section("missing").is_none());
+    }
+
+    #[test]
+    fn whitespace_tolerant() {
+        let doc = parse_ini("  [ sec ]  \n  k =  v  \n").unwrap();
+        assert_eq!(doc.get("sec", "k"), Some("v"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse_ini("[ok]\nnot-a-kv\n").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        let err2 = parse_ini("[broken\n").unwrap_err().to_string();
+        assert!(err2.contains("unterminated"), "{err2}");
+    }
+
+    #[test]
+    fn value_may_contain_equals() {
+        let doc = parse_ini("[s]\nexpr = a = b\n").unwrap();
+        assert_eq!(doc.get("s", "expr"), Some("a = b"));
+    }
+}

@@ -1,0 +1,269 @@
+//! Typed columns. Values are dense (no validity bitmap — the paper's
+//! workloads are null-free synthetic tables; adding a bitmap is orthogonal).
+
+use crate::error::{Error, Result};
+
+/// Logical column type.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DataType {
+    Int64,
+    Float64,
+    Utf8,
+    Bool,
+}
+
+impl std::fmt::Display for DataType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            DataType::Int64 => "int64",
+            DataType::Float64 => "float64",
+            DataType::Utf8 => "utf8",
+            DataType::Bool => "bool",
+        };
+        f.write_str(s)
+    }
+}
+
+/// A dense, typed column of values.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Column {
+    Int64(Vec<i64>),
+    Float64(Vec<f64>),
+    Utf8(Vec<String>),
+    Bool(Vec<bool>),
+}
+
+impl Column {
+    pub fn dtype(&self) -> DataType {
+        match self {
+            Column::Int64(_) => DataType::Int64,
+            Column::Float64(_) => DataType::Float64,
+            Column::Utf8(_) => DataType::Utf8,
+            Column::Bool(_) => DataType::Bool,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Column::Int64(v) => v.len(),
+            Column::Float64(v) => v.len(),
+            Column::Utf8(v) => v.len(),
+            Column::Bool(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// New empty column of the same type.
+    pub fn empty_like(&self) -> Column {
+        Column::empty(self.dtype())
+    }
+
+    pub fn empty(dtype: DataType) -> Column {
+        match dtype {
+            DataType::Int64 => Column::Int64(Vec::new()),
+            DataType::Float64 => Column::Float64(Vec::new()),
+            DataType::Utf8 => Column::Utf8(Vec::new()),
+            DataType::Bool => Column::Bool(Vec::new()),
+        }
+    }
+
+    /// Gather rows by index (indices may repeat / reorder).
+    pub fn take(&self, idx: &[usize]) -> Column {
+        match self {
+            Column::Int64(v) => Column::Int64(idx.iter().map(|&i| v[i]).collect()),
+            Column::Float64(v) => Column::Float64(idx.iter().map(|&i| v[i]).collect()),
+            Column::Utf8(v) => Column::Utf8(idx.iter().map(|&i| v[i].clone()).collect()),
+            Column::Bool(v) => Column::Bool(idx.iter().map(|&i| v[i]).collect()),
+        }
+    }
+
+    /// Append all values of `other` (must be same dtype).
+    pub fn extend(&mut self, other: &Column) -> Result<()> {
+        match (self, other) {
+            (Column::Int64(a), Column::Int64(b)) => a.extend_from_slice(b),
+            (Column::Float64(a), Column::Float64(b)) => a.extend_from_slice(b),
+            (Column::Utf8(a), Column::Utf8(b)) => a.extend_from_slice(b),
+            (Column::Bool(a), Column::Bool(b)) => a.extend_from_slice(b),
+            (a, b) => {
+                return Err(Error::DataFrame(format!(
+                    "extend dtype mismatch: {} vs {}",
+                    a.dtype(),
+                    b.dtype()
+                )))
+            }
+        }
+        Ok(())
+    }
+
+    /// Slice `[start, start+len)` into a new column.
+    pub fn slice(&self, start: usize, len: usize) -> Column {
+        match self {
+            Column::Int64(v) => Column::Int64(v[start..start + len].to_vec()),
+            Column::Float64(v) => Column::Float64(v[start..start + len].to_vec()),
+            Column::Utf8(v) => Column::Utf8(v[start..start + len].to_vec()),
+            Column::Bool(v) => Column::Bool(v[start..start + len].to_vec()),
+        }
+    }
+
+    /// Borrow as i64 values, erroring on other types.
+    pub fn as_i64(&self) -> Result<&[i64]> {
+        match self {
+            Column::Int64(v) => Ok(v),
+            other => Err(Error::DataFrame(format!(
+                "expected int64 column, got {}",
+                other.dtype()
+            ))),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<&[f64]> {
+        match self {
+            Column::Float64(v) => Ok(v),
+            other => Err(Error::DataFrame(format!(
+                "expected float64 column, got {}",
+                other.dtype()
+            ))),
+        }
+    }
+
+    pub fn as_utf8(&self) -> Result<&[String]> {
+        match self {
+            Column::Utf8(v) => Ok(v),
+            other => Err(Error::DataFrame(format!(
+                "expected utf8 column, got {}",
+                other.dtype()
+            ))),
+        }
+    }
+
+    /// Render a single value for CSV / display.
+    pub fn value_to_string(&self, i: usize) -> String {
+        match self {
+            Column::Int64(v) => v[i].to_string(),
+            Column::Float64(v) => format!("{}", v[i]),
+            Column::Utf8(v) => v[i].clone(),
+            Column::Bool(v) => v[i].to_string(),
+        }
+    }
+
+    /// Hash of one value (used by the table-level row fingerprint).
+    pub fn value_hash(&self, i: usize) -> u64 {
+        use crate::util::hash::splitmix64;
+        match self {
+            Column::Int64(v) => splitmix64(v[i] as u64),
+            Column::Float64(v) => splitmix64(v[i].to_bits()),
+            Column::Utf8(v) => {
+                let mut h = 0xcbf2_9ce4_8422_2325u64;
+                for b in v[i].bytes() {
+                    h ^= b as u64;
+                    h = h.wrapping_mul(0x1000_0000_01b3);
+                }
+                splitmix64(h)
+            }
+            Column::Bool(v) => splitmix64(v[i] as u64),
+        }
+    }
+
+    /// Order-insensitive content fingerprint (for distributed-op checks:
+    /// shuffles/joins preserve multisets, not order).
+    pub fn multiset_fingerprint(&self) -> u64 {
+        use crate::util::hash::splitmix64;
+        let mut acc = 0u64;
+        match self {
+            Column::Int64(v) => {
+                for &x in v {
+                    acc = acc.wrapping_add(splitmix64(x as u64));
+                }
+            }
+            Column::Float64(v) => {
+                for &x in v {
+                    acc = acc.wrapping_add(splitmix64(x.to_bits()));
+                }
+            }
+            Column::Utf8(v) => {
+                for s in v {
+                    let mut h = 0xcbf2_9ce4_8422_2325u64;
+                    for b in s.bytes() {
+                        h ^= b as u64;
+                        h = h.wrapping_mul(0x1000_0000_01b3);
+                    }
+                    acc = acc.wrapping_add(splitmix64(h));
+                }
+            }
+            Column::Bool(v) => {
+                for &x in v {
+                    acc = acc.wrapping_add(splitmix64(x as u64));
+                }
+            }
+        }
+        acc
+    }
+
+    /// Approximate in-memory payload size in bytes (for the network model).
+    pub fn byte_size(&self) -> usize {
+        match self {
+            Column::Int64(v) => v.len() * 8,
+            Column::Float64(v) => v.len() * 8,
+            Column::Utf8(v) => v.iter().map(|s| s.len() + 8).sum(),
+            Column::Bool(v) => v.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_and_slice() {
+        let c = Column::Int64(vec![10, 20, 30, 40]);
+        assert_eq!(c.take(&[3, 0, 0]), Column::Int64(vec![40, 10, 10]));
+        assert_eq!(c.slice(1, 2), Column::Int64(vec![20, 30]));
+        assert_eq!(c.len(), 4);
+    }
+
+    #[test]
+    fn extend_checks_dtype() {
+        let mut a = Column::Int64(vec![1]);
+        assert!(a.extend(&Column::Int64(vec![2])).is_ok());
+        assert_eq!(a.len(), 2);
+        assert!(a.extend(&Column::Float64(vec![1.0])).is_err());
+    }
+
+    #[test]
+    fn accessors() {
+        let c = Column::Float64(vec![1.5]);
+        assert!(c.as_f64().is_ok());
+        assert!(c.as_i64().is_err());
+        assert_eq!(c.dtype(), DataType::Float64);
+    }
+
+    #[test]
+    fn fingerprint_order_insensitive() {
+        let a = Column::Int64(vec![1, 2, 3]);
+        let b = Column::Int64(vec![3, 1, 2]);
+        assert_eq!(a.multiset_fingerprint(), b.multiset_fingerprint());
+        let c = Column::Int64(vec![1, 2, 4]);
+        assert_ne!(a.multiset_fingerprint(), c.multiset_fingerprint());
+    }
+
+    #[test]
+    fn byte_sizes() {
+        assert_eq!(Column::Int64(vec![0; 4]).byte_size(), 32);
+        assert_eq!(Column::Bool(vec![true; 4]).byte_size(), 4);
+        assert_eq!(
+            Column::Utf8(vec!["ab".into()]).byte_size(),
+            10
+        );
+    }
+
+    #[test]
+    fn utf8_roundtrip() {
+        let c = Column::Utf8(vec!["x".into(), "y".into()]);
+        assert_eq!(c.value_to_string(1), "y");
+        assert_eq!(c.take(&[1, 0]).as_utf8().unwrap()[0], "y");
+    }
+}

@@ -1,0 +1,174 @@
+//! Minimal CSV reader/writer for the examples (header row, no quoting —
+//! sufficient for the synthetic numeric workloads the paper evaluates).
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+use super::column::{Column, DataType};
+use super::schema::Schema;
+use super::table::Table;
+
+/// Write `table` as CSV with a header row.
+pub fn write_csv(table: &Table, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    let header: Vec<&str> = table
+        .schema()
+        .fields()
+        .iter()
+        .map(|f| f.name.as_str())
+        .collect();
+    writeln!(w, "{}", header.join(","))?;
+    for r in 0..table.num_rows() {
+        let cells: Vec<String> = table
+            .columns()
+            .iter()
+            .map(|c| c.value_to_string(r))
+            .collect();
+        writeln!(w, "{}", cells.join(","))?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a CSV produced by [`write_csv`] with an explicit schema.
+pub fn read_csv(path: &Path, schema: Schema) -> Result<Table> {
+    let f = std::fs::File::open(path)?;
+    let reader = std::io::BufReader::new(f);
+    let mut lines = reader.lines();
+
+    let header = lines
+        .next()
+        .ok_or_else(|| Error::DataFrame("empty csv".into()))??;
+    let names: Vec<&str> = header.split(',').collect();
+    if names.len() != schema.len() {
+        return Err(Error::DataFrame(format!(
+            "csv has {} columns, schema expects {}",
+            names.len(),
+            schema.len()
+        )));
+    }
+    for (name, field) in names.iter().zip(schema.fields()) {
+        if *name != field.name {
+            return Err(Error::DataFrame(format!(
+                "csv header '{name}' != schema field '{}'",
+                field.name
+            )));
+        }
+    }
+
+    let mut cols: Vec<Column> = schema
+        .fields()
+        .iter()
+        .map(|f| Column::empty(f.dtype))
+        .collect();
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        if line.is_empty() {
+            continue;
+        }
+        let cells: Vec<&str> = line.split(',').collect();
+        if cells.len() != schema.len() {
+            return Err(Error::DataFrame(format!(
+                "row {} has {} cells, expected {}",
+                lineno + 2,
+                cells.len(),
+                schema.len()
+            )));
+        }
+        for (cell, col) in cells.iter().zip(cols.iter_mut()) {
+            let parse_err = |what: &str| {
+                Error::DataFrame(format!(
+                    "row {}: cannot parse '{cell}' as {what}",
+                    lineno + 2
+                ))
+            };
+            match col {
+                Column::Int64(v) => {
+                    v.push(cell.parse().map_err(|_| parse_err("int64"))?)
+                }
+                Column::Float64(v) => {
+                    v.push(cell.parse().map_err(|_| parse_err("float64"))?)
+                }
+                Column::Utf8(v) => v.push(cell.to_string()),
+                Column::Bool(v) => {
+                    v.push(cell.parse().map_err(|_| parse_err("bool"))?)
+                }
+            }
+        }
+    }
+    Table::new(schema, cols)
+}
+
+#[allow(unused)]
+fn _dtype_name(d: DataType) -> &'static str {
+    match d {
+        DataType::Int64 => "int64",
+        DataType::Float64 => "float64",
+        DataType::Utf8 => "utf8",
+        DataType::Bool => "bool",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        Table::new(
+            Schema::of(&[
+                ("k", DataType::Int64),
+                ("x", DataType::Float64),
+                ("tag", DataType::Utf8),
+                ("ok", DataType::Bool),
+            ]),
+            vec![
+                Column::Int64(vec![1, -2]),
+                Column::Float64(vec![0.5, 2.25]),
+                Column::Utf8(vec!["a".into(), "b".into()]),
+                Column::Bool(vec![true, false]),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("rc_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        let t = sample();
+        write_csv(&t, &path).unwrap();
+        let back = read_csv(&path, t.schema().clone()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn header_mismatch_detected() {
+        let dir = std::env::temp_dir().join("rc_csv_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        write_csv(&sample(), &path).unwrap();
+        let bad = Schema::of(&[
+            ("WRONG", DataType::Int64),
+            ("x", DataType::Float64),
+            ("tag", DataType::Utf8),
+            ("ok", DataType::Bool),
+        ]);
+        assert!(read_csv(&path, bad).is_err());
+    }
+
+    #[test]
+    fn parse_error_reported_with_row() {
+        let dir = std::env::temp_dir().join("rc_csv_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        std::fs::write(&path, "k\nnotanint\n").unwrap();
+        let err = read_csv(&path, Schema::of(&[("k", DataType::Int64)]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("row 2"), "{err}");
+    }
+}

@@ -1,0 +1,144 @@
+//! Synthetic workload generation — the stand-in for the paper's 35 M/3.5 B
+//! row datasets (DESIGN.md §2 substitution log). Deterministic per
+//! (seed, rank) so every execution mode sees identical data.
+
+use crate::util::rng::Rng;
+
+use super::column::{Column, DataType};
+use super::schema::Schema;
+use super::table::Table;
+
+/// Key distribution for generated tables.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KeyDist {
+    /// Uniform over `[0, key_space)`.
+    Uniform,
+    /// Zipf-ish skew (power-law over the key space) — stresses shuffle
+    /// imbalance the way real joins do.
+    Skewed { exponent: f64 },
+    /// Sequential keys (pre-sorted input edge case).
+    Sequential,
+}
+
+/// Generation spec for one rank's partition.
+#[derive(Clone, Debug)]
+pub struct GenSpec {
+    pub rows: usize,
+    /// Number of distinct keys to draw from (controls join hit rate).
+    pub key_space: i64,
+    pub dist: KeyDist,
+    pub seed: u64,
+}
+
+impl GenSpec {
+    pub fn uniform(rows: usize, key_space: i64, seed: u64) -> GenSpec {
+        GenSpec { rows, key_space, dist: KeyDist::Uniform, seed }
+    }
+}
+
+/// Standard two-column table `(key: int64, val: float64)` — the shape the
+/// paper's join/sort micro-benchmarks use.
+pub fn gen_table(spec: &GenSpec, rank: usize) -> Table {
+    // Mix rank into the seed so partitions are independent but reproducible.
+    let mut rng = Rng::new(spec.seed ^ crate::util::hash::splitmix64(rank as u64));
+    let mut keys = Vec::with_capacity(spec.rows);
+    match spec.dist {
+        KeyDist::Uniform => {
+            for _ in 0..spec.rows {
+                keys.push(rng.gen_i64(0, spec.key_space.max(1)));
+            }
+        }
+        KeyDist::Skewed { exponent } => {
+            // k = floor(ks * u^exponent): for exponent > 1 the mass
+            // concentrates near key 0 (power-law-ish head-heavy skew).
+            let ks = spec.key_space.max(2) as f64;
+            for _ in 0..spec.rows {
+                let u = rng.gen_f64();
+                let k = (ks * u.powf(exponent)) as i64;
+                keys.push(k.clamp(0, spec.key_space - 1));
+            }
+        }
+        KeyDist::Sequential => {
+            let base = rank as i64 * spec.rows as i64;
+            for i in 0..spec.rows {
+                keys.push(base + i as i64);
+            }
+        }
+    }
+    let vals: Vec<f64> = (0..spec.rows).map(|_| rng.gen_f64()).collect();
+    Table::new(
+        Schema::of(&[("key", DataType::Int64), ("val", DataType::Float64)]),
+        vec![Column::Int64(keys), Column::Float64(vals)],
+    )
+    .expect("generated table is well-formed")
+}
+
+/// Left/right tables for a join with overlapping key spaces.
+pub fn gen_two_tables(spec: &GenSpec, rank: usize) -> (Table, Table) {
+    let left = gen_table(spec, rank);
+    let right_spec = GenSpec { seed: spec.seed.wrapping_add(0x5eed), ..spec.clone() };
+    let right = gen_table(&right_spec, rank);
+    (left, right)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_rank() {
+        let spec = GenSpec::uniform(100, 1000, 7);
+        assert_eq!(gen_table(&spec, 3), gen_table(&spec, 3));
+        assert_ne!(gen_table(&spec, 3), gen_table(&spec, 4));
+    }
+
+    #[test]
+    fn keys_in_range() {
+        let spec = GenSpec::uniform(1000, 50, 1);
+        let t = gen_table(&spec, 0);
+        for &k in t.column(0).as_i64().unwrap() {
+            assert!((0..50).contains(&k));
+        }
+    }
+
+    #[test]
+    fn skewed_is_skewed() {
+        let spec = GenSpec {
+            rows: 20_000,
+            key_space: 1000,
+            dist: KeyDist::Skewed { exponent: 1.5 },
+            seed: 2,
+        };
+        let t = gen_table(&spec, 0);
+        let keys = t.column(0).as_i64().unwrap();
+        let low = keys.iter().filter(|&&k| k < 100).count();
+        // Power-law: the low decile should hold far more than 10% of mass.
+        assert!(low > keys.len() / 5, "low-decile count {low}");
+        for &k in keys {
+            assert!((0..1000).contains(&k));
+        }
+    }
+
+    #[test]
+    fn sequential_is_globally_unique() {
+        let spec = GenSpec {
+            rows: 10,
+            key_space: i64::MAX,
+            dist: KeyDist::Sequential,
+            seed: 0,
+        };
+        let a = gen_table(&spec, 0);
+        let b = gen_table(&spec, 1);
+        assert_eq!(a.column(0).as_i64().unwrap()[9], 9);
+        assert_eq!(b.column(0).as_i64().unwrap()[0], 10);
+    }
+
+    #[test]
+    fn join_pair_overlaps() {
+        let spec = GenSpec::uniform(500, 100, 3);
+        let (l, r) = gen_two_tables(&spec, 0);
+        assert_eq!(l.num_rows(), 500);
+        assert_eq!(r.num_rows(), 500);
+        assert_ne!(l, r);
+    }
+}

@@ -1,0 +1,16 @@
+//! Columnar dataframe substrate — the Cylon table abstraction (paper §3.2,
+//! Fig 1): typed columns in a columnar layout, a schema, and a `Table` that
+//! local and distributed operators consume. Stands in for Cylon's Apache
+//! Arrow foundation.
+
+mod column;
+mod csv;
+mod gen;
+mod schema;
+mod table;
+
+pub use column::{Column, DataType};
+pub use csv::{read_csv, write_csv};
+pub use gen::{gen_table, gen_two_tables, GenSpec, KeyDist};
+pub use schema::{Field, Schema};
+pub use table::Table;

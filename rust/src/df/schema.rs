@@ -1,0 +1,115 @@
+//! Table schema: ordered, named, typed fields.
+
+use crate::error::{Error, Result};
+
+use super::column::DataType;
+
+/// A named, typed field.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Field {
+    pub name: String,
+    pub dtype: DataType,
+}
+
+impl Field {
+    pub fn new(name: &str, dtype: DataType) -> Field {
+        Field { name: name.to_string(), dtype }
+    }
+}
+
+/// Ordered collection of fields.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct Schema {
+    fields: Vec<Field>,
+}
+
+impl Schema {
+    pub fn new(fields: Vec<Field>) -> Schema {
+        Schema { fields }
+    }
+
+    /// Builder-style convenience: `Schema::of(&[("k", Int64), ...])`.
+    pub fn of(spec: &[(&str, DataType)]) -> Schema {
+        Schema {
+            fields: spec.iter().map(|(n, t)| Field::new(n, *t)).collect(),
+        }
+    }
+
+    pub fn fields(&self) -> &[Field] {
+        &self.fields
+    }
+
+    pub fn len(&self) -> usize {
+        self.fields.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fields.is_empty()
+    }
+
+    /// Index of a column by name.
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        self.fields
+            .iter()
+            .position(|f| f.name == name)
+            .ok_or_else(|| Error::DataFrame(format!("no column named '{name}'")))
+    }
+
+    pub fn field(&self, i: usize) -> &Field {
+        &self.fields[i]
+    }
+
+    /// Concatenate two schemas, suffixing right-side name collisions with
+    /// `_right` (Cylon's join behaviour).
+    pub fn join(&self, right: &Schema) -> Schema {
+        let mut fields = self.fields.clone();
+        for f in &right.fields {
+            let name = if self.index_of(&f.name).is_ok() {
+                format!("{}_right", f.name)
+            } else {
+                f.name.clone()
+            };
+            fields.push(Field::new(&name, f.dtype));
+        }
+        Schema { fields }
+    }
+}
+
+impl std::fmt::Display for Schema {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let parts: Vec<String> = self
+            .fields
+            .iter()
+            .map(|fl| format!("{}:{}", fl.name, fl.dtype))
+            .collect();
+        write!(f, "[{}]", parts.join(", "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_lookup() {
+        let s = Schema::of(&[("k", DataType::Int64), ("v", DataType::Float64)]);
+        assert_eq!(s.index_of("v").unwrap(), 1);
+        assert!(s.index_of("zzz").is_err());
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn join_renames_collisions() {
+        let l = Schema::of(&[("k", DataType::Int64), ("v", DataType::Int64)]);
+        let r = Schema::of(&[("k", DataType::Int64), ("w", DataType::Utf8)]);
+        let j = l.join(&r);
+        let names: Vec<&str> = j.fields().iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["k", "v", "k_right", "w"]);
+    }
+
+    #[test]
+    fn display() {
+        let s = Schema::of(&[("k", DataType::Int64)]);
+        assert_eq!(s.to_string(), "[k:int64]");
+    }
+}

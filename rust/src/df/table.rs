@@ -1,0 +1,277 @@
+//! `Table`: the unit every Cylon operator consumes and produces.
+
+use crate::error::{Error, Result};
+
+use super::column::Column;
+#[cfg(test)]
+use super::column::DataType;
+use super::schema::Schema;
+
+/// An immutable columnar table (schema + equal-length columns).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Table {
+    schema: Schema,
+    columns: Vec<Column>,
+    nrows: usize,
+}
+
+impl Table {
+    /// Build a table, validating schema/column agreement.
+    pub fn new(schema: Schema, columns: Vec<Column>) -> Result<Table> {
+        if schema.len() != columns.len() {
+            return Err(Error::DataFrame(format!(
+                "schema has {} fields but {} columns given",
+                schema.len(),
+                columns.len()
+            )));
+        }
+        let nrows = columns.first().map(|c| c.len()).unwrap_or(0);
+        for (f, c) in schema.fields().iter().zip(&columns) {
+            if f.dtype != c.dtype() {
+                return Err(Error::DataFrame(format!(
+                    "column '{}' declared {} but holds {}",
+                    f.name,
+                    f.dtype,
+                    c.dtype()
+                )));
+            }
+            if c.len() != nrows {
+                return Err(Error::DataFrame(format!(
+                    "ragged table: column '{}' has {} rows, expected {nrows}",
+                    f.name,
+                    c.len()
+                )));
+            }
+        }
+        Ok(Table { schema, columns, nrows })
+    }
+
+    /// Empty table with the given schema.
+    pub fn empty(schema: Schema) -> Table {
+        let columns = schema
+            .fields()
+            .iter()
+            .map(|f| Column::empty(f.dtype))
+            .collect();
+        Table { schema, columns, nrows: 0 }
+    }
+
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.nrows
+    }
+
+    pub fn num_columns(&self) -> usize {
+        self.columns.len()
+    }
+
+    pub fn column(&self, i: usize) -> &Column {
+        &self.columns[i]
+    }
+
+    pub fn column_by_name(&self, name: &str) -> Result<&Column> {
+        Ok(&self.columns[self.schema.index_of(name)?])
+    }
+
+    pub fn columns(&self) -> &[Column] {
+        &self.columns
+    }
+
+    /// Gather rows by index into a new table.
+    pub fn take(&self, idx: &[usize]) -> Table {
+        Table {
+            schema: self.schema.clone(),
+            columns: self.columns.iter().map(|c| c.take(idx)).collect(),
+            nrows: idx.len(),
+        }
+    }
+
+    /// Contiguous row slice.
+    pub fn slice(&self, start: usize, len: usize) -> Table {
+        Table {
+            schema: self.schema.clone(),
+            columns: self.columns.iter().map(|c| c.slice(start, len)).collect(),
+            nrows: len,
+        }
+    }
+
+    /// Concatenate tables with identical schemas.
+    pub fn concat(parts: &[Table]) -> Result<Table> {
+        let Some(first) = parts.first() else {
+            return Err(Error::DataFrame("concat of zero tables".into()));
+        };
+        let mut columns: Vec<Column> =
+            first.columns.iter().map(|c| c.empty_like()).collect();
+        let mut nrows = 0;
+        for part in parts {
+            if part.schema != first.schema {
+                return Err(Error::DataFrame(format!(
+                    "concat schema mismatch: {} vs {}",
+                    part.schema, first.schema
+                )));
+            }
+            for (dst, src) in columns.iter_mut().zip(&part.columns) {
+                dst.extend(src)?;
+            }
+            nrows += part.nrows;
+        }
+        Ok(Table { schema: first.schema.clone(), columns, nrows })
+    }
+
+    /// Keep only rows where `mask` is true.
+    pub fn filter(&self, mask: &[bool]) -> Result<Table> {
+        if mask.len() != self.nrows {
+            return Err(Error::DataFrame(format!(
+                "mask length {} != row count {}",
+                mask.len(),
+                self.nrows
+            )));
+        }
+        let idx: Vec<usize> = mask
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &keep)| keep.then_some(i))
+            .collect();
+        Ok(self.take(&idx))
+    }
+
+    /// Project a subset of columns by name.
+    pub fn project(&self, names: &[&str]) -> Result<Table> {
+        let mut fields = Vec::with_capacity(names.len());
+        let mut columns = Vec::with_capacity(names.len());
+        for name in names {
+            let i = self.schema.index_of(name)?;
+            fields.push(self.schema.field(i).clone());
+            columns.push(self.columns[i].clone());
+        }
+        Ok(Table { schema: Schema::new(fields), columns, nrows: self.nrows })
+    }
+
+    /// Order-insensitive content fingerprint: wrapping sum of per-row
+    /// hashes. **Additive over disjoint row sets**, so the sum of per-rank
+    /// partition fingerprints equals the whole-table fingerprint — the
+    /// property every distributed-op invariance test relies on.
+    pub fn multiset_fingerprint(&self) -> u64 {
+        use crate::util::hash::splitmix64;
+        let mut acc = 0u64;
+        for r in 0..self.nrows {
+            let mut rh = 0x9E37_79B9_7F4A_7C15u64;
+            for c in &self.columns {
+                rh = splitmix64(rh ^ c.value_hash(r));
+            }
+            acc = acc.wrapping_add(rh);
+        }
+        acc
+    }
+
+    /// Approximate payload bytes (drives the network cost model).
+    pub fn byte_size(&self) -> usize {
+        self.columns.iter().map(|c| c.byte_size()).sum()
+    }
+
+    /// First `n` rows rendered for debugging/examples.
+    pub fn head(&self, n: usize) -> String {
+        let n = n.min(self.nrows);
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.schema));
+        for r in 0..n {
+            let cells: Vec<String> = self
+                .columns
+                .iter()
+                .map(|c| c.value_to_string(r))
+                .collect();
+            out.push_str(&format!("  {}\n", cells.join(", ")));
+        }
+        if self.nrows > n {
+            out.push_str(&format!("  ... ({} rows total)\n", self.nrows));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t2() -> Table {
+        Table::new(
+            Schema::of(&[("k", DataType::Int64), ("v", DataType::Float64)]),
+            vec![
+                Column::Int64(vec![3, 1, 2]),
+                Column::Float64(vec![0.3, 0.1, 0.2]),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn validates_shape_and_types() {
+        assert!(Table::new(
+            Schema::of(&[("k", DataType::Int64)]),
+            vec![Column::Float64(vec![1.0])],
+        )
+        .is_err());
+        assert!(Table::new(
+            Schema::of(&[("k", DataType::Int64), ("v", DataType::Int64)]),
+            vec![Column::Int64(vec![1]), Column::Int64(vec![1, 2])],
+        )
+        .is_err());
+        assert!(Table::new(Schema::of(&[("k", DataType::Int64)]), vec![]).is_err());
+    }
+
+    #[test]
+    fn take_slice_filter_project() {
+        let t = t2();
+        let taken = t.take(&[1, 1]);
+        assert_eq!(taken.column(0).as_i64().unwrap(), &[1, 1]);
+        let sl = t.slice(1, 2);
+        assert_eq!(sl.column(0).as_i64().unwrap(), &[1, 2]);
+        let f = t.filter(&[true, false, true]).unwrap();
+        assert_eq!(f.column(0).as_i64().unwrap(), &[3, 2]);
+        let p = t.project(&["v"]).unwrap();
+        assert_eq!(p.num_columns(), 1);
+        assert_eq!(p.num_rows(), 3);
+        assert!(t.project(&["nope"]).is_err());
+    }
+
+    #[test]
+    fn concat_and_fingerprint() {
+        let t = t2();
+        let c = Table::concat(&[t.slice(0, 1), t.slice(1, 2)]).unwrap();
+        assert_eq!(c.num_rows(), 3);
+        assert_eq!(c.multiset_fingerprint(), t.multiset_fingerprint());
+        // reordering rows keeps the fingerprint
+        assert_eq!(
+            t.take(&[2, 0, 1]).multiset_fingerprint(),
+            t.multiset_fingerprint()
+        );
+        // changing a value does not
+        let other = Table::new(
+            t.schema().clone(),
+            vec![
+                Column::Int64(vec![3, 1, 99]),
+                Column::Float64(vec![0.3, 0.1, 0.2]),
+            ],
+        )
+        .unwrap();
+        assert_ne!(other.multiset_fingerprint(), t.multiset_fingerprint());
+    }
+
+    #[test]
+    fn empty_and_head() {
+        let e = Table::empty(Schema::of(&[("k", DataType::Int64)]));
+        assert_eq!(e.num_rows(), 0);
+        let h = t2().head(2);
+        assert!(h.contains("(3 rows total)"));
+    }
+
+    #[test]
+    fn concat_rejects_mismatched_schema() {
+        let a = t2();
+        let b = Table::empty(Schema::of(&[("x", DataType::Int64)]));
+        assert!(Table::concat(&[a, b]).is_err());
+    }
+}

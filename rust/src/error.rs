@@ -1,0 +1,76 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for every subsystem (df, comm, pilot, runtime, ...).
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Schema/type mismatches and other dataframe misuse.
+    #[error("dataframe error: {0}")]
+    DataFrame(String),
+
+    /// Communicator misuse or a peer that went away.
+    #[error("communicator error: {0}")]
+    Comm(String),
+
+    /// Resource manager could not satisfy an allocation.
+    #[error("resource error: {0}")]
+    Resource(String),
+
+    /// Pilot/task lifecycle violations (illegal state transitions, ...).
+    #[error("pilot error: {0}")]
+    Pilot(String),
+
+    /// Task execution failed on a worker.
+    #[error("task failed: {0}")]
+    TaskFailed(String),
+
+    /// PJRT runtime / artifact problems.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Configuration parse/validation errors.
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Errors bubbling out of the `xla` crate.
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[macro_export]
+macro_rules! bail {
+    ($variant:ident, $($arg:tt)*) => {
+        return Err($crate::error::Error::$variant(format!($($arg)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::Comm("rank 3 vanished".into());
+        assert!(e.to_string().contains("rank 3"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

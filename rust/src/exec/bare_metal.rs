@@ -1,0 +1,106 @@
+//! BM-Cylon: direct BSP launch of each task on a dedicated world — the
+//! baseline the paper compares Radical-Cylon against in §4.1/4.2.
+
+use crate::cluster::{rm_for, MachineSpec};
+use crate::comm::CommWorld;
+use crate::error::{Error, Result};
+use crate::metrics::{ExecMeasurement, OverheadBreakdown};
+use crate::ops::dist::KernelBackend;
+use crate::pilot::{TaskDescription, TaskResult, TaskState};
+use crate::raptor::run_cylon_task;
+
+use super::{Engine, EngineKind, SuiteResult};
+
+/// Bare-metal engine: per-task `srun`-style launch (tasks run sequentially,
+/// each on a fresh full-width communicator; each launch pays the machine's
+/// dispatch latency, but there is no pilot/RAPTOR overhead).
+pub struct BareMetalEngine {
+    machine: MachineSpec,
+    backend: KernelBackend,
+}
+
+impl BareMetalEngine {
+    pub fn new(machine: MachineSpec, backend: KernelBackend) -> BareMetalEngine {
+        BareMetalEngine { machine, backend }
+    }
+}
+
+impl Engine for BareMetalEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::BareMetal
+    }
+
+    fn run_suite(&self, tasks: &[TaskDescription]) -> Result<SuiteResult> {
+        let rm = rm_for(self.machine.clone());
+        let mut per_task = Vec::with_capacity(tasks.len());
+        let mut makespan = 0.0;
+        let mut startup_total = 0.0;
+        for (i, td) in tasks.iter().enumerate() {
+            // srun-equivalent: allocate, run BSP across all ranks, release.
+            let alloc = rm.allocate(td.ranks, false)?;
+            let world = CommWorld::new(td.ranks, self.machine.netmodel());
+            let td_owned = td.clone();
+            let backend = self.backend.clone();
+            let stats = world
+                .run(move |c| run_cylon_task(&c, &td_owned, &backend))?
+                .into_iter()
+                .next()
+                .ok_or_else(|| Error::TaskFailed("empty world".into()))??;
+            rm.release(&alloc);
+            let m = ExecMeasurement {
+                label: td.name.clone(),
+                parallelism: td.ranks,
+                wall_s: stats.wall_s,
+                sim_net_s: stats.sim_net_s,
+                overhead: OverheadBreakdown::default(), // no RP layer
+            };
+            makespan += alloc.startup_latency + m.total_s();
+            startup_total += alloc.startup_latency;
+            per_task.push(TaskResult {
+                task_id: i as u64 + 1,
+                name: td.name.clone(),
+                state: TaskState::Done,
+                measurement: m,
+                output_rows: stats.output_rows,
+                error: None,
+            });
+        }
+        Ok(SuiteResult {
+            engine: EngineKind::BareMetal,
+            per_task,
+            makespan_s: makespan,
+            startup_s: startup_total,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pilot::DataDist;
+
+    #[test]
+    fn runs_join_and_sort() {
+        let eng = BareMetalEngine::new(MachineSpec::local(4), KernelBackend::Native);
+        let suite = eng
+            .run_suite(&[
+                TaskDescription::join("j", 4, 100, DataDist::Uniform),
+                TaskDescription::sort("s", 4, 100, DataDist::Uniform),
+            ])
+            .unwrap();
+        assert_eq!(suite.per_task.len(), 2);
+        assert!(suite.per_task.iter().all(|r| r.is_done()));
+        assert!(suite.makespan_s > 0.0);
+        // BM has zero RP overhead by construction.
+        assert_eq!(suite.mean_overhead_s(), 0.0);
+    }
+
+    #[test]
+    fn task_larger_than_machine_fails() {
+        let eng = BareMetalEngine::new(MachineSpec::local(2), KernelBackend::Native);
+        let err = eng
+            .run_suite(&[TaskDescription::sort("big", 3, 10, DataDist::Uniform)])
+            .unwrap_err();
+        assert!(err.to_string().contains("cannot satisfy"));
+    }
+}

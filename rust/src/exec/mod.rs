@@ -1,0 +1,92 @@
+//! Execution engines — the paper's three comparison modes:
+//!
+//! * [`BareMetalEngine`] — BM-Cylon: each task launched directly on its own
+//!   communicator (the `mpirun`/`srun` path), no pilot layer.
+//! * [`BatchEngine`] — batch execution via the resource manager: every
+//!   task is a separate job (LSF `bsub` semantics on Summit: whole nodes,
+//!   queue latency per job, no resource sharing across jobs) — §4.3's
+//!   baseline.
+//! * [`HeterogeneousEngine`] — Radical-Cylon: one pilot, many tasks,
+//!   private communicators, immediate rank reuse (§4.3's contribution).
+//!
+//! All engines consume the same [`TaskDescription`]s and produce
+//! [`SuiteResult`]s with a comparable makespan model: real compute wall
+//! time + simulated network seconds + modeled resource-manager latencies.
+
+mod bare_metal;
+mod batch;
+mod hetero;
+pub mod runner;
+
+pub use bare_metal::BareMetalEngine;
+pub use batch::BatchEngine;
+pub use hetero::HeterogeneousEngine;
+pub use runner::{
+    run_bm_vs_rp, run_hetero_vs_batch, run_scaling, HeteroVsBatch, SweepRow,
+};
+
+use crate::error::Result;
+use crate::pilot::{TaskDescription, TaskResult};
+
+/// Which engine produced a result (for report labels).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    BareMetal,
+    Batch,
+    Heterogeneous,
+}
+
+impl EngineKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::BareMetal => "bare-metal",
+            EngineKind::Batch => "batch",
+            EngineKind::Heterogeneous => "radical-cylon",
+        }
+    }
+}
+
+/// Outcome of running a task suite through an engine.
+#[derive(Clone, Debug)]
+pub struct SuiteResult {
+    pub engine: EngineKind,
+    pub per_task: Vec<TaskResult>,
+    /// End-to-end modeled seconds: RM latencies + compute wall + simulated
+    /// network time (see each engine's makespan docs).
+    pub makespan_s: f64,
+    /// Total modeled RM startup seconds paid (pilot or per-job).
+    pub startup_s: f64,
+}
+
+impl SuiteResult {
+    /// Sum of per-task execution times (wall + simulated network).
+    pub fn total_exec_s(&self) -> f64 {
+        self.per_task.iter().map(|r| r.measurement.total_s()).sum()
+    }
+
+    /// Mean per-task overhead (the paper's Table 2 "Overheads" column).
+    pub fn mean_overhead_s(&self) -> f64 {
+        if self.per_task.is_empty() {
+            return 0.0;
+        }
+        self.per_task
+            .iter()
+            .map(|r| r.measurement.overhead.total())
+            .sum::<f64>()
+            / self.per_task.len() as f64
+    }
+}
+
+/// Common engine interface used by benches and the CLI.
+pub trait Engine {
+    fn kind(&self) -> EngineKind;
+
+    /// Run the suite to completion and report.
+    fn run_suite(&self, tasks: &[TaskDescription]) -> Result<SuiteResult>;
+
+    /// Run a single task (convenience).
+    fn run_task(&self, task: &TaskDescription) -> Result<TaskResult> {
+        let suite = self.run_suite(std::slice::from_ref(task))?;
+        Ok(suite.per_task.into_iter().next().expect("one result"))
+    }
+}

@@ -1,0 +1,253 @@
+//! Experiment runner: maps [`ExperimentConfig`]s onto engines and collects
+//! paper-comparable statistics. Shared by the CLI (`radical-cylon run`) and
+//! every bench target.
+
+use crate::config::ExperimentConfig;
+use crate::error::Result;
+use crate::metrics::Stats;
+use crate::ops::dist::KernelBackend;
+use crate::pilot::{CylonOp, DataDist, TaskDescription};
+
+use super::{
+    BareMetalEngine, BatchEngine, Engine, EngineKind, HeterogeneousEngine,
+    SuiteResult,
+};
+
+/// One row of a scaling sweep (one parallelism, `iterations` samples).
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub engine: EngineKind,
+    pub parallelism: usize,
+    pub rows_per_rank: usize,
+    /// Per-iteration execution time (wall + simulated network), seconds.
+    pub total: Stats,
+    /// Per-iteration RP overhead (0 for bare-metal/batch), seconds.
+    pub overhead: Stats,
+    /// Tasks per second of overhead-free throughput (paper Table 2 col 4
+    /// reports overhead as tasks/second of the overhead activity).
+    pub output_rows: u64,
+}
+
+fn op_of(config: &ExperimentConfig) -> CylonOp {
+    match config.op.as_str() {
+        "join" => CylonOp::Join,
+        "sort" => CylonOp::Sort,
+        "groupby" => CylonOp::Groupby,
+        other => panic!("op '{other}' is not a single-op experiment"),
+    }
+}
+
+/// Task for one iteration of a single-op experiment at parallelism `p`.
+pub fn task_for(config: &ExperimentConfig, p: usize, iter: usize) -> TaskDescription {
+    let rows = config.rows_at(p);
+    let mut td = TaskDescription::new(
+        &format!("{}-{}-p{p}-i{iter}", config.op, config.scaling.name()),
+        op_of(config),
+        p,
+        rows,
+    );
+    td.dist = DataDist::Uniform;
+    td.seed = config.seed ^ (iter as u64) << 32 ^ p as u64;
+    td
+}
+
+/// Run a single-op scaling sweep on one engine kind.
+pub fn run_scaling(
+    config: &ExperimentConfig,
+    kind: EngineKind,
+    backend: &KernelBackend,
+) -> Result<Vec<SweepRow>> {
+    let machine = config.machine_spec()?;
+    let mut rows = Vec::with_capacity(config.parallelisms.len());
+    for &p in &config.parallelisms {
+        let tasks: Vec<TaskDescription> = (0..config.iterations)
+            .map(|i| task_for(config, p, i))
+            .collect();
+        let suite: SuiteResult = match kind {
+            EngineKind::BareMetal => {
+                BareMetalEngine::new(machine.clone(), backend.clone())
+                    .run_suite(&tasks)?
+            }
+            EngineKind::Batch => BatchEngine::new(machine.clone(), backend.clone())
+                .run_suite(&tasks)?,
+            EngineKind::Heterogeneous => {
+                HeterogeneousEngine::new(machine.clone(), backend.clone(), p)
+                    .run_suite(&tasks)?
+            }
+        };
+        let totals: Vec<f64> = suite
+            .per_task
+            .iter()
+            .map(|r| r.measurement.total_s())
+            .collect();
+        let overheads: Vec<f64> = suite
+            .per_task
+            .iter()
+            .map(|r| r.measurement.overhead.total())
+            .collect();
+        rows.push(SweepRow {
+            engine: kind,
+            parallelism: p,
+            rows_per_rank: config.rows_at(p),
+            total: Stats::from_samples(&totals),
+            overhead: Stats::from_samples(&overheads),
+            output_rows: suite.per_task.first().map(|r| r.output_rows).unwrap_or(0),
+        });
+    }
+    Ok(rows)
+}
+
+/// Fig 5–8 comparison: BM-Cylon vs Radical-Cylon over the same sweep.
+/// Returns `(bm_row, rp_row)` per parallelism.
+pub fn run_bm_vs_rp(
+    config: &ExperimentConfig,
+    backend: &KernelBackend,
+) -> Result<Vec<(SweepRow, SweepRow)>> {
+    let bm = run_scaling(config, EngineKind::BareMetal, backend)?;
+    let rp = run_scaling(config, EngineKind::Heterogeneous, backend)?;
+    Ok(bm.into_iter().zip(rp).collect())
+}
+
+/// The heterogeneous 4-op workload of Fig 9 (join/sort × WS/SS) at
+/// parallelism `p`, all inside one pilot.
+pub fn hetero_workload(config: &ExperimentConfig, p: usize, iter: usize) -> Vec<TaskDescription> {
+    let weak_rows = config.rows_per_rank;
+    let strong_rows = config.total_rows.div_ceil(p.max(1));
+    let seed = config.seed ^ (iter as u64) << 24;
+    vec![
+        TaskDescription::join(&format!("join-ws-i{iter}"), p, weak_rows, DataDist::Uniform)
+            .with_seed(seed ^ 1),
+        TaskDescription::sort(&format!("sort-ws-i{iter}"), p, weak_rows, DataDist::Uniform)
+            .with_seed(seed ^ 2),
+        TaskDescription::strong(&format!("join-ss-i{iter}"), CylonOp::Join, p, strong_rows * p)
+            .with_seed(seed ^ 3),
+        TaskDescription::strong(&format!("sort-ss-i{iter}"), CylonOp::Sort, p, strong_rows * p)
+            .with_seed(seed ^ 4),
+    ]
+}
+
+/// Heterogeneous-vs-batch comparison at one parallelism (Fig 10/11):
+/// the same join+sort pair run through one pilot vs separate batch jobs.
+#[derive(Clone, Debug)]
+pub struct HeteroVsBatch {
+    pub parallelism: usize,
+    pub hetero_makespan: Stats,
+    pub batch_makespan: Stats,
+}
+
+impl HeteroVsBatch {
+    /// Paper Fig 11: improvement of heterogeneous over batch, percent.
+    pub fn improvement_pct(&self) -> f64 {
+        100.0 * (self.batch_makespan.mean - self.hetero_makespan.mean)
+            / self.batch_makespan.mean
+    }
+}
+
+/// Run the Fig 10 comparison: `reps` repetitions of (join+sort) through
+/// both engines at each parallelism.
+pub fn run_hetero_vs_batch(
+    config: &ExperimentConfig,
+    backend: &KernelBackend,
+    reps: usize,
+) -> Result<Vec<HeteroVsBatch>> {
+    let machine = config.machine_spec()?;
+    let mut out = Vec::new();
+    for &p in &config.parallelisms {
+        let mut hetero_samples = Vec::with_capacity(reps);
+        let mut batch_samples = Vec::with_capacity(reps);
+        for rep in 0..reps {
+            let rows = config.rows_at(p);
+            let pair = vec![
+                TaskDescription::new(
+                    &format!("join-p{p}-r{rep}"),
+                    CylonOp::Join,
+                    p,
+                    rows,
+                )
+                .with_seed(config.seed ^ rep as u64),
+                TaskDescription::new(
+                    &format!("sort-p{p}-r{rep}"),
+                    CylonOp::Sort,
+                    p,
+                    rows,
+                )
+                .with_seed(config.seed ^ rep as u64 ^ 0xABCD),
+            ];
+            let hetero =
+                HeterogeneousEngine::new(machine.clone(), backend.clone(), p)
+                    .run_suite(&pair)?;
+            let batch = BatchEngine::new(machine.clone(), backend.clone())
+                .run_suite(&pair)?;
+            hetero_samples.push(hetero.makespan_s);
+            batch_samples.push(batch.makespan_s);
+        }
+        out.push(HeteroVsBatch {
+            parallelism: p,
+            hetero_makespan: Stats::from_samples(&hetero_samples),
+            batch_makespan: Stats::from_samples(&batch_samples),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+
+    fn tiny(id: &str) -> ExperimentConfig {
+        let mut c = preset(id).expect("preset");
+        c.parallelisms = vec![2, 4];
+        c.iterations = 2;
+        c.rows_per_rank = 500;
+        c.total_rows = 2000;
+        c
+    }
+
+    #[test]
+    fn scaling_sweep_runs_both_engines() {
+        let c = tiny("fig5-weak");
+        let backend = KernelBackend::Native;
+        let bm = run_scaling(&c, EngineKind::BareMetal, &backend).unwrap();
+        let rp = run_scaling(&c, EngineKind::Heterogeneous, &backend).unwrap();
+        assert_eq!(bm.len(), 2);
+        assert_eq!(rp.len(), 2);
+        // BM carries no RP overhead; RP carries some.
+        assert_eq!(bm[0].overhead.mean, 0.0);
+        assert!(rp[0].overhead.mean >= 0.0);
+        assert!(rp[0].total.mean > 0.0);
+    }
+
+    #[test]
+    fn strong_scaling_rows_shrink() {
+        let c = tiny("fig5-strong");
+        assert!(c.rows_at(4) < c.rows_at(2));
+        let row_tasks = task_for(&c, 4, 0);
+        assert_eq!(row_tasks.rows_per_rank, c.rows_at(4));
+    }
+
+    #[test]
+    fn hetero_vs_batch_produces_improvement() {
+        let c = tiny("fig10-weak");
+        let rows =
+            run_hetero_vs_batch(&c, &KernelBackend::Native, 2).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in rows {
+            // hetero must not be slower than batch in the model
+            assert!(
+                r.improvement_pct() > -5.0,
+                "p={} improvement {}",
+                r.parallelism,
+                r.improvement_pct()
+            );
+        }
+    }
+
+    #[test]
+    fn hetero_workload_is_four_ops() {
+        let c = tiny("fig9");
+        let w = hetero_workload(&c, 4, 0);
+        assert_eq!(w.len(), 4);
+        assert!(w.iter().all(|t| t.ranks == 4));
+    }
+}

@@ -1,0 +1,71 @@
+//! # radical-cylon
+//!
+//! Reproduction of *"Design and Implementation of an Analysis Pipeline for
+//! Heterogeneous Data"* (Sarker et al., CS.DC 2024): the **Radical-Cylon**
+//! system — a pilot-job runtime (RADICAL-Pilot analogue) driving a BSP
+//! distributed dataframe engine (Cylon analogue), with the data-plane
+//! hot-spots (shuffle hash partitioning, local block sort) compiled
+//! ahead-of-time from JAX/Pallas to XLA HLO and executed from Rust via PJRT.
+//!
+//! ## Layers
+//!
+//! * **L3 (this crate)** — coordination: pilots, tasks, RAPTOR
+//!   master/worker, private communicator construction, execution engines
+//!   (bare-metal / batch / heterogeneous), plus every substrate the paper
+//!   depends on (columnar tables, local+distributed operators, communicator
+//!   with a calibrated network cost model, simulated SLURM/LSF clusters).
+//! * **L2** — `python/compile/model.py`: JAX graph calling the L1 kernels,
+//!   AOT-lowered to HLO text in `artifacts/`.
+//! * **L1** — `python/compile/kernels/`: Pallas kernels (interpret mode).
+//!
+//! Python never runs on the request path: [`runtime::ArtifactStore`] loads
+//! the HLO artifacts once and serves compiled executables to the data plane.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use radical_cylon::prelude::*;
+//!
+//! // An 8-rank distributed join through the full pilot stack.
+//! let session = Session::new("quickstart");
+//! let pd = PilotDescription::new(MachineSpec::rivanna(), 1); // 1 node = 37 cores
+//! let pilot = session.pilot_manager().submit(pd).unwrap();
+//! let tm = session.task_manager(&pilot);
+//! let td = TaskDescription::join("join-demo", 8, 10_000, DataDist::Uniform);
+//! let result = tm.submit(td).unwrap().wait().unwrap();
+//! assert!(result.is_done());
+//! ```
+
+pub mod cli;
+pub mod cluster;
+pub mod comm;
+pub mod config;
+pub mod df;
+pub mod error;
+pub mod exec;
+pub mod metrics;
+pub mod ops;
+pub mod pilot;
+pub mod pipeline;
+pub mod raptor;
+pub mod runtime;
+pub mod util;
+
+/// Convenience re-exports covering the public API surface used by the
+/// examples and benches.
+pub mod prelude {
+    pub use crate::cluster::{MachineSpec, ResourceManager};
+    pub use crate::comm::{CommWorld, Communicator, NetModel};
+    pub use crate::config::ExperimentConfig;
+    pub use crate::df::{Column, DataType, Schema, Table};
+    pub use crate::error::{Error, Result};
+    pub use crate::exec::{
+        BareMetalEngine, BatchEngine, Engine, EngineKind, HeterogeneousEngine,
+    };
+    pub use crate::metrics::{OverheadBreakdown, Stats};
+    pub use crate::ops::dist::KernelBackend;
+    pub use crate::pilot::{
+        DataDist, PilotDescription, Session, TaskDescription, TaskState,
+    };
+    pub use crate::runtime::ArtifactStore;
+}

@@ -1,0 +1,12 @@
+//! `radical-cylon` launcher binary. See `cli` module for usage.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match radical_cylon::cli::dispatch(argv) {
+        Ok(out) => println!("{out}"),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}

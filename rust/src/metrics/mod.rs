@@ -1,0 +1,180 @@
+//! Timing, overhead accounting, and report tables.
+//!
+//! The paper's two metrics (§4): **Total Execution Time** (task time on N
+//! ranks) and **Radical-Cylon Overheads** — (i) task-description time and
+//! (ii) private-communicator construction + delivery time. Both are
+//! first-class here so Table 2 can be regenerated mechanically.
+
+use std::time::Instant;
+
+pub use crate::util::stats::Stats;
+
+/// Simple scope timer returning seconds.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(Instant::now())
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+/// The paper's overhead decomposition (Table 2 "Overheads" column): the
+/// time RP spends (i) describing the task object and (ii) constructing +
+/// delivering the private MPI communicator, plus the master's dispatch
+/// processing. Queue wait (resources busy with *other* tasks) is recorded
+/// separately and deliberately NOT part of `total()` — it is utilization,
+/// not runtime overhead.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OverheadBreakdown {
+    /// (i) describing + submitting the task object (seconds).
+    pub task_description: f64,
+    /// (ii) constructing the private communicator and delivering it
+    /// (seconds; real rendezvous + modeled per-rank cost).
+    pub comm_construction: f64,
+    /// Master dispatch processing: rank selection + work-order delivery.
+    pub scheduling: f64,
+    /// Time queued behind other tasks (diagnostic; excluded from total).
+    pub queue_wait: f64,
+}
+
+impl OverheadBreakdown {
+    pub fn total(&self) -> f64 {
+        self.task_description + self.comm_construction + self.scheduling
+    }
+}
+
+/// One completed execution measurement.
+#[derive(Clone, Debug)]
+pub struct ExecMeasurement {
+    pub label: String,
+    pub parallelism: usize,
+    /// Wall-clock compute seconds (max across ranks).
+    pub wall_s: f64,
+    /// Simulated network seconds (max across ranks).
+    pub sim_net_s: f64,
+    pub overhead: OverheadBreakdown,
+}
+
+impl ExecMeasurement {
+    /// Total modeled execution time the figures plot: real compute + the
+    /// virtual network seconds the α–β model charged.
+    pub fn total_s(&self) -> f64 {
+        self.wall_s + self.sim_net_s
+    }
+}
+
+/// Accumulates repeated iterations of the same configuration.
+#[derive(Clone, Debug, Default)]
+pub struct MeasurementSeries {
+    pub totals: Vec<f64>,
+    pub overheads: Vec<f64>,
+}
+
+impl MeasurementSeries {
+    pub fn push(&mut self, m: &ExecMeasurement) {
+        self.totals.push(m.total_s());
+        self.overheads.push(m.overhead.total());
+    }
+
+    pub fn total_stats(&self) -> Stats {
+        Stats::from_samples(&self.totals)
+    }
+
+    pub fn overhead_stats(&self) -> Stats {
+        Stats::from_samples(&self.overheads)
+    }
+}
+
+/// Fixed-width table printer used by the CLI and benches.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:<w$}"))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    out.push_str(&fmt_row(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    out.push('\n');
+    out.push_str(
+        &widths
+            .iter()
+            .map(|w| "-".repeat(*w))
+            .collect::<Vec<_>>()
+            .join("  "),
+    );
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_something() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.elapsed_s() >= 0.004);
+    }
+
+    #[test]
+    fn overhead_total() {
+        let o = OverheadBreakdown {
+            task_description: 0.1,
+            comm_construction: 0.2,
+            scheduling: 0.3,
+            queue_wait: 99.0, // excluded from total by design
+        };
+        assert!((o.total() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn series_stats() {
+        let mut s = MeasurementSeries::default();
+        for w in [1.0, 2.0, 3.0] {
+            s.push(&ExecMeasurement {
+                label: "x".into(),
+                parallelism: 4,
+                wall_s: w,
+                sim_net_s: 1.0,
+                overhead: OverheadBreakdown::default(),
+            });
+        }
+        assert!((s.total_stats().mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.overhead_stats().mean, 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            &["a", "bbbb"],
+            &[vec!["xx".into(), "y".into()], vec!["1".into(), "22222".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("a "));
+        assert!(lines[1].starts_with("--"));
+    }
+}

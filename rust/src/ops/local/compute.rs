@@ -1,0 +1,232 @@
+//! Vectorized column compute: arithmetic, comparisons, casts — the
+//! element-wise operator family of Cylon's local-operator set (Fig 1).
+
+use crate::df::{Column, DataType, Schema, Table};
+use crate::error::{Error, Result};
+
+/// Binary arithmetic over numeric columns (elementwise).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+impl BinOp {
+    fn f64(self, a: f64, b: f64) -> f64 {
+        match self {
+            BinOp::Add => a + b,
+            BinOp::Sub => a - b,
+            BinOp::Mul => a * b,
+            BinOp::Div => a / b,
+        }
+    }
+    fn i64(self, a: i64, b: i64) -> i64 {
+        match self {
+            BinOp::Add => a.wrapping_add(b),
+            BinOp::Sub => a.wrapping_sub(b),
+            BinOp::Mul => a.wrapping_mul(b),
+            BinOp::Div => {
+                if b == 0 {
+                    0
+                } else {
+                    a / b
+                }
+            }
+        }
+    }
+}
+
+/// Comparison predicates producing boolean masks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CmpOp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+impl CmpOp {
+    fn ord(self, o: std::cmp::Ordering) -> bool {
+        use std::cmp::Ordering::*;
+        match self {
+            CmpOp::Eq => o == Equal,
+            CmpOp::Ne => o != Equal,
+            CmpOp::Lt => o == Less,
+            CmpOp::Le => o != Greater,
+            CmpOp::Gt => o == Greater,
+            CmpOp::Ge => o != Less,
+        }
+    }
+}
+
+/// Elementwise `lhs op rhs` over two same-typed numeric columns.
+pub fn binary_op(lhs: &Column, rhs: &Column, op: BinOp) -> Result<Column> {
+    if lhs.len() != rhs.len() {
+        return Err(Error::DataFrame("binary_op length mismatch".into()));
+    }
+    match (lhs, rhs) {
+        (Column::Int64(a), Column::Int64(b)) => Ok(Column::Int64(
+            a.iter().zip(b).map(|(&x, &y)| op.i64(x, y)).collect(),
+        )),
+        (Column::Float64(a), Column::Float64(b)) => Ok(Column::Float64(
+            a.iter().zip(b).map(|(&x, &y)| op.f64(x, y)).collect(),
+        )),
+        (a, b) => Err(Error::DataFrame(format!(
+            "binary_op on {}/{} is not supported",
+            a.dtype(),
+            b.dtype()
+        ))),
+    }
+}
+
+/// Elementwise `col op scalar` (int64 scalar broadcast).
+pub fn scalar_op_i64(col: &Column, scalar: i64, op: BinOp) -> Result<Column> {
+    match col {
+        Column::Int64(a) => Ok(Column::Int64(
+            a.iter().map(|&x| op.i64(x, scalar)).collect(),
+        )),
+        other => Err(Error::DataFrame(format!(
+            "scalar_op_i64 on {}",
+            other.dtype()
+        ))),
+    }
+}
+
+/// Compare a column against an int64/float64 scalar, producing a mask that
+/// feeds `Table::filter`.
+pub fn compare_scalar(col: &Column, scalar: f64, op: CmpOp) -> Result<Vec<bool>> {
+    match col {
+        Column::Int64(v) => Ok(v
+            .iter()
+            .map(|&x| op.ord((x as f64).partial_cmp(&scalar).unwrap()))
+            .collect()),
+        Column::Float64(v) => Ok(v
+            .iter()
+            .map(|&x| {
+                op.ord(x.partial_cmp(&scalar).unwrap_or(std::cmp::Ordering::Greater))
+            })
+            .collect()),
+        other => Err(Error::DataFrame(format!(
+            "compare_scalar on {}",
+            other.dtype()
+        ))),
+    }
+}
+
+/// Cast a column to another numeric type.
+pub fn cast(col: &Column, to: DataType) -> Result<Column> {
+    match (col, to) {
+        (c, t) if c.dtype() == t => Ok(c.clone()),
+        (Column::Int64(v), DataType::Float64) => {
+            Ok(Column::Float64(v.iter().map(|&x| x as f64).collect()))
+        }
+        (Column::Float64(v), DataType::Int64) => {
+            Ok(Column::Int64(v.iter().map(|&x| x as i64).collect()))
+        }
+        (Column::Bool(v), DataType::Int64) => {
+            Ok(Column::Int64(v.iter().map(|&x| x as i64).collect()))
+        }
+        (c, t) => Err(Error::DataFrame(format!(
+            "cast {} -> {t} is not supported",
+            c.dtype()
+        ))),
+    }
+}
+
+/// Append a derived column to a table under `name`.
+pub fn with_column(t: &Table, name: &str, col: Column) -> Result<Table> {
+    if col.len() != t.num_rows() {
+        return Err(Error::DataFrame(format!(
+            "with_column length {} != {}",
+            col.len(),
+            t.num_rows()
+        )));
+    }
+    let mut fields: Vec<_> = t.schema().fields().to_vec();
+    fields.push(crate::df::Field::new(name, col.dtype()));
+    let mut cols: Vec<Column> = t.columns().to_vec();
+    cols.push(col);
+    Table::new(Schema::new(fields), cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::df::{DataType, Schema};
+
+    fn table() -> Table {
+        Table::new(
+            Schema::of(&[("k", DataType::Int64), ("v", DataType::Float64)]),
+            vec![
+                Column::Int64(vec![1, 2, 3, 4]),
+                Column::Float64(vec![0.5, 1.5, 2.5, 3.5]),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Column::Int64(vec![10, 20]);
+        let b = Column::Int64(vec![3, 4]);
+        assert_eq!(
+            binary_op(&a, &b, BinOp::Add).unwrap(),
+            Column::Int64(vec![13, 24])
+        );
+        assert_eq!(
+            binary_op(&a, &b, BinOp::Div).unwrap(),
+            Column::Int64(vec![3, 5])
+        );
+        let z = Column::Int64(vec![0, 0]);
+        assert_eq!(
+            binary_op(&a, &z, BinOp::Div).unwrap(),
+            Column::Int64(vec![0, 0]) // div-by-zero -> 0 (null-free model)
+        );
+        assert!(binary_op(&a, &Column::Float64(vec![1.0, 2.0]), BinOp::Add).is_err());
+    }
+
+    #[test]
+    fn scalar_and_compare() {
+        let t = table();
+        let doubled = scalar_op_i64(t.column(0), 2, BinOp::Mul).unwrap();
+        assert_eq!(doubled, Column::Int64(vec![2, 4, 6, 8]));
+        let mask = compare_scalar(t.column(1), 2.0, CmpOp::Gt).unwrap();
+        assert_eq!(mask, vec![false, false, true, true]);
+        let filtered = t.filter(&mask).unwrap();
+        assert_eq!(filtered.num_rows(), 2);
+    }
+
+    #[test]
+    fn casts() {
+        let c = cast(&Column::Int64(vec![1, 2]), DataType::Float64).unwrap();
+        assert_eq!(c, Column::Float64(vec![1.0, 2.0]));
+        let back = cast(&c, DataType::Int64).unwrap();
+        assert_eq!(back, Column::Int64(vec![1, 2]));
+        let b = cast(&Column::Bool(vec![true, false]), DataType::Int64).unwrap();
+        assert_eq!(b, Column::Int64(vec![1, 0]));
+        assert!(cast(&Column::Utf8(vec!["x".into()]), DataType::Int64).is_err());
+    }
+
+    #[test]
+    fn derived_column() {
+        let t = table();
+        let sum = binary_op(
+            &cast(t.column(0), DataType::Float64).unwrap(),
+            t.column(1),
+            BinOp::Add,
+        )
+        .unwrap();
+        let t2 = with_column(&t, "k_plus_v", sum).unwrap();
+        assert_eq!(t2.num_columns(), 3);
+        assert_eq!(t2.schema().field(2).name, "k_plus_v");
+        assert_eq!(
+            t2.column(2).as_f64().unwrap(),
+            &[1.5, 3.5, 5.5, 7.5]
+        );
+        assert!(with_column(&t, "bad", Column::Int64(vec![1])).is_err());
+    }
+}

@@ -1,0 +1,155 @@
+//! Group-by aggregation on an int64 key column.
+
+use std::collections::HashMap;
+
+use crate::df::{Column, DataType, Schema, Table};
+use crate::error::{Error, Result};
+
+/// Aggregations over a float64 value column.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggFn {
+    Sum,
+    Count,
+    Min,
+    Max,
+    Mean,
+}
+
+impl AggFn {
+    fn name(&self) -> &'static str {
+        match self {
+            AggFn::Sum => "sum",
+            AggFn::Count => "count",
+            AggFn::Min => "min",
+            AggFn::Max => "max",
+            AggFn::Mean => "mean",
+        }
+    }
+}
+
+/// `SELECT key, agg(val) GROUP BY key` — output sorted by key for
+/// determinism.
+pub fn groupby_agg(
+    t: &Table,
+    key_col: usize,
+    val_col: usize,
+    agg: AggFn,
+) -> Result<Table> {
+    let keys = t.column(key_col).as_i64()?;
+    let vals = t.column(val_col).as_f64()?;
+    if keys.len() != vals.len() {
+        return Err(Error::DataFrame("ragged groupby input".into()));
+    }
+
+    #[derive(Default, Clone, Copy)]
+    struct Acc {
+        sum: f64,
+        count: u64,
+        min: f64,
+        max: f64,
+    }
+    let mut groups: HashMap<i64, Acc, crate::util::hash::SplitMixBuild> =
+        HashMap::with_capacity_and_hasher(
+            keys.len().min(1 << 16),
+            crate::util::hash::SplitMixBuild,
+        );
+    for (&k, &v) in keys.iter().zip(vals) {
+        let acc = groups.entry(k).or_insert(Acc {
+            sum: 0.0,
+            count: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        });
+        acc.sum += v;
+        acc.count += 1;
+        acc.min = acc.min.min(v);
+        acc.max = acc.max.max(v);
+    }
+
+    let mut out_keys: Vec<i64> = groups.keys().copied().collect();
+    out_keys.sort_unstable();
+    let out_vals: Vec<f64> = out_keys
+        .iter()
+        .map(|k| {
+            let a = groups[k];
+            match agg {
+                AggFn::Sum => a.sum,
+                AggFn::Count => a.count as f64,
+                AggFn::Min => a.min,
+                AggFn::Max => a.max,
+                AggFn::Mean => a.sum / a.count as f64,
+            }
+        })
+        .collect();
+
+    let key_name = &t.schema().field(key_col).name;
+    let val_name = &t.schema().field(val_col).name;
+    Table::new(
+        Schema::of(&[
+            (key_name, DataType::Int64),
+            (&format!("{val_name}_{}", agg.name()), DataType::Float64),
+        ]),
+        vec![Column::Int64(out_keys), Column::Float64(out_vals)],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit;
+
+    fn t(keys: Vec<i64>, vals: Vec<f64>) -> Table {
+        Table::new(
+            Schema::of(&[("key", DataType::Int64), ("val", DataType::Float64)]),
+            vec![Column::Int64(keys), Column::Float64(vals)],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn all_aggs() {
+        let tbl = t(vec![1, 2, 1, 2, 1], vec![1.0, 10.0, 2.0, 20.0, 3.0]);
+        let sum = groupby_agg(&tbl, 0, 1, AggFn::Sum).unwrap();
+        assert_eq!(sum.column(0).as_i64().unwrap(), &[1, 2]);
+        assert_eq!(sum.column(1).as_f64().unwrap(), &[6.0, 30.0]);
+        let cnt = groupby_agg(&tbl, 0, 1, AggFn::Count).unwrap();
+        assert_eq!(cnt.column(1).as_f64().unwrap(), &[3.0, 2.0]);
+        let min = groupby_agg(&tbl, 0, 1, AggFn::Min).unwrap();
+        assert_eq!(min.column(1).as_f64().unwrap(), &[1.0, 10.0]);
+        let max = groupby_agg(&tbl, 0, 1, AggFn::Max).unwrap();
+        assert_eq!(max.column(1).as_f64().unwrap(), &[3.0, 20.0]);
+        let mean = groupby_agg(&tbl, 0, 1, AggFn::Mean).unwrap();
+        assert_eq!(mean.column(1).as_f64().unwrap(), &[2.0, 15.0]);
+    }
+
+    #[test]
+    fn schema_names() {
+        let tbl = t(vec![1], vec![1.0]);
+        let g = groupby_agg(&tbl, 0, 1, AggFn::Sum).unwrap();
+        assert_eq!(g.schema().field(1).name, "val_sum");
+    }
+
+    #[test]
+    fn empty_input() {
+        let tbl = t(vec![], vec![]);
+        let g = groupby_agg(&tbl, 0, 1, AggFn::Sum).unwrap();
+        assert_eq!(g.num_rows(), 0);
+    }
+
+    #[test]
+    fn prop_sum_preserved() {
+        testkit::check("groupby sum == total sum", 32, |rng| {
+            let n = rng.gen_range(100) as usize;
+            let keys: Vec<i64> = (0..n).map(|_| rng.gen_i64(0, 10)).collect();
+            let vals: Vec<f64> = (0..n).map(|_| rng.gen_f64()).collect();
+            let total: f64 = vals.iter().sum();
+            let tbl = t(keys, vals);
+            if n == 0 {
+                return;
+            }
+            let g = groupby_agg(&tbl, 0, 1, AggFn::Sum).unwrap();
+            let gsum: f64 = g.column(1).as_f64().unwrap().iter().sum();
+            assert!((gsum - total).abs() < 1e-9);
+        });
+    }
+}

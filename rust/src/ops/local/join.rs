@@ -1,0 +1,268 @@
+//! Local joins on int64 keys: hash join (build/probe), sort-merge join, and
+//! a nested-loop oracle for tests.
+
+use std::collections::HashMap;
+
+use crate::df::{Column, Table};
+use crate::error::{Error, Result};
+use crate::util::hash::SplitMixBuild;
+
+use super::sort::{sort_table, SortKey};
+
+/// Join variants supported by the local operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JoinType {
+    Inner,
+    /// Left outer — unmatched left rows keep defaults on the right side
+    /// (0 / 0.0 / "" / false), matching Cylon's null-free synthetic eval.
+    Left,
+}
+
+fn key_col(t: &Table, col: usize) -> Result<&[i64]> {
+    if col >= t.num_columns() {
+        return Err(Error::DataFrame(format!(
+            "join key column {col} out of range"
+        )));
+    }
+    t.column(col).as_i64()
+}
+
+fn assemble(
+    left: &Table,
+    right: &Table,
+    right_key: usize,
+    pairs_l: Vec<usize>,
+    pairs_r: Vec<Option<usize>>,
+) -> Result<Table> {
+    let schema = left.schema().join(drop_field(right, right_key).0.schema());
+    let mut cols: Vec<Column> = Vec::with_capacity(schema.len());
+    for c in left.columns() {
+        cols.push(c.take(&pairs_l));
+    }
+    let (rt, _) = drop_field(right, right_key);
+    for c in rt_columns(&rt) {
+        cols.push(take_optional(c, &pairs_r));
+    }
+    Table::new(schema, cols)
+}
+
+/// Right table minus its key column (the key survives via the left side).
+fn drop_field(t: &Table, key: usize) -> (Table, usize) {
+    let names: Vec<&str> = t
+        .schema()
+        .fields()
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i != key)
+        .map(|(_, f)| f.name.as_str())
+        .collect();
+    (t.project(&names).expect("projection of existing fields"), key)
+}
+
+fn rt_columns(t: &Table) -> &[Column] {
+    t.columns()
+}
+
+fn take_optional(c: &Column, idx: &[Option<usize>]) -> Column {
+    match c {
+        Column::Int64(v) => {
+            Column::Int64(idx.iter().map(|i| i.map(|i| v[i]).unwrap_or(0)).collect())
+        }
+        Column::Float64(v) => Column::Float64(
+            idx.iter().map(|i| i.map(|i| v[i]).unwrap_or(0.0)).collect(),
+        ),
+        Column::Utf8(v) => Column::Utf8(
+            idx.iter()
+                .map(|i| i.map(|i| v[i].clone()).unwrap_or_default())
+                .collect(),
+        ),
+        Column::Bool(v) => Column::Bool(
+            idx.iter().map(|i| i.map(|i| v[i]).unwrap_or(false)).collect(),
+        ),
+    }
+}
+
+/// Hash join: build on the right table, probe with the left.
+pub fn hash_join(
+    left: &Table,
+    right: &Table,
+    left_key: usize,
+    right_key: usize,
+    how: JoinType,
+) -> Result<Table> {
+    let lk = key_col(left, left_key)?;
+    let rk = key_col(right, right_key)?;
+
+    // SplitMix-hashed build side (perf pass, EXPERIMENTS.md §Perf);
+    // u32 row ids halve the bucket payload.
+    let mut build: HashMap<i64, Vec<u32>, SplitMixBuild> =
+        HashMap::with_capacity_and_hasher(rk.len(), SplitMixBuild);
+    for (i, &k) in rk.iter().enumerate() {
+        build.entry(k).or_default().push(i as u32);
+    }
+
+    let mut pairs_l = Vec::new();
+    let mut pairs_r = Vec::new();
+    for (i, &k) in lk.iter().enumerate() {
+        match build.get(&k) {
+            Some(matches) => {
+                for &j in matches {
+                    pairs_l.push(i);
+                    pairs_r.push(Some(j as usize));
+                }
+            }
+            None => {
+                if how == JoinType::Left {
+                    pairs_l.push(i);
+                    pairs_r.push(None);
+                }
+            }
+        }
+    }
+    assemble(left, right, right_key, pairs_l, pairs_r)
+}
+
+/// Sort-merge join (inner only): sorts both sides then merges match runs.
+pub fn sort_merge_join(
+    left: &Table,
+    right: &Table,
+    left_key: usize,
+    right_key: usize,
+) -> Result<Table> {
+    let ls = sort_table(left, SortKey::asc(left_key))?;
+    let rs = sort_table(right, SortKey::asc(right_key))?;
+    let lk = key_col(&ls, left_key)?;
+    let rk = key_col(&rs, right_key)?;
+
+    let mut pairs_l = Vec::new();
+    let mut pairs_r = Vec::new();
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < lk.len() && j < rk.len() {
+        match lk[i].cmp(&rk[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                let key = lk[i];
+                let i_end = i + lk[i..].iter().take_while(|&&k| k == key).count();
+                let j_end = j + rk[j..].iter().take_while(|&&k| k == key).count();
+                for ii in i..i_end {
+                    for jj in j..j_end {
+                        pairs_l.push(ii);
+                        pairs_r.push(Some(jj));
+                    }
+                }
+                i = i_end;
+                j = j_end;
+            }
+        }
+    }
+    assemble(&ls, &rs, right_key, pairs_l, pairs_r)
+}
+
+/// O(n·m) oracle used by the property tests.
+pub fn nested_loop_join(
+    left: &Table,
+    right: &Table,
+    left_key: usize,
+    right_key: usize,
+) -> Result<Table> {
+    let lk = key_col(left, left_key)?;
+    let rk = key_col(right, right_key)?;
+    let mut pairs_l = Vec::new();
+    let mut pairs_r = Vec::new();
+    for (i, &a) in lk.iter().enumerate() {
+        for (j, &b) in rk.iter().enumerate() {
+            if a == b {
+                pairs_l.push(i);
+                pairs_r.push(Some(j));
+            }
+        }
+    }
+    assemble(left, right, right_key, pairs_l, pairs_r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::df::{DataType, GenSpec, Schema, gen_two_tables};
+    use crate::util::testkit;
+
+    fn t(keys: Vec<i64>, vals: Vec<i64>) -> Table {
+        Table::new(
+            Schema::of(&[("key", DataType::Int64), ("v", DataType::Int64)]),
+            vec![Column::Int64(keys), Column::Int64(vals)],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn inner_hash_join_basic() {
+        let l = t(vec![1, 2, 3], vec![10, 20, 30]);
+        let r = t(vec![2, 3, 3, 4], vec![200, 300, 301, 400]);
+        let j = hash_join(&l, &r, 0, 0, JoinType::Inner).unwrap();
+        assert_eq!(j.num_rows(), 3); // 2x1 + 3x2
+        let names: Vec<&str> = j
+            .schema()
+            .fields()
+            .iter()
+            .map(|f| f.name.as_str())
+            .collect();
+        assert_eq!(names, vec!["key", "v", "v_right"]);
+    }
+
+    #[test]
+    fn left_join_keeps_unmatched() {
+        let l = t(vec![1, 5], vec![10, 50]);
+        let r = t(vec![1], vec![100]);
+        let j = hash_join(&l, &r, 0, 0, JoinType::Left).unwrap();
+        assert_eq!(j.num_rows(), 2);
+        // unmatched right value defaults to 0
+        assert_eq!(j.column(2).as_i64().unwrap(), &[100, 0]);
+    }
+
+    #[test]
+    fn sort_merge_matches_hash() {
+        let l = t(vec![5, 1, 5, 2], vec![1, 2, 3, 4]);
+        let r = t(vec![5, 5, 2, 9], vec![7, 8, 9, 10]);
+        let a = hash_join(&l, &r, 0, 0, JoinType::Inner).unwrap();
+        let b = sort_merge_join(&l, &r, 0, 0).unwrap();
+        assert_eq!(a.num_rows(), b.num_rows());
+        assert_eq!(a.multiset_fingerprint(), b.multiset_fingerprint());
+    }
+
+    #[test]
+    fn empty_sides() {
+        let l = t(vec![], vec![]);
+        let r = t(vec![1], vec![2]);
+        assert_eq!(hash_join(&l, &r, 0, 0, JoinType::Inner).unwrap().num_rows(), 0);
+        assert_eq!(hash_join(&r, &l, 0, 0, JoinType::Inner).unwrap().num_rows(), 0);
+        assert_eq!(hash_join(&r, &l, 0, 0, JoinType::Left).unwrap().num_rows(), 1);
+    }
+
+    #[test]
+    fn prop_joins_agree_with_oracle() {
+        testkit::check("hash/smj == nested-loop", 24, |rng| {
+            let n = 1 + rng.gen_range(60) as usize;
+            let keys_l: Vec<i64> = (0..n).map(|_| rng.gen_i64(0, 20)).collect();
+            let keys_r: Vec<i64> = (0..n).map(|_| rng.gen_i64(0, 20)).collect();
+            let vals: Vec<i64> = (0..n as i64).collect();
+            let l = t(keys_l, vals.clone());
+            let r = t(keys_r, vals);
+            let oracle = nested_loop_join(&l, &r, 0, 0).unwrap();
+            let hj = hash_join(&l, &r, 0, 0, JoinType::Inner).unwrap();
+            let smj = sort_merge_join(&l, &r, 0, 0).unwrap();
+            assert_eq!(hj.num_rows(), oracle.num_rows());
+            assert_eq!(smj.num_rows(), oracle.num_rows());
+            assert_eq!(hj.multiset_fingerprint(), oracle.multiset_fingerprint());
+            assert_eq!(smj.multiset_fingerprint(), oracle.multiset_fingerprint());
+        });
+    }
+
+    #[test]
+    fn generated_tables_join() {
+        let spec = GenSpec::uniform(300, 50, 11);
+        let (l, r) = gen_two_tables(&spec, 0);
+        let j = hash_join(&l, &r, 0, 0, JoinType::Inner).unwrap();
+        assert!(j.num_rows() > 0, "overlapping key space must produce matches");
+    }
+}

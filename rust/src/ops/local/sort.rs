@@ -1,0 +1,285 @@
+//! Local sort and k-way merge.
+
+use crate::df::{Column, Table};
+use crate::error::{Error, Result};
+
+/// A sort key: column index + direction.
+#[derive(Clone, Copy, Debug)]
+pub struct SortKey {
+    pub col: usize,
+    pub ascending: bool,
+}
+
+impl SortKey {
+    pub fn asc(col: usize) -> SortKey {
+        SortKey { col, ascending: true }
+    }
+    pub fn desc(col: usize) -> SortKey {
+        SortKey { col, ascending: false }
+    }
+}
+
+fn cmp_values(c: &Column, a: usize, b: usize) -> std::cmp::Ordering {
+    use std::cmp::Ordering;
+    match c {
+        Column::Int64(v) => v[a].cmp(&v[b]),
+        Column::Float64(v) => v[a].partial_cmp(&v[b]).unwrap_or(Ordering::Equal),
+        Column::Utf8(v) => v[a].cmp(&v[b]),
+        Column::Bool(v) => v[a].cmp(&v[b]),
+    }
+}
+
+/// Stable sort by a single int64/utf8/float column.
+pub fn sort_table(t: &Table, key: SortKey) -> Result<Table> {
+    sort_table_multi(t, &[key])
+}
+
+/// Stable sort by multiple keys (lexicographic).
+pub fn sort_table_multi(t: &Table, keys: &[SortKey]) -> Result<Table> {
+    if keys.is_empty() {
+        return Err(Error::DataFrame("sort with zero keys".into()));
+    }
+    for k in keys {
+        if k.col >= t.num_columns() {
+            return Err(Error::DataFrame(format!(
+                "sort key column {} out of range ({} columns)",
+                k.col,
+                t.num_columns()
+            )));
+        }
+    }
+    // Fast path (perf pass, EXPERIMENTS.md §Perf): single ascending int64
+    // key — sort (key, row) pairs contiguously instead of indirecting into
+    // the column per comparison. Pairing with the row index keeps it
+    // stable under `sort_unstable` (all pairs distinct).
+    if let [k] = keys {
+        if k.ascending {
+            if let Column::Int64(v) = t.column(k.col) {
+                let mut pairs: Vec<(i64, u32)> = v
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &key)| (key, i as u32))
+                    .collect();
+                pairs.sort_unstable();
+                let idx: Vec<usize> =
+                    pairs.into_iter().map(|(_, i)| i as usize).collect();
+                return Ok(t.take(&idx));
+            }
+        }
+    }
+    let mut idx: Vec<usize> = (0..t.num_rows()).collect();
+    idx.sort_by(|&a, &b| {
+        for k in keys {
+            let ord = cmp_values(t.column(k.col), a, b);
+            let ord = if k.ascending { ord } else { ord.reverse() };
+            if ord != std::cmp::Ordering::Equal {
+                return ord;
+            }
+        }
+        std::cmp::Ordering::Equal
+    });
+    Ok(t.take(&idx))
+}
+
+/// Is the table sorted ascending on the given int64 column?
+pub fn is_sorted_by_key(t: &Table, col: usize) -> Result<bool> {
+    let keys = t.column(col).as_i64()?;
+    Ok(keys.windows(2).all(|w| w[0] <= w[1]))
+}
+
+/// K-way merge of tables each already sorted ascending on int64 `col`
+/// (the merge phase of distributed sample-sort).
+pub fn merge_sorted(parts: &[Table], col: usize) -> Result<Table> {
+    if parts.is_empty() {
+        return Err(Error::DataFrame("merge of zero tables".into()));
+    }
+    // Binary-heap k-way merge over (key, part, row) cursors.
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    for p in parts {
+        if p.schema() != parts[0].schema() {
+            return Err(Error::DataFrame(format!(
+                "merge schema mismatch: {} vs {}",
+                p.schema(),
+                parts[0].schema()
+            )));
+        }
+    }
+    let keys: Vec<&[i64]> = parts
+        .iter()
+        .map(|p| p.column(col).as_i64())
+        .collect::<Result<_>>()?;
+    let total: usize = parts.iter().map(|p| p.num_rows()).sum();
+
+    let mut heap: BinaryHeap<Reverse<(i64, usize, usize)>> = BinaryHeap::new();
+    for (pi, k) in keys.iter().enumerate() {
+        if !k.is_empty() {
+            heap.push(Reverse((k[0], pi, 0)));
+        }
+    }
+    // Global interleave order as (part, row) cursors.
+    let mut order: Vec<(u32, u32)> = Vec::with_capacity(total);
+    while let Some(Reverse((_, pi, ri))) = heap.pop() {
+        order.push((pi as u32, ri as u32));
+        let next = ri + 1;
+        if next < keys[pi].len() {
+            heap.push(Reverse((keys[pi][next], pi, next)));
+        }
+    }
+
+    // Columnar gather straight from the order vector (perf pass,
+    // EXPERIMENTS.md §Perf: replaces a row-at-a-time slice+extend stitch
+    // that allocated one Column per row).
+    let ncols = parts[0].num_columns();
+    let mut out_cols: Vec<Column> = Vec::with_capacity(ncols);
+    for j in 0..ncols {
+        let col = match parts[0].column(j) {
+            Column::Int64(_) => {
+                let srcs: Vec<&[i64]> =
+                    parts.iter().map(|p| p.column(j).as_i64().unwrap()).collect();
+                let mut v = Vec::with_capacity(total);
+                for &(pi, ri) in &order {
+                    v.push(srcs[pi as usize][ri as usize]);
+                }
+                Column::Int64(v)
+            }
+            Column::Float64(_) => {
+                let srcs: Vec<&[f64]> =
+                    parts.iter().map(|p| p.column(j).as_f64().unwrap()).collect();
+                let mut v = Vec::with_capacity(total);
+                for &(pi, ri) in &order {
+                    v.push(srcs[pi as usize][ri as usize]);
+                }
+                Column::Float64(v)
+            }
+            Column::Utf8(_) => {
+                let srcs: Vec<&[String]> = parts
+                    .iter()
+                    .map(|p| p.column(j).as_utf8().unwrap())
+                    .collect();
+                let mut v = Vec::with_capacity(total);
+                for &(pi, ri) in &order {
+                    v.push(srcs[pi as usize][ri as usize].clone());
+                }
+                Column::Utf8(v)
+            }
+            Column::Bool(_) => {
+                let mut v = Vec::with_capacity(total);
+                for &(pi, ri) in &order {
+                    match parts[pi as usize].column(j) {
+                        Column::Bool(b) => v.push(b[ri as usize]),
+                        _ => unreachable!("schemas validated identical"),
+                    }
+                }
+                Column::Bool(v)
+            }
+        };
+        out_cols.push(col);
+    }
+    Table::new(parts[0].schema().clone(), out_cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::df::{DataType, Schema};
+    use crate::util::testkit;
+
+    fn table(keys: Vec<i64>, vals: Vec<f64>) -> Table {
+        Table::new(
+            Schema::of(&[("key", DataType::Int64), ("val", DataType::Float64)]),
+            vec![Column::Int64(keys), Column::Float64(vals)],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn sorts_ascending_and_descending() {
+        let t = table(vec![3, 1, 2], vec![0.3, 0.1, 0.2]);
+        let asc = sort_table(&t, SortKey::asc(0)).unwrap();
+        assert_eq!(asc.column(0).as_i64().unwrap(), &[1, 2, 3]);
+        assert_eq!(asc.column(1).as_f64().unwrap(), &[0.1, 0.2, 0.3]);
+        let desc = sort_table(&t, SortKey::desc(0)).unwrap();
+        assert_eq!(desc.column(0).as_i64().unwrap(), &[3, 2, 1]);
+    }
+
+    #[test]
+    fn multi_key_breaks_ties() {
+        let t = Table::new(
+            Schema::of(&[("a", DataType::Int64), ("b", DataType::Int64)]),
+            vec![
+                Column::Int64(vec![1, 1, 0]),
+                Column::Int64(vec![5, 3, 9]),
+            ],
+        )
+        .unwrap();
+        let s = sort_table_multi(&t, &[SortKey::asc(0), SortKey::desc(1)]).unwrap();
+        assert_eq!(s.column(0).as_i64().unwrap(), &[0, 1, 1]);
+        assert_eq!(s.column(1).as_i64().unwrap(), &[9, 5, 3]);
+    }
+
+    #[test]
+    fn stability() {
+        // Equal keys keep original relative order of the value column.
+        let t = table(vec![1, 1, 1], vec![0.1, 0.2, 0.3]);
+        let s = sort_table(&t, SortKey::asc(0)).unwrap();
+        assert_eq!(s.column(1).as_f64().unwrap(), &[0.1, 0.2, 0.3]);
+    }
+
+    #[test]
+    fn merge_matches_global_sort() {
+        let a = table(vec![1, 4, 9], vec![0.0; 3]);
+        let b = table(vec![2, 3, 10], vec![0.0; 3]);
+        let c = table(vec![], vec![]);
+        let m = merge_sorted(&[a, b, c], 0).unwrap();
+        assert_eq!(m.column(0).as_i64().unwrap(), &[1, 2, 3, 4, 9, 10]);
+        assert!(is_sorted_by_key(&m, 0).unwrap());
+    }
+
+    #[test]
+    fn errors_on_misuse() {
+        let t = table(vec![1], vec![0.0]);
+        assert!(sort_table_multi(&t, &[]).is_err());
+        assert!(sort_table(&t, SortKey::asc(9)).is_err());
+        assert!(merge_sorted(&[], 0).is_err());
+    }
+
+    #[test]
+    fn prop_sort_is_permutation_and_sorted() {
+        testkit::check("sort perm+sorted", 32, |rng| {
+            let n = rng.gen_range(200) as usize;
+            let keys: Vec<i64> = (0..n).map(|_| rng.gen_i64(-50, 50)).collect();
+            let vals: Vec<f64> = (0..n).map(|_| rng.gen_f64()).collect();
+            let t = table(keys, vals);
+            if n == 0 {
+                return;
+            }
+            let s = sort_table(&t, SortKey::asc(0)).unwrap();
+            assert!(is_sorted_by_key(&s, 0).unwrap());
+            assert_eq!(s.multiset_fingerprint(), t.multiset_fingerprint());
+        });
+    }
+
+    #[test]
+    fn prop_merge_equals_concat_sort() {
+        testkit::check("merge == sort(concat)", 24, |rng| {
+            let parts: Vec<Table> = (0..3)
+                .map(|_| {
+                    let n = rng.gen_range(40) as usize;
+                    let mut keys: Vec<i64> =
+                        (0..n).map(|_| rng.gen_i64(0, 30)).collect();
+                    keys.sort_unstable();
+                    table(keys, vec![0.0; n])
+                })
+                .collect();
+            let merged = merge_sorted(&parts, 0).unwrap();
+            let concat = Table::concat(&parts).unwrap();
+            let sorted = sort_table(&concat, SortKey::asc(0)).unwrap();
+            assert_eq!(
+                merged.column(0).as_i64().unwrap(),
+                sorted.column(0).as_i64().unwrap()
+            );
+        });
+    }
+}

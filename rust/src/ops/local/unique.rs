@@ -1,0 +1,86 @@
+//! Duplicate elimination (local) — with the distributed variant composed in
+//! `ops::dist` (shuffle co-locates equal keys, then local dedup is global).
+
+use std::collections::HashSet;
+
+use crate::df::Table;
+use crate::error::Result;
+
+/// Keep the first row for every distinct key in `key_col` (int64).
+pub fn unique_by_key(t: &Table, key_col: usize) -> Result<Table> {
+    let keys = t.column(key_col).as_i64()?;
+    let mut seen = HashSet::with_capacity_and_hasher(
+        keys.len(),
+        crate::util::hash::SplitMixBuild,
+    );
+    let mut idx = Vec::new();
+    for (i, &k) in keys.iter().enumerate() {
+        if seen.insert(k) {
+            idx.push(i);
+        }
+    }
+    Ok(t.take(&idx))
+}
+
+/// Keep fully-distinct rows (all columns participate in identity).
+pub fn unique_rows(t: &Table) -> Result<Table> {
+    let mut seen: HashSet<u64> = HashSet::with_capacity(t.num_rows());
+    let mut idx = Vec::new();
+    for r in 0..t.num_rows() {
+        let mut h = 0x9E37_79B9_7F4A_7C15u64;
+        for c in t.columns() {
+            h = crate::util::hash::splitmix64(h ^ c.value_hash(r));
+        }
+        if seen.insert(h) {
+            idx.push(r);
+        }
+    }
+    Ok(t.take(&idx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::df::{Column, DataType, Schema};
+    use crate::util::testkit;
+
+    fn t(keys: Vec<i64>, vals: Vec<i64>) -> Table {
+        Table::new(
+            Schema::of(&[("k", DataType::Int64), ("v", DataType::Int64)]),
+            vec![Column::Int64(keys), Column::Int64(vals)],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn by_key_keeps_first() {
+        let tbl = t(vec![1, 2, 1, 3, 2], vec![10, 20, 11, 30, 21]);
+        let u = unique_by_key(&tbl, 0).unwrap();
+        assert_eq!(u.column(0).as_i64().unwrap(), &[1, 2, 3]);
+        assert_eq!(u.column(1).as_i64().unwrap(), &[10, 20, 30]);
+    }
+
+    #[test]
+    fn full_rows() {
+        let tbl = t(vec![1, 1, 1], vec![10, 10, 11]);
+        let u = unique_rows(&tbl).unwrap();
+        assert_eq!(u.num_rows(), 2);
+    }
+
+    #[test]
+    fn prop_unique_idempotent() {
+        testkit::check("unique idempotent", 24, |rng| {
+            let n = rng.gen_range(80) as usize;
+            let keys: Vec<i64> = (0..n).map(|_| rng.gen_i64(0, 15)).collect();
+            let vals: Vec<i64> = (0..n).map(|_| rng.gen_i64(0, 3)).collect();
+            let tbl = t(keys, vals);
+            let once = unique_rows(&tbl).unwrap();
+            let twice = unique_rows(&once).unwrap();
+            assert_eq!(once, twice);
+            let by_key = unique_by_key(&tbl, 0).unwrap();
+            let k = by_key.column(0).as_i64().unwrap();
+            let set: std::collections::HashSet<_> = k.iter().collect();
+            assert_eq!(set.len(), k.len(), "keys must be distinct");
+        });
+    }
+}

@@ -1,0 +1,6 @@
+//! Cylon operator algebra (paper §3.2): *local operators* act on one rank's
+//! partition; *distributed operators* compose local operators with
+//! communicator collectives (shuffle/allgather/...).
+
+pub mod dist;
+pub mod local;

@@ -1,0 +1,210 @@
+//! Pilot and task descriptions — the `radical.pilot.PilotDescription` /
+//! `TaskDescription` analogues (paper §3.4: "each Cylon task is represented
+//! as a RadicalPilot.TaskDescription class with their resource
+//! requirements").
+
+use crate::cluster::MachineSpec;
+
+/// Key distribution of the generated workload (re-exported df type).
+pub use crate::df::KeyDist as DataDist;
+
+/// The Cylon operation a task executes (paper §4 evaluates join and sort;
+/// groupby exercises the same shuffle substrate).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CylonOp {
+    /// Distributed hash join of two generated tables.
+    Join,
+    /// Distributed sample-sort of one generated table.
+    Sort,
+    /// Distributed groupby-sum (two-phase aggregation).
+    Groupby,
+}
+
+impl CylonOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CylonOp::Join => "join",
+            CylonOp::Sort => "sort",
+            CylonOp::Groupby => "groupby",
+        }
+    }
+}
+
+/// Resource placeholder request (paper Fig 3-2).
+#[derive(Clone, Debug)]
+pub struct PilotDescription {
+    pub machine: MachineSpec,
+    pub nodes: usize,
+    /// Whole-node allocation (LSF batch semantics) vs core-granular.
+    pub exclusive: bool,
+    /// Exact core count override (RP core-granular pilots); `None` means
+    /// `nodes * cores_per_node`.
+    pub cores_override: Option<usize>,
+    /// GPU ranks to provision *in addition to* the CPU cores (paper §4.4's
+    /// heterogeneous CPU/GPU rank groups; simulated processing elements).
+    pub gpu_ranks: usize,
+}
+
+impl PilotDescription {
+    pub fn new(machine: MachineSpec, nodes: usize) -> PilotDescription {
+        PilotDescription {
+            machine,
+            nodes,
+            exclusive: false,
+            cores_override: None,
+            gpu_ranks: 0,
+        }
+    }
+
+    /// Core-granular pilot of exactly `cores` ranks.
+    pub fn with_cores(machine: MachineSpec, cores: usize) -> PilotDescription {
+        let nodes = machine.nodes_for(cores);
+        PilotDescription {
+            machine,
+            nodes,
+            exclusive: false,
+            cores_override: Some(cores),
+            gpu_ranks: 0,
+        }
+    }
+
+    /// Add a GPU rank pool to the pilot.
+    pub fn with_gpus(mut self, gpu_ranks: usize) -> PilotDescription {
+        self.gpu_ranks = gpu_ranks;
+        self
+    }
+
+    /// CPU ranks.
+    pub fn cores(&self) -> usize {
+        self.cores_override
+            .unwrap_or(self.nodes * self.machine.cores_per_node)
+    }
+
+    /// All ranks: CPU pool then GPU pool (world rank order).
+    pub fn total_ranks(&self) -> usize {
+        self.cores() + self.gpu_ranks
+    }
+}
+
+/// Processing-element class a task's ranks must run on (paper §4.4:
+/// "distinct groups of ranks equipped with specialized memory allocated
+/// either on CPUs or GPUs").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RankClass {
+    #[default]
+    Cpu,
+    Gpu,
+}
+
+/// A Cylon task: the operation + its resource requirements + workload spec.
+#[derive(Clone, Debug)]
+pub struct TaskDescription {
+    pub name: String,
+    /// Ranks (cores) the task's private communicator must span.
+    pub ranks: usize,
+    /// Rows generated per rank (weak scaling) — for strong scaling, set
+    /// `rows_per_rank = total_rows / ranks` via [`Self::strong`].
+    pub rows_per_rank: usize,
+    /// Distinct-key space for generated keys.
+    pub key_space: i64,
+    pub dist: DataDist,
+    pub op: CylonOp,
+    pub seed: u64,
+    /// Scheduling priority: higher dispatches first (§4.4 multi-tenancy).
+    pub priority: i32,
+    /// Which rank pool the private communicator is carved from.
+    pub rank_class: RankClass,
+}
+
+impl TaskDescription {
+    pub fn new(name: &str, op: CylonOp, ranks: usize, rows_per_rank: usize) -> Self {
+        TaskDescription {
+            name: name.to_string(),
+            ranks,
+            rows_per_rank,
+            key_space: (rows_per_rank as i64 * ranks as i64).max(16),
+            dist: DataDist::Uniform,
+            op,
+            seed: 0xC71,
+            priority: 0,
+            rank_class: RankClass::Cpu,
+        }
+    }
+
+    /// Scheduling priority (higher first).
+    pub fn with_priority(mut self, priority: i32) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Target rank pool (CPU default; GPU pools per §4.4).
+    pub fn on(mut self, class: RankClass) -> Self {
+        self.rank_class = class;
+        self
+    }
+
+    /// Weak-scaling join task: `rows_per_rank` on each of `ranks` ranks.
+    pub fn join(name: &str, ranks: usize, rows_per_rank: usize, dist: DataDist) -> Self {
+        let mut td = Self::new(name, CylonOp::Join, ranks, rows_per_rank);
+        td.dist = dist;
+        td
+    }
+
+    /// Weak-scaling sort task.
+    pub fn sort(name: &str, ranks: usize, rows_per_rank: usize, dist: DataDist) -> Self {
+        let mut td = Self::new(name, CylonOp::Sort, ranks, rows_per_rank);
+        td.dist = dist;
+        td
+    }
+
+    /// Strong scaling: `total_rows` divided across `ranks`.
+    pub fn strong(name: &str, op: CylonOp, ranks: usize, total_rows: usize) -> Self {
+        Self::new(name, op, ranks, total_rows.div_ceil(ranks.max(1)))
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_key_space(mut self, key_space: i64) -> Self {
+        self.key_space = key_space;
+        self
+    }
+
+    /// Total rows across all ranks.
+    pub fn total_rows(&self) -> usize {
+        self.ranks * self.rows_per_rank
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pilot_cores() {
+        let pd = PilotDescription::new(MachineSpec::rivanna(), 2);
+        assert_eq!(pd.cores(), 74);
+    }
+
+    #[test]
+    fn strong_scaling_divides() {
+        let td = TaskDescription::strong("s", CylonOp::Sort, 8, 1000);
+        assert_eq!(td.rows_per_rank, 125);
+        assert_eq!(td.total_rows(), 1000);
+        let uneven = TaskDescription::strong("s", CylonOp::Sort, 3, 100);
+        assert_eq!(uneven.rows_per_rank, 34); // ceil
+    }
+
+    #[test]
+    fn builders() {
+        let td = TaskDescription::join("j", 4, 100, DataDist::Uniform)
+            .with_seed(9)
+            .with_key_space(50);
+        assert_eq!(td.op, CylonOp::Join);
+        assert_eq!(td.seed, 9);
+        assert_eq!(td.key_space, 50);
+        assert_eq!(td.op.name(), "join");
+    }
+}

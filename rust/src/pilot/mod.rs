@@ -1,0 +1,14 @@
+//! RADICAL-Pilot analogue (paper §3.1, §3.4, Fig 3): `Session`,
+//! `PilotManager` (resource placeholders), `TaskManager` (task lifecycle),
+//! and the task/pilot state machines. The RAPTOR master/worker subsystem
+//! the agent bootstraps lives in [`crate::raptor`].
+
+mod description;
+mod session;
+mod task;
+
+pub use description::{
+    CylonOp, DataDist, PilotDescription, RankClass, TaskDescription,
+};
+pub use session::{Pilot, PilotManager, PilotState, Session, TaskManager};
+pub use task::{TaskHandle, TaskResult, TaskState};

@@ -1,0 +1,334 @@
+//! Session, PilotManager, Pilot, TaskManager — the RADICAL-Pilot front end
+//! (paper Fig 3 steps 1–3 and Fig 4's client/pilot-manager plane).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::{rm_for, Allocation, MachineSpec, ResourceManager};
+use crate::comm::CommWorld;
+use crate::error::{Error, Result};
+use crate::metrics::Timer;
+use crate::ops::dist::KernelBackend;
+use crate::raptor::{Agent, MasterMsg, SchedPolicy};
+
+use super::description::{PilotDescription, TaskDescription};
+use super::task::{TaskHandle, TaskState};
+
+/// Pilot lifecycle states (paper §3.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PilotState {
+    New,
+    PmgrLaunching,
+    Active,
+    Done,
+    Failed,
+}
+
+/// An active resource placeholder: allocation + bootstrapped agent.
+pub struct Pilot {
+    pub id: u64,
+    pub desc: PilotDescription,
+    pub allocation: Allocation,
+    state: Mutex<PilotState>,
+    agent: Mutex<Agent>,
+    rm: Arc<dyn ResourceManager>,
+}
+
+impl Pilot {
+    pub fn state(&self) -> PilotState {
+        *self.state.lock().unwrap()
+    }
+
+    pub fn cores(&self) -> usize {
+        self.desc.cores()
+    }
+
+    /// Virtual seconds the resource manager took to start this pilot.
+    pub fn startup_latency(&self) -> f64 {
+        self.allocation.startup_latency
+    }
+
+    /// Resource-usage tracker (paper §4.4): busy rank-seconds accumulated
+    /// by the RAPTOR master and completed-task count.
+    pub fn utilization(&self) -> std::sync::Arc<crate::raptor::Utilization> {
+        self.agent.lock().unwrap().utilization()
+    }
+
+    fn master_tx(&self) -> std::sync::mpsc::Sender<MasterMsg> {
+        self.agent.lock().unwrap().master_tx()
+    }
+
+    /// Tear down the agent and release the allocation.
+    pub fn shutdown(&self) {
+        let mut st = self.state.lock().unwrap();
+        if *st == PilotState::Done {
+            return;
+        }
+        self.agent.lock().unwrap().shutdown();
+        self.rm.release(&self.allocation);
+        *st = PilotState::Done;
+    }
+}
+
+impl Drop for Pilot {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Creates pilots on resource managers (paper Fig 3-2).
+pub struct PilotManager {
+    session: Arc<SessionInner>,
+}
+
+impl PilotManager {
+    /// Submit a pilot with the native kernel backend and FIFO scheduling.
+    pub fn submit(&self, desc: PilotDescription) -> Result<Arc<Pilot>> {
+        self.submit_with(desc, KernelBackend::Native, SchedPolicy::Fifo)
+    }
+
+    /// Submit with explicit data-plane backend and master policy.
+    pub fn submit_with(
+        &self,
+        desc: PilotDescription,
+        backend: KernelBackend,
+        policy: SchedPolicy,
+    ) -> Result<Arc<Pilot>> {
+        let cores = desc.cores();
+        if cores == 0 {
+            return Err(Error::Pilot("pilot with zero cores".into()));
+        }
+        let rm = self.session.rm(&desc.machine);
+        let allocation = rm.allocate(cores, desc.exclusive)?;
+        // Bootstrap the world + agent (Fig 3-4/5). World ranks: CPU pool
+        // first, then the (simulated) GPU pool.
+        let total = desc.total_ranks();
+        let world = CommWorld::new(total, desc.machine.netmodel());
+        let mut classes = vec![crate::pilot::RankClass::Cpu; cores];
+        classes.extend(vec![crate::pilot::RankClass::Gpu; desc.gpu_ranks]);
+        let agent = Agent::bootstrap_with_classes(world, backend, policy, classes);
+        let pilot = Arc::new(Pilot {
+            id: self.session.next_id(),
+            desc,
+            allocation,
+            state: Mutex::new(PilotState::Active),
+            agent: Mutex::new(agent),
+            rm,
+        });
+        self.session
+            .pilots
+            .lock()
+            .unwrap()
+            .push(Arc::downgrade(&pilot));
+        Ok(pilot)
+    }
+}
+
+/// Submits Cylon tasks to a pilot's RAPTOR master (paper Fig 3-3).
+pub struct TaskManager {
+    pilot: Arc<Pilot>,
+    session: Arc<SessionInner>,
+}
+
+impl TaskManager {
+    /// Submit one task; measures the paper's "(i) describing the task
+    /// object" overhead component.
+    pub fn submit(&self, td: TaskDescription) -> Result<TaskHandle> {
+        if td.ranks == 0 {
+            return Err(Error::Pilot(format!("task '{}' wants zero ranks", td.name)));
+        }
+        let pool = match td.rank_class {
+            super::RankClass::Cpu => self.pilot.cores(),
+            super::RankClass::Gpu => self.pilot.desc.gpu_ranks,
+        };
+        if td.ranks > pool {
+            return Err(Error::Pilot(format!(
+                "task '{}' wants {} {:?} ranks but pilot {} has {pool}",
+                td.name, td.ranks, td.rank_class, self.pilot.id,
+            )));
+        }
+        if self.pilot.state() != PilotState::Active {
+            return Err(Error::Pilot(format!(
+                "pilot {} is not active",
+                self.pilot.id
+            )));
+        }
+        let timer = Timer::start();
+        let handle = TaskHandle::new(self.session.next_id(), &td.name);
+        handle.advance(TaskState::Submitted);
+        let description_s = timer.elapsed_s();
+        self.pilot
+            .master_tx()
+            .send(MasterMsg::Submit { handle: handle.clone(), td, description_s })
+            .map_err(|_| Error::Pilot("pilot agent is down".into()))?;
+        Ok(handle)
+    }
+
+    /// Submit a batch and return the handles in order.
+    pub fn submit_all(&self, tds: Vec<TaskDescription>) -> Result<Vec<TaskHandle>> {
+        tds.into_iter().map(|td| self.submit(td)).collect()
+    }
+
+    /// Wait for all handles (order preserved).
+    pub fn wait_all(&self, handles: &[TaskHandle]) -> Result<Vec<super::TaskResult>> {
+        handles.iter().map(|h| h.wait()).collect()
+    }
+}
+
+struct SessionInner {
+    #[allow(dead_code)]
+    name: String,
+    rms: Mutex<HashMap<String, Arc<dyn ResourceManager>>>,
+    pilots: Mutex<Vec<std::sync::Weak<Pilot>>>,
+    ids: AtomicU64,
+}
+
+impl SessionInner {
+    fn rm(&self, machine: &MachineSpec) -> Arc<dyn ResourceManager> {
+        let mut rms = self.rms.lock().unwrap();
+        rms.entry(machine.name.clone())
+            .or_insert_with(|| Arc::from(rm_for(machine.clone())))
+            .clone()
+    }
+
+    fn next_id(&self) -> u64 {
+        self.ids.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+/// A RADICAL session: owns resource-manager views and id allocation.
+pub struct Session {
+    inner: Arc<SessionInner>,
+}
+
+impl Session {
+    pub fn new(name: &str) -> Session {
+        Session {
+            inner: Arc::new(SessionInner {
+                name: name.to_string(),
+                rms: Mutex::new(HashMap::new()),
+                pilots: Mutex::new(Vec::new()),
+                ids: AtomicU64::new(1),
+            }),
+        }
+    }
+
+    pub fn pilot_manager(&self) -> PilotManager {
+        PilotManager { session: self.inner.clone() }
+    }
+
+    pub fn task_manager(&self, pilot: &Arc<Pilot>) -> TaskManager {
+        TaskManager { pilot: pilot.clone(), session: self.inner.clone() }
+    }
+
+    /// Free cores visible on a machine's RM (test/diagnostic hook).
+    pub fn free_cores(&self, machine: &MachineSpec) -> usize {
+        self.inner.rm(machine).free_cores()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pilot::DataDist;
+
+    #[test]
+    fn full_stack_join_roundtrip() {
+        let session = Session::new("t");
+        let pd = PilotDescription::new(MachineSpec::local(8), 1);
+        let pilot = session.pilot_manager().submit(pd).unwrap();
+        assert_eq!(pilot.state(), PilotState::Active);
+        let tm = session.task_manager(&pilot);
+        let h = tm
+            .submit(TaskDescription::join("j", 8, 100, DataDist::Uniform))
+            .unwrap();
+        let r = h.wait().unwrap();
+        assert!(r.is_done());
+        assert!(r.output_rows > 0);
+        pilot.shutdown();
+    }
+
+    #[test]
+    fn pilot_releases_cores_on_shutdown() {
+        let session = Session::new("t");
+        let machine = MachineSpec::rivanna();
+        let pd = PilotDescription::new(machine.clone(), 2);
+        let pilot = session.pilot_manager().submit(pd).unwrap();
+        assert_eq!(session.free_cores(&machine), 518 - 74);
+        pilot.shutdown();
+        assert_eq!(session.free_cores(&machine), 518);
+    }
+
+    #[test]
+    fn oversized_task_rejected() {
+        let session = Session::new("t");
+        let pilot = session
+            .pilot_manager()
+            .submit(PilotDescription::new(MachineSpec::local(4), 1))
+            .unwrap();
+        let tm = session.task_manager(&pilot);
+        let err = tm
+            .submit(TaskDescription::sort("big", 5, 10, DataDist::Uniform))
+            .unwrap_err();
+        assert!(err.to_string().contains("wants 5 Cpu ranks"));
+        assert!(tm
+            .submit(TaskDescription::sort("zero", 0, 10, DataDist::Uniform))
+            .is_err());
+    }
+
+    #[test]
+    fn submit_after_shutdown_fails() {
+        let session = Session::new("t");
+        let pilot = session
+            .pilot_manager()
+            .submit(PilotDescription::new(MachineSpec::local(2), 1))
+            .unwrap();
+        let tm = session.task_manager(&pilot);
+        pilot.shutdown();
+        assert!(tm
+            .submit(TaskDescription::sort("late", 1, 10, DataDist::Uniform))
+            .is_err());
+    }
+
+    #[test]
+    fn two_pilots_on_one_machine_share_the_rm() {
+        let session = Session::new("t");
+        let machine = MachineSpec::rivanna();
+        let p1 = session
+            .pilot_manager()
+            .submit(PilotDescription::new(machine.clone(), 7))
+            .unwrap();
+        let p2 = session
+            .pilot_manager()
+            .submit(PilotDescription::new(machine.clone(), 7))
+            .unwrap();
+        // 14 nodes total: a third 1-node pilot must fail.
+        assert!(session
+            .pilot_manager()
+            .submit(PilotDescription::new(machine.clone(), 1))
+            .is_err());
+        p1.shutdown();
+        p2.shutdown();
+    }
+
+    #[test]
+    fn submit_all_and_wait_all() {
+        let session = Session::new("t");
+        let pilot = session
+            .pilot_manager()
+            .submit(PilotDescription::new(MachineSpec::local(4), 1))
+            .unwrap();
+        let tm = session.task_manager(&pilot);
+        let tds = vec![
+            TaskDescription::sort("a", 2, 50, DataDist::Uniform),
+            TaskDescription::join("b", 2, 50, DataDist::Uniform),
+            TaskDescription::sort("c", 4, 50, DataDist::Uniform),
+        ];
+        let hs = tm.submit_all(tds).unwrap();
+        let rs = tm.wait_all(&hs).unwrap();
+        assert_eq!(rs.len(), 3);
+        assert!(rs.iter().all(|r| r.is_done()));
+        pilot.shutdown();
+    }
+}

@@ -1,0 +1,205 @@
+//! Task state machine and completion handle.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::error::{Error, Result};
+use crate::metrics::ExecMeasurement;
+
+/// RADICAL-Pilot task states (collapsed to the scheduling-relevant subset).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskState {
+    New,
+    /// Submitted to the TaskManager, waiting for agent scheduling.
+    Submitted,
+    /// RAPTOR master is assembling ranks for it.
+    AgentScheduling,
+    /// Running on a private communicator.
+    Executing,
+    Done,
+    Failed,
+    Canceled,
+}
+
+impl TaskState {
+    /// Legal forward transitions (the paper's loosely-coupled lifecycle).
+    pub fn can_transition_to(self, next: TaskState) -> bool {
+        use TaskState::*;
+        matches!(
+            (self, next),
+            (New, Submitted)
+                | (Submitted, AgentScheduling)
+                | (Submitted, Canceled)
+                | (AgentScheduling, Executing)
+                | (AgentScheduling, Canceled)
+                | (Executing, Done)
+                | (Executing, Failed)
+        )
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, TaskState::Done | TaskState::Failed | TaskState::Canceled)
+    }
+}
+
+/// Final record of a task execution.
+#[derive(Clone, Debug)]
+pub struct TaskResult {
+    pub task_id: u64,
+    pub name: String,
+    pub state: TaskState,
+    pub measurement: ExecMeasurement,
+    /// Rows in the task's output table(s), summed over ranks.
+    pub output_rows: u64,
+    pub error: Option<String>,
+}
+
+impl TaskResult {
+    pub fn is_done(&self) -> bool {
+        self.state == TaskState::Done
+    }
+}
+
+struct TaskInner {
+    state: Mutex<(TaskState, Option<TaskResult>)>,
+    cv: Condvar,
+}
+
+/// Shared handle to a submitted task; `wait()` blocks until terminal.
+#[derive(Clone)]
+pub struct TaskHandle {
+    pub id: u64,
+    pub name: String,
+    inner: Arc<TaskInner>,
+}
+
+impl std::fmt::Debug for TaskHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TaskHandle")
+            .field("id", &self.id)
+            .field("name", &self.name)
+            .field("state", &self.state())
+            .finish()
+    }
+}
+
+
+impl TaskHandle {
+    pub fn new(id: u64, name: &str) -> TaskHandle {
+        TaskHandle {
+            id,
+            name: name.to_string(),
+            inner: Arc::new(TaskInner {
+                state: Mutex::new((TaskState::New, None)),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    pub fn state(&self) -> TaskState {
+        self.inner.state.lock().unwrap().0
+    }
+
+    /// Advance the state machine; panics on illegal transitions (these are
+    /// coordinator bugs, not runtime conditions).
+    pub fn advance(&self, next: TaskState) {
+        let mut st = self.inner.state.lock().unwrap();
+        assert!(
+            st.0.can_transition_to(next),
+            "illegal task transition {:?} -> {next:?} (task {})",
+            st.0,
+            self.id
+        );
+        st.0 = next;
+        self.inner.cv.notify_all();
+    }
+
+    /// Terminal transition carrying the result.
+    pub fn finish(&self, result: TaskResult) {
+        let mut st = self.inner.state.lock().unwrap();
+        assert!(
+            st.0.can_transition_to(result.state) && result.state.is_terminal(),
+            "illegal terminal transition {:?} -> {:?}",
+            st.0,
+            result.state
+        );
+        st.0 = result.state;
+        st.1 = Some(result);
+        self.inner.cv.notify_all();
+    }
+
+    /// Block until the task reaches a terminal state; returns the result.
+    pub fn wait(&self) -> Result<TaskResult> {
+        let mut st = self.inner.state.lock().unwrap();
+        while !st.0.is_terminal() {
+            st = self.inner.cv.wait(st).unwrap();
+        }
+        st.1.clone().ok_or_else(|| {
+            Error::Pilot(format!("task {} terminal without result", self.id))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::OverheadBreakdown;
+
+    fn result(id: u64, state: TaskState) -> TaskResult {
+        TaskResult {
+            task_id: id,
+            name: "t".into(),
+            state,
+            measurement: ExecMeasurement {
+                label: "t".into(),
+                parallelism: 1,
+                wall_s: 0.1,
+                sim_net_s: 0.0,
+                overhead: OverheadBreakdown::default(),
+            },
+            output_rows: 0,
+            error: None,
+        }
+    }
+
+    #[test]
+    fn legal_lifecycle() {
+        let h = TaskHandle::new(1, "t");
+        h.advance(TaskState::Submitted);
+        h.advance(TaskState::AgentScheduling);
+        h.advance(TaskState::Executing);
+        h.finish(result(1, TaskState::Done));
+        assert_eq!(h.state(), TaskState::Done);
+        assert!(h.wait().unwrap().is_done());
+    }
+
+    #[test]
+    #[should_panic(expected = "illegal task transition")]
+    fn illegal_skip_rejected() {
+        let h = TaskHandle::new(2, "t");
+        h.advance(TaskState::Executing); // New -> Executing is illegal
+    }
+
+    #[test]
+    fn wait_blocks_until_finish() {
+        let h = TaskHandle::new(3, "t");
+        h.advance(TaskState::Submitted);
+        h.advance(TaskState::AgentScheduling);
+        h.advance(TaskState::Executing);
+        let h2 = h.clone();
+        let waiter = std::thread::spawn(move || h2.wait().unwrap());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        h.finish(result(3, TaskState::Failed));
+        let r = waiter.join().unwrap();
+        assert_eq!(r.state, TaskState::Failed);
+        assert!(!r.is_done());
+    }
+
+    #[test]
+    fn cancel_path() {
+        let h = TaskHandle::new(4, "t");
+        h.advance(TaskState::Submitted);
+        assert!(TaskState::Submitted.can_transition_to(TaskState::Canceled));
+        assert!(!TaskState::Done.can_transition_to(TaskState::Submitted));
+        assert!(TaskState::Canceled.is_terminal());
+    }
+}

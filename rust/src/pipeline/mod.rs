@@ -1,0 +1,188 @@
+//! Dataframe-task DAG (paper §4.4: "A collection of data frame operators
+//! can be arranged in a directed acyclic graph (DAG). Execution of this DAG
+//! can further be improved by identifying independent branches ... and
+//! executing such independent tasks parallelly.").
+//!
+//! A [`Pipeline`] is a DAG of [`TaskDescription`]s; `execute` submits it in
+//! topological waves to a pilot's TaskManager, so independent branches run
+//! concurrently on disjoint private communicators.
+
+use std::collections::VecDeque;
+
+use crate::error::{Error, Result};
+use crate::pilot::{TaskDescription, TaskManager, TaskResult};
+
+/// A node in the pipeline DAG.
+#[derive(Clone, Debug)]
+struct Node {
+    td: TaskDescription,
+    deps: Vec<usize>,
+}
+
+/// DAG of Cylon tasks with explicit dependencies.
+#[derive(Clone, Debug, Default)]
+pub struct Pipeline {
+    nodes: Vec<Node>,
+}
+
+impl Pipeline {
+    pub fn new() -> Pipeline {
+        Pipeline::default()
+    }
+
+    /// Add a task depending on previously-added node ids; returns its id.
+    pub fn add(&mut self, td: TaskDescription, deps: &[usize]) -> usize {
+        let id = self.nodes.len();
+        self.nodes.push(Node { td, deps: deps.to_vec() });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Validate: deps reference earlier nodes only (DAG by construction,
+    /// since `add` can only reference existing ids — forward refs rejected).
+    pub fn validate(&self) -> Result<()> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            for &d in &n.deps {
+                if d >= i {
+                    return Err(Error::Pilot(format!(
+                        "node {i} ('{}') depends on {d}, which is not an earlier node",
+                        n.td.name
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Topological waves: wave k contains every node whose dependencies all
+    /// sit in waves < k. Independent branches land in the same wave.
+    pub fn waves(&self) -> Result<Vec<Vec<usize>>> {
+        self.validate()?;
+        let mut wave_of = vec![0usize; self.nodes.len()];
+        let mut maxw = 0;
+        for (i, n) in self.nodes.iter().enumerate() {
+            let w = n
+                .deps
+                .iter()
+                .map(|&d| wave_of[d] + 1)
+                .max()
+                .unwrap_or(0);
+            wave_of[i] = w;
+            maxw = maxw.max(w);
+        }
+        let mut waves = vec![Vec::new(); maxw + 1];
+        for (i, &w) in wave_of.iter().enumerate() {
+            waves[w].push(i);
+        }
+        Ok(waves)
+    }
+
+    /// Execute the DAG through a TaskManager, wave by wave. Within a wave,
+    /// tasks are all submitted before any is awaited (the RAPTOR master
+    /// overlaps them on disjoint rank groups). A failed task fails the
+    /// pipeline after its wave completes.
+    pub fn execute(&self, tm: &TaskManager) -> Result<Vec<TaskResult>> {
+        let waves = self.waves()?;
+        let mut results: Vec<Option<TaskResult>> = vec![None; self.nodes.len()];
+        for wave in waves {
+            let mut handles = VecDeque::new();
+            for &i in &wave {
+                handles.push_back((i, tm.submit(self.nodes[i].td.clone())?));
+            }
+            let mut failure: Option<String> = None;
+            for (i, h) in handles {
+                let r = h.wait()?;
+                if !r.is_done() && failure.is_none() {
+                    failure = Some(format!(
+                        "pipeline node {i} ('{}') failed: {}",
+                        r.name,
+                        r.error.clone().unwrap_or_default()
+                    ));
+                }
+                results[i] = Some(r);
+            }
+            if let Some(msg) = failure {
+                return Err(Error::TaskFailed(msg));
+            }
+        }
+        Ok(results.into_iter().map(|r| r.unwrap()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::MachineSpec;
+    use crate::pilot::{CylonOp, DataDist, PilotDescription, Session};
+
+    fn td(name: &str, ranks: usize) -> TaskDescription {
+        TaskDescription::sort(name, ranks, 40, DataDist::Uniform)
+    }
+
+    #[test]
+    fn waves_group_independent_branches() {
+        let mut p = Pipeline::new();
+        let a = p.add(td("a", 1), &[]);
+        let b = p.add(td("b", 1), &[]);
+        let c = p.add(td("c", 1), &[a, b]);
+        let d = p.add(td("d", 1), &[a]);
+        let _e = p.add(td("e", 1), &[c, d]);
+        let waves = p.waves().unwrap();
+        assert_eq!(waves, vec![vec![0, 1], vec![2, 3], vec![4]]);
+    }
+
+    #[test]
+    fn forward_dependency_rejected() {
+        let mut p = Pipeline::new();
+        let _a = p.add(td("a", 1), &[3]); // nonexistent / forward
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn executes_dag_through_pilot() {
+        let session = Session::new("pipe");
+        let pilot = session
+            .pilot_manager()
+            .submit(PilotDescription::new(MachineSpec::local(4), 1))
+            .unwrap();
+        let tm = session.task_manager(&pilot);
+        let mut p = Pipeline::new();
+        let a = p.add(td("extract-1", 2), &[]);
+        let b = p.add(td("extract-2", 2), &[]);
+        let c = p.add(
+            TaskDescription::join("merge", 4, 60, DataDist::Uniform),
+            &[a, b],
+        );
+        let _d = p.add(
+            TaskDescription::new("report", CylonOp::Groupby, 2, 60),
+            &[c],
+        );
+        let rs = p.execute(&tm).unwrap();
+        assert_eq!(rs.len(), 4);
+        assert!(rs.iter().all(|r| r.is_done()));
+        pilot.shutdown();
+    }
+
+    #[test]
+    fn failed_node_fails_pipeline() {
+        let session = Session::new("pipe");
+        let pilot = session
+            .pilot_manager()
+            .submit(PilotDescription::new(MachineSpec::local(2), 1))
+            .unwrap();
+        let tm = session.task_manager(&pilot);
+        let mut p = Pipeline::new();
+        let a = p.add(td("__fail__x", 2), &[]);
+        let _b = p.add(td("never", 2), &[a]);
+        let err = p.execute(&tm).unwrap_err().to_string();
+        assert!(err.contains("__fail__x"), "{err}");
+        pilot.shutdown();
+    }
+}

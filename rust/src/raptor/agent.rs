@@ -1,0 +1,301 @@
+//! The RemoteAgent (paper §3.1, Fig 3-4/5): bootstraps on the pilot's
+//! allocation, starts the worker threads (one per rank) and the RAPTOR
+//! master, and exposes the control-plane channel the TaskManager submits
+//! through.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::comm::{CommWorld, Communicator, ReduceOp};
+use crate::ops::dist::KernelBackend;
+use crate::pilot::RankClass;
+
+use super::cylon_task::run_cylon_task;
+use super::master::{Master, MasterMsg, RankReport, Utilization, WorkerCtl};
+
+/// Master scheduling policy (ablation: DESIGN.md §4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Strict submission order; head-of-line blocking possible.
+    Fifo,
+    /// Skip over tasks that do not fit — maximizes rank reuse (the
+    /// heterogeneous-execution advantage of §4.3).
+    Backfill,
+}
+
+/// Handle on a bootstrapped agent: submit via [`Agent::master_tx`], then
+/// [`Agent::shutdown`] to join everything.
+pub struct Agent {
+    master_tx: Sender<MasterMsg>,
+    master_join: Option<std::thread::JoinHandle<()>>,
+    worker_joins: Vec<std::thread::JoinHandle<()>>,
+    size: usize,
+    utilization: Arc<Utilization>,
+}
+
+impl Agent {
+    /// Bootstrap the agent over an existing communication world, with every
+    /// rank in the CPU pool.
+    pub fn bootstrap(
+        world: CommWorld,
+        backend: KernelBackend,
+        policy: SchedPolicy,
+    ) -> Agent {
+        let classes = vec![RankClass::Cpu; world.size()];
+        Agent::bootstrap_with_classes(world, backend, policy, classes)
+    }
+
+    /// Bootstrap with an explicit rank-class layout (CPU/GPU pools, paper
+    /// §4.4).
+    ///
+    /// Mirrors the paper's step sequence: RemoteAgent starts (Fig 3-4),
+    /// RAPTOR master+workers spawn (Fig 3-5), workers wait for work orders
+    /// and construct private communicators per task (Fig 3-6).
+    pub fn bootstrap_with_classes(
+        world: CommWorld,
+        backend: KernelBackend,
+        policy: SchedPolicy,
+        classes: Vec<RankClass>,
+    ) -> Agent {
+        let size = world.size();
+        assert_eq!(classes.len(), size, "one class per world rank");
+        let (master_tx, master_rx) = mpsc::channel::<MasterMsg>();
+
+        let mut worker_txs = Vec::with_capacity(size);
+        let mut worker_joins = Vec::with_capacity(size);
+        for rank in 0..size {
+            let (tx, rx) = mpsc::channel::<WorkerCtl>();
+            worker_txs.push(tx);
+            let comm = world.communicator(rank);
+            let events = master_tx.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("raptor-worker-{rank}"))
+                .spawn(move || worker_loop(comm, rx, events))
+                .expect("spawn raptor worker");
+            worker_joins.push(h);
+        }
+
+        let utilization = Arc::new(Utilization::default());
+        let master = Master::new(
+            worker_txs,
+            master_rx,
+            backend,
+            policy,
+            classes,
+            utilization.clone(),
+        );
+        let master_join = std::thread::Builder::new()
+            .name("raptor-master".into())
+            .spawn(move || master.run())
+            .expect("spawn raptor master");
+
+        Agent {
+            master_tx,
+            master_join: Some(master_join),
+            worker_joins,
+            size,
+            utilization,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Resource-usage tracker (busy rank-seconds, completed tasks).
+    pub fn utilization(&self) -> Arc<Utilization> {
+        self.utilization.clone()
+    }
+
+    /// Control-plane channel for task submission.
+    pub fn master_tx(&self) -> Sender<MasterMsg> {
+        self.master_tx.clone()
+    }
+
+    /// Stop the master and join all threads (idempotent).
+    pub fn shutdown(&mut self) {
+        let _ = self.master_tx.send(MasterMsg::Shutdown);
+        if let Some(h) = self.master_join.take() {
+            let _ = h.join();
+        }
+        for h in self.worker_joins.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Agent {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Worker event loop: construct the private communicator, run the Cylon
+/// task, report from group rank 0, recycle.
+fn worker_loop(
+    comm: Communicator,
+    ctl: Receiver<WorkerCtl>,
+    events: Sender<MasterMsg>,
+) {
+    while let Ok(msg) = ctl.recv() {
+        match msg {
+            WorkerCtl::Exec(order) => {
+                // --- private communicator construction (measured) ---
+                let t0 = Instant::now();
+                let sub = match comm.subgroup(order.ctx_id, &order.world_ranks) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        let _ = events.send(MasterMsg::TaskComplete(RankReport {
+                            task_id: order.task_id,
+                            stats: Default::default(),
+                            comm_construction_s: 0.0,
+                            error: Some(format!("subgroup construction: {e}")),
+                        }));
+                        continue;
+                    }
+                };
+                let construct = t0.elapsed().as_secs_f64() + sub.sim_clock();
+                let construct_max = sub.allreduce_f64(construct, ReduceOp::Max);
+
+                // --- execute the Cylon task on the private communicator ---
+                let outcome = run_cylon_task(&sub, &order.td, &order.backend);
+
+                // All ranks rendezvous before the group dissolves so ctx
+                // release cannot race a straggler's last collective.
+                sub.barrier();
+                if sub.rank() == 0 {
+                    let report = match outcome {
+                        Ok(stats) => RankReport {
+                            task_id: order.task_id,
+                            stats,
+                            comm_construction_s: construct_max,
+                            error: None,
+                        },
+                        Err(e) => RankReport {
+                            task_id: order.task_id,
+                            stats: Default::default(),
+                            comm_construction_s: construct_max,
+                            error: Some(e.to_string()),
+                        },
+                    };
+                    comm.release_ctx(order.ctx_id);
+                    let _ = events.send(MasterMsg::TaskComplete(report));
+                }
+            }
+            WorkerCtl::Shutdown => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::NetModel;
+    use crate::pilot::{DataDist, TaskDescription, TaskHandle, TaskState};
+
+    fn submit(
+        agent: &Agent,
+        id: u64,
+        td: TaskDescription,
+    ) -> TaskHandle {
+        let h = TaskHandle::new(id, &td.name);
+        h.advance(TaskState::Submitted);
+        agent
+            .master_tx()
+            .send(MasterMsg::Submit { handle: h.clone(), td, description_s: 0.0 })
+            .unwrap();
+        h
+    }
+
+    fn agent(p: usize, policy: SchedPolicy) -> Agent {
+        Agent::bootstrap(
+            CommWorld::new(p, NetModel::disabled()),
+            KernelBackend::Native,
+            policy,
+        )
+    }
+
+    #[test]
+    fn single_task_roundtrip() {
+        let mut a = agent(4, SchedPolicy::Fifo);
+        let td = TaskDescription::join("j", 4, 100, DataDist::Uniform);
+        let h = submit(&a, 1, td);
+        let r = h.wait().unwrap();
+        assert!(r.is_done());
+        assert!(r.output_rows > 0);
+        assert!(r.measurement.overhead.comm_construction >= 0.0);
+        a.shutdown();
+    }
+
+    #[test]
+    fn concurrent_small_tasks_share_the_pilot() {
+        let mut a = agent(6, SchedPolicy::Fifo);
+        let h1 = submit(&a, 1, TaskDescription::sort("s1", 3, 80, DataDist::Uniform));
+        let h2 = submit(&a, 2, TaskDescription::sort("s2", 3, 80, DataDist::Uniform));
+        let (r1, r2) = (h1.wait().unwrap(), h2.wait().unwrap());
+        assert!(r1.is_done() && r2.is_done());
+        assert_eq!(r1.output_rows, 240);
+        a.shutdown();
+    }
+
+    #[test]
+    fn ranks_are_recycled_for_queued_tasks() {
+        // 2-rank pilot, three 2-rank tasks: must run sequentially, all done.
+        let mut a = agent(2, SchedPolicy::Fifo);
+        let hs: Vec<_> = (0..3)
+            .map(|i| {
+                submit(
+                    &a,
+                    i + 1,
+                    TaskDescription::sort(&format!("s{i}"), 2, 50, DataDist::Uniform),
+                )
+            })
+            .collect();
+        for h in hs {
+            assert!(h.wait().unwrap().is_done());
+        }
+        a.shutdown();
+    }
+
+    #[test]
+    fn failed_task_isolated_from_others() {
+        // Paper §3.3: failures are contained; remaining tasks execute.
+        let mut a = agent(4, SchedPolicy::Fifo);
+        let bad = submit(
+            &a,
+            1,
+            TaskDescription::sort("__fail__bad", 2, 10, DataDist::Uniform),
+        );
+        let good = submit(&a, 2, TaskDescription::sort("ok", 2, 50, DataDist::Uniform));
+        let rb = bad.wait().unwrap();
+        let rg = good.wait().unwrap();
+        assert_eq!(rb.state, TaskState::Failed);
+        assert!(rb.error.as_ref().unwrap().contains("injected"));
+        assert!(rg.is_done());
+        a.shutdown();
+    }
+
+    #[test]
+    fn backfill_lets_small_task_jump_queue() {
+        // Pilot of 4: running task holds 3 ranks; queue = [big(4), small(1)].
+        // FIFO would block small behind big; backfill runs small on the free
+        // rank immediately.
+        let mut a = agent(4, SchedPolicy::Backfill);
+        let hold = submit(&a, 1, TaskDescription::sort("hold", 3, 4000, DataDist::Uniform));
+        let big = submit(&a, 2, TaskDescription::sort("big", 4, 10, DataDist::Uniform));
+        let small = submit(&a, 3, TaskDescription::sort("small", 1, 10, DataDist::Uniform));
+        let rs = small.wait().unwrap();
+        assert!(rs.is_done());
+        assert!(hold.wait().unwrap().is_done());
+        assert!(big.wait().unwrap().is_done());
+        a.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent() {
+        let mut a = agent(2, SchedPolicy::Fifo);
+        a.shutdown();
+        a.shutdown();
+    }
+}

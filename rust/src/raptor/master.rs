@@ -1,0 +1,318 @@
+//! The RAPTOR master: task intake, rank grouping, private-communicator
+//! context allocation, dispatch, result collection, rank recycling.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::metrics::OverheadBreakdown;
+use crate::ops::dist::KernelBackend;
+use crate::pilot::{RankClass, TaskDescription, TaskHandle, TaskState};
+
+use super::agent::SchedPolicy;
+use super::cylon_task::RankStats;
+
+/// Shared resource-usage tracker (paper §4.4 "resource tracking"):
+/// busy-rank-nanoseconds accumulated by the master, readable from the
+/// pilot while the agent runs.
+#[derive(Default)]
+pub struct Utilization {
+    busy_rank_ns: AtomicU64,
+    tasks_done: AtomicU64,
+}
+
+impl Utilization {
+    pub fn busy_rank_seconds(&self) -> f64 {
+        self.busy_rank_ns.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    pub fn tasks_done(&self) -> u64 {
+        self.tasks_done.load(Ordering::Relaxed)
+    }
+
+    fn record(&self, ranks: usize, busy: std::time::Duration) {
+        self.busy_rank_ns.fetch_add(
+            (busy.as_nanos() as u64).saturating_mul(ranks as u64),
+            Ordering::Relaxed,
+        );
+        self.tasks_done.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Work order delivered to every selected worker (paper Fig 3-6: the worker
+/// "isolates a set of MPI-Ranks ... and groups them to construct a private
+/// MPI-Communicator and deliver it to the task during runtime").
+#[derive(Clone)]
+pub struct WorkOrder {
+    pub task_id: u64,
+    pub td: TaskDescription,
+    /// Fresh context id for the private communicator.
+    pub ctx_id: u64,
+    /// World ranks participating (sorted).
+    pub world_ranks: Vec<usize>,
+    pub backend: KernelBackend,
+}
+
+/// Group-rank-0's report back to the master.
+#[derive(Clone, Debug)]
+pub struct RankReport {
+    pub task_id: u64,
+    pub stats: RankStats,
+    /// Private-communicator construction seconds (real rendezvous + modeled
+    /// barrier), max across the group.
+    pub comm_construction_s: f64,
+    pub error: Option<String>,
+}
+
+/// Messages the master consumes (submissions, completions, shutdown).
+pub enum MasterMsg {
+    Submit {
+        handle: TaskHandle,
+        td: TaskDescription,
+        /// Seconds the TaskManager spent describing/serializing the task.
+        description_s: f64,
+    },
+    TaskComplete(RankReport),
+    Shutdown,
+}
+
+/// Control messages to workers.
+pub enum WorkerCtl {
+    Exec(WorkOrder),
+    Shutdown,
+}
+
+struct Pending {
+    handle: TaskHandle,
+    td: TaskDescription,
+    description_s: f64,
+    enqueued: Instant,
+    seq: u64,
+}
+
+struct Running {
+    handle: TaskHandle,
+    overhead: OverheadBreakdown,
+    parallelism: usize,
+    ranks: Vec<usize>,
+    name: String,
+    dispatched: Instant,
+}
+
+/// Master scheduler state + event loop. Runs on its own thread.
+pub(super) struct Master {
+    workers: Vec<Sender<WorkerCtl>>,
+    rx: Receiver<MasterMsg>,
+    backend: KernelBackend,
+    policy: SchedPolicy,
+    free: Vec<bool>,
+    /// Rank class per world rank (CPU pool then GPU pool).
+    classes: Vec<RankClass>,
+    queue: VecDeque<Pending>,
+    running: Vec<Option<Running>>, // indexed by task slot
+    next_ctx: u64,
+    next_seq: u64,
+    utilization: Arc<Utilization>,
+}
+
+impl Master {
+    pub(super) fn new(
+        workers: Vec<Sender<WorkerCtl>>,
+        rx: Receiver<MasterMsg>,
+        backend: KernelBackend,
+        policy: SchedPolicy,
+        classes: Vec<RankClass>,
+        utilization: Arc<Utilization>,
+    ) -> Master {
+        let n = workers.len();
+        assert_eq!(classes.len(), n);
+        Master {
+            workers,
+            rx,
+            backend,
+            policy,
+            free: vec![true; n],
+            classes,
+            queue: VecDeque::new(),
+            running: Vec::new(),
+            next_ctx: 1, // 0 is WORLD_CTX
+            next_seq: 0,
+            utilization,
+        }
+    }
+
+    fn free_count(&self, class: RankClass) -> usize {
+        self.free
+            .iter()
+            .zip(&self.classes)
+            .filter(|(&f, &c)| f && c == class)
+            .count()
+    }
+
+    /// Pick the lowest `n` free world ranks of the given class.
+    fn claim_ranks(&mut self, n: usize, class: RankClass) -> Vec<usize> {
+        let mut out = Vec::with_capacity(n);
+        for (r, f) in self.free.iter_mut().enumerate() {
+            if out.len() == n {
+                break;
+            }
+            if *f && self.classes[r] == class {
+                *f = false;
+                out.push(r);
+            }
+        }
+        debug_assert_eq!(out.len(), n);
+        out
+    }
+
+    /// Dispatch every queued task that fits. Priority first (higher wins),
+    /// submission order within a priority level; then the policy decides
+    /// head-of-line behaviour: FIFO stops at the first task that does not
+    /// fit; Backfill keeps scanning for smaller tasks that do (the
+    /// rank-reuse optimization the heterogeneous engine's win comes from).
+    fn schedule(&mut self) {
+        loop {
+            // Scan order: priority desc, then seq asc.
+            let mut order: Vec<usize> = (0..self.queue.len()).collect();
+            order.sort_by_key(|&i| {
+                (std::cmp::Reverse(self.queue[i].td.priority), self.queue[i].seq)
+            });
+            let mut dispatched = false;
+            for &i in &order {
+                let td = &self.queue[i].td;
+                let fits = td.ranks <= self.free_count(td.rank_class);
+                if fits {
+                    let p = self.queue.remove(i).unwrap();
+                    self.dispatch(p);
+                    dispatched = true;
+                    break; // free set changed; recompute scan order
+                } else if self.policy == SchedPolicy::Fifo {
+                    break; // strict head-of-line blocking
+                }
+            }
+            if !dispatched {
+                break;
+            }
+        }
+    }
+
+    fn dispatch(&mut self, p: Pending) {
+        let queue_wait_s = p.enqueued.elapsed().as_secs_f64();
+        let dispatch_t0 = Instant::now();
+        let ranks = self.claim_ranks(p.td.ranks, p.td.rank_class);
+        let ctx_id = self.next_ctx;
+        self.next_ctx += 1;
+        p.handle.advance(TaskState::AgentScheduling);
+        let order = WorkOrder {
+            task_id: p.handle.id,
+            td: p.td.clone(),
+            ctx_id,
+            world_ranks: ranks.clone(),
+            backend: self.backend.clone(),
+        };
+        let slot = self.running.iter().position(|r| r.is_none()).unwrap_or_else(|| {
+            self.running.push(None);
+            self.running.len() - 1
+        });
+        let slot_idx = slot;
+        self.running[slot_idx] = Some(Running {
+            handle: p.handle.clone(),
+            overhead: OverheadBreakdown {
+                task_description: p.description_s,
+                comm_construction: 0.0, // filled from the report
+                scheduling: 0.0,        // filled after delivery below
+                queue_wait: queue_wait_s,
+            },
+            parallelism: p.td.ranks,
+            ranks: ranks.clone(),
+            name: p.td.name.clone(),
+            dispatched: Instant::now(),
+        });
+        p.handle.advance(TaskState::Executing);
+        for &r in &ranks {
+            self.workers[r]
+                .send(WorkerCtl::Exec(order.clone()))
+                .expect("worker channel alive");
+        }
+        // Master processing time: rank selection through work-order delivery.
+        if let Some(run) = self.running[slot_idx].as_mut() {
+            run.overhead.scheduling = dispatch_t0.elapsed().as_secs_f64();
+        }
+    }
+
+    fn complete(&mut self, report: RankReport) {
+        let slot = self
+            .running
+            .iter()
+            .position(|r| {
+                r.as_ref().map(|x| x.handle.id) == Some(report.task_id)
+            })
+            .expect("completion for unknown task");
+        let run = self.running[slot].take().unwrap();
+        for &r in &run.ranks {
+            self.free[r] = true;
+        }
+        self.utilization
+            .record(run.ranks.len(), run.dispatched.elapsed());
+        let mut overhead = run.overhead;
+        overhead.comm_construction = report.comm_construction_s;
+        let (state, error) = match &report.error {
+            None => (TaskState::Done, None),
+            Some(e) => (TaskState::Failed, Some(e.clone())),
+        };
+        run.handle.finish(crate::pilot::TaskResult {
+            task_id: report.task_id,
+            name: run.name,
+            state,
+            measurement: crate::metrics::ExecMeasurement {
+                label: run.handle.name.clone(),
+                parallelism: run.parallelism,
+                wall_s: report.stats.wall_s,
+                sim_net_s: report.stats.sim_net_s,
+                overhead,
+            },
+            output_rows: report.stats.output_rows,
+            error,
+        });
+        self.schedule();
+    }
+
+    /// The master event loop (paper Fig 4: persistent scheduler daemon).
+    pub(super) fn run(mut self) {
+        loop {
+            match self.rx.recv() {
+                Ok(MasterMsg::Submit { handle, td, description_s }) => {
+                    let pool = self
+                        .classes
+                        .iter()
+                        .filter(|&&c| c == td.rank_class)
+                        .count();
+                    assert!(
+                        td.ranks <= pool,
+                        "task '{}' wants {} {:?} ranks, pilot has {pool}",
+                        td.name,
+                        td.ranks,
+                        td.rank_class,
+                    );
+                    let seq = self.next_seq;
+                    self.next_seq += 1;
+                    self.queue.push_back(Pending {
+                        handle,
+                        td,
+                        description_s,
+                        enqueued: Instant::now(),
+                        seq,
+                    });
+                    self.schedule();
+                }
+                Ok(MasterMsg::TaskComplete(report)) => self.complete(report),
+                Ok(MasterMsg::Shutdown) | Err(_) => break,
+            }
+        }
+        for w in &self.workers {
+            let _ = w.send(WorkerCtl::Shutdown);
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! RAPTOR analogue (paper §3.4, Fig 3-5/6): the master–worker subsystem the
+//! RemoteAgent bootstraps on the pilot's allocation.
+//!
+//! * One **worker** thread per pilot rank, each holding its world
+//!   [`Communicator`] and a control channel.
+//! * One **master** thread that receives Cylon tasks, carves a **private
+//!   communicator** out of free ranks (`Communicator::subgroup`), delivers
+//!   work orders, collects results, and recycles freed ranks — the paper's
+//!   key heterogeneity mechanism ("when any worker completes their task,
+//!   the released resources become available to others", §4.3).
+
+mod agent;
+mod cylon_task;
+mod master;
+
+pub use agent::{Agent, SchedPolicy};
+pub use cylon_task::run_cylon_task;
+pub use master::{MasterMsg, RankReport, Utilization, WorkOrder};

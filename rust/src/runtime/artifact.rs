@@ -1,0 +1,274 @@
+//! Artifact loading and single-thread kernel execution.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (thread-bound), so an
+//! [`ArtifactStore`] lives on one thread; [`super::KernelService`] provides
+//! the cross-thread facade the rank workers use.
+//!
+//! Interchange format is HLO **text** (never serialized protos): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and aot.py).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// Block sizes fixed at AOT time — must match python/compile/kernels.
+pub const HASH_BLOCK: usize = 16384;
+pub const SORT_BLOCK: usize = 1024;
+
+/// One manifest entry: artifact name, file, and declared signatures.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub arg_spec: String,
+    pub out_spec: String,
+}
+
+/// Parse `manifest.txt` (written by aot.py).
+pub fn read_manifest(dir: &Path) -> Result<Vec<ArtifactMeta>> {
+    let path = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&path).map_err(|e| {
+        Error::Runtime(format!(
+            "cannot read {} — run `make artifacts` first ({e})",
+            path.display()
+        ))
+    })?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = line.split('\t').collect();
+        if parts.len() != 4 {
+            return Err(Error::Runtime(format!(
+                "manifest line {} malformed: '{line}'",
+                i + 1
+            )));
+        }
+        out.push(ArtifactMeta {
+            name: parts[0].into(),
+            file: parts[1].into(),
+            arg_spec: parts[2].into(),
+            out_spec: parts[3].into(),
+        });
+    }
+    Ok(out)
+}
+
+/// Thread-bound store of compiled kernel executables.
+pub struct ArtifactStore {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub metas: Vec<ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl ArtifactStore {
+    /// Load + compile every artifact in `dir` on a fresh CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<ArtifactStore> {
+        let metas = read_manifest(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut exes = HashMap::new();
+        for m in &metas {
+            let path = dir.join(&m.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            exes.insert(m.name.clone(), exe);
+        }
+        Ok(ArtifactStore { client, exes, metas, dir: dir.to_path_buf() })
+    }
+
+    /// Default artifact directory: `$RC_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("RC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.exes
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("no artifact named '{name}'")))
+    }
+
+    /// Run the `shuffle_plan` artifact over one padded block of exactly
+    /// [`HASH_BLOCK`] keys; returns the partition ids.
+    fn shuffle_plan_block(&self, keys: &[i64], nparts: u32) -> Result<Vec<i32>> {
+        debug_assert_eq!(keys.len(), HASH_BLOCK);
+        let exe = self.exe("shuffle_plan")?;
+        let k = xla::Literal::vec1(keys);
+        let p = xla::Literal::vec1(&[nparts]);
+        let result = exe.execute::<xla::Literal>(&[k, p])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?; // return_tuple=True on the python side
+        Ok(out.to_vec::<i32>()?)
+    }
+
+    /// Partition ids for arbitrarily many keys (pads the tail block; the
+    /// PJRT twin of `util::hash::partition_ids`).
+    pub fn shuffle_plan(&self, keys: &[i64], nparts: u32) -> Result<Vec<i32>> {
+        if nparts == 0 {
+            return Err(Error::Runtime("shuffle_plan with nparts=0".into()));
+        }
+        let mut out = Vec::with_capacity(keys.len());
+        let mut buf = [0i64; HASH_BLOCK];
+        for chunk in keys.chunks(HASH_BLOCK) {
+            if chunk.len() == HASH_BLOCK {
+                out.extend(self.shuffle_plan_block(chunk, nparts)?);
+            } else {
+                buf[..chunk.len()].copy_from_slice(chunk);
+                buf[chunk.len()..].fill(0);
+                let ids = self.shuffle_plan_block(&buf, nparts)?;
+                out.extend(&ids[..chunk.len()]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Run the `block_sort` artifact on exactly [`SORT_BLOCK`] (key,
+    /// payload) lanes; returns (sorted keys, permuted payload).
+    fn block_sort_exact(
+        &self,
+        keys: &[i64],
+        payload: &[i32],
+    ) -> Result<(Vec<i64>, Vec<i32>)> {
+        debug_assert_eq!(keys.len(), SORT_BLOCK);
+        let exe = self.exe("block_sort")?;
+        let k = xla::Literal::vec1(keys);
+        let p = xla::Literal::vec1(payload);
+        let result = exe.execute::<xla::Literal>(&[k, p])?[0][0].to_literal_sync()?;
+        let (sk, sp) = result.to_tuple2()?;
+        Ok((sk.to_vec::<i64>()?, sp.to_vec::<i32>()?))
+    }
+
+    /// Sort up to [`SORT_BLOCK`] keys (padding with `i64::MAX`, truncating
+    /// after); payload carries caller row indices.
+    pub fn block_sort(
+        &self,
+        keys: &[i64],
+        payload: &[i32],
+    ) -> Result<(Vec<i64>, Vec<i32>)> {
+        if keys.len() != payload.len() {
+            return Err(Error::Runtime("block_sort ragged inputs".into()));
+        }
+        if keys.len() > SORT_BLOCK {
+            return Err(Error::Runtime(format!(
+                "block_sort of {} lanes exceeds SORT_BLOCK={SORT_BLOCK}",
+                keys.len()
+            )));
+        }
+        if keys.len() == SORT_BLOCK {
+            return self.block_sort_exact(keys, payload);
+        }
+        let n = keys.len();
+        let mut kbuf = vec![i64::MAX; SORT_BLOCK];
+        let mut pbuf = vec![-1i32; SORT_BLOCK];
+        kbuf[..n].copy_from_slice(keys);
+        pbuf[..n].copy_from_slice(payload);
+        let (sk, sp) = self.block_sort_exact(&kbuf, &pbuf)?;
+        // Padding keys are i64::MAX and sort to the tail. Real i64::MAX keys
+        // (payload >= 0) must be kept; filter by payload sentinel instead of
+        // simple truncation.
+        let mut out_k = Vec::with_capacity(n);
+        let mut out_p = Vec::with_capacity(n);
+        for (k, p) in sk.into_iter().zip(sp) {
+            if p >= 0 {
+                out_k.push(k);
+                out_p.push(p);
+            }
+        }
+        debug_assert_eq!(out_k.len(), n);
+        Ok((out_k, out_p))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::hash::partition_ids;
+
+    fn store() -> Option<ArtifactStore> {
+        let dir = ArtifactStore::default_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(ArtifactStore::load(&dir).expect("artifact store loads"))
+    }
+
+    #[test]
+    fn manifest_has_both_kernels() {
+        let Some(s) = store() else { return };
+        let names: Vec<&str> = s.metas.iter().map(|m| m.name.as_str()).collect();
+        assert!(names.contains(&"shuffle_plan"));
+        assert!(names.contains(&"block_sort"));
+    }
+
+    #[test]
+    fn pjrt_matches_native_hash() {
+        let Some(s) = store() else { return };
+        // The L3<->L1 bit-compatibility contract.
+        let keys: Vec<i64> = (0..HASH_BLOCK as i64)
+            .map(|i| i.wrapping_mul(0x9E3779B97F4A7C15u64 as i64) ^ (i << 7))
+            .collect();
+        for nparts in [1u32, 2, 7, 37, 518] {
+            let pjrt = s.shuffle_plan(&keys, nparts).unwrap();
+            let native = partition_ids(&keys, nparts);
+            assert_eq!(pjrt, native, "nparts={nparts}");
+        }
+    }
+
+    #[test]
+    fn shuffle_plan_pads_tail() {
+        let Some(s) = store() else { return };
+        let keys: Vec<i64> = (0..100).collect();
+        let pjrt = s.shuffle_plan(&keys, 4).unwrap();
+        assert_eq!(pjrt, partition_ids(&keys, 4));
+        assert_eq!(pjrt.len(), 100);
+    }
+
+    #[test]
+    fn block_sort_sorts() {
+        let Some(s) = store() else { return };
+        let mut rng = crate::util::Rng::new(3);
+        let keys: Vec<i64> = (0..SORT_BLOCK).map(|_| rng.gen_i64(-1000, 1000)).collect();
+        let payload: Vec<i32> = (0..SORT_BLOCK as i32).collect();
+        let (sk, sp) = s.block_sort(&keys, &payload).unwrap();
+        let mut expect = keys.clone();
+        expect.sort_unstable();
+        assert_eq!(sk, expect);
+        for (i, &p) in sp.iter().enumerate() {
+            assert_eq!(keys[p as usize], sk[i]);
+        }
+    }
+
+    #[test]
+    fn block_sort_partial_block() {
+        let Some(s) = store() else { return };
+        let keys = vec![5i64, -3, i64::MAX, 0];
+        let payload = vec![0i32, 1, 2, 3];
+        let (sk, sp) = s.block_sort(&keys, &payload).unwrap();
+        assert_eq!(sk, vec![-3, 0, 5, i64::MAX]);
+        assert_eq!(sp, vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn block_sort_rejects_oversize() {
+        let Some(s) = store() else { return };
+        let keys = vec![0i64; SORT_BLOCK + 1];
+        let payload = vec![0i32; SORT_BLOCK + 1];
+        assert!(s.block_sort(&keys, &payload).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_informative() {
+        let err = ArtifactStore::load(Path::new("/nonexistent-dir"))
+            .err()
+            .unwrap()
+            .to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: load the AOT HLO artifacts produced by
+//! `python/compile/aot.py` and serve compiled executables to the data-plane
+//! hot path. Python never runs here — the artifacts are plain HLO text.
+
+mod artifact;
+mod service;
+
+pub use artifact::{ArtifactMeta, ArtifactStore, HASH_BLOCK, SORT_BLOCK};
+pub use service::KernelService;

@@ -1,0 +1,200 @@
+//! Cross-thread kernel facade.
+//!
+//! `PjRtClient` is `Rc`-based and thread-bound, so rank worker threads
+//! cannot hold executables directly. [`KernelService`] spawns a small pool
+//! of server threads, each owning its own [`ArtifactStore`] (client +
+//! compiled executables); rank threads submit requests over a shared queue
+//! and block on a per-request reply channel. Pool size trades compile time
+//! and memory for hot-path parallelism (see EXPERIMENTS.md §Perf).
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+
+use super::artifact::ArtifactStore;
+
+enum Request {
+    ShufflePlan {
+        keys: Vec<i64>,
+        nparts: u32,
+        reply: mpsc::SyncSender<Result<Vec<i32>>>,
+    },
+    BlockSort {
+        keys: Vec<i64>,
+        payload: Vec<i32>,
+        reply: mpsc::SyncSender<Result<(Vec<i64>, Vec<i32>)>>,
+    },
+    Shutdown,
+}
+
+struct Shared {
+    tx: Mutex<mpsc::Sender<Request>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    pool: usize,
+}
+
+/// Cloneable handle to the kernel server pool.
+#[derive(Clone)]
+pub struct KernelService {
+    shared: Arc<Shared>,
+}
+
+impl KernelService {
+    /// Start `pool` server threads, each loading + compiling the artifacts
+    /// in `dir`. Fails fast if any server cannot load the artifacts.
+    pub fn start(dir: &Path, pool: usize) -> Result<KernelService> {
+        assert!(pool > 0);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(pool);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        for i in 0..pool {
+            let rx = rx.clone();
+            let dir = dir.to_path_buf();
+            let ready = ready_tx.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("kernel-server-{i}"))
+                .spawn(move || {
+                    let store = match ArtifactStore::load(&dir) {
+                        Ok(s) => {
+                            let _ = ready.send(Ok(()));
+                            s
+                        }
+                        Err(e) => {
+                            let _ = ready.send(Err(e));
+                            return;
+                        }
+                    };
+                    loop {
+                        let req = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match req {
+                            Ok(Request::ShufflePlan { keys, nparts, reply }) => {
+                                let _ = reply.send(store.shuffle_plan(&keys, nparts));
+                            }
+                            Ok(Request::BlockSort { keys, payload, reply }) => {
+                                let _ =
+                                    reply.send(store.block_sort(&keys, &payload));
+                            }
+                            Ok(Request::Shutdown) | Err(_) => break,
+                        }
+                    }
+                })
+                .expect("spawn kernel server");
+            workers.push(h);
+        }
+        drop(ready_tx);
+        for _ in 0..pool {
+            ready_rx
+                .recv()
+                .map_err(|_| Error::Runtime("kernel server died at startup".into()))??;
+        }
+        Ok(KernelService {
+            shared: Arc::new(Shared { tx: Mutex::new(tx), workers: Mutex::new(workers), pool }),
+        })
+    }
+
+    /// Start with the default artifact dir and a pool sized for the host.
+    pub fn start_default() -> Result<KernelService> {
+        let pool = std::thread::available_parallelism()
+            .map(|p| p.get().min(4))
+            .unwrap_or(2);
+        KernelService::start(&ArtifactStore::default_dir(), pool)
+    }
+
+    pub fn pool_size(&self) -> usize {
+        self.shared.pool
+    }
+
+    fn send(&self, req: Request) {
+        self.shared
+            .tx
+            .lock()
+            .unwrap()
+            .send(req)
+            .expect("kernel service send");
+    }
+
+    /// Partition ids via the PJRT `shuffle_plan` artifact.
+    pub fn shuffle_plan(&self, keys: Vec<i64>, nparts: u32) -> Result<Vec<i32>> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.send(Request::ShufflePlan { keys, nparts, reply });
+        rx.recv()
+            .map_err(|_| Error::Runtime("kernel server dropped request".into()))?
+    }
+
+    /// Block sort via the PJRT `block_sort` artifact.
+    pub fn block_sort(
+        &self,
+        keys: Vec<i64>,
+        payload: Vec<i32>,
+    ) -> Result<(Vec<i64>, Vec<i32>)> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.send(Request::BlockSort { keys, payload, reply });
+        rx.recv()
+            .map_err(|_| Error::Runtime("kernel server dropped request".into()))?
+    }
+
+    /// Stop the pool (joins all server threads). Subsequent calls error.
+    pub fn shutdown(&self) {
+        for _ in 0..self.shared.pool {
+            self.send(Request::Shutdown);
+        }
+        let mut workers = self.shared.workers.lock().unwrap();
+        for h in workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::hash::partition_ids;
+
+    fn service() -> Option<KernelService> {
+        let dir = ArtifactStore::default_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(KernelService::start(&dir, 2).unwrap())
+    }
+
+    #[test]
+    fn concurrent_requests_from_many_threads() {
+        let Some(svc) = service() else { return };
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let svc = svc.clone();
+            handles.push(std::thread::spawn(move || {
+                let keys: Vec<i64> = (0..500).map(|i| (i * 31 + t) as i64).collect();
+                let got = svc.shuffle_plan(keys.clone(), 7).unwrap();
+                assert_eq!(got, partition_ids(&keys, 7));
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn block_sort_via_service() {
+        let Some(svc) = service() else { return };
+        let keys = vec![3i64, 1, 2];
+        let (sk, sp) = svc.block_sort(keys, vec![0, 1, 2]).unwrap();
+        assert_eq!(sk, vec![1, 2, 3]);
+        assert_eq!(sp, vec![1, 2, 0]);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn startup_failure_is_reported() {
+        assert!(KernelService::start(Path::new("/no-such-dir"), 1).is_err());
+    }
+}

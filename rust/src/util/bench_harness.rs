@@ -1,0 +1,176 @@
+//! Micro/macro-bench harness — the offline substitute for `criterion`
+//! (unavailable in this environment; see DESIGN.md §2).
+//!
+//! Each `benches/*.rs` target (built with `harness = false`) uses
+//! [`BenchSet`] to run warmups + measured iterations and print
+//! paper-comparable rows. Times are wall-clock per iteration; the network
+//! cost model contributes *simulated* seconds which callers fold in
+//! explicitly (reported in separate columns so real vs modeled time stays
+//! auditable).
+
+use std::time::Instant;
+
+use super::stats::Stats;
+
+/// Iterations per bench configuration: `RC_BENCH_ITERS` env override, else
+/// `default`. The paper uses 10; benches default lower to keep `cargo
+/// bench` wall time reasonable on laptop-class hosts.
+pub fn bench_iters(default: usize) -> usize {
+    std::env::var("RC_BENCH_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// One measured configuration (e.g. "join WS p=16").
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    pub label: String,
+    /// Wall-clock stats per iteration, in seconds.
+    pub wall: Stats,
+    /// Optional modeled (virtual network) seconds per iteration.
+    pub simulated: Option<Stats>,
+    /// Optional paper-reported value for side-by-side display.
+    pub paper: Option<f64>,
+    /// Free-form extra columns (throughput, overhead, ...).
+    pub extra: Vec<(String, String)>,
+}
+
+/// Collects rows and renders a fixed-width table.
+#[derive(Default)]
+pub struct BenchSet {
+    pub title: String,
+    pub rows: Vec<BenchRow>,
+}
+
+impl BenchSet {
+    pub fn new(title: &str) -> Self {
+        BenchSet { title: title.to_string(), rows: Vec::new() }
+    }
+
+    /// Run `f` for `warmup` unmeasured + `iters` measured iterations and
+    /// record wall-clock stats. `f` returns an optional simulated-seconds
+    /// figure for the iteration.
+    pub fn bench<F: FnMut() -> Option<f64>>(
+        &mut self,
+        label: &str,
+        warmup: usize,
+        iters: usize,
+        mut f: F,
+    ) -> &mut BenchRow {
+        for _ in 0..warmup {
+            let _ = f();
+        }
+        let mut wall = Vec::with_capacity(iters);
+        let mut sim = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            let s = f();
+            wall.push(t0.elapsed().as_secs_f64());
+            if let Some(s) = s {
+                sim.push(s);
+            }
+        }
+        self.rows.push(BenchRow {
+            label: label.to_string(),
+            wall: Stats::from_samples(&wall),
+            simulated: if sim.is_empty() {
+                None
+            } else {
+                Some(Stats::from_samples(&sim))
+            },
+            paper: None,
+            extra: Vec::new(),
+        });
+        self.rows.last_mut().unwrap()
+    }
+
+    /// Render the table to stdout.
+    pub fn report(&self) {
+        println!("\n=== {} ===", self.title);
+        let mut header = vec![
+            "config".to_string(),
+            "wall mean±std (s)".to_string(),
+            "sim (s)".to_string(),
+            "paper (s)".to_string(),
+        ];
+        let extra_cols: Vec<String> = self
+            .rows
+            .iter()
+            .flat_map(|r| r.extra.iter().map(|(k, _)| k.clone()))
+            .fold(Vec::new(), |mut acc, k| {
+                if !acc.contains(&k) {
+                    acc.push(k);
+                }
+                acc
+            });
+        header.extend(extra_cols.iter().cloned());
+
+        let mut lines: Vec<Vec<String>> = vec![header];
+        for r in &self.rows {
+            let mut line = vec![
+                r.label.clone(),
+                r.wall.pm(),
+                r.simulated.map(|s| s.pm()).unwrap_or_else(|| "-".into()),
+                r.paper.map(|p| format!("{p:.2}")).unwrap_or_else(|| "-".into()),
+            ];
+            for col in &extra_cols {
+                line.push(
+                    r.extra
+                        .iter()
+                        .find(|(k, _)| k == col)
+                        .map(|(_, v)| v.clone())
+                        .unwrap_or_else(|| "-".into()),
+                );
+            }
+            lines.push(line);
+        }
+        let ncols = lines[0].len();
+        let widths: Vec<usize> = (0..ncols)
+            .map(|c| lines.iter().map(|l| l[c].len()).max().unwrap_or(0))
+            .collect();
+        for (i, line) in lines.iter().enumerate() {
+            let row: Vec<String> = line
+                .iter()
+                .zip(&widths)
+                .map(|(cell, w)| format!("{cell:<w$}"))
+                .collect();
+            println!("  {}", row.join("  "));
+            if i == 0 {
+                println!(
+                    "  {}",
+                    widths
+                        .iter()
+                        .map(|w| "-".repeat(*w))
+                        .collect::<Vec<_>>()
+                        .join("  ")
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_iterations() {
+        let mut set = BenchSet::new("t");
+        set.bench("noop", 1, 5, || Some(1.5));
+        assert_eq!(set.rows.len(), 1);
+        let r = &set.rows[0];
+        assert_eq!(r.wall.n, 5);
+        assert_eq!(r.simulated.unwrap().mean, 1.5);
+    }
+
+    #[test]
+    fn report_does_not_panic_with_mixed_columns() {
+        let mut set = BenchSet::new("t");
+        set.bench("a", 0, 1, || None);
+        let row = set.bench("b", 0, 1, || Some(2.0));
+        row.paper = Some(215.64);
+        row.extra.push(("ovh".into(), "2.9".into()));
+        set.report();
+    }
+}

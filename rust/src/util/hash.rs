@@ -1,0 +1,127 @@
+//! SplitMix64 avalanche hash — the row-key hash used by the distributed
+//! shuffle.
+//!
+//! **Contract:** bit-for-bit identical to the Pallas kernel in
+//! `python/compile/kernels/hash_partition.py`, so the native and PJRT
+//! partitioning paths are interchangeable (asserted by
+//! `runtime::tests::pjrt_matches_native` and the python golden test).
+
+const GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+const MIX1: u64 = 0xBF58_476D_1CE4_E5B9;
+const MIX2: u64 = 0x94D0_49BB_1331_11EB;
+
+/// SplitMix64 finalizer (wrapping arithmetic over the full 64-bit lane).
+#[inline(always)]
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(GAMMA);
+    z = (z ^ (z >> 30)).wrapping_mul(MIX1);
+    z = (z ^ (z >> 27)).wrapping_mul(MIX2);
+    z ^ (z >> 31)
+}
+
+/// Partition id for a signed row key: `splitmix64(key as u64) % nparts`.
+#[inline(always)]
+pub fn partition_of(key: i64, nparts: u32) -> u32 {
+    debug_assert!(nparts > 0);
+    (splitmix64(key as u64) % nparts as u64) as u32
+}
+
+/// Hash an entire key column into partition ids (the native twin of the
+/// `shuffle_plan` artifact).
+pub fn partition_ids(keys: &[i64], nparts: u32) -> Vec<i32> {
+    keys.iter().map(|&k| partition_of(k, nparts) as i32).collect()
+}
+
+/// SplitMix64-based `Hasher` for int64 join/groupby keys — ~3x faster than
+/// the default SipHash on the build/probe hot path (EXPERIMENTS.md §Perf)
+/// and adequate for trusted, in-process keys.
+#[derive(Default, Clone, Copy)]
+pub struct SplitMixHasher(u64);
+
+impl std::hash::Hasher for SplitMixHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        // Generic path (rarely hit for i64 keys).
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.0 = splitmix64(self.0 ^ u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_i64(&mut self, i: i64) {
+        self.0 = splitmix64(self.0 ^ i as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.0 = splitmix64(self.0 ^ i);
+    }
+}
+
+/// `BuildHasher` for [`SplitMixHasher`]; use with
+/// `HashMap::with_hasher(SplitMixBuild)`.
+#[derive(Default, Clone, Copy)]
+pub struct SplitMixBuild;
+
+impl std::hash::BuildHasher for SplitMixBuild {
+    type Hasher = SplitMixHasher;
+
+    fn build_hasher(&self) -> SplitMixHasher {
+        SplitMixHasher::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pinned against python/tests/test_hash_partition.py::test_splitmix64_golden.
+    #[test]
+    fn test_golden_matches_python() {
+        assert_eq!(splitmix64(0), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(splitmix64(1), 0x910A_2DEC_8902_5CC1);
+        assert_eq!(splitmix64(42), 0xBDD7_3226_2FEB_6E95);
+        assert_eq!(splitmix64(u64::MAX), 0xE4D9_7177_1B65_2C20);
+    }
+
+    #[test]
+    fn partition_in_range() {
+        for k in [-1_000_003_i64, -1, 0, 1, i64::MAX, i64::MIN] {
+            for p in [1u32, 2, 3, 37, 42, 518, 2688] {
+                assert!(partition_of(k, p) < p);
+            }
+        }
+    }
+
+    #[test]
+    fn partition_ids_matches_scalar() {
+        let keys: Vec<i64> = (-100..100).collect();
+        let ids = partition_ids(&keys, 37);
+        for (k, id) in keys.iter().zip(&ids) {
+            assert_eq!(*id, partition_of(*k, 37) as i32);
+        }
+    }
+
+    #[test]
+    fn avalanche_spreads_sequential_keys() {
+        // Sequential keys must not land on the same partition en masse.
+        let ids = partition_ids(&(0..3700).collect::<Vec<i64>>(), 37);
+        let mut counts = [0usize; 37];
+        for id in ids {
+            counts[id as usize] += 1;
+        }
+        let (min, max) = (
+            *counts.iter().min().unwrap(),
+            *counts.iter().max().unwrap(),
+        );
+        // Uniform expectation is 100 per bucket; allow generous slack.
+        assert!(min > 60 && max < 140, "min={min} max={max}");
+    }
+}

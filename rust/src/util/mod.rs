@@ -1,0 +1,13 @@
+//! Shared utilities: hashing, PRNG, statistics, the in-repo property-test
+//! runner, and the bench harness (offline substitutes for `rand`,
+//! `proptest`, and `criterion` — see DESIGN.md §2).
+
+pub mod bench_harness;
+pub mod hash;
+pub mod rng;
+pub mod stats;
+pub mod testkit;
+
+pub use hash::splitmix64;
+pub use rng::Rng;
+pub use stats::Stats;

@@ -1,0 +1,80 @@
+//! Sample statistics used throughout the metrics and bench layers.
+
+/// Summary statistics over a sample of f64 measurements.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    /// Sample standard deviation (Bessel-corrected); 0 for n < 2.
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    /// Compute stats over a non-empty sample.
+    pub fn from_samples(xs: &[f64]) -> Stats {
+        assert!(!xs.is_empty(), "Stats::from_samples on empty sample");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let (mut min, mut max) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &x in xs {
+            min = min.min(x);
+            max = max.max(x);
+        }
+        Stats { n, mean, std: var.sqrt(), min, max }
+    }
+
+    /// `mean ± std` rendering used by the report tables (paper Table 2 style).
+    pub fn pm(&self) -> String {
+        format!("{:.2} ± {:.2}", self.mean, self.std)
+    }
+
+    /// Do two measurements overlap within one standard deviation each?
+    /// (The paper's "overlapping error bars" criterion.)
+    pub fn overlaps(&self, other: &Stats) -> bool {
+        (self.mean - other.mean).abs() <= self.std + other.std
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let s = Stats::from_samples(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.std - 1.290_994_448_735_805_6).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn single_sample_has_zero_std() {
+        let s = Stats::from_samples(&[5.0]);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.mean, 5.0);
+    }
+
+    #[test]
+    fn overlap_criterion() {
+        let a = Stats::from_samples(&[10.0, 11.0, 12.0]);
+        let b = Stats::from_samples(&[11.5, 12.5, 13.5]);
+        assert!(a.overlaps(&b));
+        let c = Stats::from_samples(&[100.0, 100.1]);
+        assert!(!a.overlaps(&c));
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_panics() {
+        let _ = Stats::from_samples(&[]);
+    }
+}

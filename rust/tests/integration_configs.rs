@@ -1,0 +1,63 @@
+//! The shipped `configs/*.ini` files must parse and run end to end through
+//! the CLI path (the user-facing config-system contract).
+
+use radical_cylon::cli;
+use radical_cylon::config::{parse_ini, ExperimentConfig};
+
+fn repo_path(rel: &str) -> std::path::PathBuf {
+    // tests run from the crate dir (rust/); configs live at the repo root.
+    let here = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    here.parent().unwrap().join(rel)
+}
+
+#[test]
+fn all_shipped_configs_parse() {
+    let dir = repo_path("configs");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("ini") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = parse_ini(&text).unwrap_or_else(|e| panic!("{path:?}: {e}"));
+        let cfg = ExperimentConfig::from_ini(&doc)
+            .unwrap_or_else(|e| panic!("{path:?}: {e}"));
+        assert!(cfg.machine_spec().is_ok(), "{path:?}");
+        assert!(!cfg.parallelisms.is_empty(), "{path:?}");
+        seen += 1;
+    }
+    assert!(seen >= 4, "expected the shipped configs, found {seen}");
+}
+
+#[test]
+fn smoke_config_runs_through_cli() {
+    let cfg = repo_path("configs/local_smoke.ini");
+    let out = cli::dispatch(vec![
+        "run".into(),
+        "--config".into(),
+        cfg.to_str().unwrap().into(),
+        "--iterations".into(),
+        "2".into(),
+    ])
+    .unwrap();
+    assert!(out.contains("exec time"), "{out}");
+    assert!(out.contains("local"), "{out}");
+}
+
+#[test]
+fn hetero_config_runs_comparison() {
+    let cfg = repo_path("configs/summit_hetero.ini");
+    // Shrink via flags so the test stays fast.
+    let out = cli::dispatch(vec![
+        "run".into(),
+        "--config".into(),
+        cfg.to_str().unwrap().into(),
+        "--iterations".into(),
+        "1".into(),
+        "--parallelisms".into(),
+        "2".into(),
+    ])
+    .unwrap();
+    assert!(out.contains("improvement"), "{out}");
+}

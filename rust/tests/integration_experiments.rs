@@ -1,0 +1,97 @@
+//! Experiment-harness integration: tiny versions of every preset must run
+//! and reproduce the paper's *qualitative* shapes (the full-size versions
+//! live in `benches/`).
+
+use radical_cylon::config::{preset, preset_ids};
+use radical_cylon::exec::{run_hetero_vs_batch, run_scaling, EngineKind};
+use radical_cylon::ops::dist::KernelBackend;
+
+fn shrink(id: &str) -> radical_cylon::config::ExperimentConfig {
+    let mut c = preset(id).expect("preset");
+    c.parallelisms = vec![2, 4];
+    c.iterations = 2;
+    c.rows_per_rank = 2_000;
+    c.total_rows = 8_000;
+    c
+}
+
+#[test]
+fn every_single_op_preset_runs() {
+    for id in preset_ids() {
+        let c = match preset(id) {
+            Some(c) if c.op != "hetero" => shrink(id),
+            _ => continue,
+        };
+        let rows = run_scaling(&c, EngineKind::Heterogeneous, &KernelBackend::Native)
+            .unwrap_or_else(|e| panic!("{id}: {e}"));
+        assert_eq!(rows.len(), 2, "{id}");
+        for r in &rows {
+            assert!(r.total.mean > 0.0, "{id} p={}", r.parallelism);
+            assert!(r.output_rows > 0, "{id} p={}", r.parallelism);
+        }
+    }
+}
+
+#[test]
+fn strong_scaling_speeds_up() {
+    let mut c = shrink("fig5-strong");
+    c.total_rows = 60_000;
+    c.parallelisms = vec![2, 8];
+    let rows = run_scaling(&c, EngineKind::BareMetal, &KernelBackend::Native).unwrap();
+    assert!(
+        rows[1].total.mean < rows[0].total.mean,
+        "p=8 ({}) !< p=2 ({})",
+        rows[1].total.mean,
+        rows[0].total.mean
+    );
+}
+
+#[test]
+fn rp_overhead_small_relative_to_execution() {
+    // The paper's core overhead claim: RP adds marginal, roughly-constant
+    // overhead vs task execution time.
+    let mut c = shrink("table2-join-weak");
+    c.rows_per_rank = 10_000;
+    let rows =
+        run_scaling(&c, EngineKind::Heterogeneous, &KernelBackend::Native).unwrap();
+    for r in &rows {
+        assert!(
+            r.overhead.mean < 0.25 * r.total.mean,
+            "overhead {} not marginal vs exec {} at p={}",
+            r.overhead.mean,
+            r.total.mean,
+            r.parallelism
+        );
+    }
+}
+
+#[test]
+fn hetero_beats_batch_in_the_band() {
+    let mut c = shrink("fig10-weak");
+    c.rows_per_rank = 8_000;
+    let rows = run_hetero_vs_batch(&c, &KernelBackend::Native, 3).unwrap();
+    for r in &rows {
+        let pct = r.improvement_pct();
+        assert!(
+            pct > 0.0 && pct < 40.0,
+            "improvement {pct:.1}% out of plausible band at p={}",
+            r.parallelism
+        );
+    }
+}
+
+#[test]
+fn bm_and_rp_parity_at_small_scale() {
+    let c = shrink("fig7-weak");
+    let bm = run_scaling(&c, EngineKind::BareMetal, &KernelBackend::Native).unwrap();
+    let rp =
+        run_scaling(&c, EngineKind::Heterogeneous, &KernelBackend::Native).unwrap();
+    for (b, r) in bm.iter().zip(&rp) {
+        let ratio = r.total.mean / b.total.mean;
+        assert!(
+            (0.7..1.5).contains(&ratio),
+            "BM/RP divergence {ratio:.2} at p={}",
+            b.parallelism
+        );
+    }
+}

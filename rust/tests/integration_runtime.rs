@@ -1,0 +1,122 @@
+//! Three-layer integration: the distributed operators running with the
+//! PJRT kernel backend (AOT Pallas artifacts) must agree bit-for-bit with
+//! the native backend. Skips gracefully when `make artifacts` has not run.
+
+use radical_cylon::comm::{CommWorld, NetModel, ReduceOp};
+use radical_cylon::df::{gen_table, gen_two_tables, GenSpec};
+use radical_cylon::exec::{Engine, HeterogeneousEngine};
+use radical_cylon::ops::dist::{dist_hash_join, dist_sort, shuffle_by_key};
+use radical_cylon::ops::local::{is_sorted_by_key, JoinType};
+use radical_cylon::prelude::*;
+use radical_cylon::runtime::KernelService;
+
+fn service() -> Option<KernelService> {
+    let dir = ArtifactStore::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(KernelService::start(&dir, 2).unwrap())
+}
+
+#[test]
+fn pjrt_shuffle_matches_native() {
+    let Some(svc) = service() else { return };
+    let w = CommWorld::new(4, NetModel::disabled());
+    let svc2 = svc.clone();
+    let fps = w
+        .run(move |c| {
+            let t = gen_table(&GenSpec::uniform(2_000, 500, 77), c.rank());
+            let native =
+                shuffle_by_key(&c, &t, 0, &KernelBackend::Native).unwrap();
+            let pjrt =
+                shuffle_by_key(&c, &t, 0, &KernelBackend::Pjrt(svc2.clone()))
+                    .unwrap();
+            assert_eq!(
+                native.multiset_fingerprint(),
+                pjrt.multiset_fingerprint(),
+                "rank {} shuffle content differs",
+                c.rank()
+            );
+            assert_eq!(native.num_rows(), pjrt.num_rows());
+            native.multiset_fingerprint()
+        })
+        .unwrap();
+    assert_eq!(fps.len(), 4);
+    svc.shutdown();
+}
+
+#[test]
+fn pjrt_dist_sort_is_correct() {
+    let Some(svc) = service() else { return };
+    let w = CommWorld::new(3, NetModel::disabled());
+    let svc2 = svc.clone();
+    let rows = w
+        .run(move |c| {
+            let t = gen_table(&GenSpec::uniform(1_500, 10_000, 5), c.rank());
+            let before = c.allreduce_u64(t.multiset_fingerprint(), ReduceOp::Sum);
+            let s = dist_sort(&c, &t, 0, &KernelBackend::Pjrt(svc2.clone())).unwrap();
+            assert!(is_sorted_by_key(&s, 0).unwrap());
+            let after = c.allreduce_u64(s.multiset_fingerprint(), ReduceOp::Sum);
+            assert_eq!(before, after);
+            s.num_rows()
+        })
+        .unwrap();
+    assert_eq!(rows.iter().sum::<usize>(), 4_500);
+    svc.shutdown();
+}
+
+#[test]
+fn pjrt_dist_join_matches_native() {
+    let Some(svc) = service() else { return };
+    let w = CommWorld::new(2, NetModel::disabled());
+    let svc2 = svc.clone();
+    let counts = w
+        .run(move |c| {
+            let (l, r) = gen_two_tables(&GenSpec::uniform(800, 100, 21), c.rank());
+            let native = dist_hash_join(
+                &c, &l, &r, 0, 0, JoinType::Inner, &KernelBackend::Native,
+            )
+            .unwrap();
+            let pjrt = dist_hash_join(
+                &c, &l, &r, 0, 0,
+                JoinType::Inner,
+                &KernelBackend::Pjrt(svc2.clone()),
+            )
+            .unwrap();
+            assert_eq!(native.multiset_fingerprint(), pjrt.multiset_fingerprint());
+            pjrt.num_rows()
+        })
+        .unwrap();
+    assert!(counts.iter().sum::<usize>() > 0);
+    svc.shutdown();
+}
+
+#[test]
+fn full_stack_with_pjrt_backend() {
+    let Some(svc) = service() else { return };
+    // The entire pilot/RAPTOR stack with the AOT data plane.
+    let eng = HeterogeneousEngine::new(
+        MachineSpec::local(4),
+        KernelBackend::Pjrt(svc.clone()),
+        4,
+    );
+    let suite = eng
+        .run_suite(&[
+            TaskDescription::join("j", 4, 300, DataDist::Uniform),
+            TaskDescription::sort("s", 4, 300, DataDist::Uniform),
+        ])
+        .unwrap();
+    assert!(suite.per_task.iter().all(|r| r.is_done()));
+    // And the outputs equal the native stack's.
+    let native = HeterogeneousEngine::new(MachineSpec::local(4), KernelBackend::Native, 4)
+        .run_suite(&[
+            TaskDescription::join("j", 4, 300, DataDist::Uniform),
+            TaskDescription::sort("s", 4, 300, DataDist::Uniform),
+        ])
+        .unwrap();
+    for (p, n) in suite.per_task.iter().zip(&native.per_task) {
+        assert_eq!(p.output_rows, n.output_rows, "task {}", p.name);
+    }
+    svc.shutdown();
+}

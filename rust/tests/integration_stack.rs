@@ -1,0 +1,249 @@
+//! Cross-module integration: session -> pilot -> RAPTOR -> Cylon ops, the
+//! three engines over identical workloads, pipeline DAGs, and failure
+//! isolation — the paper's architecture exercised end to end.
+
+use radical_cylon::exec::{
+    BareMetalEngine, BatchEngine, Engine, HeterogeneousEngine,
+};
+use radical_cylon::pilot::CylonOp;
+use radical_cylon::pipeline::Pipeline;
+use radical_cylon::prelude::*;
+use radical_cylon::raptor::SchedPolicy;
+
+fn workload(ranks: usize) -> Vec<TaskDescription> {
+    vec![
+        TaskDescription::join("join", ranks, 400, DataDist::Uniform).with_seed(1),
+        TaskDescription::sort("sort", ranks, 400, DataDist::Uniform).with_seed(2),
+        TaskDescription::new("groupby", CylonOp::Groupby, ranks, 400).with_seed(3),
+    ]
+}
+
+/// All three engines must produce identical task *outputs* (same rows) for
+/// the same descriptions — they differ only in orchestration.
+#[test]
+fn engines_agree_on_task_outputs() {
+    let machine = MachineSpec::local(4);
+    let tasks = workload(4);
+    let bm = BareMetalEngine::new(machine.clone(), KernelBackend::Native)
+        .run_suite(&tasks)
+        .unwrap();
+    let batch = BatchEngine::new(machine.clone(), KernelBackend::Native)
+        .core_granular()
+        .run_suite(&tasks)
+        .unwrap();
+    let rp = HeterogeneousEngine::new(machine, KernelBackend::Native, 4)
+        .run_suite(&tasks)
+        .unwrap();
+    for ((b, q), r) in bm.per_task.iter().zip(&batch.per_task).zip(&rp.per_task) {
+        assert_eq!(b.output_rows, q.output_rows, "bm vs batch on {}", b.name);
+        assert_eq!(b.output_rows, r.output_rows, "bm vs rp on {}", b.name);
+        assert!(r.is_done());
+    }
+}
+
+/// Determinism: same seeds, same outputs, across repeated pilot runs.
+#[test]
+fn repeated_runs_are_deterministic() {
+    let machine = MachineSpec::local(4);
+    let run = || {
+        HeterogeneousEngine::new(machine.clone(), KernelBackend::Native, 4)
+            .run_suite(&workload(3))
+            .unwrap()
+            .per_task
+            .iter()
+            .map(|r| r.output_rows)
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(), run());
+}
+
+/// A wide mixed-width workload through one pilot: every task completes,
+/// no rank double-booking (asserted inside the master), with backfill.
+#[test]
+fn mixed_width_saturation() {
+    let session = Session::new("sat");
+    let pilot = session
+        .pilot_manager()
+        .submit_with(
+            PilotDescription::with_cores(MachineSpec::local(8), 8),
+            KernelBackend::Native,
+            SchedPolicy::Backfill,
+        )
+        .unwrap();
+    let tm = session.task_manager(&pilot);
+    let mut tds = Vec::new();
+    for i in 0..12 {
+        let ranks = [1usize, 2, 3, 5, 8][i % 5];
+        tds.push(
+            TaskDescription::sort(&format!("t{i}"), ranks, 200, DataDist::Uniform)
+                .with_seed(i as u64),
+        );
+    }
+    let handles = tm.submit_all(tds).unwrap();
+    let results = tm.wait_all(&handles).unwrap();
+    assert_eq!(results.len(), 12);
+    assert!(results.iter().all(|r| r.is_done()));
+    pilot.shutdown();
+}
+
+/// Paper §3.3 fault isolation: a failing task must not take down the
+/// pilot, concurrent tasks, or subsequent submissions.
+#[test]
+fn failure_isolation_across_many_tasks() {
+    let session = Session::new("faults");
+    let pilot = session
+        .pilot_manager()
+        .submit(PilotDescription::with_cores(MachineSpec::local(6), 6))
+        .unwrap();
+    let tm = session.task_manager(&pilot);
+    let mut handles = Vec::new();
+    for i in 0..9 {
+        let name = if i % 3 == 1 { format!("__fail__{i}") } else { format!("ok{i}") };
+        handles.push(
+            tm.submit(TaskDescription::sort(&name, 2, 100, DataDist::Uniform))
+                .unwrap(),
+        );
+    }
+    let results = tm.wait_all(&handles).unwrap();
+    let failed = results.iter().filter(|r| r.state == TaskState::Failed).count();
+    let done = results.iter().filter(|r| r.is_done()).count();
+    assert_eq!(failed, 3);
+    assert_eq!(done, 6);
+    // Pilot still healthy: submit more work after the failures.
+    let h = tm
+        .submit(TaskDescription::join("after", 4, 100, DataDist::Uniform))
+        .unwrap();
+    assert!(h.wait().unwrap().is_done());
+    pilot.shutdown();
+}
+
+/// ETL-style DAG across heterogeneous ops, verifying wave overlap.
+#[test]
+fn dag_pipeline_end_to_end() {
+    let session = Session::new("dag");
+    let pilot = session
+        .pilot_manager()
+        .submit(PilotDescription::with_cores(MachineSpec::local(6), 6))
+        .unwrap();
+    let tm = session.task_manager(&pilot);
+    let mut dag = Pipeline::new();
+    let a = dag.add(TaskDescription::sort("stage-a", 3, 150, DataDist::Uniform), &[]);
+    let b = dag.add(TaskDescription::sort("stage-b", 3, 150, DataDist::Uniform), &[]);
+    let j = dag.add(
+        TaskDescription::join("stage-join", 6, 150, DataDist::Uniform),
+        &[a, b],
+    );
+    let _g = dag.add(
+        TaskDescription::new("stage-agg", CylonOp::Groupby, 3, 150),
+        &[j],
+    );
+    let results = dag.execute(&tm).unwrap();
+    assert!(results.iter().all(|r| r.is_done()));
+    pilot.shutdown();
+}
+
+/// §4.4 multi-tenancy: higher-priority tasks jump the queue.
+#[test]
+fn priority_preempts_queue_order() {
+    let session = Session::new("prio");
+    let pilot = session
+        .pilot_manager()
+        .submit(PilotDescription::with_cores(MachineSpec::local(2), 2))
+        .unwrap();
+    let tm = session.task_manager(&pilot);
+    // Occupy the pilot, then queue a low-priority and a high-priority task.
+    let hold = tm
+        .submit(TaskDescription::sort("hold", 2, 30_000, DataDist::Uniform))
+        .unwrap();
+    let low = tm
+        .submit(TaskDescription::sort("low", 2, 100, DataDist::Uniform))
+        .unwrap();
+    let high = tm
+        .submit(
+            TaskDescription::sort("high", 2, 100, DataDist::Uniform)
+                .with_priority(10),
+        )
+        .unwrap();
+    let rh = high.wait().unwrap();
+    let rl = low.wait().unwrap();
+    let rhold = hold.wait().unwrap();
+    assert!(rh.is_done() && rl.is_done() && rhold.is_done());
+    // High must have been scheduled before low (both queued behind hold):
+    // verify via queue wait — high waited less than low (low also waits for
+    // high's execution, so the gap is strict).
+    assert!(
+        rh.measurement.overhead.queue_wait < rl.measurement.overhead.queue_wait,
+        "high prio waited {:.4}s, low waited {:.4}s",
+        rh.measurement.overhead.queue_wait,
+        rl.measurement.overhead.queue_wait
+    );
+    pilot.shutdown();
+}
+
+/// §4.4 CPU/GPU rank pools: tasks land on the requested class only.
+#[test]
+fn gpu_rank_pool_is_segregated() {
+    use radical_cylon::pilot::RankClass;
+    let session = Session::new("gpu");
+    let pd = PilotDescription::with_cores(MachineSpec::local(4), 4).with_gpus(2);
+    let pilot = session.pilot_manager().submit(pd).unwrap();
+    let tm = session.task_manager(&pilot);
+    // CPU task and GPU task run concurrently in their own pools.
+    let cpu = tm
+        .submit(TaskDescription::sort("cpu-task", 4, 200, DataDist::Uniform))
+        .unwrap();
+    let gpu = tm
+        .submit(
+            TaskDescription::sort("gpu-task", 2, 200, DataDist::Uniform)
+                .on(RankClass::Gpu),
+        )
+        .unwrap();
+    assert!(cpu.wait().unwrap().is_done());
+    assert!(gpu.wait().unwrap().is_done());
+    // Oversized GPU request is rejected against the GPU pool, not CPU.
+    assert!(tm
+        .submit(
+            TaskDescription::sort("too-big", 3, 10, DataDist::Uniform)
+                .on(RankClass::Gpu)
+        )
+        .is_err());
+    pilot.shutdown();
+}
+
+/// §4.4 resource tracking: busy rank-seconds accumulate with work.
+#[test]
+fn utilization_tracker_accumulates() {
+    let session = Session::new("util");
+    let pilot = session
+        .pilot_manager()
+        .submit(PilotDescription::with_cores(MachineSpec::local(4), 4))
+        .unwrap();
+    let tm = session.task_manager(&pilot);
+    let util = pilot.utilization();
+    assert_eq!(util.tasks_done(), 0);
+    let hs = tm
+        .submit_all(vec![
+            TaskDescription::sort("u1", 2, 2_000, DataDist::Uniform),
+            TaskDescription::sort("u2", 4, 2_000, DataDist::Uniform),
+        ])
+        .unwrap();
+    tm.wait_all(&hs).unwrap();
+    assert_eq!(util.tasks_done(), 2);
+    assert!(util.busy_rank_seconds() > 0.0);
+    pilot.shutdown();
+}
+
+/// Skewed data exercises the shuffle imbalance path through the full stack.
+#[test]
+fn skewed_workload_through_pilot() {
+    let machine = MachineSpec::local(4);
+    let mut td = TaskDescription::join("skewed", 4, 500, DataDist::Skewed {
+        exponent: 1.5,
+    });
+    td.key_space = 50;
+    let r = HeterogeneousEngine::new(machine, KernelBackend::Native, 4)
+        .run_task(&td)
+        .unwrap();
+    assert!(r.is_done());
+    assert!(r.output_rows > 0);
+}
