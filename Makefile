@@ -1,0 +1,21 @@
+# Convenience targets. The Rust crate is self-contained (`cd rust && cargo
+# build`); `artifacts` needs a JAX-capable python for the optional PJRT
+# data plane.
+
+.PHONY: artifacts build test check clean
+
+artifacts:
+	cd python && python -m compile.aot --out ../artifacts
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+check:
+	scripts/check.sh
+
+clean:
+	cd rust && cargo clean
+	rm -rf artifacts

@@ -4,7 +4,6 @@
 //! radical-cylon info [--experiments]
 //! radical-cylon run --experiment <id> [--engine bm|batch|rp] [--backend native|pjrt]
 //!                   [--iterations N] [--parallelisms 2,4,8] [--config file.ini]
-//! radical-cylon pipeline-demo [--ranks N]
 //! ```
 
 use crate::config::{parse_ini, preset, preset_ids, ExperimentConfig, SCALE_NOTE};

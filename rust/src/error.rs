@@ -1,46 +1,68 @@
-//! Crate-wide error type.
-
-use thiserror::Error;
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — the crate
+//! builds with zero dependencies offline; see DESIGN.md §2).
 
 /// Unified error for every subsystem (df, comm, pilot, runtime, ...).
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Schema/type mismatches and other dataframe misuse.
-    #[error("dataframe error: {0}")]
     DataFrame(String),
 
     /// Communicator misuse or a peer that went away.
-    #[error("communicator error: {0}")]
     Comm(String),
 
     /// Resource manager could not satisfy an allocation.
-    #[error("resource error: {0}")]
     Resource(String),
 
     /// Pilot/task lifecycle violations (illegal state transitions, ...).
-    #[error("pilot error: {0}")]
     Pilot(String),
 
     /// Task execution failed on a worker.
-    #[error("task failed: {0}")]
     TaskFailed(String),
 
     /// PJRT runtime / artifact problems.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Configuration parse/validation errors.
-    #[error("config error: {0}")]
     Config(String),
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Errors bubbling out of the `xla` crate.
-    #[error("xla error: {0}")]
     Xla(String),
 }
 
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::DataFrame(m) => write!(f, "dataframe error: {m}"),
+            Error::Comm(m) => write!(f, "communicator error: {m}"),
+            Error::Resource(m) => write!(f, "resource error: {m}"),
+            Error::Pilot(m) => write!(f, "pilot error: {m}"),
+            Error::TaskFailed(m) => write!(f, "task failed: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

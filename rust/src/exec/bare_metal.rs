@@ -7,7 +7,7 @@ use crate::error::{Error, Result};
 use crate::metrics::{ExecMeasurement, OverheadBreakdown};
 use crate::ops::dist::KernelBackend;
 use crate::pilot::{TaskDescription, TaskResult, TaskState};
-use crate::raptor::run_cylon_task;
+use crate::raptor::run_cylon_task_full;
 
 use super::{Engine, EngineKind, SuiteResult};
 
@@ -41,11 +41,12 @@ impl Engine for BareMetalEngine {
             let world = CommWorld::new(td.ranks, self.machine.netmodel());
             let td_owned = td.clone();
             let backend = self.backend.clone();
-            let stats = world
-                .run(move |c| run_cylon_task(&c, &td_owned, &backend))?
+            let outcome = world
+                .run(move |c| run_cylon_task_full(&c, &td_owned, &backend))?
                 .into_iter()
                 .next()
                 .ok_or_else(|| Error::TaskFailed("empty world".into()))??;
+            let stats = outcome.stats;
             rm.release(&alloc);
             let m = ExecMeasurement {
                 label: td.name.clone(),
@@ -62,6 +63,7 @@ impl Engine for BareMetalEngine {
                 state: TaskState::Done,
                 measurement: m,
                 output_rows: stats.output_rows,
+                output: outcome.output.map(std::sync::Arc::new),
                 error: None,
             });
         }

@@ -1,15 +1,46 @@
 //! Heterogeneous execution — Radical-Cylon proper (§4.3): one pilot, many
 //! Cylon tasks as RP tasks, private communicators, immediate rank reuse.
+//!
+//! "Immediate rank reuse" is delivered by two cooperating layers: the
+//! RAPTOR master recycles a retiring task's ranks into its queue the moment
+//! the completion report lands ([`crate::raptor`]), and the dataflow
+//! pipeline executor ([`crate::pipeline`]) feeds that queue the instant a
+//! DAG node's dependencies resolve — no wave barrier ever holds ready work
+//! back from freed ranks.
 
 use std::time::Instant;
 
 use crate::cluster::MachineSpec;
 use crate::error::Result;
+use crate::metrics::PipelineMetrics;
 use crate::ops::dist::KernelBackend;
-use crate::pilot::{PilotDescription, Session, TaskDescription};
-use crate::raptor::SchedPolicy;
+use crate::pilot::{PilotDescription, Session, TaskDescription, TaskResult};
+use crate::pipeline::Pipeline;
+use crate::raptor::{ReadyPolicy, SchedPolicy};
 
 use super::{Engine, EngineKind, SuiteResult};
+
+/// Outcome of driving a [`Pipeline`] through the heterogeneous engine.
+#[derive(Clone, Debug)]
+pub struct PipelineSuite {
+    /// Per-node results in node-id order.
+    pub per_task: Vec<TaskResult>,
+    /// Scheduler accounting (per-node timings, critical path, idle share).
+    pub metrics: PipelineMetrics,
+    /// End-to-end modeled seconds: pilot startup + real makespan +
+    /// resource-share-weighted simulated network seconds.
+    pub makespan_s: f64,
+    pub startup_s: f64,
+    /// Ranks the backing pilot held (for idle-fraction accounting).
+    pub pilot_ranks: usize,
+}
+
+impl PipelineSuite {
+    /// Idle fraction of the pilot over the DAG's makespan.
+    pub fn idle_fraction(&self) -> f64 {
+        self.metrics.idle_fraction(self.pilot_ranks)
+    }
+}
 
 /// One-pilot heterogeneous engine.
 ///
@@ -22,6 +53,7 @@ pub struct HeterogeneousEngine {
     backend: KernelBackend,
     pilot_ranks: usize,
     policy: SchedPolicy,
+    ready_policy: ReadyPolicy,
 }
 
 impl HeterogeneousEngine {
@@ -35,6 +67,7 @@ impl HeterogeneousEngine {
             backend,
             pilot_ranks,
             policy: SchedPolicy::Backfill,
+            ready_policy: ReadyPolicy::Fifo,
         }
     }
 
@@ -43,8 +76,69 @@ impl HeterogeneousEngine {
         self
     }
 
+    /// Ready-set ordering used by [`HeterogeneousEngine::run_pipeline`].
+    pub fn with_ready_policy(mut self, policy: ReadyPolicy) -> HeterogeneousEngine {
+        self.ready_policy = policy;
+        self
+    }
+
     pub fn pilot_ranks(&self) -> usize {
         self.pilot_ranks
+    }
+
+    /// Submit this engine's pilot into `session`.
+    fn submit_pilot(&self, session: &Session) -> Result<std::sync::Arc<crate::pilot::Pilot>> {
+        // Core-granular pilot sized to the workload; the pilot itself is
+        // still one RM job (exclusive whole-node on LSF machines).
+        let mut pd = PilotDescription::with_cores(self.machine.clone(), self.pilot_ranks);
+        pd.exclusive = self.machine.name == "summit";
+        session
+            .pilot_manager()
+            .submit_with(pd, self.backend.clone(), self.policy)
+    }
+
+    /// Resource-share-weighted simulated seconds (see struct docs).
+    fn sim_weighted(&self, per_task: &[TaskResult], pilot_cores: f64) -> f64 {
+        per_task
+            .iter()
+            .map(|r| {
+                r.measurement.sim_net_s * r.measurement.parallelism as f64
+                    / pilot_cores
+            })
+            .sum()
+    }
+
+    /// Drive a task DAG through one pilot with the event-driven dataflow
+    /// scheduler (§4.4's "independent branches ... executed parallelly").
+    pub fn run_pipeline(&self, dag: &Pipeline) -> Result<PipelineSuite> {
+        self.run_pipeline_inner(dag, true)
+    }
+
+    /// Same DAG through the wave-barrier baseline executor — kept so
+    /// `benches/pipeline_dataflow.rs` can measure what the barrier costs.
+    pub fn run_pipeline_waves(&self, dag: &Pipeline) -> Result<PipelineSuite> {
+        self.run_pipeline_inner(dag, false)
+    }
+
+    fn run_pipeline_inner(&self, dag: &Pipeline, dataflow: bool) -> Result<PipelineSuite> {
+        let session = Session::new("hetero-pipeline");
+        let pilot = self.submit_pilot(&session)?;
+        let startup = pilot.startup_latency();
+        let tm = session.task_manager(&pilot);
+        let run = if dataflow {
+            dag.run_dataflow(&tm, self.ready_policy)?
+        } else {
+            dag.run_waves(&tm)?
+        };
+        pilot.shutdown();
+        let sim = self.sim_weighted(&run.results, pilot.cores() as f64);
+        Ok(PipelineSuite {
+            makespan_s: startup + run.metrics.makespan_s + sim,
+            startup_s: startup,
+            pilot_ranks: self.pilot_ranks,
+            per_task: run.results,
+            metrics: run.metrics,
+        })
     }
 }
 
@@ -55,15 +149,7 @@ impl Engine for HeterogeneousEngine {
 
     fn run_suite(&self, tasks: &[TaskDescription]) -> Result<SuiteResult> {
         let session = Session::new("hetero-engine");
-        // Core-granular pilot sized to the workload; the pilot itself is
-        // still one RM job (exclusive whole-node on LSF machines).
-        let mut pd = PilotDescription::with_cores(self.machine.clone(), self.pilot_ranks);
-        pd.exclusive = self.machine.name == "summit";
-        let pilot = session.pilot_manager().submit_with(
-            pd,
-            self.backend.clone(),
-            self.policy,
-        )?;
+        let pilot = self.submit_pilot(&session)?;
         let startup = pilot.startup_latency();
 
         let tm = session.task_manager(&pilot);
@@ -73,15 +159,7 @@ impl Engine for HeterogeneousEngine {
         let suite_wall = t0.elapsed().as_secs_f64();
         pilot.shutdown();
 
-        // Resource-share-weighted simulated seconds (see struct docs).
-        let pilot_cores = pilot.cores() as f64;
-        let sim_weighted: f64 = per_task
-            .iter()
-            .map(|r| {
-                r.measurement.sim_net_s * r.measurement.parallelism as f64
-                    / pilot_cores
-            })
-            .sum();
+        let sim_weighted = self.sim_weighted(&per_task, pilot.cores() as f64);
         // Keep task ids aligned with submission order for reporting.
         for (i, r) in per_task.iter_mut().enumerate() {
             r.task_id = i as u64 + 1;
@@ -152,5 +230,32 @@ mod tests {
         ];
         let suite = eng.run_suite(&tds).unwrap();
         assert!(suite.per_task.iter().all(|r| r.is_done()));
+    }
+
+    #[test]
+    fn pipeline_through_engine() {
+        let eng = HeterogeneousEngine::new(
+            MachineSpec::local(4),
+            KernelBackend::Native,
+            4,
+        );
+        let mut dag = Pipeline::new();
+        let a = dag.add(TaskDescription::sort("a", 2, 100, DataDist::Uniform), &[]);
+        let b = dag.add(TaskDescription::sort("b", 2, 100, DataDist::Uniform), &[]);
+        let _c = dag.add(
+            TaskDescription::join("c", 4, 100, DataDist::Uniform),
+            &[a, b],
+        );
+        let suite = eng.run_pipeline(&dag).unwrap();
+        assert_eq!(suite.per_task.len(), 3);
+        assert!(suite.per_task.iter().all(|r| r.is_done()));
+        assert!(suite.makespan_s >= suite.metrics.makespan_s);
+        assert!((0.0..=1.0).contains(&suite.idle_fraction()));
+
+        // The wave baseline produces the same outputs on the same DAG.
+        let wave = eng.run_pipeline_waves(&dag).unwrap();
+        for (d, w) in suite.per_task.iter().zip(&wave.per_task) {
+            assert_eq!(d.output_rows, w.output_rows, "node {}", d.name);
+        }
     }
 }

@@ -12,6 +12,13 @@
 //! All engines consume the same [`TaskDescription`]s and produce
 //! [`SuiteResult`]s with a comparable makespan model: real compute wall
 //! time + simulated network seconds + modeled resource-manager latencies.
+//!
+//! Beyond flat task suites, the heterogeneous engine also drives task
+//! *DAGs*: [`HeterogeneousEngine::run_pipeline`] executes a
+//! [`crate::pipeline::Pipeline`] through the event-driven dataflow
+//! scheduler (and [`HeterogeneousEngine::run_pipeline_waves`] through the
+//! wave-barrier baseline), returning a [`PipelineSuite`] with per-node
+//! scheduling metrics.
 
 mod bare_metal;
 mod batch;
@@ -20,7 +27,7 @@ pub mod runner;
 
 pub use bare_metal::BareMetalEngine;
 pub use batch::BatchEngine;
-pub use hetero::HeterogeneousEngine;
+pub use hetero::{HeterogeneousEngine, PipelineSuite};
 pub use runner::{
     run_bm_vs_rp, run_hetero_vs_batch, run_scaling, HeteroVsBatch, SweepRow,
 };

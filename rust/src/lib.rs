@@ -35,6 +35,31 @@
 //! let result = tm.submit(td).unwrap().wait().unwrap();
 //! assert!(result.is_done());
 //! ```
+//!
+//! Task *DAGs* go through [`pipeline::Pipeline`]: build the graph with
+//! `add`/`add_piped` (the latter hands a stage's output table to its
+//! consumer) and execute it with the event-driven dataflow scheduler, which
+//! submits every node the moment its dependencies resolve:
+//!
+//! ```no_run
+//! use radical_cylon::prelude::*;
+//!
+//! let session = Session::new("dag");
+//! let pilot = session
+//!     .pilot_manager()
+//!     .submit(PilotDescription::new(MachineSpec::local(4), 1))
+//!     .unwrap();
+//! let tm = session.task_manager(&pilot);
+//! let mut dag = Pipeline::new();
+//! let gen = dag.add(TaskDescription::sort("gen", 2, 1_000, DataDist::Uniform), &[]);
+//! let _agg = dag.add_piped(
+//!     TaskDescription::new("agg", radical_cylon::pilot::CylonOp::Groupby, 2, 0),
+//!     &[gen],
+//!     gen,
+//! );
+//! let results = dag.execute(&tm).unwrap();
+//! assert!(results.iter().all(|r| r.is_done()));
+//! ```
 
 pub mod cli;
 pub mod cluster;
@@ -61,11 +86,14 @@ pub mod prelude {
     pub use crate::error::{Error, Result};
     pub use crate::exec::{
         BareMetalEngine, BatchEngine, Engine, EngineKind, HeterogeneousEngine,
+        PipelineSuite,
     };
-    pub use crate::metrics::{OverheadBreakdown, Stats};
+    pub use crate::metrics::{OverheadBreakdown, PipelineMetrics, Stats};
     pub use crate::ops::dist::KernelBackend;
     pub use crate::pilot::{
         DataDist, PilotDescription, Session, TaskDescription, TaskState,
     };
+    pub use crate::pipeline::{Pipeline, PipelineRun};
+    pub use crate::raptor::{ReadyPolicy, SchedPolicy};
     pub use crate::runtime::ArtifactStore;
 }

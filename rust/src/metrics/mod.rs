@@ -67,6 +67,57 @@ impl ExecMeasurement {
     }
 }
 
+/// Per-node record from a pipeline DAG execution (all times are seconds
+/// relative to the pipeline's start).
+#[derive(Clone, Debug)]
+pub struct NodeMetric {
+    pub name: String,
+    /// Ranks the node's private communicator spanned.
+    pub ranks: usize,
+    /// When the executor submitted the node (dependencies resolved).
+    pub submitted_s: f64,
+    /// When the node's terminal result arrived back.
+    pub finished_s: f64,
+    /// Real compute wall seconds (max across the node's ranks).
+    pub wall_s: f64,
+    /// Modeled execution seconds (wall + simulated network).
+    pub exec_s: f64,
+    /// Seconds the node sat in the master's queue behind other tasks.
+    pub queue_wait_s: f64,
+}
+
+/// Whole-DAG accounting from a pipeline execution — the observability half
+/// of the dataflow scheduler (§4.4 "resource tracking").
+#[derive(Clone, Debug, Default)]
+pub struct PipelineMetrics {
+    pub nodes: Vec<NodeMetric>,
+    /// Real seconds from first submission to last completion.
+    pub makespan_s: f64,
+    /// Longest dependency chain weighted by measured wall seconds — the
+    /// lower bound no scheduler can beat on this DAG.
+    pub critical_path_s: f64,
+    /// Σ ranks × wall over all nodes: rank-seconds actually computing.
+    pub busy_rank_seconds: f64,
+}
+
+impl PipelineMetrics {
+    /// Fraction of a `pilot_ranks`-wide pilot that sat idle over the
+    /// makespan — the waste wave barriers create and dataflow reclaims.
+    pub fn idle_fraction(&self, pilot_ranks: usize) -> f64 {
+        let capacity = pilot_ranks as f64 * self.makespan_s;
+        if capacity <= 0.0 {
+            return 0.0;
+        }
+        ((capacity - self.busy_rank_seconds) / capacity).clamp(0.0, 1.0)
+    }
+
+    /// Seconds the schedule spent beyond the critical path (scheduling
+    /// slack; 0 means the DAG ran as fast as its longest chain allows).
+    pub fn slack_s(&self) -> f64 {
+        (self.makespan_s - self.critical_path_s).max(0.0)
+    }
+}
+
 /// Accumulates repeated iterations of the same configuration.
 #[derive(Clone, Debug, Default)]
 pub struct MeasurementSeries {
@@ -164,6 +215,20 @@ mod tests {
         }
         assert!((s.total_stats().mean - 3.0).abs() < 1e-12);
         assert_eq!(s.overhead_stats().mean, 0.0);
+    }
+
+    #[test]
+    fn pipeline_metrics_accounting() {
+        let m = PipelineMetrics {
+            nodes: Vec::new(),
+            makespan_s: 10.0,
+            critical_path_s: 6.0,
+            busy_rank_seconds: 20.0,
+        };
+        // 4 ranks x 10s = 40 rank-seconds capacity, 20 busy -> 50% idle.
+        assert!((m.idle_fraction(4) - 0.5).abs() < 1e-12);
+        assert!((m.slack_s() - 4.0).abs() < 1e-12);
+        assert_eq!(PipelineMetrics::default().idle_fraction(8), 0.0);
     }
 
     #[test]

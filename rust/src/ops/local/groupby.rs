@@ -16,7 +16,8 @@ pub enum AggFn {
 }
 
 impl AggFn {
-    fn name(&self) -> &'static str {
+    /// Column-suffix name of the aggregation (`sum`, `count`, ...).
+    pub fn name(&self) -> &'static str {
         match self {
             AggFn::Sum => "sum",
             AggFn::Count => "count",

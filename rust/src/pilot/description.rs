@@ -3,7 +3,10 @@
 //! as a RadicalPilot.TaskDescription class with their resource
 //! requirements").
 
+use std::sync::Arc;
+
 use crate::cluster::MachineSpec;
+use crate::df::Table;
 
 /// Key distribution of the generated workload (re-exported df type).
 pub use crate::df::KeyDist as DataDist;
@@ -114,6 +117,16 @@ pub struct TaskDescription {
     pub priority: i32,
     /// Which rank pool the private communicator is carved from.
     pub rank_class: RankClass,
+    /// Staged input table (pipeline table handoff): when set, the task's
+    /// ranks consume contiguous row chunks of this table instead of
+    /// generating synthetic data from the spec above. For joins, the staged
+    /// table is the *left* side; the right side is still generated.
+    pub input: Option<Arc<Table>>,
+    /// Collect the task's output table (gathered to group rank 0 and
+    /// carried in [`super::TaskResult::output`]) — the producer side of the
+    /// pipeline handoff. Off by default: gathering costs one extra
+    /// collective per task.
+    pub keep_output: bool,
 }
 
 impl TaskDescription {
@@ -128,7 +141,23 @@ impl TaskDescription {
             seed: 0xC71,
             priority: 0,
             rank_class: RankClass::Cpu,
+            input: None,
+            keep_output: false,
         }
+    }
+
+    /// Stage an input table: ranks consume contiguous chunks of it instead
+    /// of generating synthetic data (pipeline table handoff).
+    pub fn with_input(mut self, table: Arc<Table>) -> Self {
+        self.input = Some(table);
+        self
+    }
+
+    /// Request the output table be gathered and returned in the
+    /// [`super::TaskResult`].
+    pub fn collect_output(mut self) -> Self {
+        self.keep_output = true;
+        self
     }
 
     /// Scheduling priority (higher first).

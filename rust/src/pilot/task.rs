@@ -2,6 +2,7 @@
 
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::df::Table;
 use crate::error::{Error, Result};
 use crate::metrics::ExecMeasurement;
 
@@ -50,6 +51,10 @@ pub struct TaskResult {
     pub measurement: ExecMeasurement,
     /// Rows in the task's output table(s), summed over ranks.
     pub output_rows: u64,
+    /// The gathered output table, present only when the description set
+    /// `keep_output` (pipeline table handoff). `Arc` keeps clones of the
+    /// result cheap as it fans out to downstream consumers.
+    pub output: Option<Arc<Table>>,
     pub error: Option<String>,
 }
 
@@ -157,6 +162,7 @@ mod tests {
                 overhead: OverheadBreakdown::default(),
             },
             output_rows: 0,
+            output: None,
             error: None,
         }
     }

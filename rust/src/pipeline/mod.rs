@@ -3,20 +3,55 @@
 //! can further be improved by identifying independent branches ... and
 //! executing such independent tasks parallelly.").
 //!
-//! A [`Pipeline`] is a DAG of [`TaskDescription`]s; `execute` submits it in
-//! topological waves to a pilot's TaskManager, so independent branches run
-//! concurrently on disjoint private communicators.
+//! A [`Pipeline`] is a DAG of [`TaskDescription`]s. Two executors ship:
+//!
+//! * **Dataflow** ([`Pipeline::run_dataflow`], the default behind
+//!   [`Pipeline::execute`]) — an event-driven, dependency-counting
+//!   scheduler. Every node is submitted to the pilot's TaskManager the
+//!   moment its in-degree drops to zero, so an independent ready branch
+//!   never waits on an unrelated slow task, and ranks freed by one node are
+//!   reused by the next immediately. Ready-set ordering is pluggable via
+//!   [`ReadyPolicy`] (FIFO vs critical-path-first).
+//! * **Waves** ([`Pipeline::run_waves`]) — the original topological-wave
+//!   executor, kept as the comparison baseline: every wave is a barrier, so
+//!   a slow task in wave *k* stalls ready tasks in wave *k+1*
+//!   (`benches/pipeline_dataflow.rs` measures the gap).
+//!
+//! **Table handoff:** a node added with [`Pipeline::add_piped`] consumes the
+//! gathered output table of an upstream node instead of regenerating
+//! synthetic data — the executor marks the producer with `keep_output`,
+//! threads the resulting [`Arc<Table>`](crate::df::Table) into the
+//! consumer's [`TaskDescription::input`], and the consumer's ranks each take
+//! a contiguous chunk.
+//!
+//! Both executors fill a [`PipelineMetrics`] with per-node timings,
+//! critical-path, and rank-idle accounting.
 
-use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
 
+use crate::df::Table;
 use crate::error::{Error, Result};
+use crate::metrics::{NodeMetric, PipelineMetrics};
 use crate::pilot::{TaskDescription, TaskManager, TaskResult};
+use crate::raptor::ReadyPolicy;
 
 /// A node in the pipeline DAG.
 #[derive(Clone, Debug)]
 struct Node {
     td: TaskDescription,
     deps: Vec<usize>,
+    /// Dependency whose gathered output table becomes this node's input.
+    pipe_from: Option<usize>,
+}
+
+/// Results plus scheduling metrics from one pipeline execution.
+#[derive(Clone, Debug)]
+pub struct PipelineRun {
+    /// Per-node results in node-id order.
+    pub results: Vec<TaskResult>,
+    pub metrics: PipelineMetrics,
 }
 
 /// DAG of Cylon tasks with explicit dependencies.
@@ -33,7 +68,25 @@ impl Pipeline {
     /// Add a task depending on previously-added node ids; returns its id.
     pub fn add(&mut self, td: TaskDescription, deps: &[usize]) -> usize {
         let id = self.nodes.len();
-        self.nodes.push(Node { td, deps: deps.to_vec() });
+        self.nodes.push(Node { td, deps: deps.to_vec(), pipe_from: None });
+        id
+    }
+
+    /// Add a task that consumes the output table of dependency `from`
+    /// (table handoff). `from` must be listed in `deps`; violations are
+    /// reported by [`Pipeline::validate`].
+    pub fn add_piped(
+        &mut self,
+        td: TaskDescription,
+        deps: &[usize],
+        from: usize,
+    ) -> usize {
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            td,
+            deps: deps.to_vec(),
+            pipe_from: Some(from),
+        });
         id
     }
 
@@ -45,14 +98,24 @@ impl Pipeline {
         self.nodes.is_empty()
     }
 
-    /// Validate: deps reference earlier nodes only (DAG by construction,
-    /// since `add` can only reference existing ids — forward refs rejected).
+    /// Validate: deps reference earlier nodes only (DAG by construction —
+    /// forward refs and self-cycles are impossible to express, so rejecting
+    /// them here rejects every cycle), and pipe sources are dependencies.
     pub fn validate(&self) -> Result<()> {
         for (i, n) in self.nodes.iter().enumerate() {
             for &d in &n.deps {
                 if d >= i {
                     return Err(Error::Pilot(format!(
                         "node {i} ('{}') depends on {d}, which is not an earlier node",
+                        n.td.name
+                    )));
+                }
+            }
+            if let Some(src) = n.pipe_from {
+                if !n.deps.contains(&src) {
+                    return Err(Error::Pilot(format!(
+                        "node {i} ('{}') pipes from {src}, which is not one of its \
+                         dependencies",
                         n.td.name
                     )));
                 }
@@ -84,35 +147,301 @@ impl Pipeline {
         Ok(waves)
     }
 
-    /// Execute the DAG through a TaskManager, wave by wave. Within a wave,
-    /// tasks are all submitted before any is awaited (the RAPTOR master
-    /// overlaps them on disjoint rank groups). A failed task fails the
-    /// pipeline after its wave completes.
+    /// Execute the DAG (dataflow scheduler, FIFO ready order) and return
+    /// the per-node results. See [`Pipeline::run_dataflow`] for metrics.
     pub fn execute(&self, tm: &TaskManager) -> Result<Vec<TaskResult>> {
+        self.run_dataflow(tm, ReadyPolicy::Fifo).map(|run| run.results)
+    }
+
+    /// Execute wave-by-wave (the barrier baseline) and return the results.
+    pub fn execute_waves(&self, tm: &TaskManager) -> Result<Vec<TaskResult>> {
+        self.run_waves(tm).map(|run| run.results)
+    }
+
+    /// Nodes that must keep (gather) their output for downstream pipes.
+    fn keep_flags(&self) -> Vec<bool> {
+        let mut keep: Vec<bool> = self.nodes.iter().map(|n| n.td.keep_output).collect();
+        for n in &self.nodes {
+            if let Some(src) = n.pipe_from {
+                keep[src] = true;
+            }
+        }
+        keep
+    }
+
+    /// Per-node longest-remaining-chain estimate (critical-path priority).
+    /// Duration is estimated as per-rank rows — the per-rank work each
+    /// node's BSP kernels process. A piped node that declares no synthetic
+    /// workload (`rows_per_rank == 0`) inherits its producer's total rows
+    /// spread over its own ranks, since that staged table *is* its input.
+    fn chain_estimates(&self) -> Vec<f64> {
+        let mut est: Vec<f64> = Vec::with_capacity(self.nodes.len());
+        for n in &self.nodes {
+            let e = if n.td.rows_per_rank == 0 {
+                match n.pipe_from {
+                    // Producers precede consumers, so est[src] is settled.
+                    Some(src) => {
+                        let src_ranks = self.nodes[src].td.ranks.max(1) as f64;
+                        est[src] * src_ranks / n.td.ranks.max(1) as f64
+                    }
+                    None => 1.0,
+                }
+            } else {
+                n.td.rows_per_rank as f64
+            };
+            est.push(e.max(1.0));
+        }
+        let mut cp = est.clone();
+        // Dependents always carry larger ids, so one reverse sweep settles
+        // every chain before it is consumed.
+        for j in (0..self.nodes.len()).rev() {
+            for &d in &self.nodes[j].deps {
+                cp[d] = cp[d].max(est[d] + cp[j]);
+            }
+        }
+        cp
+    }
+
+    /// Clone node `i`'s description, wiring handoff input and output
+    /// collection for this execution.
+    fn prepared_td(
+        &self,
+        i: usize,
+        keep: &[bool],
+        outputs: &[Option<Arc<Table>>],
+    ) -> TaskDescription {
+        let mut td = self.nodes[i].td.clone();
+        if keep[i] {
+            td.keep_output = true;
+        }
+        if let Some(src) = self.nodes[i].pipe_from {
+            td.input = outputs[src].clone();
+        }
+        td
+    }
+
+    fn metrics_from(
+        &self,
+        results: &[TaskResult],
+        submitted_s: &[f64],
+        finished_s: &[f64],
+        makespan_s: f64,
+    ) -> PipelineMetrics {
+        let nodes: Vec<NodeMetric> = results
+            .iter()
+            .enumerate()
+            .map(|(i, r)| NodeMetric {
+                name: r.name.clone(),
+                ranks: r.measurement.parallelism,
+                submitted_s: submitted_s[i],
+                finished_s: finished_s[i],
+                wall_s: r.measurement.wall_s,
+                exec_s: r.measurement.total_s(),
+                queue_wait_s: r.measurement.overhead.queue_wait,
+            })
+            .collect();
+        // Longest wall-weighted dependency chain (deps precede, so one
+        // forward sweep suffices).
+        let mut chain = vec![0.0f64; results.len()];
+        let mut critical = 0.0f64;
+        for (i, r) in results.iter().enumerate() {
+            let upstream = self.nodes[i]
+                .deps
+                .iter()
+                .map(|&d| chain[d])
+                .fold(0.0f64, f64::max);
+            chain[i] = upstream + r.measurement.wall_s;
+            critical = critical.max(chain[i]);
+        }
+        let busy: f64 = results
+            .iter()
+            .map(|r| r.measurement.parallelism as f64 * r.measurement.wall_s)
+            .sum();
+        PipelineMetrics {
+            nodes,
+            makespan_s,
+            critical_path_s: critical,
+            busy_rank_seconds: busy,
+        }
+    }
+
+    /// Event-driven dataflow execution: dependency counting + a completion
+    /// channel. Each node is submitted the instant its last dependency
+    /// finishes; the RAPTOR master overlaps whatever fits on free ranks and
+    /// recycles ranks as nodes retire. A failed node fails the pipeline
+    /// after in-flight nodes drain (fail-fast: nothing new is submitted).
+    pub fn run_dataflow(
+        &self,
+        tm: &TaskManager,
+        policy: ReadyPolicy,
+    ) -> Result<PipelineRun> {
+        self.validate()?;
+        let n = self.nodes.len();
+        if n == 0 {
+            return Ok(PipelineRun {
+                results: Vec::new(),
+                metrics: PipelineMetrics::default(),
+            });
+        }
+        let keep = self.keep_flags();
+        let cp = self.chain_estimates();
+        let mut indeg: Vec<usize> = self.nodes.iter().map(|x| x.deps.len()).collect();
+        let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, node) in self.nodes.iter().enumerate() {
+            for &d in &node.deps {
+                dependents[d].push(i);
+            }
+        }
+
+        let t0 = Instant::now();
+        let (tx, rx) = mpsc::channel::<(usize, Result<TaskResult>)>();
+        let mut results: Vec<Option<TaskResult>> = (0..n).map(|_| None).collect();
+        let mut outputs: Vec<Option<Arc<Table>>> = (0..n).map(|_| None).collect();
+        let mut submitted_s = vec![0.0f64; n];
+        let mut finished_s = vec![0.0f64; n];
+        let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut inflight = 0usize;
+        let mut failure: Option<String> = None;
+
+        loop {
+            if failure.is_none() {
+                match policy {
+                    ReadyPolicy::Fifo => ready.sort_unstable(),
+                    ReadyPolicy::CriticalPathFirst => ready.sort_by(|&a, &b| {
+                        cp[b]
+                            .partial_cmp(&cp[a])
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                            .then(a.cmp(&b))
+                    }),
+                }
+                for i in std::mem::take(&mut ready) {
+                    let td = self.prepared_td(i, &keep, &outputs);
+                    submitted_s[i] = t0.elapsed().as_secs_f64();
+                    match tm.submit(td) {
+                        Ok(handle) => {
+                            let tx = tx.clone();
+                            std::thread::spawn(move || {
+                                let _ = tx.send((i, handle.wait()));
+                            });
+                            inflight += 1;
+                        }
+                        Err(e) => {
+                            failure = Some(format!(
+                                "pipeline node {i} ('{}') rejected at submission: {e}",
+                                self.nodes[i].td.name
+                            ));
+                            break;
+                        }
+                    }
+                }
+            }
+            if inflight == 0 {
+                break;
+            }
+            let (i, res) = rx.recv().expect("completion waiter alive");
+            inflight -= 1;
+            finished_s[i] = t0.elapsed().as_secs_f64();
+            match res {
+                Ok(r) => {
+                    if r.is_done() {
+                        outputs[i] = r.output.clone();
+                        for &j in &dependents[i] {
+                            indeg[j] -= 1;
+                            if indeg[j] == 0 {
+                                ready.push(j);
+                            }
+                        }
+                    } else if failure.is_none() {
+                        failure = Some(format!(
+                            "pipeline node {i} ('{}') failed: {}",
+                            r.name,
+                            r.error.clone().unwrap_or_default()
+                        ));
+                    }
+                    results[i] = Some(r);
+                }
+                Err(e) => {
+                    if failure.is_none() {
+                        failure =
+                            Some(format!("pipeline node {i} lost its result: {e}"));
+                    }
+                }
+            }
+        }
+        if let Some(msg) = failure {
+            return Err(Error::TaskFailed(msg));
+        }
+        let results: Vec<TaskResult> =
+            results.into_iter().map(|r| r.expect("node executed")).collect();
+        let makespan = t0.elapsed().as_secs_f64();
+        let metrics = self.metrics_from(&results, &submitted_s, &finished_s, makespan);
+        Ok(PipelineRun { results, metrics })
+    }
+
+    /// Wave-barrier execution (baseline): within a wave, tasks are all
+    /// submitted before any is awaited; the next wave starts only when the
+    /// whole wave has drained. Supports the same table handoff (a pipe
+    /// source always sits in an earlier wave than its consumer).
+    pub fn run_waves(&self, tm: &TaskManager) -> Result<PipelineRun> {
         let waves = self.waves()?;
-        let mut results: Vec<Option<TaskResult>> = vec![None; self.nodes.len()];
+        let n = self.nodes.len();
+        let keep = self.keep_flags();
+        let t0 = Instant::now();
+        let mut results: Vec<Option<TaskResult>> = (0..n).map(|_| None).collect();
+        let mut outputs: Vec<Option<Arc<Table>>> = (0..n).map(|_| None).collect();
+        let mut submitted_s = vec![0.0f64; n];
+        let mut finished_s = vec![0.0f64; n];
         for wave in waves {
-            let mut handles = VecDeque::new();
+            // Waiter threads + a completion channel so finished_s reflects
+            // each node's actual completion, not the serial wait order.
+            let (tx, rx) = mpsc::channel::<(usize, Result<TaskResult>)>();
+            let mut inflight = 0usize;
             for &i in &wave {
-                handles.push_back((i, tm.submit(self.nodes[i].td.clone())?));
+                let td = self.prepared_td(i, &keep, &outputs);
+                submitted_s[i] = t0.elapsed().as_secs_f64();
+                let handle = tm.submit(td)?;
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    let _ = tx.send((i, handle.wait()));
+                });
+                inflight += 1;
             }
             let mut failure: Option<String> = None;
-            for (i, h) in handles {
-                let r = h.wait()?;
-                if !r.is_done() && failure.is_none() {
-                    failure = Some(format!(
-                        "pipeline node {i} ('{}') failed: {}",
-                        r.name,
-                        r.error.clone().unwrap_or_default()
-                    ));
+            while inflight > 0 {
+                let (i, res) = rx.recv().expect("completion waiter alive");
+                inflight -= 1;
+                finished_s[i] = t0.elapsed().as_secs_f64();
+                match res {
+                    Ok(r) => {
+                        if r.is_done() {
+                            outputs[i] = r.output.clone();
+                        } else if failure.is_none() {
+                            failure = Some(format!(
+                                "pipeline node {i} ('{}') failed: {}",
+                                r.name,
+                                r.error.clone().unwrap_or_default()
+                            ));
+                        }
+                        results[i] = Some(r);
+                    }
+                    Err(e) => {
+                        if failure.is_none() {
+                            failure = Some(format!(
+                                "pipeline node {i} lost its result: {e}"
+                            ));
+                        }
+                    }
                 }
-                results[i] = Some(r);
             }
             if let Some(msg) = failure {
                 return Err(Error::TaskFailed(msg));
             }
         }
-        Ok(results.into_iter().map(|r| r.unwrap()).collect())
+        let results: Vec<TaskResult> =
+            results.into_iter().map(|r| r.expect("node executed")).collect();
+        let makespan = t0.elapsed().as_secs_f64();
+        let metrics = self.metrics_from(&results, &submitted_s, &finished_s, makespan);
+        Ok(PipelineRun { results, metrics })
     }
 }
 
@@ -120,10 +449,22 @@ impl Pipeline {
 mod tests {
     use super::*;
     use crate::cluster::MachineSpec;
-    use crate::pilot::{CylonOp, DataDist, PilotDescription, Session};
+    use crate::df::gen_table;
+    use crate::df::GenSpec;
+    use crate::ops::local::groupby_agg;
+    use crate::pilot::{CylonOp, DataDist, Pilot, PilotDescription, Session};
 
     fn td(name: &str, ranks: usize) -> TaskDescription {
         TaskDescription::sort(name, ranks, 40, DataDist::Uniform)
+    }
+
+    fn pilot_of(cores: usize, name: &str) -> (Session, Arc<Pilot>) {
+        let session = Session::new(name);
+        let pilot = session
+            .pilot_manager()
+            .submit(PilotDescription::with_cores(MachineSpec::local(cores), cores))
+            .unwrap();
+        (session, pilot)
     }
 
     #[test]
@@ -143,6 +484,16 @@ mod tests {
         let mut p = Pipeline::new();
         let _a = p.add(td("a", 1), &[3]); // nonexistent / forward
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn pipe_from_non_dependency_rejected() {
+        let mut p = Pipeline::new();
+        let a = p.add(td("a", 1), &[]);
+        let b = p.add(td("b", 1), &[]);
+        let _c = p.add_piped(td("c", 1), &[b], a); // pipes from a non-dep
+        let err = p.validate().unwrap_err().to_string();
+        assert!(err.contains("not one of its dependencies"), "{err}");
     }
 
     #[test]
@@ -183,6 +534,169 @@ mod tests {
         let _b = p.add(td("never", 2), &[a]);
         let err = p.execute(&tm).unwrap_err().to_string();
         assert!(err.contains("__fail__x"), "{err}");
+        pilot.shutdown();
+    }
+
+    #[test]
+    fn failed_node_fails_wave_pipeline() {
+        let (_s, pilot) = pilot_of(2, "pipe-waves");
+        let tm = _s.task_manager(&pilot);
+        let mut p = Pipeline::new();
+        let a = p.add(td("__fail__w", 2), &[]);
+        let _b = p.add(td("never", 2), &[a]);
+        let err = p.execute_waves(&tm).unwrap_err().to_string();
+        assert!(err.contains("__fail__w"), "{err}");
+        pilot.shutdown();
+    }
+
+    /// The acceptance property of the dataflow scheduler: an independent
+    /// ready branch is submitted while an unrelated slow task from an
+    /// earlier "wave" is still running. The wave executor, by contrast,
+    /// cannot submit it before the slow task completes.
+    #[test]
+    fn independent_branch_submits_before_slow_task_completes() {
+        let build = || {
+            let mut p = Pipeline::new();
+            // slow: large per-rank workload; fast chain is tiny.
+            let _slow = p.add(
+                TaskDescription::sort("slow", 2, 200_000, DataDist::Uniform),
+                &[],
+            );
+            let fast = p.add(td("fast", 2), &[]);
+            let _child = p.add(td("child-of-fast", 2), &[fast]);
+            p
+        };
+        const SLOW: usize = 0;
+        const CHILD: usize = 2;
+
+        let (s1, pilot1) = pilot_of(4, "dataflow");
+        let run = build().run_dataflow(&s1.task_manager(&pilot1), ReadyPolicy::Fifo).unwrap();
+        pilot1.shutdown();
+        assert!(run.results.iter().all(|r| r.is_done()));
+        let m = &run.metrics;
+        assert!(
+            m.nodes[CHILD].submitted_s < m.nodes[SLOW].finished_s,
+            "dataflow must submit the ready child (at {:.4}s) before the \
+             unrelated slow task finishes (at {:.4}s)",
+            m.nodes[CHILD].submitted_s,
+            m.nodes[SLOW].finished_s
+        );
+
+        let (s2, pilot2) = pilot_of(4, "waves");
+        let wrun = build().run_waves(&s2.task_manager(&pilot2)).unwrap();
+        pilot2.shutdown();
+        let wm = &wrun.metrics;
+        assert!(
+            wm.nodes[CHILD].submitted_s >= wm.nodes[SLOW].finished_s,
+            "the wave barrier must hold the child until the slow task is done"
+        );
+    }
+
+    #[test]
+    fn critical_path_first_orders_ready_set() {
+        // Two roots: a short chain head and a long chain head. Under
+        // CriticalPathFirst the long head must reach the master first.
+        let mut p = Pipeline::new();
+        let short = p.add(td("short", 1), &[]);
+        let long_head = p.add(td("long-head", 1), &[]);
+        let mid = p.add(
+            TaskDescription::sort("long-mid", 1, 20_000, DataDist::Uniform),
+            &[long_head],
+        );
+        let _tail = p.add(
+            TaskDescription::sort("long-tail", 1, 20_000, DataDist::Uniform),
+            &[mid],
+        );
+        let cp = p.chain_estimates();
+        assert!(cp[long_head] > cp[short]);
+
+        // A 1-rank pilot serializes everything, making submission order
+        // observable through completion order.
+        let (s, pilot) = pilot_of(1, "cpf");
+        let run = p
+            .run_dataflow(&s.task_manager(&pilot), ReadyPolicy::CriticalPathFirst)
+            .unwrap();
+        pilot.shutdown();
+        let m = &run.metrics;
+        assert!(
+            m.nodes[long_head].finished_s < m.nodes[short].finished_s,
+            "critical-path head must run before the short root"
+        );
+    }
+
+    #[test]
+    fn table_handoff_propagates_schema_and_rows() {
+        let (s, pilot) = pilot_of(4, "handoff");
+        let tm = s.task_manager(&pilot);
+        let mut p = Pipeline::new();
+        let gen = p.add(
+            TaskDescription::sort("gen", 2, 100, DataDist::Uniform).with_seed(0xC71),
+            &[],
+        );
+        let agg = p.add_piped(
+            TaskDescription::new("agg", CylonOp::Groupby, 2, 9999).collect_output(),
+            &[gen],
+            gen,
+        );
+        let run = p.run_dataflow(&tm, ReadyPolicy::Fifo).unwrap();
+        pilot.shutdown();
+        let out = run.results[agg]
+            .output
+            .as_ref()
+            .expect("collect_output() carries the table");
+
+        // Oracle: the groupby must have consumed gen's actual output (the
+        // sorted synthetic partitions), not fresh 9999-row synthetic data.
+        let spec = GenSpec {
+            rows: 100,
+            key_space: (100i64 * 2).max(16),
+            dist: DataDist::Uniform,
+            seed: 0xC71,
+        };
+        let all = Table::concat(&[gen_table(&spec, 0), gen_table(&spec, 1)]).unwrap();
+        let oracle = groupby_agg(&all, 0, 1, crate::ops::local::AggFn::Sum).unwrap();
+
+        assert_eq!(out.num_rows(), oracle.num_rows());
+        assert_eq!(out.schema().field(0).name, "key");
+        assert_eq!(out.schema().field(1).name, "val_sum");
+        // Exact key-set equality (keys are integers; float sums may round
+        // differently across partial-aggregation orders).
+        let mut got: Vec<i64> = out.column(0).as_i64().unwrap().to_vec();
+        let mut want: Vec<i64> = oracle.column(0).as_i64().unwrap().to_vec();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want);
+        assert_eq!(run.results[agg].output_rows, oracle.num_rows() as u64);
+    }
+
+    #[test]
+    fn metrics_account_for_every_node() {
+        let (s, pilot) = pilot_of(4, "metrics");
+        let tm = s.task_manager(&pilot);
+        let mut p = Pipeline::new();
+        let a = p.add(td("a", 2), &[]);
+        let b = p.add(td("b", 2), &[]);
+        let _c = p.add(td("c", 4), &[a, b]);
+        let run = p.run_dataflow(&tm, ReadyPolicy::Fifo).unwrap();
+        pilot.shutdown();
+        let m = &run.metrics;
+        assert_eq!(m.nodes.len(), 3);
+        assert!(m.makespan_s > 0.0);
+        assert!(m.critical_path_s > 0.0);
+        assert!(m.busy_rank_seconds > 0.0);
+        let idle = m.idle_fraction(4);
+        assert!((0.0..=1.0).contains(&idle));
+        for node in &m.nodes {
+            assert!(node.finished_s >= node.submitted_s, "{}", node.name);
+        }
+    }
+
+    #[test]
+    fn empty_pipeline_is_a_noop() {
+        let (s, pilot) = pilot_of(1, "empty");
+        let tm = s.task_manager(&pilot);
+        let p = Pipeline::new();
+        assert!(p.execute(&tm).unwrap().is_empty());
         pilot.shutdown();
     }
 }

@@ -11,7 +11,7 @@ use crate::comm::{CommWorld, Communicator, ReduceOp};
 use crate::ops::dist::KernelBackend;
 use crate::pilot::RankClass;
 
-use super::cylon_task::run_cylon_task;
+use super::cylon_task::run_cylon_task_full;
 use super::master::{Master, MasterMsg, RankReport, Utilization, WorkerCtl};
 
 /// Master scheduling policy (ablation: DESIGN.md §4).
@@ -22,6 +22,20 @@ pub enum SchedPolicy {
     /// Skip over tasks that do not fit — maximizes rank reuse (the
     /// heterogeneous-execution advantage of §4.3).
     Backfill,
+}
+
+/// Ready-set ordering for the dataflow pipeline executor
+/// ([`crate::pipeline::Pipeline::run_dataflow`]): when several DAG nodes
+/// become runnable at once, which reaches the master's queue first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ReadyPolicy {
+    /// Node-id order (submission order of the DAG builder).
+    #[default]
+    Fifo,
+    /// Longest remaining work chain first (critical-path-first): under
+    /// skewed task durations this keeps the long pole moving and lets short
+    /// side branches backfill around it.
+    CriticalPathFirst,
 }
 
 /// Handle on a bootstrapped agent: submit via [`Agent::master_tx`], then
@@ -150,6 +164,7 @@ fn worker_loop(
                             task_id: order.task_id,
                             stats: Default::default(),
                             comm_construction_s: 0.0,
+                            output: None,
                             error: Some(format!("subgroup construction: {e}")),
                         }));
                         continue;
@@ -159,23 +174,25 @@ fn worker_loop(
                 let construct_max = sub.allreduce_f64(construct, ReduceOp::Max);
 
                 // --- execute the Cylon task on the private communicator ---
-                let outcome = run_cylon_task(&sub, &order.td, &order.backend);
+                let outcome = run_cylon_task_full(&sub, &order.td, &order.backend);
 
                 // All ranks rendezvous before the group dissolves so ctx
                 // release cannot race a straggler's last collective.
                 sub.barrier();
                 if sub.rank() == 0 {
                     let report = match outcome {
-                        Ok(stats) => RankReport {
+                        Ok(o) => RankReport {
                             task_id: order.task_id,
-                            stats,
+                            stats: o.stats,
                             comm_construction_s: construct_max,
+                            output: o.output,
                             error: None,
                         },
                         Err(e) => RankReport {
                             task_id: order.task_id,
                             stats: Default::default(),
                             comm_construction_s: construct_max,
+                            output: None,
                             error: Some(e.to_string()),
                         },
                     };

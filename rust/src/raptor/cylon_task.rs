@@ -3,10 +3,13 @@
 //! communication on the same framework).
 
 use crate::comm::{Communicator, ReduceOp};
-use crate::df::{gen_table, gen_two_tables, GenSpec};
+use crate::df::{gen_table, gen_two_tables, GenSpec, Table};
 use crate::error::{Error, Result};
 use crate::metrics::Timer;
-use crate::ops::dist::{dist_groupby, dist_hash_join, dist_sort, KernelBackend};
+use crate::ops::dist::{
+    dist_groupby, dist_hash_join, dist_sort, gather_table, partition_slice,
+    KernelBackend,
+};
 use crate::ops::local::{AggFn, JoinType};
 use crate::pilot::{CylonOp, TaskDescription};
 
@@ -21,17 +24,29 @@ pub struct RankStats {
     pub output_rows: u64,
 }
 
+/// Stats plus the gathered output table (group rank 0 only, and only when
+/// the description requested `keep_output`).
+#[derive(Clone, Debug, Default)]
+pub struct TaskOutcome {
+    pub stats: RankStats,
+    pub output: Option<Table>,
+}
+
 /// Run `td`'s operation on this rank of the private communicator and
-/// aggregate the task-level stats (every rank returns the same values).
+/// aggregate the task-level stats (every rank returns the same stats).
+///
+/// Input resolution (pipeline table handoff): when `td.input` is staged,
+/// each rank consumes a contiguous chunk of the staged table instead of
+/// generating synthetic data — for joins the staged table is the left side.
 ///
 /// Failure injection (`name` starting with `__fail__`) errors *before* any
 /// collective so all ranks fail symmetrically — the fault-isolation tests
 /// rely on this.
-pub fn run_cylon_task(
+pub fn run_cylon_task_full(
     comm: &Communicator,
     td: &TaskDescription,
     backend: &KernelBackend,
-) -> Result<RankStats> {
+) -> Result<TaskOutcome> {
     if td.name.starts_with("__fail__") {
         return Err(Error::TaskFailed(format!(
             "injected failure in task '{}'",
@@ -45,23 +60,35 @@ pub fn run_cylon_task(
         dist: td.dist,
         seed: td.seed,
     };
+    let staged: Option<Table> = td
+        .input
+        .as_ref()
+        .map(|t| partition_slice(t, comm.rank(), comm.size()));
     let timer = Timer::start();
-    let out_rows = match td.op {
+    let out = match td.op {
         CylonOp::Join => {
-            let (l, r) = gen_two_tables(&spec, comm.rank());
-            let j = dist_hash_join(comm, &l, &r, 0, 0, JoinType::Inner, backend)?;
-            j.num_rows() as u64
+            let (l, r) = match staged {
+                Some(l) => (l, gen_table(&spec, comm.rank())),
+                None => gen_two_tables(&spec, comm.rank()),
+            };
+            dist_hash_join(comm, &l, &r, 0, 0, JoinType::Inner, backend)?
         }
         CylonOp::Sort => {
-            let t = gen_table(&spec, comm.rank());
-            let s = dist_sort(comm, &t, 0, backend)?;
-            s.num_rows() as u64
+            let t = staged.unwrap_or_else(|| gen_table(&spec, comm.rank()));
+            dist_sort(comm, &t, 0, backend)?
         }
         CylonOp::Groupby => {
-            let t = gen_table(&spec, comm.rank());
-            let g = dist_groupby(comm, &t, 0, 1, AggFn::Sum, backend)?;
-            g.num_rows() as u64
+            let t = staged.unwrap_or_else(|| gen_table(&spec, comm.rank()));
+            dist_groupby(comm, &t, 0, 1, AggFn::Sum, backend)?
         }
+    };
+    // The handoff gather is part of the task's measured execution (it holds
+    // the ranks), so it runs inside the timer window.
+    let out_rows = out.num_rows() as u64;
+    let output = if td.keep_output {
+        gather_table(comm, out)? // collective; Some at group rank 0 only
+    } else {
+        None
     };
     let wall = timer.elapsed_s();
     let sim = comm.sim_clock();
@@ -70,14 +97,32 @@ pub fn run_cylon_task(
     let wall_max = comm.allreduce_f64(wall, ReduceOp::Max);
     let sim_max = comm.allreduce_f64(sim, ReduceOp::Max);
     let rows_total = comm.allreduce_u64(out_rows, ReduceOp::Sum);
-    Ok(RankStats { wall_s: wall_max, sim_net_s: sim_max, output_rows: rows_total })
+    Ok(TaskOutcome {
+        stats: RankStats {
+            wall_s: wall_max,
+            sim_net_s: sim_max,
+            output_rows: rows_total,
+        },
+        output,
+    })
+}
+
+/// Stats-only variant (the engines' common path).
+pub fn run_cylon_task(
+    comm: &Communicator,
+    td: &TaskDescription,
+    backend: &KernelBackend,
+) -> Result<RankStats> {
+    run_cylon_task_full(comm, td, backend).map(|o| o.stats)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::comm::{CommWorld, NetModel};
+    use crate::df::{Column, DataType, Schema};
     use crate::pilot::DataDist;
+    use std::sync::Arc;
 
     fn run(td: TaskDescription, p: usize) -> Vec<Result<RankStats>> {
         let w = CommWorld::new(p, NetModel::disabled());
@@ -121,5 +166,44 @@ mod tests {
         for r in out {
             assert!(r.is_err());
         }
+    }
+
+    #[test]
+    fn staged_input_replaces_generation() {
+        // A 6-row staged table sorted across 2 ranks: output rows must equal
+        // the staged rows, not the description's synthetic 500/rank.
+        let staged = Arc::new(
+            Table::new(
+                Schema::of(&[("key", DataType::Int64), ("val", DataType::Float64)]),
+                vec![
+                    Column::Int64(vec![5, 3, 9, 1, 7, 2]),
+                    Column::Float64(vec![0.0; 6]),
+                ],
+            )
+            .unwrap(),
+        );
+        let td = TaskDescription::sort("staged", 2, 500, DataDist::Uniform)
+            .with_input(staged)
+            .collect_output();
+        let w = CommWorld::new(2, NetModel::disabled());
+        let out = w
+            .run(move |c| run_cylon_task_full(&c, &td, &KernelBackend::Native))
+            .unwrap();
+        let o0 = out[0].as_ref().unwrap();
+        assert_eq!(o0.stats.output_rows, 6);
+        let table = o0.output.as_ref().expect("rank 0 gathers the output");
+        assert_eq!(table.column(0).as_i64().unwrap(), &[1, 2, 3, 5, 7, 9]);
+        // Non-root ranks do not carry the gathered table.
+        assert!(out[1].as_ref().unwrap().output.is_none());
+    }
+
+    #[test]
+    fn output_not_collected_by_default() {
+        let td = TaskDescription::sort("plain", 2, 40, DataDist::Uniform);
+        let w = CommWorld::new(2, NetModel::disabled());
+        let out = w
+            .run(move |c| run_cylon_task_full(&c, &td, &KernelBackend::Native))
+            .unwrap();
+        assert!(out.iter().all(|o| o.as_ref().unwrap().output.is_none()));
     }
 }

@@ -63,6 +63,9 @@ pub struct RankReport {
     /// Private-communicator construction seconds (real rendezvous + modeled
     /// barrier), max across the group.
     pub comm_construction_s: f64,
+    /// Gathered output table when the description requested `keep_output`
+    /// (pipeline table handoff).
+    pub output: Option<crate::df::Table>,
     pub error: Option<String>,
 }
 
@@ -274,6 +277,7 @@ impl Master {
                 overhead,
             },
             output_rows: report.stats.output_rows,
+            output: report.output.map(Arc::new),
             error,
         });
         self.schedule();

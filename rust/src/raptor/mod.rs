@@ -8,11 +8,21 @@
 //!   work orders, collects results, and recycles freed ranks — the paper's
 //!   key heterogeneity mechanism ("when any worker completes their task,
 //!   the released resources become available to others", §4.3).
+//!
+//! Two scheduling knobs live here:
+//!
+//! * [`SchedPolicy`] — how the *master* drains its queue (strict FIFO vs
+//!   backfill over tasks that do not currently fit).
+//! * [`ReadyPolicy`] — how the *dataflow pipeline executor*
+//!   ([`crate::pipeline`]) orders DAG nodes whose dependencies just
+//!   resolved before handing them to the master.
+//!
+//! [`Communicator`]: crate::comm::Communicator
 
 mod agent;
 mod cylon_task;
 mod master;
 
-pub use agent::{Agent, SchedPolicy};
-pub use cylon_task::run_cylon_task;
+pub use agent::{Agent, ReadyPolicy, SchedPolicy};
+pub use cylon_task::{run_cylon_task, run_cylon_task_full, RankStats, TaskOutcome};
 pub use master::{MasterMsg, RankReport, Utilization, WorkOrder};

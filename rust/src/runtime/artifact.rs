@@ -7,6 +7,11 @@
 //! Interchange format is HLO **text** (never serialized protos): jax ≥ 0.5
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md and aot.py).
+//!
+//! The `xla` dependency is optional (`pjrt` cargo feature). Without it the
+//! manifest/metadata handling still works, but [`ArtifactStore::load`]
+//! reports that the PJRT data plane is unavailable — the native kernel path
+//! ([`crate::util::hash::partition_ids`], local sort) is always present.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -59,15 +64,21 @@ pub fn read_manifest(dir: &Path) -> Result<Vec<ArtifactMeta>> {
 
 /// Thread-bound store of compiled kernel executables.
 pub struct ArtifactStore {
+    #[cfg(feature = "pjrt")]
     #[allow(dead_code)]
     client: xla::PjRtClient,
+    #[cfg(feature = "pjrt")]
     exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    #[cfg(not(feature = "pjrt"))]
+    #[allow(dead_code)]
+    exes: HashMap<String, ()>,
     pub metas: Vec<ArtifactMeta>,
     pub dir: PathBuf,
 }
 
 impl ArtifactStore {
     /// Load + compile every artifact in `dir` on a fresh CPU PJRT client.
+    #[cfg(feature = "pjrt")]
     pub fn load(dir: &Path) -> Result<ArtifactStore> {
         let metas = read_manifest(dir)?;
         let client = xla::PjRtClient::cpu()?;
@@ -82,6 +93,19 @@ impl ArtifactStore {
         Ok(ArtifactStore { client, exes, metas, dir: dir.to_path_buf() })
     }
 
+    /// Without the `pjrt` feature the artifacts cannot be compiled; loading
+    /// fails with a descriptive error (the manifest check comes first so the
+    /// "run `make artifacts`" guidance still fires on missing files).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(dir: &Path) -> Result<ArtifactStore> {
+        let _metas = read_manifest(dir)?;
+        Err(Error::Runtime(
+            "PJRT data plane unavailable: built without the `pjrt` cargo \
+             feature (rebuild with `--features pjrt`)"
+                .into(),
+        ))
+    }
+
     /// Default artifact directory: `$RC_ARTIFACTS` or `./artifacts`.
     pub fn default_dir() -> PathBuf {
         std::env::var("RC_ARTIFACTS")
@@ -89,6 +113,7 @@ impl ArtifactStore {
             .unwrap_or_else(|_| PathBuf::from("artifacts"))
     }
 
+    #[cfg(feature = "pjrt")]
     fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
         self.exes
             .get(name)
@@ -97,6 +122,7 @@ impl ArtifactStore {
 
     /// Run the `shuffle_plan` artifact over one padded block of exactly
     /// [`HASH_BLOCK`] keys; returns the partition ids.
+    #[cfg(feature = "pjrt")]
     fn shuffle_plan_block(&self, keys: &[i64], nparts: u32) -> Result<Vec<i32>> {
         debug_assert_eq!(keys.len(), HASH_BLOCK);
         let exe = self.exe("shuffle_plan")?;
@@ -109,6 +135,7 @@ impl ArtifactStore {
 
     /// Partition ids for arbitrarily many keys (pads the tail block; the
     /// PJRT twin of `util::hash::partition_ids`).
+    #[cfg(feature = "pjrt")]
     pub fn shuffle_plan(&self, keys: &[i64], nparts: u32) -> Result<Vec<i32>> {
         if nparts == 0 {
             return Err(Error::Runtime("shuffle_plan with nparts=0".into()));
@@ -128,8 +155,14 @@ impl ArtifactStore {
         Ok(out)
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn shuffle_plan(&self, _keys: &[i64], _nparts: u32) -> Result<Vec<i32>> {
+        Err(Error::Runtime("built without the `pjrt` feature".into()))
+    }
+
     /// Run the `block_sort` artifact on exactly [`SORT_BLOCK`] (key,
     /// payload) lanes; returns (sorted keys, permuted payload).
+    #[cfg(feature = "pjrt")]
     fn block_sort_exact(
         &self,
         keys: &[i64],
@@ -146,6 +179,7 @@ impl ArtifactStore {
 
     /// Sort up to [`SORT_BLOCK`] keys (padding with `i64::MAX`, truncating
     /// after); payload carries caller row indices.
+    #[cfg(feature = "pjrt")]
     pub fn block_sort(
         &self,
         keys: &[i64],
@@ -183,13 +217,24 @@ impl ArtifactStore {
         debug_assert_eq!(out_k.len(), n);
         Ok((out_k, out_p))
     }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn block_sort(
+        &self,
+        _keys: &[i64],
+        _payload: &[i32],
+    ) -> Result<(Vec<i64>, Vec<i32>)> {
+        Err(Error::Runtime("built without the `pjrt` feature".into()))
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    #[cfg(feature = "pjrt")]
     use crate::util::hash::partition_ids;
 
+    #[cfg(feature = "pjrt")]
     fn store() -> Option<ArtifactStore> {
         let dir = ArtifactStore::default_dir();
         if !dir.join("manifest.txt").exists() {
@@ -199,6 +244,7 @@ mod tests {
         Some(ArtifactStore::load(&dir).expect("artifact store loads"))
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn manifest_has_both_kernels() {
         let Some(s) = store() else { return };
@@ -207,6 +253,7 @@ mod tests {
         assert!(names.contains(&"block_sort"));
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn pjrt_matches_native_hash() {
         let Some(s) = store() else { return };
@@ -221,6 +268,7 @@ mod tests {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn shuffle_plan_pads_tail() {
         let Some(s) = store() else { return };
@@ -230,6 +278,7 @@ mod tests {
         assert_eq!(pjrt.len(), 100);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn block_sort_sorts() {
         let Some(s) = store() else { return };
@@ -245,6 +294,7 @@ mod tests {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn block_sort_partial_block() {
         let Some(s) = store() else { return };
@@ -255,6 +305,7 @@ mod tests {
         assert_eq!(sp, vec![1, 3, 0, 2]);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn block_sort_rejects_oversize() {
         let Some(s) = store() else { return };
@@ -270,5 +321,22 @@ mod tests {
             .unwrap()
             .to_string();
         assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn manifest_parses_well_formed_lines() {
+        let dir = std::env::temp_dir().join("rc-manifest-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "shuffle_plan\tshuffle.hlo\ti64[16384],u32[1]\ti32[16384]\n\n",
+        )
+        .unwrap();
+        let metas = read_manifest(&dir).unwrap();
+        assert_eq!(metas.len(), 1);
+        assert_eq!(metas[0].name, "shuffle_plan");
+        std::fs::write(dir.join("manifest.txt"), "only-two\tfields\n").unwrap();
+        assert!(read_manifest(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Lint/doc/test gate — run from anywhere; fails fast on the first problem.
+#
+#   scripts/check.sh          # fmt + clippy + rustdoc + tests
+#   scripts/check.sh --quick  # skip the test suite
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "==> cargo fmt --check"
+cargo fmt --check
+
+echo "==> cargo clippy (warnings are errors)"
+cargo clippy --all-targets -- -D warnings
+
+echo "==> cargo doc --no-deps (warnings are errors)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+if [[ "${1:-}" != "--quick" ]]; then
+  echo "==> cargo test -q"
+  cargo test -q
+fi
+
+echo "check.sh: all green"
