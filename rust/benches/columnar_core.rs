@@ -1,0 +1,185 @@
+//! Zero-copy columnar core vs the deep-copy baseline, at 1M+ rows.
+//!
+//! Three measurements, each reporting wall time *and* bytes materialized
+//! per iteration (the copy counter the `df` layer maintains):
+//!
+//! * **slice** — `Table::slice` O(1) views vs an equivalent deep gather
+//!   (`take` of the same contiguous index range).
+//! * **shuffle** — `shuffle_by_key_chunked` (receives stay chunked) vs the
+//!   eager shuffle-and-concat a deep-copy table layer forces.
+//! * **handoff** — gather-to-root + per-rank `partition_slice` windows vs
+//!   flatten-at-root + per-rank deep copies (the PR-1 pipeline handoff).
+//!
+//! Acceptance (asserted below): the view paths materialize **strictly
+//! fewer** bytes than their deep-copy twins, and `Table::slice` plus
+//! per-rank chunking of a staged table materialize **zero** bytes.
+//!
+//! Run with `cargo bench --bench columnar_core` (RC_BENCH_ITERS to raise
+//! samples, RC_BENCH_JSON=<path> to archive the numbers).
+
+use radical_cylon::comm::{CommWorld, NetModel};
+use radical_cylon::df::{gen_table, ChunkedTable, GenSpec, Table};
+use radical_cylon::metrics::mem;
+use radical_cylon::ops::dist::{
+    gather_table_chunked, partition_slice, shuffle_by_key, shuffle_by_key_chunked,
+    KernelBackend,
+};
+use radical_cylon::util::bench_harness::{bench_iters, BenchSet};
+
+const RANKS: usize = 4;
+const ROWS_PER_RANK: usize = 250_000; // 1M rows across the world
+
+fn world() -> CommWorld {
+    CommWorld::new(RANKS, NetModel::disabled())
+}
+
+fn spec() -> GenSpec {
+    GenSpec::uniform(ROWS_PER_RANK, 50_000, 0xC0FE)
+}
+
+/// Measure `f`'s process-wide materialized-bytes delta once.
+fn materialized_by(f: impl FnOnce()) -> u64 {
+    let before = mem::global();
+    f();
+    mem::global().since(before).materialized
+}
+
+fn main() {
+    let iters = bench_iters(3);
+    let mut set = BenchSet::new(
+        "zero-copy columnar core vs deep-copy baseline (1M rows, p=4)",
+    );
+
+    // -- slice: O(1) window vs deep gather of the same range ------------
+    let big = gen_table(&spec(), 0);
+    let n = big.num_rows();
+    set.bench_mem("slice/view", 1, iters, || {
+        for i in 0..RANKS {
+            let start = i * n / RANKS;
+            let t = big.slice(start, (i + 1) * n / RANKS - start);
+            assert!(t.num_rows() > 0);
+        }
+        None
+    });
+    set.bench_mem("slice/deep-copy", 1, iters, || {
+        for i in 0..RANKS {
+            let start = i * n / RANKS;
+            let idx: Vec<usize> = (start..(i + 1) * n / RANKS).collect();
+            let t = big.take(&idx);
+            assert!(t.num_rows() > 0);
+        }
+        None
+    });
+
+    // -- shuffle: chunked receives vs eager concat -----------------------
+    set.bench_mem("shuffle/chunked", 1, iters, || {
+        world()
+            .run(|c| {
+                let t = gen_table(&spec(), c.rank());
+                let s = shuffle_by_key_chunked(&c, &t, 0, &KernelBackend::Native)
+                    .unwrap();
+                s.num_rows()
+            })
+            .unwrap();
+        None
+    });
+    set.bench_mem("shuffle/eager-concat", 1, iters, || {
+        world()
+            .run(|c| {
+                let t = gen_table(&spec(), c.rank());
+                let s = shuffle_by_key(&c, &t, 0, &KernelBackend::Native).unwrap();
+                s.num_rows()
+            })
+            .unwrap();
+        None
+    });
+
+    // -- handoff: chunked gather + window slicing vs flatten + deep copy -
+    set.bench_mem("handoff/zero-copy", 1, iters, || {
+        world()
+            .run(|c| {
+                let t = gen_table(&spec(), c.rank());
+                let gathered = gather_table_chunked(&c, t).unwrap();
+                // Root stages the chunked table; every rank's window is a
+                // view (simulated here on the root thread).
+                if let Some(staged) = gathered {
+                    for r in 0..RANKS {
+                        let part = partition_slice(&staged, r, RANKS);
+                        assert!(part.num_rows() > 0);
+                    }
+                }
+            })
+            .unwrap();
+        None
+    });
+    set.bench_mem("handoff/deep-copy", 1, iters, || {
+        world()
+            .run(|c| {
+                let t = gen_table(&spec(), c.rank());
+                let gathered = gather_table_chunked(&c, t).unwrap();
+                if let Some(staged) = gathered {
+                    // PR-1 semantics: flatten at the root, then deep-copy
+                    // each rank's range out of the flat table.
+                    let flat = staged.compact();
+                    let n = flat.num_rows();
+                    for r in 0..RANKS {
+                        let start = r * n / RANKS;
+                        let idx: Vec<usize> =
+                            (start..(r + 1) * n / RANKS).collect();
+                        let part = flat.take(&idx);
+                        assert!(part.num_rows() > 0);
+                    }
+                }
+            })
+            .unwrap();
+        None
+    });
+
+    set.report();
+    set.maybe_write_json();
+
+    // ---- acceptance assertions -----------------------------------------
+    let mem_of = |label: &str| -> u64 {
+        set.rows
+            .iter()
+            .find(|r| r.label == label)
+            .and_then(|r| r.mem)
+            .expect("bench_mem row")
+            .materialized
+    };
+
+    // Table::slice is zero-copy, full stop.
+    let slice_mat = materialized_by(|| {
+        let _v = big.slice(n / 4, n / 2);
+    });
+    assert_eq!(slice_mat, 0, "Table::slice must materialize zero bytes");
+
+    // Per-rank chunking of a staged (single-chunk) input is zero-copy,
+    // including the into_table() the consumer performs.
+    let staged = ChunkedTable::from(big.slice(0, n));
+    let chunk_mat = materialized_by(|| {
+        for r in 0..RANKS {
+            let _t: Table = partition_slice(&staged, r, RANKS).into_table();
+        }
+    });
+    assert_eq!(chunk_mat, 0, "per-rank input chunking must materialize zero bytes");
+
+    // The view paths move strictly fewer bytes than their deep-copy twins.
+    for (view, deep) in [
+        ("slice/view", "slice/deep-copy"),
+        ("shuffle/chunked", "shuffle/eager-concat"),
+        ("handoff/zero-copy", "handoff/deep-copy"),
+    ] {
+        let (v, d) = (mem_of(view), mem_of(deep));
+        println!(
+            "{view}: {:.1} MiB/iter vs {deep}: {:.1} MiB/iter",
+            v as f64 / (1024.0 * 1024.0),
+            d as f64 / (1024.0 * 1024.0)
+        );
+        assert!(
+            v < d,
+            "{view} ({v} B) must materialize strictly fewer bytes than {deep} ({d} B)"
+        );
+    }
+    println!("\ncolumnar_core OK");
+}

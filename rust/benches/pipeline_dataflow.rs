@@ -73,7 +73,7 @@ fn main() {
             let dag = build();
             let label = format!("{shape}/{mode}");
             let mut makespans = Vec::with_capacity(iters);
-            set.bench(&label, 0, iters, || {
+            set.bench_mem(&label, 0, iters, || {
                 let suite = if dataflow {
                     eng.run_pipeline(&dag).expect("pipeline run")
                 } else {
@@ -88,6 +88,7 @@ fn main() {
         }
     }
     set.report();
+    set.maybe_write_json();
 
     let d_wave = means["diamond/waves"];
     let d_flow = means["diamond/dataflow"];

@@ -55,6 +55,10 @@ impl CommData for String {
     }
 }
 
+/// Charges the **visible window** only (`Table::byte_size`): a slice view
+/// over a large buffer costs what it would actually put on the wire, not
+/// the backing allocation it shares — keeping [`NetModel`] honest now that
+/// tables are zero-copy views.
 impl CommData for Table {
     fn approx_bytes(&self) -> usize {
         self.byte_size()
@@ -707,6 +711,25 @@ mod tests {
         for clk in clocks {
             assert!(clk > 0.0);
         }
+    }
+
+    #[test]
+    fn approx_bytes_charges_window_not_backing() {
+        use crate::df::{Column, DataType, Schema};
+        let t = Table::new(
+            Schema::of(&[("k", DataType::Int64)]),
+            vec![Column::from_i64((0..100).collect())],
+        )
+        .unwrap();
+        assert_eq!(t.approx_bytes(), 800);
+        // A slice view charges only its window, not the 800-byte backing
+        // buffer it keeps alive.
+        let window = t.slice(10, 5);
+        assert_eq!(window.approx_bytes(), 40);
+        assert_eq!(window.backing_byte_size(), 800);
+        // A per-destination send vector charges the window sum.
+        let sends = vec![t.slice(0, 2), t.slice(2, 2)];
+        assert_eq!(sends.approx_bytes(), 32);
     }
 
     #[test]

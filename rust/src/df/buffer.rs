@@ -1,0 +1,354 @@
+//! Shared immutable buffers — the zero-copy substrate under [`Column`].
+//!
+//! A [`Buffer<T>`] is an `Arc`-backed window `{data, offset, len}` over one
+//! immutable allocation: cloning and slicing are O(1) pointer/arithmetic
+//! operations, and every view created from the same allocation shares it
+//! (the Arrow buffer/array-slice model the paper's Cylon layer inherits
+//! from Apache Arrow). Strings get the same treatment via [`Utf8Buffer`]:
+//! one contiguous byte arena plus an `u32` offset table, so a table of a
+//! million short strings costs two allocations, not a million.
+//!
+//! Every *new* allocation (builders, gathers, compactions) is reported to
+//! [`crate::metrics::mem::record_materialized`]; every O(1) window
+//! creation to [`crate::metrics::mem::record_viewed`]. The pair of
+//! counters is how benches and tests prove a path copies nothing.
+//!
+//! [`Column`]: super::column::Column
+
+use std::sync::Arc;
+
+use crate::metrics::mem;
+
+/// An immutable, shareable window over a typed allocation.
+///
+/// Dereferences to `&[T]` (the visible window only), so indexing,
+/// iteration, and `len()` all see window semantics.
+#[derive(Clone, Debug)]
+pub struct Buffer<T> {
+    data: Arc<Vec<T>>,
+    offset: usize,
+    len: usize,
+}
+
+impl<T> Buffer<T> {
+    /// Wrap a freshly-built vector (counted as materialized bytes).
+    pub fn from_vec(v: Vec<T>) -> Buffer<T> {
+        mem::record_materialized(v.len() * std::mem::size_of::<T>());
+        let len = v.len();
+        Buffer { data: Arc::new(v), offset: 0, len }
+    }
+
+    /// The visible window as a slice.
+    pub fn as_slice(&self) -> &[T] {
+        &self.data[self.offset..self.offset + self.len]
+    }
+
+    /// O(1) sub-window `[start, start+len)` of this view. Shares the
+    /// backing allocation; no element is copied.
+    pub fn slice(&self, start: usize, len: usize) -> Buffer<T> {
+        assert!(
+            start + len <= self.len,
+            "buffer slice [{start}, {start}+{len}) out of window of {}",
+            self.len
+        );
+        mem::record_viewed(len * std::mem::size_of::<T>());
+        Buffer {
+            data: self.data.clone(),
+            offset: self.offset + start,
+            len,
+        }
+    }
+
+    /// Payload bytes of the visible window (what a send must carry).
+    pub fn byte_size(&self) -> usize {
+        self.len * std::mem::size_of::<T>()
+    }
+
+    /// Bytes of the whole backing allocation (diagnostics; a view keeps
+    /// the full allocation alive).
+    pub fn backing_byte_size(&self) -> usize {
+        self.data.len() * std::mem::size_of::<T>()
+    }
+
+    /// Do two views share one backing allocation?
+    pub fn shares_buffer(&self, other: &Buffer<T>) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
+    }
+
+    /// Is this a proper window (not the whole allocation)?
+    pub fn is_view(&self) -> bool {
+        self.offset != 0 || self.len != self.data.len()
+    }
+}
+
+impl<T> std::ops::Deref for Buffer<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T> From<Vec<T>> for Buffer<T> {
+    fn from(v: Vec<T>) -> Buffer<T> {
+        Buffer::from_vec(v)
+    }
+}
+
+/// Content equality over the visible windows (layout-independent).
+impl<T: PartialEq> PartialEq for Buffer<T> {
+    fn eq(&self, other: &Buffer<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+/// String-arena view: one shared byte buffer holding every string
+/// back-to-back, plus `n+1` offsets. `{start, len}` selects a window of
+/// logical strings, so slicing is O(1) exactly like [`Buffer`].
+///
+/// Offsets are `u32`: a single arena is capped at 4 GiB of string payload
+/// (enforced by [`Utf8Builder::push`], which panics past the cap), which
+/// halves the offset-table footprint versus `usize` — the same trade
+/// Arrow's 32-bit `StringArray` makes. Billion-row scale is reached by
+/// keeping data in *many* arenas, not one: every partition, shuffle chunk,
+/// and [`ChunkedTable`](super::chunked::ChunkedTable) chunk carries its
+/// own arena, so per-arena payload stays far below the cap under the
+/// paper's workloads.
+#[derive(Clone, Debug)]
+pub struct Utf8Buffer {
+    bytes: Arc<Vec<u8>>,
+    /// `offsets[start + i] .. offsets[start + i + 1]` is string `i`.
+    offsets: Arc<Vec<u32>>,
+    start: usize,
+    len: usize,
+}
+
+impl Utf8Buffer {
+    /// Build an arena from a slice of strings.
+    pub fn from_strs<S: AsRef<str>>(vals: &[S]) -> Utf8Buffer {
+        let total: usize = vals.iter().map(|s| s.as_ref().len()).sum();
+        let mut b = Utf8Builder::with_capacity(vals.len(), total);
+        for s in vals {
+            b.push(s.as_ref());
+        }
+        b.finish()
+    }
+
+    /// Number of strings in the visible window.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// String `i` of the window.
+    pub fn get(&self, i: usize) -> &str {
+        assert!(i < self.len, "utf8 index {i} out of window of {}", self.len);
+        let a = self.offsets[self.start + i] as usize;
+        let b = self.offsets[self.start + i + 1] as usize;
+        std::str::from_utf8(&self.bytes[a..b]).expect("arena holds valid utf8")
+    }
+
+    /// Iterate the window's strings.
+    pub fn iter(&self) -> impl Iterator<Item = &str> + '_ {
+        (0..self.len).map(move |i| self.get(i))
+    }
+
+    /// O(1) sub-window of `len` strings starting at `start`. Shares both
+    /// the byte arena and the offset table.
+    pub fn slice(&self, start: usize, len: usize) -> Utf8Buffer {
+        assert!(
+            start + len <= self.len,
+            "utf8 slice [{start}, {start}+{len}) out of window of {}",
+            self.len
+        );
+        let out = Utf8Buffer {
+            bytes: self.bytes.clone(),
+            offsets: self.offsets.clone(),
+            start: self.start + start,
+            len,
+        };
+        mem::record_viewed(out.byte_size());
+        out
+    }
+
+    /// String payload bytes of the visible window.
+    pub fn str_bytes(&self) -> usize {
+        let a = self.offsets[self.start] as usize;
+        let b = self.offsets[self.start + self.len] as usize;
+        b - a
+    }
+
+    /// Window payload: string bytes + the visible offset entries.
+    pub fn byte_size(&self) -> usize {
+        self.str_bytes() + self.len * std::mem::size_of::<u32>()
+    }
+
+    /// Whole-arena footprint (kept alive by any view over it).
+    pub fn backing_byte_size(&self) -> usize {
+        self.bytes.len() + self.offsets.len() * std::mem::size_of::<u32>()
+    }
+
+    pub fn shares_buffer(&self, other: &Utf8Buffer) -> bool {
+        Arc::ptr_eq(&self.bytes, &other.bytes)
+    }
+
+    pub fn is_view(&self) -> bool {
+        self.start != 0 || self.len + 1 != self.offsets.len()
+    }
+}
+
+/// Content equality over the visible windows.
+impl PartialEq for Utf8Buffer {
+    fn eq(&self, other: &Utf8Buffer) -> bool {
+        self.len == other.len && self.iter().eq(other.iter())
+    }
+}
+
+/// Incremental [`Utf8Buffer`] constructor — the one place string payloads
+/// are copied. CSV ingest, gathers, and joins all build through this, so
+/// no path ever allocates one `String` per cell.
+#[derive(Debug)]
+pub struct Utf8Builder {
+    bytes: Vec<u8>,
+    /// Invariant: always holds the leading `0` sentinel plus one entry per
+    /// pushed string.
+    offsets: Vec<u32>,
+}
+
+impl Default for Utf8Builder {
+    fn default() -> Utf8Builder {
+        Utf8Builder::new()
+    }
+}
+
+impl Utf8Builder {
+    pub fn new() -> Utf8Builder {
+        Utf8Builder::with_capacity(0, 0)
+    }
+
+    /// Pre-size for `strings` entries totalling ~`bytes` payload bytes.
+    pub fn with_capacity(strings: usize, bytes: usize) -> Utf8Builder {
+        let mut offsets = Vec::with_capacity(strings + 1);
+        offsets.push(0u32);
+        Utf8Builder { bytes: Vec::with_capacity(bytes), offsets }
+    }
+
+    /// Append one string to the arena.
+    pub fn push(&mut self, s: &str) {
+        self.bytes.extend_from_slice(s.as_bytes());
+        assert!(
+            self.bytes.len() <= u32::MAX as usize,
+            "utf8 arena exceeds the u32 offset range (4 GiB)"
+        );
+        self.offsets.push(self.bytes.len() as u32);
+    }
+
+    /// Number of strings pushed so far.
+    pub fn len(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Seal the arena (counted as materialized bytes: string payload plus
+    /// one offset entry per string — the sentinel entry is structural
+    /// overhead, not row payload, so an empty arena counts zero).
+    pub fn finish(self) -> Utf8Buffer {
+        let len = self.offsets.len() - 1;
+        mem::record_materialized(self.bytes.len() + len * std::mem::size_of::<u32>());
+        Utf8Buffer {
+            bytes: Arc::new(self.bytes),
+            offsets: Arc::new(self.offsets),
+            start: 0,
+            len,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_is_a_shared_window() {
+        let b = Buffer::from_vec(vec![10i64, 20, 30, 40, 50]);
+        let s = b.slice(1, 3);
+        assert_eq!(s.as_slice(), &[20, 30, 40]);
+        assert_eq!(s.len(), 3); // Deref len = window len
+        assert!(s.shares_buffer(&b));
+        assert!(s.is_view() && !b.is_view());
+        // Nested slicing composes offsets.
+        let ss = s.slice(2, 1);
+        assert_eq!(ss.as_slice(), &[40]);
+        assert!(ss.shares_buffer(&b));
+        // Window vs backing accounting.
+        assert_eq!(s.byte_size(), 24);
+        assert_eq!(s.backing_byte_size(), 40);
+    }
+
+    #[test]
+    fn buffer_equality_is_content_based() {
+        let a = Buffer::from_vec(vec![1i64, 2, 3]);
+        let b = Buffer::from_vec(vec![0i64, 1, 2, 3, 9]).slice(1, 3);
+        assert_eq!(a, b);
+        assert!(!a.shares_buffer(&b));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of window")]
+    fn slice_bounds_checked() {
+        Buffer::from_vec(vec![1i64]).slice(0, 2);
+    }
+
+    #[test]
+    fn utf8_arena_roundtrip() {
+        let u = Utf8Buffer::from_strs(&["alpha", "", "gamma"]);
+        assert_eq!(u.len(), 3);
+        assert_eq!(u.get(0), "alpha");
+        assert_eq!(u.get(1), "");
+        assert_eq!(u.get(2), "gamma");
+        assert_eq!(u.iter().collect::<Vec<_>>(), vec!["alpha", "", "gamma"]);
+        assert_eq!(u.str_bytes(), 10);
+        assert_eq!(u.byte_size(), 10 + 3 * 4);
+    }
+
+    #[test]
+    fn utf8_slice_shares_arena() {
+        let u = Utf8Buffer::from_strs(&["a", "bb", "ccc", "dddd"]);
+        let s = u.slice(1, 2);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec!["bb", "ccc"]);
+        assert!(s.shares_buffer(&u));
+        assert!(s.is_view());
+        assert_eq!(s.str_bytes(), 5);
+        let ss = s.slice(1, 1);
+        assert_eq!(ss.get(0), "ccc");
+        // Empty window is legal.
+        let e = u.slice(4, 0);
+        assert_eq!(e.len(), 0);
+        assert_eq!(e.str_bytes(), 0);
+    }
+
+    #[test]
+    fn utf8_equality_is_content_based() {
+        let a = Utf8Buffer::from_strs(&["x", "y"]);
+        let b = Utf8Buffer::from_strs(&["w", "x", "y"]).slice(1, 2);
+        assert_eq!(a, b);
+        assert_ne!(a, Utf8Buffer::from_strs(&["x", "z"]));
+    }
+
+    #[test]
+    fn builder_incremental() {
+        let mut b = Utf8Builder::new();
+        assert!(b.is_empty());
+        b.push("one");
+        b.push("two");
+        assert_eq!(b.len(), 2);
+        let u = b.finish();
+        assert_eq!(u.get(1), "two");
+    }
+}

@@ -1,0 +1,240 @@
+//! [`ChunkedTable`]: a logical table made of row-disjoint [`Table`]
+//! chunks — the zero-copy form of concat/gather.
+//!
+//! Shuffle receives, gathered pipeline outputs, and per-rank input
+//! partitions are all naturally *lists* of tables. Historically every one
+//! of those lists was immediately flattened with [`Table::concat`], deep-
+//! copying each row once per hop. A `ChunkedTable` keeps the parts as
+//! they arrived (each an `Arc`-backed view) and defers the copy to
+//! [`ChunkedTable::compact`], which runs only when an operator genuinely
+//! needs contiguous column access — and is skipped entirely when the view
+//! already has a single chunk.
+//!
+//! Row order is chunk order then in-chunk order, so slicing by global row
+//! index is well-defined and O(#chunks).
+
+use super::schema::Schema;
+use super::table::Table;
+use crate::error::{Error, Result};
+
+/// Row-disjoint chunks sharing one schema; concat deferred until needed.
+#[derive(Clone, Debug, Default)]
+pub struct ChunkedTable {
+    schema: Schema,
+    chunks: Vec<Table>,
+    nrows: usize,
+}
+
+impl ChunkedTable {
+    /// Empty chunked table with the given schema.
+    pub fn empty(schema: Schema) -> ChunkedTable {
+        ChunkedTable { schema, chunks: Vec::new(), nrows: 0 }
+    }
+
+    /// Adopt a list of schema-identical tables as chunks (zero-copy: the
+    /// parts are moved, not flattened).
+    pub fn from_tables(parts: Vec<Table>) -> Result<ChunkedTable> {
+        let Some(first) = parts.first() else {
+            return Err(Error::DataFrame("chunked table of zero parts".into()));
+        };
+        let schema = first.schema().clone();
+        let mut nrows = 0;
+        for p in &parts {
+            if p.schema() != &schema {
+                return Err(Error::DataFrame(format!(
+                    "chunk schema mismatch: {} vs {}",
+                    p.schema(),
+                    schema
+                )));
+            }
+            nrows += p.num_rows();
+        }
+        Ok(ChunkedTable { schema, chunks: parts, nrows })
+    }
+
+    /// Append one chunk (zero-copy).
+    pub fn push(&mut self, t: Table) -> Result<()> {
+        if self.chunks.is_empty() && self.schema.is_empty() {
+            self.schema = t.schema().clone();
+        } else if t.schema() != &self.schema {
+            return Err(Error::DataFrame(format!(
+                "chunk schema mismatch: {} vs {}",
+                t.schema(),
+                self.schema
+            )));
+        }
+        self.nrows += t.num_rows();
+        self.chunks.push(t);
+        Ok(())
+    }
+
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.nrows
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn chunks(&self) -> &[Table] {
+        &self.chunks
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nrows == 0
+    }
+
+    /// O(#chunks) zero-copy row window `[start, start+len)`: overlapping
+    /// chunks are sliced (views), non-overlapping ones dropped.
+    pub fn slice(&self, start: usize, len: usize) -> ChunkedTable {
+        assert!(
+            start + len <= self.nrows,
+            "chunked slice [{start}, {start}+{len}) out of {} rows",
+            self.nrows
+        );
+        let mut out = Vec::new();
+        let mut skip = start;
+        let mut want = len;
+        for c in &self.chunks {
+            let n = c.num_rows();
+            if skip >= n {
+                skip -= n;
+                continue;
+            }
+            if want == 0 {
+                break;
+            }
+            let take = (n - skip).min(want);
+            out.push(c.slice(skip, take));
+            want -= take;
+            skip = 0;
+        }
+        ChunkedTable { schema: self.schema.clone(), chunks: out, nrows: len }
+    }
+
+    /// Contiguous form. Zero-copy when a single chunk already is the whole
+    /// view (column `Arc` clones); otherwise materializes one fresh table.
+    pub fn compact(&self) -> Table {
+        match self.chunks.len() {
+            0 => Table::empty(self.schema.clone()),
+            1 => self.chunks[0].clone(),
+            _ => Table::concat(&self.chunks).expect("chunk schemas validated"),
+        }
+    }
+
+    /// Consuming [`ChunkedTable::compact`] (skips the clone on the
+    /// single-chunk fast path).
+    pub fn into_table(mut self) -> Table {
+        match self.chunks.len() {
+            0 => Table::empty(self.schema),
+            1 => self.chunks.pop().expect("one chunk"),
+            _ => Table::concat(&self.chunks).expect("chunk schemas validated"),
+        }
+    }
+
+    /// Payload bytes of all visible windows (drives the network model).
+    pub fn byte_size(&self) -> usize {
+        self.chunks.iter().map(|c| c.byte_size()).sum()
+    }
+
+    /// Order-insensitive content fingerprint. [`Table::multiset_fingerprint`]
+    /// is additive over disjoint row sets, so summing per-chunk values
+    /// equals the compacted table's fingerprint.
+    pub fn multiset_fingerprint(&self) -> u64 {
+        self.chunks
+            .iter()
+            .fold(0u64, |acc, c| acc.wrapping_add(c.multiset_fingerprint()))
+    }
+}
+
+impl From<Table> for ChunkedTable {
+    fn from(t: Table) -> ChunkedTable {
+        let schema = t.schema().clone();
+        let nrows = t.num_rows();
+        ChunkedTable { schema, chunks: vec![t], nrows }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::df::{Column, DataType};
+
+    fn t(keys: Vec<i64>) -> Table {
+        let n = keys.len();
+        Table::new(
+            Schema::of(&[("k", DataType::Int64), ("v", DataType::Float64)]),
+            vec![Column::from_i64(keys), Column::from_f64(vec![0.5; n])],
+        )
+        .unwrap()
+    }
+
+    fn keys_of(table: &Table) -> Vec<i64> {
+        table.column(0).as_i64().unwrap().to_vec()
+    }
+
+    #[test]
+    fn from_tables_and_compact() {
+        let ct =
+            ChunkedTable::from_tables(vec![t(vec![1, 2]), t(vec![]), t(vec![3])])
+                .unwrap();
+        assert_eq!(ct.num_rows(), 3);
+        assert_eq!(ct.num_chunks(), 3);
+        let flat = ct.compact();
+        assert_eq!(keys_of(&flat), vec![1, 2, 3]);
+        assert_eq!(ct.multiset_fingerprint(), flat.multiset_fingerprint());
+        assert_eq!(ct.byte_size(), flat.byte_size());
+    }
+
+    #[test]
+    fn single_chunk_compact_shares_buffers() {
+        let table = t(vec![7, 8, 9]);
+        let ct = ChunkedTable::from(table.clone());
+        let back = ct.compact();
+        assert!(back.column(0).shares_buffer(table.column(0)));
+        let owned = ct.into_table();
+        assert!(owned.column(0).shares_buffer(table.column(0)));
+    }
+
+    #[test]
+    fn slice_crosses_chunk_boundaries_without_copying() {
+        let ct = ChunkedTable::from_tables(vec![
+            t(vec![0, 1, 2]),
+            t(vec![3, 4]),
+            t(vec![5, 6, 7]),
+        ])
+        .unwrap();
+        let mid = ct.slice(2, 4); // rows 2..6 span all three chunks
+        assert_eq!(mid.num_rows(), 4);
+        assert_eq!(keys_of(&mid.compact()), vec![2, 3, 4, 5]);
+        // Each produced chunk is a view over the original chunk's buffer.
+        assert!(mid.chunks()[0]
+            .column(0)
+            .shares_buffer(ct.chunks()[0].column(0)));
+        // Edge windows.
+        assert_eq!(ct.slice(0, 0).num_rows(), 0);
+        assert_eq!(keys_of(&ct.slice(7, 1).compact()), vec![7]);
+    }
+
+    #[test]
+    fn push_validates_schema() {
+        let mut ct = ChunkedTable::from(t(vec![1]));
+        assert!(ct.push(t(vec![2])).is_ok());
+        let other = Table::empty(Schema::of(&[("x", DataType::Bool)]));
+        assert!(ct.push(other).is_err());
+        assert_eq!(ct.num_rows(), 2);
+    }
+
+    #[test]
+    fn empty_cases() {
+        assert!(ChunkedTable::from_tables(vec![]).is_err());
+        let e = ChunkedTable::empty(t(vec![]).schema().clone());
+        assert_eq!(e.num_rows(), 0);
+        assert_eq!(e.compact().num_rows(), 0);
+        assert_eq!(e.multiset_fingerprint(), 0);
+    }
+}

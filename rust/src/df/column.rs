@@ -1,7 +1,16 @@
-//! Typed columns. Values are dense (no validity bitmap — the paper's
-//! workloads are null-free synthetic tables; adding a bitmap is orthogonal).
+//! Typed columns over shared immutable buffers. Values are dense (no
+//! validity bitmap — the paper's workloads are null-free synthetic tables;
+//! adding a bitmap is orthogonal).
+//!
+//! Every variant holds an `Arc`-backed view ([`Buffer`] / [`Utf8Buffer`]),
+//! so `clone` and [`Column::slice`] are O(1) and copy nothing; only
+//! [`Column::take`] and [`Column::concat`] materialize fresh allocations
+//! (reported to [`crate::metrics::mem`]). Equality is content-based over
+//! the visible windows, independent of layout.
 
 use crate::error::{Error, Result};
+
+use super::buffer::{Buffer, Utf8Buffer, Utf8Builder};
 
 /// Logical column type.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -24,16 +33,36 @@ impl std::fmt::Display for DataType {
     }
 }
 
-/// A dense, typed column of values.
+/// A dense, typed column view over a shared buffer.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Column {
-    Int64(Vec<i64>),
-    Float64(Vec<f64>),
-    Utf8(Vec<String>),
-    Bool(Vec<bool>),
+    Int64(Buffer<i64>),
+    Float64(Buffer<f64>),
+    Utf8(Utf8Buffer),
+    Bool(Buffer<bool>),
 }
 
 impl Column {
+    /// Wrap an owned vector of int64 values.
+    pub fn from_i64(v: Vec<i64>) -> Column {
+        Column::Int64(Buffer::from_vec(v))
+    }
+
+    /// Wrap an owned vector of float64 values.
+    pub fn from_f64(v: Vec<f64>) -> Column {
+        Column::Float64(Buffer::from_vec(v))
+    }
+
+    /// Build a string column into a fresh arena.
+    pub fn from_utf8<S: AsRef<str>>(vals: &[S]) -> Column {
+        Column::Utf8(Utf8Buffer::from_strs(vals))
+    }
+
+    /// Wrap an owned vector of bools.
+    pub fn from_bool(v: Vec<bool>) -> Column {
+        Column::Bool(Buffer::from_vec(v))
+    }
+
     pub fn dtype(&self) -> DataType {
         match self {
             Column::Int64(_) => DataType::Int64,
@@ -63,55 +92,128 @@ impl Column {
 
     pub fn empty(dtype: DataType) -> Column {
         match dtype {
-            DataType::Int64 => Column::Int64(Vec::new()),
-            DataType::Float64 => Column::Float64(Vec::new()),
-            DataType::Utf8 => Column::Utf8(Vec::new()),
-            DataType::Bool => Column::Bool(Vec::new()),
+            DataType::Int64 => Column::from_i64(Vec::new()),
+            DataType::Float64 => Column::from_f64(Vec::new()),
+            DataType::Utf8 => Column::Utf8(Utf8Builder::new().finish()),
+            DataType::Bool => Column::from_bool(Vec::new()),
         }
     }
 
-    /// Gather rows by index (indices may repeat / reorder).
+    /// Gather rows by index (indices may repeat / reorder). Materializes a
+    /// fresh buffer — arbitrary gathers cannot be expressed as a window.
     pub fn take(&self, idx: &[usize]) -> Column {
         match self {
-            Column::Int64(v) => Column::Int64(idx.iter().map(|&i| v[i]).collect()),
-            Column::Float64(v) => Column::Float64(idx.iter().map(|&i| v[i]).collect()),
-            Column::Utf8(v) => Column::Utf8(idx.iter().map(|&i| v[i].clone()).collect()),
-            Column::Bool(v) => Column::Bool(idx.iter().map(|&i| v[i]).collect()),
+            Column::Int64(v) => {
+                Column::from_i64(idx.iter().map(|&i| v[i]).collect())
+            }
+            Column::Float64(v) => {
+                Column::from_f64(idx.iter().map(|&i| v[i]).collect())
+            }
+            Column::Utf8(v) => {
+                // Pre-size the arena from the source offsets (O(k)) so the
+                // gather copies each string exactly once.
+                let bytes: usize = idx.iter().map(|&i| v.get(i).len()).sum();
+                let mut b = Utf8Builder::with_capacity(idx.len(), bytes);
+                for &i in idx {
+                    b.push(v.get(i));
+                }
+                Column::Utf8(b.finish())
+            }
+            Column::Bool(v) => {
+                Column::from_bool(idx.iter().map(|&i| v[i]).collect())
+            }
         }
     }
 
-    /// Append all values of `other` (must be same dtype).
-    pub fn extend(&mut self, other: &Column) -> Result<()> {
-        match (self, other) {
-            (Column::Int64(a), Column::Int64(b)) => a.extend_from_slice(b),
-            (Column::Float64(a), Column::Float64(b)) => a.extend_from_slice(b),
-            (Column::Utf8(a), Column::Utf8(b)) => a.extend_from_slice(b),
-            (Column::Bool(a), Column::Bool(b)) => a.extend_from_slice(b),
-            (a, b) => {
+    /// Concatenate same-typed columns into one fresh buffer (the
+    /// materializing path; [`crate::df::ChunkedTable`] defers it).
+    pub fn concat(parts: &[&Column]) -> Result<Column> {
+        let Some(first) = parts.first() else {
+            return Err(Error::DataFrame("concat of zero columns".into()));
+        };
+        let dtype = first.dtype();
+        for p in parts {
+            if p.dtype() != dtype {
                 return Err(Error::DataFrame(format!(
-                    "extend dtype mismatch: {} vs {}",
-                    a.dtype(),
-                    b.dtype()
-                )))
+                    "concat dtype mismatch: {} vs {}",
+                    dtype,
+                    p.dtype()
+                )));
             }
         }
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        Ok(match first {
+            Column::Int64(_) => {
+                let mut v = Vec::with_capacity(total);
+                for p in parts {
+                    v.extend_from_slice(p.as_i64()?);
+                }
+                Column::from_i64(v)
+            }
+            Column::Float64(_) => {
+                let mut v = Vec::with_capacity(total);
+                for p in parts {
+                    v.extend_from_slice(p.as_f64()?);
+                }
+                Column::from_f64(v)
+            }
+            Column::Utf8(_) => {
+                let bytes: usize = parts
+                    .iter()
+                    .map(|p| match p {
+                        Column::Utf8(u) => u.str_bytes(),
+                        _ => 0,
+                    })
+                    .sum();
+                let mut b = Utf8Builder::with_capacity(total, bytes);
+                for p in parts {
+                    for s in p.as_utf8()?.iter() {
+                        b.push(s);
+                    }
+                }
+                Column::Utf8(b.finish())
+            }
+            Column::Bool(_) => {
+                let mut v = Vec::with_capacity(total);
+                for p in parts {
+                    v.extend_from_slice(p.as_bool()?);
+                }
+                Column::from_bool(v)
+            }
+        })
+    }
+
+    /// Append all values of `other` (must be same dtype). Rebuilds the
+    /// backing buffer on every call — kept as the naive baseline for the
+    /// perf probes; bulk paths should use [`Column::concat`].
+    pub fn extend(&mut self, other: &Column) -> Result<()> {
+        if self.dtype() != other.dtype() {
+            return Err(Error::DataFrame(format!(
+                "extend dtype mismatch: {} vs {}",
+                self.dtype(),
+                other.dtype()
+            )));
+        }
+        let merged = Column::concat(&[&*self, other])?;
+        *self = merged;
         Ok(())
     }
 
-    /// Slice `[start, start+len)` into a new column.
+    /// O(1) window `[start, start+len)` over the shared buffer. No row is
+    /// copied; the result keeps the backing allocation alive.
     pub fn slice(&self, start: usize, len: usize) -> Column {
         match self {
-            Column::Int64(v) => Column::Int64(v[start..start + len].to_vec()),
-            Column::Float64(v) => Column::Float64(v[start..start + len].to_vec()),
-            Column::Utf8(v) => Column::Utf8(v[start..start + len].to_vec()),
-            Column::Bool(v) => Column::Bool(v[start..start + len].to_vec()),
+            Column::Int64(v) => Column::Int64(v.slice(start, len)),
+            Column::Float64(v) => Column::Float64(v.slice(start, len)),
+            Column::Utf8(v) => Column::Utf8(v.slice(start, len)),
+            Column::Bool(v) => Column::Bool(v.slice(start, len)),
         }
     }
 
     /// Borrow as i64 values, erroring on other types.
     pub fn as_i64(&self) -> Result<&[i64]> {
         match self {
-            Column::Int64(v) => Ok(v),
+            Column::Int64(v) => Ok(v.as_slice()),
             other => Err(Error::DataFrame(format!(
                 "expected int64 column, got {}",
                 other.dtype()
@@ -121,7 +223,7 @@ impl Column {
 
     pub fn as_f64(&self) -> Result<&[f64]> {
         match self {
-            Column::Float64(v) => Ok(v),
+            Column::Float64(v) => Ok(v.as_slice()),
             other => Err(Error::DataFrame(format!(
                 "expected float64 column, got {}",
                 other.dtype()
@@ -129,7 +231,8 @@ impl Column {
         }
     }
 
-    pub fn as_utf8(&self) -> Result<&[String]> {
+    /// Borrow the string-arena view, erroring on other types.
+    pub fn as_utf8(&self) -> Result<&Utf8Buffer> {
         match self {
             Column::Utf8(v) => Ok(v),
             other => Err(Error::DataFrame(format!(
@@ -139,12 +242,34 @@ impl Column {
         }
     }
 
+    pub fn as_bool(&self) -> Result<&[bool]> {
+        match self {
+            Column::Bool(v) => Ok(v.as_slice()),
+            other => Err(Error::DataFrame(format!(
+                "expected bool column, got {}",
+                other.dtype()
+            ))),
+        }
+    }
+
+    /// Do two columns share one backing allocation (same variant, same
+    /// `Arc`)? The structural proof a view performed no copy.
+    pub fn shares_buffer(&self, other: &Column) -> bool {
+        match (self, other) {
+            (Column::Int64(a), Column::Int64(b)) => a.shares_buffer(b),
+            (Column::Float64(a), Column::Float64(b)) => a.shares_buffer(b),
+            (Column::Utf8(a), Column::Utf8(b)) => a.shares_buffer(b),
+            (Column::Bool(a), Column::Bool(b)) => a.shares_buffer(b),
+            _ => false,
+        }
+    }
+
     /// Render a single value for CSV / display.
     pub fn value_to_string(&self, i: usize) -> String {
         match self {
             Column::Int64(v) => v[i].to_string(),
             Column::Float64(v) => format!("{}", v[i]),
-            Column::Utf8(v) => v[i].clone(),
+            Column::Utf8(v) => v.get(i).to_string(),
             Column::Bool(v) => v[i].to_string(),
         }
     }
@@ -157,7 +282,7 @@ impl Column {
             Column::Float64(v) => splitmix64(v[i].to_bits()),
             Column::Utf8(v) => {
                 let mut h = 0xcbf2_9ce4_8422_2325u64;
-                for b in v[i].bytes() {
+                for b in v.get(i).bytes() {
                     h ^= b as u64;
                     h = h.wrapping_mul(0x1000_0000_01b3);
                 }
@@ -174,17 +299,17 @@ impl Column {
         let mut acc = 0u64;
         match self {
             Column::Int64(v) => {
-                for &x in v {
+                for &x in v.iter() {
                     acc = acc.wrapping_add(splitmix64(x as u64));
                 }
             }
             Column::Float64(v) => {
-                for &x in v {
+                for &x in v.iter() {
                     acc = acc.wrapping_add(splitmix64(x.to_bits()));
                 }
             }
             Column::Utf8(v) => {
-                for s in v {
+                for s in v.iter() {
                     let mut h = 0xcbf2_9ce4_8422_2325u64;
                     for b in s.bytes() {
                         h ^= b as u64;
@@ -194,7 +319,7 @@ impl Column {
                 }
             }
             Column::Bool(v) => {
-                for &x in v {
+                for &x in v.iter() {
                     acc = acc.wrapping_add(splitmix64(x as u64));
                 }
             }
@@ -202,13 +327,26 @@ impl Column {
         acc
     }
 
-    /// Approximate in-memory payload size in bytes (for the network model).
+    /// Payload bytes of the **visible window** — what a send must actually
+    /// carry. A view over a huge buffer charges only its window (the
+    /// network model depends on this staying honest).
     pub fn byte_size(&self) -> usize {
         match self {
-            Column::Int64(v) => v.len() * 8,
-            Column::Float64(v) => v.len() * 8,
-            Column::Utf8(v) => v.iter().map(|s| s.len() + 8).sum(),
-            Column::Bool(v) => v.len(),
+            Column::Int64(v) => v.byte_size(),
+            Column::Float64(v) => v.byte_size(),
+            Column::Utf8(v) => v.byte_size(),
+            Column::Bool(v) => v.byte_size(),
+        }
+    }
+
+    /// Bytes of the whole backing allocation this column keeps alive
+    /// (diagnostics: `byte_size <= backing_byte_size`).
+    pub fn backing_byte_size(&self) -> usize {
+        match self {
+            Column::Int64(v) => v.backing_byte_size(),
+            Column::Float64(v) => v.backing_byte_size(),
+            Column::Utf8(v) => v.backing_byte_size(),
+            Column::Bool(v) => v.backing_byte_size(),
         }
     }
 }
@@ -219,51 +357,102 @@ mod tests {
 
     #[test]
     fn take_and_slice() {
-        let c = Column::Int64(vec![10, 20, 30, 40]);
-        assert_eq!(c.take(&[3, 0, 0]), Column::Int64(vec![40, 10, 10]));
-        assert_eq!(c.slice(1, 2), Column::Int64(vec![20, 30]));
+        let c = Column::from_i64(vec![10, 20, 30, 40]);
+        assert_eq!(c.take(&[3, 0, 0]), Column::from_i64(vec![40, 10, 10]));
+        assert_eq!(c.slice(1, 2), Column::from_i64(vec![20, 30]));
         assert_eq!(c.len(), 4);
     }
 
     #[test]
+    fn slice_shares_take_copies() {
+        let c = Column::from_i64(vec![1, 2, 3, 4]);
+        let view = c.slice(1, 2);
+        assert!(view.shares_buffer(&c));
+        let gathered = c.take(&[1, 2]);
+        assert!(!gathered.shares_buffer(&c));
+        assert_eq!(view, gathered); // same content, different layout
+    }
+
+    #[test]
     fn extend_checks_dtype() {
-        let mut a = Column::Int64(vec![1]);
-        assert!(a.extend(&Column::Int64(vec![2])).is_ok());
+        let mut a = Column::from_i64(vec![1]);
+        assert!(a.extend(&Column::from_i64(vec![2])).is_ok());
         assert_eq!(a.len(), 2);
-        assert!(a.extend(&Column::Float64(vec![1.0])).is_err());
+        assert!(a.extend(&Column::from_f64(vec![1.0])).is_err());
+    }
+
+    #[test]
+    fn concat_materializes() {
+        let a = Column::from_i64(vec![1, 2]);
+        let b = a.slice(1, 1);
+        let c = Column::concat(&[&a, &b]).unwrap();
+        assert_eq!(c, Column::from_i64(vec![1, 2, 2]));
+        assert!(!c.shares_buffer(&a));
+        assert!(Column::concat(&[&a, &Column::from_f64(vec![0.0])]).is_err());
+        assert!(Column::concat(&[]).is_err());
+        // Utf8 concat rebuilds one arena.
+        let u = Column::from_utf8(&["x", "yy"]);
+        let v = Column::concat(&[&u, &u]).unwrap();
+        assert_eq!(v, Column::from_utf8(&["x", "yy", "x", "yy"]));
     }
 
     #[test]
     fn accessors() {
-        let c = Column::Float64(vec![1.5]);
+        let c = Column::from_f64(vec![1.5]);
         assert!(c.as_f64().is_ok());
         assert!(c.as_i64().is_err());
         assert_eq!(c.dtype(), DataType::Float64);
+        assert!(Column::from_bool(vec![true]).as_bool().is_ok());
+        assert!(c.as_bool().is_err());
     }
 
     #[test]
     fn fingerprint_order_insensitive() {
-        let a = Column::Int64(vec![1, 2, 3]);
-        let b = Column::Int64(vec![3, 1, 2]);
+        let a = Column::from_i64(vec![1, 2, 3]);
+        let b = Column::from_i64(vec![3, 1, 2]);
         assert_eq!(a.multiset_fingerprint(), b.multiset_fingerprint());
-        let c = Column::Int64(vec![1, 2, 4]);
+        let c = Column::from_i64(vec![1, 2, 4]);
         assert_ne!(a.multiset_fingerprint(), c.multiset_fingerprint());
-    }
-
-    #[test]
-    fn byte_sizes() {
-        assert_eq!(Column::Int64(vec![0; 4]).byte_size(), 32);
-        assert_eq!(Column::Bool(vec![true; 4]).byte_size(), 4);
+        // A view's fingerprint equals the equivalent owned column's.
         assert_eq!(
-            Column::Utf8(vec!["ab".into()]).byte_size(),
-            10
+            a.slice(1, 2).multiset_fingerprint(),
+            Column::from_i64(vec![2, 3]).multiset_fingerprint()
         );
     }
 
     #[test]
+    fn byte_sizes_charge_the_window() {
+        assert_eq!(Column::from_i64(vec![0; 4]).byte_size(), 32);
+        assert_eq!(Column::from_bool(vec![true; 4]).byte_size(), 4);
+        // Utf8: string payload + 4 bytes of visible offset per entry.
+        assert_eq!(Column::from_utf8(&["ab"]).byte_size(), 6);
+        // A window charges only itself; the backing stays visible via
+        // backing_byte_size.
+        let c = Column::from_i64(vec![0; 100]);
+        let v = c.slice(10, 5);
+        assert_eq!(v.byte_size(), 40);
+        assert_eq!(v.backing_byte_size(), 800);
+        assert!(c.byte_size() <= c.backing_byte_size());
+    }
+
+    #[test]
     fn utf8_roundtrip() {
-        let c = Column::Utf8(vec!["x".into(), "y".into()]);
+        let c = Column::from_utf8(&["x", "y"]);
         assert_eq!(c.value_to_string(1), "y");
-        assert_eq!(c.take(&[1, 0]).as_utf8().unwrap()[0], "y");
+        assert_eq!(c.take(&[1, 0]).as_utf8().unwrap().get(0), "y");
+        // Utf8 slicing is a window over the same arena.
+        let s = c.slice(1, 1);
+        assert!(s.shares_buffer(&c));
+        assert_eq!(s.as_utf8().unwrap().get(0), "y");
+    }
+
+    #[test]
+    fn empty_columns() {
+        for dt in [DataType::Int64, DataType::Float64, DataType::Utf8, DataType::Bool] {
+            let c = Column::empty(dt);
+            assert_eq!(c.len(), 0);
+            assert_eq!(c.dtype(), dt);
+            assert_eq!(c.byte_size(), 0);
+        }
     }
 }

@@ -68,7 +68,7 @@ pub fn gen_table(spec: &GenSpec, rank: usize) -> Table {
     let vals: Vec<f64> = (0..spec.rows).map(|_| rng.gen_f64()).collect();
     Table::new(
         Schema::of(&[("key", DataType::Int64), ("val", DataType::Float64)]),
-        vec![Column::Int64(keys), Column::Float64(vals)],
+        vec![Column::from_i64(keys), Column::from_f64(vals)],
     )
     .expect("generated table is well-formed")
 }

@@ -1,14 +1,21 @@
 //! Columnar dataframe substrate — the Cylon table abstraction (paper §3.2,
 //! Fig 1): typed columns in a columnar layout, a schema, and a `Table` that
 //! local and distributed operators consume. Stands in for Cylon's Apache
-//! Arrow foundation.
+//! Arrow foundation, including Arrow's zero-copy memory model: columns are
+//! `Arc`-backed buffer views ([`Buffer`]/[`Utf8Buffer`]), slices are O(1)
+//! windows, and [`ChunkedTable`] defers concat/gather copies until an
+//! operator actually needs contiguous access.
 
+mod buffer;
+mod chunked;
 mod column;
 mod csv;
 mod gen;
 mod schema;
 mod table;
 
+pub use buffer::{Buffer, Utf8Buffer, Utf8Builder};
+pub use chunked::ChunkedTable;
 pub use column::{Column, DataType};
 pub use csv::{read_csv, write_csv};
 pub use gen::{gen_table, gen_two_tables, GenSpec, KeyDist};

@@ -1,4 +1,9 @@
 //! `Table`: the unit every Cylon operator consumes and produces.
+//!
+//! Columns are `Arc`-backed views ([`super::buffer`]), so `clone`,
+//! [`Table::slice`], and [`Table::project`] are O(columns) and copy no row
+//! data; only [`Table::take`] / [`Table::filter`] / [`Table::concat`]
+//! materialize fresh buffers.
 
 use crate::error::{Error, Result};
 
@@ -7,7 +12,7 @@ use super::column::Column;
 use super::column::DataType;
 use super::schema::Schema;
 
-/// An immutable columnar table (schema + equal-length columns).
+/// An immutable columnar table (schema + equal-length column views).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Table {
     schema: Schema,
@@ -80,7 +85,8 @@ impl Table {
         &self.columns
     }
 
-    /// Gather rows by index into a new table.
+    /// Gather rows by index into a new table (materializes fresh buffers —
+    /// arbitrary gathers cannot be expressed as windows).
     pub fn take(&self, idx: &[usize]) -> Table {
         Table {
             schema: self.schema.clone(),
@@ -89,7 +95,8 @@ impl Table {
         }
     }
 
-    /// Contiguous row slice.
+    /// Contiguous row window — O(columns), zero rows copied. The result
+    /// shares every backing buffer with `self`.
     pub fn slice(&self, start: usize, len: usize) -> Table {
         Table {
             schema: self.schema.clone(),
@@ -98,14 +105,12 @@ impl Table {
         }
     }
 
-    /// Concatenate tables with identical schemas.
+    /// Concatenate tables with identical schemas into one contiguous table
+    /// (materializes; [`super::ChunkedTable`] defers this copy).
     pub fn concat(parts: &[Table]) -> Result<Table> {
         let Some(first) = parts.first() else {
             return Err(Error::DataFrame("concat of zero tables".into()));
         };
-        let mut columns: Vec<Column> =
-            first.columns.iter().map(|c| c.empty_like()).collect();
-        let mut nrows = 0;
         for part in parts {
             if part.schema != first.schema {
                 return Err(Error::DataFrame(format!(
@@ -113,11 +118,17 @@ impl Table {
                     part.schema, first.schema
                 )));
             }
-            for (dst, src) in columns.iter_mut().zip(&part.columns) {
-                dst.extend(src)?;
-            }
-            nrows += part.nrows;
         }
+        if parts.len() == 1 {
+            // Single part: Arc clones only, no row copies.
+            return Ok(first.clone());
+        }
+        let mut columns = Vec::with_capacity(first.columns.len());
+        for j in 0..first.columns.len() {
+            let cols: Vec<&Column> = parts.iter().map(|p| p.column(j)).collect();
+            columns.push(Column::concat(&cols)?);
+        }
+        let nrows = parts.iter().map(|p| p.nrows).sum();
         Ok(Table { schema: first.schema.clone(), columns, nrows })
     }
 
@@ -138,7 +149,7 @@ impl Table {
         Ok(self.take(&idx))
     }
 
-    /// Project a subset of columns by name.
+    /// Project a subset of columns by name (Arc clones — zero-copy).
     pub fn project(&self, names: &[&str]) -> Result<Table> {
         let mut fields = Vec::with_capacity(names.len());
         let mut columns = Vec::with_capacity(names.len());
@@ -167,9 +178,17 @@ impl Table {
         acc
     }
 
-    /// Approximate payload bytes (drives the network cost model).
+    /// Approximate payload bytes of the **visible windows** (drives the
+    /// network cost model): a slice view charges only its window, never
+    /// the backing buffer it shares.
     pub fn byte_size(&self) -> usize {
         self.columns.iter().map(|c| c.byte_size()).sum()
+    }
+
+    /// Bytes of backing allocations this table keeps alive (diagnostics;
+    /// `byte_size() <= backing_byte_size()`).
+    pub fn backing_byte_size(&self) -> usize {
+        self.columns.iter().map(|c| c.backing_byte_size()).sum()
     }
 
     /// First `n` rows rendered for debugging/examples.
@@ -195,13 +214,14 @@ impl Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::metrics::mem;
 
     fn t2() -> Table {
         Table::new(
             Schema::of(&[("k", DataType::Int64), ("v", DataType::Float64)]),
             vec![
-                Column::Int64(vec![3, 1, 2]),
-                Column::Float64(vec![0.3, 0.1, 0.2]),
+                Column::from_i64(vec![3, 1, 2]),
+                Column::from_f64(vec![0.3, 0.1, 0.2]),
             ],
         )
         .unwrap()
@@ -211,12 +231,12 @@ mod tests {
     fn validates_shape_and_types() {
         assert!(Table::new(
             Schema::of(&[("k", DataType::Int64)]),
-            vec![Column::Float64(vec![1.0])],
+            vec![Column::from_f64(vec![1.0])],
         )
         .is_err());
         assert!(Table::new(
             Schema::of(&[("k", DataType::Int64), ("v", DataType::Int64)]),
-            vec![Column::Int64(vec![1]), Column::Int64(vec![1, 2])],
+            vec![Column::from_i64(vec![1]), Column::from_i64(vec![1, 2])],
         )
         .is_err());
         assert!(Table::new(Schema::of(&[("k", DataType::Int64)]), vec![]).is_err());
@@ -238,6 +258,25 @@ mod tests {
     }
 
     #[test]
+    fn slice_is_zero_copy() {
+        let t = t2();
+        let before = mem::thread();
+        let sl = t.slice(0, 2);
+        let delta = mem::thread().since(before);
+        assert_eq!(delta.materialized, 0, "slice must not copy rows");
+        assert!(delta.viewed > 0, "slice must be counted as a view");
+        // Structural proof: both columns share their backing buffers.
+        for j in 0..t.num_columns() {
+            assert!(sl.column(j).shares_buffer(t.column(j)));
+        }
+        // Projection is Arc clones only.
+        let before = mem::thread();
+        let p = t.project(&["k"]).unwrap();
+        assert_eq!(mem::thread().since(before).materialized, 0);
+        assert!(p.column(0).shares_buffer(t.column(0)));
+    }
+
+    #[test]
     fn concat_and_fingerprint() {
         let t = t2();
         let c = Table::concat(&[t.slice(0, 1), t.slice(1, 2)]).unwrap();
@@ -252,12 +291,32 @@ mod tests {
         let other = Table::new(
             t.schema().clone(),
             vec![
-                Column::Int64(vec![3, 1, 99]),
-                Column::Float64(vec![0.3, 0.1, 0.2]),
+                Column::from_i64(vec![3, 1, 99]),
+                Column::from_f64(vec![0.3, 0.1, 0.2]),
             ],
         )
         .unwrap();
         assert_ne!(other.multiset_fingerprint(), t.multiset_fingerprint());
+    }
+
+    #[test]
+    fn single_part_concat_is_zero_copy() {
+        let t = t2();
+        let before = mem::thread();
+        let c = Table::concat(std::slice::from_ref(&t)).unwrap();
+        assert_eq!(mem::thread().since(before).materialized, 0);
+        assert!(c.column(0).shares_buffer(t.column(0)));
+        assert_eq!(c, t);
+    }
+
+    #[test]
+    fn byte_size_charges_window_only() {
+        let t = t2();
+        let full = t.byte_size(); // 3 * (8 + 8)
+        assert_eq!(full, 48);
+        let sl = t.slice(1, 1);
+        assert_eq!(sl.byte_size(), 16);
+        assert_eq!(sl.backing_byte_size(), 48); // keeps the backing alive
     }
 
     #[test]

@@ -82,7 +82,7 @@ pub mod prelude {
     pub use crate::cluster::{MachineSpec, ResourceManager};
     pub use crate::comm::{CommWorld, Communicator, NetModel};
     pub use crate::config::ExperimentConfig;
-    pub use crate::df::{Column, DataType, Schema, Table};
+    pub use crate::df::{ChunkedTable, Column, DataType, Schema, Table};
     pub use crate::error::{Error, Result};
     pub use crate::exec::{
         BareMetalEngine, BatchEngine, Engine, EngineKind, HeterogeneousEngine,

@@ -9,6 +9,89 @@ use std::time::Instant;
 
 pub use crate::util::stats::Stats;
 
+/// Copy-vs-view accounting for the zero-copy columnar core.
+///
+/// Every fresh backing allocation in the `df` layer (builders, gathers,
+/// compactions) reports its payload to `record_materialized`; every O(1)
+/// window creation (`Buffer::slice`, `Utf8Buffer::slice`) reports the
+/// window size to `record_viewed`. Two scopes are kept:
+///
+/// * **global** ([`mem::global`]) — process-wide atomics, exact for
+///   single-workload processes (benches), where rank threads all feed one
+///   total;
+/// * **thread** ([`mem::thread`]) — thread-local counters, race-free for
+///   in-test assertions even under a parallel test runner ("this slice
+///   materialized zero bytes").
+///
+/// Counters only ever grow; measure an operation by delta:
+///
+/// ```
+/// use radical_cylon::metrics::mem;
+/// let before = mem::thread();
+/// // ... do columnar work on this thread ...
+/// let delta = mem::thread().since(before);
+/// assert_eq!(delta.materialized, 0);
+/// ```
+pub mod mem {
+    use std::cell::Cell;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static G_MATERIALIZED: AtomicU64 = AtomicU64::new(0);
+    static G_VIEWED: AtomicU64 = AtomicU64::new(0);
+
+    thread_local! {
+        static T_MATERIALIZED: Cell<u64> = const { Cell::new(0) };
+        static T_VIEWED: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// A snapshot of the two monotone counters, in bytes.
+    #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+    pub struct MemCounters {
+        /// Bytes written into fresh backing allocations (real copies).
+        pub materialized: u64,
+        /// Bytes made visible through O(1) window views (no copies).
+        pub viewed: u64,
+    }
+
+    impl MemCounters {
+        /// Delta relative to an earlier snapshot of the same scope.
+        pub fn since(self, earlier: MemCounters) -> MemCounters {
+            MemCounters {
+                materialized: self.materialized.wrapping_sub(earlier.materialized),
+                viewed: self.viewed.wrapping_sub(earlier.viewed),
+            }
+        }
+    }
+
+    /// Report `bytes` copied into a fresh backing allocation.
+    pub fn record_materialized(bytes: usize) {
+        G_MATERIALIZED.fetch_add(bytes as u64, Ordering::Relaxed);
+        T_MATERIALIZED.with(|c| c.set(c.get() + bytes as u64));
+    }
+
+    /// Report `bytes` exposed through a zero-copy view.
+    pub fn record_viewed(bytes: usize) {
+        G_VIEWED.fetch_add(bytes as u64, Ordering::Relaxed);
+        T_VIEWED.with(|c| c.set(c.get() + bytes as u64));
+    }
+
+    /// Process-wide totals (sum over all threads since start).
+    pub fn global() -> MemCounters {
+        MemCounters {
+            materialized: G_MATERIALIZED.load(Ordering::Relaxed),
+            viewed: G_VIEWED.load(Ordering::Relaxed),
+        }
+    }
+
+    /// This thread's totals (race-free under parallel tests).
+    pub fn thread() -> MemCounters {
+        MemCounters {
+            materialized: T_MATERIALIZED.with(|c| c.get()),
+            viewed: T_VIEWED.with(|c| c.get()),
+        }
+    }
+}
+
 /// Simple scope timer returning seconds.
 pub struct Timer(Instant);
 
@@ -229,6 +312,18 @@ mod tests {
         assert!((m.idle_fraction(4) - 0.5).abs() < 1e-12);
         assert!((m.slack_s() - 4.0).abs() < 1e-12);
         assert_eq!(PipelineMetrics::default().idle_fraction(8), 0.0);
+    }
+
+    #[test]
+    fn mem_counters_accumulate() {
+        let t0 = mem::thread();
+        mem::record_materialized(100);
+        mem::record_viewed(40);
+        let d = mem::thread().since(t0);
+        assert_eq!(d.materialized, 100);
+        assert_eq!(d.viewed, 40);
+        // Global totals include this thread's contribution.
+        assert!(mem::global().materialized >= 100);
     }
 
     #[test]

@@ -5,6 +5,14 @@
 //! sample-sort (local sort → splitter selection → range exchange → k-way
 //! merge).
 //!
+//! **Zero-copy data plane:** exchanges move `Arc`-backed column views, and
+//! receives land in a [`ChunkedTable`] ([`shuffle_by_key_chunked`],
+//! [`gather_table_chunked`]) instead of being flattened eagerly — the copy
+//! is deferred to `compact()`, which runs only when an operator needs
+//! contiguous access. `dist_sort`'s range exchange sends O(1) slice views
+//! (its partitions are contiguous after the local sort), and
+//! [`partition_slice`] carves per-rank input chunks without touching a row.
+//!
 //! Every operator takes a [`KernelBackend`] selecting the data-plane
 //! implementation for its hot spots:
 //!
@@ -14,10 +22,8 @@
 //!   [`KernelService`] pool (bit-compatible with the native path; asserted
 //!   by `tests/integration_runtime.rs`).
 
-use std::sync::Arc;
-
 use crate::comm::Communicator;
-use crate::df::{DataType, Schema, Table};
+use crate::df::{ChunkedTable, DataType, Schema, Table};
 use crate::error::Result;
 use crate::ops::local::{
     groupby_agg, hash_join, merge_sorted, sort_table, AggFn, JoinType, SortKey,
@@ -89,18 +95,21 @@ fn local_sort(t: &Table, col: usize, backend: &KernelBackend) -> Result<Table> {
     }
 }
 
-/// Hash-shuffle `t` by its int64 `key` column: every row travels to rank
+/// Hash-shuffle `t` by its int64 `key` column, returning the received
+/// partitions as a zero-copy [`ChunkedTable`] (one chunk per sender; the
+/// concat is deferred until a consumer compacts). Every row travels to rank
 /// `splitmix64(key) % p`, so all rows sharing a key land on one rank.
 /// Collective — every rank of `comm` must call with its own partition.
-pub fn shuffle_by_key(
+pub fn shuffle_by_key_chunked(
     comm: &Communicator,
     t: &Table,
     key: usize,
     backend: &KernelBackend,
-) -> Result<Table> {
+) -> Result<ChunkedTable> {
     let p = comm.size();
     if p == 1 {
-        return Ok(t.clone());
+        // Identity shuffle: Arc clones only, no row moves.
+        return Ok(ChunkedTable::from(t.clone()));
     }
     let keys = t.column(key).as_i64()?;
     let ids = partition_plan(keys, p as u32, backend)?;
@@ -108,14 +117,31 @@ pub fn shuffle_by_key(
     for (row, &d) in ids.iter().enumerate() {
         dest[d as usize].push(row);
     }
+    // The gather per destination is the one unavoidable materialization of
+    // a hash shuffle (arbitrary row routing); everything after is views.
     let sends: Vec<Table> = dest.iter().map(|idx| t.take(idx)).collect();
     let parts = comm.alltoall(sends);
-    Table::concat(&parts)
+    ChunkedTable::from_tables(parts)
+}
+
+/// [`shuffle_by_key_chunked`] compacted to a contiguous [`Table`] — for
+/// consumers that need contiguous column access immediately.
+pub fn shuffle_by_key(
+    comm: &Communicator,
+    t: &Table,
+    key: usize,
+    backend: &KernelBackend,
+) -> Result<Table> {
+    Ok(shuffle_by_key_chunked(comm, t, key, backend)?.into_table())
 }
 
 /// Distributed sample-sort by an int64 column. Postcondition: each rank's
 /// partition is sorted and rank `r`'s keys all precede rank `r+1`'s (global
 /// order across the communicator); the global row multiset is preserved.
+///
+/// The range exchange sends **O(1) slice views** of the locally-sorted
+/// table (zero row copies before the wire), and the k-way merge consumes
+/// the received parts directly — no intermediate concat on either side.
 pub fn dist_sort(
     comm: &Communicator,
     t: &Table,
@@ -147,7 +173,8 @@ pub fn dist_sort(
         }
     }
 
-    // Carve the locally-sorted table into p contiguous key ranges.
+    // Carve the locally-sorted table into p contiguous key ranges — pure
+    // window views over the sorted table's buffers.
     let mut sends = Vec::with_capacity(p);
     let mut start = 0usize;
     for r in 0..p {
@@ -164,7 +191,10 @@ pub fn dist_sort(
 
 /// Distributed hash join: co-locate both sides by key hash, then join
 /// locally. Key columns keep their positions through the shuffle, so
-/// `left_key`/`right_key` refer to the original tables.
+/// `left_key`/`right_key` refer to the original tables. The local hash
+/// join needs contiguous key columns, so each shuffled side is compacted
+/// exactly once, at this operator boundary (the single-rank/single-chunk
+/// cases compact for free).
 #[allow(clippy::too_many_arguments)]
 pub fn dist_hash_join(
     comm: &Communicator,
@@ -223,19 +253,35 @@ pub fn dist_groupby(
     Table::new(schema, combined.columns().to_vec())
 }
 
-/// Convenience: gather every rank's partition of `t` to group rank 0 and
-/// concatenate in rank order. Collective; non-roots receive `None`.
-pub fn gather_table(comm: &Communicator, t: Table) -> Result<Option<Table>> {
+/// Gather every rank's partition of `t` to group rank 0 as a zero-copy
+/// [`ChunkedTable`] (one chunk per rank, rank order — nothing is
+/// flattened). Collective; non-roots receive `None`. This is the producer
+/// side of the pipeline table handoff.
+pub fn gather_table_chunked(
+    comm: &Communicator,
+    t: Table,
+) -> Result<Option<ChunkedTable>> {
     match comm.gather(0, t) {
-        Some(parts) => Ok(Some(Table::concat(&parts)?)),
+        Some(parts) => Ok(Some(ChunkedTable::from_tables(parts)?)),
         None => Ok(None),
     }
 }
 
-/// Split a table into `parts` near-equal contiguous row chunks and return
-/// chunk `index` — how a staged pipeline input ([`Arc<Table>`] handed off
+/// Convenience: [`gather_table_chunked`] compacted to one contiguous
+/// table at the root.
+pub fn gather_table(comm: &Communicator, t: Table) -> Result<Option<Table>> {
+    Ok(gather_table_chunked(comm, t)?.map(ChunkedTable::into_table))
+}
+
+/// Split a chunked table into `parts` near-equal contiguous row windows
+/// and return window `index` — how a staged pipeline input (handed off
 /// from an upstream task) is distributed across a downstream task's ranks.
-pub fn partition_slice(t: &Arc<Table>, index: usize, parts: usize) -> Table {
+/// Zero-copy: the result is a window of views over the staged chunks.
+pub fn partition_slice(
+    t: &ChunkedTable,
+    index: usize,
+    parts: usize,
+) -> ChunkedTable {
     debug_assert!(index < parts && parts > 0);
     let n = t.num_rows();
     let start = index * n / parts;
@@ -248,6 +294,7 @@ mod tests {
     use super::*;
     use crate::comm::{CommWorld, NetModel, ReduceOp};
     use crate::df::{gen_table, gen_two_tables, Column, GenSpec};
+    use crate::metrics::mem;
     use crate::ops::local::is_sorted_by_key;
 
     fn world(p: usize) -> CommWorld {
@@ -257,7 +304,7 @@ mod tests {
     fn int_table(keys: Vec<i64>, vals: Vec<f64>) -> Table {
         Table::new(
             Schema::of(&[("key", DataType::Int64), ("val", DataType::Float64)]),
-            vec![Column::Int64(keys), Column::Float64(vals)],
+            vec![Column::from_i64(keys), Column::from_f64(vals)],
         )
         .unwrap()
     }
@@ -288,11 +335,39 @@ mod tests {
     }
 
     #[test]
+    fn chunked_shuffle_defers_the_concat() {
+        let p = 4;
+        let out = world(p)
+            .run(move |c| {
+                let t = gen_table(&GenSpec::uniform(600, 40, 9), c.rank());
+                let before =
+                    c.allreduce_u64(t.multiset_fingerprint(), ReduceOp::Sum);
+                let s = shuffle_by_key_chunked(&c, &t, 0, &KernelBackend::Native)
+                    .unwrap();
+                // One chunk per sender, no flattening yet.
+                assert_eq!(s.num_chunks(), p);
+                let after = c.allreduce_u64(s.multiset_fingerprint(), ReduceOp::Sum);
+                assert_eq!(before, after);
+                // Compacting yields the same table the eager path builds.
+                let flat = s.compact();
+                assert_eq!(flat.num_rows(), s.num_rows());
+                assert_eq!(flat.multiset_fingerprint(), s.multiset_fingerprint());
+                s.num_rows()
+            })
+            .unwrap();
+        assert_eq!(out.iter().sum::<usize>(), 600 * p);
+    }
+
+    #[test]
     fn shuffle_single_rank_is_identity() {
         let out = world(1)
             .run(|c| {
                 let t = gen_table(&GenSpec::uniform(50, 10, 3), 0);
+                // p == 1: pure Arc clones — zero bytes materialized.
+                let before = mem::thread();
                 let s = shuffle_by_key(&c, &t, 0, &KernelBackend::Native).unwrap();
+                assert_eq!(mem::thread().since(before).materialized, 0);
+                assert!(s.column(0).shares_buffer(t.column(0)));
                 s == t
             })
             .unwrap();
@@ -452,12 +527,67 @@ mod tests {
     }
 
     #[test]
+    fn gather_table_chunked_keeps_parts() {
+        let out = world(3)
+            .run(|c| {
+                let t = int_table(vec![c.rank() as i64, 10 + c.rank() as i64], vec![0.0; 2]);
+                gather_table_chunked(&c, t).unwrap()
+            })
+            .unwrap();
+        let root = out[0].as_ref().unwrap();
+        assert_eq!(root.num_chunks(), 3); // one per rank, nothing flattened
+        assert_eq!(root.num_rows(), 6);
+        assert_eq!(
+            root.compact().column(0).as_i64().unwrap(),
+            &[0, 10, 1, 11, 2, 12]
+        );
+    }
+
+    #[test]
     fn partition_slice_covers_table() {
-        let t = Arc::new(int_table((0..10).collect(), vec![0.0; 10]));
+        let t = ChunkedTable::from(int_table((0..10).collect(), vec![0.0; 10]));
         let parts: Vec<Table> =
-            (0..3).map(|i| partition_slice(&t, i, 3)).collect();
+            (0..3).map(|i| partition_slice(&t, i, 3).into_table()).collect();
         assert_eq!(parts.iter().map(|p| p.num_rows()).sum::<usize>(), 10);
         let back = Table::concat(&parts).unwrap();
         assert_eq!(back.column(0).as_i64().unwrap(), &(0..10).collect::<Vec<_>>()[..]);
+    }
+
+    #[test]
+    fn partition_slice_is_zero_copy() {
+        // The acceptance property: per-rank input chunking of a staged
+        // (single-chunk) table materializes zero bytes — it is windows all
+        // the way down, including the final into_table().
+        let staged = ChunkedTable::from(int_table((0..1000).collect(), vec![0.0; 1000]));
+        let before = mem::thread();
+        let mut total = 0;
+        for i in 0..4 {
+            let chunk = partition_slice(&staged, i, 4);
+            total += chunk.num_rows();
+            let t = chunk.into_table(); // single-chunk fast path: no concat
+            assert!(t.column(0).shares_buffer(staged.chunks()[0].column(0)));
+        }
+        let delta = mem::thread().since(before);
+        assert_eq!(delta.materialized, 0, "per-rank chunking must not copy");
+        assert!(delta.viewed > 0);
+        assert_eq!(total, 1000);
+    }
+
+    #[test]
+    fn partition_slice_spans_chunks() {
+        // A gathered (multi-chunk) staged table still partitions correctly
+        // when rank windows straddle chunk boundaries.
+        let staged = ChunkedTable::from_tables(vec![
+            int_table((0..4).collect(), vec![0.0; 4]),
+            int_table((4..7).collect(), vec![0.0; 7 - 4]),
+            int_table((7..10).collect(), vec![0.0; 3]),
+        ])
+        .unwrap();
+        let mut all = Vec::new();
+        for i in 0..4 {
+            let part = partition_slice(&staged, i, 4).into_table();
+            all.extend_from_slice(part.column(0).as_i64().unwrap());
+        }
+        assert_eq!(all, (0..10).collect::<Vec<i64>>());
     }
 }

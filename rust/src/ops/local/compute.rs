@@ -69,11 +69,11 @@ pub fn binary_op(lhs: &Column, rhs: &Column, op: BinOp) -> Result<Column> {
         return Err(Error::DataFrame("binary_op length mismatch".into()));
     }
     match (lhs, rhs) {
-        (Column::Int64(a), Column::Int64(b)) => Ok(Column::Int64(
-            a.iter().zip(b).map(|(&x, &y)| op.i64(x, y)).collect(),
+        (Column::Int64(a), Column::Int64(b)) => Ok(Column::from_i64(
+            a.iter().zip(b.iter()).map(|(&x, &y)| op.i64(x, y)).collect(),
         )),
-        (Column::Float64(a), Column::Float64(b)) => Ok(Column::Float64(
-            a.iter().zip(b).map(|(&x, &y)| op.f64(x, y)).collect(),
+        (Column::Float64(a), Column::Float64(b)) => Ok(Column::from_f64(
+            a.iter().zip(b.iter()).map(|(&x, &y)| op.f64(x, y)).collect(),
         )),
         (a, b) => Err(Error::DataFrame(format!(
             "binary_op on {}/{} is not supported",
@@ -86,7 +86,7 @@ pub fn binary_op(lhs: &Column, rhs: &Column, op: BinOp) -> Result<Column> {
 /// Elementwise `col op scalar` (int64 scalar broadcast).
 pub fn scalar_op_i64(col: &Column, scalar: i64, op: BinOp) -> Result<Column> {
     match col {
-        Column::Int64(a) => Ok(Column::Int64(
+        Column::Int64(a) => Ok(Column::from_i64(
             a.iter().map(|&x| op.i64(x, scalar)).collect(),
         )),
         other => Err(Error::DataFrame(format!(
@@ -120,15 +120,16 @@ pub fn compare_scalar(col: &Column, scalar: f64, op: CmpOp) -> Result<Vec<bool>>
 /// Cast a column to another numeric type.
 pub fn cast(col: &Column, to: DataType) -> Result<Column> {
     match (col, to) {
+        // Same-type cast: an Arc clone, no copy.
         (c, t) if c.dtype() == t => Ok(c.clone()),
         (Column::Int64(v), DataType::Float64) => {
-            Ok(Column::Float64(v.iter().map(|&x| x as f64).collect()))
+            Ok(Column::from_f64(v.iter().map(|&x| x as f64).collect()))
         }
         (Column::Float64(v), DataType::Int64) => {
-            Ok(Column::Int64(v.iter().map(|&x| x as i64).collect()))
+            Ok(Column::from_i64(v.iter().map(|&x| x as i64).collect()))
         }
         (Column::Bool(v), DataType::Int64) => {
-            Ok(Column::Int64(v.iter().map(|&x| x as i64).collect()))
+            Ok(Column::from_i64(v.iter().map(|&x| x as i64).collect()))
         }
         (c, t) => Err(Error::DataFrame(format!(
             "cast {} -> {t} is not supported",
@@ -162,8 +163,8 @@ mod tests {
         Table::new(
             Schema::of(&[("k", DataType::Int64), ("v", DataType::Float64)]),
             vec![
-                Column::Int64(vec![1, 2, 3, 4]),
-                Column::Float64(vec![0.5, 1.5, 2.5, 3.5]),
+                Column::from_i64(vec![1, 2, 3, 4]),
+                Column::from_f64(vec![0.5, 1.5, 2.5, 3.5]),
             ],
         )
         .unwrap()
@@ -171,29 +172,29 @@ mod tests {
 
     #[test]
     fn arithmetic() {
-        let a = Column::Int64(vec![10, 20]);
-        let b = Column::Int64(vec![3, 4]);
+        let a = Column::from_i64(vec![10, 20]);
+        let b = Column::from_i64(vec![3, 4]);
         assert_eq!(
             binary_op(&a, &b, BinOp::Add).unwrap(),
-            Column::Int64(vec![13, 24])
+            Column::from_i64(vec![13, 24])
         );
         assert_eq!(
             binary_op(&a, &b, BinOp::Div).unwrap(),
-            Column::Int64(vec![3, 5])
+            Column::from_i64(vec![3, 5])
         );
-        let z = Column::Int64(vec![0, 0]);
+        let z = Column::from_i64(vec![0, 0]);
         assert_eq!(
             binary_op(&a, &z, BinOp::Div).unwrap(),
-            Column::Int64(vec![0, 0]) // div-by-zero -> 0 (null-free model)
+            Column::from_i64(vec![0, 0]) // div-by-zero -> 0 (null-free model)
         );
-        assert!(binary_op(&a, &Column::Float64(vec![1.0, 2.0]), BinOp::Add).is_err());
+        assert!(binary_op(&a, &Column::from_f64(vec![1.0, 2.0]), BinOp::Add).is_err());
     }
 
     #[test]
     fn scalar_and_compare() {
         let t = table();
         let doubled = scalar_op_i64(t.column(0), 2, BinOp::Mul).unwrap();
-        assert_eq!(doubled, Column::Int64(vec![2, 4, 6, 8]));
+        assert_eq!(doubled, Column::from_i64(vec![2, 4, 6, 8]));
         let mask = compare_scalar(t.column(1), 2.0, CmpOp::Gt).unwrap();
         assert_eq!(mask, vec![false, false, true, true]);
         let filtered = t.filter(&mask).unwrap();
@@ -202,13 +203,13 @@ mod tests {
 
     #[test]
     fn casts() {
-        let c = cast(&Column::Int64(vec![1, 2]), DataType::Float64).unwrap();
-        assert_eq!(c, Column::Float64(vec![1.0, 2.0]));
+        let c = cast(&Column::from_i64(vec![1, 2]), DataType::Float64).unwrap();
+        assert_eq!(c, Column::from_f64(vec![1.0, 2.0]));
         let back = cast(&c, DataType::Int64).unwrap();
-        assert_eq!(back, Column::Int64(vec![1, 2]));
-        let b = cast(&Column::Bool(vec![true, false]), DataType::Int64).unwrap();
-        assert_eq!(b, Column::Int64(vec![1, 0]));
-        assert!(cast(&Column::Utf8(vec!["x".into()]), DataType::Int64).is_err());
+        assert_eq!(back, Column::from_i64(vec![1, 2]));
+        let b = cast(&Column::from_bool(vec![true, false]), DataType::Int64).unwrap();
+        assert_eq!(b, Column::from_i64(vec![1, 0]));
+        assert!(cast(&Column::from_utf8(&["x"]), DataType::Int64).is_err());
     }
 
     #[test]
@@ -227,6 +228,6 @@ mod tests {
             t2.column(2).as_f64().unwrap(),
             &[1.5, 3.5, 5.5, 7.5]
         );
-        assert!(with_column(&t, "bad", Column::Int64(vec![1])).is_err());
+        assert!(with_column(&t, "bad", Column::from_i64(vec![1])).is_err());
     }
 }

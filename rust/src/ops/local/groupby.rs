@@ -90,7 +90,7 @@ pub fn groupby_agg(
             (key_name, DataType::Int64),
             (&format!("{val_name}_{}", agg.name()), DataType::Float64),
         ]),
-        vec![Column::Int64(out_keys), Column::Float64(out_vals)],
+        vec![Column::from_i64(out_keys), Column::from_f64(out_vals)],
     )
 }
 
@@ -102,7 +102,7 @@ mod tests {
     fn t(keys: Vec<i64>, vals: Vec<f64>) -> Table {
         Table::new(
             Schema::of(&[("key", DataType::Int64), ("val", DataType::Float64)]),
-            vec![Column::Int64(keys), Column::Float64(vals)],
+            vec![Column::from_i64(keys), Column::from_f64(vals)],
         )
         .unwrap()
     }

@@ -3,7 +3,7 @@
 
 use std::collections::HashMap;
 
-use crate::df::{Column, Table};
+use crate::df::{Column, Table, Utf8Builder};
 use crate::error::{Error, Result};
 use crate::util::hash::SplitMixBuild;
 
@@ -13,9 +13,58 @@ use super::sort::{sort_table, SortKey};
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum JoinType {
     Inner,
-    /// Left outer — unmatched left rows keep defaults on the right side
-    /// (0 / 0.0 / "" / false), matching Cylon's null-free synthetic eval.
+    /// Left outer — unmatched left rows take the [`FillPolicy`]'s values on
+    /// the right side.
     Left,
+}
+
+/// Per-dtype values written into the right side of unmatched rows in outer
+/// joins.
+///
+/// This table has no validity bitmap (null-free synthetic workloads, per
+/// the paper), so an outer join **must** fabricate something for unmatched
+/// rows — and whatever it fabricates is indistinguishable from real data
+/// downstream. This policy makes that choice explicit at the API level
+/// instead of burying a hard-coded `unwrap_or_default()` in the gather:
+/// callers that need to tell fill from data pick sentinels outside their
+/// domain (e.g. `i64::MIN`, `f64::NAN`, `"<null>"`).
+///
+/// [`FillPolicy::zeros`] (the `Default`) matches Cylon's null-free
+/// evaluation setup: `0` / `0.0` / `""` / `false`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FillPolicy {
+    pub int64: i64,
+    pub float64: f64,
+    pub utf8: String,
+    pub bool_: bool,
+}
+
+impl FillPolicy {
+    /// Zero-values fill (`0` / `0.0` / `""` / `false`) — indistinguishable
+    /// from real zeros; fine for workloads that never read unmatched rows.
+    pub fn zeros() -> FillPolicy {
+        FillPolicy { int64: 0, float64: 0.0, utf8: String::new(), bool_: false }
+    }
+
+    /// Out-of-band sentinels (`i64::MIN` / `-inf` / `"<null>"` / `false`):
+    /// unmatched rows stay recognizably synthetic downstream. `-inf` rather
+    /// than `NaN` so sentinel-filled outputs keep reflexive equality
+    /// (`Table`/`Column`/`FillPolicy` derive `PartialEq`; a NaN cell would
+    /// make a result compare unequal to itself).
+    pub fn sentinels() -> FillPolicy {
+        FillPolicy {
+            int64: i64::MIN,
+            float64: f64::NEG_INFINITY,
+            utf8: "<null>".to_string(),
+            bool_: false,
+        }
+    }
+}
+
+impl Default for FillPolicy {
+    fn default() -> FillPolicy {
+        FillPolicy::zeros()
+    }
 }
 
 fn key_col(t: &Table, col: usize) -> Result<&[i64]> {
@@ -33,6 +82,7 @@ fn assemble(
     right_key: usize,
     pairs_l: Vec<usize>,
     pairs_r: Vec<Option<usize>>,
+    fill: &FillPolicy,
 ) -> Result<Table> {
     let schema = left.schema().join(drop_field(right, right_key).0.schema());
     let mut cols: Vec<Column> = Vec::with_capacity(schema.len());
@@ -41,12 +91,13 @@ fn assemble(
     }
     let (rt, _) = drop_field(right, right_key);
     for c in rt_columns(&rt) {
-        cols.push(take_optional(c, &pairs_r));
+        cols.push(take_optional(c, &pairs_r, fill));
     }
     Table::new(schema, cols)
 }
 
 /// Right table minus its key column (the key survives via the left side).
+/// Projection is `Arc` clones — no column data moves.
 fn drop_field(t: &Table, key: usize) -> (Table, usize) {
     let names: Vec<&str> = t
         .schema()
@@ -63,32 +114,58 @@ fn rt_columns(t: &Table) -> &[Column] {
     t.columns()
 }
 
-fn take_optional(c: &Column, idx: &[Option<usize>]) -> Column {
+/// Gather with optional indices: `None` slots take the fill value.
+fn take_optional(c: &Column, idx: &[Option<usize>], fill: &FillPolicy) -> Column {
     match c {
-        Column::Int64(v) => {
-            Column::Int64(idx.iter().map(|i| i.map(|i| v[i]).unwrap_or(0)).collect())
-        }
-        Column::Float64(v) => Column::Float64(
-            idx.iter().map(|i| i.map(|i| v[i]).unwrap_or(0.0)).collect(),
+        Column::Int64(v) => Column::from_i64(
+            idx.iter().map(|i| i.map(|i| v[i]).unwrap_or(fill.int64)).collect(),
         ),
-        Column::Utf8(v) => Column::Utf8(
+        Column::Float64(v) => Column::from_f64(
             idx.iter()
-                .map(|i| i.map(|i| v[i].clone()).unwrap_or_default())
+                .map(|i| i.map(|i| v[i]).unwrap_or(fill.float64))
                 .collect(),
         ),
-        Column::Bool(v) => Column::Bool(
-            idx.iter().map(|i| i.map(|i| v[i]).unwrap_or(false)).collect(),
+        Column::Utf8(v) => {
+            let bytes: usize = idx
+                .iter()
+                .map(|i| i.map_or(fill.utf8.len(), |i| v.get(i).len()))
+                .sum();
+            let mut b = Utf8Builder::with_capacity(idx.len(), bytes);
+            for i in idx {
+                match i {
+                    Some(i) => b.push(v.get(*i)),
+                    None => b.push(&fill.utf8),
+                }
+            }
+            Column::Utf8(b.finish())
+        }
+        Column::Bool(v) => Column::from_bool(
+            idx.iter().map(|i| i.map(|i| v[i]).unwrap_or(fill.bool_)).collect(),
         ),
     }
 }
 
-/// Hash join: build on the right table, probe with the left.
+/// Hash join with the default [`FillPolicy::zeros`] fill for outer rows.
 pub fn hash_join(
     left: &Table,
     right: &Table,
     left_key: usize,
     right_key: usize,
     how: JoinType,
+) -> Result<Table> {
+    hash_join_filled(left, right, left_key, right_key, how, &FillPolicy::zeros())
+}
+
+/// Hash join: build on the right table, probe with the left. Unmatched
+/// left rows (outer joins only) take `fill`'s per-dtype values on the
+/// right side.
+pub fn hash_join_filled(
+    left: &Table,
+    right: &Table,
+    left_key: usize,
+    right_key: usize,
+    how: JoinType,
+    fill: &FillPolicy,
 ) -> Result<Table> {
     let lk = key_col(left, left_key)?;
     let rk = key_col(right, right_key)?;
@@ -119,7 +196,7 @@ pub fn hash_join(
             }
         }
     }
-    assemble(left, right, right_key, pairs_l, pairs_r)
+    assemble(left, right, right_key, pairs_l, pairs_r, fill)
 }
 
 /// Sort-merge join (inner only): sorts both sides then merges match runs.
@@ -156,7 +233,7 @@ pub fn sort_merge_join(
             }
         }
     }
-    assemble(&ls, &rs, right_key, pairs_l, pairs_r)
+    assemble(&ls, &rs, right_key, pairs_l, pairs_r, &FillPolicy::zeros())
 }
 
 /// O(n·m) oracle used by the property tests.
@@ -178,7 +255,7 @@ pub fn nested_loop_join(
             }
         }
     }
-    assemble(left, right, right_key, pairs_l, pairs_r)
+    assemble(left, right, right_key, pairs_l, pairs_r, &FillPolicy::zeros())
 }
 
 #[cfg(test)]
@@ -190,7 +267,7 @@ mod tests {
     fn t(keys: Vec<i64>, vals: Vec<i64>) -> Table {
         Table::new(
             Schema::of(&[("key", DataType::Int64), ("v", DataType::Int64)]),
-            vec![Column::Int64(keys), Column::Int64(vals)],
+            vec![Column::from_i64(keys), Column::from_i64(vals)],
         )
         .unwrap()
     }
@@ -216,8 +293,64 @@ mod tests {
         let r = t(vec![1], vec![100]);
         let j = hash_join(&l, &r, 0, 0, JoinType::Left).unwrap();
         assert_eq!(j.num_rows(), 2);
-        // unmatched right value defaults to 0
+        // unmatched right value takes the default zero fill
         assert_eq!(j.column(2).as_i64().unwrap(), &[100, 0]);
+    }
+
+    #[test]
+    fn left_join_fill_policy_is_explicit() {
+        let l = t(vec![1, 5], vec![10, 50]);
+        let r = t(vec![1], vec![100]);
+        // Sentinel fill keeps unmatched rows recognizable.
+        let j =
+            hash_join_filled(&l, &r, 0, 0, JoinType::Left, &FillPolicy::sentinels())
+                .unwrap();
+        assert_eq!(j.column(2).as_i64().unwrap(), &[100, i64::MIN]);
+        // Custom fill value.
+        let fill = FillPolicy { int64: -7, ..FillPolicy::zeros() };
+        let j = hash_join_filled(&l, &r, 0, 0, JoinType::Left, &fill).unwrap();
+        assert_eq!(j.column(2).as_i64().unwrap(), &[100, -7]);
+        // Inner joins never consult the policy.
+        let a = hash_join_filled(
+            &l, &r, 0, 0,
+            JoinType::Inner,
+            &FillPolicy::sentinels(),
+        )
+        .unwrap();
+        let b = hash_join(&l, &r, 0, 0, JoinType::Inner).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fill_policy_covers_all_dtypes() {
+        let l = t(vec![1, 5], vec![10, 50]);
+        let r = Table::new(
+            Schema::of(&[
+                ("key", DataType::Int64),
+                ("f", DataType::Float64),
+                ("s", DataType::Utf8),
+                ("b", DataType::Bool),
+            ]),
+            vec![
+                Column::from_i64(vec![1]),
+                Column::from_f64(vec![1.25]),
+                Column::from_utf8(&["hit"]),
+                Column::from_bool(vec![true]),
+            ],
+        )
+        .unwrap();
+        let fill = FillPolicy {
+            int64: -1,
+            float64: -2.5,
+            utf8: "<miss>".into(),
+            bool_: false,
+        };
+        let j = hash_join_filled(&l, &r, 0, 0, JoinType::Left, &fill).unwrap();
+        assert_eq!(j.num_rows(), 2);
+        assert_eq!(j.column(2).as_f64().unwrap(), &[1.25, -2.5]);
+        let s = j.column(3).as_utf8().unwrap();
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec!["hit", "<miss>"]);
+        assert_eq!(j.column(4).as_bool().unwrap(), &[true, false]);
     }
 
     #[test]

@@ -10,6 +10,9 @@ pub use compute::{
     binary_op, cast, compare_scalar, scalar_op_i64, with_column, BinOp, CmpOp,
 };
 pub use groupby::{groupby_agg, AggFn};
-pub use join::{hash_join, nested_loop_join, sort_merge_join, JoinType};
+pub use join::{
+    hash_join, hash_join_filled, nested_loop_join, sort_merge_join, FillPolicy,
+    JoinType,
+};
 pub use sort::{is_sorted_by_key, merge_sorted, sort_table, sort_table_multi, SortKey};
 pub use unique::{unique_by_key, unique_rows};

@@ -1,6 +1,6 @@
 //! Local sort and k-way merge.
 
-use crate::df::{Column, Table};
+use crate::df::{Column, Table, Utf8Builder};
 use crate::error::{Error, Result};
 
 /// A sort key: column index + direction.
@@ -24,7 +24,7 @@ fn cmp_values(c: &Column, a: usize, b: usize) -> std::cmp::Ordering {
     match c {
         Column::Int64(v) => v[a].cmp(&v[b]),
         Column::Float64(v) => v[a].partial_cmp(&v[b]).unwrap_or(Ordering::Equal),
-        Column::Utf8(v) => v[a].cmp(&v[b]),
+        Column::Utf8(v) => v.get(a).cmp(v.get(b)),
         Column::Bool(v) => v[a].cmp(&v[b]),
     }
 }
@@ -142,7 +142,7 @@ pub fn merge_sorted(parts: &[Table], col: usize) -> Result<Table> {
                 for &(pi, ri) in &order {
                     v.push(srcs[pi as usize][ri as usize]);
                 }
-                Column::Int64(v)
+                Column::from_i64(v)
             }
             Column::Float64(_) => {
                 let srcs: Vec<&[f64]> =
@@ -151,18 +151,20 @@ pub fn merge_sorted(parts: &[Table], col: usize) -> Result<Table> {
                 for &(pi, ri) in &order {
                     v.push(srcs[pi as usize][ri as usize]);
                 }
-                Column::Float64(v)
+                Column::from_f64(v)
             }
             Column::Utf8(_) => {
-                let srcs: Vec<&[String]> = parts
+                // Gather straight into one output arena.
+                let srcs: Vec<&crate::df::Utf8Buffer> = parts
                     .iter()
                     .map(|p| p.column(j).as_utf8().unwrap())
                     .collect();
-                let mut v = Vec::with_capacity(total);
+                let bytes: usize = srcs.iter().map(|s| s.str_bytes()).sum();
+                let mut b = Utf8Builder::with_capacity(total, bytes);
                 for &(pi, ri) in &order {
-                    v.push(srcs[pi as usize][ri as usize].clone());
+                    b.push(srcs[pi as usize].get(ri as usize));
                 }
-                Column::Utf8(v)
+                Column::Utf8(b.finish())
             }
             Column::Bool(_) => {
                 let mut v = Vec::with_capacity(total);
@@ -172,7 +174,7 @@ pub fn merge_sorted(parts: &[Table], col: usize) -> Result<Table> {
                         _ => unreachable!("schemas validated identical"),
                     }
                 }
-                Column::Bool(v)
+                Column::from_bool(v)
             }
         };
         out_cols.push(col);
@@ -189,7 +191,7 @@ mod tests {
     fn table(keys: Vec<i64>, vals: Vec<f64>) -> Table {
         Table::new(
             Schema::of(&[("key", DataType::Int64), ("val", DataType::Float64)]),
-            vec![Column::Int64(keys), Column::Float64(vals)],
+            vec![Column::from_i64(keys), Column::from_f64(vals)],
         )
         .unwrap()
     }
@@ -209,8 +211,8 @@ mod tests {
         let t = Table::new(
             Schema::of(&[("a", DataType::Int64), ("b", DataType::Int64)]),
             vec![
-                Column::Int64(vec![1, 1, 0]),
-                Column::Int64(vec![5, 3, 9]),
+                Column::from_i64(vec![1, 1, 0]),
+                Column::from_i64(vec![5, 3, 9]),
             ],
         )
         .unwrap();

@@ -47,7 +47,7 @@ mod tests {
     fn t(keys: Vec<i64>, vals: Vec<i64>) -> Table {
         Table::new(
             Schema::of(&[("k", DataType::Int64), ("v", DataType::Int64)]),
-            vec![Column::Int64(keys), Column::Int64(vals)],
+            vec![Column::from_i64(keys), Column::from_i64(vals)],
         )
         .unwrap()
     }

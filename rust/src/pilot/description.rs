@@ -6,7 +6,7 @@
 use std::sync::Arc;
 
 use crate::cluster::MachineSpec;
-use crate::df::Table;
+use crate::df::{ChunkedTable, Table};
 
 /// Key distribution of the generated workload (re-exported df type).
 pub use crate::df::KeyDist as DataDist;
@@ -118,10 +118,13 @@ pub struct TaskDescription {
     /// Which rank pool the private communicator is carved from.
     pub rank_class: RankClass,
     /// Staged input table (pipeline table handoff): when set, the task's
-    /// ranks consume contiguous row chunks of this table instead of
-    /// generating synthetic data from the spec above. For joins, the staged
+    /// ranks consume contiguous row windows of this table instead of
+    /// generating synthetic data from the spec above. Held as a
+    /// [`ChunkedTable`] so a gathered upstream output stays in its
+    /// per-rank parts and the per-rank windowing copies nothing
+    /// ([`crate::ops::dist::partition_slice`]). For joins, the staged
     /// table is the *left* side; the right side is still generated.
-    pub input: Option<Arc<Table>>,
+    pub input: Option<Arc<ChunkedTable>>,
     /// Collect the task's output table (gathered to group rank 0 and
     /// carried in [`super::TaskResult::output`]) — the producer side of the
     /// pipeline handoff. Off by default: gathering costs one extra
@@ -146,11 +149,16 @@ impl TaskDescription {
         }
     }
 
-    /// Stage an input table: ranks consume contiguous chunks of it instead
-    /// of generating synthetic data (pipeline table handoff).
-    pub fn with_input(mut self, table: Arc<Table>) -> Self {
+    /// Stage an input table: ranks consume contiguous windows of it
+    /// instead of generating synthetic data (pipeline table handoff).
+    pub fn with_input(mut self, table: Arc<ChunkedTable>) -> Self {
         self.input = Some(table);
         self
+    }
+
+    /// [`Self::with_input`] convenience for a contiguous table.
+    pub fn with_input_table(self, table: Table) -> Self {
+        self.with_input(Arc::new(ChunkedTable::from(table)))
     }
 
     /// Request the output table be gathered and returned in the

@@ -2,7 +2,7 @@
 
 use std::sync::{Arc, Condvar, Mutex};
 
-use crate::df::Table;
+use crate::df::ChunkedTable;
 use crate::error::{Error, Result};
 use crate::metrics::ExecMeasurement;
 
@@ -52,9 +52,11 @@ pub struct TaskResult {
     /// Rows in the task's output table(s), summed over ranks.
     pub output_rows: u64,
     /// The gathered output table, present only when the description set
-    /// `keep_output` (pipeline table handoff). `Arc` keeps clones of the
-    /// result cheap as it fans out to downstream consumers.
-    pub output: Option<Arc<Table>>,
+    /// `keep_output` (pipeline table handoff). Kept as a [`ChunkedTable`]
+    /// of per-rank parts — never flattened on the handoff path — and
+    /// `Arc`-wrapped so clones stay cheap as it fans out to downstream
+    /// consumers.
+    pub output: Option<Arc<ChunkedTable>>,
     pub error: Option<String>,
 }
 

@@ -20,9 +20,12 @@
 //! **Table handoff:** a node added with [`Pipeline::add_piped`] consumes the
 //! gathered output table of an upstream node instead of regenerating
 //! synthetic data — the executor marks the producer with `keep_output`,
-//! threads the resulting [`Arc<Table>`](crate::df::Table) into the
-//! consumer's [`TaskDescription::input`], and the consumer's ranks each take
-//! a contiguous chunk.
+//! threads the resulting [`Arc<ChunkedTable>`](crate::df::ChunkedTable)
+//! into the consumer's [`TaskDescription::input`], and the consumer's ranks
+//! each carve a contiguous window zero-copy
+//! ([`crate::ops::dist::partition_slice`]). The producer's gathered parts
+//! are never flattened on this path; a consumer rank materializes at most
+//! its own window.
 //!
 //! Both executors fill a [`PipelineMetrics`] with per-node timings,
 //! critical-path, and rank-idle accounting.
@@ -31,6 +34,8 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::df::ChunkedTable;
+#[cfg(test)]
 use crate::df::Table;
 use crate::error::{Error, Result};
 use crate::metrics::{NodeMetric, PipelineMetrics};
@@ -208,7 +213,7 @@ impl Pipeline {
         &self,
         i: usize,
         keep: &[bool],
-        outputs: &[Option<Arc<Table>>],
+        outputs: &[Option<Arc<ChunkedTable>>],
     ) -> TaskDescription {
         let mut td = self.nodes[i].td.clone();
         if keep[i] {
@@ -296,7 +301,8 @@ impl Pipeline {
         let t0 = Instant::now();
         let (tx, rx) = mpsc::channel::<(usize, Result<TaskResult>)>();
         let mut results: Vec<Option<TaskResult>> = (0..n).map(|_| None).collect();
-        let mut outputs: Vec<Option<Arc<Table>>> = (0..n).map(|_| None).collect();
+        let mut outputs: Vec<Option<Arc<ChunkedTable>>> =
+            (0..n).map(|_| None).collect();
         let mut submitted_s = vec![0.0f64; n];
         let mut finished_s = vec![0.0f64; n];
         let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
@@ -388,7 +394,8 @@ impl Pipeline {
         let keep = self.keep_flags();
         let t0 = Instant::now();
         let mut results: Vec<Option<TaskResult>> = (0..n).map(|_| None).collect();
-        let mut outputs: Vec<Option<Arc<Table>>> = (0..n).map(|_| None).collect();
+        let mut outputs: Vec<Option<Arc<ChunkedTable>>> =
+            (0..n).map(|_| None).collect();
         let mut submitted_s = vec![0.0f64; n];
         let mut finished_s = vec![0.0f64; n];
         for wave in waves {
@@ -643,7 +650,8 @@ mod tests {
         let out = run.results[agg]
             .output
             .as_ref()
-            .expect("collect_output() carries the table");
+            .expect("collect_output() carries the table")
+            .compact();
 
         // Oracle: the groupby must have consumed gen's actual output (the
         // sorted synthetic partitions), not fresh 9999-row synthetic data.

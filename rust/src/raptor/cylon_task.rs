@@ -3,12 +3,12 @@
 //! communication on the same framework).
 
 use crate::comm::{Communicator, ReduceOp};
-use crate::df::{gen_table, gen_two_tables, GenSpec, Table};
+use crate::df::{gen_table, gen_two_tables, ChunkedTable, GenSpec, Table};
 use crate::error::{Error, Result};
 use crate::metrics::Timer;
 use crate::ops::dist::{
-    dist_groupby, dist_hash_join, dist_sort, gather_table, partition_slice,
-    KernelBackend,
+    dist_groupby, dist_hash_join, dist_sort, gather_table_chunked,
+    partition_slice, KernelBackend,
 };
 use crate::ops::local::{AggFn, JoinType};
 use crate::pilot::{CylonOp, TaskDescription};
@@ -25,19 +25,23 @@ pub struct RankStats {
 }
 
 /// Stats plus the gathered output table (group rank 0 only, and only when
-/// the description requested `keep_output`).
+/// the description requested `keep_output`). The output stays a
+/// [`ChunkedTable`] of per-rank parts — the handoff path never flattens.
 #[derive(Clone, Debug, Default)]
 pub struct TaskOutcome {
     pub stats: RankStats,
-    pub output: Option<Table>,
+    pub output: Option<ChunkedTable>,
 }
 
 /// Run `td`'s operation on this rank of the private communicator and
 /// aggregate the task-level stats (every rank returns the same stats).
 ///
 /// Input resolution (pipeline table handoff): when `td.input` is staged,
-/// each rank consumes a contiguous chunk of the staged table instead of
+/// each rank consumes a contiguous window of the staged table instead of
 /// generating synthetic data — for joins the staged table is the left side.
+/// The window is carved zero-copy ([`partition_slice`]); it is compacted to
+/// a contiguous table only if it straddles chunk boundaries, so a rank
+/// materializes at most its own window, never the whole staged table.
 ///
 /// Failure injection (`name` starting with `__fail__`) errors *before* any
 /// collective so all ranks fail symmetrically — the fault-isolation tests
@@ -63,7 +67,7 @@ pub fn run_cylon_task_full(
     let staged: Option<Table> = td
         .input
         .as_ref()
-        .map(|t| partition_slice(t, comm.rank(), comm.size()));
+        .map(|t| partition_slice(t, comm.rank(), comm.size()).into_table());
     let timer = Timer::start();
     let out = match td.op {
         CylonOp::Join => {
@@ -86,7 +90,9 @@ pub fn run_cylon_task_full(
     // the ranks), so it runs inside the timer window.
     let out_rows = out.num_rows() as u64;
     let output = if td.keep_output {
-        gather_table(comm, out)? // collective; Some at group rank 0 only
+        // Collective; Some at group rank 0 only. Chunked: the per-rank
+        // parts are adopted as-is, no flattening copy.
+        gather_table_chunked(comm, out)?
     } else {
         None
     };
@@ -172,18 +178,16 @@ mod tests {
     fn staged_input_replaces_generation() {
         // A 6-row staged table sorted across 2 ranks: output rows must equal
         // the staged rows, not the description's synthetic 500/rank.
-        let staged = Arc::new(
-            Table::new(
-                Schema::of(&[("key", DataType::Int64), ("val", DataType::Float64)]),
-                vec![
-                    Column::Int64(vec![5, 3, 9, 1, 7, 2]),
-                    Column::Float64(vec![0.0; 6]),
-                ],
-            )
-            .unwrap(),
-        );
+        let staged = Table::new(
+            Schema::of(&[("key", DataType::Int64), ("val", DataType::Float64)]),
+            vec![
+                Column::from_i64(vec![5, 3, 9, 1, 7, 2]),
+                Column::from_f64(vec![0.0; 6]),
+            ],
+        )
+        .unwrap();
         let td = TaskDescription::sort("staged", 2, 500, DataDist::Uniform)
-            .with_input(staged)
+            .with_input_table(staged)
             .collect_output();
         let w = CommWorld::new(2, NetModel::disabled());
         let out = w
@@ -191,10 +195,43 @@ mod tests {
             .unwrap();
         let o0 = out[0].as_ref().unwrap();
         assert_eq!(o0.stats.output_rows, 6);
-        let table = o0.output.as_ref().expect("rank 0 gathers the output");
+        let chunked = o0.output.as_ref().expect("rank 0 gathers the output");
+        // The gather keeps one chunk per rank; compact for row access.
+        assert_eq!(chunked.num_chunks(), 2);
+        let table = chunked.compact();
         assert_eq!(table.column(0).as_i64().unwrap(), &[1, 2, 3, 5, 7, 9]);
         // Non-root ranks do not carry the gathered table.
         assert!(out[1].as_ref().unwrap().output.is_none());
+    }
+
+    #[test]
+    fn staged_chunked_input_consumed_across_ranks() {
+        // A staged input arriving as multiple chunks (the gathered-output
+        // shape) is windowed across ranks without loss.
+        let chunk = |keys: Vec<i64>| {
+            let n = keys.len();
+            Table::new(
+                Schema::of(&[("key", DataType::Int64), ("val", DataType::Float64)]),
+                vec![Column::from_i64(keys), Column::from_f64(vec![0.0; n])],
+            )
+            .unwrap()
+        };
+        let staged = crate::df::ChunkedTable::from_tables(vec![
+            chunk(vec![6, 4]),
+            chunk(vec![2, 8, 0]),
+        ])
+        .unwrap();
+        let td = TaskDescription::sort("staged-chunks", 2, 500, DataDist::Uniform)
+            .with_input(Arc::new(staged))
+            .collect_output();
+        let w = CommWorld::new(2, NetModel::disabled());
+        let out = w
+            .run(move |c| run_cylon_task_full(&c, &td, &KernelBackend::Native))
+            .unwrap();
+        let o0 = out[0].as_ref().unwrap();
+        assert_eq!(o0.stats.output_rows, 5);
+        let table = o0.output.as_ref().unwrap().compact();
+        assert_eq!(table.column(0).as_i64().unwrap(), &[0, 2, 4, 6, 8]);
     }
 
     #[test]

@@ -64,8 +64,8 @@ pub struct RankReport {
     /// barrier), max across the group.
     pub comm_construction_s: f64,
     /// Gathered output table when the description requested `keep_output`
-    /// (pipeline table handoff).
-    pub output: Option<crate::df::Table>,
+    /// (pipeline table handoff) — zero-copy chunks, one per group rank.
+    pub output: Option<crate::df::ChunkedTable>,
     pub error: Option<String>,
 }
 

@@ -7,8 +7,17 @@
 //! cost model contributes *simulated* seconds which callers fold in
 //! explicitly (reported in separate columns so real vs modeled time stays
 //! auditable).
+//!
+//! [`BenchSet::bench_mem`] additionally samples the process-wide
+//! bytes-materialized / bytes-viewed counters ([`crate::metrics::mem`])
+//! around the measured loop, so the perf trajectory captures copy
+//! reduction, not just wall time. Set `RC_BENCH_JSON=<path>` to also emit
+//! the whole set — including the memory counters — as machine-readable
+//! JSON ([`BenchSet::maybe_write_json`]).
 
 use std::time::Instant;
+
+use crate::metrics::mem::{self, MemCounters};
 
 use super::stats::Stats;
 
@@ -32,6 +41,10 @@ pub struct BenchRow {
     pub simulated: Option<Stats>,
     /// Optional paper-reported value for side-by-side display.
     pub paper: Option<f64>,
+    /// Per-iteration bytes materialized/viewed (process-wide delta over
+    /// the measured loop, divided by iterations) when recorded via
+    /// [`BenchSet::bench_mem`].
+    pub mem: Option<MemCounters>,
     /// Free-form extra columns (throughput, overhead, ...).
     pub extra: Vec<(String, String)>,
 }
@@ -80,9 +93,39 @@ impl BenchSet {
                 Some(Stats::from_samples(&sim))
             },
             paper: None,
+            mem: None,
             extra: Vec::new(),
         });
         self.rows.last_mut().unwrap()
+    }
+
+    /// [`BenchSet::bench`] plus copy accounting: samples the global
+    /// bytes-materialized / bytes-viewed counters around the measured loop
+    /// and stores the per-iteration averages on the row (also surfaced as
+    /// `mat MiB` / `view MiB` report columns). Process-wide counters —
+    /// exact for single-workload bench binaries, including work done on
+    /// rank threads the bench spawns.
+    pub fn bench_mem<F: FnMut() -> Option<f64>>(
+        &mut self,
+        label: &str,
+        warmup: usize,
+        iters: usize,
+        f: F,
+    ) -> &mut BenchRow {
+        let before = mem::global();
+        let row = self.bench(label, warmup, iters, f);
+        // Warmup iterations also move the counters; accept the small
+        // overcount rather than re-running f between snapshots.
+        let delta = mem::global().since(before);
+        let per_iter = MemCounters {
+            materialized: delta.materialized / (warmup + iters).max(1) as u64,
+            viewed: delta.viewed / (warmup + iters).max(1) as u64,
+        };
+        row.mem = Some(per_iter);
+        let mib = |b: u64| format!("{:.2}", b as f64 / (1024.0 * 1024.0));
+        row.extra.push(("mat MiB".into(), mib(per_iter.materialized)));
+        row.extra.push(("view MiB".into(), mib(per_iter.viewed)));
+        row
     }
 
     /// Render the table to stdout.
@@ -148,6 +191,90 @@ impl BenchSet {
             }
         }
     }
+
+    /// Serialize the set (hand-rolled JSON; no deps) — one object per row
+    /// with wall/sim stats, the memory counters, and the extra columns.
+    pub fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            let mut out = String::with_capacity(s.len());
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    '\t' => out.push_str("\\t"),
+                    '\r' => out.push_str("\\r"),
+                    c if (c as u32) < 0x20 => {
+                        out.push_str(&format!("\\u{:04x}", c as u32))
+                    }
+                    c => out.push(c),
+                }
+            }
+            out
+        }
+        fn stats_json(s: &Stats) -> String {
+            format!(
+                "{{\"n\":{},\"mean\":{},\"std\":{},\"min\":{},\"max\":{}}}",
+                s.n, s.mean, s.std, s.min, s.max
+            )
+        }
+        let rows: Vec<String> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let sim = r
+                    .simulated
+                    .as_ref()
+                    .map(stats_json)
+                    .unwrap_or_else(|| "null".into());
+                let paper = r
+                    .paper
+                    .map(|p| p.to_string())
+                    .unwrap_or_else(|| "null".into());
+                let (mat, viewed) = r
+                    .mem
+                    .map(|m| (m.materialized.to_string(), m.viewed.to_string()))
+                    .unwrap_or_else(|| ("null".into(), "null".into()));
+                let extra: Vec<String> = r
+                    .extra
+                    .iter()
+                    .map(|(k, v)| format!("\"{}\":\"{}\"", esc(k), esc(v)))
+                    .collect();
+                format!(
+                    "{{\"label\":\"{}\",\"wall_s\":{},\"sim_s\":{},\"paper_s\":{},\
+                     \"bytes_materialized_per_iter\":{},\"bytes_viewed_per_iter\":{},\
+                     \"extra\":{{{}}}}}",
+                    esc(&r.label),
+                    stats_json(&r.wall),
+                    sim,
+                    paper,
+                    mat,
+                    viewed,
+                    extra.join(",")
+                )
+            })
+            .collect();
+        format!(
+            "{{\"title\":\"{}\",\"rows\":[{}]}}\n",
+            esc(&self.title),
+            rows.join(",")
+        )
+    }
+
+    /// Write [`BenchSet::to_json`] to the path named by `RC_BENCH_JSON`
+    /// (no-op when unset); benches call this after `report()` so CI can
+    /// archive the trajectory.
+    pub fn maybe_write_json(&self) {
+        if let Ok(path) = std::env::var("RC_BENCH_JSON") {
+            if path.is_empty() {
+                return;
+            }
+            match std::fs::write(&path, self.to_json()) {
+                Ok(()) => eprintln!("bench json -> {path}"),
+                Err(e) => eprintln!("bench json write failed ({path}): {e}"),
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -162,6 +289,7 @@ mod tests {
         let r = &set.rows[0];
         assert_eq!(r.wall.n, 5);
         assert_eq!(r.simulated.unwrap().mean, 1.5);
+        assert!(r.mem.is_none());
     }
 
     #[test]
@@ -172,5 +300,37 @@ mod tests {
         row.paper = Some(215.64);
         row.extra.push(("ovh".into(), "2.9".into()));
         set.report();
+    }
+
+    #[test]
+    fn bench_mem_records_copy_counters() {
+        let mut set = BenchSet::new("t");
+        let row = set.bench_mem("copies", 0, 2, || {
+            // Materialize ~8 KiB per iteration through the df layer.
+            let _c = crate::df::Column::from_i64(vec![0i64; 1024]);
+            None
+        });
+        let m = row.mem.expect("mem counters recorded");
+        assert!(m.materialized >= 8 * 1024, "{m:?}");
+        assert!(row.extra.iter().any(|(k, _)| k == "mat MiB"));
+    }
+
+    #[test]
+    fn json_round_trip_shape() {
+        let mut set = BenchSet::new("quote\"me");
+        let row = set.bench_mem("r1", 0, 1, || Some(0.5));
+        row.paper = Some(1.0);
+        row.extra.push(("k".into(), "v".into()));
+        set.bench("r2", 0, 1, || None);
+        let js = set.to_json();
+        assert!(js.contains("\"title\":\"quote\\\"me\""), "{js}");
+        assert!(js.contains("\"label\":\"r1\""));
+        assert!(js.contains("\"bytes_materialized_per_iter\":"));
+        // Row without mem counters serializes nulls, not garbage.
+        assert!(js.contains("\"bytes_materialized_per_iter\":null"));
+        assert!(js.contains("\"k\":\"v\""));
+        // Balanced braces/brackets (cheap structural sanity).
+        assert_eq!(js.matches('{').count(), js.matches('}').count());
+        assert_eq!(js.matches('[').count(), js.matches(']').count());
     }
 }

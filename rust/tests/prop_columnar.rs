@@ -1,0 +1,203 @@
+//! Property suite for the zero-copy columnar core: view semantics
+//! (slice/take/concat over shared buffers) must match the old deep-copy
+//! semantics exactly on randomized tables, and the byte accounting must
+//! charge windows, not backing buffers.
+//!
+//! The deep-copy reference is a row-materialized model (`Vec` of rendered
+//! rows) rebuilt from scratch for every comparison, so no view machinery
+//! can leak into the oracle.
+
+use radical_cylon::df::{ChunkedTable, Column, DataType, Schema, Table};
+use radical_cylon::metrics::mem;
+use radical_cylon::util::testkit;
+use radical_cylon::util::Rng;
+
+/// Random table with all four dtypes, `n` rows.
+fn random_table(rng: &mut Rng, n: usize) -> Table {
+    let keys: Vec<i64> = (0..n).map(|_| rng.gen_i64(-50, 50)).collect();
+    let vals: Vec<f64> = (0..n).map(|_| rng.gen_f64()).collect();
+    let tags: Vec<String> = (0..n)
+        .map(|_| {
+            // Variable-length strings incl. empties.
+            let len = rng.gen_range(6) as usize;
+            (0..len)
+                .map(|_| char::from(b'a' + rng.gen_range(26) as u8))
+                .collect()
+        })
+        .collect();
+    let flags: Vec<bool> = (0..n).map(|_| rng.gen_range(2) == 0).collect();
+    Table::new(
+        Schema::of(&[
+            ("k", DataType::Int64),
+            ("v", DataType::Float64),
+            ("tag", DataType::Utf8),
+            ("ok", DataType::Bool),
+        ]),
+        vec![
+            Column::from_i64(keys),
+            Column::from_f64(vals),
+            Column::from_utf8(&tags),
+            Column::from_bool(flags),
+        ],
+    )
+    .unwrap()
+}
+
+/// Deep-copy reference model: every row rendered to strings.
+fn rows_of(t: &Table) -> Vec<Vec<String>> {
+    (0..t.num_rows())
+        .map(|r| {
+            t.columns()
+                .iter()
+                .map(|c| c.value_to_string(r))
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn prop_slice_matches_deep_copy_semantics() {
+    testkit::check("slice == deep-copy slice", 32, |rng| {
+        let n = rng.gen_range(120) as usize;
+        let t = random_table(rng, n);
+        let model = rows_of(&t);
+        let start = rng.gen_range(n as u64 + 1) as usize;
+        let len = rng.gen_range((n - start) as u64 + 1) as usize;
+
+        let before = mem::thread();
+        let view = t.slice(start, len);
+        assert_eq!(
+            mem::thread().since(before).materialized,
+            0,
+            "slice must not materialize"
+        );
+        assert_eq!(view.num_rows(), len);
+        assert_eq!(rows_of(&view), model[start..start + len].to_vec());
+        // Nested slice of a slice still matches the model.
+        if len > 1 {
+            let inner = view.slice(1, len - 1);
+            assert_eq!(rows_of(&inner), model[start + 1..start + len].to_vec());
+            for j in 0..t.num_columns() {
+                assert!(inner.column(j).shares_buffer(t.column(j)));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_take_matches_deep_copy_semantics() {
+    testkit::check("take == deep-copy gather", 32, |rng| {
+        let n = 1 + rng.gen_range(100) as usize;
+        let t = random_table(rng, n);
+        let model = rows_of(&t);
+        let k = rng.gen_range(150) as usize;
+        // Repeats and reorderings allowed.
+        let idx: Vec<usize> =
+            (0..k).map(|_| rng.gen_range(n as u64) as usize).collect();
+        let taken = t.take(&idx);
+        assert_eq!(taken.num_rows(), k);
+        let want: Vec<Vec<String>> =
+            idx.iter().map(|&i| model[i].clone()).collect();
+        assert_eq!(rows_of(&taken), want);
+        // A gather owns fresh buffers.
+        for j in 0..t.num_columns() {
+            assert!(!taken.column(j).shares_buffer(t.column(j)));
+        }
+    });
+}
+
+#[test]
+fn prop_concat_and_chunked_match_deep_copy_semantics() {
+    testkit::check("concat/chunked == deep-copy concat", 24, |rng| {
+        let n = rng.gen_range(90) as usize;
+        let t = random_table(rng, n);
+        let model = rows_of(&t);
+
+        // Random contiguous partition of the table into views.
+        let mut cuts = vec![0usize, n];
+        for _ in 0..rng.gen_range(4) {
+            cuts.push(rng.gen_range(n as u64 + 1) as usize);
+        }
+        cuts.sort_unstable();
+        let parts: Vec<Table> = cuts
+            .windows(2)
+            .map(|w| t.slice(w[0], w[1] - w[0]))
+            .collect();
+
+        // Eager concat of the views equals the original.
+        let flat = Table::concat(&parts).unwrap();
+        assert_eq!(rows_of(&flat), model);
+        assert_eq!(flat.multiset_fingerprint(), t.multiset_fingerprint());
+
+        // Chunked adoption is zero-copy and semantically identical.
+        let before = mem::thread();
+        let chunked = ChunkedTable::from_tables(parts).unwrap();
+        assert_eq!(mem::thread().since(before).materialized, 0);
+        assert_eq!(chunked.num_rows(), n);
+        assert_eq!(chunked.multiset_fingerprint(), t.multiset_fingerprint());
+        assert_eq!(rows_of(&chunked.compact()), model);
+
+        // Chunked slice across chunk boundaries equals the model slice.
+        if n > 0 {
+            let start = rng.gen_range(n as u64) as usize;
+            let len = rng.gen_range((n - start) as u64 + 1) as usize;
+            let window = chunked.slice(start, len);
+            assert_eq!(rows_of(&window.compact()), model[start..start + len].to_vec());
+        }
+    });
+}
+
+#[test]
+fn prop_byte_accounting_window_vs_backing() {
+    testkit::check("approx_bytes charges the window", 24, |rng| {
+        let n = 1 + rng.gen_range(80) as usize;
+        let t = random_table(rng, n);
+        let start = rng.gen_range(n as u64) as usize;
+        let len = rng.gen_range((n - start) as u64 + 1) as usize;
+        let view = t.slice(start, len);
+
+        // Window accounting: a view never charges more than the whole, and
+        // always keeps the full backing alive.
+        assert!(view.byte_size() <= t.byte_size());
+        assert_eq!(view.backing_byte_size(), t.backing_byte_size());
+        assert!(t.byte_size() <= t.backing_byte_size());
+
+        // The window charge equals a freshly-materialized copy of the same
+        // rows, modulo utf8: a compacted arena drops the backing's
+        // out-of-window string bytes, so compare per-column.
+        let idx: Vec<usize> = (start..start + len).collect();
+        let copy = t.take(&idx);
+        assert_eq!(view.byte_size(), copy.byte_size());
+
+        // Fixed-width columns: exact window arithmetic.
+        assert_eq!(view.column(0).byte_size(), len * 8);
+        assert_eq!(view.column(3).byte_size(), len);
+
+        // Disjoint windows tile the table's charge.
+        let a = t.slice(0, start);
+        let b = t.slice(start, n - start);
+        assert_eq!(a.byte_size() + b.byte_size(), t.byte_size());
+    });
+}
+
+#[test]
+fn prop_partition_slices_tile_the_table() {
+    testkit::check("partition_slice covers without overlap", 24, |rng| {
+        use radical_cylon::ops::dist::partition_slice;
+        let n = rng.gen_range(200) as usize;
+        let t = random_table(rng, n);
+        let model = rows_of(&t);
+        let parts = 1 + rng.gen_range(6) as usize;
+        let staged = ChunkedTable::from(t);
+
+        let before = mem::thread();
+        let mut got: Vec<Vec<String>> = Vec::new();
+        for i in 0..parts {
+            let w = partition_slice(&staged, i, parts);
+            got.extend(rows_of(&w.into_table()));
+        }
+        // Single-chunk staged input: the whole tiling is windows.
+        assert_eq!(mem::thread().since(before).materialized, 0);
+        assert_eq!(got, model);
+    });
+}
