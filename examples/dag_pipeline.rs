@@ -19,7 +19,6 @@
 //! ```
 
 use radical_cylon::exec::PipelineSuite;
-use radical_cylon::pilot::CylonOp;
 use radical_cylon::prelude::*;
 
 fn diamond() -> Pipeline {
@@ -41,7 +40,7 @@ fn diamond() -> Pipeline {
     );
     // Sink: aggregate the light branch's table, after both branches.
     let _sink = dag.add_piped(
-        TaskDescription::new("groupby-sink", CylonOp::Groupby, 2, 0).collect_output(),
+        TaskDescription::groupby("groupby-sink", 2, 0).collect_output(),
         &[join, sort],
         sort,
     );

@@ -12,7 +12,6 @@
 
 use radical_cylon::df::{gen_table, read_csv, write_csv, GenSpec};
 use radical_cylon::ops::local::{groupby_agg, hash_join, sort_table, AggFn, JoinType, SortKey};
-use radical_cylon::pilot::CylonOp;
 use radical_cylon::pipeline::Pipeline;
 use radical_cylon::prelude::*;
 
@@ -63,7 +62,7 @@ fn main() -> Result<()> {
     );
     // Final per-locus aggregation.
     let _summary = dag.add(
-        TaskDescription::new("locus-groupby", CylonOp::Groupby, 16, 25_000),
+        TaskDescription::groupby("locus-groupby", 16, 25_000),
         &[join],
     );
 

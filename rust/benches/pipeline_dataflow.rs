@@ -13,7 +13,6 @@
 //! Run with `cargo bench --bench pipeline_dataflow` (RC_BENCH_ITERS to
 //! raise samples).
 
-use radical_cylon::pilot::CylonOp;
 use radical_cylon::prelude::*;
 use radical_cylon::util::bench_harness::{bench_iters, BenchSet};
 
@@ -32,7 +31,7 @@ fn diamond() -> Pipeline {
         &[gen],
     );
     let _sink = dag.add(
-        TaskDescription::new("groupby-sink", CylonOp::Groupby, 4, 5_000),
+        TaskDescription::groupby("groupby-sink", 4, 5_000),
         &[join, sort],
     );
     dag
@@ -53,7 +52,7 @@ fn skewed_chain() -> Pipeline {
         &[c0],
     );
     let _c2 = dag.add(
-        TaskDescription::new("chain-2", CylonOp::Groupby, 2, 20_000).with_seed(14),
+        TaskDescription::groupby("chain-2", 2, 20_000).with_seed(14),
         &[c1],
     );
     dag

@@ -1,0 +1,135 @@
+//! Logical-plan handoff vs batch re-generation, same ETL chain:
+//!
+//! * **plan/handoff** — `generate -> filter -> join(both sides piped) ->
+//!   sort -> collect`, lowered from the fluent builder and driven by the
+//!   dataflow scheduler: every stage consumes its upstream tables as
+//!   zero-copy windows.
+//! * **batch/regen** — the same operator sequence as independent DAG
+//!   nodes with **no** piping: every stage regenerates spec-sized
+//!   synthetic input from the workload spec. This is what a chain costs
+//!   when stage outputs cannot be handed off — by construction the
+//!   regenerated stages process spec-sized partitions, not the piped
+//!   chain's data-dependent intermediates (filtered left side, join
+//!   output); that substitution *is* the price of not having handoff.
+//!
+//! The source stages are identical between the two configurations (same
+//! `generate` operator, same seeds); both run on the same 4-rank pilot.
+//! The acceptance assertion: the piped plan **materializes strictly fewer
+//! bytes** per iteration than the regeneration baseline (it generates
+//! each source exactly once and moves windows afterwards).
+//!
+//! Run with `cargo bench --bench plan_lowering` (RC_BENCH_ITERS to raise
+//! samples, RC_BENCH_JSON=<path> to archive the numbers).
+
+use radical_cylon::prelude::*;
+use radical_cylon::util::bench_harness::{bench_iters, BenchSet};
+
+const RANKS: usize = 4;
+const ROWS: usize = 50_000; // per rank
+const KEY_SPACE: i64 = (ROWS * RANKS) as i64;
+
+fn engine() -> HeterogeneousEngine {
+    HeterogeneousEngine::new(MachineSpec::local(RANKS), KernelBackend::Native, RANKS)
+}
+
+fn piped_plan() -> Plan {
+    let left = Plan::generate(RANKS, GenSpec::uniform(ROWS, KEY_SPACE, 0xE71))
+        .filter(1, CmpOp::Ge, 0.5);
+    let right = Plan::generate(RANKS, GenSpec::uniform(ROWS, KEY_SPACE, 0xB0B));
+    left.join(right, 0, 0).sort(0).collect()
+}
+
+/// The no-handoff baseline: the same five operators as independent tasks.
+/// Nothing pipes, so every non-source stage synthesizes spec-sized input
+/// from the workload spec again — the pure regeneration path. The sources
+/// use the same `generate` operator and seeds as the piped plan's, and
+/// every regenerating stage is seeded deterministically.
+fn regen_pipeline() -> Pipeline {
+    use radical_cylon::ops::operator::{filter_op, generate_op};
+    let mut dag = Pipeline::new();
+    let gen = |name: &str, seed: u64| {
+        TaskDescription::new(name, generate_op(), RANKS, ROWS)
+            .with_seed(seed)
+            .with_key_space(KEY_SPACE)
+    };
+    let gen_l = dag.add(gen("gen-left", 0xE71), &[]);
+    let gen_r = dag.add(gen("gen-right", 0xB0B), &[]);
+    let filter = dag.add(
+        TaskDescription::new("filter", filter_op(), RANKS, ROWS)
+            .with_seed(0xE71)
+            .with_key_space(KEY_SPACE),
+        &[gen_l],
+    );
+    let join = dag.add(
+        TaskDescription::join("join", RANKS, ROWS, DataDist::Uniform)
+            .with_seed(0xE71)
+            .with_key_space(KEY_SPACE),
+        &[filter, gen_r],
+    );
+    let _sort = dag.add(
+        TaskDescription::sort("sort", RANKS, ROWS, DataDist::Uniform)
+            .with_seed(0xB0B)
+            .with_key_space(KEY_SPACE)
+            .collect_output(),
+        &[join],
+    );
+    dag
+}
+
+fn main() {
+    let iters = bench_iters(3);
+    let mut set = BenchSet::new(
+        "plan lowering: piped handoff vs batch re-generation (ETL chain, p=4)",
+    );
+
+    let eng = engine();
+    let plan = piped_plan();
+    set.bench_mem("plan/handoff", 1, iters, || {
+        let run = eng.run_plan(&plan).unwrap();
+        assert!(run.output.is_some());
+        Some(
+            run.results
+                .iter()
+                .map(|r| r.measurement.sim_net_s)
+                .sum::<f64>(),
+        )
+    });
+
+    let regen = regen_pipeline();
+    set.bench_mem("batch/regen", 1, iters, || {
+        let suite = eng.run_pipeline(&regen).unwrap();
+        assert!(suite.per_task.iter().all(|r| r.is_done()));
+        Some(
+            suite
+                .per_task
+                .iter()
+                .map(|r| r.measurement.sim_net_s)
+                .sum::<f64>(),
+        )
+    });
+
+    set.report();
+    set.maybe_write_json();
+
+    // ---- acceptance: the piped plan moves strictly fewer bytes ---------
+    let mem_of = |label: &str| -> u64 {
+        set.rows
+            .iter()
+            .find(|r| r.label == label)
+            .and_then(|r| r.mem)
+            .expect("bench_mem row")
+            .materialized
+    };
+    let (piped, regen) = (mem_of("plan/handoff"), mem_of("batch/regen"));
+    println!(
+        "piped: {:.1} MiB/iter vs regen: {:.1} MiB/iter",
+        piped as f64 / (1024.0 * 1024.0),
+        regen as f64 / (1024.0 * 1024.0)
+    );
+    assert!(
+        piped < regen,
+        "piped plan ({piped} B) must materialize strictly fewer bytes than \
+         batch re-generation ({regen} B)"
+    );
+    println!("\nplan_lowering OK");
+}

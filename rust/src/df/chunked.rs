@@ -126,6 +126,12 @@ impl ChunkedTable {
         }
     }
 
+    /// Take ownership of the chunk list (zero-copy; the schema is dropped,
+    /// so an empty view yields an empty list).
+    pub fn into_chunks(self) -> Vec<Table> {
+        self.chunks
+    }
+
     /// Consuming [`ChunkedTable::compact`] (skips the clone on the
     /// single-chunk fast path).
     pub fn into_table(mut self) -> Table {

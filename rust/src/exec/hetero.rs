@@ -18,7 +18,8 @@ use crate::pilot::{PilotDescription, Session, TaskDescription, TaskResult};
 use crate::pipeline::Pipeline;
 use crate::raptor::{ReadyPolicy, SchedPolicy};
 
-use super::{Engine, EngineKind, SuiteResult};
+use super::{Engine, EngineKind, PlanRun, SuiteResult};
+use crate::plan::Plan;
 
 /// Outcome of driving a [`Pipeline`] through the heterogeneous engine.
 #[derive(Clone, Debug)]
@@ -147,6 +148,19 @@ impl Engine for HeterogeneousEngine {
         EngineKind::Heterogeneous
     }
 
+    /// Lower the plan and drive it through the event-driven dataflow
+    /// scheduler on one pilot (piped handoff, immediate rank reuse) —
+    /// overriding the sequential default.
+    fn run_plan(&self, plan: &Plan) -> Result<PlanRun> {
+        let lowered = plan.lower()?;
+        let suite = self.run_pipeline(&lowered.pipeline)?;
+        Ok(PlanRun {
+            output: suite.per_task[lowered.sink].output.clone(),
+            results: suite.per_task,
+            metrics: Some(suite.metrics),
+        })
+    }
+
     fn run_suite(&self, tasks: &[TaskDescription]) -> Result<SuiteResult> {
         let session = Session::new("hetero-engine");
         let pilot = self.submit_pilot(&session)?;
@@ -230,6 +244,41 @@ mod tests {
         ];
         let suite = eng.run_suite(&tds).unwrap();
         assert!(suite.per_task.iter().all(|r| r.is_done()));
+    }
+
+    #[test]
+    fn plan_through_all_engines_agrees() {
+        use crate::df::GenSpec;
+        use crate::ops::local::CmpOp;
+
+        let plan = || {
+            Plan::generate(2, GenSpec::uniform(200, 128, 0xE71))
+                .filter(1, CmpOp::Ge, 0.5)
+                .sort(0)
+                .collect()
+        };
+        let machine = MachineSpec::local(4);
+        let hetero =
+            HeterogeneousEngine::new(machine.clone(), KernelBackend::Native, 4);
+        let h = hetero.run_plan(&plan()).unwrap();
+        assert!(h.metrics.is_some(), "pipeline path reports metrics");
+        let bm = super::super::BareMetalEngine::new(machine.clone(), KernelBackend::Native);
+        let b = bm.run_plan(&plan()).unwrap();
+        assert!(b.metrics.is_none(), "sequential path has no DAG metrics");
+        let batch = super::super::BatchEngine::new(machine, KernelBackend::Native)
+            .core_granular();
+        let q = batch.run_plan(&plan()).unwrap();
+
+        let fp = |run: &PlanRun| {
+            run.output
+                .as_ref()
+                .expect("collected sink output")
+                .multiset_fingerprint()
+        };
+        assert!(fp(&h) > 0);
+        assert_eq!(fp(&h), fp(&b), "hetero vs bare-metal");
+        assert_eq!(fp(&h), fp(&q), "hetero vs batch");
+        assert_eq!(h.results.len(), 3);
     }
 
     #[test]

@@ -19,6 +19,12 @@
 //! scheduler (and [`HeterogeneousEngine::run_pipeline_waves`] through the
 //! wave-barrier baseline), returning a [`PipelineSuite`] with per-node
 //! scheduling metrics.
+//!
+//! Logical plans ([`crate::plan::Plan`]) run on **any** engine through
+//! [`Engine::run_plan`]: the default lowers the plan and executes the DAG
+//! serially (one independent launch per node, handoff threaded across
+//! launches), while the heterogeneous engine overrides it with the
+//! dataflow scheduler on one pilot.
 
 mod bare_metal;
 mod batch;
@@ -32,8 +38,13 @@ pub use runner::{
     run_bm_vs_rp, run_hetero_vs_batch, run_scaling, HeteroVsBatch, SweepRow,
 };
 
+use std::sync::Arc;
+
+use crate::df::ChunkedTable;
 use crate::error::Result;
+use crate::metrics::PipelineMetrics;
 use crate::pilot::{TaskDescription, TaskResult};
+use crate::plan::Plan;
 
 /// Which engine produced a result (for report labels).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -84,6 +95,20 @@ impl SuiteResult {
     }
 }
 
+/// Outcome of running a logical [`Plan`] through an engine.
+#[derive(Clone, Debug)]
+pub struct PlanRun {
+    /// Per-node results in lowered-DAG node-id order.
+    pub results: Vec<TaskResult>,
+    /// The sink's gathered output table, present when the plan ended with
+    /// [`Plan::collect`].
+    pub output: Option<Arc<ChunkedTable>>,
+    /// Scheduler accounting — `Some` on engines that drive the DAG through
+    /// a pipeline executor (heterogeneous), `None` on the sequential
+    /// bare-metal/batch path.
+    pub metrics: Option<PipelineMetrics>,
+}
+
 /// Common engine interface used by benches and the CLI.
 pub trait Engine {
     fn kind(&self) -> EngineKind;
@@ -95,5 +120,22 @@ pub trait Engine {
     fn run_task(&self, task: &TaskDescription) -> Result<TaskResult> {
         let suite = self.run_suite(std::slice::from_ref(task))?;
         Ok(suite.per_task.into_iter().next().expect("one result"))
+    }
+
+    /// Lower a logical [`Plan`] and execute it on this engine.
+    ///
+    /// The default drives the lowered DAG **serially in topological
+    /// order** through [`Engine::run_task`], threading the table handoff
+    /// across launches ([`crate::pipeline::Pipeline::run_sequential`]) —
+    /// the right model for engines where every task is an independent
+    /// launch (bare-metal, batch). The heterogeneous engine overrides this
+    /// with the event-driven dataflow scheduler on one pilot.
+    fn run_plan(&self, plan: &Plan) -> Result<PlanRun> {
+        let lowered = plan.lower()?;
+        let results = lowered
+            .pipeline
+            .run_sequential(|td| self.run_task(&td))?;
+        let output = results[lowered.sink].output.clone();
+        Ok(PlanRun { results, output, metrics: None })
     }
 }

@@ -6,7 +6,8 @@ use crate::config::ExperimentConfig;
 use crate::error::Result;
 use crate::metrics::Stats;
 use crate::ops::dist::KernelBackend;
-use crate::pilot::{CylonOp, DataDist, TaskDescription};
+use crate::ops::operator::{join_op, registry, sort_op, OpHandle};
+use crate::pilot::{DataDist, TaskDescription};
 
 use super::{
     BareMetalEngine, BatchEngine, Engine, EngineKind, HeterogeneousEngine,
@@ -28,27 +29,30 @@ pub struct SweepRow {
     pub output_rows: u64,
 }
 
-fn op_of(config: &ExperimentConfig) -> CylonOp {
-    match config.op.as_str() {
-        "join" => CylonOp::Join,
-        "sort" => CylonOp::Sort,
-        "groupby" => CylonOp::Groupby,
-        other => panic!("op '{other}' is not a single-op experiment"),
-    }
+/// Resolve the experiment's operator through the process-wide registry.
+/// An unknown name is a configuration error (`Error::Config`), never a
+/// panic — the CLI surfaces it with the registered names listed.
+fn op_of(config: &ExperimentConfig) -> Result<OpHandle> {
+    registry().resolve(&config.op)
 }
 
 /// Task for one iteration of a single-op experiment at parallelism `p`.
-pub fn task_for(config: &ExperimentConfig, p: usize, iter: usize) -> TaskDescription {
+/// Errors when the config names an operator the registry does not know.
+pub fn task_for(
+    config: &ExperimentConfig,
+    p: usize,
+    iter: usize,
+) -> Result<TaskDescription> {
     let rows = config.rows_at(p);
     let mut td = TaskDescription::new(
         &format!("{}-{}-p{p}-i{iter}", config.op, config.scaling.name()),
-        op_of(config),
+        op_of(config)?,
         p,
         rows,
     );
     td.dist = DataDist::Uniform;
     td.seed = config.seed ^ (iter as u64) << 32 ^ p as u64;
-    td
+    Ok(td)
 }
 
 /// Run a single-op scaling sweep on one engine kind.
@@ -62,7 +66,7 @@ pub fn run_scaling(
     for &p in &config.parallelisms {
         let tasks: Vec<TaskDescription> = (0..config.iterations)
             .map(|i| task_for(config, p, i))
-            .collect();
+            .collect::<Result<_>>()?;
         let suite: SuiteResult = match kind {
             EngineKind::BareMetal => {
                 BareMetalEngine::new(machine.clone(), backend.clone())
@@ -119,9 +123,9 @@ pub fn hetero_workload(config: &ExperimentConfig, p: usize, iter: usize) -> Vec<
             .with_seed(seed ^ 1),
         TaskDescription::sort(&format!("sort-ws-i{iter}"), p, weak_rows, DataDist::Uniform)
             .with_seed(seed ^ 2),
-        TaskDescription::strong(&format!("join-ss-i{iter}"), CylonOp::Join, p, strong_rows * p)
+        TaskDescription::strong(&format!("join-ss-i{iter}"), join_op(), p, strong_rows * p)
             .with_seed(seed ^ 3),
-        TaskDescription::strong(&format!("sort-ss-i{iter}"), CylonOp::Sort, p, strong_rows * p)
+        TaskDescription::strong(&format!("sort-ss-i{iter}"), sort_op(), p, strong_rows * p)
             .with_seed(seed ^ 4),
     ]
 }
@@ -158,20 +162,10 @@ pub fn run_hetero_vs_batch(
         for rep in 0..reps {
             let rows = config.rows_at(p);
             let pair = vec![
-                TaskDescription::new(
-                    &format!("join-p{p}-r{rep}"),
-                    CylonOp::Join,
-                    p,
-                    rows,
-                )
-                .with_seed(config.seed ^ rep as u64),
-                TaskDescription::new(
-                    &format!("sort-p{p}-r{rep}"),
-                    CylonOp::Sort,
-                    p,
-                    rows,
-                )
-                .with_seed(config.seed ^ rep as u64 ^ 0xABCD),
+                TaskDescription::new(&format!("join-p{p}-r{rep}"), join_op(), p, rows)
+                    .with_seed(config.seed ^ rep as u64),
+                TaskDescription::new(&format!("sort-p{p}-r{rep}"), sort_op(), p, rows)
+                    .with_seed(config.seed ^ rep as u64 ^ 0xABCD),
             ];
             let hetero =
                 HeterogeneousEngine::new(machine.clone(), backend.clone(), p)
@@ -222,8 +216,37 @@ mod tests {
     fn strong_scaling_rows_shrink() {
         let c = tiny("fig5-strong");
         assert!(c.rows_at(4) < c.rows_at(2));
-        let row_tasks = task_for(&c, 4, 0);
+        let row_tasks = task_for(&c, 4, 0).unwrap();
         assert_eq!(row_tasks.rows_per_rank, c.rows_at(4));
+    }
+
+    #[test]
+    fn unknown_op_is_an_error_not_a_panic() {
+        let mut c = tiny("fig5-weak");
+        c.op = "frobnicate".into();
+        let err = task_for(&c, 2, 0).unwrap_err().to_string();
+        assert!(err.contains("unknown operator 'frobnicate'"), "{err}");
+        let err = run_scaling(&c, EngineKind::BareMetal, &KernelBackend::Native)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown operator"), "{err}");
+    }
+
+    #[test]
+    fn registry_ops_run_through_the_sweep() {
+        // filter/project resolve from the registry and run end-to-end
+        // distributed through the same sweep machinery as join/sort.
+        for opname in ["filter", "project", "groupby"] {
+            let mut c = tiny("fig5-weak");
+            c.op = opname.into();
+            c.parallelisms = vec![2];
+            c.iterations = 1;
+            let rows =
+                run_scaling(&c, EngineKind::Heterogeneous, &KernelBackend::Native)
+                    .unwrap();
+            assert_eq!(rows.len(), 1, "{opname}");
+            assert!(rows[0].output_rows > 0, "{opname} produced no rows");
+        }
     }
 
     #[test]

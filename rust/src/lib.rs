@@ -36,30 +36,29 @@
 //! assert!(result.is_done());
 //! ```
 //!
-//! Task *DAGs* go through [`pipeline::Pipeline`]: build the graph with
-//! `add`/`add_piped` (the latter hands a stage's output table to its
-//! consumer) and execute it with the event-driven dataflow scheduler, which
-//! submits every node the moment its dependencies resolve:
+//! Dataframe *pipelines* are written as logical [`plan::Plan`]s: start
+//! from a source, chain operators fluently, and run the plan on any
+//! engine — it lowers to a task DAG with zero-copy table handoff between
+//! stages (a join consumes **both** sides from its upstream tasks):
 //!
 //! ```no_run
 //! use radical_cylon::prelude::*;
 //!
-//! let session = Session::new("dag");
-//! let pilot = session
-//!     .pilot_manager()
-//!     .submit(PilotDescription::new(MachineSpec::local(4), 1))
-//!     .unwrap();
-//! let tm = session.task_manager(&pilot);
-//! let mut dag = Pipeline::new();
-//! let gen = dag.add(TaskDescription::sort("gen", 2, 1_000, DataDist::Uniform), &[]);
-//! let _agg = dag.add_piped(
-//!     TaskDescription::new("agg", radical_cylon::pilot::CylonOp::Groupby, 2, 0),
-//!     &[gen],
-//!     gen,
-//! );
-//! let results = dag.execute(&tm).unwrap();
-//! assert!(results.iter().all(|r| r.is_done()));
+//! let users = Plan::generate(2, GenSpec::uniform(100_000, 50_000, 7))
+//!     .filter(1, CmpOp::Ge, 0.5);
+//! let events = Plan::generate(2, GenSpec::uniform(100_000, 50_000, 8));
+//! let report = users.join(events, 0, 0).sort(0).collect();
+//!
+//! let engine = HeterogeneousEngine::new(MachineSpec::local(4), KernelBackend::Native, 4);
+//! let run = engine.run_plan(&report).unwrap();
+//! println!("{}", run.output.unwrap().compact().head(5));
 //! ```
+//!
+//! The task layer underneath stays fully accessible: build
+//! [`pipeline::Pipeline`] DAGs by hand with `add`/`add_piped_multi`, or
+//! submit single [`pilot::TaskDescription`]s whose operator is any
+//! [`ops::operator::Operator`] implementation (built-in or registered via
+//! [`ops::operator::registry`]).
 
 pub mod cli;
 pub mod cluster;
@@ -72,6 +71,7 @@ pub mod metrics;
 pub mod ops;
 pub mod pilot;
 pub mod pipeline;
+pub mod plan;
 pub mod raptor;
 pub mod runtime;
 pub mod util;
@@ -82,18 +82,21 @@ pub mod prelude {
     pub use crate::cluster::{MachineSpec, ResourceManager};
     pub use crate::comm::{CommWorld, Communicator, NetModel};
     pub use crate::config::ExperimentConfig;
-    pub use crate::df::{ChunkedTable, Column, DataType, Schema, Table};
+    pub use crate::df::{ChunkedTable, Column, DataType, GenSpec, Schema, Table};
     pub use crate::error::{Error, Result};
     pub use crate::exec::{
         BareMetalEngine, BatchEngine, Engine, EngineKind, HeterogeneousEngine,
-        PipelineSuite,
+        PipelineSuite, PlanRun,
     };
     pub use crate::metrics::{OverheadBreakdown, PipelineMetrics, Stats};
     pub use crate::ops::dist::KernelBackend;
+    pub use crate::ops::local::{AggFn, CmpOp, JoinType};
+    pub use crate::ops::operator::{registry, OpHandle, Operator};
     pub use crate::pilot::{
         DataDist, PilotDescription, Session, TaskDescription, TaskState,
     };
     pub use crate::pipeline::{Pipeline, PipelineRun};
+    pub use crate::plan::{LoweredPlan, Plan};
     pub use crate::raptor::{ReadyPolicy, SchedPolicy};
     pub use crate::runtime::ArtifactStore;
 }

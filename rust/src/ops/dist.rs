@@ -267,6 +267,30 @@ pub fn gather_table_chunked(
     }
 }
 
+/// Gather every rank's **chunked** partition to group rank 0, adopting
+/// all chunk lists in rank order — the fully zero-copy producer gather:
+/// a rank whose output is already a list of windows (run-sliced filters,
+/// projections, unions) ships those windows as-is; nothing is flattened
+/// on either side. Collective; non-roots receive `None`.
+pub fn gather_chunked(
+    comm: &Communicator,
+    t: ChunkedTable,
+) -> Result<Option<ChunkedTable>> {
+    let schema = t.schema().clone();
+    match comm.gather(0, t.into_chunks()) {
+        Some(lists) => {
+            let parts: Vec<Table> = lists.into_iter().flatten().collect();
+            if parts.is_empty() {
+                // Every rank produced an empty view; keep the schema.
+                Ok(Some(ChunkedTable::empty(schema)))
+            } else {
+                Ok(Some(ChunkedTable::from_tables(parts)?))
+            }
+        }
+        None => Ok(None),
+    }
+}
+
 /// Convenience: [`gather_table_chunked`] compacted to one contiguous
 /// table at the root.
 pub fn gather_table(comm: &Communicator, t: Table) -> Result<Option<Table>> {
@@ -541,6 +565,44 @@ mod tests {
             root.compact().column(0).as_i64().unwrap(),
             &[0, 10, 1, 11, 2, 12]
         );
+    }
+
+    #[test]
+    fn gather_chunked_adopts_all_windows() {
+        // Each rank ships a 2-chunk view; the root adopts all 6 windows
+        // without flattening anything.
+        let out = world(3)
+            .run(|c| {
+                let t = int_table(
+                    vec![c.rank() as i64, 10 + c.rank() as i64],
+                    vec![0.0; 2],
+                );
+                let v = ChunkedTable::from_tables(vec![t.slice(0, 1), t.slice(1, 1)])
+                    .unwrap();
+                gather_chunked(&c, v).unwrap()
+            })
+            .unwrap();
+        let root = out[0].as_ref().unwrap();
+        assert_eq!(root.num_chunks(), 6);
+        assert_eq!(
+            root.compact().column(0).as_i64().unwrap(),
+            &[0, 10, 1, 11, 2, 12]
+        );
+        assert!(out[1].is_none() && out[2].is_none());
+    }
+
+    #[test]
+    fn gather_chunked_of_empty_views_keeps_schema() {
+        let out = world(2)
+            .run(|c| {
+                let schema =
+                    Schema::of(&[("key", DataType::Int64), ("val", DataType::Float64)]);
+                gather_chunked(&c, ChunkedTable::empty(schema)).unwrap()
+            })
+            .unwrap();
+        let root = out[0].as_ref().unwrap();
+        assert_eq!(root.num_rows(), 0);
+        assert_eq!(root.schema().field(0).name, "key");
     }
 
     #[test]

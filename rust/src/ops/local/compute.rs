@@ -1,7 +1,8 @@
-//! Vectorized column compute: arithmetic, comparisons, casts — the
-//! element-wise operator family of Cylon's local-operator set (Fig 1).
+//! Vectorized column compute: arithmetic, comparisons, casts, and the
+//! zero-copy [`filter_view`] — the element-wise operator family of Cylon's
+//! local-operator set (Fig 1).
 
-use crate::df::{Column, DataType, Schema, Table};
+use crate::df::{ChunkedTable, Column, DataType, Schema, Table};
 use crate::error::{Error, Result};
 
 /// Binary arithmetic over numeric columns (elementwise).
@@ -138,6 +139,39 @@ pub fn cast(col: &Column, to: DataType) -> Result<Column> {
     }
 }
 
+/// Zero-copy filter: keep rows where `mask` is true, returned as a
+/// [`ChunkedTable`] of **maximal contiguous runs** of kept rows — every
+/// chunk is an O(1) window ([`Table::slice`]) over `t`'s buffers, so the
+/// filter itself materializes zero bytes no matter how selective it is.
+/// The copy is deferred to `compact()`, exactly like shuffle receives and
+/// gathered pipeline outputs; a consumer that can iterate chunks never
+/// pays it. ([`Table::filter`] remains the eager, contiguous variant.)
+pub fn filter_view(t: &Table, mask: &[bool]) -> Result<ChunkedTable> {
+    if mask.len() != t.num_rows() {
+        return Err(Error::DataFrame(format!(
+            "filter_view mask length {} != row count {}",
+            mask.len(),
+            t.num_rows()
+        )));
+    }
+    let mut out = ChunkedTable::empty(t.schema().clone());
+    let mut run_start: Option<usize> = None;
+    for (i, &keep) in mask.iter().enumerate() {
+        match (keep, run_start) {
+            (true, None) => run_start = Some(i),
+            (false, Some(s)) => {
+                out.push(t.slice(s, i - s)).expect("same schema");
+                run_start = None;
+            }
+            _ => {}
+        }
+    }
+    if let Some(s) = run_start {
+        out.push(t.slice(s, mask.len() - s)).expect("same schema");
+    }
+    Ok(out)
+}
+
 /// Append a derived column to a table under `name`.
 pub fn with_column(t: &Table, name: &str, col: Column) -> Result<Table> {
     if col.len() != t.num_rows() {
@@ -158,6 +192,7 @@ pub fn with_column(t: &Table, name: &str, col: Column) -> Result<Table> {
 mod tests {
     use super::*;
     use crate::df::{DataType, Schema};
+    use crate::metrics::mem;
 
     fn table() -> Table {
         Table::new(
@@ -210,6 +245,46 @@ mod tests {
         let b = cast(&Column::from_bool(vec![true, false]), DataType::Int64).unwrap();
         assert_eq!(b, Column::from_i64(vec![1, 0]));
         assert!(cast(&Column::from_utf8(&["x"]), DataType::Int64).is_err());
+    }
+
+    #[test]
+    fn filter_view_is_zero_copy_and_matches_eager_filter() {
+        let t = table();
+        let mask = vec![true, false, true, true];
+        let before = mem::thread();
+        let v = filter_view(&t, &mask).unwrap();
+        assert_eq!(
+            mem::thread().since(before).materialized,
+            0,
+            "run-sliced filter must not copy rows"
+        );
+        // Two maximal runs: [0,1) and [2,4).
+        assert_eq!(v.num_chunks(), 2);
+        assert!(v.chunks()[0].column(0).shares_buffer(t.column(0)));
+        assert_eq!(v.compact(), t.filter(&mask).unwrap());
+        // Degenerate masks.
+        assert_eq!(filter_view(&t, &[false; 4]).unwrap().num_rows(), 0);
+        assert_eq!(filter_view(&t, &[true; 4]).unwrap().num_chunks(), 1);
+        assert!(filter_view(&t, &[true]).is_err());
+    }
+
+    #[test]
+    fn filter_view_on_chunked_view_stays_zero_copy() {
+        // A chunked (gathered-shape) view filtered chunk-by-chunk — the
+        // shape a piped consumer sees — materializes nothing either.
+        let t = table();
+        let ct = ChunkedTable::from_tables(vec![t.slice(0, 2), t.slice(2, 2)]).unwrap();
+        let before = mem::thread();
+        let mut out = ChunkedTable::empty(ct.schema().clone());
+        for chunk in ct.chunks() {
+            let mask = compare_scalar(chunk.column(0), 2.0, CmpOp::Ge).unwrap();
+            for run in filter_view(chunk, &mask).unwrap().chunks() {
+                out.push(run.clone()).unwrap();
+            }
+        }
+        assert_eq!(mem::thread().since(before).materialized, 0);
+        assert_eq!(out.num_rows(), 3);
+        assert_eq!(out.compact().column(0).as_i64().unwrap(), &[2, 3, 4]);
     }
 
     #[test]

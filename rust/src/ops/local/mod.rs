@@ -7,7 +7,8 @@ mod sort;
 mod unique;
 
 pub use compute::{
-    binary_op, cast, compare_scalar, scalar_op_i64, with_column, BinOp, CmpOp,
+    binary_op, cast, compare_scalar, filter_view, scalar_op_i64, with_column,
+    BinOp, CmpOp,
 };
 pub use groupby::{groupby_agg, AggFn};
 pub use join::{

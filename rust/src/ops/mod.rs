@@ -1,6 +1,9 @@
 //! Cylon operator algebra (paper §3.2): *local operators* act on one rank's
 //! partition; *distributed operators* compose local operators with
-//! communicator collectives (shuffle/allgather/...).
+//! communicator collectives (shuffle/allgather/...); the [`operator`]
+//! module packages both behind the extensible [`operator::Operator`] trait
+//! the task executor dispatches through.
 
 pub mod dist;
 pub mod local;
+pub mod operator;

@@ -1,0 +1,655 @@
+//! Extensible operator API — the open replacement for the old closed
+//! `CylonOp` enum.
+//!
+//! The paper's pipeline is "a collection of data frame operators arranged
+//! in a DAG" (§4.4); this module is where that collection is allowed to
+//! *grow*. A task's operation is an [`OpHandle`] (`Arc<dyn Operator>`)
+//! carried inside its [`TaskDescription`]; the RAPTOR executor
+//! ([`crate::raptor`]) resolves staged inputs, calls
+//! [`Operator::execute`] on every rank of the private communicator, and
+//! handles the common scaffolding (gather, stats aggregation) — so a new
+//! operator never touches pilot/raptor internals.
+//!
+//! Seven operators ship built in:
+//!
+//! | name       | inputs | kernel |
+//! |------------|--------|--------|
+//! | `generate` | 0      | deterministic synthetic partition ([`gen_table`]) |
+//! | `scan-csv` | 0      | parallel CSV scan, per-rank window (zero-copy slice) |
+//! | `join`     | 2      | [`dist_hash_join`] |
+//! | `sort`     | 1      | [`dist_sort`] (sample-sort) |
+//! | `groupby`  | 1      | [`dist_groupby`] (two-phase) |
+//! | `filter`   | 1      | zero-copy run-sliced [`filter_view`] (rank-local) |
+//! | `project`  | 1      | zero-copy [`Table::project`] (rank-local) |
+//!
+//! `filter` and `project` are the proof of extensibility: purely local
+//! (embarrassingly parallel, no collective) and **zero-copy** — their
+//! outputs are windows over their inputs, so piping them between pipeline
+//! stages materializes nothing.
+//!
+//! Name-based construction (CLI, INI experiment configs) goes through the
+//! process-wide [`registry`]; [`OperatorRegistry::register`] adds new
+//! operators at runtime:
+//!
+//! ```
+//! use radical_cylon::ops::operator::{registry, Operator, OpHandle};
+//! use radical_cylon::comm::Communicator;
+//! use radical_cylon::df::{ChunkedTable, Table};
+//! use radical_cylon::error::Result;
+//! use radical_cylon::ops::dist::KernelBackend;
+//! use radical_cylon::pilot::TaskDescription;
+//! use std::sync::Arc;
+//!
+//! #[derive(Debug)]
+//! struct Head(usize);
+//! impl Operator for Head {
+//!     fn name(&self) -> &str { "head" }
+//!     fn num_inputs(&self) -> usize { 1 }
+//!     fn execute(
+//!         &self,
+//!         _comm: &Communicator,
+//!         _td: &TaskDescription,
+//!         inputs: Vec<Table>,
+//!         _backend: &KernelBackend,
+//!     ) -> Result<ChunkedTable> {
+//!         let t = &inputs[0];
+//!         Ok(ChunkedTable::from(t.slice(0, self.0.min(t.num_rows()))))
+//!     }
+//! }
+//! registry().register("head", || Arc::new(Head(10)));
+//! let op: OpHandle = registry().resolve("head").unwrap();
+//! assert_eq!(op.name(), "head");
+//! ```
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::comm::Communicator;
+use crate::df::{gen_table, read_csv, ChunkedTable, GenSpec, Schema, Table};
+use crate::error::{Error, Result};
+use crate::ops::dist::{dist_groupby, dist_hash_join, dist_sort, KernelBackend};
+use crate::ops::local::{
+    compare_scalar, filter_view, AggFn, CmpOp, JoinType,
+};
+use crate::pilot::TaskDescription;
+
+/// Shared handle to an operator instance (parameters included). Cloning a
+/// [`TaskDescription`] clones the handle, not the operator.
+pub type OpHandle = Arc<dyn Operator>;
+
+/// One distributed dataframe operator — the unit a pipeline composes.
+///
+/// Implementations carry their own parameters (key columns, predicates,
+/// ...) and must be cheap to share across rank threads (`Send + Sync`).
+/// Everything around the kernel — staged-input windowing, synthetic
+/// fallback, output gather, stats aggregation — is common scaffolding in
+/// [`crate::raptor::run_cylon_task_full`]; an operator only supplies the
+/// per-rank kernel.
+pub trait Operator: std::fmt::Debug + Send + Sync {
+    /// Registry/report name (`"join"`, `"filter"`, ...).
+    fn name(&self) -> &str;
+
+    /// How many input tables the kernel consumes. Sources return 0; a
+    /// piped task must stage exactly this many upstream outputs (or opt
+    /// into synthetic fill, see
+    /// [`TaskDescription::allow_synthetic_fill`]).
+    fn num_inputs(&self) -> usize;
+
+    /// Ranks to plan for this operator given the builder's hint — the
+    /// hook a plan lowering uses so an operator can veto degenerate
+    /// layouts (e.g. an accelerator op capping its group size). The
+    /// default accepts the hint, floored at one rank.
+    fn plan_ranks(&self, hint: usize) -> usize {
+        hint.max(1)
+    }
+
+    /// Run the kernel on this rank of the private communicator `comm`.
+    ///
+    /// `inputs` holds this rank's window of each input table, already
+    /// resolved by the executor (staged handoff window or synthetic
+    /// partition), with exactly [`Operator::num_inputs`] entries. The
+    /// result is this rank's output partition, as a [`ChunkedTable`] so
+    /// zero-copy operators can return windows instead of materializing.
+    /// Collective kernels must keep all ranks in lockstep (every rank
+    /// calls, symmetric errors).
+    fn execute(
+        &self,
+        comm: &Communicator,
+        td: &TaskDescription,
+        inputs: Vec<Table>,
+        backend: &KernelBackend,
+    ) -> Result<ChunkedTable>;
+}
+
+/// Distributed hash join of two staged (or generated) inputs.
+#[derive(Clone, Debug)]
+pub struct JoinOp {
+    pub left_key: usize,
+    pub right_key: usize,
+    pub how: JoinType,
+}
+
+impl Default for JoinOp {
+    fn default() -> JoinOp {
+        JoinOp { left_key: 0, right_key: 0, how: JoinType::Inner }
+    }
+}
+
+impl Operator for JoinOp {
+    fn name(&self) -> &str {
+        "join"
+    }
+
+    fn num_inputs(&self) -> usize {
+        2
+    }
+
+    fn execute(
+        &self,
+        comm: &Communicator,
+        _td: &TaskDescription,
+        inputs: Vec<Table>,
+        backend: &KernelBackend,
+    ) -> Result<ChunkedTable> {
+        let [l, r]: [Table; 2] = inputs.try_into().expect("arity checked");
+        dist_hash_join(comm, &l, &r, self.left_key, self.right_key, self.how, backend)
+            .map(ChunkedTable::from)
+    }
+}
+
+/// Distributed sample-sort by one int64 column (default: column 0).
+#[derive(Clone, Debug, Default)]
+pub struct SortOp {
+    pub key: usize,
+}
+
+impl Operator for SortOp {
+    fn name(&self) -> &str {
+        "sort"
+    }
+
+    fn num_inputs(&self) -> usize {
+        1
+    }
+
+    fn execute(
+        &self,
+        comm: &Communicator,
+        _td: &TaskDescription,
+        inputs: Vec<Table>,
+        backend: &KernelBackend,
+    ) -> Result<ChunkedTable> {
+        dist_sort(comm, &inputs[0], self.key, backend).map(ChunkedTable::from)
+    }
+}
+
+/// Distributed two-phase groupby-aggregate.
+#[derive(Clone, Debug)]
+pub struct GroupbyOp {
+    pub key: usize,
+    pub val: usize,
+    pub agg: AggFn,
+}
+
+impl Default for GroupbyOp {
+    fn default() -> GroupbyOp {
+        GroupbyOp { key: 0, val: 1, agg: AggFn::Sum }
+    }
+}
+
+impl Operator for GroupbyOp {
+    fn name(&self) -> &str {
+        "groupby"
+    }
+
+    fn num_inputs(&self) -> usize {
+        1
+    }
+
+    fn execute(
+        &self,
+        comm: &Communicator,
+        _td: &TaskDescription,
+        inputs: Vec<Table>,
+        backend: &KernelBackend,
+    ) -> Result<ChunkedTable> {
+        dist_groupby(comm, &inputs[0], self.key, self.val, self.agg, backend)
+            .map(ChunkedTable::from)
+    }
+}
+
+/// Zero-copy scalar filter: keep rows where `column <cmp> scalar`. Purely
+/// rank-local (no collective) and run-sliced — the output is a
+/// [`ChunkedTable`] of windows over the input, materializing zero bytes.
+#[derive(Clone, Debug)]
+pub struct FilterOp {
+    pub col: usize,
+    pub cmp: CmpOp,
+    pub scalar: f64,
+}
+
+impl Default for FilterOp {
+    fn default() -> FilterOp {
+        FilterOp { col: 1, cmp: CmpOp::Ge, scalar: 0.5 }
+    }
+}
+
+impl Operator for FilterOp {
+    fn name(&self) -> &str {
+        "filter"
+    }
+
+    fn num_inputs(&self) -> usize {
+        1
+    }
+
+    fn execute(
+        &self,
+        _comm: &Communicator,
+        _td: &TaskDescription,
+        inputs: Vec<Table>,
+        _backend: &KernelBackend,
+    ) -> Result<ChunkedTable> {
+        let t = &inputs[0];
+        let mask = compare_scalar(t.column(self.col), self.scalar, self.cmp)?;
+        filter_view(t, &mask)
+    }
+}
+
+/// Zero-copy column projection by name. Rank-local; the output columns are
+/// `Arc` clones of the input's, materializing zero bytes.
+#[derive(Clone, Debug)]
+pub struct ProjectOp {
+    pub columns: Vec<String>,
+}
+
+impl Default for ProjectOp {
+    fn default() -> ProjectOp {
+        // Matches the synthetic-workload schema (`key`, `val`).
+        ProjectOp { columns: vec!["key".into(), "val".into()] }
+    }
+}
+
+impl Operator for ProjectOp {
+    fn name(&self) -> &str {
+        "project"
+    }
+
+    fn num_inputs(&self) -> usize {
+        1
+    }
+
+    fn execute(
+        &self,
+        _comm: &Communicator,
+        _td: &TaskDescription,
+        inputs: Vec<Table>,
+        _backend: &KernelBackend,
+    ) -> Result<ChunkedTable> {
+        let names: Vec<&str> = self.columns.iter().map(String::as_str).collect();
+        inputs[0].project(&names).map(ChunkedTable::from)
+    }
+}
+
+/// Source: this rank's deterministic synthetic partition, from the task's
+/// workload spec (`rows_per_rank`, `key_space`, `dist`, `seed`).
+#[derive(Clone, Debug, Default)]
+pub struct GenerateOp;
+
+impl Operator for GenerateOp {
+    fn name(&self) -> &str {
+        "generate"
+    }
+
+    fn num_inputs(&self) -> usize {
+        0
+    }
+
+    fn execute(
+        &self,
+        comm: &Communicator,
+        td: &TaskDescription,
+        _inputs: Vec<Table>,
+        _backend: &KernelBackend,
+    ) -> Result<ChunkedTable> {
+        let spec = GenSpec {
+            rows: td.rows_per_rank,
+            key_space: td.key_space,
+            dist: td.dist,
+            seed: td.seed,
+        };
+        Ok(ChunkedTable::from(gen_table(&spec, comm.rank())))
+    }
+}
+
+/// Source: parallel CSV scan. Every rank parses the file and keeps its own
+/// contiguous row window — a zero-copy slice of the rank-local parse, the
+/// thread-per-rank analogue of a parallel file scan.
+///
+/// Cost note: each rank pays a full parse before slicing (O(ranks × file)
+/// work, transiently O(ranks × table) memory in this shared-process
+/// simulator). Fine for the example-scale files this crate reads; a
+/// production scan would byte-range-partition the file per rank instead.
+#[derive(Clone, Debug)]
+pub struct ScanCsvOp {
+    pub path: PathBuf,
+    pub schema: Schema,
+}
+
+impl Operator for ScanCsvOp {
+    fn name(&self) -> &str {
+        "scan-csv"
+    }
+
+    fn num_inputs(&self) -> usize {
+        0
+    }
+
+    fn execute(
+        &self,
+        comm: &Communicator,
+        _td: &TaskDescription,
+        _inputs: Vec<Table>,
+        _backend: &KernelBackend,
+    ) -> Result<ChunkedTable> {
+        let t = read_csv(&self.path, self.schema.clone())?;
+        let (rank, size) = (comm.rank(), comm.size());
+        let n = t.num_rows();
+        let start = rank * n / size;
+        let end = (rank + 1) * n / size;
+        Ok(ChunkedTable::from(t.slice(start, end - start)))
+    }
+}
+
+/// Zero-copy union of two inputs: both per-rank windows are adopted as
+/// chunks of one logical table (row order: left then right). Rank-local.
+#[derive(Clone, Debug, Default)]
+pub struct UnionOp;
+
+impl Operator for UnionOp {
+    fn name(&self) -> &str {
+        "union"
+    }
+
+    fn num_inputs(&self) -> usize {
+        2
+    }
+
+    fn execute(
+        &self,
+        _comm: &Communicator,
+        _td: &TaskDescription,
+        inputs: Vec<Table>,
+        _backend: &KernelBackend,
+    ) -> Result<ChunkedTable> {
+        ChunkedTable::from_tables(inputs)
+    }
+}
+
+/// Convenience handles for the built-in operators (default parameters).
+pub fn join_op() -> OpHandle {
+    Arc::new(JoinOp::default())
+}
+
+/// Default [`SortOp`] handle (sort by column 0).
+pub fn sort_op() -> OpHandle {
+    Arc::new(SortOp::default())
+}
+
+/// Default [`GroupbyOp`] handle (sum of column 1 grouped by column 0).
+pub fn groupby_op() -> OpHandle {
+    Arc::new(GroupbyOp::default())
+}
+
+/// Default [`FilterOp`] handle (`val >= 0.5` on the synthetic schema).
+pub fn filter_op() -> OpHandle {
+    Arc::new(FilterOp::default())
+}
+
+/// Default [`ProjectOp`] handle (identity projection of `key`, `val`).
+pub fn project_op() -> OpHandle {
+    Arc::new(ProjectOp::default())
+}
+
+/// [`GenerateOp`] handle.
+pub fn generate_op() -> OpHandle {
+    Arc::new(GenerateOp)
+}
+
+/// [`UnionOp`] handle.
+pub fn union_op() -> OpHandle {
+    Arc::new(UnionOp)
+}
+
+type OpFactory = Arc<dyn Fn() -> OpHandle + Send + Sync>;
+
+/// Name → operator-factory table. One process-wide instance lives behind
+/// [`registry`]; the factories produce default-parameter instances (the
+/// CLI/INI path), while programmatic users hand parameterized handles to
+/// [`TaskDescription::new`] directly.
+#[derive(Default)]
+pub struct OperatorRegistry {
+    factories: Mutex<HashMap<String, OpFactory>>,
+}
+
+impl OperatorRegistry {
+    /// Register (or replace) the factory behind `name`.
+    pub fn register<F>(&self, name: &str, factory: F)
+    where
+        F: Fn() -> OpHandle + Send + Sync + 'static,
+    {
+        self.factories
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::new(factory));
+    }
+
+    /// Instantiate the operator registered under `name`.
+    /// Unknown names are a configuration error, never a panic.
+    pub fn resolve(&self, name: &str) -> Result<OpHandle> {
+        // Clone the factory out and drop the lock before invoking it, so a
+        // factory may itself consult the registry (composite operators)
+        // without deadlocking on the non-reentrant mutex.
+        let factory = {
+            let factories = self.factories.lock().unwrap();
+            match factories.get(name) {
+                Some(f) => f.clone(),
+                None => {
+                    let mut known: Vec<&str> =
+                        factories.keys().map(String::as_str).collect();
+                    known.sort_unstable();
+                    return Err(Error::Config(format!(
+                        "unknown operator '{name}' (registered: {})",
+                        known.join(", ")
+                    )));
+                }
+            }
+        };
+        Ok(factory())
+    }
+
+    /// Registered operator names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> =
+            self.factories.lock().unwrap().keys().cloned().collect();
+        names.sort_unstable();
+        names
+    }
+}
+
+/// The process-wide operator registry, pre-seeded with the built-ins
+/// (`scan-csv` is excluded: it has no meaningful default parameters and is
+/// constructed through the plan builder instead).
+pub fn registry() -> &'static OperatorRegistry {
+    static REGISTRY: OnceLock<OperatorRegistry> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        let r = OperatorRegistry::default();
+        r.register("join", join_op);
+        r.register("sort", sort_op);
+        r.register("groupby", groupby_op);
+        r.register("filter", filter_op);
+        r.register("project", project_op);
+        r.register("generate", generate_op);
+        r.register("union", union_op);
+        r
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CommWorld, NetModel};
+    use crate::df::{Column, DataType};
+    use crate::metrics::mem;
+    use crate::pilot::DataDist;
+
+    fn kv_table(keys: Vec<i64>, vals: Vec<f64>) -> Table {
+        Table::new(
+            Schema::of(&[("key", DataType::Int64), ("val", DataType::Float64)]),
+            vec![Column::from_i64(keys), Column::from_f64(vals)],
+        )
+        .unwrap()
+    }
+
+    /// Run a rank-local (collective-free) operator on **this** thread over
+    /// a 1-rank world, so `mem::thread()` deltas observe its allocations.
+    fn run_local(op: &dyn Operator, inputs: Vec<Table>) -> ChunkedTable {
+        let w = CommWorld::new(1, NetModel::disabled());
+        let c = w.communicator(0);
+        let td = TaskDescription::sort("t", 1, 0, DataDist::Uniform);
+        op.execute(&c, &td, inputs, &KernelBackend::Native).unwrap()
+    }
+
+    #[test]
+    fn registry_resolves_builtins_and_rejects_unknown() {
+        for name in ["join", "sort", "groupby", "filter", "project", "generate", "union"]
+        {
+            let op = registry().resolve(name).unwrap();
+            assert_eq!(op.name(), name);
+        }
+        let err = registry().resolve("frobnicate").unwrap_err().to_string();
+        assert!(err.contains("unknown operator 'frobnicate'"), "{err}");
+        assert!(err.contains("join"), "lists known names: {err}");
+    }
+
+    #[test]
+    fn registry_accepts_user_operators() {
+        #[derive(Debug)]
+        struct Noop;
+        impl Operator for Noop {
+            fn name(&self) -> &str {
+                "noop"
+            }
+            fn num_inputs(&self) -> usize {
+                1
+            }
+            fn execute(
+                &self,
+                _comm: &Communicator,
+                _td: &TaskDescription,
+                inputs: Vec<Table>,
+                _backend: &KernelBackend,
+            ) -> Result<ChunkedTable> {
+                Ok(ChunkedTable::from(inputs.into_iter().next().unwrap()))
+            }
+        }
+        let local = OperatorRegistry::default();
+        local.register("noop", || Arc::new(Noop));
+        assert_eq!(local.resolve("noop").unwrap().num_inputs(), 1);
+        assert_eq!(local.names(), vec!["noop"]);
+    }
+
+    #[test]
+    fn filter_on_sliced_view_materializes_zero_bytes() {
+        let base = kv_table((0..100).collect(), (0..100).map(|i| i as f64 / 100.0).collect());
+        // A sliced view (rows 20..80) — the handoff shape a piped rank sees.
+        let window = base.slice(20, 60);
+        let op = FilterOp { col: 1, cmp: CmpOp::Ge, scalar: 0.5 };
+        let before = mem::thread();
+        let t = &window;
+        let mask = compare_scalar(t.column(op.col), op.scalar, op.cmp).unwrap();
+        let out = filter_view(t, &mask).unwrap();
+        assert_eq!(
+            mem::thread().since(before).materialized,
+            0,
+            "filter on a sliced view must materialize zero bytes"
+        );
+        assert_eq!(out.num_rows(), 30); // vals 0.50..0.79
+        assert!(out.chunks()[0].column(0).shares_buffer(base.column(0)));
+    }
+
+    #[test]
+    fn filter_op_distributed_matches_local_oracle() {
+        let op = FilterOp { col: 1, cmp: CmpOp::Lt, scalar: 0.25 };
+        let t = kv_table((0..40).collect(), (0..40).map(|i| (i % 4) as f64 / 4.0).collect());
+        let oracle = t
+            .filter(&compare_scalar(t.column(1), 0.25, CmpOp::Lt).unwrap())
+            .unwrap();
+        let out = run_local(&op, vec![t]);
+        assert_eq!(out.num_rows(), oracle.num_rows());
+        assert_eq!(out.multiset_fingerprint(), oracle.multiset_fingerprint());
+    }
+
+    #[test]
+    fn project_on_chunked_window_materializes_zero_bytes() {
+        let base = kv_table((0..50).collect(), vec![0.0; 50]);
+        let staged = ChunkedTable::from_tables(vec![base.slice(0, 30), base.slice(30, 20)])
+            .unwrap();
+        // A consumer rank's window carved from a chunked (gathered-shape)
+        // table; it lands inside chunk 0, so into_table() is the zero-copy
+        // single-chunk fast path.
+        let window = staged.slice(5, 20).into_table();
+        let op = ProjectOp { columns: vec!["key".into()] };
+        let before = mem::thread();
+        let out = run_local(&op, vec![window]);
+        assert_eq!(
+            mem::thread().since(before).materialized,
+            0,
+            "projection must be Arc clones only"
+        );
+        assert_eq!(out.num_rows(), 20);
+        assert_eq!(out.schema().len(), 1);
+        assert!(out.chunks()[0].column(0).shares_buffer(base.column(0)));
+    }
+
+    #[test]
+    fn union_adopts_both_inputs_zero_copy() {
+        let l = kv_table(vec![1, 2], vec![0.0; 2]);
+        let r = kv_table(vec![3], vec![0.0; 1]);
+        let before = mem::thread();
+        let out = run_local(&UnionOp, vec![l.clone(), r.clone()]);
+        assert_eq!(mem::thread().since(before).materialized, 0);
+        assert_eq!(out.num_chunks(), 2);
+        assert_eq!(out.compact().column(0).as_i64().unwrap(), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn scan_csv_partitions_across_ranks() {
+        let dir = std::env::temp_dir().join("rc-scan-csv-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("scan.csv");
+        let t = kv_table((0..9).collect(), (0..9).map(|i| i as f64).collect());
+        crate::df::write_csv(&t, &path).unwrap();
+        let schema = t.schema().clone();
+        let op = ScanCsvOp { path: path.clone(), schema };
+        let w = CommWorld::new(3, NetModel::disabled());
+        let td = TaskDescription::sort("scan", 3, 0, DataDist::Uniform);
+        let out = w
+            .run(move |c| op.execute(&c, &td, vec![], &KernelBackend::Native))
+            .unwrap();
+        let rows: usize = out.iter().map(|r| r.as_ref().unwrap().num_rows()).sum();
+        assert_eq!(rows, 9);
+        assert_eq!(
+            out[1].as_ref().unwrap().compact().column(0).as_i64().unwrap(),
+            &[3, 4, 5]
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn plan_ranks_defaults_to_hint() {
+        assert_eq!(SortOp::default().plan_ranks(4), 4);
+        assert_eq!(SortOp::default().plan_ranks(0), 1);
+    }
+}

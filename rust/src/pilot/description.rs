@@ -7,31 +7,10 @@ use std::sync::Arc;
 
 use crate::cluster::MachineSpec;
 use crate::df::{ChunkedTable, Table};
+use crate::ops::operator::{groupby_op, join_op, sort_op, OpHandle};
 
 /// Key distribution of the generated workload (re-exported df type).
 pub use crate::df::KeyDist as DataDist;
-
-/// The Cylon operation a task executes (paper §4 evaluates join and sort;
-/// groupby exercises the same shuffle substrate).
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum CylonOp {
-    /// Distributed hash join of two generated tables.
-    Join,
-    /// Distributed sample-sort of one generated table.
-    Sort,
-    /// Distributed groupby-sum (two-phase aggregation).
-    Groupby,
-}
-
-impl CylonOp {
-    pub fn name(&self) -> &'static str {
-        match self {
-            CylonOp::Join => "join",
-            CylonOp::Sort => "sort",
-            CylonOp::Groupby => "groupby",
-        }
-    }
-}
 
 /// Resource placeholder request (paper Fig 3-2).
 #[derive(Clone, Debug)]
@@ -111,20 +90,31 @@ pub struct TaskDescription {
     /// Distinct-key space for generated keys.
     pub key_space: i64,
     pub dist: DataDist,
-    pub op: CylonOp,
+    /// The operator this task executes — any [`crate::ops::operator::Operator`]
+    /// implementation (built-in or user-registered). The executor dispatches
+    /// through this handle; there is no closed operation enum.
+    pub op: OpHandle,
     pub seed: u64,
     /// Scheduling priority: higher dispatches first (§4.4 multi-tenancy).
     pub priority: i32,
     /// Which rank pool the private communicator is carved from.
     pub rank_class: RankClass,
-    /// Staged input table (pipeline table handoff): when set, the task's
-    /// ranks consume contiguous row windows of this table instead of
-    /// generating synthetic data from the spec above. Held as a
-    /// [`ChunkedTable`] so a gathered upstream output stays in its
-    /// per-rank parts and the per-rank windowing copies nothing
-    /// ([`crate::ops::dist::partition_slice`]). For joins, the staged
-    /// table is the *left* side; the right side is still generated.
-    pub input: Option<Arc<ChunkedTable>>,
+    /// Staged input tables (pipeline table handoff), in operator-input
+    /// order: the task's ranks consume contiguous row windows of each
+    /// instead of generating synthetic data from the spec above. A join
+    /// consumes **two** entries — both sides piped from upstream tasks.
+    /// Each is held as a [`ChunkedTable`] so a gathered upstream output
+    /// stays in its per-rank parts and the per-rank windowing copies
+    /// nothing ([`crate::ops::dist::partition_slice`]).
+    ///
+    /// Staging *fewer* tables than [`crate::ops::operator::Operator::num_inputs`]
+    /// is rejected at execution time unless the task explicitly opts into
+    /// [`Self::allow_synthetic_fill`] — a partially-piped operator never
+    /// silently regenerates its missing inputs.
+    pub inputs: Vec<Arc<ChunkedTable>>,
+    /// Opt-in: generate synthetic partitions for operator inputs beyond
+    /// the staged ones (`inputs`), instead of failing. Off by default.
+    pub synthetic_fill: bool,
     /// Collect the task's output table (gathered to group rank 0 and
     /// carried in [`super::TaskResult::output`]) — the producer side of the
     /// pipeline handoff. Off by default: gathering costs one extra
@@ -133,7 +123,7 @@ pub struct TaskDescription {
 }
 
 impl TaskDescription {
-    pub fn new(name: &str, op: CylonOp, ranks: usize, rows_per_rank: usize) -> Self {
+    pub fn new(name: &str, op: OpHandle, ranks: usize, rows_per_rank: usize) -> Self {
         TaskDescription {
             name: name.to_string(),
             ranks,
@@ -144,21 +134,31 @@ impl TaskDescription {
             seed: 0xC71,
             priority: 0,
             rank_class: RankClass::Cpu,
-            input: None,
+            inputs: Vec::new(),
+            synthetic_fill: false,
             keep_output: false,
         }
     }
 
-    /// Stage an input table: ranks consume contiguous windows of it
-    /// instead of generating synthetic data (pipeline table handoff).
+    /// Stage one input table (appended in operator-input order): ranks
+    /// consume contiguous windows of it instead of generating synthetic
+    /// data (pipeline table handoff). Call once per operator input.
     pub fn with_input(mut self, table: Arc<ChunkedTable>) -> Self {
-        self.input = Some(table);
+        self.inputs.push(table);
         self
     }
 
     /// [`Self::with_input`] convenience for a contiguous table.
     pub fn with_input_table(self, table: Table) -> Self {
         self.with_input(Arc::new(ChunkedTable::from(table)))
+    }
+
+    /// Explicitly allow the executor to generate synthetic partitions for
+    /// operator inputs that were not staged — e.g. a join piped only on
+    /// its left side. Without this, a partial staging fails loudly.
+    pub fn allow_synthetic_fill(mut self) -> Self {
+        self.synthetic_fill = true;
+        self
     }
 
     /// Request the output table be gathered and returned in the
@@ -180,22 +180,28 @@ impl TaskDescription {
         self
     }
 
-    /// Weak-scaling join task: `rows_per_rank` on each of `ranks` ranks.
+    /// Weak-scaling join task: `rows_per_rank` on each of `ranks` ranks
+    /// (default inner join on column 0 of both sides).
     pub fn join(name: &str, ranks: usize, rows_per_rank: usize, dist: DataDist) -> Self {
-        let mut td = Self::new(name, CylonOp::Join, ranks, rows_per_rank);
+        let mut td = Self::new(name, join_op(), ranks, rows_per_rank);
         td.dist = dist;
         td
     }
 
-    /// Weak-scaling sort task.
+    /// Weak-scaling sort task (default sort by column 0).
     pub fn sort(name: &str, ranks: usize, rows_per_rank: usize, dist: DataDist) -> Self {
-        let mut td = Self::new(name, CylonOp::Sort, ranks, rows_per_rank);
+        let mut td = Self::new(name, sort_op(), ranks, rows_per_rank);
         td.dist = dist;
         td
+    }
+
+    /// Weak-scaling groupby task (default sum of column 1 by column 0).
+    pub fn groupby(name: &str, ranks: usize, rows_per_rank: usize) -> Self {
+        Self::new(name, groupby_op(), ranks, rows_per_rank)
     }
 
     /// Strong scaling: `total_rows` divided across `ranks`.
-    pub fn strong(name: &str, op: CylonOp, ranks: usize, total_rows: usize) -> Self {
+    pub fn strong(name: &str, op: OpHandle, ranks: usize, total_rows: usize) -> Self {
         Self::new(name, op, ranks, total_rows.div_ceil(ranks.max(1)))
     }
 
@@ -227,10 +233,10 @@ mod tests {
 
     #[test]
     fn strong_scaling_divides() {
-        let td = TaskDescription::strong("s", CylonOp::Sort, 8, 1000);
+        let td = TaskDescription::strong("s", sort_op(), 8, 1000);
         assert_eq!(td.rows_per_rank, 125);
         assert_eq!(td.total_rows(), 1000);
-        let uneven = TaskDescription::strong("s", CylonOp::Sort, 3, 100);
+        let uneven = TaskDescription::strong("s", sort_op(), 3, 100);
         assert_eq!(uneven.rows_per_rank, 34); // ceil
     }
 
@@ -239,9 +245,12 @@ mod tests {
         let td = TaskDescription::join("j", 4, 100, DataDist::Uniform)
             .with_seed(9)
             .with_key_space(50);
-        assert_eq!(td.op, CylonOp::Join);
+        assert_eq!(td.op.name(), "join");
+        assert_eq!(td.op.num_inputs(), 2);
         assert_eq!(td.seed, 9);
         assert_eq!(td.key_space, 50);
-        assert_eq!(td.op.name(), "join");
+        assert_eq!(TaskDescription::groupby("g", 2, 10).op.name(), "groupby");
+        assert!(!td.synthetic_fill);
+        assert!(td.inputs.is_empty());
     }
 }

@@ -7,8 +7,6 @@ mod description;
 mod session;
 mod task;
 
-pub use description::{
-    CylonOp, DataDist, PilotDescription, RankClass, TaskDescription,
-};
+pub use description::{DataDist, PilotDescription, RankClass, TaskDescription};
 pub use session::{Pilot, PilotManager, PilotState, Session, TaskManager};
 pub use task::{TaskHandle, TaskResult, TaskState};

@@ -17,12 +17,14 @@
 //!   a slow task in wave *k* stalls ready tasks in wave *k+1*
 //!   (`benches/pipeline_dataflow.rs` measures the gap).
 //!
-//! **Table handoff:** a node added with [`Pipeline::add_piped`] consumes the
-//! gathered output table of an upstream node instead of regenerating
-//! synthetic data — the executor marks the producer with `keep_output`,
-//! threads the resulting [`Arc<ChunkedTable>`](crate::df::ChunkedTable)
-//! into the consumer's [`TaskDescription::input`], and the consumer's ranks
-//! each carve a contiguous window zero-copy
+//! **Table handoff:** a node added with [`Pipeline::add_piped`] (one
+//! upstream) or [`Pipeline::add_piped_multi`] (one per operator input — a
+//! join consumes **both** sides from upstream tasks) consumes the gathered
+//! output tables of upstream nodes instead of regenerating synthetic data —
+//! the executor marks each producer with `keep_output`, threads the
+//! resulting [`Arc<ChunkedTable>`](crate::df::ChunkedTable)s into the
+//! consumer's [`TaskDescription::inputs`], and the consumer's ranks each
+//! carve a contiguous window zero-copy
 //! ([`crate::ops::dist::partition_slice`]). The producer's gathered parts
 //! are never flattened on this path; a consumer rank materializes at most
 //! its own window.
@@ -47,8 +49,9 @@ use crate::raptor::ReadyPolicy;
 struct Node {
     td: TaskDescription,
     deps: Vec<usize>,
-    /// Dependency whose gathered output table becomes this node's input.
-    pipe_from: Option<usize>,
+    /// Dependencies whose gathered output tables become this node's staged
+    /// inputs, in operator-input order (a join lists left then right).
+    pipe_from: Vec<usize>,
 }
 
 /// Results plus scheduling metrics from one pipeline execution.
@@ -73,24 +76,37 @@ impl Pipeline {
     /// Add a task depending on previously-added node ids; returns its id.
     pub fn add(&mut self, td: TaskDescription, deps: &[usize]) -> usize {
         let id = self.nodes.len();
-        self.nodes.push(Node { td, deps: deps.to_vec(), pipe_from: None });
+        self.nodes.push(Node { td, deps: deps.to_vec(), pipe_from: Vec::new() });
         id
     }
 
-    /// Add a task that consumes the output table of dependency `from`
-    /// (table handoff). `from` must be listed in `deps`; violations are
-    /// reported by [`Pipeline::validate`].
+    /// Add a task that consumes the output table of dependency `from` as
+    /// its (single) staged input (table handoff). `from` must be listed in
+    /// `deps`; violations are reported by [`Pipeline::validate`].
     pub fn add_piped(
         &mut self,
         td: TaskDescription,
         deps: &[usize],
         from: usize,
     ) -> usize {
+        self.add_piped_multi(td, deps, &[from])
+    }
+
+    /// Add a task that consumes the output tables of several dependencies,
+    /// one per operator input in order — e.g. a join piped on **both**
+    /// sides lists `&[left, right]`. Every source must be listed in
+    /// `deps`; violations are reported by [`Pipeline::validate`].
+    pub fn add_piped_multi(
+        &mut self,
+        td: TaskDescription,
+        deps: &[usize],
+        from: &[usize],
+    ) -> usize {
         let id = self.nodes.len();
         self.nodes.push(Node {
             td,
             deps: deps.to_vec(),
-            pipe_from: Some(from),
+            pipe_from: from.to_vec(),
         });
         id
     }
@@ -116,7 +132,7 @@ impl Pipeline {
                     )));
                 }
             }
-            if let Some(src) = n.pipe_from {
+            for &src in &n.pipe_from {
                 if !n.deps.contains(&src) {
                     return Err(Error::Pilot(format!(
                         "node {i} ('{}') pipes from {src}, which is not one of its \
@@ -163,11 +179,45 @@ impl Pipeline {
         self.run_waves(tm).map(|run| run.results)
     }
 
+    /// Execute every node serially in topological (id) order through an
+    /// arbitrary task executor, threading the table handoff between nodes
+    /// exactly like the pilot executors do. This is how engines without a
+    /// shared pilot (bare-metal, batch) drive a DAG: one independent launch
+    /// per node, outputs carried across launches. Fails fast on the first
+    /// node that does not finish `Done`.
+    pub fn run_sequential<F>(&self, mut exec: F) -> Result<Vec<TaskResult>>
+    where
+        F: FnMut(TaskDescription) -> Result<TaskResult>,
+    {
+        self.validate()?;
+        let keep = self.keep_flags();
+        let n = self.nodes.len();
+        let mut outputs: Vec<Option<Arc<ChunkedTable>>> =
+            (0..n).map(|_| None).collect();
+        let mut results = Vec::with_capacity(n);
+        // Node ids are topological by construction (deps reference earlier
+        // ids only), so id order is a valid serial schedule.
+        for i in 0..n {
+            let td = self.prepared_td(i, &keep, &outputs);
+            let r = exec(td)?;
+            if !r.is_done() {
+                return Err(Error::TaskFailed(format!(
+                    "pipeline node {i} ('{}') failed: {}",
+                    r.name,
+                    r.error.clone().unwrap_or_default()
+                )));
+            }
+            outputs[i] = r.output.clone();
+            results.push(r);
+        }
+        Ok(results)
+    }
+
     /// Nodes that must keep (gather) their output for downstream pipes.
     fn keep_flags(&self) -> Vec<bool> {
         let mut keep: Vec<bool> = self.nodes.iter().map(|n| n.td.keep_output).collect();
         for n in &self.nodes {
-            if let Some(src) = n.pipe_from {
+            for &src in &n.pipe_from {
                 keep[src] = true;
             }
         }
@@ -177,19 +227,23 @@ impl Pipeline {
     /// Per-node longest-remaining-chain estimate (critical-path priority).
     /// Duration is estimated as per-rank rows — the per-rank work each
     /// node's BSP kernels process. A piped node that declares no synthetic
-    /// workload (`rows_per_rank == 0`) inherits its producer's total rows
-    /// spread over its own ranks, since that staged table *is* its input.
+    /// workload (`rows_per_rank == 0`) inherits its producers' combined
+    /// total rows spread over its own ranks, since those staged tables
+    /// *are* its input.
     fn chain_estimates(&self) -> Vec<f64> {
         let mut est: Vec<f64> = Vec::with_capacity(self.nodes.len());
         for n in &self.nodes {
             let e = if n.td.rows_per_rank == 0 {
-                match n.pipe_from {
+                if n.pipe_from.is_empty() {
+                    1.0
+                } else {
                     // Producers precede consumers, so est[src] is settled.
-                    Some(src) => {
-                        let src_ranks = self.nodes[src].td.ranks.max(1) as f64;
-                        est[src] * src_ranks / n.td.ranks.max(1) as f64
-                    }
-                    None => 1.0,
+                    let staged: f64 = n
+                        .pipe_from
+                        .iter()
+                        .map(|&src| est[src] * self.nodes[src].td.ranks.max(1) as f64)
+                        .sum();
+                    staged / n.td.ranks.max(1) as f64
                 }
             } else {
                 n.td.rows_per_rank as f64
@@ -207,7 +261,7 @@ impl Pipeline {
         cp
     }
 
-    /// Clone node `i`'s description, wiring handoff input and output
+    /// Clone node `i`'s description, wiring handoff inputs and output
     /// collection for this execution.
     fn prepared_td(
         &self,
@@ -219,8 +273,18 @@ impl Pipeline {
         if keep[i] {
             td.keep_output = true;
         }
-        if let Some(src) = self.nodes[i].pipe_from {
-            td.input = outputs[src].clone();
+        if !self.nodes[i].pipe_from.is_empty() {
+            // Piped nodes take their staged inputs from the DAG (replacing
+            // any manually staged tables on the description).
+            td.inputs = self.nodes[i]
+                .pipe_from
+                .iter()
+                .map(|&src| {
+                    outputs[src].clone().expect(
+                        "pipe source finished before its consumer became ready",
+                    )
+                })
+                .collect();
         }
         td
     }
@@ -459,7 +523,7 @@ mod tests {
     use crate::df::gen_table;
     use crate::df::GenSpec;
     use crate::ops::local::groupby_agg;
-    use crate::pilot::{CylonOp, DataDist, Pilot, PilotDescription, Session};
+    use crate::pilot::{DataDist, Pilot, PilotDescription, Session};
 
     fn td(name: &str, ranks: usize) -> TaskDescription {
         TaskDescription::sort(name, ranks, 40, DataDist::Uniform)
@@ -518,10 +582,7 @@ mod tests {
             TaskDescription::join("merge", 4, 60, DataDist::Uniform),
             &[a, b],
         );
-        let _d = p.add(
-            TaskDescription::new("report", CylonOp::Groupby, 2, 60),
-            &[c],
-        );
+        let _d = p.add(TaskDescription::groupby("report", 2, 60), &[c]);
         let rs = p.execute(&tm).unwrap();
         assert_eq!(rs.len(), 4);
         assert!(rs.iter().all(|r| r.is_done()));
@@ -641,7 +702,7 @@ mod tests {
             &[],
         );
         let agg = p.add_piped(
-            TaskDescription::new("agg", CylonOp::Groupby, 2, 9999).collect_output(),
+            TaskDescription::groupby("agg", 2, 9999).collect_output(),
             &[gen],
             gen,
         );
@@ -675,6 +736,110 @@ mod tests {
         want.sort_unstable();
         assert_eq!(got, want);
         assert_eq!(run.results[agg].output_rows, oracle.num_rows() as u64);
+    }
+
+    /// The multi-input handoff acceptance property: a join consumes **both**
+    /// sides from upstream tasks — neither side is regenerated.
+    #[test]
+    fn join_pipes_both_sides_from_upstream() {
+        let (s, pilot) = pilot_of(4, "handoff2");
+        let tm = s.task_manager(&pilot);
+        let mut p = Pipeline::new();
+        let left = p.add(
+            TaskDescription::sort("left", 2, 80, DataDist::Uniform).with_seed(0xA),
+            &[],
+        );
+        let right = p.add(
+            TaskDescription::sort("right", 2, 80, DataDist::Uniform).with_seed(0xB),
+            &[],
+        );
+        let join = p.add_piped_multi(
+            TaskDescription::join("merge", 2, 9999, DataDist::Uniform)
+                .collect_output(),
+            &[left, right],
+            &[left, right],
+        );
+        let run = p.run_dataflow(&tm, ReadyPolicy::Fifo).unwrap();
+        pilot.shutdown();
+
+        // Oracle: join the producers' actual synthetic partitions.
+        let spec = |seed| GenSpec {
+            rows: 80,
+            key_space: (80i64 * 2).max(16),
+            dist: DataDist::Uniform,
+            seed,
+        };
+        let l = Table::concat(&[gen_table(&spec(0xA), 0), gen_table(&spec(0xA), 1)])
+            .unwrap();
+        let r = Table::concat(&[gen_table(&spec(0xB), 0), gen_table(&spec(0xB), 1)])
+            .unwrap();
+        let oracle = crate::ops::local::hash_join(
+            &l,
+            &r,
+            0,
+            0,
+            crate::ops::local::JoinType::Inner,
+        )
+        .unwrap();
+        assert_eq!(run.results[join].output_rows, oracle.num_rows() as u64);
+        let got = run.results[join].output.as_ref().unwrap();
+        assert_eq!(got.multiset_fingerprint(), oracle.multiset_fingerprint());
+    }
+
+    /// A join piped on one side only must fail loudly (no silent synthetic
+    /// right side) — unless the description opts into synthetic fill.
+    #[test]
+    fn half_piped_join_fails_without_opt_in() {
+        let (s, pilot) = pilot_of(4, "half-pipe");
+        let tm = s.task_manager(&pilot);
+        let build = |fill: bool| {
+            let mut p = Pipeline::new();
+            let left = p.add(td("left", 2), &[]);
+            let mut merge = TaskDescription::join("merge", 2, 40, DataDist::Uniform);
+            if fill {
+                merge = merge.allow_synthetic_fill();
+            }
+            p.add_piped(merge, &[left], left);
+            p
+        };
+        let err = build(false)
+            .run_dataflow(&tm, ReadyPolicy::Fifo)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("allow_synthetic_fill"), "{err}");
+        let run = build(true).run_dataflow(&tm, ReadyPolicy::Fifo).unwrap();
+        assert!(run.results.iter().all(|r| r.is_done()));
+        pilot.shutdown();
+    }
+
+    #[test]
+    fn run_sequential_matches_dataflow_outputs() {
+        let (s, pilot) = pilot_of(4, "seq");
+        let tm = s.task_manager(&pilot);
+        let mut p = Pipeline::new();
+        let gen = p.add(
+            TaskDescription::sort("gen", 2, 120, DataDist::Uniform).with_seed(3),
+            &[],
+        );
+        let agg = p.add_piped(
+            TaskDescription::groupby("agg", 2, 0).collect_output(),
+            &[gen],
+            gen,
+        );
+        let dataflow = p.run_dataflow(&tm, ReadyPolicy::Fifo).unwrap();
+        let seq = p
+            .run_sequential(|prepared| tm.submit(prepared)?.wait())
+            .unwrap();
+        pilot.shutdown();
+        assert_eq!(seq.len(), dataflow.results.len());
+        assert_eq!(
+            seq[agg].output.as_ref().unwrap().multiset_fingerprint(),
+            dataflow.results[agg]
+                .output
+                .as_ref()
+                .unwrap()
+                .multiset_fingerprint()
+        );
     }
 
     #[test]

@@ -1,0 +1,458 @@
+//! Logical plans: a fluent builder over the operator algebra that lowers
+//! deterministically to the [`Pipeline`] DAG with piped table handoff.
+//!
+//! The paper's pipeline is "a collection of data frame operators arranged
+//! in a DAG" (§4.4); a [`Plan`] *is* that arrangement, written the way a
+//! dataframe user thinks:
+//!
+//! ```
+//! use radical_cylon::plan::Plan;
+//! use radical_cylon::df::GenSpec;
+//! use radical_cylon::ops::local::CmpOp;
+//!
+//! let users = Plan::generate(2, GenSpec::uniform(1_000, 500, 7))
+//!     .filter(1, CmpOp::Ge, 0.5);
+//! let events = Plan::generate(2, GenSpec::uniform(1_000, 500, 8));
+//! let report = users
+//!     .join(events, 0, 0) // both sides piped from upstream tasks
+//!     .sort(0)
+//!     .collect();
+//! let lowered = report.lower().unwrap();
+//! assert_eq!(lowered.pipeline.len(), 5); // gen, gen, filter, join, sort
+//! ```
+//!
+//! **Lowering** ([`Plan::lower`]) walks the expression tree bottom-up and
+//! emits one [`TaskDescription`] per distinct logical node:
+//!
+//! * every node's operator becomes an [`OpHandle`] (the same registry
+//!   entries the executor dispatches through — no separate lowering per
+//!   engine);
+//! * every edge becomes a piped handoff
+//!   ([`Pipeline::add_piped_multi`]): the producer gathers its output
+//!   zero-copy, the consumer's ranks carve per-rank windows — a join
+//!   consumes **both** sides from upstream tasks;
+//! * structurally identical subtrees are emitted **once** (common
+//!   subexpression elimination), so `let g = Plan::generate(..);
+//!   g.clone().sort(0).union(g.clone().groupby(..))` runs one generate
+//!   task, not two;
+//! * node ids are assigned in deterministic post-order (left input first),
+//!   so the same plan always lowers to the same DAG — the property the
+//!   plan-vs-hand-built equivalence tests pin down.
+//!
+//! Execution goes through [`crate::exec::Engine::run_plan`] on any engine;
+//! the heterogeneous engine drives the lowered DAG through the
+//! event-driven dataflow scheduler.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::df::{GenSpec, Schema};
+use crate::error::{Error, Result};
+use crate::ops::local::{AggFn, CmpOp, JoinType};
+use crate::ops::operator::{
+    FilterOp, GenerateOp, GroupbyOp, JoinOp, OpHandle, ProjectOp, ScanCsvOp,
+    SortOp, UnionOp,
+};
+use crate::pilot::TaskDescription;
+use crate::pipeline::Pipeline;
+
+/// The logical operation at one plan node.
+#[derive(Clone, Debug)]
+enum LogicalOp {
+    Generate { spec: GenSpec },
+    ScanCsv { path: PathBuf, schema: Schema },
+    Filter { col: usize, cmp: CmpOp, scalar: f64 },
+    Project { columns: Vec<String> },
+    Join { left_key: usize, right_key: usize, how: JoinType },
+    Sort { key: usize },
+    Groupby { key: usize, val: usize, agg: AggFn },
+    Union,
+}
+
+impl LogicalOp {
+    fn op_name(&self) -> &'static str {
+        match self {
+            LogicalOp::Generate { .. } => "generate",
+            LogicalOp::ScanCsv { .. } => "scan-csv",
+            LogicalOp::Filter { .. } => "filter",
+            LogicalOp::Project { .. } => "project",
+            LogicalOp::Join { .. } => "join",
+            LogicalOp::Sort { .. } => "sort",
+            LogicalOp::Groupby { .. } => "groupby",
+            LogicalOp::Union => "union",
+        }
+    }
+
+    fn handle(&self) -> OpHandle {
+        match self {
+            LogicalOp::Generate { .. } => Arc::new(GenerateOp),
+            LogicalOp::ScanCsv { path, schema } => Arc::new(ScanCsvOp {
+                path: path.clone(),
+                schema: schema.clone(),
+            }),
+            LogicalOp::Filter { col, cmp, scalar } => Arc::new(FilterOp {
+                col: *col,
+                cmp: *cmp,
+                scalar: *scalar,
+            }),
+            LogicalOp::Project { columns } => Arc::new(ProjectOp {
+                columns: columns.clone(),
+            }),
+            LogicalOp::Join { left_key, right_key, how } => Arc::new(JoinOp {
+                left_key: *left_key,
+                right_key: *right_key,
+                how: *how,
+            }),
+            LogicalOp::Sort { key } => Arc::new(SortOp { key: *key }),
+            LogicalOp::Groupby { key, val, agg } => Arc::new(GroupbyOp {
+                key: *key,
+                val: *val,
+                agg: *agg,
+            }),
+            LogicalOp::Union => Arc::new(UnionOp),
+        }
+    }
+}
+
+/// A logical dataframe plan — an expression tree of operators. Build one
+/// from a source ([`Plan::generate`] / [`Plan::scan_csv`]), chain
+/// transformations fluently, finish with [`Plan::collect`], and hand it to
+/// [`crate::exec::Engine::run_plan`] (or [`Plan::lower`] it yourself).
+///
+/// `Clone` is cheap and safe to use for sharing: children are held behind
+/// [`Arc`], so cloning copies one node, and lowering deduplicates both by
+/// pointer identity (a shared subtree is visited once) and by structure
+/// (separately-built identical subtrees emit one DAG node) — a cloned
+/// source runs once.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    op: LogicalOp,
+    inputs: Vec<Arc<Plan>>,
+    /// Explicit rank override; sources require one, derived nodes default
+    /// to the max over their inputs.
+    ranks: Option<usize>,
+    /// Explicit node name; auto-derived (`"{op}-{id}"`) when unset.
+    name: Option<String>,
+    /// Gather this node's output into the final [`crate::pilot::TaskResult`].
+    collect: bool,
+}
+
+/// A [`Plan`] lowered to the physical DAG: the [`Pipeline`] plus the node
+/// id of the plan's sink (whose result carries the collected output).
+#[derive(Clone, Debug)]
+pub struct LoweredPlan {
+    pub pipeline: Pipeline,
+    /// Node id of the plan root in `pipeline`.
+    pub sink: usize,
+}
+
+impl Plan {
+    fn node(op: LogicalOp, inputs: Vec<Plan>) -> Plan {
+        Plan {
+            op,
+            inputs: inputs.into_iter().map(Arc::new).collect(),
+            ranks: None,
+            name: None,
+            collect: false,
+        }
+    }
+
+    // ---- sources --------------------------------------------------------
+
+    /// Source: `ranks` ranks each generating the deterministic synthetic
+    /// partition described by `spec` (`spec.rows` rows *per rank*).
+    pub fn generate(ranks: usize, spec: GenSpec) -> Plan {
+        let mut p = Plan::node(LogicalOp::Generate { spec }, vec![]);
+        p.ranks = Some(ranks);
+        p
+    }
+
+    /// Source: parallel CSV scan on `ranks` ranks; each rank keeps its own
+    /// contiguous row window of the file.
+    pub fn scan_csv(ranks: usize, path: impl Into<PathBuf>, schema: Schema) -> Plan {
+        let mut p = Plan::node(
+            LogicalOp::ScanCsv { path: path.into(), schema },
+            vec![],
+        );
+        p.ranks = Some(ranks);
+        p
+    }
+
+    // ---- transformations ------------------------------------------------
+
+    /// Keep rows where `column <cmp> scalar` (zero-copy, rank-local).
+    pub fn filter(self, col: usize, cmp: CmpOp, scalar: f64) -> Plan {
+        Plan::node(LogicalOp::Filter { col, cmp, scalar }, vec![self])
+    }
+
+    /// Keep only the named columns (zero-copy, rank-local).
+    pub fn project(self, columns: &[&str]) -> Plan {
+        Plan::node(
+            LogicalOp::Project {
+                columns: columns.iter().map(|c| c.to_string()).collect(),
+            },
+            vec![self],
+        )
+    }
+
+    /// Inner hash join with `other` on the given key columns — **both**
+    /// sides are piped from their upstream tasks.
+    pub fn join(self, other: Plan, left_key: usize, right_key: usize) -> Plan {
+        self.join_how(other, left_key, right_key, JoinType::Inner)
+    }
+
+    /// [`Plan::join`] with an explicit [`JoinType`].
+    pub fn join_how(
+        self,
+        other: Plan,
+        left_key: usize,
+        right_key: usize,
+        how: JoinType,
+    ) -> Plan {
+        Plan::node(
+            LogicalOp::Join { left_key, right_key, how },
+            vec![self, other],
+        )
+    }
+
+    /// Globally sort by an int64 column (distributed sample-sort).
+    pub fn sort(self, key: usize) -> Plan {
+        Plan::node(LogicalOp::Sort { key }, vec![self])
+    }
+
+    /// Group by `key`, aggregating `val` with `agg` (two-phase distributed
+    /// aggregation).
+    pub fn groupby(self, key: usize, val: usize, agg: AggFn) -> Plan {
+        Plan::node(LogicalOp::Groupby { key, val, agg }, vec![self])
+    }
+
+    /// Concatenate with `other` (zero-copy chunk adoption, rank-local).
+    /// Schemas must match at execution time.
+    pub fn union(self, other: Plan) -> Plan {
+        Plan::node(LogicalOp::Union, vec![self, other])
+    }
+
+    // ---- node attributes ------------------------------------------------
+
+    /// Override the rank count for **this** node (derived nodes otherwise
+    /// inherit the max over their inputs).
+    pub fn with_ranks(mut self, ranks: usize) -> Plan {
+        self.ranks = Some(ranks);
+        self
+    }
+
+    /// Name this node's task (auto-derived `"{op}-{id}"` otherwise).
+    pub fn named(mut self, name: &str) -> Plan {
+        self.name = Some(name.to_string());
+        self
+    }
+
+    /// Mark the plan's result for collection: the sink task gathers its
+    /// output table and the engine returns it in
+    /// [`crate::exec::PlanRun::output`].
+    pub fn collect(mut self) -> Plan {
+        self.collect = true;
+        self
+    }
+
+    // ---- lowering -------------------------------------------------------
+
+    /// Lower to the physical [`Pipeline`] DAG. Deterministic: identical
+    /// plans produce identical pipelines (stable post-order ids, CSE over
+    /// structurally identical subtrees).
+    pub fn lower(&self) -> Result<LoweredPlan> {
+        let mut pipeline = Pipeline::new();
+        let mut memo: Vec<(String, usize, usize)> = Vec::new(); // (key, id, ranks)
+        let mut ptr_memo: Vec<(*const Plan, (usize, usize))> = Vec::new();
+        let (sink, _) = self.lower_into(&mut pipeline, &mut memo, &mut ptr_memo)?;
+        Ok(LoweredPlan { pipeline, sink })
+    }
+
+    /// Recursive lowering; returns `(node id, ranks)`.
+    ///
+    /// Two memo layers keep this linear in the number of *distinct* nodes:
+    /// `ptr_memo` short-circuits on `Arc` pointer identity **before**
+    /// recursing (a subtree shared via clone is traversed once, so deeply
+    /// shared diamonds do not explode), and the structural `memo` merges
+    /// separately-built identical subtrees after parameters are known.
+    fn lower_into(
+        &self,
+        pipeline: &mut Pipeline,
+        memo: &mut Vec<(String, usize, usize)>,
+        ptr_memo: &mut Vec<(*const Plan, (usize, usize))>,
+    ) -> Result<(usize, usize)> {
+        let mut child_ids = Vec::with_capacity(self.inputs.len());
+        let mut child_ranks = 0usize;
+        for input in &self.inputs {
+            let ptr = Arc::as_ptr(input);
+            let (id, ranks) = match ptr_memo.iter().find(|(p, _)| *p == ptr) {
+                Some(&(_, hit)) => hit,
+                None => {
+                    let v = input.lower_into(pipeline, memo, ptr_memo)?;
+                    ptr_memo.push((ptr, v));
+                    v
+                }
+            };
+            child_ids.push(id);
+            child_ranks = child_ranks.max(ranks);
+        }
+        let ranks = match self.ranks {
+            Some(r) if r > 0 => r,
+            Some(_) => {
+                return Err(Error::Config(format!(
+                    "plan node '{}' requests zero ranks",
+                    self.op.op_name()
+                )))
+            }
+            None if child_ranks > 0 => child_ranks,
+            None => {
+                return Err(Error::Config(format!(
+                    "plan source '{}' needs an explicit rank count",
+                    self.op.op_name()
+                )))
+            }
+        };
+        let op = self.op.handle();
+        let ranks = op.plan_ranks(ranks);
+        // Structural identity: operator parameters + ranks + name + the
+        // children's *canonical node ids*. Memoization already assigns one
+        // id per distinct subtree, so keying on child ids is equivalent to
+        // embedding full child keys while keeping keys O(fanout) — a
+        // deeply shared diamond does not blow the key up exponentially.
+        // Two nodes with equal keys compute the same table, so the second
+        // one reuses the first's DAG node.
+        let key = format!(
+            "{:?}|ranks={ranks}|name={:?}|collect={}|children={child_ids:?}",
+            self.op, self.name, self.collect
+        );
+        if let Some((_, id, r)) = memo.iter().find(|(k, _, _)| *k == key) {
+            return Ok((*id, *r));
+        }
+
+        let mut td = match &self.op {
+            LogicalOp::Generate { spec } => {
+                let mut td = TaskDescription::new(
+                    self.name.as_deref().unwrap_or(""),
+                    op,
+                    ranks,
+                    spec.rows,
+                );
+                td.key_space = spec.key_space;
+                td.dist = spec.dist;
+                td.seed = spec.seed;
+                td
+            }
+            // Non-source nodes carry no synthetic workload: their input is
+            // entirely the staged handoff (rows_per_rank stays 0, which
+            // also lets the critical-path estimator inherit the producer's
+            // size).
+            _ => TaskDescription::new(self.name.as_deref().unwrap_or(""), op, ranks, 0),
+        };
+        if self.collect {
+            td.keep_output = true;
+        }
+        let id = pipeline.len();
+        if td.name.is_empty() {
+            td.name = format!("{}-{id}", self.op.op_name());
+        }
+        let node_id = if child_ids.is_empty() {
+            pipeline.add(td, &[])
+        } else {
+            pipeline.add_piped_multi(td, &child_ids, &child_ids)
+        };
+        debug_assert_eq!(node_id, id);
+        memo.push((key, node_id, ranks));
+        Ok((node_id, ranks))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn etl() -> Plan {
+        let left = Plan::generate(2, GenSpec::uniform(100, 64, 1))
+            .filter(1, CmpOp::Ge, 0.25);
+        let right = Plan::generate(2, GenSpec::uniform(100, 64, 2));
+        left.join(right, 0, 0).sort(0).collect()
+    }
+
+    #[test]
+    fn lowering_is_deterministic() {
+        let a = etl().lower().unwrap();
+        let b = etl().lower().unwrap();
+        assert_eq!(a.pipeline.len(), b.pipeline.len());
+        assert_eq!(a.sink, b.sink);
+        assert_eq!(a.pipeline.len(), 5); // 2 gens, filter, join, sort
+        assert_eq!(a.sink, 4); // post-order: sink is last
+        assert!(a.pipeline.validate().is_ok());
+    }
+
+    #[test]
+    fn cse_merges_identical_subtrees() {
+        let g = Plan::generate(2, GenSpec::uniform(50, 32, 3));
+        let plan = g
+            .clone()
+            .sort(0)
+            .union(g.clone().groupby(0, 1, AggFn::Sum))
+            .collect();
+        let lowered = plan.lower().unwrap();
+        // generate emitted once: gen, sort, groupby, union.
+        assert_eq!(lowered.pipeline.len(), 4);
+    }
+
+    #[test]
+    fn deep_shared_diamond_lowers_in_linear_time() {
+        // 40 levels of `p union p`: Arc-shared children keep each clone
+        // O(1), the pointer memo traverses every shared subtree once, and
+        // canonical child-id keys keep structural keys O(fanout) — so this
+        // lowers to 41 DAG nodes (one per distinct level) in linear time
+        // instead of hanging on ~2^40 work.
+        let mut p = Plan::generate(1, GenSpec::uniform(4, 4, 0));
+        for _ in 0..40 {
+            p = p.clone().union(p);
+        }
+        let lowered = p.lower().unwrap();
+        assert_eq!(lowered.pipeline.len(), 41);
+    }
+
+    #[test]
+    fn distinct_seeds_stay_distinct() {
+        let a = Plan::generate(2, GenSpec::uniform(50, 32, 3));
+        let b = Plan::generate(2, GenSpec::uniform(50, 32, 4));
+        let lowered = a.union(b).lower().unwrap();
+        assert_eq!(lowered.pipeline.len(), 3);
+    }
+
+    #[test]
+    fn derived_nodes_inherit_ranks() {
+        let plan = Plan::generate(4, GenSpec::uniform(10, 8, 0)).sort(0);
+        let lowered = plan.lower().unwrap();
+        assert_eq!(lowered.pipeline.len(), 2);
+        // No direct accessor for ranks on Pipeline nodes; the invariant is
+        // covered end-to-end by exec::tests::run_plan_* — here we only pin
+        // that lowering succeeds without an explicit rank override.
+        let explicit = Plan::generate(4, GenSpec::uniform(10, 8, 0))
+            .sort(0)
+            .with_ranks(2)
+            .lower()
+            .unwrap();
+        assert_eq!(explicit.pipeline.len(), 2);
+    }
+
+    #[test]
+    fn source_without_ranks_rejected() {
+        let p = Plan::generate(0, GenSpec::uniform(10, 8, 0));
+        let err = p.lower().unwrap_err().to_string();
+        assert!(err.contains("zero ranks"), "{err}");
+    }
+
+    #[test]
+    fn names_are_stable_and_overridable() {
+        let plan = Plan::generate(1, GenSpec::uniform(5, 4, 0))
+            .named("src")
+            .sort(0);
+        let lowered = plan.lower().unwrap();
+        assert_eq!(lowered.pipeline.len(), 2);
+    }
+}

@@ -1,17 +1,20 @@
 //! Execution of one Cylon task on a delivered private communicator —
-//! the paper's Fig 4 steps 8–9 (executor invokes Cylon; data-plane
+//! the paper's Fig 4 steps 8–9 (executor invokes the operator; data-plane
 //! communication on the same framework).
+//!
+//! Dispatch is **open**: a task carries an
+//! [`OpHandle`](crate::ops::operator::OpHandle) and the executor calls
+//! [`Operator::execute`](crate::ops::operator::Operator::execute) — there
+//! is no operation enum to extend here. This module only supplies the
+//! scaffolding every operator shares: staged-input windowing, synthetic
+//! fallback, output gather, and task-level stats aggregation.
 
 use crate::comm::{Communicator, ReduceOp};
-use crate::df::{gen_table, gen_two_tables, ChunkedTable, GenSpec, Table};
+use crate::df::{gen_table, ChunkedTable, GenSpec, Table};
 use crate::error::{Error, Result};
 use crate::metrics::Timer;
-use crate::ops::dist::{
-    dist_groupby, dist_hash_join, dist_sort, gather_table_chunked,
-    partition_slice, KernelBackend,
-};
-use crate::ops::local::{AggFn, JoinType};
-use crate::pilot::{CylonOp, TaskDescription};
+use crate::ops::dist::{gather_chunked, partition_slice, KernelBackend};
+use crate::pilot::TaskDescription;
 
 /// Per-rank statistics aggregated over the task's private communicator.
 #[derive(Clone, Copy, Debug, Default)]
@@ -33,15 +36,76 @@ pub struct TaskOutcome {
     pub output: Option<ChunkedTable>,
 }
 
-/// Run `td`'s operation on this rank of the private communicator and
+/// The seed offset between successively generated operator inputs —
+/// synthetic input `i` draws from `seed + i * SYNTH_SEED_STRIDE`, which for
+/// a two-input join reproduces the historical left/right pair
+/// ([`crate::df::gen_two_tables`]).
+const SYNTH_SEED_STRIDE: u64 = 0x5eed;
+
+/// Synthetic partition for operator input `index` on `rank`.
+fn synthetic_input(spec: &GenSpec, rank: usize, index: usize) -> Table {
+    let shifted = GenSpec {
+        seed: spec.seed.wrapping_add(SYNTH_SEED_STRIDE * index as u64),
+        ..spec.clone()
+    };
+    gen_table(&shifted, rank)
+}
+
+/// Resolve this rank's operator inputs from the staged handoff tables.
+///
+/// Policy (identical on every rank, so failures are symmetric):
+/// * nothing staged → every input is a synthetic partition (the pure
+///   benchmark workload path);
+/// * all inputs staged → each rank consumes its zero-copy window of each;
+/// * *some* inputs staged → an error, unless the description opted into
+///   [`TaskDescription::allow_synthetic_fill`] — a partially-piped
+///   operator never silently regenerates its missing inputs;
+/// * more inputs staged than the operator consumes → always an error.
+fn resolve_inputs(
+    td: &TaskDescription,
+    spec: &GenSpec,
+    rank: usize,
+    size: usize,
+) -> Result<Vec<Table>> {
+    let want = td.op.num_inputs();
+    let staged = td.inputs.len();
+    if staged > want {
+        return Err(Error::Config(format!(
+            "task '{}': operator '{}' consumes {want} input(s) but {staged} were staged",
+            td.name,
+            td.op.name(),
+        )));
+    }
+    if staged < want && staged != 0 && !td.synthetic_fill {
+        return Err(Error::Config(format!(
+            "task '{}': operator '{}' consumes {want} inputs but only {staged} \
+             were staged; pipe every input (Pipeline::add_piped_multi) or opt \
+             in with TaskDescription::allow_synthetic_fill()",
+            td.name,
+            td.op.name(),
+        )));
+    }
+    let mut inputs = Vec::with_capacity(want);
+    for t in &td.inputs {
+        // Zero-copy window of the staged table; compacted to a contiguous
+        // table only if it straddles chunk boundaries, so a rank
+        // materializes at most its own window, never the whole table.
+        inputs.push(partition_slice(t, rank, size).into_table());
+    }
+    for i in staged..want {
+        inputs.push(synthetic_input(spec, rank, i));
+    }
+    Ok(inputs)
+}
+
+/// Run `td`'s operator on this rank of the private communicator and
 /// aggregate the task-level stats (every rank returns the same stats).
 ///
-/// Input resolution (pipeline table handoff): when `td.input` is staged,
-/// each rank consumes a contiguous window of the staged table instead of
-/// generating synthetic data — for joins the staged table is the left side.
-/// The window is carved zero-copy ([`partition_slice`]); it is compacted to
-/// a contiguous table only if it straddles chunk boundaries, so a rank
-/// materializes at most its own window, never the whole staged table.
+/// Input resolution (pipeline table handoff): staged tables are consumed
+/// as zero-copy per-rank windows ([`partition_slice`]) — one per operator
+/// input, so a join consumes both sides staged. Nothing staged means every
+/// input is synthetic; a *partial* staging is rejected unless the
+/// description opted into [`TaskDescription::allow_synthetic_fill`].
 ///
 /// Failure injection (`name` starting with `__fail__`) errors *before* any
 /// collective so all ranks fail symmetrically — the fault-isolation tests
@@ -64,35 +128,23 @@ pub fn run_cylon_task_full(
         dist: td.dist,
         seed: td.seed,
     };
-    let staged: Option<Table> = td
-        .input
-        .as_ref()
-        .map(|t| partition_slice(t, comm.rank(), comm.size()).into_table());
     let timer = Timer::start();
-    let out = match td.op {
-        CylonOp::Join => {
-            let (l, r) = match staged {
-                Some(l) => (l, gen_table(&spec, comm.rank())),
-                None => gen_two_tables(&spec, comm.rank()),
-            };
-            dist_hash_join(comm, &l, &r, 0, 0, JoinType::Inner, backend)?
-        }
-        CylonOp::Sort => {
-            let t = staged.unwrap_or_else(|| gen_table(&spec, comm.rank()));
-            dist_sort(comm, &t, 0, backend)?
-        }
-        CylonOp::Groupby => {
-            let t = staged.unwrap_or_else(|| gen_table(&spec, comm.rank()));
-            dist_groupby(comm, &t, 0, 1, AggFn::Sum, backend)?
-        }
-    };
+    // Input resolution runs *inside* the timer window: synthetic workload
+    // generation and staged-window compaction are part of a task's
+    // measured execution, exactly as before the operator-registry refactor
+    // (keeping the bench trajectory comparable). Errors here are computed
+    // from `td` alone, identical on every rank, so a mis-staged task still
+    // fails symmetrically before any collective runs.
+    let inputs = resolve_inputs(td, &spec, comm.rank(), comm.size())?;
+    let out = td.op.execute(comm, td, inputs, backend)?;
     // The handoff gather is part of the task's measured execution (it holds
     // the ranks), so it runs inside the timer window.
     let out_rows = out.num_rows() as u64;
     let output = if td.keep_output {
         // Collective; Some at group rank 0 only. Chunked: the per-rank
-        // parts are adopted as-is, no flattening copy.
-        gather_table_chunked(comm, out)?
+        // parts (and any sub-windows a zero-copy operator produced) are
+        // adopted as-is, no flattening copy.
+        gather_chunked(comm, out)?
     } else {
         None
     };
@@ -126,13 +178,19 @@ pub fn run_cylon_task(
 mod tests {
     use super::*;
     use crate::comm::{CommWorld, NetModel};
-    use crate::df::{Column, DataType, Schema};
+    use crate::df::{gen_two_tables, Column, DataType, Schema};
     use crate::pilot::DataDist;
     use std::sync::Arc;
 
     fn run(td: TaskDescription, p: usize) -> Vec<Result<RankStats>> {
         let w = CommWorld::new(p, NetModel::disabled());
         w.run(move |c| run_cylon_task(&c, &td, &KernelBackend::Native))
+            .unwrap()
+    }
+
+    fn run_full(td: TaskDescription, p: usize) -> Vec<Result<TaskOutcome>> {
+        let w = CommWorld::new(p, NetModel::disabled());
+        w.run(move |c| run_cylon_task_full(&c, &td, &KernelBackend::Native))
             .unwrap()
     }
 
@@ -160,9 +218,19 @@ mod tests {
 
     #[test]
     fn groupby_task_bounded_by_keyspace() {
-        let td = TaskDescription::new("g", CylonOp::Groupby, 2, 300).with_key_space(20);
+        let td = TaskDescription::groupby("g", 2, 300).with_key_space(20);
         let out = run(td, 2);
         assert!(out[0].as_ref().unwrap().output_rows <= 20);
+    }
+
+    #[test]
+    fn synthetic_inputs_match_historical_pair() {
+        // The two synthetic join inputs must reproduce gen_two_tables,
+        // keeping pre-refactor workloads bit-identical.
+        let spec = GenSpec::uniform(64, 32, 0xC71);
+        let (l, r) = gen_two_tables(&spec, 1);
+        assert_eq!(synthetic_input(&spec, 1, 0), l);
+        assert_eq!(synthetic_input(&spec, 1, 1), r);
     }
 
     #[test]
@@ -174,25 +242,23 @@ mod tests {
         }
     }
 
+    fn staged_table(keys: Vec<i64>) -> Table {
+        let n = keys.len();
+        Table::new(
+            Schema::of(&[("key", DataType::Int64), ("val", DataType::Float64)]),
+            vec![Column::from_i64(keys), Column::from_f64(vec![0.0; n])],
+        )
+        .unwrap()
+    }
+
     #[test]
     fn staged_input_replaces_generation() {
         // A 6-row staged table sorted across 2 ranks: output rows must equal
         // the staged rows, not the description's synthetic 500/rank.
-        let staged = Table::new(
-            Schema::of(&[("key", DataType::Int64), ("val", DataType::Float64)]),
-            vec![
-                Column::from_i64(vec![5, 3, 9, 1, 7, 2]),
-                Column::from_f64(vec![0.0; 6]),
-            ],
-        )
-        .unwrap();
         let td = TaskDescription::sort("staged", 2, 500, DataDist::Uniform)
-            .with_input_table(staged)
+            .with_input_table(staged_table(vec![5, 3, 9, 1, 7, 2]))
             .collect_output();
-        let w = CommWorld::new(2, NetModel::disabled());
-        let out = w
-            .run(move |c| run_cylon_task_full(&c, &td, &KernelBackend::Native))
-            .unwrap();
+        let out = run_full(td, 2);
         let o0 = out[0].as_ref().unwrap();
         assert_eq!(o0.stats.output_rows, 6);
         let chunked = o0.output.as_ref().expect("rank 0 gathers the output");
@@ -208,26 +274,15 @@ mod tests {
     fn staged_chunked_input_consumed_across_ranks() {
         // A staged input arriving as multiple chunks (the gathered-output
         // shape) is windowed across ranks without loss.
-        let chunk = |keys: Vec<i64>| {
-            let n = keys.len();
-            Table::new(
-                Schema::of(&[("key", DataType::Int64), ("val", DataType::Float64)]),
-                vec![Column::from_i64(keys), Column::from_f64(vec![0.0; n])],
-            )
-            .unwrap()
-        };
         let staged = crate::df::ChunkedTable::from_tables(vec![
-            chunk(vec![6, 4]),
-            chunk(vec![2, 8, 0]),
+            staged_table(vec![6, 4]),
+            staged_table(vec![2, 8, 0]),
         ])
         .unwrap();
         let td = TaskDescription::sort("staged-chunks", 2, 500, DataDist::Uniform)
             .with_input(Arc::new(staged))
             .collect_output();
-        let w = CommWorld::new(2, NetModel::disabled());
-        let out = w
-            .run(move |c| run_cylon_task_full(&c, &td, &KernelBackend::Native))
-            .unwrap();
+        let out = run_full(td, 2);
         let o0 = out[0].as_ref().unwrap();
         assert_eq!(o0.stats.output_rows, 5);
         let table = o0.output.as_ref().unwrap().compact();
@@ -235,12 +290,73 @@ mod tests {
     }
 
     #[test]
+    fn join_with_both_sides_staged_consumes_both() {
+        // left: keys 0..4 ; right: keys 2..6 — inner join keys {2, 3}.
+        // Neither side may be regenerated from the synthetic spec.
+        let td = TaskDescription::join("j2", 2, 9999, DataDist::Uniform)
+            .with_input_table(staged_table(vec![0, 1, 2, 3]))
+            .with_input_table(staged_table(vec![2, 3, 4, 5]))
+            .collect_output();
+        let out = run_full(td, 2);
+        let o0 = out[0].as_ref().unwrap();
+        assert_eq!(o0.stats.output_rows, 2);
+        let mut keys: Vec<i64> = o0
+            .output
+            .as_ref()
+            .unwrap()
+            .compact()
+            .column(0)
+            .as_i64()
+            .unwrap()
+            .to_vec();
+        keys.sort_unstable();
+        assert_eq!(keys, vec![2, 3]);
+    }
+
+    #[test]
+    fn partially_staged_join_fails_loudly() {
+        // One staged side + no opt-in: a configuration error on every rank,
+        // never a silent right-side regeneration.
+        let td = TaskDescription::join("half", 2, 100, DataDist::Uniform)
+            .with_input_table(staged_table(vec![1, 2, 3, 4]));
+        let out = run_full(td, 2);
+        for r in &out {
+            let err = r.as_ref().unwrap_err().to_string();
+            assert!(err.contains("allow_synthetic_fill"), "{err}");
+            assert!(err.contains("only 1"), "{err}");
+        }
+    }
+
+    #[test]
+    fn partially_staged_join_with_synthetic_fill_opt_in() {
+        // The explicit opt-in: staged left, synthetic right. The right
+        // side is the same partition the fully-synthetic path would
+        // generate for input 1 (seed + 0x5eed), independent of staging.
+        let td = TaskDescription::join("half-ok", 2, 50, DataDist::Uniform)
+            .with_key_space(64)
+            .with_input_table(staged_table((0..64).collect()))
+            .allow_synthetic_fill();
+        let out = run(td, 2);
+        let r = out[0].as_ref().unwrap();
+        // Right side is synthetic over key space 64, so every right row
+        // matches exactly one staged left key.
+        assert_eq!(r.output_rows, 2 * 50);
+    }
+
+    #[test]
+    fn overstaged_task_rejected() {
+        let td = TaskDescription::sort("over", 1, 10, DataDist::Uniform)
+            .with_input_table(staged_table(vec![1]))
+            .with_input_table(staged_table(vec![2]));
+        let out = run_full(td, 1);
+        let err = out[0].as_ref().unwrap_err().to_string();
+        assert!(err.contains("consumes 1 input(s) but 2 were staged"), "{err}");
+    }
+
+    #[test]
     fn output_not_collected_by_default() {
         let td = TaskDescription::sort("plain", 2, 40, DataDist::Uniform);
-        let w = CommWorld::new(2, NetModel::disabled());
-        let out = w
-            .run(move |c| run_cylon_task_full(&c, &td, &KernelBackend::Native))
-            .unwrap();
+        let out = run_full(td, 2);
         assert!(out.iter().all(|o| o.as_ref().unwrap().output.is_none()));
     }
 }

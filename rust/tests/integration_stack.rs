@@ -5,7 +5,6 @@
 use radical_cylon::exec::{
     BareMetalEngine, BatchEngine, Engine, HeterogeneousEngine,
 };
-use radical_cylon::pilot::CylonOp;
 use radical_cylon::pipeline::Pipeline;
 use radical_cylon::prelude::*;
 use radical_cylon::raptor::SchedPolicy;
@@ -14,7 +13,7 @@ fn workload(ranks: usize) -> Vec<TaskDescription> {
     vec![
         TaskDescription::join("join", ranks, 400, DataDist::Uniform).with_seed(1),
         TaskDescription::sort("sort", ranks, 400, DataDist::Uniform).with_seed(2),
-        TaskDescription::new("groupby", CylonOp::Groupby, ranks, 400).with_seed(3),
+        TaskDescription::groupby("groupby", ranks, 400).with_seed(3),
     ]
 }
 
@@ -134,7 +133,7 @@ fn dag_pipeline_end_to_end() {
         &[a, b],
     );
     let _g = dag.add(
-        TaskDescription::new("stage-agg", CylonOp::Groupby, 3, 150),
+        TaskDescription::groupby("stage-agg", 3, 150),
         &[j],
     );
     let results = dag.execute(&tm).unwrap();

@@ -19,6 +19,9 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 if [[ "${1:-}" != "--quick" ]]; then
   echo "==> cargo test -q"
   cargo test -q
+
+  echo "==> examples/plan_etl.rs (smoke)"
+  cargo run --quiet --example plan_etl
 fi
 
 echo "check.sh: all green"
