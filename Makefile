@@ -2,7 +2,7 @@
 # build`); `artifacts` needs a JAX-capable python for the optional PJRT
 # data plane.
 
-.PHONY: artifacts build test check clean
+.PHONY: artifacts build test check bench-kernels clean
 
 artifacts:
 	cd python && python -m compile.aot --out ../artifacts
@@ -15,6 +15,12 @@ test:
 
 check:
 	scripts/check.sh
+
+# Flat-kernel perf trajectory: run the old-vs-new hot-path bench and gate
+# the result against the committed BENCH_kernels.json snapshot.
+bench-kernels:
+	cd rust && RC_BENCH_JSON=kernel_hotpaths.json cargo bench --bench kernel_hotpaths
+	scripts/bench_check.sh rust/kernel_hotpaths.json
 
 clean:
 	cd rust && cargo clean

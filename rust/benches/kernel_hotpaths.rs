@@ -1,0 +1,240 @@
+//! Flat data-plane kernels vs their legacy baselines, at ≥ 1M rows — the
+//! perf-trajectory bench behind `BENCH_kernels.json` (EXPERIMENTS.md
+//! §Perf).
+//!
+//! Six old-vs-new pairs (sort is gated per direction), each reporting
+//! wall time *and* the `metrics::mem` bytes-materialized/viewed deltas
+//! per iteration:
+//!
+//! * **join** — CSR build/probe (`hash_join`) vs the `HashMap<i64,
+//!   Vec<u32>>` build (`hash_join_hashmap`).
+//! * **sort-asc / sort-desc** — LSD radix fast path (`sort_table`) vs the
+//!   index-comparator path (`sort_table_comparator`).
+//! * **shuffle-plan** — `counting_scatter` flat row-id routing vs
+//!   push-grown `destination_lists`.
+//! * **groupby** — CSR bucket aggregation (`groupby_agg`) vs the
+//!   `HashMap<i64, Acc>` build (`groupby_agg_hashmap`).
+//! * **merge** — run-advancing k-way merge (`merge_sorted`) vs the
+//!   one-heap-op-per-row baseline (`merge_sorted_per_row`), on run-heavy
+//!   input.
+//!
+//! Acceptance (asserted below): every new kernel's output is
+//! **bit-identical** to its legacy oracle, and every new kernel's mean
+//! wall time is **strictly below** the legacy implementation's.
+//!
+//! Run with `cargo bench --bench kernel_hotpaths` (RC_BENCH_ITERS to raise
+//! samples, RC_BENCH_JSON=<path> to archive; `scripts/bench_check.sh`
+//! gates the archived JSON against the committed `BENCH_kernels.json`).
+
+use radical_cylon::df::{gen_table, GenSpec, Table};
+use radical_cylon::ops::dist::{counting_scatter, destination_lists};
+use radical_cylon::ops::local::{
+    groupby_agg, groupby_agg_hashmap, hash_join, hash_join_hashmap,
+    merge_sorted, merge_sorted_per_row, sort_table, sort_table_comparator,
+    AggFn, JoinType, SortKey,
+};
+use radical_cylon::util::bench_harness::{bench_iters, BenchSet};
+use radical_cylon::util::hash::partition_ids;
+
+const JOIN_ROWS: usize = 1_000_000;
+const SORT_ROWS: usize = 1 << 20; // 1,048,576
+const SHUFFLE_ROWS: usize = 2_000_000;
+const SHUFFLE_PARTS: usize = 64;
+const GROUPBY_ROWS: usize = 1 << 20;
+const GROUPBY_KEYS: i64 = 1 << 16;
+const MERGE_PARTS: usize = 8;
+const MERGE_ROWS_PER_PART: usize = 1 << 18; // 2M rows total
+const MERGE_KEYS: i64 = 2_000; // ~130-row duplicate runs per part
+
+/// The old-vs-new label pairs the acceptance gate walks. Each new row's
+/// JSON carries its partner as a `baseline` extra, and
+/// `scripts/bench_check.sh` derives its gated pairs from that — adding a
+/// pair here is enough to get it gated; the script never needs editing.
+const PAIRS: &[(&str, &str)] = &[
+    ("join/csr", "join/legacy-hashmap"),
+    ("sort-asc/radix", "sort-asc/comparator"),
+    ("sort-desc/radix", "sort-desc/comparator"),
+    ("shuffle-plan/counting-scatter", "shuffle-plan/legacy-nested"),
+    ("groupby/csr", "groupby/legacy-hashmap"),
+    ("merge/run-advance", "merge/per-row"),
+];
+
+fn main() {
+    let iters = bench_iters(3);
+    let mut set =
+        BenchSet::new("flat kernel hot paths vs legacy baselines (1M+ rows)");
+
+    // ---- join: CSR build/probe vs HashMap build/probe -------------------
+    let l = gen_table(&GenSpec::uniform(JOIN_ROWS, JOIN_ROWS as i64, 0xA11CE), 0);
+    let r = gen_table(&GenSpec::uniform(JOIN_ROWS, JOIN_ROWS as i64, 0xB0B), 1);
+    {
+        let new = hash_join(&l, &r, 0, 0, JoinType::Inner).unwrap();
+        let old = hash_join_hashmap(&l, &r, 0, 0, JoinType::Inner).unwrap();
+        assert_eq!(
+            new.multiset_fingerprint(),
+            old.multiset_fingerprint(),
+            "CSR join fingerprint must equal the legacy oracle's"
+        );
+        assert_eq!(new, old, "CSR join must be bit-identical to legacy");
+    }
+    set.bench_mem("join/csr", 1, iters, || {
+        let j = hash_join(&l, &r, 0, 0, JoinType::Inner).unwrap();
+        assert!(j.num_rows() > 0);
+        None
+    });
+    set.bench_mem("join/legacy-hashmap", 1, iters, || {
+        let j = hash_join_hashmap(&l, &r, 0, 0, JoinType::Inner).unwrap();
+        assert!(j.num_rows() > 0);
+        None
+    });
+
+    // ---- sort: LSD radix fast path vs comparator, both directions -------
+    let t = gen_table(&GenSpec::uniform(SORT_ROWS, i64::MAX, 0x50FA), 0);
+    for (new_label, old_label, key) in [
+        ("sort-asc/radix", "sort-asc/comparator", SortKey::asc(0)),
+        ("sort-desc/radix", "sort-desc/comparator", SortKey::desc(0)),
+    ] {
+        let new = sort_table(&t, key).unwrap();
+        let old = sort_table_comparator(&t, &[key]).unwrap();
+        assert_eq!(
+            new.multiset_fingerprint(),
+            old.multiset_fingerprint(),
+            "radix fingerprint must equal the comparator oracle's"
+        );
+        assert_eq!(new, old, "radix sort must be bit-identical to comparator");
+        drop((new, old));
+        set.bench_mem(new_label, 1, iters, || {
+            let s = sort_table(&t, key).unwrap();
+            assert_eq!(s.num_rows(), SORT_ROWS);
+            None
+        });
+        set.bench_mem(old_label, 1, iters, || {
+            let s = sort_table_comparator(&t, &[key]).unwrap();
+            assert_eq!(s.num_rows(), SORT_ROWS);
+            None
+        });
+    }
+
+    // ---- shuffle plan: counting-scatter vs push-grown lists -------------
+    let st = gen_table(&GenSpec::uniform(SHUFFLE_ROWS, 1_000_000, 0x5AFE), 0);
+    let ids = partition_ids(st.column(0).as_i64().unwrap(), SHUFFLE_PARTS as u32);
+    {
+        let (rows, offsets) = counting_scatter(&ids, SHUFFLE_PARTS);
+        let legacy = destination_lists(&ids, SHUFFLE_PARTS);
+        for d in 0..SHUFFLE_PARTS {
+            let flat: Vec<usize> = rows[offsets[d]..offsets[d + 1]]
+                .iter()
+                .map(|&r| r as usize)
+                .collect();
+            assert_eq!(flat, legacy[d], "destination {d} row list");
+        }
+    }
+    set.bench_mem("shuffle-plan/counting-scatter", 1, iters, || {
+        let (rows, offsets) = counting_scatter(&ids, SHUFFLE_PARTS);
+        assert_eq!(rows.len(), SHUFFLE_ROWS);
+        assert_eq!(offsets[SHUFFLE_PARTS], SHUFFLE_ROWS);
+        None
+    });
+    set.bench_mem("shuffle-plan/legacy-nested", 1, iters, || {
+        let dest = destination_lists(&ids, SHUFFLE_PARTS);
+        assert_eq!(dest.iter().map(Vec::len).sum::<usize>(), SHUFFLE_ROWS);
+        None
+    });
+
+    // ---- groupby: CSR bucket aggregation vs HashMap ---------------------
+    let gt = gen_table(&GenSpec::uniform(GROUPBY_ROWS, GROUPBY_KEYS, 0x96B), 0);
+    {
+        let new = groupby_agg(&gt, 0, 1, AggFn::Sum).unwrap();
+        let old = groupby_agg_hashmap(&gt, 0, 1, AggFn::Sum).unwrap();
+        assert_eq!(
+            new.multiset_fingerprint(),
+            old.multiset_fingerprint(),
+            "CSR groupby fingerprint must equal the legacy oracle's"
+        );
+        assert_eq!(new, old, "CSR groupby must be bit-identical to legacy");
+    }
+    set.bench_mem("groupby/csr", 1, iters, || {
+        let g = groupby_agg(&gt, 0, 1, AggFn::Sum).unwrap();
+        assert!(g.num_rows() > 0);
+        None
+    });
+    set.bench_mem("groupby/legacy-hashmap", 1, iters, || {
+        let g = groupby_agg_hashmap(&gt, 0, 1, AggFn::Sum).unwrap();
+        assert!(g.num_rows() > 0);
+        None
+    });
+
+    // ---- merge: run-advancing heap vs one heap op per row ---------------
+    let parts: Vec<Table> = (0..MERGE_PARTS)
+        .map(|p| {
+            let t = gen_table(
+                &GenSpec::uniform(MERGE_ROWS_PER_PART, MERGE_KEYS, 0xE87),
+                p,
+            );
+            sort_table(&t, SortKey::asc(0)).unwrap()
+        })
+        .collect();
+    {
+        let new = merge_sorted(&parts, 0).unwrap();
+        let old = merge_sorted_per_row(&parts, 0).unwrap();
+        assert_eq!(
+            new.multiset_fingerprint(),
+            old.multiset_fingerprint(),
+            "run merge fingerprint must equal the per-row oracle's"
+        );
+        assert_eq!(new, old, "run merge must be bit-identical to per-row");
+    }
+    set.bench_mem("merge/run-advance", 1, iters, || {
+        let m = merge_sorted(&parts, 0).unwrap();
+        assert_eq!(m.num_rows(), MERGE_PARTS * MERGE_ROWS_PER_PART);
+        None
+    });
+    set.bench_mem("merge/per-row", 1, iters, || {
+        let m = merge_sorted_per_row(&parts, 0).unwrap();
+        assert_eq!(m.num_rows(), MERGE_PARTS * MERGE_ROWS_PER_PART);
+        None
+    });
+
+    // ---- speedup columns + acceptance assertions ------------------------
+    let wall_of = |set: &BenchSet, label: &str| -> f64 {
+        set.rows
+            .iter()
+            .find(|r| r.label == label)
+            .unwrap_or_else(|| panic!("missing bench row {label}"))
+            .wall
+            .mean
+    };
+    for (new_label, old_label) in PAIRS {
+        let (new_wall, old_wall) =
+            (wall_of(&set, new_label), wall_of(&set, old_label));
+        let row = set
+            .rows
+            .iter_mut()
+            .find(|r| r.label == *new_label)
+            .expect("row exists");
+        row.extra
+            .push(("speedup".into(), format!("{:.2}x", old_wall / new_wall)));
+        // The pairing travels in the JSON so bench_check.sh can derive
+        // its gate list instead of duplicating PAIRS.
+        row.extra.push(("baseline".into(), old_label.to_string()));
+    }
+    set.report();
+    set.maybe_write_json();
+
+    for (new_label, old_label) in PAIRS {
+        let (new_wall, old_wall) =
+            (wall_of(&set, new_label), wall_of(&set, old_label));
+        println!(
+            "{new_label}: {:.1} ms vs {old_label}: {:.1} ms ({:.2}x)",
+            new_wall * 1e3,
+            old_wall * 1e3,
+            old_wall / new_wall
+        );
+        assert!(
+            new_wall < old_wall,
+            "{new_label} ({new_wall:.4}s) must be strictly faster than \
+             {old_label} ({old_wall:.4}s)"
+        );
+    }
+    println!("\nkernel_hotpaths OK");
+}

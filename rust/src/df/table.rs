@@ -95,6 +95,16 @@ impl Table {
         }
     }
 
+    /// [`Table::take`] over `u32` row ids — the index width the flat
+    /// join/sort/shuffle kernels produce (see EXPERIMENTS.md §Perf).
+    pub fn take_u32(&self, idx: &[u32]) -> Table {
+        Table {
+            schema: self.schema.clone(),
+            columns: self.columns.iter().map(|c| c.take_u32(idx)).collect(),
+            nrows: idx.len(),
+        }
+    }
+
     /// Contiguous row window — O(columns), zero rows copied. The result
     /// shares every backing buffer with `self`.
     pub fn slice(&self, start: usize, len: usize) -> Table {

@@ -95,10 +95,67 @@ fn local_sort(t: &Table, col: usize, backend: &KernelBackend) -> Result<Table> {
     }
 }
 
+/// Count → exclusive-prefix-sum → scatter over destination ids: one flat
+/// `u32` row-id array grouped by destination, plus the per-destination
+/// offsets (`nparts + 1` entries). Destination `d` owns
+/// `rows[offsets[d]..offsets[d + 1]]` in **ascending row order** (the
+/// scatter is stable), so per-destination gathers slice the flat array
+/// without reallocation and see the rows in the same order the legacy
+/// push-grown lists produced. Two allocations regardless of `nparts`
+/// (counting-scatter perf pass, EXPERIMENTS.md §Perf).
+///
+/// `ids[row]` must lie in `[0, nparts)` and `ids.len()` must fit a `u32`.
+///
+/// NOTE: [`crate::util::hash::CsrIndex::build`] implements the same count
+/// → prefix-sum → scatter → offsets-shift scheme over hashed keys (with
+/// `u32` offsets); a fix to the cursor-undo shift in either must be
+/// mirrored in the other.
+pub fn counting_scatter(ids: &[i32], nparts: usize) -> (Vec<u32>, Vec<usize>) {
+    assert!(
+        ids.len() < u32::MAX as usize,
+        "counting_scatter row ids are u32 ({} rows given)",
+        ids.len()
+    );
+    let mut offsets = vec![0usize; nparts + 1];
+    for &d in ids {
+        offsets[d as usize + 1] += 1;
+    }
+    for d in 0..nparts {
+        offsets[d + 1] += offsets[d];
+    }
+    // Scatter forward using offsets[d] itself as destination d's write
+    // cursor, then undo the advance by shifting one slot right — no third
+    // (cursor) allocation.
+    let mut rows = vec![0u32; ids.len()];
+    for (row, &d) in ids.iter().enumerate() {
+        let d = d as usize;
+        rows[offsets[d]] = row as u32;
+        offsets[d] += 1;
+    }
+    for d in (1..=nparts).rev() {
+        offsets[d] = offsets[d - 1];
+    }
+    offsets[0] = 0;
+    (rows, offsets)
+}
+
+/// Pre-scatter destination routing: one push-grown `Vec<usize>` per
+/// destination. Kept as the `kernel_hotpaths` bench baseline and oracle
+/// for [`counting_scatter`] (identical per-destination row lists).
+pub fn destination_lists(ids: &[i32], nparts: usize) -> Vec<Vec<usize>> {
+    let mut dest: Vec<Vec<usize>> = vec![Vec::new(); nparts];
+    for (row, &d) in ids.iter().enumerate() {
+        dest[d as usize].push(row);
+    }
+    dest
+}
+
 /// Hash-shuffle `t` by its int64 `key` column, returning the received
 /// partitions as a zero-copy [`ChunkedTable`] (one chunk per sender; the
 /// concat is deferred until a consumer compacts). Every row travels to rank
 /// `splitmix64(key) % p`, so all rows sharing a key land on one rank.
+/// Row routing is a flat [`counting_scatter`] plan; each destination's
+/// gather slices it without reallocation.
 /// Collective — every rank of `comm` must call with its own partition.
 pub fn shuffle_by_key_chunked(
     comm: &Communicator,
@@ -113,13 +170,18 @@ pub fn shuffle_by_key_chunked(
     }
     let keys = t.column(key).as_i64()?;
     let ids = partition_plan(keys, p as u32, backend)?;
-    let mut dest: Vec<Vec<usize>> = vec![Vec::new(); p];
-    for (row, &d) in ids.iter().enumerate() {
-        dest[d as usize].push(row);
-    }
     // The gather per destination is the one unavoidable materialization of
     // a hash shuffle (arbitrary row routing); everything after is views.
-    let sends: Vec<Table> = dest.iter().map(|idx| t.take(idx)).collect();
+    let sends: Vec<Table> = if ids.len() < u32::MAX as usize {
+        let (rows, offsets) = counting_scatter(&ids, p);
+        (0..p)
+            .map(|d| t.take_u32(&rows[offsets[d]..offsets[d + 1]]))
+            .collect()
+    } else {
+        // Row ids no longer fit the flat u32 plan; degrade to the legacy
+        // lists like sort/groupby fall back on oversized inputs.
+        destination_lists(&ids, p).iter().map(|idx| t.take(idx)).collect()
+    };
     let parts = comm.alltoall(sends);
     ChunkedTable::from_tables(parts)
 }
@@ -380,6 +442,30 @@ mod tests {
             })
             .unwrap();
         assert_eq!(out.iter().sum::<usize>(), 600 * p);
+    }
+
+    #[test]
+    fn counting_scatter_matches_destination_lists() {
+        let keys: Vec<i64> = (0..500).map(|i| i * 17 % 97).collect();
+        for nparts in [1usize, 2, 7, 16] {
+            let ids = crate::util::hash::partition_ids(&keys, nparts as u32);
+            let (rows, offsets) = counting_scatter(&ids, nparts);
+            let legacy = destination_lists(&ids, nparts);
+            assert_eq!(offsets.len(), nparts + 1);
+            assert_eq!(offsets[0], 0);
+            assert_eq!(offsets[nparts], keys.len());
+            for d in 0..nparts {
+                let flat: Vec<usize> = rows[offsets[d]..offsets[d + 1]]
+                    .iter()
+                    .map(|&r| r as usize)
+                    .collect();
+                assert_eq!(flat, legacy[d], "destination {d}");
+            }
+        }
+        // Degenerate: no rows.
+        let (rows, offsets) = counting_scatter(&[], 4);
+        assert!(rows.is_empty());
+        assert_eq!(offsets, vec![0; 5]);
     }
 
     #[test]

@@ -1,9 +1,16 @@
 //! Group-by aggregation on an int64 key column.
+//!
+//! The aggregation runs over a flat [`CsrIndex`] — rows are counted,
+//! prefix-summed, and scattered into hash buckets, then each bucket is
+//! aggregated in one sweep — instead of a `HashMap<i64, Acc>` (CSR perf
+//! pass, EXPERIMENTS.md §Perf). The map-based build survives as
+//! [`groupby_agg_hashmap`], the bench baseline and bit-identical oracle.
 
 use std::collections::HashMap;
 
 use crate::df::{Column, DataType, Schema, Table};
 use crate::error::{Error, Result};
+use crate::util::hash::CsrIndex;
 
 /// Aggregations over a float64 value column.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -28,61 +35,63 @@ impl AggFn {
     }
 }
 
-/// `SELECT key, agg(val) GROUP BY key` — output sorted by key for
-/// determinism.
-pub fn groupby_agg(
-    t: &Table,
+/// Running accumulator for one group. Updates happen in ascending row
+/// order on both the CSR and map paths, so float sums agree bit-for-bit.
+#[derive(Clone, Copy)]
+struct Acc {
+    sum: f64,
+    count: u64,
+    min: f64,
+    max: f64,
+}
+
+impl Acc {
+    fn new() -> Acc {
+        Acc { sum: 0.0, count: 0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    #[inline]
+    fn update(&mut self, v: f64) {
+        self.sum += v;
+        self.count += 1;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    fn finish(&self, agg: AggFn) -> f64 {
+        match agg {
+            AggFn::Sum => self.sum,
+            AggFn::Count => self.count as f64,
+            AggFn::Min => self.min,
+            AggFn::Max => self.max,
+            AggFn::Mean => self.sum / self.count as f64,
+        }
+    }
+}
+
+fn agg_input<'a>(
+    t: &'a Table,
     key_col: usize,
     val_col: usize,
-    agg: AggFn,
-) -> Result<Table> {
+) -> Result<(&'a [i64], &'a [f64])> {
     let keys = t.column(key_col).as_i64()?;
     let vals = t.column(val_col).as_f64()?;
     if keys.len() != vals.len() {
         return Err(Error::DataFrame("ragged groupby input".into()));
     }
+    Ok((keys, vals))
+}
 
-    #[derive(Default, Clone, Copy)]
-    struct Acc {
-        sum: f64,
-        count: u64,
-        min: f64,
-        max: f64,
-    }
-    let mut groups: HashMap<i64, Acc, crate::util::hash::SplitMixBuild> =
-        HashMap::with_capacity_and_hasher(
-            keys.len().min(1 << 16),
-            crate::util::hash::SplitMixBuild,
-        );
-    for (&k, &v) in keys.iter().zip(vals) {
-        let acc = groups.entry(k).or_insert(Acc {
-            sum: 0.0,
-            count: 0,
-            min: f64::INFINITY,
-            max: f64::NEG_INFINITY,
-        });
-        acc.sum += v;
-        acc.count += 1;
-        acc.min = acc.min.min(v);
-        acc.max = acc.max.max(v);
-    }
-
-    let mut out_keys: Vec<i64> = groups.keys().copied().collect();
-    out_keys.sort_unstable();
-    let out_vals: Vec<f64> = out_keys
-        .iter()
-        .map(|k| {
-            let a = groups[k];
-            match agg {
-                AggFn::Sum => a.sum,
-                AggFn::Count => a.count as f64,
-                AggFn::Min => a.min,
-                AggFn::Max => a.max,
-                AggFn::Mean => a.sum / a.count as f64,
-            }
-        })
-        .collect();
-
+/// Build the `(key, {val}_{agg})` output table from per-group results,
+/// sorted by key for determinism.
+fn agg_output(
+    t: &Table,
+    key_col: usize,
+    val_col: usize,
+    agg: AggFn,
+    out_keys: Vec<i64>,
+    out_vals: Vec<f64>,
+) -> Result<Table> {
     let key_name = &t.schema().field(key_col).name;
     let val_name = &t.schema().field(val_col).name;
     Table::new(
@@ -92,6 +101,85 @@ pub fn groupby_agg(
         ]),
         vec![Column::from_i64(out_keys), Column::from_f64(out_vals)],
     )
+}
+
+/// `SELECT key, agg(val) GROUP BY key` — output sorted by key for
+/// determinism.
+///
+/// Flat CSR aggregation: rows are scattered into hash buckets by a
+/// [`CsrIndex`] (two allocations), then each bucket is swept once,
+/// accumulating into dense group vectors. With load factor <= 1 the
+/// expected distinct-key scan per bucket is ~1 entry, so the whole
+/// aggregation is dense array traffic with no per-key heap allocations.
+pub fn groupby_agg(
+    t: &Table,
+    key_col: usize,
+    val_col: usize,
+    agg: AggFn,
+) -> Result<Table> {
+    let (keys, vals) = agg_input(t, key_col, val_col)?;
+    if keys.len() >= u32::MAX as usize {
+        // Row ids no longer fit the CSR index; the map path has no such
+        // limit.
+        return groupby_agg_hashmap(t, key_col, val_col, agg);
+    }
+
+    let index = CsrIndex::build(keys);
+    let mut gkeys: Vec<i64> = Vec::new();
+    let mut accs: Vec<Acc> = Vec::new();
+    for b in 0..index.num_buckets() {
+        // Groups emitted for this bucket start here; distinct keys that
+        // share the bucket are found by scanning only this tail.
+        let bucket_groups = gkeys.len();
+        for &row in index.bucket_rows(b) {
+            let (k, v) = (keys[row as usize], vals[row as usize]);
+            match gkeys[bucket_groups..].iter().position(|&g| g == k) {
+                Some(g) => accs[bucket_groups + g].update(v),
+                None => {
+                    let mut acc = Acc::new();
+                    acc.update(v);
+                    gkeys.push(k);
+                    accs.push(acc);
+                }
+            }
+        }
+    }
+
+    // Deterministic output order: permute groups by key.
+    let mut perm: Vec<u32> = (0..gkeys.len() as u32).collect();
+    perm.sort_unstable_by_key(|&g| gkeys[g as usize]);
+    let out_keys: Vec<i64> = perm.iter().map(|&g| gkeys[g as usize]).collect();
+    let out_vals: Vec<f64> =
+        perm.iter().map(|&g| accs[g as usize].finish(agg)).collect();
+    agg_output(t, key_col, val_col, agg, out_keys, out_vals)
+}
+
+/// Pre-CSR groupby: `HashMap<i64, Acc>` accumulation. Kept as the
+/// `kernel_hotpaths` bench baseline and bit-identical oracle for
+/// [`groupby_agg`] (both accumulate each group in ascending row order, so
+/// even float sums match exactly).
+pub fn groupby_agg_hashmap(
+    t: &Table,
+    key_col: usize,
+    val_col: usize,
+    agg: AggFn,
+) -> Result<Table> {
+    let (keys, vals) = agg_input(t, key_col, val_col)?;
+
+    let mut groups: HashMap<i64, Acc, crate::util::hash::SplitMixBuild> =
+        HashMap::with_capacity_and_hasher(
+            keys.len().min(1 << 16),
+            crate::util::hash::SplitMixBuild,
+        );
+    for (&k, &v) in keys.iter().zip(vals) {
+        groups.entry(k).or_insert_with(Acc::new).update(v);
+    }
+
+    let mut out_keys: Vec<i64> = groups.keys().copied().collect();
+    out_keys.sort_unstable();
+    let out_vals: Vec<f64> =
+        out_keys.iter().map(|k| groups[k].finish(agg)).collect();
+    agg_output(t, key_col, val_col, agg, out_keys, out_vals)
 }
 
 #[cfg(test)]
@@ -135,6 +223,27 @@ mod tests {
         let tbl = t(vec![], vec![]);
         let g = groupby_agg(&tbl, 0, 1, AggFn::Sum).unwrap();
         assert_eq!(g.num_rows(), 0);
+        let g = groupby_agg_hashmap(&tbl, 0, 1, AggFn::Sum).unwrap();
+        assert_eq!(g.num_rows(), 0);
+    }
+
+    #[test]
+    fn prop_csr_groupby_is_bit_identical_to_hashmap() {
+        // Same groups, same order, bit-identical float aggregates (both
+        // paths accumulate each group in ascending row order).
+        testkit::check("csr groupby == hashmap groupby", 24, |rng| {
+            let n = rng.gen_range(150) as usize;
+            let keys: Vec<i64> = (0..n).map(|_| rng.gen_i64(-8, 8)).collect();
+            let vals: Vec<f64> = (0..n).map(|_| rng.gen_f64()).collect();
+            let tbl = t(keys, vals);
+            for agg in
+                [AggFn::Sum, AggFn::Count, AggFn::Min, AggFn::Max, AggFn::Mean]
+            {
+                let csr = groupby_agg(&tbl, 0, 1, agg).unwrap();
+                let legacy = groupby_agg_hashmap(&tbl, 0, 1, agg).unwrap();
+                assert_eq!(csr, legacy, "{agg:?}");
+            }
+        });
     }
 
     #[test]

@@ -1,13 +1,26 @@
-//! Local joins on int64 keys: hash join (build/probe), sort-merge join, and
-//! a nested-loop oracle for tests.
+//! Local joins on int64 keys: hash join (CSR build/probe), sort-merge
+//! join, and a nested-loop oracle for tests.
+//!
+//! The hash join's build side is a flat [`CsrIndex`] (count →
+//! prefix-sum → scatter; two allocations total) and its probe output is a
+//! pair of `u32` index vectors with a `u32::MAX` miss sentinel for
+//! unmatched outer rows — no per-key `Vec` buckets, no `Option<usize>`
+//! slots, half the index memory. The pre-CSR map-based build survives as
+//! [`hash_join_hashmap`], the bench baseline and bit-identical oracle
+//! (EXPERIMENTS.md §Perf).
 
 use std::collections::HashMap;
 
 use crate::df::{Column, Table, Utf8Builder};
 use crate::error::{Error, Result};
-use crate::util::hash::SplitMixBuild;
+use crate::util::hash::{CsrIndex, SplitMixBuild};
 
 use super::sort::{sort_table, SortKey};
+
+/// Miss sentinel in right-side probe index vectors: the row had no match
+/// and takes the [`FillPolicy`] values. Real row ids are `< MISS`, which
+/// [`hash_join_filled`] enforces on its inputs.
+const MISS: u32 = u32::MAX;
 
 /// Join variants supported by the local operators.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -80,14 +93,14 @@ fn assemble(
     left: &Table,
     right: &Table,
     right_key: usize,
-    pairs_l: Vec<usize>,
-    pairs_r: Vec<Option<usize>>,
+    pairs_l: Vec<u32>,
+    pairs_r: Vec<u32>,
     fill: &FillPolicy,
 ) -> Result<Table> {
     let schema = left.schema().join(drop_field(right, right_key).0.schema());
     let mut cols: Vec<Column> = Vec::with_capacity(schema.len());
     for c in left.columns() {
-        cols.push(c.take(&pairs_l));
+        cols.push(c.take_u32(&pairs_l));
     }
     let (rt, _) = drop_field(right, right_key);
     for c in rt_columns(&rt) {
@@ -114,35 +127,58 @@ fn rt_columns(t: &Table) -> &[Column] {
     t.columns()
 }
 
-/// Gather with optional indices: `None` slots take the fill value.
-fn take_optional(c: &Column, idx: &[Option<usize>], fill: &FillPolicy) -> Column {
+/// Gather with sentinel indices: [`MISS`] slots take the fill value.
+fn take_optional(c: &Column, idx: &[u32], fill: &FillPolicy) -> Column {
     match c {
         Column::Int64(v) => Column::from_i64(
-            idx.iter().map(|i| i.map(|i| v[i]).unwrap_or(fill.int64)).collect(),
+            idx.iter()
+                .map(|&i| if i == MISS { fill.int64 } else { v[i as usize] })
+                .collect(),
         ),
         Column::Float64(v) => Column::from_f64(
             idx.iter()
-                .map(|i| i.map(|i| v[i]).unwrap_or(fill.float64))
+                .map(|&i| if i == MISS { fill.float64 } else { v[i as usize] })
                 .collect(),
         ),
         Column::Utf8(v) => {
             let bytes: usize = idx
                 .iter()
-                .map(|i| i.map_or(fill.utf8.len(), |i| v.get(i).len()))
+                .map(|&i| {
+                    if i == MISS {
+                        fill.utf8.len()
+                    } else {
+                        v.get(i as usize).len()
+                    }
+                })
                 .sum();
             let mut b = Utf8Builder::with_capacity(idx.len(), bytes);
-            for i in idx {
-                match i {
-                    Some(i) => b.push(v.get(*i)),
-                    None => b.push(&fill.utf8),
+            for &i in idx {
+                if i == MISS {
+                    b.push(&fill.utf8);
+                } else {
+                    b.push(v.get(i as usize));
                 }
             }
             Column::Utf8(b.finish())
         }
         Column::Bool(v) => Column::from_bool(
-            idx.iter().map(|i| i.map(|i| v[i]).unwrap_or(fill.bool_)).collect(),
+            idx.iter()
+                .map(|&i| if i == MISS { fill.bool_ } else { v[i as usize] })
+                .collect(),
         ),
     }
+}
+
+/// Both sides' row ids (and the [`MISS`] sentinel) must fit `u32`.
+fn check_u32_rows(left: &Table, right: &Table) -> Result<()> {
+    if left.num_rows() >= MISS as usize || right.num_rows() >= MISS as usize {
+        return Err(Error::DataFrame(format!(
+            "join sides exceed the u32 row-id range ({} x {} rows)",
+            left.num_rows(),
+            right.num_rows()
+        )));
+    }
+    Ok(())
 }
 
 /// Hash join with the default [`FillPolicy::zeros`] fill for outer rows.
@@ -159,6 +195,14 @@ pub fn hash_join(
 /// Hash join: build on the right table, probe with the left. Unmatched
 /// left rows (outer joins only) take `fill`'s per-dtype values on the
 /// right side.
+///
+/// The build side is a flat [`CsrIndex`] — count occurrences per hash
+/// bucket, exclusive prefix-sum into one offsets array, scatter row ids
+/// into one flat `u32` array — so the build performs two allocations
+/// total instead of one `Vec` per distinct key, and the probe emits `u32`
+/// index vectors (`u32::MAX`-sentinel misses) instead of
+/// `Vec<Option<usize>>` (CSR perf pass, EXPERIMENTS.md §Perf; the
+/// map-based baseline survives as [`hash_join_hashmap`]).
 pub fn hash_join_filled(
     left: &Table,
     right: &Table,
@@ -167,36 +211,73 @@ pub fn hash_join_filled(
     how: JoinType,
     fill: &FillPolicy,
 ) -> Result<Table> {
+    check_u32_rows(left, right)?;
     let lk = key_col(left, left_key)?;
     let rk = key_col(right, right_key)?;
 
-    // SplitMix-hashed build side (perf pass, EXPERIMENTS.md §Perf);
-    // u32 row ids halve the bucket payload.
+    let index = CsrIndex::build(rk);
+    let mut pairs_l: Vec<u32> = Vec::new();
+    let mut pairs_r: Vec<u32> = Vec::new();
+    for (i, &k) in lk.iter().enumerate() {
+        let mut matched = false;
+        // Candidates share the hash bucket; re-check the key. Ascending
+        // candidate order keeps the output bit-identical to the legacy
+        // map-based probe.
+        for &j in index.candidates(k) {
+            if rk[j as usize] == k {
+                pairs_l.push(i as u32);
+                pairs_r.push(j);
+                matched = true;
+            }
+        }
+        if !matched && how == JoinType::Left {
+            pairs_l.push(i as u32);
+            pairs_r.push(MISS);
+        }
+    }
+    assemble(left, right, right_key, pairs_l, pairs_r, fill)
+}
+
+/// Pre-CSR hash join: `HashMap<i64, Vec<u32>>` build side (one heap
+/// allocation per distinct key). Kept as the `kernel_hotpaths` bench
+/// baseline and as a bit-identical oracle for [`hash_join`] — same output
+/// rows in the same order. Inner/left with the zeros fill.
+pub fn hash_join_hashmap(
+    left: &Table,
+    right: &Table,
+    left_key: usize,
+    right_key: usize,
+    how: JoinType,
+) -> Result<Table> {
+    check_u32_rows(left, right)?;
+    let lk = key_col(left, left_key)?;
+    let rk = key_col(right, right_key)?;
+
     let mut build: HashMap<i64, Vec<u32>, SplitMixBuild> =
         HashMap::with_capacity_and_hasher(rk.len(), SplitMixBuild);
     for (i, &k) in rk.iter().enumerate() {
         build.entry(k).or_default().push(i as u32);
     }
 
-    let mut pairs_l = Vec::new();
-    let mut pairs_r = Vec::new();
+    let mut pairs_l: Vec<u32> = Vec::new();
+    let mut pairs_r: Vec<u32> = Vec::new();
     for (i, &k) in lk.iter().enumerate() {
         match build.get(&k) {
             Some(matches) => {
                 for &j in matches {
-                    pairs_l.push(i);
-                    pairs_r.push(Some(j as usize));
+                    pairs_l.push(i as u32);
+                    pairs_r.push(j);
                 }
             }
             None => {
                 if how == JoinType::Left {
-                    pairs_l.push(i);
-                    pairs_r.push(None);
+                    pairs_l.push(i as u32);
+                    pairs_r.push(MISS);
                 }
             }
         }
     }
-    assemble(left, right, right_key, pairs_l, pairs_r, fill)
+    assemble(left, right, right_key, pairs_l, pairs_r, &FillPolicy::zeros())
 }
 
 /// Sort-merge join (inner only): sorts both sides then merges match runs.
@@ -206,13 +287,14 @@ pub fn sort_merge_join(
     left_key: usize,
     right_key: usize,
 ) -> Result<Table> {
+    check_u32_rows(left, right)?;
     let ls = sort_table(left, SortKey::asc(left_key))?;
     let rs = sort_table(right, SortKey::asc(right_key))?;
     let lk = key_col(&ls, left_key)?;
     let rk = key_col(&rs, right_key)?;
 
-    let mut pairs_l = Vec::new();
-    let mut pairs_r = Vec::new();
+    let mut pairs_l: Vec<u32> = Vec::new();
+    let mut pairs_r: Vec<u32> = Vec::new();
     let (mut i, mut j) = (0usize, 0usize);
     while i < lk.len() && j < rk.len() {
         match lk[i].cmp(&rk[j]) {
@@ -224,8 +306,8 @@ pub fn sort_merge_join(
                 let j_end = j + rk[j..].iter().take_while(|&&k| k == key).count();
                 for ii in i..i_end {
                     for jj in j..j_end {
-                        pairs_l.push(ii);
-                        pairs_r.push(Some(jj));
+                        pairs_l.push(ii as u32);
+                        pairs_r.push(jj as u32);
                     }
                 }
                 i = i_end;
@@ -243,15 +325,16 @@ pub fn nested_loop_join(
     left_key: usize,
     right_key: usize,
 ) -> Result<Table> {
+    check_u32_rows(left, right)?;
     let lk = key_col(left, left_key)?;
     let rk = key_col(right, right_key)?;
-    let mut pairs_l = Vec::new();
-    let mut pairs_r = Vec::new();
+    let mut pairs_l: Vec<u32> = Vec::new();
+    let mut pairs_r: Vec<u32> = Vec::new();
     for (i, &a) in lk.iter().enumerate() {
         for (j, &b) in rk.iter().enumerate() {
             if a == b {
-                pairs_l.push(i);
-                pairs_r.push(Some(j));
+                pairs_l.push(i as u32);
+                pairs_r.push(j as u32);
             }
         }
     }
@@ -388,6 +471,25 @@ mod tests {
             assert_eq!(smj.num_rows(), oracle.num_rows());
             assert_eq!(hj.multiset_fingerprint(), oracle.multiset_fingerprint());
             assert_eq!(smj.multiset_fingerprint(), oracle.multiset_fingerprint());
+        });
+    }
+
+    #[test]
+    fn prop_csr_join_is_bit_identical_to_hashmap_join() {
+        // The CSR build/probe must reproduce the legacy map-based join
+        // exactly — same rows in the same order, inner and left.
+        testkit::check("csr join == hashmap join", 24, |rng| {
+            let n = 1 + rng.gen_range(80) as usize;
+            let keys_l: Vec<i64> = (0..n).map(|_| rng.gen_i64(-5, 15)).collect();
+            let keys_r: Vec<i64> = (0..n).map(|_| rng.gen_i64(-5, 15)).collect();
+            let vals: Vec<i64> = (0..n as i64).collect();
+            let l = t(keys_l, vals.clone());
+            let r = t(keys_r, vals);
+            for how in [JoinType::Inner, JoinType::Left] {
+                let csr = hash_join(&l, &r, 0, 0, how).unwrap();
+                let legacy = hash_join_hashmap(&l, &r, 0, 0, how).unwrap();
+                assert_eq!(csr, legacy, "{how:?}");
+            }
         });
     }
 

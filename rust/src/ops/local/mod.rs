@@ -10,10 +10,13 @@ pub use compute::{
     binary_op, cast, compare_scalar, filter_view, scalar_op_i64, with_column,
     BinOp, CmpOp,
 };
-pub use groupby::{groupby_agg, AggFn};
+pub use groupby::{groupby_agg, groupby_agg_hashmap, AggFn};
 pub use join::{
-    hash_join, hash_join_filled, nested_loop_join, sort_merge_join, FillPolicy,
-    JoinType,
+    hash_join, hash_join_filled, hash_join_hashmap, nested_loop_join,
+    sort_merge_join, FillPolicy, JoinType,
 };
-pub use sort::{is_sorted_by_key, merge_sorted, sort_table, sort_table_multi, SortKey};
+pub use sort::{
+    is_sorted_by_key, merge_sorted, merge_sorted_per_row, sort_table,
+    sort_table_comparator, sort_table_multi, SortKey,
+};
 pub use unique::{unique_by_key, unique_rows};

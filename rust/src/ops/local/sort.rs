@@ -1,4 +1,13 @@
 //! Local sort and k-way merge.
+//!
+//! Single-key int64 sorts — the paper's headline sort workload — run on a
+//! flat LSD radix kernel ([`radix_sort_rows`]) in both directions; every
+//! other shape (multi-key, float/utf8/bool keys) takes the generic
+//! comparator path, which survives as [`sort_table_comparator`], the
+//! radix kernel's bench baseline and bit-identical oracle (EXPERIMENTS.md
+//! §Perf). The k-way merge advances whole duplicate-key runs per heap
+//! operation; its one-pop-per-row predecessor survives as
+//! [`merge_sorted_per_row`].
 
 use crate::df::{Column, Table, Utf8Builder};
 use crate::error::{Error, Result};
@@ -20,22 +29,19 @@ impl SortKey {
 }
 
 fn cmp_values(c: &Column, a: usize, b: usize) -> std::cmp::Ordering {
-    use std::cmp::Ordering;
     match c {
         Column::Int64(v) => v[a].cmp(&v[b]),
-        Column::Float64(v) => v[a].partial_cmp(&v[b]).unwrap_or(Ordering::Equal),
+        // total_cmp, not partial_cmp-or-Equal: with NaN present the latter
+        // is not a total order (NaN "equal" to everything but 1.0 < 2.0),
+        // which modern `sort_by` implementations may reject at runtime.
+        // total_cmp orders -NaN < -inf < ... < +inf < +NaN.
+        Column::Float64(v) => v[a].total_cmp(&v[b]),
         Column::Utf8(v) => v.get(a).cmp(v.get(b)),
         Column::Bool(v) => v[a].cmp(&v[b]),
     }
 }
 
-/// Stable sort by a single int64/utf8/float column.
-pub fn sort_table(t: &Table, key: SortKey) -> Result<Table> {
-    sort_table_multi(t, &[key])
-}
-
-/// Stable sort by multiple keys (lexicographic).
-pub fn sort_table_multi(t: &Table, keys: &[SortKey]) -> Result<Table> {
+fn validate_keys(t: &Table, keys: &[SortKey]) -> Result<()> {
     if keys.is_empty() {
         return Err(Error::DataFrame("sort with zero keys".into()));
     }
@@ -48,25 +54,98 @@ pub fn sort_table_multi(t: &Table, keys: &[SortKey]) -> Result<Table> {
             )));
         }
     }
-    // Fast path (perf pass, EXPERIMENTS.md §Perf): single ascending int64
-    // key — sort (key, row) pairs contiguously instead of indirecting into
-    // the column per comparison. Pairing with the row index keeps it
-    // stable under `sort_unstable` (all pairs distinct).
+    Ok(())
+}
+
+/// Row order of a single-key int64 sort — LSD radix over `(u64 key, u32
+/// row)` pairs (radix perf pass, EXPERIMENTS.md §Perf).
+///
+/// Keys are sign-flipped to `u64` (`^ i64::MIN`) so unsigned byte order
+/// equals signed order; descending inverts all bits, so one ascending
+/// kernel serves both directions without a reversal step (a plain reverse
+/// would break stability on duplicate keys). 8-bit digits; a single pass
+/// builds all eight digit histograms up front, passes whose digit is
+/// constant across the input are skipped, and the scatter ping-pongs
+/// between the pair array and one reused scratch buffer — two allocations
+/// regardless of pass count. The forward counting scatter is stable, so
+/// equal keys keep ascending row order, matching the stable comparator
+/// path bit-for-bit.
+fn radix_sort_rows(keys: &[i64], ascending: bool) -> Vec<u32> {
+    let n = keys.len();
+    let dir = if ascending { 0u64 } else { !0u64 };
+    let mut src: Vec<(u64, u32)> = keys
+        .iter()
+        .enumerate()
+        .map(|(i, &k)| (((k as u64) ^ (1u64 << 63)) ^ dir, i as u32))
+        .collect();
+    if n < 256 {
+        // Counting passes don't amortize on tiny inputs; the pair sort is
+        // stable-equivalent (rows make every pair distinct).
+        src.sort_unstable();
+        return src.into_iter().map(|(_, i)| i).collect();
+    }
+    let mut hist = [[0u32; 256]; 8];
+    for &(u, _) in &src {
+        for (d, h) in hist.iter_mut().enumerate() {
+            h[((u >> (d * 8)) & 0xFF) as usize] += 1;
+        }
+    }
+    // Scratch allocated lazily on the first executed pass: all-equal or
+    // otherwise digit-constant inputs skip every pass and never pay for
+    // it (n >= 256 here, so is_empty() means "not yet allocated").
+    let mut dst: Vec<(u64, u32)> = Vec::new();
+    for (d, h) in hist.iter().enumerate() {
+        // A constant digit permutes nothing — skip the pass (narrow key
+        // ranges sort in 2-3 passes instead of 8).
+        if h.iter().any(|&c| c as usize == n) {
+            continue;
+        }
+        if dst.is_empty() {
+            dst = vec![(0, 0); n];
+        }
+        let mut cursors = [0u32; 256];
+        let mut sum = 0u32;
+        for (c, &count) in cursors.iter_mut().zip(h.iter()) {
+            *c = sum;
+            sum += count;
+        }
+        let shift = d * 8;
+        for &(u, i) in &src {
+            let digit = ((u >> shift) & 0xFF) as usize;
+            dst[cursors[digit] as usize] = (u, i);
+            cursors[digit] += 1;
+        }
+        std::mem::swap(&mut src, &mut dst);
+    }
+    src.into_iter().map(|(_, i)| i).collect()
+}
+
+/// Stable sort by a single int64/utf8/float column.
+pub fn sort_table(t: &Table, key: SortKey) -> Result<Table> {
+    sort_table_multi(t, &[key])
+}
+
+/// Stable sort by multiple keys (lexicographic). Single-key int64 sorts of
+/// **either direction** dispatch to the LSD radix kernel; everything else
+/// takes [`sort_table_comparator`].
+pub fn sort_table_multi(t: &Table, keys: &[SortKey]) -> Result<Table> {
+    validate_keys(t, keys)?;
     if let [k] = keys {
-        if k.ascending {
-            if let Column::Int64(v) = t.column(k.col) {
-                let mut pairs: Vec<(i64, u32)> = v
-                    .iter()
-                    .enumerate()
-                    .map(|(i, &key)| (key, i as u32))
-                    .collect();
-                pairs.sort_unstable();
-                let idx: Vec<usize> =
-                    pairs.into_iter().map(|(_, i)| i as usize).collect();
-                return Ok(t.take(&idx));
+        if let Column::Int64(v) = t.column(k.col) {
+            if v.len() < u32::MAX as usize {
+                let order = radix_sort_rows(v.as_slice(), k.ascending);
+                return Ok(t.take_u32(&order));
             }
         }
     }
+    sort_table_comparator(t, keys)
+}
+
+/// The generic comparator sort: index `sort_by` indirecting into the key
+/// columns per comparison. Handles every dtype and key combination; kept
+/// `pub` as the radix kernel's bench baseline and bit-identical oracle.
+pub fn sort_table_comparator(t: &Table, keys: &[SortKey]) -> Result<Table> {
+    validate_keys(t, keys)?;
     let mut idx: Vec<usize> = (0..t.num_rows()).collect();
     idx.sort_by(|&a, &b| {
         for k in keys {
@@ -87,16 +166,11 @@ pub fn is_sorted_by_key(t: &Table, col: usize) -> Result<bool> {
     Ok(keys.windows(2).all(|w| w[0] <= w[1]))
 }
 
-/// K-way merge of tables each already sorted ascending on int64 `col`
-/// (the merge phase of distributed sample-sort).
-pub fn merge_sorted(parts: &[Table], col: usize) -> Result<Table> {
+/// Validate schemas and borrow every part's key column.
+fn merge_prep<'a>(parts: &'a [Table], col: usize) -> Result<Vec<&'a [i64]>> {
     if parts.is_empty() {
         return Err(Error::DataFrame("merge of zero tables".into()));
     }
-    // Binary-heap k-way merge over (key, part, row) cursors.
-    use std::cmp::Reverse;
-    use std::collections::BinaryHeap;
-
     for p in parts {
         if p.schema() != parts[0].schema() {
             return Err(Error::DataFrame(format!(
@@ -106,19 +180,57 @@ pub fn merge_sorted(parts: &[Table], col: usize) -> Result<Table> {
             )));
         }
     }
-    let keys: Vec<&[i64]> = parts
-        .iter()
-        .map(|p| p.column(col).as_i64())
-        .collect::<Result<_>>()?;
-    let total: usize = parts.iter().map(|p| p.num_rows()).sum();
+    parts.iter().map(|p| p.column(col).as_i64()).collect()
+}
 
+/// Global interleave order via a binary heap of `(key, part, row)`
+/// cursors, advancing **whole duplicate-key runs** per heap operation
+/// (run perf pass, EXPERIMENTS.md §Perf): after popping a cursor, the run
+/// of equal keys on that part is emitted directly and only the first
+/// differing key re-enters the heap. Equal keys on *other* parts
+/// tie-break on the larger part index, so they pop afterwards either way
+/// — the output order is bit-identical to the per-row baseline.
+fn merge_order_runs(keys: &[&[i64]]) -> Vec<(u32, u32)> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    let total: usize = keys.iter().map(|k| k.len()).sum();
     let mut heap: BinaryHeap<Reverse<(i64, usize, usize)>> = BinaryHeap::new();
     for (pi, k) in keys.iter().enumerate() {
         if !k.is_empty() {
             heap.push(Reverse((k[0], pi, 0)));
         }
     }
-    // Global interleave order as (part, row) cursors.
+    let mut order: Vec<(u32, u32)> = Vec::with_capacity(total);
+    while let Some(Reverse((key, pi, ri))) = heap.pop() {
+        let part = keys[pi];
+        let mut end = ri + 1;
+        while end < part.len() && part[end] == key {
+            end += 1;
+        }
+        for r in ri..end {
+            order.push((pi as u32, r as u32));
+        }
+        if end < part.len() {
+            heap.push(Reverse((part[end], pi, end)));
+        }
+    }
+    order
+}
+
+/// The per-row baseline: one heap push + pop for every output row. Kept
+/// for [`merge_sorted_per_row`] (bench baseline / oracle).
+fn merge_order_per_row(keys: &[&[i64]]) -> Vec<(u32, u32)> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    let total: usize = keys.iter().map(|k| k.len()).sum();
+    let mut heap: BinaryHeap<Reverse<(i64, usize, usize)>> = BinaryHeap::new();
+    for (pi, k) in keys.iter().enumerate() {
+        if !k.is_empty() {
+            heap.push(Reverse((k[0], pi, 0)));
+        }
+    }
     let mut order: Vec<(u32, u32)> = Vec::with_capacity(total);
     while let Some(Reverse((_, pi, ri))) = heap.pop() {
         order.push((pi as u32, ri as u32));
@@ -127,10 +239,14 @@ pub fn merge_sorted(parts: &[Table], col: usize) -> Result<Table> {
             heap.push(Reverse((keys[pi][next], pi, next)));
         }
     }
+    order
+}
 
-    // Columnar gather straight from the order vector (perf pass,
-    // EXPERIMENTS.md §Perf: replaces a row-at-a-time slice+extend stitch
-    // that allocated one Column per row).
+/// Columnar gather straight from the interleave order (perf pass,
+/// EXPERIMENTS.md §Perf: replaces a row-at-a-time slice+extend stitch
+/// that allocated one Column per row).
+fn gather_interleave(parts: &[Table], order: &[(u32, u32)]) -> Result<Table> {
+    let total = order.len();
     let ncols = parts[0].num_columns();
     let mut out_cols: Vec<Column> = Vec::with_capacity(ncols);
     for j in 0..ncols {
@@ -139,7 +255,7 @@ pub fn merge_sorted(parts: &[Table], col: usize) -> Result<Table> {
                 let srcs: Vec<&[i64]> =
                     parts.iter().map(|p| p.column(j).as_i64().unwrap()).collect();
                 let mut v = Vec::with_capacity(total);
-                for &(pi, ri) in &order {
+                for &(pi, ri) in order {
                     v.push(srcs[pi as usize][ri as usize]);
                 }
                 Column::from_i64(v)
@@ -148,7 +264,7 @@ pub fn merge_sorted(parts: &[Table], col: usize) -> Result<Table> {
                 let srcs: Vec<&[f64]> =
                     parts.iter().map(|p| p.column(j).as_f64().unwrap()).collect();
                 let mut v = Vec::with_capacity(total);
-                for &(pi, ri) in &order {
+                for &(pi, ri) in order {
                     v.push(srcs[pi as usize][ri as usize]);
                 }
                 Column::from_f64(v)
@@ -161,14 +277,14 @@ pub fn merge_sorted(parts: &[Table], col: usize) -> Result<Table> {
                     .collect();
                 let bytes: usize = srcs.iter().map(|s| s.str_bytes()).sum();
                 let mut b = Utf8Builder::with_capacity(total, bytes);
-                for &(pi, ri) in &order {
+                for &(pi, ri) in order {
                     b.push(srcs[pi as usize].get(ri as usize));
                 }
                 Column::Utf8(b.finish())
             }
             Column::Bool(_) => {
                 let mut v = Vec::with_capacity(total);
-                for &(pi, ri) in &order {
+                for &(pi, ri) in order {
                     match parts[pi as usize].column(j) {
                         Column::Bool(b) => v.push(b[ri as usize]),
                         _ => unreachable!("schemas validated identical"),
@@ -180,6 +296,24 @@ pub fn merge_sorted(parts: &[Table], col: usize) -> Result<Table> {
         out_cols.push(col);
     }
     Table::new(parts[0].schema().clone(), out_cols)
+}
+
+/// K-way merge of tables each already sorted ascending on int64 `col`
+/// (the merge phase of distributed sample-sort). Duplicate-key runs on a
+/// part advance in a single heap operation.
+pub fn merge_sorted(parts: &[Table], col: usize) -> Result<Table> {
+    let keys = merge_prep(parts, col)?;
+    let order = merge_order_runs(&keys);
+    gather_interleave(parts, &order)
+}
+
+/// [`merge_sorted`]'s one-heap-operation-per-row predecessor — kept as
+/// the `kernel_hotpaths` bench baseline and bit-identical oracle for the
+/// run-advancing merge.
+pub fn merge_sorted_per_row(parts: &[Table], col: usize) -> Result<Table> {
+    let keys = merge_prep(parts, col)?;
+    let order = merge_order_per_row(&keys);
+    gather_interleave(parts, &order)
 }
 
 #[cfg(test)]
@@ -223,10 +357,70 @@ mod tests {
 
     #[test]
     fn stability() {
-        // Equal keys keep original relative order of the value column.
+        // Equal keys keep original relative order of the value column —
+        // in both directions (the descending fast path must not reverse
+        // duplicate runs).
         let t = table(vec![1, 1, 1], vec![0.1, 0.2, 0.3]);
         let s = sort_table(&t, SortKey::asc(0)).unwrap();
         assert_eq!(s.column(1).as_f64().unwrap(), &[0.1, 0.2, 0.3]);
+        let d = sort_table(&t, SortKey::desc(0)).unwrap();
+        assert_eq!(d.column(1).as_f64().unwrap(), &[0.1, 0.2, 0.3]);
+    }
+
+    #[test]
+    fn float_sort_with_nan_is_total() {
+        // total_cmp order: -1.0 < 1.0 < NaN; stable on the NaN run.
+        let t = Table::new(
+            Schema::of(&[("f", DataType::Float64), ("v", DataType::Int64)]),
+            vec![
+                Column::from_f64(vec![f64::NAN, 1.0, -1.0, f64::NAN]),
+                Column::from_i64(vec![0, 1, 2, 3]),
+            ],
+        )
+        .unwrap();
+        let s = sort_table(&t, SortKey::asc(0)).unwrap();
+        let f = s.column(0).as_f64().unwrap();
+        assert_eq!(&f[..2], &[-1.0, 1.0]);
+        assert!(f[2].is_nan() && f[3].is_nan());
+        assert_eq!(s.column(1).as_i64().unwrap(), &[2, 1, 0, 3]);
+        let d = sort_table(&t, SortKey::desc(0)).unwrap();
+        let f = d.column(0).as_f64().unwrap();
+        assert!(f[0].is_nan() && f[1].is_nan());
+        assert_eq!(&f[2..], &[1.0, -1.0]);
+        // Stable: the two NaNs keep their original relative order.
+        assert_eq!(d.column(1).as_i64().unwrap(), &[0, 3, 1, 2]);
+    }
+
+    #[test]
+    fn radix_handles_extreme_and_negative_keys() {
+        let keys = vec![i64::MAX, -1, 0, i64::MIN, 1, i64::MIN + 1, -1];
+        let t = table(keys, vec![0.0; 7]);
+        let s = sort_table(&t, SortKey::asc(0)).unwrap();
+        assert_eq!(
+            s.column(0).as_i64().unwrap(),
+            &[i64::MIN, i64::MIN + 1, -1, -1, 0, 1, i64::MAX]
+        );
+        let d = sort_table(&t, SortKey::desc(0)).unwrap();
+        assert_eq!(
+            d.column(0).as_i64().unwrap(),
+            &[i64::MAX, 1, 0, -1, -1, i64::MIN + 1, i64::MIN]
+        );
+    }
+
+    #[test]
+    fn prop_radix_is_bit_identical_to_comparator() {
+        // Above and below the 256-row small-input cutoff, both directions.
+        testkit::check("radix == comparator", 24, |rng| {
+            let n = rng.gen_range(600) as usize;
+            let keys: Vec<i64> = (0..n).map(|_| rng.gen_i64(-40, 40)).collect();
+            let vals: Vec<f64> = (0..n).map(|_| rng.gen_f64()).collect();
+            let t = table(keys, vals);
+            for key in [SortKey::asc(0), SortKey::desc(0)] {
+                let fast = sort_table(&t, key).unwrap();
+                let oracle = sort_table_comparator(&t, &[key]).unwrap();
+                assert_eq!(fast, oracle, "ascending={}", key.ascending);
+            }
+        });
     }
 
     #[test]
@@ -240,11 +434,33 @@ mod tests {
     }
 
     #[test]
+    fn prop_run_merge_is_bit_identical_to_per_row_merge() {
+        // Run-heavy parts (tiny key space => long duplicate runs).
+        testkit::check("run merge == per-row merge", 24, |rng| {
+            let parts: Vec<Table> = (0..4)
+                .map(|_| {
+                    let n = rng.gen_range(120) as usize;
+                    let mut keys: Vec<i64> =
+                        (0..n).map(|_| rng.gen_i64(0, 5)).collect();
+                    keys.sort_unstable();
+                    let vals: Vec<f64> = (0..n).map(|_| rng.gen_f64()).collect();
+                    table(keys, vals)
+                })
+                .collect();
+            let fast = merge_sorted(&parts, 0).unwrap();
+            let oracle = merge_sorted_per_row(&parts, 0).unwrap();
+            assert_eq!(fast, oracle);
+        });
+    }
+
+    #[test]
     fn errors_on_misuse() {
         let t = table(vec![1], vec![0.0]);
         assert!(sort_table_multi(&t, &[]).is_err());
         assert!(sort_table(&t, SortKey::asc(9)).is_err());
+        assert!(sort_table_comparator(&t, &[]).is_err());
         assert!(merge_sorted(&[], 0).is_err());
+        assert!(merge_sorted_per_row(&[], 0).is_err());
     }
 
     #[test]

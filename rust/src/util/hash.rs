@@ -65,6 +65,93 @@ impl std::hash::Hasher for SplitMixHasher {
     }
 }
 
+/// Bucket-partitioned CSR index over an int64 key column — the flat,
+/// single-allocation-per-array replacement for `HashMap<i64, Vec<u32>>`
+/// build sides (hash join) and accumulator maps (groupby). See
+/// EXPERIMENTS.md §Perf for the before/after numbers.
+///
+/// Construction is three dense passes over the keys and exactly two heap
+/// allocations (`offsets`, `rows`): count keys per power-of-two hash
+/// bucket, exclusive-prefix-sum the counts into `offsets`, then scatter
+/// row ids into the flat `rows` array. Bucket `b` owns
+/// `rows[offsets[b]..offsets[b + 1]]` in **ascending row order** (the
+/// scatter is stable), so per-key candidate order matches the insertion
+/// order a `HashMap<_, Vec<_>>` build would produce — callers that iterate
+/// candidates emit bit-identical output to the legacy map-based kernels.
+///
+/// Buckets group *hashes*, not keys: a probe must re-check the key against
+/// each candidate (with load factor <= 1 over a power-of-two table the
+/// expected bucket size is ~1).
+///
+/// NOTE: `ops::dist::counting_scatter` implements the same count →
+/// prefix-sum → scatter → offsets-shift scheme over precomputed
+/// destination ids; a fix to the cursor-undo shift in either must be
+/// mirrored in the other.
+pub struct CsrIndex {
+    mask: u64,
+    /// `offsets[b]..offsets[b + 1]` bounds bucket `b` in `rows`
+    /// (`num_buckets() + 1` entries; the last equals `rows.len()`).
+    offsets: Vec<u32>,
+    /// All row ids, grouped by bucket, ascending within each bucket.
+    rows: Vec<u32>,
+}
+
+impl CsrIndex {
+    /// Build the index over a key column. `keys.len()` must fit a `u32`
+    /// row id.
+    pub fn build(keys: &[i64]) -> CsrIndex {
+        assert!(
+            keys.len() < u32::MAX as usize,
+            "CsrIndex row ids are u32 ({} rows given)",
+            keys.len()
+        );
+        // Load factor <= 1 keeps expected candidates-per-probe at ~1.
+        let nbuckets = keys.len().next_power_of_two().max(16);
+        let mask = (nbuckets - 1) as u64;
+        let mut offsets = vec![0u32; nbuckets + 1];
+        for &k in keys {
+            offsets[(splitmix64(k as u64) & mask) as usize + 1] += 1;
+        }
+        for b in 0..nbuckets {
+            offsets[b + 1] += offsets[b];
+        }
+        // Scatter forward using offsets[b] itself as bucket b's write
+        // cursor, then undo the cursor advance by shifting one slot right —
+        // no third (cursor) allocation.
+        let mut rows = vec![0u32; keys.len()];
+        for (i, &k) in keys.iter().enumerate() {
+            let b = (splitmix64(k as u64) & mask) as usize;
+            rows[offsets[b] as usize] = i as u32;
+            offsets[b] += 1;
+        }
+        for b in (1..=nbuckets).rev() {
+            offsets[b] = offsets[b - 1];
+        }
+        offsets[0] = 0;
+        CsrIndex { mask, offsets, rows }
+    }
+
+    /// Candidate row ids whose key *may* equal `key` (same hash bucket),
+    /// in ascending row order. Callers re-check the key per candidate.
+    #[inline]
+    pub fn candidates(&self, key: i64) -> &[u32] {
+        let b = (splitmix64(key as u64) & self.mask) as usize;
+        &self.rows[self.offsets[b] as usize..self.offsets[b + 1] as usize]
+    }
+
+    /// Number of hash buckets (a power of two).
+    pub fn num_buckets(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Bucket `b`'s row ids, ascending (for whole-table sweeps: groupby
+    /// aggregates bucket by bucket).
+    #[inline]
+    pub fn bucket_rows(&self, b: usize) -> &[u32] {
+        &self.rows[self.offsets[b] as usize..self.offsets[b + 1] as usize]
+    }
+}
+
 /// `BuildHasher` for [`SplitMixHasher`]; use with
 /// `HashMap::with_hasher(SplitMixBuild)`.
 #[derive(Default, Clone, Copy)]
@@ -107,6 +194,58 @@ mod tests {
         for (k, id) in keys.iter().zip(&ids) {
             assert_eq!(*id, partition_of(*k, 37) as i32);
         }
+    }
+
+    #[test]
+    fn csr_index_finds_every_occurrence() {
+        // For every key, candidates filtered by key equality must be
+        // exactly the ascending positions of that key.
+        let keys: Vec<i64> = (0..500).map(|i| (i * 31 + 7) % 23 - 11).collect();
+        let idx = CsrIndex::build(&keys);
+        for probe in -12..13i64 {
+            let expect: Vec<u32> = keys
+                .iter()
+                .enumerate()
+                .filter(|(_, &k)| k == probe)
+                .map(|(i, _)| i as u32)
+                .collect();
+            let got: Vec<u32> = idx
+                .candidates(probe)
+                .iter()
+                .copied()
+                .filter(|&r| keys[r as usize] == probe)
+                .collect();
+            assert_eq!(got, expect, "probe {probe}");
+        }
+    }
+
+    #[test]
+    fn csr_index_buckets_partition_all_rows() {
+        let keys: Vec<i64> = (0..300).map(|i| i % 7).collect();
+        let idx = CsrIndex::build(&keys);
+        let mut seen = vec![false; keys.len()];
+        for b in 0..idx.num_buckets() {
+            let rows = idx.bucket_rows(b);
+            // Ascending within a bucket (stability of the scatter).
+            assert!(rows.windows(2).all(|w| w[0] < w[1]));
+            for &r in rows {
+                assert!(!seen[r as usize], "row {r} in two buckets");
+                seen[r as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some row missing from the index");
+    }
+
+    #[test]
+    fn csr_index_empty_and_single() {
+        let idx = CsrIndex::build(&[]);
+        assert!(idx.candidates(42).is_empty());
+        let idx = CsrIndex::build(&[i64::MIN]);
+        assert_eq!(idx.candidates(i64::MIN), &[0]);
+        assert!(idx
+            .candidates(0)
+            .iter()
+            .all(|&r| [i64::MIN][r as usize] != 0));
     }
 
     #[test]

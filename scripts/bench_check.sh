@@ -1,0 +1,103 @@
+#!/usr/bin/env bash
+# Perf-trajectory gate for the flat-kernel bench (EXPERIMENTS.md §Perf).
+#
+#   scripts/bench_check.sh <current.json>            # gate against snapshot
+#   scripts/bench_check.sh <current.json> --update   # gate, then refresh it
+#
+# <current.json> is a fresh `RC_BENCH_JSON` emission of
+# `cargo bench --bench kernel_hotpaths`; the committed snapshot lives at
+# the repo root as BENCH_kernels.json.
+#
+# What is gated: the per-kernel **speedup ratio** new_wall / legacy_wall.
+# Absolute wall time is machine-specific (laptop vs CI runner), so the
+# gate compares the machine-independent ratio instead: the run fails if
+# any kernel's ratio exceeds the snapshot's ratio by more than 25%
+# (REGRESSION_TOL), or if a "fast" kernel is not actually faster than its
+# legacy baseline (ratio >= 1.0 — the bench itself also asserts this).
+# Refresh the snapshot with --update after an intentional change.
+#
+# Seed snapshots: rows whose extra carries `"snapshot": "seed-..."` hold
+# desk-estimated ratios recorded before the first measured run. For those
+# pairs only the ratio < 1.0 rule is enforced (budget is clamped to 1.0)
+# so an estimate can never fail a genuinely-faster kernel; run with
+# --update on real hardware to replace the seeds and arm the full gate.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+CURRENT="${1:?usage: bench_check.sh <current.json> [--update]}"
+BASELINE="BENCH_kernels.json"
+REGRESSION_TOL="1.25"
+
+[[ -f "$CURRENT" ]] || { echo "bench_check: $CURRENT not found" >&2; exit 1; }
+[[ -f "$BASELINE" ]] || { echo "bench_check: $BASELINE not found" >&2; exit 1; }
+
+python3 - "$CURRENT" "$BASELINE" "$REGRESSION_TOL" <<'EOF'
+import json, sys
+
+current_path, baseline_path, tol = sys.argv[1], sys.argv[2], float(sys.argv[3])
+
+def rows(path):
+    with open(path) as f:
+        doc = json.load(f)
+    return {row["label"]: row for row in doc.get("rows", [])}
+
+cur, base = rows(current_path), rows(baseline_path)
+
+# The gated pairs come from the bench itself: every "new kernel" row
+# carries its legacy partner as a `baseline` extra (see PAIRS in
+# rust/benches/kernel_hotpaths.rs), so a pair added to the bench is gated
+# automatically — no hand-maintained list to drift.
+PAIRS = sorted(
+    (label, row["extra"]["baseline"])
+    for label, row in cur.items()
+    if isinstance(row.get("extra"), dict) and "baseline" in row["extra"]
+)
+if not PAIRS:
+    print(f"bench_check: no rows in {current_path} carry an 'extra.baseline' "
+          "pairing — wrong bench output?", file=sys.stderr)
+    sys.exit(1)
+
+failures = []
+print(f"{'kernel':<34} {'ratio now':>10} {'snapshot':>10} {'budget':>10}")
+for new_label, old_label in PAIRS:
+    missing = [f"label '{label}' missing from {name}"
+               for label, src, name in [(new_label, cur, current_path),
+                                        (old_label, cur, current_path),
+                                        (new_label, base, baseline_path),
+                                        (old_label, base, baseline_path)]
+               if label not in src]
+    if missing:
+        failures.extend(missing)
+        continue
+    ratio_cur = cur[new_label]["wall_s"]["mean"] / cur[old_label]["wall_s"]["mean"]
+    ratio_base = base[new_label]["wall_s"]["mean"] / base[old_label]["wall_s"]["mean"]
+    budget = ratio_base * tol
+    seed = str(base[new_label].get("extra", {}).get("snapshot", "")).startswith("seed")
+    if seed:
+        # Desk-estimated baseline: only enforce "actually faster".
+        budget = max(budget, 1.0)
+    note = "  (seed: <1.0 only)" if seed else ""
+    print(f"{new_label:<34} {ratio_cur:>10.3f} {ratio_base:>10.3f} "
+          f"{budget:>10.3f}{note}")
+    if ratio_cur >= 1.0:
+        failures.append(
+            f"{new_label} is not faster than {old_label} "
+            f"(ratio {ratio_cur:.3f} >= 1.0)")
+    elif ratio_cur > budget:
+        failures.append(
+            f"{new_label} regressed: ratio {ratio_cur:.3f} > "
+            f"snapshot {ratio_base:.3f} * {tol} = {budget:.3f}")
+
+if failures:
+    print("\nbench_check FAILED:", file=sys.stderr)
+    for f in failures:
+        print(f"  - {f}", file=sys.stderr)
+    sys.exit(1)
+print("\nbench_check: all kernels within budget")
+EOF
+
+if [[ "${2:-}" == "--update" ]]; then
+  cp "$CURRENT" "$BASELINE"
+  echo "bench_check: snapshot refreshed -> $BASELINE"
+fi
