@@ -32,7 +32,7 @@
 
 use radical_cylon::metrics::mem;
 use radical_cylon::ops::dist::partition_slice;
-use radical_cylon::ops::local::{compare_scalar, hash_join, sort_table, SortKey};
+use radical_cylon::ops::local::{eval_predicate, hash_join, sort_table, SortKey};
 use radical_cylon::prelude::*;
 
 const RANKS: usize = 4;
@@ -46,12 +46,12 @@ fn spec(seed: u64) -> GenSpec {
 fn etl() -> Plan {
     let left = Plan::generate(RANKS, spec(0xE71))
         .named("gen-left")
-        .filter(1, CmpOp::Ge, 0.5)
+        .filter(col("val").ge(lit(0.5)))
         .named("filter-left");
     let right = Plan::generate(RANKS, spec(0xB0B)).named("gen-right");
-    left.join(right, 0, 0)
+    left.join(right, "key", "key")
         .named("join-both-piped")
-        .sort(0)
+        .sort("key")
         .named("sort-result")
         .collect()
 }
@@ -65,7 +65,7 @@ fn oracle() -> Table {
         Table::concat(&parts).unwrap()
     };
     let left = gen_all(0xE71);
-    let mask = compare_scalar(left.column(1), 0.5, CmpOp::Ge).unwrap();
+    let mask = eval_predicate(&left, &col("val").ge(lit(0.5))).unwrap();
     let left = left.filter(&mask).unwrap();
     let right = gen_all(0xB0B);
     let joined = hash_join(&left, &right, 0, 0, JoinType::Inner).unwrap();

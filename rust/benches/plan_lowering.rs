@@ -34,9 +34,9 @@ fn engine() -> HeterogeneousEngine {
 
 fn piped_plan() -> Plan {
     let left = Plan::generate(RANKS, GenSpec::uniform(ROWS, KEY_SPACE, 0xE71))
-        .filter(1, CmpOp::Ge, 0.5);
+        .filter(col("val").ge(lit(0.5)));
     let right = Plan::generate(RANKS, GenSpec::uniform(ROWS, KEY_SPACE, 0xB0B));
-    left.join(right, 0, 0).sort(0).collect()
+    left.join(right, "key", "key").sort("key").collect()
 }
 
 /// The no-handoff baseline: the same five operators as independent tasks.

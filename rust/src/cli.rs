@@ -5,8 +5,12 @@
 //! radical-cylon run --experiment <id> [--engine bm|batch|rp] [--backend native|pjrt]
 //!                   [--iterations N] [--parallelisms 2,4,8] [--config file.ini]
 //! radical-cylon plan [--ranks N] [--rows N] [--engine bm|batch|rp]
-//!                    [--policy fifo|cpf] [--backend native|pjrt]
+//!                    [--policy fifo|cpf] [--backend native|pjrt] [--expr]
 //! ```
+//!
+//! `plan --expr` runs the typed-expression demo: a derived column plus a
+//! compound predicate, optimized by the plan-lowering passes (filter
+//! fusion, predicate pushdown, projection pruning).
 
 use crate::cluster::MachineSpec;
 use crate::config::{parse_ini, preset, preset_ids, ExperimentConfig, SCALE_NOTE};
@@ -18,7 +22,7 @@ use crate::exec::{
 };
 use crate::metrics::render_table;
 use crate::ops::dist::KernelBackend;
-use crate::ops::local::CmpOp;
+use crate::plan::expr::{col, lit};
 use crate::plan::Plan;
 use crate::raptor::ReadyPolicy;
 use crate::runtime::{ArtifactStore, KernelService};
@@ -187,19 +191,35 @@ fn cmd_run(args: &Args) -> Result<String> {
 }
 
 /// Demo ETL chain for `radical-cylon plan`: two generated sources, a
-/// zero-copy filter on the left, a join piped on **both** sides, a global
-/// sort, and a collected result.
+/// zero-copy expression filter on the left, a join piped on **both**
+/// sides, a global sort, and a collected result.
 fn demo_plan(ranks: usize, rows: usize) -> Plan {
     let key_space = (rows as i64 * ranks as i64).max(16);
     let left = Plan::generate(ranks, GenSpec::uniform(rows, key_space, 0xE71))
         .named("gen-left")
-        .filter(1, CmpOp::Ge, 0.5)
+        .filter(col("val").ge(lit(0.5)))
         .named("filter-left");
     let right = Plan::generate(ranks, GenSpec::uniform(rows, key_space, 0xB0B))
         .named("gen-right");
-    left.join(right, 0, 0)
+    left.join(right, "key", "key")
         .named("join-both-piped")
-        .sort(0)
+        .sort("key")
+        .named("sort-result")
+        .collect()
+}
+
+/// `plan --expr` demo: derived column + compound predicate. The two
+/// adjacent filters fuse, the fused predicate references only base
+/// columns so it sinks below the derive, and the sort runs on the
+/// filtered rows — the optimizer's three passes in one chain.
+fn demo_expr_plan(ranks: usize, rows: usize) -> Plan {
+    let key_space = (rows as i64 * ranks as i64).max(16);
+    Plan::generate(ranks, GenSpec::uniform(rows, key_space, 0xE71))
+        .named("gen-src")
+        .derive("boosted", col("val") * lit(2.0) + lit(1.0))
+        .filter((col("key") * lit(2)).gt(lit(16)).and(col("key").ne(lit(0))))
+        .filter(col("val").lt(lit(0.75)))
+        .sort("key")
         .named("sort-result")
         .collect()
 }
@@ -221,7 +241,12 @@ fn cmd_plan(args: &Args) -> Result<String> {
         "cpf" => ReadyPolicy::CriticalPathFirst,
         other => return Err(Error::Config(format!("unknown policy '{other}'"))),
     };
-    let plan = demo_plan(ranks, rows);
+    let expr_demo = args.has("expr");
+    let plan = if expr_demo {
+        demo_expr_plan(ranks, rows)
+    } else {
+        demo_plan(ranks, rows)
+    };
     let machine = MachineSpec::local(ranks.max(2));
     let engine_name = args.get("engine").unwrap_or("rp");
     // --policy configures the dataflow scheduler's ready-set ordering;
@@ -242,10 +267,19 @@ fn cmd_plan(args: &Args) -> Result<String> {
             .run_plan(&plan)?,
         other => return Err(Error::Config(format!("unknown engine '{other}'"))),
     };
-    let mut out = format!(
-        "logical plan: generate -> filter -> join (both sides piped) -> sort \
-         -> collect  [{engine_name}, {ranks} ranks, {rows} rows/rank]\n",
-    );
+    let mut out = if expr_demo {
+        format!(
+            "logical plan: generate -> derive(boosted) -> filter(compound \
+             expr, fused+pushed) -> sort -> collect  [{engine_name}, \
+             {ranks} ranks, {rows} rows/rank]\n",
+        )
+    } else {
+        format!(
+            "logical plan: generate -> filter -> join (both sides piped) -> \
+             sort -> collect  [{engine_name}, {ranks} ranks, {rows} \
+             rows/rank]\n",
+        )
+    };
     let table: Vec<Vec<String>> = run
         .results
         .iter()
@@ -279,7 +313,8 @@ fn cmd_help() -> String {
     "usage:\n  radical-cylon info [--experiments]\n  radical-cylon run --experiment <id> \
      [--engine bm|batch|rp] [--backend native|pjrt] [--iterations N] \
      [--parallelisms 2,4,8] [--config file.ini]\n  radical-cylon plan [--ranks N] \
-     [--rows N] [--engine bm|batch|rp] [--policy fifo|cpf] [--backend native|pjrt]\n"
+     [--rows N] [--engine bm|batch|rp] [--policy fifo|cpf] [--backend native|pjrt] \
+     [--expr]\n"
         .to_string()
 }
 
@@ -345,6 +380,18 @@ mod tests {
         assert!(bm.contains("sort-result"), "{bm}");
         let err = dispatch(argv("plan --policy sideways")).unwrap_err().to_string();
         assert!(err.contains("unknown policy"), "{err}");
+    }
+
+    #[test]
+    fn plan_expr_demo_end_to_end() {
+        let out = dispatch(argv("plan --ranks 2 --rows 400 --expr")).unwrap();
+        assert!(out.contains("derive(boosted)"), "{out}");
+        assert!(out.contains("sort-result"), "{out}");
+        // The fused+pushed filter runs as one task below the derive.
+        assert!(out.contains("filter"), "{out}");
+        assert!(out.contains("result ("), "{out}");
+        // The derived column appears in the sink schema.
+        assert!(out.contains("boosted"), "{out}");
     }
 
     #[test]

@@ -34,6 +34,13 @@ impl GenSpec {
     pub fn uniform(rows: usize, key_space: i64, seed: u64) -> GenSpec {
         GenSpec { rows, key_space, dist: KeyDist::Uniform, seed }
     }
+
+    /// Schema every generated partition carries: `(key: int64, val:
+    /// float64)`. The plan optimizer uses this to propagate schemas
+    /// through `generate` sources without running them.
+    pub fn schema() -> Schema {
+        Schema::of(&[("key", DataType::Int64), ("val", DataType::Float64)])
+    }
 }
 
 /// Standard two-column table `(key: int64, val: float64)` — the shape the
@@ -67,7 +74,7 @@ pub fn gen_table(spec: &GenSpec, rank: usize) -> Table {
     }
     let vals: Vec<f64> = (0..spec.rows).map(|_| rng.gen_f64()).collect();
     Table::new(
-        Schema::of(&[("key", DataType::Int64), ("val", DataType::Float64)]),
+        GenSpec::schema(),
         vec![Column::from_i64(keys), Column::from_f64(vals)],
     )
     .expect("generated table is well-formed")

@@ -19,5 +19,5 @@ pub use chunked::ChunkedTable;
 pub use column::{Column, DataType};
 pub use csv::{read_csv, write_csv};
 pub use gen::{gen_table, gen_two_tables, GenSpec, KeyDist};
-pub use schema::{Field, Schema};
+pub use schema::{ColRef, Field, Schema};
 pub use table::Table;

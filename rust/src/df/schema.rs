@@ -47,12 +47,27 @@ impl Schema {
         self.fields.is_empty()
     }
 
-    /// Index of a column by name.
+    /// Index of a column by name. Unknown names produce a did-you-mean
+    /// diagnostic listing every available column (and the closest match by
+    /// edit distance, when one is near enough to be a plausible typo).
     pub fn index_of(&self, name: &str) -> Result<usize> {
-        self.fields
+        if let Some(i) = self.fields.iter().position(|f| f.name == name) {
+            return Ok(i);
+        }
+        let available: Vec<&str> =
+            self.fields.iter().map(|f| f.name.as_str()).collect();
+        let suggestion = self
+            .fields
             .iter()
-            .position(|f| f.name == name)
-            .ok_or_else(|| Error::DataFrame(format!("no column named '{name}'")))
+            .map(|f| (edit_distance(name, &f.name), &f.name))
+            .min()
+            .filter(|(d, _)| *d <= 2.max(name.len() / 3))
+            .map(|(_, n)| format!("; did you mean '{n}'?"))
+            .unwrap_or_default();
+        Err(Error::DataFrame(format!(
+            "no column named '{name}' (available: {}{suggestion})",
+            available.join(", ")
+        )))
     }
 
     pub fn field(&self, i: usize) -> &Field {
@@ -72,6 +87,87 @@ impl Schema {
             fields.push(Field::new(&name, f.dtype));
         }
         Schema { fields }
+    }
+}
+
+/// Levenshtein distance (two-row DP) — powers the did-you-mean hint in
+/// [`Schema::index_of`]. Column names are short, so O(a·b) is fine.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// A column reference: by position (the legacy addressing mode) or by
+/// name (the preferred one — survives projections and reads better).
+///
+/// Operator and [`crate::plan::Plan`] key arguments take
+/// `impl Into<ColRef>`, so existing `usize` call sites keep compiling
+/// while new code passes `&str` names. Resolution against the actual
+/// input [`Schema`] happens at execute time via [`ColRef::resolve`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ColRef {
+    /// Positional index into the schema (legacy; blocks some optimizer
+    /// rewrites until normalized to a name).
+    Index(usize),
+    /// Column name, resolved with [`Schema::index_of`] diagnostics.
+    Name(String),
+}
+
+impl ColRef {
+    /// Resolve to a concrete column index against `schema`.
+    pub fn resolve(&self, schema: &Schema) -> Result<usize> {
+        match self {
+            ColRef::Index(i) if *i < schema.len() => Ok(*i),
+            ColRef::Index(i) => Err(Error::DataFrame(format!(
+                "column index {i} out of bounds for schema {schema} \
+                 ({} columns)",
+                schema.len()
+            ))),
+            ColRef::Name(n) => schema.index_of(n),
+        }
+    }
+}
+
+impl Default for ColRef {
+    fn default() -> ColRef {
+        ColRef::Index(0)
+    }
+}
+
+impl From<usize> for ColRef {
+    fn from(i: usize) -> ColRef {
+        ColRef::Index(i)
+    }
+}
+
+impl From<&str> for ColRef {
+    fn from(n: &str) -> ColRef {
+        ColRef::Name(n.to_string())
+    }
+}
+
+impl From<String> for ColRef {
+    fn from(n: String) -> ColRef {
+        ColRef::Name(n)
+    }
+}
+
+impl std::fmt::Display for ColRef {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ColRef::Index(i) => write!(f, "#{i}"),
+            ColRef::Name(n) => write!(f, "{n}"),
+        }
     }
 }
 
@@ -96,6 +192,40 @@ mod tests {
         assert_eq!(s.index_of("v").unwrap(), 1);
         assert!(s.index_of("zzz").is_err());
         assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn unknown_column_lists_available_and_suggests() {
+        let s = Schema::of(&[("key", DataType::Int64), ("val", DataType::Float64)]);
+        let err = s.index_of("vall").unwrap_err().to_string();
+        assert!(err.contains("no column named 'vall'"), "{err}");
+        assert!(err.contains("available: key, val"), "{err}");
+        assert!(err.contains("did you mean 'val'?"), "{err}");
+        // A name nothing like any column gets the listing but no guess.
+        let err = s.index_of("zzzzzzzz").unwrap_err().to_string();
+        assert!(!err.contains("did you mean"), "{err}");
+    }
+
+    #[test]
+    fn colref_resolution() {
+        let s = Schema::of(&[("key", DataType::Int64), ("val", DataType::Float64)]);
+        assert_eq!(ColRef::from(1usize).resolve(&s).unwrap(), 1);
+        assert_eq!(ColRef::from("val").resolve(&s).unwrap(), 1);
+        assert_eq!(ColRef::from("key".to_string()).resolve(&s).unwrap(), 0);
+        let err = ColRef::from(9usize).resolve(&s).unwrap_err().to_string();
+        assert!(err.contains("out of bounds"), "{err}");
+        assert!(ColRef::from("nope").resolve(&s).is_err());
+        assert_eq!(ColRef::default(), ColRef::Index(0));
+        assert_eq!(ColRef::from("val").to_string(), "val");
+        assert_eq!(ColRef::from(2usize).to_string(), "#2");
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("val", "val"), 0);
+        assert_eq!(edit_distance("vall", "val"), 1);
+        assert_eq!(edit_distance("kye", "key"), 2);
+        assert_eq!(edit_distance("", "abc"), 3);
     }
 
     #[test]

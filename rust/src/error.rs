@@ -25,6 +25,10 @@ pub enum Error {
     /// Configuration parse/validation errors.
     Config(String),
 
+    /// Runtime faults inside a vectorized compute kernel (e.g. int64
+    /// division by zero in the expression evaluator).
+    Compute(String),
+
     Io(std::io::Error),
 
     /// Errors bubbling out of the `xla` crate.
@@ -41,6 +45,7 @@ impl std::fmt::Display for Error {
             Error::TaskFailed(m) => write!(f, "task failed: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Compute(m) => write!(f, "compute error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
         }

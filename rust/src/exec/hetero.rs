@@ -249,12 +249,12 @@ mod tests {
     #[test]
     fn plan_through_all_engines_agrees() {
         use crate::df::GenSpec;
-        use crate::ops::local::CmpOp;
+        use crate::plan::expr::{col, lit};
 
         let plan = || {
             Plan::generate(2, GenSpec::uniform(200, 128, 0xE71))
-                .filter(1, CmpOp::Ge, 0.5)
-                .sort(0)
+                .filter(col("val").ge(lit(0.5)))
+                .sort("key")
                 .collect()
         };
         let machine = MachineSpec::local(4);

@@ -37,17 +37,25 @@
 //! ```
 //!
 //! Dataframe *pipelines* are written as logical [`plan::Plan`]s: start
-//! from a source, chain operators fluently, and run the plan on any
-//! engine — it lowers to a task DAG with zero-copy table handoff between
-//! stages (a join consumes **both** sides from its upstream tasks):
+//! from a source, chain operators fluently — predicates and derived
+//! columns are typed [`plan::expr::Expr`] trees, keys are column names —
+//! and run the plan on any engine. Lowering validates the plan against
+//! the propagated schemas, applies the [`plan::optimize`] passes (filter
+//! fusion, predicate pushdown, projection pruning), and emits a task DAG
+//! with zero-copy table handoff between stages (a join consumes **both**
+//! sides from its upstream tasks):
 //!
 //! ```no_run
 //! use radical_cylon::prelude::*;
 //!
 //! let users = Plan::generate(2, GenSpec::uniform(100_000, 50_000, 7))
-//!     .filter(1, CmpOp::Ge, 0.5);
+//!     .filter(col("val").ge(lit(0.5)).and(col("key").ne(lit(0))));
 //! let events = Plan::generate(2, GenSpec::uniform(100_000, 50_000, 8));
-//! let report = users.join(events, 0, 0).sort(0).collect();
+//! let report = users
+//!     .join(events, "key", "key")
+//!     .derive("boosted", col("val") * lit(2.0))
+//!     .sort("key")
+//!     .collect();
 //!
 //! let engine = HeterogeneousEngine::new(MachineSpec::local(4), KernelBackend::Native, 4);
 //! let run = engine.run_plan(&report).unwrap();
@@ -82,7 +90,9 @@ pub mod prelude {
     pub use crate::cluster::{MachineSpec, ResourceManager};
     pub use crate::comm::{CommWorld, Communicator, NetModel};
     pub use crate::config::ExperimentConfig;
-    pub use crate::df::{ChunkedTable, Column, DataType, GenSpec, Schema, Table};
+    pub use crate::df::{
+        ChunkedTable, ColRef, Column, DataType, GenSpec, Schema, Table,
+    };
     pub use crate::error::{Error, Result};
     pub use crate::exec::{
         BareMetalEngine, BatchEngine, Engine, EngineKind, HeterogeneousEngine,
@@ -96,6 +106,7 @@ pub mod prelude {
         DataDist, PilotDescription, Session, TaskDescription, TaskState,
     };
     pub use crate::pipeline::{Pipeline, PipelineRun};
+    pub use crate::plan::expr::{col, idx, lit, Expr};
     pub use crate::plan::{LoweredPlan, Plan};
     pub use crate::raptor::{ReadyPolicy, SchedPolicy};
     pub use crate::runtime::ArtifactStore;

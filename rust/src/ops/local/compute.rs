@@ -1,11 +1,46 @@
-//! Vectorized column compute: arithmetic, comparisons, casts, and the
-//! zero-copy [`filter_view`] — the element-wise operator family of Cylon's
-//! local-operator set (Fig 1).
+//! Vectorized column compute: arithmetic, comparisons, casts, the
+//! zero-copy [`filter_view`], and the [`Expr`](crate::plan::expr::Expr)
+//! evaluator — the element-wise operator family of Cylon's local-operator
+//! set (Fig 1).
+//!
+//! # Expression evaluation
+//!
+//! [`eval_expr`] walks a typed [`Expr`] bottom-up over one table chunk,
+//! producing flat value buffers (one kernel dispatch per AST node, never
+//! per row): column leaves are O(1) `Arc` clones, literals stay scalars
+//! until a parent needs a buffer, and every arithmetic/comparison node
+//! runs one tight loop over `&[i64]`/`&[f64]` slices with scalar
+//! operands broadcast inside the loop. [`filter_view_expr`] applies a
+//! boolean expression chunk-at-a-time over a
+//! [`ChunkedTable`], keeping the kept rows as zero-copy windows.
+//!
+//! ## Numeric semantics
+//!
+//! * `Int64 op Int64` stays `Int64`; any `Float64` operand promotes the
+//!   operation to `Float64` (int inputs are cast once per chunk, not per
+//!   row).
+//! * Int64 arithmetic wraps on overflow (`wrapping_add` family — the
+//!   null-free analogue of Arrow's unchecked kernels); **division by
+//!   zero is a real error** ([`Error::Compute`]), not a silent `0`.
+//! * Float64 arithmetic follows IEEE 754: `x / 0.0` is `±inf`,
+//!   `0.0 / 0.0` is `NaN`, and no float operation errors.
+//! * Float comparisons are IEEE partial-order: every comparison with
+//!   `NaN` is `false` except `!=`, which is `true`.
+//! * `and`/`or` evaluate **eagerly** on both sides, except that a side
+//!   is skipped when the other is uniformly decisive (an all-false left
+//!   mask short-circuits `and`; all-true short-circuits `or`). Do not
+//!   rely on them to guard the other side against evaluation errors such
+//!   as division by zero.
 
 use crate::df::{ChunkedTable, Column, DataType, Schema, Table};
 use crate::error::{Error, Result};
+use crate::plan::expr::{Expr, Scalar};
 
 /// Binary arithmetic over numeric columns (elementwise).
+///
+/// Int64 uses wrapping semantics on overflow; Int64 division by zero is
+/// [`Error::Compute`]. Float64 follows IEEE 754 (`±inf`/`NaN`, never an
+/// error) — see the [module docs](self).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BinOp {
     Add,
@@ -23,16 +58,21 @@ impl BinOp {
             BinOp::Div => a / b,
         }
     }
-    fn i64(self, a: i64, b: i64) -> i64 {
+
+    fn i64(self, a: i64, b: i64) -> Result<i64> {
         match self {
-            BinOp::Add => a.wrapping_add(b),
-            BinOp::Sub => a.wrapping_sub(b),
-            BinOp::Mul => a.wrapping_mul(b),
+            BinOp::Add => Ok(a.wrapping_add(b)),
+            BinOp::Sub => Ok(a.wrapping_sub(b)),
+            BinOp::Mul => Ok(a.wrapping_mul(b)),
             BinOp::Div => {
                 if b == 0 {
-                    0
+                    Err(Error::Compute(format!(
+                        "int64 division by zero ({a} / 0)"
+                    )))
                 } else {
-                    a / b
+                    // wrapping_div: i64::MIN / -1 wraps instead of
+                    // panicking, matching the wrapping add/sub/mul family.
+                    Ok(a.wrapping_div(b))
                 }
             }
         }
@@ -62,16 +102,35 @@ impl CmpOp {
             CmpOp::Ge => o != Less,
         }
     }
+
+    /// IEEE partial-order float comparison: every comparison with `NaN`
+    /// is `false` except [`CmpOp::Ne`], which is `true`.
+    fn f64(self, a: f64, b: f64) -> bool {
+        match self {
+            CmpOp::Eq => a == b,
+            CmpOp::Ne => a != b,
+            CmpOp::Lt => a < b,
+            CmpOp::Le => a <= b,
+            CmpOp::Gt => a > b,
+            CmpOp::Ge => a >= b,
+        }
+    }
 }
 
 /// Elementwise `lhs op rhs` over two same-typed numeric columns.
+///
+/// Int64 division by zero is [`Error::Compute`]; the float path follows
+/// IEEE 754 and never errors (see the [module docs](self)).
 pub fn binary_op(lhs: &Column, rhs: &Column, op: BinOp) -> Result<Column> {
     if lhs.len() != rhs.len() {
         return Err(Error::DataFrame("binary_op length mismatch".into()));
     }
     match (lhs, rhs) {
         (Column::Int64(a), Column::Int64(b)) => Ok(Column::from_i64(
-            a.iter().zip(b.iter()).map(|(&x, &y)| op.i64(x, y)).collect(),
+            a.iter()
+                .zip(b.iter())
+                .map(|(&x, &y)| op.i64(x, y))
+                .collect::<Result<Vec<i64>>>()?,
         )),
         (Column::Float64(a), Column::Float64(b)) => Ok(Column::from_f64(
             a.iter().zip(b.iter()).map(|(&x, &y)| op.f64(x, y)).collect(),
@@ -84,11 +143,14 @@ pub fn binary_op(lhs: &Column, rhs: &Column, op: BinOp) -> Result<Column> {
     }
 }
 
-/// Elementwise `col op scalar` (int64 scalar broadcast).
+/// Elementwise `col op scalar` (int64 scalar broadcast). Division by
+/// zero is [`Error::Compute`].
 pub fn scalar_op_i64(col: &Column, scalar: i64, op: BinOp) -> Result<Column> {
     match col {
         Column::Int64(a) => Ok(Column::from_i64(
-            a.iter().map(|&x| op.i64(x, scalar)).collect(),
+            a.iter()
+                .map(|&x| op.i64(x, scalar))
+                .collect::<Result<Vec<i64>>>()?,
         )),
         other => Err(Error::DataFrame(format!(
             "scalar_op_i64 on {}",
@@ -99,6 +161,13 @@ pub fn scalar_op_i64(col: &Column, scalar: i64, op: BinOp) -> Result<Column> {
 
 /// Compare a column against an int64/float64 scalar, producing a mask that
 /// feeds `Table::filter`.
+///
+/// Legacy kernel (pre-`Expr`): floats compare via
+/// `partial_cmp(..).unwrap_or(Greater)`, so a `NaN` cell counts as
+/// *greater than* any scalar — unlike the IEEE semantics of the
+/// expression evaluator ([`eval_expr`]), where every `NaN` comparison
+/// except `!=` is `false`. Kept for the scalar-filter shim and existing
+/// callers; new code should build an `Expr`.
 pub fn compare_scalar(col: &Column, scalar: f64, op: CmpOp) -> Result<Vec<bool>> {
     match col {
         Column::Int64(v) => Ok(v
@@ -139,6 +208,388 @@ pub fn cast(col: &Column, to: DataType) -> Result<Column> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Expression evaluator
+// ---------------------------------------------------------------------------
+
+/// One evaluated sub-expression: a column view or a still-unbroadcast
+/// scalar (literals and scalar folds stay scalar until a parent kernel
+/// needs elementwise access, so `col("a") * lit(2)` runs one
+/// column-times-constant loop, not a constant-column materialization).
+#[derive(Clone, Debug)]
+enum Evaluated {
+    Col(Column),
+    I64(i64),
+    F64(f64),
+    Bool(bool),
+}
+
+impl Evaluated {
+    fn type_name(&self) -> String {
+        match self {
+            Evaluated::Col(c) => c.dtype().to_string(),
+            Evaluated::I64(_) => "int64".into(),
+            Evaluated::F64(_) => "float64".into(),
+            Evaluated::Bool(_) => "bool".into(),
+        }
+    }
+
+    fn is_int(&self) -> bool {
+        matches!(self, Evaluated::I64(_))
+            || matches!(self, Evaluated::Col(c) if c.dtype() == DataType::Int64)
+    }
+
+    fn num_scalar(&self) -> Option<Scalar> {
+        match self {
+            Evaluated::I64(k) => Some(Scalar::Int64(*k)),
+            Evaluated::F64(k) => Some(Scalar::Float64(*k)),
+            _ => None,
+        }
+    }
+}
+
+/// Int64 operand: a flat slice or a broadcast constant.
+enum SrcI<'a> {
+    V(&'a [i64]),
+    K(i64),
+}
+
+/// Float64 operand: a flat slice or a broadcast constant.
+enum SrcF<'a> {
+    V(&'a [f64]),
+    K(f64),
+}
+
+/// Bool operand: a flat mask or a broadcast constant.
+enum SrcB<'a> {
+    M(&'a [bool]),
+    K(bool),
+}
+
+fn i64_src(v: &Evaluated) -> Result<SrcI<'_>> {
+    match v {
+        Evaluated::Col(c) => Ok(SrcI::V(c.as_i64()?)),
+        Evaluated::I64(k) => Ok(SrcI::K(*k)),
+        other => Err(Error::Config(format!(
+            "int64 operand required, got {}",
+            other.type_name()
+        ))),
+    }
+}
+
+/// Float64 operand view; an int64 column is cast once per chunk into
+/// `store` (the only materialization the promotion pays).
+fn f64_src<'a>(v: &'a Evaluated, store: &'a mut Option<Column>) -> Result<SrcF<'a>> {
+    match v {
+        Evaluated::Col(c) => match c.dtype() {
+            DataType::Float64 => Ok(SrcF::V(c.as_f64()?)),
+            DataType::Int64 => {
+                *store = Some(cast(c, DataType::Float64)?);
+                Ok(SrcF::V(store.as_ref().expect("just stored").as_f64()?))
+            }
+            other => Err(Error::Config(format!(
+                "numeric operand required, got {other} column"
+            ))),
+        },
+        Evaluated::I64(k) => Ok(SrcF::K(*k as f64)),
+        Evaluated::F64(k) => Ok(SrcF::K(*k)),
+        Evaluated::Bool(_) => {
+            Err(Error::Config("numeric operand required, got bool".into()))
+        }
+    }
+}
+
+fn bool_src(v: &Evaluated) -> Result<SrcB<'_>> {
+    match v {
+        Evaluated::Col(c) => Ok(SrcB::M(c.as_bool().map_err(|_| {
+            Error::Config(format!(
+                "bool operand required, got {} column",
+                c.dtype()
+            ))
+        })?)),
+        Evaluated::Bool(k) => Ok(SrcB::K(*k)),
+        other => Err(Error::Config(format!(
+            "bool operand required, got {}",
+            other.type_name()
+        ))),
+    }
+}
+
+/// `f` over two int64 operands, monomorphized per operand shape so the
+/// inner loops stay branch-free.
+fn map2_i64<F: Fn(i64, i64) -> Result<i64>>(
+    a: SrcI<'_>,
+    b: SrcI<'_>,
+    n: usize,
+    f: F,
+) -> Result<Vec<i64>> {
+    match (a, b) {
+        (SrcI::V(x), SrcI::V(y)) => {
+            x.iter().zip(y).map(|(&p, &q)| f(p, q)).collect()
+        }
+        (SrcI::V(x), SrcI::K(q)) => x.iter().map(|&p| f(p, q)).collect(),
+        (SrcI::K(p), SrcI::V(y)) => y.iter().map(|&q| f(p, q)).collect(),
+        (SrcI::K(p), SrcI::K(q)) => {
+            let v = f(p, q)?;
+            Ok(vec![v; n])
+        }
+    }
+}
+
+fn map2_f64<F: Fn(f64, f64) -> f64>(
+    a: SrcF<'_>,
+    b: SrcF<'_>,
+    n: usize,
+    f: F,
+) -> Vec<f64> {
+    match (a, b) {
+        (SrcF::V(x), SrcF::V(y)) => {
+            x.iter().zip(y).map(|(&p, &q)| f(p, q)).collect()
+        }
+        (SrcF::V(x), SrcF::K(q)) => x.iter().map(|&p| f(p, q)).collect(),
+        (SrcF::K(p), SrcF::V(y)) => y.iter().map(|&q| f(p, q)).collect(),
+        (SrcF::K(p), SrcF::K(q)) => vec![f(p, q); n],
+    }
+}
+
+fn cmp2_i64(op: CmpOp, a: SrcI<'_>, b: SrcI<'_>, n: usize) -> Vec<bool> {
+    match (a, b) {
+        (SrcI::V(x), SrcI::V(y)) => x
+            .iter()
+            .zip(y)
+            .map(|(&p, &q)| op.ord(p.cmp(&q)))
+            .collect(),
+        (SrcI::V(x), SrcI::K(q)) => {
+            x.iter().map(|&p| op.ord(p.cmp(&q))).collect()
+        }
+        (SrcI::K(p), SrcI::V(y)) => {
+            y.iter().map(|&q| op.ord(p.cmp(&q))).collect()
+        }
+        (SrcI::K(p), SrcI::K(q)) => vec![op.ord(p.cmp(&q)); n],
+    }
+}
+
+fn cmp2_f64(op: CmpOp, a: SrcF<'_>, b: SrcF<'_>, n: usize) -> Vec<bool> {
+    match (a, b) {
+        (SrcF::V(x), SrcF::V(y)) => {
+            x.iter().zip(y).map(|(&p, &q)| op.f64(p, q)).collect()
+        }
+        (SrcF::V(x), SrcF::K(q)) => x.iter().map(|&p| op.f64(p, q)).collect(),
+        (SrcF::K(p), SrcF::V(y)) => y.iter().map(|&q| op.f64(p, q)).collect(),
+        (SrcF::K(p), SrcF::K(q)) => vec![op.f64(p, q); n],
+    }
+}
+
+fn eval_arith(op: BinOp, l: &Evaluated, r: &Evaluated, n: usize) -> Result<Evaluated> {
+    // Scalar ⊕ scalar folds stay scalar (broadcast deferred to the top).
+    if let (Some(a), Some(b)) = (l.num_scalar(), r.num_scalar()) {
+        return match (a, b) {
+            (Scalar::Int64(a), Scalar::Int64(b)) => {
+                op.i64(a, b).map(Evaluated::I64)
+            }
+            (a, b) => {
+                let (a, b) = (scalar_f64(a), scalar_f64(b));
+                Ok(Evaluated::F64(op.f64(a, b)))
+            }
+        };
+    }
+    if l.is_int() && r.is_int() {
+        let (a, b) = (i64_src(l)?, i64_src(r)?);
+        let out = map2_i64(a, b, n, |x, y| op.i64(x, y))?;
+        Ok(Evaluated::Col(Column::from_i64(out)))
+    } else {
+        let (mut ls, mut rs) = (None, None);
+        let a = f64_src(l, &mut ls)?;
+        let b = f64_src(r, &mut rs)?;
+        Ok(Evaluated::Col(Column::from_f64(map2_f64(a, b, n, |x, y| {
+            op.f64(x, y)
+        }))))
+    }
+}
+
+fn scalar_f64(s: Scalar) -> f64 {
+    match s {
+        Scalar::Int64(v) => v as f64,
+        Scalar::Float64(v) => v,
+        Scalar::Bool(v) => v as u8 as f64,
+    }
+}
+
+fn eval_cmp(op: CmpOp, l: &Evaluated, r: &Evaluated, n: usize) -> Result<Evaluated> {
+    if let (Some(a), Some(b)) = (l.num_scalar(), r.num_scalar()) {
+        return Ok(match (a, b) {
+            (Scalar::Int64(a), Scalar::Int64(b)) => {
+                Evaluated::Bool(op.ord(a.cmp(&b)))
+            }
+            (a, b) => Evaluated::Bool(op.f64(scalar_f64(a), scalar_f64(b))),
+        });
+    }
+    let mask = if l.is_int() && r.is_int() {
+        cmp2_i64(op, i64_src(l)?, i64_src(r)?, n)
+    } else {
+        let (mut ls, mut rs) = (None, None);
+        let a = f64_src(l, &mut ls)?;
+        let b = f64_src(r, &mut rs)?;
+        cmp2_f64(op, a, b, n)
+    };
+    Ok(Evaluated::Col(Column::from_bool(mask)))
+}
+
+fn eval_node(t: &Table, e: &Expr) -> Result<Evaluated> {
+    let n = t.num_rows();
+    match e {
+        Expr::Col(name) => match t.schema().index_of(name) {
+            Ok(i) => Ok(Evaluated::Col(t.column(i).clone())),
+            Err(err) => Err(Error::Config(format!("in expression: {err}"))),
+        },
+        Expr::Idx(i) if *i < t.num_columns() => {
+            Ok(Evaluated::Col(t.column(*i).clone()))
+        }
+        Expr::Idx(i) => Err(Error::Config(format!(
+            "in expression: column index {i} out of bounds for schema {}",
+            t.schema()
+        ))),
+        Expr::Lit(Scalar::Int64(v)) => Ok(Evaluated::I64(*v)),
+        Expr::Lit(Scalar::Float64(v)) => Ok(Evaluated::F64(*v)),
+        Expr::Lit(Scalar::Bool(v)) => Ok(Evaluated::Bool(*v)),
+        Expr::Bin { op, lhs, rhs } => {
+            let (l, r) = (eval_node(t, lhs)?, eval_node(t, rhs)?);
+            eval_arith(*op, &l, &r, n)
+        }
+        Expr::Cmp { op, lhs, rhs } => {
+            let (l, r) = (eval_node(t, lhs)?, eval_node(t, rhs)?);
+            eval_cmp(*op, &l, &r, n)
+        }
+        Expr::And(p, q) => {
+            let l = eval_node(t, p)?;
+            match bool_src(&l)? {
+                SrcB::K(false) => return Ok(Evaluated::Bool(false)),
+                SrcB::K(true) => {
+                    let r = eval_node(t, q)?;
+                    bool_src(&r)?; // type check
+                    return Ok(r);
+                }
+                SrcB::M(m) => {
+                    // Uniformly-false left mask short-circuits the right
+                    // side entirely (see the module docs' caveat).
+                    if !m.iter().any(|&x| x) {
+                        return Ok(l.clone());
+                    }
+                }
+            }
+            let r = eval_node(t, q)?;
+            combine_bool(&l, &r, false)
+        }
+        Expr::Or(p, q) => {
+            let l = eval_node(t, p)?;
+            match bool_src(&l)? {
+                SrcB::K(true) => return Ok(Evaluated::Bool(true)),
+                SrcB::K(false) => {
+                    let r = eval_node(t, q)?;
+                    bool_src(&r)?; // type check
+                    return Ok(r);
+                }
+                SrcB::M(m) => {
+                    // Uniformly-true left mask short-circuits the right.
+                    if m.iter().all(|&x| x) {
+                        return Ok(l.clone());
+                    }
+                }
+            }
+            let r = eval_node(t, q)?;
+            combine_bool(&l, &r, true)
+        }
+        Expr::Not(p) => {
+            let v = eval_node(t, p)?;
+            match bool_src(&v)? {
+                SrcB::K(k) => Ok(Evaluated::Bool(!k)),
+                SrcB::M(m) => Ok(Evaluated::Col(Column::from_bool(
+                    m.iter().map(|&x| !x).collect(),
+                ))),
+            }
+        }
+    }
+}
+
+/// Combine two bool operands elementwise (`or = false` → AND, `true` →
+/// OR). The left side is always a mask here (scalar lefts short-circuit
+/// in the caller).
+fn combine_bool(l: &Evaluated, r: &Evaluated, or: bool) -> Result<Evaluated> {
+    let lm = match bool_src(l)? {
+        SrcB::M(m) => m,
+        SrcB::K(_) => unreachable!("scalar left handled by caller"),
+    };
+    let out: Vec<bool> = match bool_src(r)? {
+        // mask ∧ true = mask; mask ∨ false = mask.
+        SrcB::K(k) if k == or => return Ok(Evaluated::Bool(or)),
+        SrcB::K(_) => return Ok(l.clone()),
+        SrcB::M(rm) => {
+            if or {
+                lm.iter().zip(rm).map(|(&x, &y)| x || y).collect()
+            } else {
+                lm.iter().zip(rm).map(|(&x, &y)| x && y).collect()
+            }
+        }
+    };
+    Ok(Evaluated::Col(Column::from_bool(out)))
+}
+
+/// Evaluate `expr` over one table chunk into a flat column (scalar
+/// results broadcast to the chunk's row count). Column references
+/// resolve against `t.schema()`; see the [module docs](self) for the
+/// numeric semantics.
+pub fn eval_expr(t: &Table, expr: &Expr) -> Result<Column> {
+    let n = t.num_rows();
+    Ok(match eval_node(t, expr)? {
+        Evaluated::Col(c) => c,
+        Evaluated::I64(k) => Column::from_i64(vec![k; n]),
+        Evaluated::F64(k) => Column::from_f64(vec![k; n]),
+        Evaluated::Bool(k) => Column::from_bool(vec![k; n]),
+    })
+}
+
+/// Evaluate a boolean `expr` into a flat mask column (`Column::Bool`,
+/// one buffer, no copies beyond the evaluation itself). Non-bool
+/// expressions are an [`Error::Config`]. This is the filter hot path;
+/// [`eval_predicate`] is the `Vec<bool>` convenience wrapper.
+pub fn eval_mask(t: &Table, expr: &Expr) -> Result<Column> {
+    match eval_node(t, expr)? {
+        Evaluated::Bool(k) => Ok(Column::from_bool(vec![k; t.num_rows()])),
+        Evaluated::Col(c @ Column::Bool(_)) => Ok(c),
+        Evaluated::Col(other) => Err(Error::Config(format!(
+            "filter predicate must be bool, got {} (wrap it in a \
+             comparison, e.g. .gt(lit(0)))",
+            other.dtype()
+        ))),
+        other => Err(Error::Config(format!(
+            "filter predicate must be bool, got scalar {}",
+            other.type_name()
+        ))),
+    }
+}
+
+/// [`eval_mask`] copied out into an owned `Vec<bool>` — convenient for
+/// oracles and one-off callers; the filter operators borrow the mask
+/// column directly instead.
+pub fn eval_predicate(t: &Table, expr: &Expr) -> Result<Vec<bool>> {
+    Ok(eval_mask(t, expr)?.as_bool()?.to_vec())
+}
+
+/// Chunk-at-a-time boolean filter over a [`ChunkedTable`]: each chunk
+/// evaluates the predicate into a flat mask and keeps its matching rows
+/// as maximal zero-copy runs ([`filter_view`]) — no chunk is ever
+/// concatenated, so the filter materializes only the masks.
+pub fn filter_view_expr(ct: &ChunkedTable, pred: &Expr) -> Result<ChunkedTable> {
+    let mut out = ChunkedTable::empty(ct.schema().clone());
+    for chunk in ct.chunks() {
+        let mask = eval_mask(chunk, pred)?;
+        for run in filter_view(chunk, mask.as_bool()?)?.into_chunks() {
+            out.push(run)?;
+        }
+    }
+    Ok(out)
+}
+
 /// Zero-copy filter: keep rows where `mask` is true, returned as a
 /// [`ChunkedTable`] of **maximal contiguous runs** of kept rows — every
 /// chunk is an O(1) window ([`Table::slice`]) over `t`'s buffers, so the
@@ -172,13 +623,22 @@ pub fn filter_view(t: &Table, mask: &[bool]) -> Result<ChunkedTable> {
     Ok(out)
 }
 
-/// Append a derived column to a table under `name`.
+/// Append a derived column to a table under `name`. Rejects names that
+/// already exist: duplicate columns would make every later name lookup
+/// silently resolve to the original.
 pub fn with_column(t: &Table, name: &str, col: Column) -> Result<Table> {
     if col.len() != t.num_rows() {
         return Err(Error::DataFrame(format!(
             "with_column length {} != {}",
             col.len(),
             t.num_rows()
+        )));
+    }
+    if t.schema().index_of(name).is_ok() {
+        return Err(Error::DataFrame(format!(
+            "with_column '{name}' would shadow an existing column of \
+             schema {}",
+            t.schema()
         )));
     }
     let mut fields: Vec<_> = t.schema().fields().to_vec();
@@ -193,6 +653,7 @@ mod tests {
     use super::*;
     use crate::df::{DataType, Schema};
     use crate::metrics::mem;
+    use crate::plan::expr::{col, idx, lit};
 
     fn table() -> Table {
         Table::new(
@@ -218,11 +679,17 @@ mod tests {
             Column::from_i64(vec![3, 5])
         );
         let z = Column::from_i64(vec![0, 0]);
-        assert_eq!(
-            binary_op(&a, &z, BinOp::Div).unwrap(),
-            Column::from_i64(vec![0, 0]) // div-by-zero -> 0 (null-free model)
-        );
+        let err = binary_op(&a, &z, BinOp::Div).unwrap_err();
+        assert!(matches!(err, Error::Compute(_)), "{err}");
+        assert!(err.to_string().contains("division by zero"), "{err}");
         assert!(binary_op(&a, &Column::from_f64(vec![1.0, 2.0]), BinOp::Add).is_err());
+        // Floats follow IEEE: div-by-zero is inf, not an error.
+        let f = Column::from_f64(vec![1.0, 0.0]);
+        let fz = Column::from_f64(vec![0.0, 0.0]);
+        let q = binary_op(&f, &fz, BinOp::Div).unwrap();
+        let q = q.as_f64().unwrap();
+        assert_eq!(q[0], f64::INFINITY);
+        assert!(q[1].is_nan());
     }
 
     #[test]
@@ -230,6 +697,10 @@ mod tests {
         let t = table();
         let doubled = scalar_op_i64(t.column(0), 2, BinOp::Mul).unwrap();
         assert_eq!(doubled, Column::from_i64(vec![2, 4, 6, 8]));
+        assert!(matches!(
+            scalar_op_i64(t.column(0), 0, BinOp::Div).unwrap_err(),
+            Error::Compute(_)
+        ));
         let mask = compare_scalar(t.column(1), 2.0, CmpOp::Gt).unwrap();
         assert_eq!(mask, vec![false, false, true, true]);
         let filtered = t.filter(&mask).unwrap();
@@ -245,6 +716,146 @@ mod tests {
         let b = cast(&Column::from_bool(vec![true, false]), DataType::Int64).unwrap();
         assert_eq!(b, Column::from_i64(vec![1, 0]));
         assert!(cast(&Column::from_utf8(&["x"]), DataType::Int64).is_err());
+    }
+
+    #[test]
+    fn eval_arithmetic_and_promotion() {
+        let t = table();
+        // Pure int64 stays int64.
+        let e = col("k") * lit(2) + lit(1);
+        assert_eq!(
+            eval_expr(&t, &e).unwrap(),
+            Column::from_i64(vec![3, 5, 7, 9])
+        );
+        // Mixed int/float promotes to float64.
+        let e = col("k") + col("v");
+        assert_eq!(
+            eval_expr(&t, &e).unwrap(),
+            Column::from_f64(vec![1.5, 3.5, 5.5, 7.5])
+        );
+        // Scalar-scalar folds stay scalar until the final broadcast.
+        let e = lit(2) * lit(3) + col("k");
+        assert_eq!(
+            eval_expr(&t, &e).unwrap(),
+            Column::from_i64(vec![7, 8, 9, 10])
+        );
+        // A scalar-only expression broadcasts to the chunk length.
+        let e = lit(2) + lit(3);
+        assert_eq!(eval_expr(&t, &e).unwrap(), Column::from_i64(vec![5; 4]));
+        // Positional addressing works (legacy shim path).
+        assert_eq!(eval_expr(&t, &idx(0)).unwrap(), *t.column(0));
+    }
+
+    #[test]
+    fn eval_comparisons_and_bools() {
+        let t = table();
+        let mask = eval_predicate(&t, &col("k").ge(lit(3))).unwrap();
+        assert_eq!(mask, vec![false, false, true, true]);
+        // Mixed int/float comparison goes through f64.
+        let mask = eval_predicate(&t, &col("k").gt(col("v"))).unwrap();
+        assert_eq!(mask, vec![true, true, true, true]);
+        let e = col("k").ge(lit(2)).and(col("v").lt(lit(3.0)));
+        assert_eq!(
+            eval_predicate(&t, &e).unwrap(),
+            vec![false, true, true, false]
+        );
+        let e = col("k").le(lit(1)).or(col("k").ge(lit(4)));
+        assert_eq!(
+            eval_predicate(&t, &e).unwrap(),
+            vec![true, false, false, true]
+        );
+        let e = !col("k").ge(lit(2));
+        assert_eq!(
+            eval_predicate(&t, &e).unwrap(),
+            vec![true, false, false, false]
+        );
+        // Scalar predicates broadcast.
+        assert_eq!(eval_predicate(&t, &lit(true)).unwrap(), vec![true; 4]);
+        assert_eq!(
+            eval_predicate(&t, &lit(1).gt(lit(2))).unwrap(),
+            vec![false; 4]
+        );
+    }
+
+    #[test]
+    fn eval_short_circuits_are_value_transparent() {
+        let t = table();
+        // All-false left mask: right side skipped, result all false.
+        let e = col("k").gt(lit(100)).and(col("v").ge(lit(0.0)));
+        assert_eq!(eval_predicate(&t, &e).unwrap(), vec![false; 4]);
+        // All-true left mask on or: result all true.
+        let e = col("k").ge(lit(0)).or(col("v").gt(lit(100.0)));
+        assert_eq!(eval_predicate(&t, &e).unwrap(), vec![true; 4]);
+        // Scalar-true left keeps the right mask unchanged.
+        let e = lit(true).and(col("k").ge(lit(3)));
+        assert_eq!(
+            eval_predicate(&t, &e).unwrap(),
+            vec![false, false, true, true]
+        );
+    }
+
+    #[test]
+    fn eval_div_by_zero_and_nan() {
+        let t = table();
+        // Int64 division by zero is a Compute error...
+        let err = eval_expr(&t, &(col("k") / lit(0))).unwrap_err();
+        assert!(matches!(err, Error::Compute(_)), "{err}");
+        // ...including via a zero column cell.
+        let z = Table::new(
+            Schema::of(&[("a", DataType::Int64), ("b", DataType::Int64)]),
+            vec![
+                Column::from_i64(vec![10, 20]),
+                Column::from_i64(vec![2, 0]),
+            ],
+        )
+        .unwrap();
+        assert!(eval_expr(&z, &(col("a") / col("b"))).is_err());
+        // Float division by zero is IEEE inf/NaN, not an error.
+        let q = eval_expr(&t, &(col("v") / lit(0.0))).unwrap();
+        assert!(q.as_f64().unwrap().iter().all(|x| x.is_infinite()));
+        let nan = eval_expr(&t, &(lit(0.0) / lit(0.0))).unwrap();
+        assert!(nan.as_f64().unwrap().iter().all(|x| x.is_nan()));
+        // NaN comparisons: false except Ne.
+        let withnan = with_column(&t, "n", nan).unwrap();
+        assert_eq!(
+            eval_predicate(&withnan, &col("n").ge(lit(0.0))).unwrap(),
+            vec![false; 4]
+        );
+        assert_eq!(
+            eval_predicate(&withnan, &col("n").ne(col("n"))).unwrap(),
+            vec![true; 4]
+        );
+    }
+
+    #[test]
+    fn eval_type_errors_are_config() {
+        let t = table();
+        let err = eval_expr(&t, &col("nope")).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        assert!(eval_expr(&t, &(col("k") + lit(true))).is_err());
+        assert!(eval_predicate(&t, &col("k")).is_err());
+        assert!(eval_predicate(&t, &lit(1)).is_err());
+        assert!(eval_expr(&t, &col("k").and(lit(true))).is_err());
+        assert!(eval_expr(&t, &idx(9)).is_err());
+    }
+
+    #[test]
+    fn filter_view_expr_is_chunk_at_a_time_zero_copy() {
+        let t = table();
+        let ct = ChunkedTable::from_tables(vec![t.slice(0, 2), t.slice(2, 2)]).unwrap();
+        let before = mem::thread();
+        let out = filter_view_expr(&ct, &col("k").ge(lit(2)).and(col("v").lt(lit(3.0))))
+            .unwrap();
+        // Only the masks materialize; every kept row is a window.
+        assert_eq!(out.num_rows(), 2);
+        assert!(out.chunks()[0].column(0).shares_buffer(t.column(0)));
+        let delta = mem::thread().since(before);
+        assert!(
+            delta.materialized <= 64,
+            "only mask-sized scratch may materialize, got {}",
+            delta.materialized
+        );
+        assert_eq!(out.compact().column(0).as_i64().unwrap(), &[2, 3]);
     }
 
     #[test]
@@ -290,19 +901,16 @@ mod tests {
     #[test]
     fn derived_column() {
         let t = table();
-        let sum = binary_op(
-            &cast(t.column(0), DataType::Float64).unwrap(),
-            t.column(1),
-            BinOp::Add,
-        )
-        .unwrap();
+        let sum = eval_expr(&t, &(col("k") + col("v"))).unwrap();
         let t2 = with_column(&t, "k_plus_v", sum).unwrap();
         assert_eq!(t2.num_columns(), 3);
         assert_eq!(t2.schema().field(2).name, "k_plus_v");
-        assert_eq!(
-            t2.column(2).as_f64().unwrap(),
-            &[1.5, 3.5, 5.5, 7.5]
-        );
+        assert_eq!(t2.column(2).as_f64().unwrap(), &[1.5, 3.5, 5.5, 7.5]);
         assert!(with_column(&t, "bad", Column::from_i64(vec![1])).is_err());
+        // Shadowing an existing column is rejected, not silently accepted.
+        let err = with_column(&t, "v", Column::from_i64(vec![0; 4]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("shadow"), "{err}");
     }
 }

@@ -7,8 +7,8 @@ mod sort;
 mod unique;
 
 pub use compute::{
-    binary_op, cast, compare_scalar, filter_view, scalar_op_i64, with_column,
-    BinOp, CmpOp,
+    binary_op, cast, compare_scalar, eval_expr, eval_mask, eval_predicate,
+    filter_view, filter_view_expr, scalar_op_i64, with_column, BinOp, CmpOp,
 };
 pub use groupby::{groupby_agg, groupby_agg_hashmap, AggFn};
 pub use join::{

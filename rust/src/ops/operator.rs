@@ -10,7 +10,7 @@
 //! handles the common scaffolding (gather, stats aggregation) — so a new
 //! operator never touches pilot/raptor internals.
 //!
-//! Seven operators ship built in:
+//! Eight operators ship built in:
 //!
 //! | name       | inputs | kernel |
 //! |------------|--------|--------|
@@ -19,13 +19,18 @@
 //! | `join`     | 2      | [`dist_hash_join`] |
 //! | `sort`     | 1      | [`dist_sort`] (sample-sort) |
 //! | `groupby`  | 1      | [`dist_groupby`] (two-phase) |
-//! | `filter`   | 1      | zero-copy run-sliced [`filter_view`] (rank-local) |
+//! | `filter`   | 1      | [`Expr`] predicate mask + zero-copy run-sliced [`filter_view`] (rank-local) |
 //! | `project`  | 1      | zero-copy [`Table::project`] (rank-local) |
+//! | `derive`   | 1      | vectorized [`eval_expr`], appends one computed column (rank-local) |
 //!
 //! `filter` and `project` are the proof of extensibility: purely local
 //! (embarrassingly parallel, no collective) and **zero-copy** — their
 //! outputs are windows over their inputs, so piping them between pipeline
-//! stages materializes nothing.
+//! stages materializes nothing. `filter` takes a typed boolean
+//! [`Expr`] (`col("val").ge(lit(0.5))`), `derive` materializes a
+//! computed column, and the key arguments of `sort`/`groupby`/`join` are
+//! [`ColRef`]s — names or legacy positional indices — resolved against
+//! the actual input schema at execute time.
 //!
 //! Name-based construction (CLI, INI experiment configs) goes through the
 //! process-wide [`registry`]; [`OperatorRegistry::register`] adds new
@@ -66,13 +71,14 @@ use std::path::PathBuf;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::comm::Communicator;
-use crate::df::{gen_table, read_csv, ChunkedTable, GenSpec, Schema, Table};
+use crate::df::{gen_table, read_csv, ChunkedTable, ColRef, GenSpec, Schema, Table};
 use crate::error::{Error, Result};
 use crate::ops::dist::{dist_groupby, dist_hash_join, dist_sort, KernelBackend};
 use crate::ops::local::{
-    compare_scalar, filter_view, AggFn, CmpOp, JoinType,
+    eval_expr, eval_mask, filter_view, with_column, AggFn, CmpOp, JoinType,
 };
 use crate::pilot::TaskDescription;
+use crate::plan::expr::{col, idx, lit, Expr};
 
 /// Shared handle to an operator instance (parameters included). Cloning a
 /// [`TaskDescription`] clones the handle, not the operator.
@@ -122,17 +128,22 @@ pub trait Operator: std::fmt::Debug + Send + Sync {
     ) -> Result<ChunkedTable>;
 }
 
-/// Distributed hash join of two staged (or generated) inputs.
+/// Distributed hash join of two staged (or generated) inputs. Keys are
+/// [`ColRef`]s resolved against each side's schema at execute time.
 #[derive(Clone, Debug)]
 pub struct JoinOp {
-    pub left_key: usize,
-    pub right_key: usize,
+    pub left_key: ColRef,
+    pub right_key: ColRef,
     pub how: JoinType,
 }
 
 impl Default for JoinOp {
     fn default() -> JoinOp {
-        JoinOp { left_key: 0, right_key: 0, how: JoinType::Inner }
+        JoinOp {
+            left_key: ColRef::Index(0),
+            right_key: ColRef::Index(0),
+            how: JoinType::Inner,
+        }
     }
 }
 
@@ -153,15 +164,20 @@ impl Operator for JoinOp {
         backend: &KernelBackend,
     ) -> Result<ChunkedTable> {
         let [l, r]: [Table; 2] = inputs.try_into().expect("arity checked");
-        dist_hash_join(comm, &l, &r, self.left_key, self.right_key, self.how, backend)
+        // Every rank sees the same schemas, so a resolution failure is
+        // symmetric across the collective.
+        let lk = self.left_key.resolve(l.schema())?;
+        let rk = self.right_key.resolve(r.schema())?;
+        dist_hash_join(comm, &l, &r, lk, rk, self.how, backend)
             .map(ChunkedTable::from)
     }
 }
 
-/// Distributed sample-sort by one int64 column (default: column 0).
+/// Distributed sample-sort by one int64 column (default: column 0). The
+/// key is a [`ColRef`] resolved against the input schema at execute time.
 #[derive(Clone, Debug, Default)]
 pub struct SortOp {
-    pub key: usize,
+    pub key: ColRef,
 }
 
 impl Operator for SortOp {
@@ -180,21 +196,27 @@ impl Operator for SortOp {
         inputs: Vec<Table>,
         backend: &KernelBackend,
     ) -> Result<ChunkedTable> {
-        dist_sort(comm, &inputs[0], self.key, backend).map(ChunkedTable::from)
+        let key = self.key.resolve(inputs[0].schema())?;
+        dist_sort(comm, &inputs[0], key, backend).map(ChunkedTable::from)
     }
 }
 
-/// Distributed two-phase groupby-aggregate.
+/// Distributed two-phase groupby-aggregate. Key/value columns are
+/// [`ColRef`]s resolved against the input schema at execute time.
 #[derive(Clone, Debug)]
 pub struct GroupbyOp {
-    pub key: usize,
-    pub val: usize,
+    pub key: ColRef,
+    pub val: ColRef,
     pub agg: AggFn,
 }
 
 impl Default for GroupbyOp {
     fn default() -> GroupbyOp {
-        GroupbyOp { key: 0, val: 1, agg: AggFn::Sum }
+        GroupbyOp {
+            key: ColRef::Index(0),
+            val: ColRef::Index(1),
+            agg: AggFn::Sum,
+        }
     }
 }
 
@@ -214,24 +236,41 @@ impl Operator for GroupbyOp {
         inputs: Vec<Table>,
         backend: &KernelBackend,
     ) -> Result<ChunkedTable> {
-        dist_groupby(comm, &inputs[0], self.key, self.val, self.agg, backend)
+        let key = self.key.resolve(inputs[0].schema())?;
+        let val = self.val.resolve(inputs[0].schema())?;
+        dist_groupby(comm, &inputs[0], key, val, self.agg, backend)
             .map(ChunkedTable::from)
     }
 }
 
-/// Zero-copy scalar filter: keep rows where `column <cmp> scalar`. Purely
-/// rank-local (no collective) and run-sliced — the output is a
-/// [`ChunkedTable`] of windows over the input, materializing zero bytes.
+/// Zero-copy expression filter: keep rows where the boolean
+/// [`Expr`] holds. Purely rank-local (no collective): the predicate is
+/// evaluated vectorized into a flat mask
+/// ([`eval_mask`]) and the kept rows are run-sliced — the output is
+/// a [`ChunkedTable`] of windows over the input, so beyond the mask the
+/// filter materializes zero bytes.
 #[derive(Clone, Debug)]
 pub struct FilterOp {
-    pub col: usize,
-    pub cmp: CmpOp,
-    pub scalar: f64,
+    pub predicate: Expr,
+}
+
+impl FilterOp {
+    /// Shim for the legacy `(column index, comparison, f64 scalar)`
+    /// filter: builds the equivalent [`Expr`]
+    /// (`idx(col) <cmp> lit(scalar)`). Semantics match the old kernel on
+    /// every NaN-free input; on NaN cells the expression path follows
+    /// IEEE (`NaN < x` etc. are `false`) while the legacy
+    /// [`crate::ops::local::compare_scalar`] treated NaN as greater than
+    /// any scalar.
+    pub fn scalar(column: usize, cmp: CmpOp, scalar: f64) -> FilterOp {
+        FilterOp { predicate: Expr::cmp_op(cmp, idx(column), lit(scalar)) }
+    }
 }
 
 impl Default for FilterOp {
     fn default() -> FilterOp {
-        FilterOp { col: 1, cmp: CmpOp::Ge, scalar: 0.5 }
+        // `val >= 0.5` on the synthetic-workload schema.
+        FilterOp { predicate: col("val").ge(lit(0.5)) }
     }
 }
 
@@ -252,8 +291,46 @@ impl Operator for FilterOp {
         _backend: &KernelBackend,
     ) -> Result<ChunkedTable> {
         let t = &inputs[0];
-        let mask = compare_scalar(t.column(self.col), self.scalar, self.cmp)?;
-        filter_view(t, &mask)
+        let mask = eval_mask(t, &self.predicate)?;
+        filter_view(t, mask.as_bool()?)
+    }
+}
+
+/// Materialize one computed column: evaluates `expr` vectorized
+/// ([`eval_expr`]) and appends the result under `name`. Rank-local; the
+/// existing columns stay `Arc`-shared — only the derived buffer is fresh.
+#[derive(Clone, Debug)]
+pub struct DeriveOp {
+    pub name: String,
+    pub expr: Expr,
+}
+
+impl Default for DeriveOp {
+    fn default() -> DeriveOp {
+        // `val * 2` on the synthetic-workload schema.
+        DeriveOp { name: "derived".into(), expr: col("val") * lit(2.0) }
+    }
+}
+
+impl Operator for DeriveOp {
+    fn name(&self) -> &str {
+        "derive"
+    }
+
+    fn num_inputs(&self) -> usize {
+        1
+    }
+
+    fn execute(
+        &self,
+        _comm: &Communicator,
+        _td: &TaskDescription,
+        inputs: Vec<Table>,
+        _backend: &KernelBackend,
+    ) -> Result<ChunkedTable> {
+        let t = &inputs[0];
+        let derived = eval_expr(t, &self.expr)?;
+        with_column(t, &self.name, derived).map(ChunkedTable::from)
     }
 }
 
@@ -407,6 +484,12 @@ pub fn filter_op() -> OpHandle {
     Arc::new(FilterOp::default())
 }
 
+/// Default [`DeriveOp`] handle (`derived = val * 2` on the synthetic
+/// schema).
+pub fn derive_op() -> OpHandle {
+    Arc::new(DeriveOp::default())
+}
+
 /// Default [`ProjectOp`] handle (identity projection of `key`, `val`).
 pub fn project_op() -> OpHandle {
     Arc::new(ProjectOp::default())
@@ -489,6 +572,7 @@ pub fn registry() -> &'static OperatorRegistry {
         r.register("sort", sort_op);
         r.register("groupby", groupby_op);
         r.register("filter", filter_op);
+        r.register("derive", derive_op);
         r.register("project", project_op);
         r.register("generate", generate_op);
         r.register("union", union_op);
@@ -502,6 +586,7 @@ mod tests {
     use crate::comm::{CommWorld, NetModel};
     use crate::df::{Column, DataType};
     use crate::metrics::mem;
+    use crate::ops::local::compare_scalar;
     use crate::pilot::DataDist;
 
     fn kv_table(keys: Vec<i64>, vals: Vec<f64>) -> Table {
@@ -523,8 +608,10 @@ mod tests {
 
     #[test]
     fn registry_resolves_builtins_and_rejects_unknown() {
-        for name in ["join", "sort", "groupby", "filter", "project", "generate", "union"]
-        {
+        for name in [
+            "join", "sort", "groupby", "filter", "derive", "project",
+            "generate", "union",
+        ] {
             let op = registry().resolve(name).unwrap();
             assert_eq!(op.name(), name);
         }
@@ -561,19 +648,19 @@ mod tests {
     }
 
     #[test]
-    fn filter_on_sliced_view_materializes_zero_bytes() {
+    fn filter_on_sliced_view_materializes_only_the_mask() {
         let base = kv_table((0..100).collect(), (0..100).map(|i| i as f64 / 100.0).collect());
         // A sliced view (rows 20..80) — the handoff shape a piped rank sees.
         let window = base.slice(20, 60);
-        let op = FilterOp { col: 1, cmp: CmpOp::Ge, scalar: 0.5 };
+        let op = FilterOp { predicate: col("val").ge(lit(0.5)) };
         let before = mem::thread();
-        let t = &window;
-        let mask = compare_scalar(t.column(op.col), op.scalar, op.cmp).unwrap();
-        let out = filter_view(t, &mask).unwrap();
-        assert_eq!(
-            mem::thread().since(before).materialized,
-            0,
-            "filter on a sliced view must materialize zero bytes"
+        let mask = eval_mask(&window, &op.predicate).unwrap();
+        let out = filter_view(&window, mask.as_bool().unwrap()).unwrap();
+        let delta = mem::thread().since(before);
+        assert!(
+            delta.materialized <= window.num_rows() as u64,
+            "expression filter may materialize only the bool mask, got {}",
+            delta.materialized
         );
         assert_eq!(out.num_rows(), 30); // vals 0.50..0.79
         assert!(out.chunks()[0].column(0).shares_buffer(base.column(0)));
@@ -581,7 +668,7 @@ mod tests {
 
     #[test]
     fn filter_op_distributed_matches_local_oracle() {
-        let op = FilterOp { col: 1, cmp: CmpOp::Lt, scalar: 0.25 };
+        let op = FilterOp { predicate: col("val").lt(lit(0.25)) };
         let t = kv_table((0..40).collect(), (0..40).map(|i| (i % 4) as f64 / 4.0).collect());
         let oracle = t
             .filter(&compare_scalar(t.column(1), 0.25, CmpOp::Lt).unwrap())
@@ -589,6 +676,70 @@ mod tests {
         let out = run_local(&op, vec![t]);
         assert_eq!(out.num_rows(), oracle.num_rows());
         assert_eq!(out.multiset_fingerprint(), oracle.multiset_fingerprint());
+    }
+
+    #[test]
+    fn filter_scalar_shim_matches_legacy_semantics() {
+        let op = FilterOp::scalar(1, CmpOp::Lt, 0.25);
+        assert_eq!(op.predicate.to_string(), "(#1 < 0.25)");
+        let t = kv_table((0..40).collect(), (0..40).map(|i| (i % 4) as f64 / 4.0).collect());
+        let oracle = t
+            .filter(&compare_scalar(t.column(1), 0.25, CmpOp::Lt).unwrap())
+            .unwrap();
+        let out = run_local(&op, vec![t]);
+        assert_eq!(out.multiset_fingerprint(), oracle.multiset_fingerprint());
+        // Every comparison maps through.
+        for cmp in [CmpOp::Eq, CmpOp::Ne, CmpOp::Lt, CmpOp::Le, CmpOp::Gt, CmpOp::Ge] {
+            let _ = FilterOp::scalar(0, cmp, 1.0);
+        }
+    }
+
+    #[test]
+    fn derive_op_appends_computed_column_and_shares_the_rest() {
+        let t = kv_table(vec![1, 2, 3], vec![0.25, 0.5, 0.75]);
+        let op = DeriveOp {
+            name: "scaled".into(),
+            expr: col("val") * lit(4.0) + col("key"),
+        };
+        let out = run_local(&op, vec![t.clone()]).into_table();
+        assert_eq!(out.num_columns(), 3);
+        assert_eq!(out.schema().field(2).name, "scaled");
+        assert_eq!(out.column(2).as_f64().unwrap(), &[2.0, 4.0, 6.0]);
+        // The pre-existing columns are Arc clones, not copies.
+        assert!(out.column(0).shares_buffer(t.column(0)));
+        assert!(out.column(1).shares_buffer(t.column(1)));
+        // Unknown columns surface the did-you-mean diagnostic.
+        let bad = DeriveOp { name: "x".into(), expr: col("vall") * lit(2.0) };
+        let w = CommWorld::new(1, NetModel::disabled());
+        let c = w.communicator(0);
+        let td = TaskDescription::sort("t", 1, 0, DataDist::Uniform);
+        let err = bad
+            .execute(&c, &td, vec![t], &KernelBackend::Native)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("did you mean 'val'?"), "{err}");
+    }
+
+    #[test]
+    fn sort_and_groupby_accept_names() {
+        let t = kv_table(vec![3, 1, 2, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        let sort = SortOp { key: "key".into() };
+        let out = run_local(&sort, vec![t.clone()]).into_table();
+        assert_eq!(out.column(0).as_i64().unwrap(), &[1, 1, 2, 3]);
+        let gb = GroupbyOp { key: "key".into(), val: "val".into(), agg: AggFn::Sum };
+        let out = run_local(&gb, vec![t.clone()]).into_table();
+        assert_eq!(out.column(0).as_i64().unwrap(), &[1, 2, 3]);
+        assert_eq!(out.column(1).as_f64().unwrap(), &[6.0, 3.0, 1.0]);
+        // Unknown key names error with diagnostics instead of panicking.
+        let bad = SortOp { key: "kye".into() };
+        let w = CommWorld::new(1, NetModel::disabled());
+        let c = w.communicator(0);
+        let td = TaskDescription::sort("t", 1, 0, DataDist::Uniform);
+        let err = bad
+            .execute(&c, &td, vec![t], &KernelBackend::Native)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no column named 'kye'"), "{err}");
     }
 
     #[test]

@@ -115,6 +115,12 @@ impl Pipeline {
         self.nodes.len()
     }
 
+    /// Task names in node-id order (diagnostics; lets tests pin the shape
+    /// a plan lowered to, since auto-derived names are `"{op}-{id}"`).
+    pub fn node_names(&self) -> Vec<&str> {
+        self.nodes.iter().map(|n| n.td.name.as_str()).collect()
+    }
+
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()
     }

@@ -1,0 +1,480 @@
+//! Typed expression AST — the query-facing IR behind `filter`/`derive`.
+//!
+//! An [`Expr`] is a small tree over column references, literals,
+//! arithmetic, comparisons, and boolean connectives:
+//!
+//! ```
+//! use radical_cylon::plan::expr::{col, lit};
+//!
+//! let pred = (col("a") * lit(2) + col("b"))
+//!     .gt(lit(10))
+//!     .and(col("k").ne(lit(0)));
+//! assert_eq!(pred.to_string(), "((((a * 2) + b) > 10) && (k != 0))");
+//! ```
+//!
+//! Build leaves with [`col`] (by name), [`idx`] (by position — the legacy
+//! addressing mode the deprecated scalar-filter shim uses), and [`lit`];
+//! combine with the `+ - * /` operator overloads, the comparison methods
+//! ([`Expr::eq`], [`Expr::lt`], ...), and the boolean connectives
+//! ([`Expr::and`], [`Expr::or`], and `!expr` / [`Expr::not`]).
+//!
+//! **Typing.** [`Expr::infer_type`] resolves names against a [`Schema`]
+//! and computes the output [`DataType`], reporting unknown columns and
+//! type mismatches as [`Error::Config`] with did-you-mean diagnostics.
+//! The rules:
+//!
+//! * arithmetic takes numeric operands; `Int64 op Int64 -> Int64`, any
+//!   `Float64` operand promotes the whole operation to `Float64`;
+//! * comparisons take numeric operands (mixed int/float compares as
+//!   `f64`) and produce `Bool`;
+//! * `and`/`or`/`not` take `Bool` operands and produce `Bool`.
+//!
+//! **Evaluation** is vectorized in
+//! [`crate::ops::local::eval_expr`] — flat value/mask buffers, one kernel
+//! dispatch per node, never per row. Children are [`Arc`]-shared, so
+//! cloning an expression is O(1).
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use crate::df::{DataType, Schema};
+use crate::error::{Error, Result};
+use crate::ops::local::{BinOp, CmpOp};
+
+/// A literal value embedded in an expression.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Scalar {
+    Int64(i64),
+    Float64(f64),
+    Bool(bool),
+}
+
+impl Scalar {
+    /// The literal's dataframe type.
+    pub fn dtype(&self) -> DataType {
+        match self {
+            Scalar::Int64(_) => DataType::Int64,
+            Scalar::Float64(_) => DataType::Float64,
+            Scalar::Bool(_) => DataType::Bool,
+        }
+    }
+}
+
+impl From<i64> for Scalar {
+    fn from(v: i64) -> Scalar {
+        Scalar::Int64(v)
+    }
+}
+
+impl From<f64> for Scalar {
+    fn from(v: f64) -> Scalar {
+        Scalar::Float64(v)
+    }
+}
+
+impl From<bool> for Scalar {
+    fn from(v: bool) -> Scalar {
+        Scalar::Bool(v)
+    }
+}
+
+impl std::fmt::Display for Scalar {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Scalar::Int64(v) => write!(f, "{v}"),
+            Scalar::Float64(v) => write!(f, "{v}"),
+            Scalar::Bool(v) => write!(f, "{v}"),
+        }
+    }
+}
+
+/// A typed expression over one table's columns.
+///
+/// See the [module docs](self) for the building blocks and typing rules.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    /// Column reference by name (preferred — survives projections).
+    Col(String),
+    /// Column reference by position (legacy shim addressing; the
+    /// optimizer normalizes these to names when the schema is known).
+    Idx(usize),
+    /// Literal.
+    Lit(Scalar),
+    /// Arithmetic: `lhs op rhs`.
+    Bin { op: BinOp, lhs: Arc<Expr>, rhs: Arc<Expr> },
+    /// Comparison: `lhs op rhs`, producing `Bool`.
+    Cmp { op: CmpOp, lhs: Arc<Expr>, rhs: Arc<Expr> },
+    /// Boolean conjunction.
+    And(Arc<Expr>, Arc<Expr>),
+    /// Boolean disjunction.
+    Or(Arc<Expr>, Arc<Expr>),
+    /// Boolean negation.
+    Not(Arc<Expr>),
+}
+
+/// Reference a column by name: `col("val")`.
+pub fn col(name: &str) -> Expr {
+    Expr::Col(name.to_string())
+}
+
+/// Reference a column by position: `idx(1)`. Legacy addressing used by
+/// the deprecated scalar-filter shim; prefer [`col`].
+pub fn idx(i: usize) -> Expr {
+    Expr::Idx(i)
+}
+
+/// Embed a literal: `lit(2)`, `lit(0.5)`, `lit(true)`.
+pub fn lit(v: impl Into<Scalar>) -> Expr {
+    Expr::Lit(v.into())
+}
+
+fn cmp(op: CmpOp, lhs: Expr, rhs: Expr) -> Expr {
+    Expr::Cmp { op, lhs: Arc::new(lhs), rhs: Arc::new(rhs) }
+}
+
+impl Expr {
+    /// Build a comparison node from a runtime [`CmpOp`] — the single
+    /// dispatch point shared by the comparison methods below and the
+    /// legacy scalar-filter shim.
+    pub(crate) fn cmp_op(op: CmpOp, lhs: Expr, rhs: Expr) -> Expr {
+        cmp(op, lhs, rhs)
+    }
+}
+
+// The comparison methods intentionally shadow `PartialEq::eq`/`ne`: they
+// consume `self` by value and build AST nodes, the dataframe-DSL idiom.
+#[allow(clippy::should_implement_trait)]
+impl Expr {
+    /// `self == other` (produces `Bool`).
+    pub fn eq(self, other: Expr) -> Expr {
+        cmp(CmpOp::Eq, self, other)
+    }
+
+    /// `self != other`. On floats this follows IEEE semantics: `NaN != x`
+    /// is `true` for every `x`, including `NaN`.
+    pub fn ne(self, other: Expr) -> Expr {
+        cmp(CmpOp::Ne, self, other)
+    }
+
+    /// `self < other`.
+    pub fn lt(self, other: Expr) -> Expr {
+        cmp(CmpOp::Lt, self, other)
+    }
+
+    /// `self <= other`.
+    pub fn le(self, other: Expr) -> Expr {
+        cmp(CmpOp::Le, self, other)
+    }
+
+    /// `self > other`.
+    pub fn gt(self, other: Expr) -> Expr {
+        cmp(CmpOp::Gt, self, other)
+    }
+
+    /// `self >= other`.
+    pub fn ge(self, other: Expr) -> Expr {
+        cmp(CmpOp::Ge, self, other)
+    }
+
+    /// Boolean AND. Evaluation is eager on both sides except when the
+    /// left mask is uniformly decisive (see
+    /// [`crate::ops::local::eval_expr`]); do not rely on `and` to guard
+    /// the right side against evaluation errors.
+    pub fn and(self, other: Expr) -> Expr {
+        Expr::And(Arc::new(self), Arc::new(other))
+    }
+
+    /// Boolean OR (same evaluation caveat as [`Expr::and`]).
+    pub fn or(self, other: Expr) -> Expr {
+        Expr::Or(Arc::new(self), Arc::new(other))
+    }
+
+    /// Boolean NOT (also available as the `!` operator).
+    pub fn not(self) -> Expr {
+        Expr::Not(Arc::new(self))
+    }
+
+    /// Resolve column references and compute the output type against
+    /// `schema`. Unknown columns and type mismatches are
+    /// [`Error::Config`] with the offending sub-expression in the
+    /// message.
+    pub fn infer_type(&self, schema: &Schema) -> Result<DataType> {
+        match self {
+            Expr::Col(name) => match schema.index_of(name) {
+                Ok(i) => Ok(schema.field(i).dtype),
+                Err(e) => Err(Error::Config(format!("in expression: {e}"))),
+            },
+            Expr::Idx(i) if *i < schema.len() => Ok(schema.field(*i).dtype),
+            Expr::Idx(i) => Err(Error::Config(format!(
+                "in expression: column index {i} out of bounds for schema \
+                 {schema}"
+            ))),
+            Expr::Lit(s) => Ok(s.dtype()),
+            Expr::Bin { op, lhs, rhs } => {
+                let (l, r) =
+                    (lhs.infer_type(schema)?, rhs.infer_type(schema)?);
+                match (l, r) {
+                    (DataType::Int64, DataType::Int64) => Ok(DataType::Int64),
+                    (DataType::Int64 | DataType::Float64, DataType::Int64 | DataType::Float64) => {
+                        Ok(DataType::Float64)
+                    }
+                    _ => Err(Error::Config(format!(
+                        "arithmetic '{op:?}' needs numeric operands, got \
+                         {l}/{r} in {self}"
+                    ))),
+                }
+            }
+            Expr::Cmp { op, lhs, rhs } => {
+                let (l, r) =
+                    (lhs.infer_type(schema)?, rhs.infer_type(schema)?);
+                match (l, r) {
+                    (
+                        DataType::Int64 | DataType::Float64,
+                        DataType::Int64 | DataType::Float64,
+                    ) => Ok(DataType::Bool),
+                    _ => Err(Error::Config(format!(
+                        "comparison '{op:?}' needs numeric operands, got \
+                         {l}/{r} in {self}"
+                    ))),
+                }
+            }
+            Expr::And(a, b) | Expr::Or(a, b) => {
+                for side in [a, b] {
+                    let t = side.infer_type(schema)?;
+                    if t != DataType::Bool {
+                        return Err(Error::Config(format!(
+                            "boolean connective needs bool operands, got \
+                             {t} in {self}"
+                        )));
+                    }
+                }
+                Ok(DataType::Bool)
+            }
+            Expr::Not(a) => {
+                let t = a.infer_type(schema)?;
+                if t != DataType::Bool {
+                    return Err(Error::Config(format!(
+                        "'!' needs a bool operand, got {t} in {self}"
+                    )));
+                }
+                Ok(DataType::Bool)
+            }
+        }
+    }
+
+    /// Collect every column **name** the expression references into
+    /// `out` (positional [`Expr::Idx`] references are not names; see
+    /// [`Expr::uses_indices`]).
+    pub fn references(&self, out: &mut BTreeSet<String>) {
+        match self {
+            Expr::Col(name) => {
+                out.insert(name.clone());
+            }
+            Expr::Idx(_) | Expr::Lit(_) => {}
+            Expr::Bin { lhs, rhs, .. } | Expr::Cmp { lhs, rhs, .. } => {
+                lhs.references(out);
+                rhs.references(out);
+            }
+            Expr::And(a, b) | Expr::Or(a, b) => {
+                a.references(out);
+                b.references(out);
+            }
+            Expr::Not(a) => a.references(out),
+        }
+    }
+
+    /// Does the expression address any column positionally? Positional
+    /// references pin the expression to one exact schema layout, so the
+    /// optimizer refuses to move them across schema-changing operators
+    /// until they are normalized to names.
+    pub fn uses_indices(&self) -> bool {
+        match self {
+            Expr::Idx(_) => true,
+            Expr::Col(_) | Expr::Lit(_) => false,
+            Expr::Bin { lhs, rhs, .. } | Expr::Cmp { lhs, rhs, .. } => {
+                lhs.uses_indices() || rhs.uses_indices()
+            }
+            Expr::And(a, b) | Expr::Or(a, b) => {
+                a.uses_indices() || b.uses_indices()
+            }
+            Expr::Not(a) => a.uses_indices(),
+        }
+    }
+
+    /// Rewrite positional references to names using `schema` (the
+    /// optimizer's normalization step). Returns a structurally shared
+    /// copy; out-of-bounds indices are [`Error::Config`].
+    pub fn normalized(&self, schema: &Schema) -> Result<Expr> {
+        Ok(match self {
+            Expr::Idx(i) if *i < schema.len() => {
+                Expr::Col(schema.field(*i).name.clone())
+            }
+            Expr::Idx(i) => {
+                return Err(Error::Config(format!(
+                    "in expression: column index {i} out of bounds for \
+                     schema {schema}"
+                )))
+            }
+            Expr::Col(_) | Expr::Lit(_) => self.clone(),
+            Expr::Bin { op, lhs, rhs } => Expr::Bin {
+                op: *op,
+                lhs: Arc::new(lhs.normalized(schema)?),
+                rhs: Arc::new(rhs.normalized(schema)?),
+            },
+            Expr::Cmp { op, lhs, rhs } => Expr::Cmp {
+                op: *op,
+                lhs: Arc::new(lhs.normalized(schema)?),
+                rhs: Arc::new(rhs.normalized(schema)?),
+            },
+            Expr::And(a, b) => Expr::And(
+                Arc::new(a.normalized(schema)?),
+                Arc::new(b.normalized(schema)?),
+            ),
+            Expr::Or(a, b) => Expr::Or(
+                Arc::new(a.normalized(schema)?),
+                Arc::new(b.normalized(schema)?),
+            ),
+            Expr::Not(a) => Expr::Not(Arc::new(a.normalized(schema)?)),
+        })
+    }
+}
+
+macro_rules! arith_overload {
+    ($trait:ident, $method:ident, $op:expr) => {
+        impl std::ops::$trait for Expr {
+            type Output = Expr;
+            fn $method(self, rhs: Expr) -> Expr {
+                Expr::Bin { op: $op, lhs: Arc::new(self), rhs: Arc::new(rhs) }
+            }
+        }
+    };
+}
+
+arith_overload!(Add, add, BinOp::Add);
+arith_overload!(Sub, sub, BinOp::Sub);
+arith_overload!(Mul, mul, BinOp::Mul);
+arith_overload!(Div, div, BinOp::Div);
+
+impl std::ops::Not for Expr {
+    type Output = Expr;
+    fn not(self) -> Expr {
+        Expr::Not(Arc::new(self))
+    }
+}
+
+impl std::fmt::Display for Expr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Expr::Col(n) => write!(f, "{n}"),
+            Expr::Idx(i) => write!(f, "#{i}"),
+            Expr::Lit(s) => write!(f, "{s}"),
+            Expr::Bin { op, lhs, rhs } => {
+                let sym = match op {
+                    BinOp::Add => "+",
+                    BinOp::Sub => "-",
+                    BinOp::Mul => "*",
+                    BinOp::Div => "/",
+                };
+                write!(f, "({lhs} {sym} {rhs})")
+            }
+            Expr::Cmp { op, lhs, rhs } => {
+                let sym = match op {
+                    CmpOp::Eq => "==",
+                    CmpOp::Ne => "!=",
+                    CmpOp::Lt => "<",
+                    CmpOp::Le => "<=",
+                    CmpOp::Gt => ">",
+                    CmpOp::Ge => ">=",
+                };
+                write!(f, "({lhs} {sym} {rhs})")
+            }
+            Expr::And(a, b) => write!(f, "({a} && {b})"),
+            Expr::Or(a, b) => write!(f, "({a} || {b})"),
+            Expr::Not(a) => write!(f, "!{a}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn schema() -> Schema {
+        Schema::of(&[("key", DataType::Int64), ("val", DataType::Float64)])
+    }
+
+    #[test]
+    fn display_round_trip() {
+        let e = (col("a") * lit(2) + col("b")).gt(lit(10)).and(col("k").ne(lit(0)));
+        assert_eq!(e.to_string(), "((((a * 2) + b) > 10) && (k != 0))");
+        assert_eq!((!col("p")).to_string(), "!p");
+    }
+
+    #[test]
+    fn type_inference() {
+        let s = schema();
+        assert_eq!((col("key") + lit(1)).infer_type(&s).unwrap(), DataType::Int64);
+        // Mixed int/float promotes to float.
+        assert_eq!(
+            (col("key") * col("val")).infer_type(&s).unwrap(),
+            DataType::Float64
+        );
+        assert_eq!(
+            col("key").ge(lit(0.5)).infer_type(&s).unwrap(),
+            DataType::Bool
+        );
+        assert_eq!(
+            col("key").eq(lit(1)).and(col("val").lt(lit(0.5))).infer_type(&s).unwrap(),
+            DataType::Bool
+        );
+        assert_eq!(idx(1).infer_type(&s).unwrap(), DataType::Float64);
+    }
+
+    #[test]
+    fn type_errors_are_config_with_context() {
+        let s = schema();
+        let err = col("vall").infer_type(&s).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        assert!(err.to_string().contains("did you mean 'val'?"), "{err}");
+        let err = (col("key") + lit(true)).infer_type(&s).unwrap_err().to_string();
+        assert!(err.contains("numeric operands"), "{err}");
+        let err = col("key").and(col("val").lt(lit(0.5))).infer_type(&s).unwrap_err();
+        assert!(err.to_string().contains("bool operands"), "{err}");
+        let err = (!col("val")).infer_type(&s).unwrap_err().to_string();
+        assert!(err.contains("'!'"), "{err}");
+        assert!(idx(7).infer_type(&s).is_err());
+    }
+
+    #[test]
+    fn references_and_indices() {
+        let e = (col("a") + idx(1)).gt(col("b"));
+        let mut refs = BTreeSet::new();
+        e.references(&mut refs);
+        assert_eq!(
+            refs.iter().map(String::as_str).collect::<Vec<_>>(),
+            vec!["a", "b"]
+        );
+        assert!(e.uses_indices());
+        assert!(!col("a").gt(lit(0)).uses_indices());
+    }
+
+    #[test]
+    fn normalization_resolves_indices() {
+        let s = schema();
+        let e = idx(0).ge(idx(1));
+        let n = e.normalized(&s).unwrap();
+        assert_eq!(n, col("key").ge(col("val")));
+        assert!(!n.uses_indices());
+        assert!(idx(9).normalized(&s).is_err());
+        // Name-only expressions normalize to themselves.
+        let e = col("key").lt(lit(3));
+        assert_eq!(e.normalized(&s).unwrap(), e);
+    }
+
+    #[test]
+    fn literal_inference_types() {
+        assert_eq!(lit(2), Expr::Lit(Scalar::Int64(2)));
+        assert_eq!(lit(0.5), Expr::Lit(Scalar::Float64(0.5)));
+        assert_eq!(lit(true), Expr::Lit(Scalar::Bool(true)));
+    }
+}

@@ -3,25 +3,32 @@
 //!
 //! The paper's pipeline is "a collection of data frame operators arranged
 //! in a DAG" (§4.4); a [`Plan`] *is* that arrangement, written the way a
-//! dataframe user thinks:
+//! dataframe user thinks — predicates and derived columns are typed
+//! [`Expr`] trees ([`expr`]), and key arguments take column **names** (or
+//! legacy indices):
 //!
 //! ```
+//! use radical_cylon::plan::expr::{col, lit};
 //! use radical_cylon::plan::Plan;
 //! use radical_cylon::df::GenSpec;
-//! use radical_cylon::ops::local::CmpOp;
 //!
 //! let users = Plan::generate(2, GenSpec::uniform(1_000, 500, 7))
-//!     .filter(1, CmpOp::Ge, 0.5);
+//!     .filter(col("val").ge(lit(0.5)));
 //! let events = Plan::generate(2, GenSpec::uniform(1_000, 500, 8));
 //! let report = users
-//!     .join(events, 0, 0) // both sides piped from upstream tasks
-//!     .sort(0)
+//!     .join(events, "key", "key") // both sides piped from upstream tasks
+//!     .sort("key")
 //!     .collect();
 //! let lowered = report.lower().unwrap();
 //! assert_eq!(lowered.pipeline.len(), 5); // gen, gen, filter, join, sort
 //! ```
 //!
-//! **Lowering** ([`Plan::lower`]) walks the expression tree bottom-up and
+//! **Lowering** ([`Plan::lower`]) first validates the whole tree against
+//! the propagated schemas ([`Plan::output_schema`] — unknown columns and
+//! type mismatches fail here with did-you-mean diagnostics, before any
+//! task runs), then applies the [`optimize`] passes (filter fusion,
+//! predicate pushdown, projection pruning — skipped via
+//! [`Plan::without_optimizer`]), and finally walks the tree bottom-up and
 //! emits one [`TaskDescription`] per distinct logical node:
 //!
 //! * every node's operator becomes an [`OpHandle`] (the same registry
@@ -41,31 +48,39 @@
 //!
 //! Execution goes through [`crate::exec::Engine::run_plan`] on any engine;
 //! the heterogeneous engine drives the lowered DAG through the
-//! event-driven dataflow scheduler.
+//! event-driven dataflow scheduler. Optimized and unoptimized plans
+//! produce identical result multisets (`tests/prop_expr.rs` pins the
+//! fingerprints across engines and scheduling policies).
+
+pub mod expr;
+pub mod optimize;
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use crate::df::{GenSpec, Schema};
+use crate::df::{ColRef, DataType, Field, GenSpec, Schema};
 use crate::error::{Error, Result};
 use crate::ops::local::{AggFn, CmpOp, JoinType};
 use crate::ops::operator::{
-    FilterOp, GenerateOp, GroupbyOp, JoinOp, OpHandle, ProjectOp, ScanCsvOp,
-    SortOp, UnionOp,
+    DeriveOp, FilterOp, GenerateOp, GroupbyOp, JoinOp, OpHandle, ProjectOp,
+    ScanCsvOp, SortOp, UnionOp,
 };
 use crate::pilot::TaskDescription;
 use crate::pipeline::Pipeline;
+
+use expr::Expr;
 
 /// The logical operation at one plan node.
 #[derive(Clone, Debug)]
 enum LogicalOp {
     Generate { spec: GenSpec },
     ScanCsv { path: PathBuf, schema: Schema },
-    Filter { col: usize, cmp: CmpOp, scalar: f64 },
+    Filter { predicate: Expr },
     Project { columns: Vec<String> },
-    Join { left_key: usize, right_key: usize, how: JoinType },
-    Sort { key: usize },
-    Groupby { key: usize, val: usize, agg: AggFn },
+    Derive { name: String, expr: Expr },
+    Join { left_key: ColRef, right_key: ColRef, how: JoinType },
+    Sort { key: ColRef },
+    Groupby { key: ColRef, val: ColRef, agg: AggFn },
     Union,
 }
 
@@ -76,6 +91,7 @@ impl LogicalOp {
             LogicalOp::ScanCsv { .. } => "scan-csv",
             LogicalOp::Filter { .. } => "filter",
             LogicalOp::Project { .. } => "project",
+            LogicalOp::Derive { .. } => "derive",
             LogicalOp::Join { .. } => "join",
             LogicalOp::Sort { .. } => "sort",
             LogicalOp::Groupby { .. } => "groupby",
@@ -90,23 +106,25 @@ impl LogicalOp {
                 path: path.clone(),
                 schema: schema.clone(),
             }),
-            LogicalOp::Filter { col, cmp, scalar } => Arc::new(FilterOp {
-                col: *col,
-                cmp: *cmp,
-                scalar: *scalar,
-            }),
+            LogicalOp::Filter { predicate } => {
+                Arc::new(FilterOp { predicate: predicate.clone() })
+            }
             LogicalOp::Project { columns } => Arc::new(ProjectOp {
                 columns: columns.clone(),
             }),
+            LogicalOp::Derive { name, expr } => Arc::new(DeriveOp {
+                name: name.clone(),
+                expr: expr.clone(),
+            }),
             LogicalOp::Join { left_key, right_key, how } => Arc::new(JoinOp {
-                left_key: *left_key,
-                right_key: *right_key,
+                left_key: left_key.clone(),
+                right_key: right_key.clone(),
                 how: *how,
             }),
-            LogicalOp::Sort { key } => Arc::new(SortOp { key: *key }),
+            LogicalOp::Sort { key } => Arc::new(SortOp { key: key.clone() }),
             LogicalOp::Groupby { key, val, agg } => Arc::new(GroupbyOp {
-                key: *key,
-                val: *val,
+                key: key.clone(),
+                val: val.clone(),
                 agg: *agg,
             }),
             LogicalOp::Union => Arc::new(UnionOp),
@@ -135,6 +153,9 @@ pub struct Plan {
     name: Option<String>,
     /// Gather this node's output into the final [`crate::pilot::TaskResult`].
     collect: bool,
+    /// Run the [`optimize`] passes in [`Plan::lower`] (default `true`;
+    /// cleared by [`Plan::without_optimizer`]).
+    optimize: bool,
 }
 
 /// A [`Plan`] lowered to the physical DAG: the [`Pipeline`] plus the node
@@ -154,13 +175,28 @@ impl Plan {
             ranks: None,
             name: None,
             collect: false,
+            optimize: true,
+        }
+    }
+
+    /// Same node with replaced inputs (attributes preserved) — the
+    /// optimizer's rebuild primitive.
+    fn with_inputs(&self, inputs: Vec<Arc<Plan>>) -> Plan {
+        Plan {
+            op: self.op.clone(),
+            inputs,
+            ranks: self.ranks,
+            name: self.name.clone(),
+            collect: self.collect,
+            optimize: self.optimize,
         }
     }
 
     // ---- sources --------------------------------------------------------
 
     /// Source: `ranks` ranks each generating the deterministic synthetic
-    /// partition described by `spec` (`spec.rows` rows *per rank*).
+    /// partition described by `spec` (`spec.rows` rows *per rank*; schema
+    /// `(key: int64, val: float64)` — [`GenSpec::schema`]).
     pub fn generate(ranks: usize, spec: GenSpec) -> Plan {
         let mut p = Plan::node(LogicalOp::Generate { spec }, vec![]);
         p.ranks = Some(ranks);
@@ -180,9 +216,37 @@ impl Plan {
 
     // ---- transformations ------------------------------------------------
 
-    /// Keep rows where `column <cmp> scalar` (zero-copy, rank-local).
-    pub fn filter(self, col: usize, cmp: CmpOp, scalar: f64) -> Plan {
-        Plan::node(LogicalOp::Filter { col, cmp, scalar }, vec![self])
+    /// Keep rows where the boolean `predicate` holds (zero-copy,
+    /// rank-local). Build predicates from [`expr::col`] / [`expr::lit`]
+    /// with comparisons and `and`/`or`/`not`:
+    ///
+    /// ```
+    /// # use radical_cylon::plan::Plan;
+    /// # use radical_cylon::plan::expr::{col, lit};
+    /// # use radical_cylon::df::GenSpec;
+    /// let p = Plan::generate(2, GenSpec::uniform(100, 64, 1))
+    ///     .filter(col("val").ge(lit(0.5)).and(col("key").ne(lit(0))));
+    /// ```
+    ///
+    /// Non-boolean predicates and unknown columns are rejected by
+    /// [`Plan::lower`] with [`Error::Config`] diagnostics.
+    pub fn filter(self, predicate: Expr) -> Plan {
+        Plan::node(LogicalOp::Filter { predicate }, vec![self])
+    }
+
+    /// Legacy scalar filter: keep rows where `column <cmp> scalar`.
+    ///
+    /// Thin shim over [`Plan::filter`] that builds the equivalent
+    /// expression (`idx(column) <cmp> lit(scalar)`); see
+    /// [`FilterOp::scalar`] for the one NaN-related semantic difference
+    /// from the pre-`Expr` kernel.
+    #[deprecated(
+        since = "0.2.0",
+        note = "build a typed predicate with plan::expr::{col, lit} and \
+                use Plan::filter"
+    )]
+    pub fn filter_scalar(self, column: usize, cmp: CmpOp, scalar: f64) -> Plan {
+        self.filter(FilterOp::scalar(column, cmp, scalar).predicate)
     }
 
     /// Keep only the named columns (zero-copy, rank-local).
@@ -195,9 +259,31 @@ impl Plan {
         )
     }
 
-    /// Inner hash join with `other` on the given key columns — **both**
-    /// sides are piped from their upstream tasks.
-    pub fn join(self, other: Plan, left_key: usize, right_key: usize) -> Plan {
+    /// Materialize a computed column appended under `name` (rank-local;
+    /// existing columns stay zero-copy):
+    ///
+    /// ```
+    /// # use radical_cylon::plan::Plan;
+    /// # use radical_cylon::plan::expr::{col, lit};
+    /// # use radical_cylon::df::GenSpec;
+    /// let p = Plan::generate(2, GenSpec::uniform(100, 64, 1))
+    ///     .derive("scaled", col("val") * lit(2.0) + lit(1.0));
+    /// ```
+    pub fn derive(self, name: &str, expr: Expr) -> Plan {
+        Plan::node(
+            LogicalOp::Derive { name: name.to_string(), expr },
+            vec![self],
+        )
+    }
+
+    /// Inner hash join with `other` on the given key columns (names or
+    /// legacy indices) — **both** sides are piped from upstream tasks.
+    pub fn join(
+        self,
+        other: Plan,
+        left_key: impl Into<ColRef>,
+        right_key: impl Into<ColRef>,
+    ) -> Plan {
         self.join_how(other, left_key, right_key, JoinType::Inner)
     }
 
@@ -205,29 +291,42 @@ impl Plan {
     pub fn join_how(
         self,
         other: Plan,
-        left_key: usize,
-        right_key: usize,
+        left_key: impl Into<ColRef>,
+        right_key: impl Into<ColRef>,
         how: JoinType,
     ) -> Plan {
         Plan::node(
-            LogicalOp::Join { left_key, right_key, how },
+            LogicalOp::Join {
+                left_key: left_key.into(),
+                right_key: right_key.into(),
+                how,
+            },
             vec![self, other],
         )
     }
 
-    /// Globally sort by an int64 column (distributed sample-sort).
-    pub fn sort(self, key: usize) -> Plan {
-        Plan::node(LogicalOp::Sort { key }, vec![self])
+    /// Globally sort by an int64 column — name or legacy index
+    /// (distributed sample-sort).
+    pub fn sort(self, key: impl Into<ColRef>) -> Plan {
+        Plan::node(LogicalOp::Sort { key: key.into() }, vec![self])
     }
 
     /// Group by `key`, aggregating `val` with `agg` (two-phase distributed
-    /// aggregation).
-    pub fn groupby(self, key: usize, val: usize, agg: AggFn) -> Plan {
-        Plan::node(LogicalOp::Groupby { key, val, agg }, vec![self])
+    /// aggregation). Keys take names or legacy indices.
+    pub fn groupby(
+        self,
+        key: impl Into<ColRef>,
+        val: impl Into<ColRef>,
+        agg: AggFn,
+    ) -> Plan {
+        Plan::node(
+            LogicalOp::Groupby { key: key.into(), val: val.into(), agg },
+            vec![self],
+        )
     }
 
     /// Concatenate with `other` (zero-copy chunk adoption, rank-local).
-    /// Schemas must match at execution time.
+    /// Schemas must match — validated at lowering time.
     pub fn union(self, other: Plan) -> Plan {
         Plan::node(LogicalOp::Union, vec![self, other])
     }
@@ -255,12 +354,175 @@ impl Plan {
         self
     }
 
+    /// Escape hatch: lower **without** the [`optimize`] passes. The
+    /// optimizer preserves result multisets, so optimized and
+    /// unoptimized runs of the same plan produce identical table
+    /// fingerprints — this switch exists for debugging and for the
+    /// invariance tests that prove exactly that.
+    pub fn without_optimizer(mut self) -> Plan {
+        self.optimize = false;
+        self
+    }
+
+    // ---- schema propagation ---------------------------------------------
+
+    /// The schema this node's output table will carry, computed by
+    /// propagating source schemas through the operator tree without
+    /// running anything. Unknown columns, type mismatches, non-boolean
+    /// filter predicates, derive-name collisions, and union schema
+    /// mismatches all surface here as [`Error::Config`] — [`Plan::lower`]
+    /// runs this validation over the whole tree first.
+    pub fn output_schema(&self) -> Result<Schema> {
+        let mut memo: Vec<(*const Plan, Schema)> = Vec::new();
+        self.schema_memo(&mut memo)
+    }
+
+    fn schema_memo(
+        &self,
+        memo: &mut Vec<(*const Plan, Schema)>,
+    ) -> Result<Schema> {
+        let mut child_schemas = Vec::with_capacity(self.inputs.len());
+        for input in &self.inputs {
+            let ptr = Arc::as_ptr(input);
+            let s = match memo.iter().find(|(p, _)| *p == ptr) {
+                Some((_, s)) => s.clone(),
+                None => {
+                    let s = input.schema_memo(memo)?;
+                    memo.push((ptr, s.clone()));
+                    s
+                }
+            };
+            child_schemas.push(s);
+        }
+        let cfg = Error::Config;
+        let in0 = child_schemas.first();
+        match &self.op {
+            LogicalOp::Generate { .. } => Ok(GenSpec::schema()),
+            LogicalOp::ScanCsv { schema, .. } => Ok(schema.clone()),
+            LogicalOp::Filter { predicate } => {
+                let s = in0.expect("filter has one input");
+                match predicate.infer_type(s)? {
+                    DataType::Bool => Ok(s.clone()),
+                    other => Err(cfg(format!(
+                        "filter predicate must be bool, got {other} in \
+                         {predicate}"
+                    ))),
+                }
+            }
+            LogicalOp::Project { columns } => {
+                let s = in0.expect("project has one input");
+                let mut fields = Vec::with_capacity(columns.len());
+                for name in columns {
+                    match s.index_of(name) {
+                        Ok(i) => fields.push(s.field(i).clone()),
+                        Err(e) => return Err(cfg(format!("in project: {e}"))),
+                    }
+                }
+                Ok(Schema::new(fields))
+            }
+            LogicalOp::Derive { name, expr } => {
+                let s = in0.expect("derive has one input");
+                if s.index_of(name).is_ok() {
+                    return Err(cfg(format!(
+                        "derive '{name}' would shadow an existing column \
+                         of schema {s}"
+                    )));
+                }
+                let dtype = expr.infer_type(s)?;
+                let mut fields = s.fields().to_vec();
+                fields.push(Field::new(name, dtype));
+                Ok(Schema::new(fields))
+            }
+            LogicalOp::Join { left_key, right_key, .. } => {
+                let (l, r) = (&child_schemas[0], &child_schemas[1]);
+                for (key, side, s) in
+                    [(left_key, "left", l), (right_key, "right", r)]
+                {
+                    let i = key
+                        .resolve(s)
+                        .map_err(|e| cfg(format!("in join {side} key: {e}")))?;
+                    if s.field(i).dtype != DataType::Int64 {
+                        return Err(cfg(format!(
+                            "join {side} key '{key}' must be int64, got {}",
+                            s.field(i).dtype
+                        )));
+                    }
+                }
+                Ok(l.join(r))
+            }
+            LogicalOp::Sort { key } => {
+                let s = in0.expect("sort has one input");
+                let i = key
+                    .resolve(s)
+                    .map_err(|e| cfg(format!("in sort key: {e}")))?;
+                if s.field(i).dtype != DataType::Int64 {
+                    return Err(cfg(format!(
+                        "sort key '{key}' must be int64, got {}",
+                        s.field(i).dtype
+                    )));
+                }
+                Ok(s.clone())
+            }
+            LogicalOp::Groupby { key, val, agg } => {
+                let s = in0.expect("groupby has one input");
+                let ki = key
+                    .resolve(s)
+                    .map_err(|e| cfg(format!("in groupby key: {e}")))?;
+                let vi = val
+                    .resolve(s)
+                    .map_err(|e| cfg(format!("in groupby value: {e}")))?;
+                if s.field(ki).dtype != DataType::Int64 {
+                    return Err(cfg(format!(
+                        "groupby key '{key}' must be int64, got {}",
+                        s.field(ki).dtype
+                    )));
+                }
+                if s.field(vi).dtype != DataType::Float64 {
+                    return Err(cfg(format!(
+                        "groupby value '{val}' must be float64, got {}",
+                        s.field(vi).dtype
+                    )));
+                }
+                // Mirrors ops::local::groupby::agg_output's shape.
+                let agg_name =
+                    format!("{}_{}", s.field(vi).name, agg.name());
+                Ok(Schema::new(vec![
+                    Field::new(&s.field(ki).name, DataType::Int64),
+                    Field::new(&agg_name, DataType::Float64),
+                ]))
+            }
+            LogicalOp::Union => {
+                let (l, r) = (&child_schemas[0], &child_schemas[1]);
+                if l != r {
+                    return Err(cfg(format!(
+                        "union schema mismatch: {l} vs {r}"
+                    )));
+                }
+                Ok(l.clone())
+            }
+        }
+    }
+
     // ---- lowering -------------------------------------------------------
 
     /// Lower to the physical [`Pipeline`] DAG. Deterministic: identical
     /// plans produce identical pipelines (stable post-order ids, CSE over
     /// structurally identical subtrees).
+    ///
+    /// Three steps: validate the tree against propagated schemas
+    /// ([`Plan::output_schema`]); run the [`optimize`] passes unless
+    /// [`Plan::without_optimizer`] was called; emit the DAG.
     pub fn lower(&self) -> Result<LoweredPlan> {
+        self.output_schema()?;
+        if self.optimize {
+            optimize::optimize(self)?.lower_raw()
+        } else {
+            self.lower_raw()
+        }
+    }
+
+    /// Lowering without validation or optimization (the emit step).
+    fn lower_raw(&self) -> Result<LoweredPlan> {
         let mut pipeline = Pipeline::new();
         let mut memo: Vec<(String, usize, usize)> = Vec::new(); // (key, id, ranks)
         let mut ptr_memo: Vec<(*const Plan, (usize, usize))> = Vec::new();
@@ -368,13 +630,14 @@ impl Plan {
 
 #[cfg(test)]
 mod tests {
+    use super::expr::{col, lit};
     use super::*;
 
     fn etl() -> Plan {
         let left = Plan::generate(2, GenSpec::uniform(100, 64, 1))
-            .filter(1, CmpOp::Ge, 0.25);
+            .filter(col("val").ge(lit(0.25)));
         let right = Plan::generate(2, GenSpec::uniform(100, 64, 2));
-        left.join(right, 0, 0).sort(0).collect()
+        left.join(right, "key", "key").sort("key").collect()
     }
 
     #[test]
@@ -386,6 +649,15 @@ mod tests {
         assert_eq!(a.pipeline.len(), 5); // 2 gens, filter, join, sort
         assert_eq!(a.sink, 4); // post-order: sink is last
         assert!(a.pipeline.validate().is_ok());
+    }
+
+    #[test]
+    fn optimized_and_unoptimized_lower_to_same_shape_for_simple_chains() {
+        // Nothing to fuse/push/prune here, so both paths emit 5 nodes.
+        let a = etl().lower().unwrap();
+        let b = etl().without_optimizer().lower().unwrap();
+        assert_eq!(a.pipeline.len(), b.pipeline.len());
+        assert_eq!(a.sink, b.sink);
     }
 
     #[test]
@@ -404,10 +676,11 @@ mod tests {
     #[test]
     fn deep_shared_diamond_lowers_in_linear_time() {
         // 40 levels of `p union p`: Arc-shared children keep each clone
-        // O(1), the pointer memo traverses every shared subtree once, and
-        // canonical child-id keys keep structural keys O(fanout) — so this
-        // lowers to 41 DAG nodes (one per distinct level) in linear time
-        // instead of hanging on ~2^40 work.
+        // O(1), the pointer memos (schema propagation, optimizer passes,
+        // lowering) traverse every shared subtree once, and canonical
+        // child-id keys keep structural keys O(fanout) — so this lowers
+        // to 41 DAG nodes (one per distinct level) in linear time instead
+        // of hanging on ~2^40 work.
         let mut p = Plan::generate(1, GenSpec::uniform(4, 4, 0));
         for _ in 0..40 {
             p = p.clone().union(p);
@@ -454,5 +727,64 @@ mod tests {
             .sort(0);
         let lowered = plan.lower().unwrap();
         assert_eq!(lowered.pipeline.len(), 2);
+    }
+
+    #[test]
+    fn filter_scalar_shim_builds_the_equivalent_expression() {
+        #[allow(deprecated)]
+        let shim = Plan::generate(2, GenSpec::uniform(100, 64, 1))
+            .filter_scalar(1, CmpOp::Ge, 0.25);
+        let lowered = shim.lower().unwrap();
+        assert_eq!(lowered.pipeline.len(), 2);
+    }
+
+    #[test]
+    fn schema_propagates_through_the_tree() {
+        let s = etl().output_schema().unwrap();
+        // join renames the right side's colliding columns.
+        let names: Vec<&str> =
+            s.fields().iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["key", "val", "key_right", "val_right"]);
+        let g = Plan::generate(2, GenSpec::uniform(10, 8, 0))
+            .derive("scaled", col("val") * lit(2.0))
+            .groupby("key", "scaled", AggFn::Mean);
+        let s = g.output_schema().unwrap();
+        let names: Vec<&str> =
+            s.fields().iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["key", "scaled_mean"]);
+    }
+
+    #[test]
+    fn lowering_rejects_bad_plans_with_config_diagnostics() {
+        // Unknown filter column, with a did-you-mean hint.
+        let p = Plan::generate(2, GenSpec::uniform(10, 8, 0))
+            .filter(col("vall").ge(lit(0.5)));
+        let err = p.lower().unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        assert!(err.to_string().contains("did you mean 'val'?"), "{err}");
+        // Non-boolean predicate.
+        let p = Plan::generate(2, GenSpec::uniform(10, 8, 0))
+            .filter(col("val") * lit(2.0));
+        let err = p.lower().unwrap_err().to_string();
+        assert!(err.contains("must be bool"), "{err}");
+        // Sorting a float column.
+        let p = Plan::generate(2, GenSpec::uniform(10, 8, 0)).sort("val");
+        let err = p.lower().unwrap_err().to_string();
+        assert!(err.contains("must be int64"), "{err}");
+        // Derive shadowing an existing column.
+        let p = Plan::generate(2, GenSpec::uniform(10, 8, 0))
+            .derive("val", col("val") * lit(2.0));
+        let err = p.lower().unwrap_err().to_string();
+        assert!(err.contains("shadow"), "{err}");
+        // Union of mismatched schemas.
+        let a = Plan::generate(2, GenSpec::uniform(10, 8, 0));
+        let b = Plan::generate(2, GenSpec::uniform(10, 8, 1)).project(&["key"]);
+        let err = a.union(b).lower().unwrap_err().to_string();
+        assert!(err.contains("union schema mismatch"), "{err}");
+        // Unknown groupby value column.
+        let p = Plan::generate(2, GenSpec::uniform(10, 8, 0))
+            .groupby("key", "vals", AggFn::Sum);
+        let err = p.lower().unwrap_err().to_string();
+        assert!(err.contains("groupby value"), "{err}");
     }
 }

@@ -16,9 +16,9 @@ const RIGHT_SEED: u64 = 0xB0B;
 
 fn fluent_plan() -> Plan {
     let left = Plan::generate(RANKS, GenSpec::uniform(ROWS, KEY_SPACE, LEFT_SEED))
-        .filter(1, CmpOp::Ge, 0.5);
+        .filter(col("val").ge(lit(0.5)));
     let right = Plan::generate(RANKS, GenSpec::uniform(ROWS, KEY_SPACE, RIGHT_SEED));
-    left.join(right, 0, 0).sort(0).collect()
+    left.join(right, "key", "key").sort("key").collect()
 }
 
 /// The same DAG written against the raw task/pipeline API: two generate
@@ -37,7 +37,7 @@ fn hand_built() -> Pipeline {
     let filter = dag.add_piped(
         TaskDescription::new(
             "filter",
-            Arc::new(FilterOp { col: 1, cmp: CmpOp::Ge, scalar: 0.5 }),
+            Arc::new(FilterOp { predicate: col("val").ge(lit(0.5)) }),
             RANKS,
             0,
         ),
@@ -47,7 +47,11 @@ fn hand_built() -> Pipeline {
     let join = dag.add_piped_multi(
         TaskDescription::new(
             "join",
-            Arc::new(JoinOp { left_key: 0, right_key: 0, how: JoinType::Inner }),
+            Arc::new(JoinOp {
+                left_key: "key".into(),
+                right_key: "key".into(),
+                how: JoinType::Inner,
+            }),
             RANKS,
             0,
         ),
@@ -55,7 +59,7 @@ fn hand_built() -> Pipeline {
         &[filter, gen_r],
     );
     let _sort = dag.add_piped(
-        TaskDescription::new("sort", Arc::new(SortOp { key: 0 }), RANKS, 0)
+        TaskDescription::new("sort", Arc::new(SortOp { key: "key".into() }), RANKS, 0)
             .collect_output(),
         &[join],
         join,

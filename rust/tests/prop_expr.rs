@@ -1,0 +1,483 @@
+//! Property suite for the typed expression IR and the plan optimizer.
+//!
+//! 1. **Evaluator correctness** — random well-typed `Expr` trees are
+//!    evaluated by the vectorized kernel ([`eval_expr`]) and by a
+//!    row-at-a-time interpreter oracle written independently below; the
+//!    results must match **exactly**, bit-for-bit on floats (NaN and
+//!    ±inf cells are seeded into the input on purpose). Int64 division
+//!    is generated only against non-zero literals so neither side
+//!    errors; the error path is pinned by deterministic edge tests.
+//! 2. **Optimizer invariance** — a family of plan shapes with random
+//!    predicates must produce identical result fingerprints with the
+//!    optimizer on and off ([`Plan::without_optimizer`]), across the
+//!    FIFO and critical-path-first scheduling policies and across the
+//!    dataflow/sequential engines.
+
+use radical_cylon::ops::local::{eval_expr, eval_predicate, AggFn};
+use radical_cylon::plan::expr::{col, lit, Expr, Scalar};
+use radical_cylon::prelude::*;
+use radical_cylon::util::Rng;
+
+// ---------------------------------------------------------------------------
+// Row-at-a-time interpreter oracle
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+enum V {
+    I(i64),
+    F(f64),
+    B(bool),
+}
+
+fn as_f(v: V) -> f64 {
+    match v {
+        V::I(x) => x as f64,
+        V::F(x) => x,
+        V::B(x) => x as u8 as f64,
+    }
+}
+
+fn cell(t: &Table, i: usize, row: usize) -> V {
+    match t.column(i) {
+        Column::Int64(_) => V::I(t.column(i).as_i64().unwrap()[row]),
+        Column::Float64(_) => V::F(t.column(i).as_f64().unwrap()[row]),
+        Column::Bool(_) => V::B(t.column(i).as_bool().unwrap()[row]),
+        Column::Utf8(_) => panic!("no utf8 in these tables"),
+    }
+}
+
+/// The oracle mirrors the documented semantics exactly: int64 wraps,
+/// int64 div-by-zero errors, any float operand promotes to f64, float
+/// comparisons are IEEE, and/or/not are eager per row.
+fn eval_row(t: &Table, e: &Expr, row: usize) -> Result<V> {
+    use radical_cylon::ops::local::{BinOp, CmpOp};
+    Ok(match e {
+        Expr::Col(name) => cell(t, t.schema().index_of(name)?, row),
+        Expr::Idx(i) => cell(t, *i, row),
+        Expr::Lit(Scalar::Int64(v)) => V::I(*v),
+        Expr::Lit(Scalar::Float64(v)) => V::F(*v),
+        Expr::Lit(Scalar::Bool(v)) => V::B(*v),
+        Expr::Bin { op, lhs, rhs } => {
+            let (a, b) = (eval_row(t, lhs, row)?, eval_row(t, rhs, row)?);
+            match (a, b) {
+                (V::I(x), V::I(y)) => V::I(match op {
+                    BinOp::Add => x.wrapping_add(y),
+                    BinOp::Sub => x.wrapping_sub(y),
+                    BinOp::Mul => x.wrapping_mul(y),
+                    BinOp::Div => {
+                        if y == 0 {
+                            return Err(Error::Compute(
+                                "oracle: int64 division by zero".into(),
+                            ));
+                        }
+                        x.wrapping_div(y)
+                    }
+                }),
+                (a, b) => {
+                    let (x, y) = (as_f(a), as_f(b));
+                    V::F(match op {
+                        BinOp::Add => x + y,
+                        BinOp::Sub => x - y,
+                        BinOp::Mul => x * y,
+                        BinOp::Div => x / y,
+                    })
+                }
+            }
+        }
+        Expr::Cmp { op, lhs, rhs } => {
+            let (a, b) = (eval_row(t, lhs, row)?, eval_row(t, rhs, row)?);
+            V::B(match (a, b) {
+                (V::I(x), V::I(y)) => {
+                    let o = x.cmp(&y);
+                    match op {
+                        CmpOp::Eq => o.is_eq(),
+                        CmpOp::Ne => o.is_ne(),
+                        CmpOp::Lt => o.is_lt(),
+                        CmpOp::Le => o.is_le(),
+                        CmpOp::Gt => o.is_gt(),
+                        CmpOp::Ge => o.is_ge(),
+                    }
+                }
+                (a, b) => {
+                    let (x, y) = (as_f(a), as_f(b));
+                    match op {
+                        CmpOp::Eq => x == y,
+                        CmpOp::Ne => x != y,
+                        CmpOp::Lt => x < y,
+                        CmpOp::Le => x <= y,
+                        CmpOp::Gt => x > y,
+                        CmpOp::Ge => x >= y,
+                    }
+                }
+            })
+        }
+        Expr::And(p, q) => {
+            let (a, b) = (eval_row(t, p, row)?, eval_row(t, q, row)?);
+            match (a, b) {
+                (V::B(x), V::B(y)) => V::B(x && y),
+                _ => panic!("generator emits well-typed bools"),
+            }
+        }
+        Expr::Or(p, q) => {
+            let (a, b) = (eval_row(t, p, row)?, eval_row(t, q, row)?);
+            match (a, b) {
+                (V::B(x), V::B(y)) => V::B(x || y),
+                _ => panic!("generator emits well-typed bools"),
+            }
+        }
+        Expr::Not(p) => match eval_row(t, p, row)? {
+            V::B(x) => V::B(!x),
+            _ => panic!("generator emits well-typed bools"),
+        },
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Random tables and random well-typed expressions
+// ---------------------------------------------------------------------------
+
+/// Four columns: `a`, `b` int64 (with zeros and negatives), `x`, `y`
+/// float64 with NaN, ±inf, and -0.0 cells seeded in.
+fn prop_table(rng: &mut Rng, rows: usize) -> Table {
+    let a: Vec<i64> = (0..rows).map(|_| rng.gen_i64(-50, 50)).collect();
+    let b: Vec<i64> = (0..rows).map(|_| rng.gen_i64(-9, 9)).collect();
+    let special = [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -0.0, 0.0];
+    let mut float = |i: usize| -> f64 {
+        if i % 7 == 3 {
+            special[i % special.len()]
+        } else {
+            rng.gen_f64() * 8.0 - 4.0
+        }
+    };
+    let x: Vec<f64> = (0..rows).map(&mut float).collect();
+    let y: Vec<f64> = (0..rows).map(&mut float).collect();
+    Table::new(
+        Schema::of(&[
+            ("a", DataType::Int64),
+            ("b", DataType::Int64),
+            ("x", DataType::Float64),
+            ("y", DataType::Float64),
+        ]),
+        vec![
+            Column::from_i64(a),
+            Column::from_i64(b),
+            Column::from_f64(x),
+            Column::from_f64(y),
+        ],
+    )
+    .unwrap()
+}
+
+/// Random int64-typed expression. Division only by non-zero literals so
+/// neither evaluator errors (the error path has its own tests).
+fn gen_int(rng: &mut Rng, depth: usize) -> Expr {
+    if depth == 0 {
+        return match rng.gen_range(3) {
+            0 => col("a"),
+            1 => col("b"),
+            _ => lit(rng.gen_i64(-6, 7)),
+        };
+    }
+    let (l, r) = (gen_int(rng, depth - 1), gen_int(rng, depth - 1));
+    match rng.gen_range(4) {
+        0 => l + r,
+        1 => l - r,
+        2 => l * r,
+        _ => {
+            let mut d = rng.gen_i64(1, 7);
+            if rng.gen_range(2) == 0 {
+                d = -d;
+            }
+            l / lit(d)
+        }
+    }
+}
+
+/// Random float64-typed expression (mixed int operands promote). All
+/// four operators are fair game — float div-by-zero is IEEE, not an
+/// error.
+fn gen_float(rng: &mut Rng, depth: usize) -> Expr {
+    if depth == 0 {
+        return match rng.gen_range(3) {
+            0 => col("x"),
+            1 => col("y"),
+            _ => lit(rng.gen_f64() * 4.0 - 2.0),
+        };
+    }
+    // One side may be an int expression: the promotion path.
+    let l = if rng.gen_range(4) == 0 {
+        gen_int(rng, depth - 1)
+    } else {
+        gen_float(rng, depth - 1)
+    };
+    let r = gen_float(rng, depth - 1);
+    match rng.gen_range(4) {
+        0 => l + r,
+        1 => l - r,
+        2 => l * r,
+        _ => l / r,
+    }
+}
+
+/// Random bool-typed expression: comparisons over numeric subtrees,
+/// composed with and/or/not.
+fn gen_bool(rng: &mut Rng, depth: usize) -> Expr {
+    if depth == 0 || rng.gen_range(3) == 0 {
+        let mixed = rng.gen_range(3);
+        let (l, r) = match mixed {
+            0 => (gen_int(rng, 1), gen_int(rng, 1)),
+            1 => (gen_float(rng, 1), gen_float(rng, 1)),
+            _ => (gen_int(rng, 1), gen_float(rng, 1)),
+        };
+        return match rng.gen_range(6) {
+            0 => l.eq(r),
+            1 => l.ne(r),
+            2 => l.lt(r),
+            3 => l.le(r),
+            4 => l.gt(r),
+            _ => l.ge(r),
+        };
+    }
+    let (l, r) = (gen_bool(rng, depth - 1), gen_bool(rng, depth - 1));
+    match rng.gen_range(3) {
+        0 => l.and(r),
+        1 => l.or(r),
+        _ => !l,
+    }
+}
+
+/// Exact (bitwise on floats) comparison of the vectorized result against
+/// the row oracle.
+fn assert_matches_oracle(t: &Table, e: &Expr) {
+    let out = eval_expr(t, e).unwrap_or_else(|err| {
+        panic!("vectorized evaluation failed for {e}: {err}")
+    });
+    assert_eq!(out.len(), t.num_rows(), "length for {e}");
+    for row in 0..t.num_rows() {
+        let want = eval_row(t, e, row).unwrap();
+        match want {
+            V::I(w) => {
+                let got = out.as_i64().unwrap()[row];
+                assert_eq!(got, w, "row {row} of {e}");
+            }
+            V::F(w) => {
+                let got = out.as_f64().unwrap()[row];
+                assert_eq!(
+                    got.to_bits(),
+                    w.to_bits(),
+                    "row {row} of {e}: {got} vs {w}"
+                );
+            }
+            V::B(w) => {
+                let got = out.as_bool().unwrap()[row];
+                assert_eq!(got, w, "row {row} of {e}");
+            }
+        }
+    }
+}
+
+#[test]
+fn vectorized_numeric_exprs_match_row_oracle_exactly() {
+    let mut rng = Rng::new(0xE5715EED);
+    for case in 0..60u64 {
+        let t = prop_table(&mut rng, 97);
+        let depth = 1 + (case % 4) as usize;
+        let e = if case % 2 == 0 {
+            gen_int(&mut rng, depth)
+        } else {
+            gen_float(&mut rng, depth)
+        };
+        assert_matches_oracle(&t, &e);
+    }
+}
+
+#[test]
+fn vectorized_predicates_match_row_oracle_exactly() {
+    let mut rng = Rng::new(0xB001_CAFE);
+    for case in 0..60u64 {
+        let t = prop_table(&mut rng, 83);
+        let e = gen_bool(&mut rng, 1 + (case % 3) as usize);
+        assert_matches_oracle(&t, &e);
+        // And through the mask entry point used by FilterOp.
+        let mask = eval_predicate(&t, &e).unwrap();
+        for (row, &m) in mask.iter().enumerate() {
+            match eval_row(&t, &e, row).unwrap() {
+                V::B(w) => assert_eq!(m, w, "mask row {row} of {e}"),
+                _ => unreachable!(),
+            }
+        }
+    }
+}
+
+#[test]
+fn int_div_by_zero_errors_in_both_evaluators() {
+    let mut rng = Rng::new(7);
+    let t = prop_table(&mut rng, 50);
+    // Column b contains zeros with overwhelming probability at 50 rows in
+    // [-9, 9); force one to be sure.
+    let e = col("a") / (col("b") * lit(0));
+    let vec_err = eval_expr(&t, &e).unwrap_err();
+    assert!(matches!(vec_err, Error::Compute(_)), "{vec_err}");
+    let mut oracle_errs = 0;
+    for row in 0..t.num_rows() {
+        if eval_row(&t, &e, row).is_err() {
+            oracle_errs += 1;
+        }
+    }
+    assert_eq!(oracle_errs, t.num_rows(), "every row divides by zero");
+}
+
+#[test]
+fn nan_comparison_edges_match() {
+    let t = Table::new(
+        Schema::of(&[("x", DataType::Float64), ("y", DataType::Float64)]),
+        vec![
+            Column::from_f64(vec![f64::NAN, 1.0, f64::INFINITY, -0.0]),
+            Column::from_f64(vec![f64::NAN, f64::NAN, f64::NEG_INFINITY, 0.0]),
+        ],
+    )
+    .unwrap();
+    for e in [
+        col("x").eq(col("y")),
+        col("x").ne(col("y")),
+        col("x").lt(col("y")),
+        col("x").le(col("y")),
+        col("x").gt(col("y")),
+        col("x").ge(col("y")),
+        (col("x") / col("y")).ge(lit(0.0)),
+        (col("x") - col("x")).ne(col("y") - col("y")),
+    ] {
+        assert_matches_oracle(&t, &e);
+    }
+    // Spot-check the IEEE table: NaN is != everything, otherwise false;
+    // and -0.0 == 0.0.
+    assert_eq!(
+        eval_predicate(&t, &col("x").ne(col("y"))).unwrap(),
+        vec![true, true, true, false]
+    );
+    assert_eq!(
+        eval_predicate(&t, &col("x").eq(col("y"))).unwrap(),
+        vec![false, false, false, true]
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Optimizer invariance
+// ---------------------------------------------------------------------------
+
+const RANKS: usize = 2;
+const ROWS: usize = 300; // per rank
+
+fn src(seed: u64) -> Plan {
+    Plan::generate(RANKS, GenSpec::uniform(ROWS, (ROWS * RANKS) as i64, seed))
+}
+
+/// Random boolean predicate over the synthetic `(key, val)` schema; int
+/// division guarded the same way as the evaluator generator.
+fn rand_pred(rng: &mut Rng) -> Expr {
+    let atom = |rng: &mut Rng| -> Expr {
+        match rng.gen_range(4) {
+            0 => col("key").ge(lit(rng.gen_i64(0, (ROWS * RANKS) as i64))),
+            1 => (col("key") * lit(rng.gen_i64(1, 4))).lt(lit(rng.gen_i64(
+                0,
+                2 * (ROWS * RANKS) as i64,
+            ))),
+            2 => col("val").lt(lit(rng.gen_f64())),
+            _ => (col("val") + col("val")).gt(lit(rng.gen_f64() * 2.0)),
+        }
+    };
+    let (a, b) = (atom(rng), atom(rng));
+    match rng.gen_range(4) {
+        0 => a.and(b),
+        1 => a.or(b),
+        2 => !a,
+        _ => a,
+    }
+}
+
+/// Plan shapes exercising each optimizer rewrite.
+fn shapes(rng: &mut Rng) -> Vec<Plan> {
+    let (p1, p2, p3) = (rand_pred(rng), rand_pred(rng), rand_pred(rng));
+    vec![
+        // Adjacent filters fuse.
+        src(11).filter(p1.clone()).filter(p2.clone()).sort("key").collect(),
+        // Filter sinks below a sort.
+        src(12).sort("key").filter(p3.clone()).collect(),
+        // Dead derive + filter through live derive + projection pruning.
+        src(13)
+            .derive("scaled", col("val") * lit(2.0) + lit(1.0))
+            .filter(p1)
+            .project(&["key", "val"])
+            .sort("key")
+            .collect(),
+        // Filter pushed past one side of an inner join.
+        src(14).filter(p2).join(src(15), "key", "key").sort("key").collect(),
+        // Filter above a groupby stays put but still runs correctly.
+        src(16)
+            .groupby("key", "val", AggFn::Sum)
+            .filter(col("key").ne(lit(0)))
+            .collect(),
+        // Union blocks pruning; projection above it.
+        src(17).union(src(18)).filter(p3).project(&["key"]).collect(),
+    ]
+}
+
+fn fingerprint(run: &PlanRun) -> (u64, usize) {
+    let out = run.output.as_ref().expect("collected sink output");
+    (out.multiset_fingerprint(), out.num_rows())
+}
+
+#[test]
+fn optimized_plans_match_unoptimized_across_policies_and_engines() {
+    let mut rng = Rng::new(0x0071_13EE);
+    let machine = MachineSpec::local(RANKS);
+    for (i, plan) in shapes(&mut rng).into_iter().enumerate() {
+        let mut prints = Vec::new();
+        for policy in [ReadyPolicy::Fifo, ReadyPolicy::CriticalPathFirst] {
+            let eng = HeterogeneousEngine::new(
+                machine.clone(),
+                KernelBackend::Native,
+                RANKS,
+            )
+            .with_ready_policy(policy);
+            let opt = eng.run_plan(&plan).unwrap();
+            prints.push(fingerprint(&opt));
+            let unopt = eng.run_plan(&plan.clone().without_optimizer()).unwrap();
+            prints.push(fingerprint(&unopt));
+        }
+        // The sequential engine agrees too (optimizer on and off).
+        let bm = BareMetalEngine::new(machine.clone(), KernelBackend::Native);
+        prints.push(fingerprint(&bm.run_plan(&plan).unwrap()));
+        prints.push(fingerprint(
+            &bm.run_plan(&plan.clone().without_optimizer()).unwrap(),
+        ));
+        let first = prints[0];
+        for (j, p) in prints.iter().enumerate() {
+            assert_eq!(
+                *p, first,
+                "shape {i}, run {j}: optimized/unoptimized diverged: \
+                 {prints:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn optimizer_reduces_or_preserves_dag_size() {
+    let mut rng = Rng::new(42);
+    for plan in shapes(&mut rng) {
+        let opt = plan.lower().unwrap();
+        let unopt = plan.clone().without_optimizer().lower().unwrap();
+        // (Projection pruning can insert a project above a source, but
+        // none of these shapes trigger an insertion without also fusing
+        // or eliminating at least one node.)
+        assert!(
+            opt.pipeline.len() <= unopt.pipeline.len(),
+            "optimizer grew one of the pinned DAG shapes: {} vs {}",
+            opt.pipeline.len(),
+            unopt.pipeline.len()
+        );
+        assert!(opt.pipeline.validate().is_ok());
+        assert!(unopt.pipeline.validate().is_ok());
+    }
+}
