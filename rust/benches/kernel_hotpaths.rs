@@ -18,9 +18,17 @@
 //!   one-heap-op-per-row baseline (`merge_sorted_per_row`), on run-heavy
 //!   input.
 //!
+//! A **thread-scaling** section follows the pairs: the morsel-parallel
+//! sort/join/groupby run at 1/2/4/8 pool workers
+//! (`<kernel>/par-t{n}` rows). Each scaled row carries `cores` and
+//! `scale_baseline` extras so `scripts/bench_check.sh` can apply its
+//! lenient speedup-vs-cores gate (strict old-vs-new ratios make no sense
+//! for self-scaling rows).
+//!
 //! Acceptance (asserted below): every new kernel's output is
-//! **bit-identical** to its legacy oracle, and every new kernel's mean
-//! wall time is **strictly below** the legacy implementation's.
+//! **bit-identical** to its legacy oracle, every new kernel's mean
+//! wall time is **strictly below** the legacy implementation's, and the
+//! parallel sort and join beat their own 1-worker runs at 4 workers.
 //!
 //! Run with `cargo bench --bench kernel_hotpaths` (RC_BENCH_ITERS to raise
 //! samples, RC_BENCH_JSON=<path> to archive; `scripts/bench_check.sh`
@@ -29,12 +37,14 @@
 use radical_cylon::df::{gen_table, GenSpec, Table};
 use radical_cylon::ops::dist::{counting_scatter, destination_lists};
 use radical_cylon::ops::local::{
-    groupby_agg, groupby_agg_hashmap, hash_join, hash_join_hashmap,
-    merge_sorted, merge_sorted_per_row, sort_table, sort_table_comparator,
-    AggFn, JoinType, SortKey,
+    groupby_agg, groupby_agg_hashmap, groupby_agg_par, hash_join,
+    hash_join_hashmap, hash_join_par, merge_sorted, merge_sorted_per_row,
+    sort_table, sort_table_comparator, sort_table_par, AggFn, JoinType,
+    SortKey,
 };
 use radical_cylon::util::bench_harness::{bench_iters, BenchSet};
 use radical_cylon::util::hash::partition_ids;
+use radical_cylon::util::pool::ThreadPool;
 
 const JOIN_ROWS: usize = 1_000_000;
 const SORT_ROWS: usize = 1 << 20; // 1,048,576
@@ -195,6 +205,60 @@ fn main() {
         None
     });
 
+    // ---- thread scaling: morsel-parallel kernels at 1/2/4/8 workers -----
+    // These rows gate *scaling*, not old-vs-new, so they carry a
+    // `scale_baseline` extra (their own t1 row) instead of `baseline`:
+    // bench_check.sh applies the lenient speedup-vs-cores rule to them,
+    // not the strict "must beat the legacy kernel" ratio rule.
+    for threads in [1usize, 2, 4, 8] {
+        let pool = ThreadPool::new(threads);
+        {
+            let par = sort_table_par(&t, SortKey::asc(0), &pool).unwrap();
+            let seq = sort_table(&t, SortKey::asc(0)).unwrap();
+            assert_eq!(
+                par, seq,
+                "parallel sort (t={threads}) must be bit-identical"
+            );
+            let par = hash_join_par(&l, &r, 0, 0, JoinType::Inner, &pool).unwrap();
+            let seq = hash_join(&l, &r, 0, 0, JoinType::Inner).unwrap();
+            assert_eq!(
+                par, seq,
+                "parallel join (t={threads}) must be bit-identical"
+            );
+            let par = groupby_agg_par(&gt, 0, 1, AggFn::Sum, &pool).unwrap();
+            let seq = groupby_agg(&gt, 0, 1, AggFn::Sum).unwrap();
+            assert_eq!(
+                par, seq,
+                "parallel groupby (t={threads}) must be bit-identical"
+            );
+        }
+        let mut scaled = |row: &mut radical_cylon::util::bench_harness::BenchRow,
+                          base: &str| {
+            row.extra.push(("cores".into(), threads.to_string()));
+            if threads > 1 {
+                row.extra.push(("scale_baseline".into(), base.to_string()));
+            }
+        };
+        let row = set.bench_mem(&format!("sort-asc/par-t{threads}"), 1, iters, || {
+            let s = sort_table_par(&t, SortKey::asc(0), &pool).unwrap();
+            assert_eq!(s.num_rows(), SORT_ROWS);
+            None
+        });
+        scaled(row, "sort-asc/par-t1");
+        let row = set.bench_mem(&format!("join/par-t{threads}"), 1, iters, || {
+            let j = hash_join_par(&l, &r, 0, 0, JoinType::Inner, &pool).unwrap();
+            assert!(j.num_rows() > 0);
+            None
+        });
+        scaled(row, "join/par-t1");
+        let row = set.bench_mem(&format!("groupby/par-t{threads}"), 1, iters, || {
+            let g = groupby_agg_par(&gt, 0, 1, AggFn::Sum, &pool).unwrap();
+            assert!(g.num_rows() > 0);
+            None
+        });
+        scaled(row, "groupby/par-t1");
+    }
+
     // ---- speedup columns + acceptance assertions ------------------------
     let wall_of = |set: &BenchSet, label: &str| -> f64 {
         set.rows
@@ -218,8 +282,43 @@ fn main() {
         // its gate list instead of duplicating PAIRS.
         row.extra.push(("baseline".into(), old_label.to_string()));
     }
+    for kernel in ["sort-asc/par", "join/par", "groupby/par"] {
+        let t1 = wall_of(&set, &format!("{kernel}-t1"));
+        for threads in [2usize, 4, 8] {
+            let label = format!("{kernel}-t{threads}");
+            let tn = wall_of(&set, &label);
+            let row = set
+                .rows
+                .iter_mut()
+                .find(|r| r.label == label)
+                .expect("row exists");
+            row.extra.push(("speedup".into(), format!("{:.2}x", t1 / tn)));
+        }
+    }
     set.report();
     set.maybe_write_json();
+
+    // Thread-scaling acceptance: at 4 workers the morsel-parallel sort and
+    // join must actually be faster than their own 1-worker runs (groupby
+    // is reported but not hard-gated here — its parallel region is a
+    // smaller fraction of the kernel).
+    for kernel in ["sort-asc/par", "join/par", "groupby/par"] {
+        let t1 = wall_of(&set, &format!("{kernel}-t1"));
+        let t4 = wall_of(&set, &format!("{kernel}-t4"));
+        println!(
+            "{kernel}: t1 {:.1} ms -> t4 {:.1} ms ({:.2}x)",
+            t1 * 1e3,
+            t4 * 1e3,
+            t1 / t4
+        );
+        if matches!(kernel, "sort-asc/par" | "join/par") {
+            assert!(
+                t4 < t1,
+                "{kernel} must show >1.0x speedup at 4 workers \
+                 (t1 {t1:.4}s, t4 {t4:.4}s)"
+            );
+        }
+    }
 
     for (new_label, old_label) in PAIRS {
         let (new_wall, old_wall) =

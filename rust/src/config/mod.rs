@@ -49,6 +49,11 @@ pub struct ExperimentConfig {
     /// Repetitions per configuration (paper: 10).
     pub iterations: usize,
     pub seed: u64,
+    /// Shared-memory worker threads for the in-process data plane (the
+    /// morsel-parallel kernels and `Pipeline::run_pooled`). `0` = auto
+    /// (one worker per available core), `1` = sequential. Distinct from
+    /// `parallelisms`, which sweeps simulated *rank* counts.
+    pub parallelism: usize,
 }
 
 impl ExperimentConfig {
@@ -97,7 +102,19 @@ impl ExperimentConfig {
                 .get("seed")
                 .map(|s| s.parse().unwrap_or(0xC71))
                 .unwrap_or(0xC71),
+            parallelism: match sec.get("parallelism") {
+                None => 1,
+                Some(s) => s.parse().map_err(|_| {
+                    Error::Config("key 'parallelism' is not an integer".into())
+                })?,
+            },
         })
+    }
+
+    /// Size the global thread pool from this config's `parallelism` knob
+    /// (first caller wins — the pool is process-global).
+    pub fn apply_parallelism(&self) {
+        crate::util::pool::configure(self.parallelism);
     }
 
     /// Rows per rank at a given parallelism under this config's scaling.
@@ -160,6 +177,23 @@ iterations = 5
         let doc = parse_ini("[experiment]\nid = x\n").unwrap();
         let err = ExperimentConfig::from_ini(&doc).unwrap_err().to_string();
         assert!(err.contains("missing key"), "{err}");
+    }
+
+    #[test]
+    fn parallelism_knob_defaults_and_parses() {
+        let doc = parse_ini(SAMPLE).unwrap();
+        let c = ExperimentConfig::from_ini(&doc).unwrap();
+        assert_eq!(c.parallelism, 1, "absent key means sequential");
+
+        let with_knob = SAMPLE.replace("iterations = 5", "iterations = 5\nparallelism = 4");
+        let doc = parse_ini(&with_knob).unwrap();
+        let c = ExperimentConfig::from_ini(&doc).unwrap();
+        assert_eq!(c.parallelism, 4);
+
+        let bad = SAMPLE.replace("iterations = 5", "iterations = 5\nparallelism = lots");
+        let doc = parse_ini(&bad).unwrap();
+        let err = ExperimentConfig::from_ini(&doc).unwrap_err().to_string();
+        assert!(err.contains("parallelism"), "{err}");
     }
 
     #[test]

@@ -44,6 +44,7 @@ fn base(id: &str, machine: &str, op: &str, scaling: Scaling) -> ExperimentConfig
         total_rows,
         iterations: 10,
         seed: 0xC71,
+        parallelism: 1,
     }
 }
 

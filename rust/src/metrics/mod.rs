@@ -90,6 +90,30 @@ pub mod mem {
             viewed: T_VIEWED.with(|c| c.get()),
         }
     }
+
+    /// Remove `delta` from the *executing* thread's counters so it can be
+    /// credited elsewhere via [`transfer_in`].
+    ///
+    /// This is the thread-pool handoff: a pooled job measures its own
+    /// delta, transfers it out of whichever thread ran it (a worker or
+    /// the scope's helping caller — subtracting first makes both cases
+    /// double-count-free), and the scope transfers the accumulated total
+    /// into the calling thread. Globals are untouched; they were already
+    /// exact. Uses wrapping arithmetic so a worker whose counters started
+    /// at 0 stays consistent under `since`-style deltas.
+    pub fn transfer_out(delta: MemCounters) {
+        T_MATERIALIZED
+            .with(|c| c.set(c.get().wrapping_sub(delta.materialized)));
+        T_VIEWED.with(|c| c.set(c.get().wrapping_sub(delta.viewed)));
+    }
+
+    /// Credit `delta` (previously [`transfer_out`]-ed on other threads)
+    /// to this thread's counters.
+    pub fn transfer_in(delta: MemCounters) {
+        T_MATERIALIZED
+            .with(|c| c.set(c.get().wrapping_add(delta.materialized)));
+        T_VIEWED.with(|c| c.set(c.get().wrapping_add(delta.viewed)));
+    }
 }
 
 /// Simple scope timer returning seconds.

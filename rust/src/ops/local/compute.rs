@@ -35,6 +35,9 @@
 use crate::df::{ChunkedTable, Column, DataType, Schema, Table};
 use crate::error::{Error, Result};
 use crate::plan::expr::{Expr, Scalar};
+use crate::util::pool::{self, ThreadPool};
+
+use super::sort::PAR_MIN_ROWS;
 
 /// Binary arithmetic over numeric columns (elementwise).
 ///
@@ -580,10 +583,42 @@ pub fn eval_predicate(t: &Table, expr: &Expr) -> Result<Vec<bool>> {
 /// as maximal zero-copy runs ([`filter_view`]) — no chunk is ever
 /// concatenated, so the filter materializes only the masks.
 pub fn filter_view_expr(ct: &ChunkedTable, pred: &Expr) -> Result<ChunkedTable> {
+    if ct.num_rows() >= PAR_MIN_ROWS
+        && ct.num_chunks() > 1
+        && pool::parallelism() > 1
+    {
+        return filter_view_expr_par(ct, pred, pool::global());
+    }
     let mut out = ChunkedTable::empty(ct.schema().clone());
     for chunk in ct.chunks() {
         let mask = eval_mask(chunk, pred)?;
         for run in filter_view(chunk, mask.as_bool()?)?.into_chunks() {
+            out.push(run)?;
+        }
+    }
+    Ok(out)
+}
+
+/// [`filter_view_expr`] on an explicit thread pool: chunks are the
+/// morsels — each evaluates its mask and slices its kept-row runs
+/// concurrently (still zero-copy windows), and the per-chunk run lists
+/// are stitched back **in chunk order**, so the output is bit-identical
+/// to the sequential walk. On error the lowest-chunk-index failure is
+/// returned, matching the sequential early-exit's reported error.
+pub fn filter_view_expr_par(
+    ct: &ChunkedTable,
+    pred: &Expr,
+    pool: &ThreadPool,
+) -> Result<ChunkedTable> {
+    let chunks = ct.chunks();
+    let parts: Vec<Result<Vec<Table>>> =
+        pool.run_indexed(chunks.len(), |i| {
+            let mask = eval_mask(&chunks[i], pred)?;
+            Ok(filter_view(&chunks[i], mask.as_bool()?)?.into_chunks())
+        });
+    let mut out = ChunkedTable::empty(ct.schema().clone());
+    for part in parts {
+        for run in part? {
             out.push(run)?;
         }
     }
@@ -896,6 +931,45 @@ mod tests {
         assert_eq!(mem::thread().since(before).materialized, 0);
         assert_eq!(out.num_rows(), 3);
         assert_eq!(out.compact().column(0).as_i64().unwrap(), &[2, 3, 4]);
+    }
+
+    #[test]
+    fn parallel_filter_is_bit_identical_to_sequential() {
+        // Many small chunks so several morsels exist per thread count.
+        let chunks: Vec<Table> = (0..16i64)
+            .map(|c| {
+                Table::new(
+                    Schema::of(&[
+                        ("k", DataType::Int64),
+                        ("v", DataType::Float64),
+                    ]),
+                    vec![
+                        Column::from_i64(
+                            (0..50i64).map(|i| (c * 50 + i) % 7).collect(),
+                        ),
+                        Column::from_f64(
+                            (0..50i64)
+                                .map(|i| (c * 50 + i) as f64 * 0.5)
+                                .collect(),
+                        ),
+                    ],
+                )
+                .unwrap()
+            })
+            .collect();
+        let ct = ChunkedTable::from_tables(chunks).unwrap();
+        let pred = col("k").ge(lit(2)).and(col("v").lt(lit(300.0)));
+        let seq = filter_view_expr(&ct, &pred).unwrap();
+        for threads in [1usize, 2, 4] {
+            let pool = crate::util::pool::ThreadPool::new(threads);
+            let par = filter_view_expr_par(&ct, &pred, &pool).unwrap();
+            assert_eq!(par.num_chunks(), seq.num_chunks(), "threads={threads}");
+            assert_eq!(par.compact(), seq.compact(), "threads={threads}");
+        }
+        // Errors surface from the lowest failing chunk, like sequential.
+        let pool = crate::util::pool::ThreadPool::new(4);
+        let bad = col("k") / lit(0);
+        assert!(filter_view_expr_par(&ct, &bad.ge(lit(0)), &pool).is_err());
     }
 
     #[test]

@@ -11,6 +11,9 @@ use std::collections::HashMap;
 use crate::df::{Column, DataType, Schema, Table};
 use crate::error::{Error, Result};
 use crate::util::hash::CsrIndex;
+use crate::util::pool::{self, ThreadPool};
+
+use super::sort::{morsel_ranges, PAR_MIN_ROWS};
 
 /// Aggregations over a float64 value column.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -123,11 +126,31 @@ pub fn groupby_agg(
         // limit.
         return groupby_agg_hashmap(t, key_col, val_col, agg);
     }
+    if keys.len() >= PAR_MIN_ROWS && pool::parallelism() > 1 {
+        return groupby_agg_par(t, key_col, val_col, agg, pool::global());
+    }
 
     let index = CsrIndex::build(keys);
+    let (gkeys, accs) =
+        sweep_buckets(&index, keys, vals, 0, index.num_buckets());
+    finish_groups(t, key_col, val_col, agg, gkeys, accs)
+}
+
+/// Aggregate buckets `lo..hi` of the CSR index in order, returning the
+/// groups discovered (keys + accumulators) in first-seen order. Buckets
+/// are independent — a key hashes to exactly one bucket — so the
+/// sequential whole-table sweep is exactly the concatenation of any
+/// partition of its bucket range.
+fn sweep_buckets(
+    index: &CsrIndex,
+    keys: &[i64],
+    vals: &[f64],
+    lo: usize,
+    hi: usize,
+) -> (Vec<i64>, Vec<Acc>) {
     let mut gkeys: Vec<i64> = Vec::new();
     let mut accs: Vec<Acc> = Vec::new();
-    for b in 0..index.num_buckets() {
+    for b in lo..hi {
         // Groups emitted for this bucket start here; distinct keys that
         // share the bucket are found by scanning only this tail.
         let bucket_groups = gkeys.len();
@@ -144,14 +167,70 @@ pub fn groupby_agg(
             }
         }
     }
+    (gkeys, accs)
+}
 
-    // Deterministic output order: permute groups by key.
+/// Deterministic output order: permute groups by key (keys are globally
+/// distinct — one bucket per key — so the unstable sort is total).
+fn finish_groups(
+    t: &Table,
+    key_col: usize,
+    val_col: usize,
+    agg: AggFn,
+    gkeys: Vec<i64>,
+    accs: Vec<Acc>,
+) -> Result<Table> {
     let mut perm: Vec<u32> = (0..gkeys.len() as u32).collect();
     perm.sort_unstable_by_key(|&g| gkeys[g as usize]);
     let out_keys: Vec<i64> = perm.iter().map(|&g| gkeys[g as usize]).collect();
     let out_vals: Vec<f64> =
         perm.iter().map(|&g| accs[g as usize].finish(agg)).collect();
     agg_output(t, key_col, val_col, agg, out_keys, out_vals)
+}
+
+/// [`groupby_agg`] on an explicit thread pool: parallel CSR build, then
+/// contiguous **bucket-range** morsels swept concurrently.
+///
+/// **Determinism:** each bucket's rows are visited in ascending row
+/// order (CSR scatter stability), so per-group accumulation — float sums
+/// included — is bit-identical to the sequential sweep; and since every
+/// key lives in exactly one bucket, concatenating per-morsel group lists
+/// in morsel order reproduces the sequential first-seen group order for
+/// any split. The final by-key permutation is over globally distinct
+/// keys, hence fully deterministic.
+pub fn groupby_agg_par(
+    t: &Table,
+    key_col: usize,
+    val_col: usize,
+    agg: AggFn,
+    pool: &ThreadPool,
+) -> Result<Table> {
+    let (keys, vals) = agg_input(t, key_col, val_col)?;
+    if keys.len() >= u32::MAX as usize {
+        return groupby_agg_hashmap(t, key_col, val_col, agg);
+    }
+    let index = CsrIndex::build_par(keys, pool);
+    let nt = pool.size().min(keys.len() / PAR_MIN_ROWS).max(1);
+    let (gkeys, accs) = if nt <= 1 {
+        sweep_buckets(&index, keys, vals, 0, index.num_buckets())
+    } else {
+        // 4 morsels per worker: bucket ranges carry uneven row counts
+        // under skew; finer morsels rebalance at no determinism cost.
+        let morsels = morsel_ranges(index.num_buckets(), nt * 4);
+        let parts = pool.run_indexed(morsels.len(), |m| {
+            let (lo, hi) = morsels[m];
+            sweep_buckets(&index, keys, vals, lo, hi)
+        });
+        let total = parts.iter().map(|(g, _)| g.len()).sum();
+        let mut gkeys: Vec<i64> = Vec::with_capacity(total);
+        let mut accs: Vec<Acc> = Vec::with_capacity(total);
+        for (g, a) in parts {
+            gkeys.extend_from_slice(&g);
+            accs.extend_from_slice(&a);
+        }
+        (gkeys, accs)
+    };
+    finish_groups(t, key_col, val_col, agg, gkeys, accs)
 }
 
 /// Pre-CSR groupby: `HashMap<i64, Acc>` accumulation. Kept as the
@@ -244,6 +323,33 @@ mod tests {
                 assert_eq!(csr, legacy, "{agg:?}");
             }
         });
+    }
+
+    #[test]
+    fn parallel_groupby_is_bit_identical_to_sequential() {
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            for n in [0usize, 100, PAR_MIN_ROWS, 3 * PAR_MIN_ROWS] {
+                // Irrational-step values make float-sum order observable.
+                let keys: Vec<i64> =
+                    (0..n as i64).map(|i| (i * 31) % 257).collect();
+                let vals: Vec<f64> =
+                    (0..n).map(|i| (i as f64) * 0.7 + 0.1).collect();
+                let tbl = t(keys, vals);
+                for agg in [
+                    AggFn::Sum,
+                    AggFn::Count,
+                    AggFn::Min,
+                    AggFn::Max,
+                    AggFn::Mean,
+                ] {
+                    let par =
+                        groupby_agg_par(&tbl, 0, 1, agg, &pool).unwrap();
+                    let seq = groupby_agg_hashmap(&tbl, 0, 1, agg).unwrap();
+                    assert_eq!(par, seq, "threads={threads} n={n} {agg:?}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -14,8 +14,9 @@ use std::collections::HashMap;
 use crate::df::{Column, Table, Utf8Builder};
 use crate::error::{Error, Result};
 use crate::util::hash::{CsrIndex, SplitMixBuild};
+use crate::util::pool::{self, ThreadPool};
 
-use super::sort::{sort_table, SortKey};
+use super::sort::{morsel_ranges, sort_table, SortKey, PAR_MIN_ROWS};
 
 /// Miss sentinel in right-side probe index vectors: the row had no match
 /// and takes the [`FillPolicy`] values. Real row ids are `< MISS`, which
@@ -211,31 +212,121 @@ pub fn hash_join_filled(
     how: JoinType,
     fill: &FillPolicy,
 ) -> Result<Table> {
+    if left.num_rows().max(right.num_rows()) >= PAR_MIN_ROWS
+        && pool::parallelism() > 1
+    {
+        return hash_join_filled_par(
+            left,
+            right,
+            left_key,
+            right_key,
+            how,
+            fill,
+            pool::global(),
+        );
+    }
     check_u32_rows(left, right)?;
     let lk = key_col(left, left_key)?;
     let rk = key_col(right, right_key)?;
-
     let index = CsrIndex::build(rk);
+    let (pairs_l, pairs_r) = probe_pairs(lk, rk, &index, how, 0);
+    assemble(left, right, right_key, pairs_l, pairs_r, fill)
+}
+
+/// Probe `lk[lo..]` against the CSR build side; row ids are absolute
+/// (`lo +` local offset). Candidates share the hash bucket; re-checking
+/// the key in ascending candidate order keeps the output bit-identical
+/// to the legacy map-based probe.
+fn probe_pairs(
+    lk: &[i64],
+    rk: &[i64],
+    index: &CsrIndex,
+    how: JoinType,
+    lo: usize,
+) -> (Vec<u32>, Vec<u32>) {
     let mut pairs_l: Vec<u32> = Vec::new();
     let mut pairs_r: Vec<u32> = Vec::new();
     for (i, &k) in lk.iter().enumerate() {
         let mut matched = false;
-        // Candidates share the hash bucket; re-check the key. Ascending
-        // candidate order keeps the output bit-identical to the legacy
-        // map-based probe.
         for &j in index.candidates(k) {
             if rk[j as usize] == k {
-                pairs_l.push(i as u32);
+                pairs_l.push((lo + i) as u32);
                 pairs_r.push(j);
                 matched = true;
             }
         }
         if !matched && how == JoinType::Left {
-            pairs_l.push(i as u32);
+            pairs_l.push((lo + i) as u32);
             pairs_r.push(MISS);
         }
     }
+    (pairs_l, pairs_r)
+}
+
+/// [`hash_join_filled`] on an explicit thread pool: the CSR build runs
+/// [`CsrIndex::build_par`] and the probe walks contiguous left-row
+/// morsels concurrently.
+///
+/// **Determinism:** each morsel probes its left rows in ascending order
+/// and emits a local pair list; concatenating the lists in morsel order
+/// reproduces the sequential probe's output exactly, for any morsel
+/// split — so the join is bit-identical to the single-threaded kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn hash_join_filled_par(
+    left: &Table,
+    right: &Table,
+    left_key: usize,
+    right_key: usize,
+    how: JoinType,
+    fill: &FillPolicy,
+    pool: &ThreadPool,
+) -> Result<Table> {
+    check_u32_rows(left, right)?;
+    let lk = key_col(left, left_key)?;
+    let rk = key_col(right, right_key)?;
+    let index = CsrIndex::build_par(rk, pool);
+    let nt = pool.size().min(lk.len() / PAR_MIN_ROWS).max(1);
+    let (pairs_l, pairs_r) = if nt <= 1 {
+        probe_pairs(lk, rk, &index, how, 0)
+    } else {
+        // 4 morsels per worker: skewed keys make probe cost per morsel
+        // uneven, and finer morsels rebalance without hurting the
+        // deterministic merge (order is by morsel index either way).
+        let morsels = morsel_ranges(lk.len(), nt * 4);
+        let parts = pool.run_indexed(morsels.len(), |m| {
+            let (lo, hi) = morsels[m];
+            probe_pairs(&lk[lo..hi], rk, &index, how, lo)
+        });
+        let total = parts.iter().map(|(l, _)| l.len()).sum();
+        let mut pairs_l: Vec<u32> = Vec::with_capacity(total);
+        let mut pairs_r: Vec<u32> = Vec::with_capacity(total);
+        for (l, r) in parts {
+            pairs_l.extend_from_slice(&l);
+            pairs_r.extend_from_slice(&r);
+        }
+        (pairs_l, pairs_r)
+    };
     assemble(left, right, right_key, pairs_l, pairs_r, fill)
+}
+
+/// [`hash_join`] on an explicit thread pool (zeros fill).
+pub fn hash_join_par(
+    left: &Table,
+    right: &Table,
+    left_key: usize,
+    right_key: usize,
+    how: JoinType,
+    pool: &ThreadPool,
+) -> Result<Table> {
+    hash_join_filled_par(
+        left,
+        right,
+        left_key,
+        right_key,
+        how,
+        &FillPolicy::zeros(),
+        pool,
+    )
 }
 
 /// Pre-CSR hash join: `HashMap<i64, Vec<u32>>` build side (one heap
@@ -491,6 +582,31 @@ mod tests {
                 assert_eq!(csr, legacy, "{how:?}");
             }
         });
+    }
+
+    #[test]
+    fn parallel_join_is_bit_identical_to_sequential() {
+        // Straddle the morsel threshold; duplicate-heavy keys make the
+        // pair order observable.
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            for n in [0usize, 64, PAR_MIN_ROWS, 3 * PAR_MIN_ROWS] {
+                // ~6 duplicates per key at the largest n (order matters)
+                // without exploding the inner-join output size.
+                let keys_l: Vec<i64> =
+                    (0..n as i64).map(|i| (i * 7) % 2048).collect();
+                let keys_r: Vec<i64> =
+                    (0..n as i64).map(|i| (i * 5) % 2048).collect();
+                let vals: Vec<i64> = (0..n as i64).collect();
+                let l = t(keys_l, vals.clone());
+                let r = t(keys_r, vals);
+                for how in [JoinType::Inner, JoinType::Left] {
+                    let par = hash_join_par(&l, &r, 0, 0, how, &pool).unwrap();
+                    let seq = hash_join_hashmap(&l, &r, 0, 0, how).unwrap();
+                    assert_eq!(par, seq, "threads={threads} n={n} {how:?}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -8,15 +8,16 @@ mod unique;
 
 pub use compute::{
     binary_op, cast, compare_scalar, eval_expr, eval_mask, eval_predicate,
-    filter_view, filter_view_expr, scalar_op_i64, with_column, BinOp, CmpOp,
+    filter_view, filter_view_expr, filter_view_expr_par, scalar_op_i64,
+    with_column, BinOp, CmpOp,
 };
-pub use groupby::{groupby_agg, groupby_agg_hashmap, AggFn};
+pub use groupby::{groupby_agg, groupby_agg_hashmap, groupby_agg_par, AggFn};
 pub use join::{
-    hash_join, hash_join_filled, hash_join_hashmap, nested_loop_join,
-    sort_merge_join, FillPolicy, JoinType,
+    hash_join, hash_join_filled, hash_join_filled_par, hash_join_hashmap,
+    hash_join_par, nested_loop_join, sort_merge_join, FillPolicy, JoinType,
 };
 pub use sort::{
     is_sorted_by_key, merge_sorted, merge_sorted_per_row, sort_table,
-    sort_table_comparator, sort_table_multi, SortKey,
+    sort_table_comparator, sort_table_multi, sort_table_par, SortKey,
 };
 pub use unique::{unique_by_key, unique_rows};

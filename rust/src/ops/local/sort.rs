@@ -11,6 +11,18 @@
 
 use crate::df::{Column, Table, Utf8Builder};
 use crate::error::{Error, Result};
+use crate::util::pool::{self, SharedSlice, ThreadPool};
+
+/// Below this row count the parallel kernels fall back to their
+/// sequential twins: morsel scheduling and per-thread histogram merges
+/// don't amortize on small inputs.
+pub(crate) const PAR_MIN_ROWS: usize = 4096;
+
+/// Split `0..n` into `nt` contiguous morsels (last may be short).
+pub(crate) fn morsel_ranges(n: usize, nt: usize) -> Vec<(usize, usize)> {
+    let chunk = n.div_ceil(nt.max(1)).max(1);
+    (0..nt).map(|t| ((t * chunk).min(n), ((t + 1) * chunk).min(n))).collect()
+}
 
 /// A sort key: column index + direction.
 #[derive(Clone, Copy, Debug)]
@@ -120,25 +132,161 @@ fn radix_sort_rows(keys: &[i64], ascending: bool) -> Vec<u32> {
     src.into_iter().map(|(_, i)| i).collect()
 }
 
+/// Morsel-parallel twin of [`radix_sort_rows`]: every counting pass runs
+/// per-thread histograms over contiguous morsels, a serial prefix-sum
+/// merge assigns each (morsel, digit) a private absolute write range,
+/// and the scatter writes through [`SharedSlice`] into disjoint ranges.
+///
+/// **Determinism:** within one digit value the write ranges are laid out
+/// in morsel order, and morsels are contiguous ascending ranges of the
+/// pass input — so the parallel scatter places pairs in exactly the
+/// order the sequential stable forward scan would, for *any* morsel
+/// split. Pass-skip decisions reuse the merged global histograms, whose
+/// totals are permutation-invariant, so both kernels execute the same
+/// passes. The result is bit-identical to [`radix_sort_rows`].
+///
+/// Per-pass digit counts are **recomputed** each pass (the pass input is
+/// a new permutation every time); only the upfront 8-digit histograms
+/// can be built once.
+fn radix_sort_rows_par(
+    keys: &[i64],
+    ascending: bool,
+    pool: &ThreadPool,
+) -> Vec<u32> {
+    let n = keys.len();
+    let nt = pool.size().min(n / PAR_MIN_ROWS).max(1);
+    if nt <= 1 {
+        return radix_sort_rows(keys, ascending);
+    }
+    let dir = if ascending { 0u64 } else { !0u64 };
+    let morsels = morsel_ranges(n, nt);
+    let mut src: Vec<(u64, u32)> = vec![(0, 0); n];
+    {
+        let shared = SharedSlice::new(&mut src);
+        pool.run_indexed(nt, |t| {
+            let (lo, hi) = morsels[t];
+            for (off, &k) in keys[lo..hi].iter().enumerate() {
+                let i = lo + off;
+                // SAFETY: morsels are disjoint index ranges; reads only
+                // after the join.
+                unsafe {
+                    shared.write(
+                        i,
+                        (((k as u64) ^ (1u64 << 63)) ^ dir, i as u32),
+                    )
+                };
+            }
+        });
+    }
+    // Upfront global 8-digit histograms (per-morsel, then merged): used
+    // only for the pass-skip decision, which is permutation-invariant.
+    let partials: Vec<Vec<[u32; 256]>> = pool.run_indexed(nt, |t| {
+        let (lo, hi) = morsels[t];
+        let mut h = vec![[0u32; 256]; 8];
+        for &(u, _) in &src[lo..hi] {
+            for (d, hd) in h.iter_mut().enumerate() {
+                hd[((u >> (d * 8)) & 0xFF) as usize] += 1;
+            }
+        }
+        h
+    });
+    let mut hist = vec![[0u32; 256]; 8];
+    for p in &partials {
+        for (hd, pd) in hist.iter_mut().zip(p) {
+            for (c, &a) in hd.iter_mut().zip(pd.iter()) {
+                *c += a;
+            }
+        }
+    }
+    let mut dst: Vec<(u64, u32)> = vec![(0, 0); n];
+    for (d, h) in hist.iter().enumerate() {
+        if h.iter().any(|&c| c as usize == n) {
+            continue;
+        }
+        let shift = d * 8;
+        // Per-pass per-morsel digit counts over the *current* src.
+        let mut counts: Vec<[u32; 256]> = pool.run_indexed(nt, |t| {
+            let (lo, hi) = morsels[t];
+            let mut c = [0u32; 256];
+            for &(u, _) in &src[lo..hi] {
+                c[((u >> shift) & 0xFF) as usize] += 1;
+            }
+            c
+        });
+        // Serial merge: cursor[t][digit] = Σ_{digit' < digit} total +
+        // Σ_{t' < t} counts[t'][digit] — absolute disjoint write ranges,
+        // morsel-major within each digit.
+        let mut running = 0u32;
+        for digit in 0..256 {
+            for c in counts.iter_mut() {
+                let start = running;
+                running += c[digit];
+                c[digit] = start;
+            }
+        }
+        {
+            let shared = SharedSlice::new(&mut dst);
+            let cursors: Vec<std::sync::Mutex<[u32; 256]>> =
+                counts.into_iter().map(std::sync::Mutex::new).collect();
+            pool.run_indexed(nt, |t| {
+                let (lo, hi) = morsels[t];
+                let mut cur = cursors[t].lock().unwrap();
+                for &(u, i) in &src[lo..hi] {
+                    let digit = ((u >> shift) & 0xFF) as usize;
+                    // SAFETY: each (morsel, digit) owns a private range
+                    // by the prefix merge; reads only after the join.
+                    unsafe { shared.write(cur[digit] as usize, (u, i)) };
+                    cur[digit] += 1;
+                }
+            });
+        }
+        std::mem::swap(&mut src, &mut dst);
+    }
+    src.into_iter().map(|(_, i)| i).collect()
+}
+
 /// Stable sort by a single int64/utf8/float column.
 pub fn sort_table(t: &Table, key: SortKey) -> Result<Table> {
     sort_table_multi(t, &[key])
 }
 
 /// Stable sort by multiple keys (lexicographic). Single-key int64 sorts of
-/// **either direction** dispatch to the LSD radix kernel; everything else
-/// takes [`sort_table_comparator`].
+/// **either direction** dispatch to the LSD radix kernel — morsel-parallel
+/// on the global pool when it has >1 worker and the input is large enough
+/// to amortize (bit-identical either way); everything else takes
+/// [`sort_table_comparator`].
 pub fn sort_table_multi(t: &Table, keys: &[SortKey]) -> Result<Table> {
     validate_keys(t, keys)?;
     if let [k] = keys {
         if let Column::Int64(v) = t.column(k.col) {
             if v.len() < u32::MAX as usize {
-                let order = radix_sort_rows(v.as_slice(), k.ascending);
+                let s = v.as_slice();
+                let order =
+                    if s.len() >= PAR_MIN_ROWS && pool::parallelism() > 1 {
+                        radix_sort_rows_par(s, k.ascending, pool::global())
+                    } else {
+                        radix_sort_rows(s, k.ascending)
+                    };
                 return Ok(t.take_u32(&order));
             }
         }
     }
     sort_table_comparator(t, keys)
+}
+
+/// [`sort_table`] on an explicit thread pool: single-key int64 sorts run
+/// the morsel-parallel radix kernel whenever `pool` has more than one
+/// worker (bit-identical to the sequential kernel — see
+/// [`radix_sort_rows_par`]); other shapes fall back to the comparator.
+pub fn sort_table_par(t: &Table, key: SortKey, pool: &ThreadPool) -> Result<Table> {
+    validate_keys(t, &[key])?;
+    if let Column::Int64(v) = t.column(key.col) {
+        if v.len() < u32::MAX as usize {
+            let order = radix_sort_rows_par(v.as_slice(), key.ascending, pool);
+            return Ok(t.take_u32(&order));
+        }
+    }
+    sort_table_comparator(t, &[key])
 }
 
 /// The generic comparator sort: index `sort_by` indirecting into the key
@@ -421,6 +569,30 @@ mod tests {
                 assert_eq!(fast, oracle, "ascending={}", key.ascending);
             }
         });
+    }
+
+    #[test]
+    fn parallel_radix_is_bit_identical_to_sequential() {
+        // Straddle the nt>1 threshold (needs n >= 2 * PAR_MIN_ROWS) and
+        // include duplicate-heavy keys so stability is observable.
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            for n in [0usize, 100, PAR_MIN_ROWS, 3 * PAR_MIN_ROWS] {
+                let keys: Vec<i64> =
+                    (0..n as i64).map(|i| (i * 37) % 11 - 5).collect();
+                let vals: Vec<f64> = (0..n).map(|i| i as f64).collect();
+                let t = table(keys, vals);
+                for key in [SortKey::asc(0), SortKey::desc(0)] {
+                    let par = sort_table_par(&t, key, &pool).unwrap();
+                    let seq = sort_table_comparator(&t, &[key]).unwrap();
+                    assert_eq!(
+                        par, seq,
+                        "threads={threads} n={n} asc={}",
+                        key.ascending
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -66,9 +66,13 @@ impl TaskResult {
     }
 }
 
+type TerminalCallback = Box<dyn FnOnce(Result<TaskResult>) + Send>;
+
 struct TaskInner {
     state: Mutex<(TaskState, Option<TaskResult>)>,
     cv: Condvar,
+    /// Callbacks fired once, on the terminal transition (under no lock).
+    callbacks: Mutex<Vec<TerminalCallback>>,
 }
 
 /// Shared handle to a submitted task; `wait()` blocks until terminal.
@@ -98,6 +102,7 @@ impl TaskHandle {
             inner: Arc::new(TaskInner {
                 state: Mutex::new((TaskState::New, None)),
                 cv: Condvar::new(),
+                callbacks: Mutex::new(Vec::new()),
             }),
         }
     }
@@ -108,6 +113,11 @@ impl TaskHandle {
 
     /// Advance the state machine; panics on illegal transitions (these are
     /// coordinator bugs, not runtime conditions).
+    ///
+    /// A terminal transition *without* a result (e.g. `Canceled`) still
+    /// fires registered [`on_terminal`](TaskHandle::on_terminal)
+    /// callbacks — with the "terminal without result" error — so
+    /// completion listeners can never hang on a canceled task.
     pub fn advance(&self, next: TaskState) {
         let mut st = self.inner.state.lock().unwrap();
         assert!(
@@ -118,9 +128,14 @@ impl TaskHandle {
         );
         st.0 = next;
         self.inner.cv.notify_all();
+        drop(st);
+        if next.is_terminal() {
+            self.fire_callbacks();
+        }
     }
 
-    /// Terminal transition carrying the result.
+    /// Terminal transition carrying the result; fires `on_terminal`
+    /// callbacks after releasing the state lock.
     pub fn finish(&self, result: TaskResult) {
         let mut st = self.inner.state.lock().unwrap();
         assert!(
@@ -132,6 +147,46 @@ impl TaskHandle {
         st.0 = result.state;
         st.1 = Some(result);
         self.inner.cv.notify_all();
+        drop(st);
+        self.fire_callbacks();
+    }
+
+    /// What a completion listener receives: the stored result, or the
+    /// "terminal without result" error for result-less terminal states.
+    fn terminal_outcome(&self) -> Result<TaskResult> {
+        let st = self.inner.state.lock().unwrap();
+        debug_assert!(st.0.is_terminal());
+        st.1.clone().ok_or_else(|| {
+            Error::Pilot(format!("task {} terminal without result", self.id))
+        })
+    }
+
+    /// Drain and invoke the registered callbacks (no locks held while a
+    /// callback runs — callbacks may take locks of their own).
+    fn fire_callbacks(&self) {
+        let drained: Vec<TerminalCallback> =
+            std::mem::take(&mut *self.inner.callbacks.lock().unwrap());
+        for cb in drained {
+            cb(self.terminal_outcome());
+        }
+    }
+
+    /// Register a one-shot completion callback, invoked with the task's
+    /// outcome when it reaches a terminal state (on whichever thread
+    /// drives the terminal transition). If the task is already terminal,
+    /// the callback runs inline before this returns.
+    ///
+    /// This is how the threaded pipeline executors observe completion
+    /// without parking a waiter thread per node.
+    pub fn on_terminal(&self, cb: impl FnOnce(Result<TaskResult>) + Send + 'static) {
+        {
+            let st = self.inner.state.lock().unwrap();
+            if !st.0.is_terminal() {
+                self.inner.callbacks.lock().unwrap().push(Box::new(cb));
+                return;
+            }
+        }
+        cb(self.terminal_outcome());
     }
 
     /// Block until the task reaches a terminal state; returns the result.
@@ -200,6 +255,34 @@ mod tests {
         let r = waiter.join().unwrap();
         assert_eq!(r.state, TaskState::Failed);
         assert!(!r.is_done());
+    }
+
+    #[test]
+    fn on_terminal_fires_on_finish_and_inline_when_already_terminal() {
+        let h = TaskHandle::new(5, "t");
+        h.advance(TaskState::Submitted);
+        h.advance(TaskState::AgentScheduling);
+        h.advance(TaskState::Executing);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let tx2 = tx.clone();
+        h.on_terminal(move |r| tx2.send(r.unwrap().state).unwrap());
+        h.finish(result(5, TaskState::Done));
+        assert_eq!(rx.recv().unwrap(), TaskState::Done);
+        // Already-terminal registration runs inline.
+        h.on_terminal(move |r| tx.send(r.unwrap().state).unwrap());
+        assert_eq!(rx.recv().unwrap(), TaskState::Done);
+    }
+
+    #[test]
+    fn on_terminal_fires_err_for_resultless_cancel() {
+        let h = TaskHandle::new(6, "t");
+        h.advance(TaskState::Submitted);
+        let (tx, rx) = std::sync::mpsc::channel();
+        h.on_terminal(move |r| tx.send(r.is_err()).unwrap());
+        // Canceled is terminal but carries no TaskResult: listeners must
+        // still hear about it (as an error), not hang forever.
+        h.advance(TaskState::Canceled);
+        assert!(rx.recv().unwrap());
     }
 
     #[test]

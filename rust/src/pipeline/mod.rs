@@ -3,7 +3,7 @@
 //! can further be improved by identifying independent branches ... and
 //! executing such independent tasks parallelly.").
 //!
-//! A [`Pipeline`] is a DAG of [`TaskDescription`]s. Two executors ship:
+//! A [`Pipeline`] is a DAG of [`TaskDescription`]s. Three executors ship:
 //!
 //! * **Dataflow** ([`Pipeline::run_dataflow`], the default behind
 //!   [`Pipeline::execute`]) — an event-driven, dependency-counting
@@ -11,7 +11,17 @@
 //!   moment its in-degree drops to zero, so an independent ready branch
 //!   never waits on an unrelated slow task, and ranks freed by one node are
 //!   reused by the next immediately. Ready-set ordering is pluggable via
-//!   [`ReadyPolicy`] (FIFO vs critical-path-first).
+//!   [`ReadyPolicy`] (FIFO vs critical-path-first). Completion events feed
+//!   the dependency counters over a channel, posted by per-task
+//!   [`on_terminal`](crate::pilot::TaskHandle::on_terminal) callbacks — no
+//!   parked waiter thread per node.
+//! * **Pooled** ([`Pipeline::run_pooled`]) — the same dependency-counting
+//!   scheduler, but the ready set executes **concurrently on a
+//!   [`ThreadPool`](crate::util::pool::ThreadPool)** through a caller
+//!   -supplied task closure (no pilot required): independent ready nodes
+//!   run in parallel under the chosen [`ReadyPolicy`] submission order,
+//!   completions flow back over a channel, and a panicking task surfaces
+//!   as a failed node instead of wedging the scheduler.
 //! * **Waves** ([`Pipeline::run_waves`]) — the original topological-wave
 //!   executor, kept as the comparison baseline: every wave is a barrier, so
 //!   a slow task in wave *k* stalls ready tasks in wave *k+1*
@@ -395,9 +405,12 @@ impl Pipeline {
                     submitted_s[i] = t0.elapsed().as_secs_f64();
                     match tm.submit(td) {
                         Ok(handle) => {
+                            // Completion callback, not a parked waiter
+                            // thread: the terminal transition itself posts
+                            // the event to the scheduler's channel.
                             let tx = tx.clone();
-                            std::thread::spawn(move || {
-                                let _ = tx.send((i, handle.wait()));
+                            handle.on_terminal(move |res| {
+                                let _ = tx.send((i, res));
                             });
                             inflight += 1;
                         }
@@ -454,6 +467,146 @@ impl Pipeline {
         Ok(PipelineRun { results, metrics })
     }
 
+    /// Dependency-counting execution on a shared-memory [`ThreadPool`]
+    /// (no pilot): the ready set runs **concurrently** through `exec`,
+    /// with nodes handed to the pool in [`ReadyPolicy`] order the moment
+    /// their last dependency completes. Completion events flow back over
+    /// a channel and drive the dependency counters, exactly like
+    /// [`Pipeline::run_dataflow`]. Table handoff works identically —
+    /// outputs are wired into consumers' staged inputs on the scheduler
+    /// thread, before the consumer job is enqueued.
+    ///
+    /// Results come back in node-id order, so for a deterministic `exec`
+    /// the returned vector is identical to [`Pipeline::run_sequential`]'s
+    /// regardless of pool size, policy, or completion interleaving.
+    ///
+    /// A task that panics inside `exec` is caught and surfaced as that
+    /// node's failure (fail-fast, like any failed node) — it never wedges
+    /// the scheduler or poisons the pool.
+    ///
+    /// [`ThreadPool`]: crate::util::pool::ThreadPool
+    pub fn run_pooled<F>(
+        &self,
+        pool: &crate::util::pool::ThreadPool,
+        policy: ReadyPolicy,
+        exec: F,
+    ) -> Result<Vec<TaskResult>>
+    where
+        F: Fn(TaskDescription) -> Result<TaskResult> + Send + Sync,
+    {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+
+        self.validate()?;
+        let n = self.nodes.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let keep = self.keep_flags();
+        let cp = self.chain_estimates();
+        let mut indeg: Vec<usize> = self.nodes.iter().map(|x| x.deps.len()).collect();
+        let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, node) in self.nodes.iter().enumerate() {
+            for &d in &node.deps {
+                dependents[d].push(i);
+            }
+        }
+
+        let (tx, rx) = mpsc::channel::<(usize, Result<TaskResult>)>();
+        let mut results: Vec<Option<TaskResult>> = (0..n).map(|_| None).collect();
+        let mut outputs: Vec<Option<Arc<ChunkedTable>>> =
+            (0..n).map(|_| None).collect();
+        let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut inflight = 0usize;
+        let mut failure: Option<String> = None;
+        let exec = &exec;
+
+        pool.scope(|s| {
+            loop {
+                if failure.is_none() {
+                    match policy {
+                        ReadyPolicy::Fifo => ready.sort_unstable(),
+                        ReadyPolicy::CriticalPathFirst => ready.sort_by(|&a, &b| {
+                            cp[b]
+                                .partial_cmp(&cp[a])
+                                .unwrap_or(std::cmp::Ordering::Equal)
+                                .then(a.cmp(&b))
+                        }),
+                    }
+                    for i in std::mem::take(&mut ready) {
+                        let td = self.prepared_td(i, &keep, &outputs);
+                        let name = td.name.clone();
+                        let tx = tx.clone();
+                        s.spawn(move || {
+                            // Catch panics *inside* the job so the scope
+                            // never re-panics for a task failure and the
+                            // scheduler always receives a completion event.
+                            let res = match catch_unwind(AssertUnwindSafe(|| {
+                                exec(td)
+                            })) {
+                                Ok(r) => r,
+                                Err(payload) => {
+                                    let msg = payload
+                                        .downcast_ref::<&str>()
+                                        .map(|s| s.to_string())
+                                        .or_else(|| {
+                                            payload.downcast_ref::<String>().cloned()
+                                        })
+                                        .unwrap_or_else(|| {
+                                            "unknown panic payload".to_string()
+                                        });
+                                    Err(Error::TaskFailed(format!(
+                                        "pipeline node '{name}' panicked: {msg}"
+                                    )))
+                                }
+                            };
+                            let _ = tx.send((i, res));
+                        });
+                        inflight += 1;
+                    }
+                }
+                if inflight == 0 {
+                    break;
+                }
+                let (i, res) = rx.recv().expect("pool job sends completion");
+                inflight -= 1;
+                match res {
+                    Ok(r) => {
+                        if r.is_done() {
+                            outputs[i] = r.output.clone();
+                            for &j in &dependents[i] {
+                                indeg[j] -= 1;
+                                if indeg[j] == 0 {
+                                    ready.push(j);
+                                }
+                            }
+                        } else if failure.is_none() {
+                            failure = Some(format!(
+                                "pipeline node {i} ('{}') failed: {}",
+                                r.name,
+                                r.error.clone().unwrap_or_default()
+                            ));
+                        }
+                        results[i] = Some(r);
+                    }
+                    Err(e) => {
+                        if failure.is_none() {
+                            failure = Some(format!(
+                                "pipeline node {i} failed: {e}"
+                            ));
+                        }
+                    }
+                }
+            }
+        });
+        if let Some(msg) = failure {
+            return Err(Error::TaskFailed(msg));
+        }
+        Ok(results
+            .into_iter()
+            .map(|r| r.expect("node executed"))
+            .collect())
+    }
+
     /// Wave-barrier execution (baseline): within a wave, tasks are all
     /// submitted before any is awaited; the next wave starts only when the
     /// whole wave has drained. Supports the same table handoff (a pipe
@@ -469,7 +622,7 @@ impl Pipeline {
         let mut submitted_s = vec![0.0f64; n];
         let mut finished_s = vec![0.0f64; n];
         for wave in waves {
-            // Waiter threads + a completion channel so finished_s reflects
+            // Completion callbacks + a channel so finished_s reflects
             // each node's actual completion, not the serial wait order.
             let (tx, rx) = mpsc::channel::<(usize, Result<TaskResult>)>();
             let mut inflight = 0usize;
@@ -478,8 +631,8 @@ impl Pipeline {
                 submitted_s[i] = t0.elapsed().as_secs_f64();
                 let handle = tm.submit(td)?;
                 let tx = tx.clone();
-                std::thread::spawn(move || {
-                    let _ = tx.send((i, handle.wait()));
+                handle.on_terminal(move |res| {
+                    let _ = tx.send((i, res));
                 });
                 inflight += 1;
             }

@@ -131,6 +131,79 @@ impl CsrIndex {
         CsrIndex { mask, offsets, rows }
     }
 
+    /// Parallel [`CsrIndex::build`]: per-morsel bucket counts merged by a
+    /// serial prefix sum into absolute write cursors, then a parallel
+    /// scatter into disjoint ranges. Morsels are contiguous row ranges,
+    /// so each bucket receives its rows in ascending row order — the
+    /// result is **bit-identical** to the sequential build for any
+    /// morsel split. Falls back to the sequential build when the pool
+    /// has one worker or the input is small (the per-morsel count
+    /// arrays cost O(threads × buckets) memory, only worth it for
+    /// inputs large enough to amortize).
+    pub fn build_par(keys: &[i64], pool: &crate::util::pool::ThreadPool) -> CsrIndex {
+        let nt = pool.size().min(keys.len() / 1024).max(1);
+        if nt <= 1 {
+            return CsrIndex::build(keys);
+        }
+        assert!(
+            keys.len() < u32::MAX as usize,
+            "CsrIndex row ids are u32 ({} rows given)",
+            keys.len()
+        );
+        let nbuckets = keys.len().next_power_of_two().max(16);
+        let mask = (nbuckets - 1) as u64;
+        let chunk = keys.len().div_ceil(nt);
+        let morsels: Vec<(usize, usize)> = (0..nt)
+            .map(|t| {
+                ((t * chunk).min(keys.len()), ((t + 1) * chunk).min(keys.len()))
+            })
+            .collect();
+        // Pass 1 (parallel): per-morsel bucket histograms.
+        let mut counts: Vec<Vec<u32>> = pool.run_indexed(nt, |t| {
+            let (lo, hi) = morsels[t];
+            let mut c = vec![0u32; nbuckets];
+            for &k in &keys[lo..hi] {
+                c[(splitmix64(k as u64) & mask) as usize] += 1;
+            }
+            c
+        });
+        // Pass 2 (serial): one prefix sum over (bucket, morsel) giving
+        // each morsel an absolute, disjoint write cursor per bucket —
+        // morsel-major within a bucket preserves ascending row order.
+        let mut offsets = vec![0u32; nbuckets + 1];
+        let mut running = 0u32;
+        for b in 0..nbuckets {
+            offsets[b] = running;
+            for c in counts.iter_mut() {
+                let start = running;
+                running += c[b];
+                c[b] = start; // becomes morsel-local cursor for bucket b
+            }
+        }
+        offsets[nbuckets] = running;
+        // Pass 3 (parallel): scatter rows through the private cursors.
+        let mut rows = vec![0u32; keys.len()];
+        {
+            let shared = crate::util::pool::SharedSlice::new(&mut rows);
+            let cursors: Vec<std::sync::Mutex<Vec<u32>>> =
+                counts.into_iter().map(std::sync::Mutex::new).collect();
+            pool.run_indexed(nt, |t| {
+                let (lo, hi) = morsels[t];
+                let mut cur = cursors[t].lock().unwrap();
+                for (i, &k) in keys[lo..hi].iter().enumerate() {
+                    let b = (splitmix64(k as u64) & mask) as usize;
+                    // SAFETY: cur[b] ranges over this morsel's private
+                    // slot range for bucket b (disjoint across morsels
+                    // by the prefix sum above); reads happen only after
+                    // run_indexed joins.
+                    unsafe { shared.write(cur[b] as usize, (lo + i) as u32) };
+                    cur[b] += 1;
+                }
+            });
+        }
+        CsrIndex { mask, offsets, rows }
+    }
+
     /// Candidate row ids whose key *may* equal `key` (same hash bucket),
     /// in ascending row order. Callers re-check the key per candidate.
     #[inline]
@@ -246,6 +319,20 @@ mod tests {
             .candidates(0)
             .iter()
             .all(|&r| [i64::MIN][r as usize] != 0));
+    }
+
+    #[test]
+    fn csr_build_par_matches_sequential_exactly() {
+        let pool = crate::util::pool::ThreadPool::new(4);
+        for n in [0usize, 1, 2048, 4096, 5000] {
+            let keys: Vec<i64> =
+                (0..n as i64).map(|i| (i * 31 + 7) % 97 - 11).collect();
+            let seq = CsrIndex::build(&keys);
+            let par = CsrIndex::build_par(&keys, &pool);
+            assert_eq!(par.mask, seq.mask, "n={n}");
+            assert_eq!(par.offsets, seq.offsets, "n={n}");
+            assert_eq!(par.rows, seq.rows, "n={n}");
+        }
     }
 
     #[test]

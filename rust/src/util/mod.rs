@@ -4,6 +4,7 @@
 
 pub mod bench_harness;
 pub mod hash;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod testkit;

@@ -1,0 +1,480 @@
+//! Shared-injector thread pool for the data plane (offline substitute
+//! for `rayon` — see DESIGN.md §2).
+//!
+//! Workers pull jobs from one mutex-protected deque (a shared injector
+//! queue). That is deliberately simpler than per-worker stealing deques:
+//! data-plane jobs are coarse morsels (thousands of rows each), so the
+//! single queue is never the bottleneck, and one lock keeps the pool
+//! auditable under ThreadSanitizer.
+//!
+//! Three layers build on the raw pool:
+//!
+//! * [`ThreadPool::scope`] — structured parallelism: borrow the caller's
+//!   stack, wait for every spawned job, re-raise panics. The scope's
+//!   waiting thread *helps* by draining queued jobs, so nested scopes
+//!   (a pooled pipeline node that itself runs a pooled kernel) cannot
+//!   deadlock even on a single-worker pool.
+//! * [`ThreadPool::run_indexed`] — the morsel primitive: run `f(0..n)`
+//!   across the pool and return the results **in index order**, which is
+//!   what makes every parallel kernel bit-identical to its sequential
+//!   twin (concatenating per-morsel outputs in morsel order reproduces
+//!   the sequential iteration order exactly).
+//! * [`SharedSlice`] — disjoint-index parallel scatter into one output
+//!   buffer, for kernels (radix partition, CSR build) whose merge step
+//!   has already assigned every writer a private range.
+//!
+//! Memory accounting: jobs run on pool threads, but
+//! [`crate::metrics::mem::thread`] is thread-local. Each scope job
+//! snapshots the worker's counters around the job body and *transfers*
+//! the delta out of the worker and into the scope; `scope` credits the
+//! total to the calling thread before returning. Net effect:
+//! `mem::thread()` on the caller sees exactly what a sequential run
+//! would have seen, and `mem::global()` is untouched (it was always
+//! exact). See `metrics::mem::transfer_out` / `transfer_in`.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::metrics::mem;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    jobs: Mutex<(VecDeque<Job>, bool)>, // (queue, shutdown flag)
+    ready: Condvar,
+}
+
+impl Queue {
+    fn push(&self, job: Job) {
+        let mut guard = self.jobs.lock().unwrap();
+        guard.0.push_back(job);
+        drop(guard);
+        self.ready.notify_one();
+    }
+
+    fn try_pop(&self) -> Option<Job> {
+        self.jobs.lock().unwrap().0.pop_front()
+    }
+
+    /// Blocking pop for workers; `None` means the pool is shutting down.
+    fn pop(&self) -> Option<Job> {
+        let mut guard = self.jobs.lock().unwrap();
+        loop {
+            if let Some(job) = guard.0.pop_front() {
+                return Some(job);
+            }
+            if guard.1 {
+                return None;
+            }
+            guard = self.ready.wait(guard).unwrap();
+        }
+    }
+
+    fn shutdown(&self) {
+        self.jobs.lock().unwrap().1 = true;
+        self.ready.notify_all();
+    }
+}
+
+/// A fixed-size pool of OS worker threads fed by one shared injector
+/// queue. Dropping the pool drains nothing: workers finish the job they
+/// hold, see the shutdown flag, and exit; `Drop` joins them all.
+pub struct ThreadPool {
+    queue: Arc<Queue>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// A pool with `size` workers. `size == 0` is clamped to 1; note
+    /// that a 1-worker pool still parallelizes nothing by itself — the
+    /// scope's caller-helping makes it equivalent to sequential.
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let queue = Arc::new(Queue {
+            jobs: Mutex::new((VecDeque::new(), false)),
+            ready: Condvar::new(),
+        });
+        let workers = (0..size)
+            .map(|i| {
+                let queue = Arc::clone(&queue);
+                std::thread::Builder::new()
+                    .name(format!("rc-pool-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = queue.pop() {
+                            // Scope jobs carry their own catch_unwind;
+                            // this backstop keeps a panicking detached
+                            // job from killing the worker.
+                            let _ = catch_unwind(AssertUnwindSafe(job));
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { queue, workers }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Fire-and-forget a `'static` job onto the pool.
+    pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
+        self.queue.push(Box::new(job));
+    }
+
+    /// Structured parallelism: run `f` with a [`Scope`] that can spawn
+    /// jobs borrowing from the caller's stack. Returns only after every
+    /// spawned job finished; re-raises a panic if any job panicked.
+    ///
+    /// The caller participates while waiting (it pops and runs queued
+    /// jobs), so a scope never deadlocks waiting for pool capacity —
+    /// even nested inside another scope on a 1-worker pool.
+    pub fn scope<'env, R>(&self, f: impl FnOnce(&Scope<'env>) -> R) -> R {
+        let latch = Arc::new(Latch {
+            state: Mutex::new(0usize),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+            mem_materialized: AtomicU64::new(0),
+            mem_viewed: AtomicU64::new(0),
+        });
+        let scope = Scope {
+            queue: Arc::clone(&self.queue),
+            latch: Arc::clone(&latch),
+            _env: std::marker::PhantomData,
+        };
+        let out = f(&scope);
+        // Help drain the queue while jobs remain in flight. We cannot
+        // wait on the queue's condvar and the latch's at once, so help
+        // opportunistically and fall back to a short timed latch wait.
+        loop {
+            if *latch.state.lock().unwrap() == 0 {
+                break;
+            }
+            if let Some(job) = self.queue.try_pop() {
+                let _ = catch_unwind(AssertUnwindSafe(job));
+                continue;
+            }
+            let guard = latch.state.lock().unwrap();
+            if *guard == 0 {
+                break;
+            }
+            let _ = latch
+                .done
+                .wait_timeout(guard, Duration::from_millis(1))
+                .unwrap();
+        }
+        // Credit memory recorded on worker threads back to the caller,
+        // so `mem::thread()` matches the sequential run.
+        mem::transfer_in(mem::MemCounters {
+            materialized: latch.mem_materialized.load(Ordering::Relaxed),
+            viewed: latch.mem_viewed.load(Ordering::Relaxed),
+        });
+        if latch.panicked.load(Ordering::Relaxed) {
+            panic!("a task spawned in ThreadPool::scope panicked");
+        }
+        out
+    }
+
+    /// The morsel primitive: evaluate `f(i)` for every `i in 0..n` on
+    /// the pool (the caller helps) and return the results in index
+    /// order. Falls back to a plain sequential loop when the pool has
+    /// one worker or `n <= 1` — same results, zero overhead.
+    pub fn run_indexed<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if self.size() <= 1 || n <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let slots: Vec<Mutex<Option<T>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        let worker = |scope_f: &F, slots: &[Mutex<Option<T>>]| {
+            loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = scope_f(i);
+                *slots[i].lock().unwrap() = Some(out);
+            }
+        };
+        self.scope(|s| {
+            // One closure per worker; the caller becomes the +1th via
+            // the scope's help-while-waiting loop running these jobs.
+            for _ in 0..self.size().min(n) {
+                s.spawn(|| worker(&f, &slots));
+            }
+        });
+        slots
+            .into_iter()
+            .map(|slot| {
+                slot.into_inner().unwrap().expect("run_indexed slot filled")
+            })
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.queue.shutdown();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+struct Latch {
+    /// Number of spawned-but-unfinished scope jobs.
+    state: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+    /// Memory recorded by scope jobs on worker threads, drained here so
+    /// the scope can credit it to the calling thread.
+    mem_materialized: AtomicU64,
+    mem_viewed: AtomicU64,
+}
+
+/// Spawning handle passed to [`ThreadPool::scope`] closures. Jobs may
+/// borrow anything that outlives the scope (`'env`).
+pub struct Scope<'env> {
+    queue: Arc<Queue>,
+    latch: Arc<Latch>,
+    _env: std::marker::PhantomData<&'env mut &'env ()>,
+}
+
+impl<'env> Scope<'env> {
+    /// Spawn a job that may borrow from the enclosing stack frame. The
+    /// scope will not return until the job has run.
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        *self.latch.state.lock().unwrap() += 1;
+        let latch = Arc::clone(&self.latch);
+        let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+            let before = mem::thread();
+            let result = catch_unwind(AssertUnwindSafe(f));
+            // Move this job's memory delta from the executing thread to
+            // the scope accumulator (the executing thread may be a pool
+            // worker *or* the helping caller — transfer keeps both
+            // correct and double-count-free).
+            let delta = mem::thread().since(before);
+            mem::transfer_out(delta);
+            latch
+                .mem_materialized
+                .fetch_add(delta.materialized, Ordering::Relaxed);
+            latch.mem_viewed.fetch_add(delta.viewed, Ordering::Relaxed);
+            if result.is_err() {
+                latch.panicked.store(true, Ordering::Relaxed);
+            }
+            let mut pending = latch.state.lock().unwrap();
+            *pending -= 1;
+            if *pending == 0 {
+                latch.done.notify_all();
+            }
+        });
+        // SAFETY: `scope` joins every spawned job (the pending-count
+        // latch) before returning, so the `'env` borrows inside `job`
+        // are live for as long as the job can run. This transmute only
+        // erases the lifetime to satisfy the queue's `'static` bound —
+        // the structured join is what makes it sound.
+        let job: Job = unsafe {
+            std::mem::transmute::<
+                Box<dyn FnOnce() + Send + 'env>,
+                Box<dyn FnOnce() + Send + 'static>,
+            >(job)
+        };
+        self.queue.push(job);
+    }
+}
+
+/// A shared mutable slice for disjoint-index parallel scatter.
+///
+/// Kernels that have partitioned an output buffer into per-writer
+/// ranges (radix scatter, CSR row placement) write through this to skip
+/// per-element locking. All synchronization comes from the enclosing
+/// scope join.
+pub struct SharedSlice<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+// SAFETY: `SharedSlice` only allows writes via the unsafe `write`,
+// whose contract demands disjoint indices across threads; with that
+// upheld, sharing the raw pointer across `Send` elements is sound.
+unsafe impl<T: Send> Sync for SharedSlice<T> {}
+unsafe impl<T: Send> Send for SharedSlice<T> {}
+
+impl<T> SharedSlice<T> {
+    pub fn new(slice: &mut [T]) -> SharedSlice<T> {
+        SharedSlice { ptr: slice.as_mut_ptr(), len: slice.len() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write `val` to index `i`.
+    ///
+    /// # Safety
+    ///
+    /// No two threads may write the same index during one scope, and no
+    /// one may read the slice until the scope has joined. `i` must be
+    /// `< len()` (checked only by debug assertion).
+    pub unsafe fn write(&self, i: usize, val: T) {
+        debug_assert!(i < self.len);
+        unsafe { self.ptr.add(i).write(val) }
+    }
+}
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+static CONFIGURED: AtomicUsize = AtomicUsize::new(0);
+
+fn resolve_size(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
+/// Pre-size the global pool before first use (e.g. from the
+/// `parallelism` config knob). A no-op once [`global`] has run; later
+/// calls cannot resize a live pool. `0` means "auto" (one worker per
+/// available core).
+pub fn configure(parallelism: usize) {
+    CONFIGURED.store(resolve_size(parallelism), Ordering::Relaxed);
+}
+
+/// The process-wide data-plane pool, created on first use.
+///
+/// Size precedence: [`configure`] if called first, else the
+/// `RC_PARALLELISM` environment variable (`0` = auto-detect cores,
+/// `k` = k workers), else **1** — the conservative default keeps the
+/// untuned path byte-identical to the sequential kernels.
+pub fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(|| {
+        let configured = CONFIGURED.load(Ordering::Relaxed);
+        let size = if configured > 0 {
+            configured
+        } else {
+            match std::env::var("RC_PARALLELISM") {
+                Ok(v) => v.trim().parse::<usize>().map(resolve_size).unwrap_or(1),
+                Err(_) => 1,
+            }
+        };
+        ThreadPool::new(size)
+    })
+}
+
+/// Worker count of the global pool (1 = effectively sequential).
+pub fn parallelism() -> usize {
+    global().size()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_indexed_returns_in_index_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.run_indexed(100, |i| i * 3);
+        assert_eq!(out, (0..100).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_indexed_matches_sequential_on_one_worker() {
+        let pool = ThreadPool::new(1);
+        let out = pool.run_indexed(10, |i| i + 1);
+        assert_eq!(out, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_joins_all_jobs() {
+        let pool = ThreadPool::new(3);
+        let hits = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for _ in 0..50 {
+                s.spawn(|| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn nested_scopes_do_not_deadlock() {
+        // Worst case: one worker, outer scope jobs each open an inner
+        // scope. The caller-helping wait keeps everything moving.
+        let pool = ThreadPool::new(1);
+        let hits = AtomicUsize::new(0);
+        pool.scope(|outer| {
+            for _ in 0..4 {
+                outer.spawn(|| {
+                    pool.scope(|inner| {
+                        for _ in 0..4 {
+                            inner.spawn(|| {
+                                hits.fetch_add(1, Ordering::Relaxed);
+                            });
+                        }
+                    });
+                });
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn scope_repanics_on_job_panic() {
+        let pool = ThreadPool::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(|s| {
+                s.spawn(|| panic!("boom"));
+            });
+        }));
+        assert!(result.is_err(), "scope must re-raise job panics");
+    }
+
+    #[test]
+    fn shared_slice_disjoint_writes() {
+        let pool = ThreadPool::new(4);
+        let mut buf = vec![0u32; 64];
+        {
+            let shared = SharedSlice::new(&mut buf);
+            pool.scope(|s| {
+                for t in 0..4usize {
+                    let shared = &shared;
+                    s.spawn(move || {
+                        for i in (t * 16)..((t + 1) * 16) {
+                            // SAFETY: thread t owns exactly
+                            // [t*16, (t+1)*16) — disjoint ranges.
+                            unsafe { shared.write(i, i as u32) };
+                        }
+                    });
+                }
+            });
+        }
+        assert_eq!(buf, (0..64).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn global_pool_defaults_to_one_worker_without_env() {
+        // The suite does not set RC_PARALLELISM for this binary by
+        // default; either way the pool must be usable.
+        let p = parallelism();
+        assert!(p >= 1);
+        assert_eq!(global().run_indexed(3, |i| i), vec![0, 1, 2]);
+    }
+}

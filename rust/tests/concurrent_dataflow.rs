@@ -1,0 +1,176 @@
+//! Stress suite for the pooled DAG executor: a 33-node diamond-heavy
+//! pipeline is executed 50 times per [`ReadyPolicy`] on a 4-worker pool,
+//! and every run's per-node outputs must fingerprint identically to the
+//! serial [`Pipeline::run_sequential`] reference — scheduling order,
+//! completion interleaving, and policy must be invisible in the results.
+//! A panic-injection case proves a dying task surfaces as `Err` instead
+//! of wedging the scheduler.
+
+use std::sync::Arc;
+
+use radical_cylon::df::{gen_table, GenSpec, Table};
+use radical_cylon::error::{Error, Result};
+use radical_cylon::metrics::{ExecMeasurement, OverheadBreakdown};
+use radical_cylon::ops::local::{groupby_agg, AggFn};
+use radical_cylon::pilot::{DataDist, TaskDescription, TaskResult, TaskState};
+use radical_cylon::pipeline::Pipeline;
+use radical_cylon::raptor::ReadyPolicy;
+use radical_cylon::util::pool::ThreadPool;
+
+/// Deterministic in-process task executor (no pilot): roots generate a
+/// synthetic table from their seed; piped nodes concat their staged
+/// inputs **in input order** and group-reduce, so every node's output is
+/// a pure function of the DAG — never of scheduling.
+fn exec_node(td: TaskDescription) -> Result<TaskResult> {
+    if td.name.contains("__panic__") {
+        panic!("injected panic in '{}'", td.name);
+    }
+    if td.name.contains("__err__") {
+        return Err(Error::TaskFailed(format!("injected error in '{}'", td.name)));
+    }
+    let out: Table = if td.inputs.is_empty() {
+        let spec = GenSpec {
+            rows: td.rows_per_rank,
+            key_space: 64,
+            dist: DataDist::Uniform,
+            seed: td.seed,
+        };
+        gen_table(&spec, 0)
+    } else {
+        let parts: Vec<Table> =
+            td.inputs.iter().map(|ct| ct.compact()).collect();
+        let all = Table::concat(&parts)?;
+        // Reduce per key so tables stay small through every layer.
+        groupby_agg(&all, 0, 1, AggFn::Sum)?
+    };
+    let rows = out.num_rows() as u64;
+    Ok(TaskResult {
+        task_id: 0,
+        name: td.name.clone(),
+        state: TaskState::Done,
+        measurement: ExecMeasurement {
+            label: td.name,
+            parallelism: 1,
+            wall_s: 0.0,
+            sim_net_s: 0.0,
+            overhead: OverheadBreakdown::default(),
+        },
+        output_rows: rows,
+        output: Some(Arc::new(out.into())),
+        error: None,
+    })
+}
+
+fn root_td(k: usize) -> TaskDescription {
+    TaskDescription::sort(&format!("root-{k}"), 1, 400 + 100 * k, DataDist::Uniform)
+        .with_seed(0xD1A + k as u64)
+}
+
+fn merge_td(name: &str) -> TaskDescription {
+    TaskDescription::groupby(name, 1, 0)
+}
+
+/// 4 roots, then 7 layers of 4 interlocking diamonds (each node consumes
+/// two neighbors of the previous layer), then a 4-way fan-in: 33 nodes,
+/// every inner node a diamond joint.
+fn diamond_dag() -> Pipeline {
+    let mut p = Pipeline::new();
+    let mut prev: Vec<usize> = (0..4).map(|k| p.add(root_td(k), &[])).collect();
+    for layer in 0..7 {
+        let mut next = Vec::with_capacity(4);
+        for j in 0..4 {
+            let (a, b) = (prev[j], prev[(j + 1) % 4]);
+            next.push(p.add_piped_multi(
+                merge_td(&format!("d{layer}-{j}")),
+                &[a, b],
+                &[a, b],
+            ));
+        }
+        prev = next;
+    }
+    let deps: Vec<usize> = prev.clone();
+    p.add_piped_multi(merge_td("final"), &deps, &deps);
+    p
+}
+
+/// Per-node fingerprints — the whole observable outcome of a run.
+fn fingerprints(results: &[TaskResult]) -> Vec<(String, u64, u64)> {
+    results
+        .iter()
+        .map(|r| {
+            (
+                r.name.clone(),
+                r.output_rows,
+                r.output.as_ref().map(|t| t.multiset_fingerprint()).unwrap_or(0),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn pooled_dag_matches_sequential_over_50_runs_and_both_policies() {
+    let p = diamond_dag();
+    assert!(p.len() >= 30, "stress DAG must be 30+ nodes, got {}", p.len());
+    let reference = fingerprints(&p.run_sequential(exec_node).unwrap());
+    let pool = ThreadPool::new(4);
+    for policy in [ReadyPolicy::Fifo, ReadyPolicy::CriticalPathFirst] {
+        for run in 0..50 {
+            let got =
+                fingerprints(&p.run_pooled(&pool, policy, exec_node).unwrap());
+            assert_eq!(got, reference, "{policy:?} run {run} diverged");
+        }
+    }
+}
+
+#[test]
+fn pooled_dag_is_deterministic_across_pool_sizes() {
+    let p = diamond_dag();
+    let reference = fingerprints(&p.run_sequential(exec_node).unwrap());
+    for threads in [1usize, 2, 8] {
+        let pool = ThreadPool::new(threads);
+        let got = fingerprints(
+            &p.run_pooled(&pool, ReadyPolicy::Fifo, exec_node).unwrap(),
+        );
+        assert_eq!(got, reference, "threads={threads}");
+    }
+}
+
+#[test]
+fn panicking_task_surfaces_as_err_not_deadlock() {
+    // The panic node races three healthy siblings; downstream consumers
+    // must never run, and run_pooled must return (no wedged scheduler)
+    // with the panic converted into a node failure.
+    let mut p = Pipeline::new();
+    let roots: Vec<usize> = (0..4).map(|k| p.add(root_td(k), &[])).collect();
+    let bad = p.add_piped(merge_td("__panic__mid"), &[roots[0]], roots[0]);
+    let good = p.add_piped_multi(
+        merge_td("healthy"),
+        &[roots[1], roots[2]],
+        &[roots[1], roots[2]],
+    );
+    let _tail = p.add_piped_multi(
+        merge_td("never-runs"),
+        &[bad, good],
+        &[bad, good],
+    );
+    let pool = ThreadPool::new(4);
+    for policy in [ReadyPolicy::Fifo, ReadyPolicy::CriticalPathFirst] {
+        let err = p.run_pooled(&pool, policy, exec_node).unwrap_err().to_string();
+        assert!(err.contains("__panic__mid"), "{policy:?}: {err}");
+        assert!(err.contains("panicked"), "{policy:?}: {err}");
+    }
+}
+
+#[test]
+fn erroring_task_fails_pipeline_fast() {
+    let mut p = Pipeline::new();
+    let a = p.add(root_td(0), &[]);
+    let bad = p.add_piped(merge_td("__err__node"), &[a], a);
+    let _tail = p.add_piped(merge_td("never"), &[bad], bad);
+    let pool = ThreadPool::new(2);
+    let err = p
+        .run_pooled(&pool, ReadyPolicy::Fifo, exec_node)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("__err__node"), "{err}");
+}

@@ -1,0 +1,75 @@
+//! Memory-accounting drain test for the thread pool — deliberately a
+//! dedicated binary with a single `#[test]` so the process-global
+//! counters in `metrics::mem` have no other writers while we assert
+//! exact equality.
+//!
+//! Property: doing columnar work through `ThreadPool::run_indexed` must
+//! leave both memory scopes exactly where a sequential run leaves them —
+//! `mem::global()` because workers feed the same atomics, and
+//! `mem::thread()` on the **caller** because each pooled job transfers
+//! its thread-local delta out of the worker and the scope credits the
+//! total back to the calling thread.
+
+use radical_cylon::df::gen_table;
+use radical_cylon::df::GenSpec;
+use radical_cylon::metrics::mem;
+use radical_cylon::pilot::DataDist;
+use radical_cylon::util::pool::ThreadPool;
+
+fn work_item(i: usize) -> u64 {
+    let spec = GenSpec {
+        rows: 2_000 + 10 * i,
+        key_space: 512,
+        dist: DataDist::Uniform,
+        seed: 0xABC + i as u64,
+    };
+    gen_table(&spec, 0).multiset_fingerprint()
+}
+
+#[test]
+fn pooled_work_drains_into_caller_and_global_exactly() {
+    const N: usize = 12;
+
+    // Sequential reference: same work on the calling thread.
+    let g0 = mem::global();
+    let t0 = mem::thread();
+    let seq: Vec<u64> = (0..N).map(work_item).collect();
+    let seq_global = mem::global().since(g0);
+    let seq_thread = mem::thread().since(t0);
+    assert!(
+        seq_thread.materialized > 0,
+        "work items must materialize bytes for the test to mean anything"
+    );
+    assert_eq!(
+        seq_global, seq_thread,
+        "single-threaded: both scopes see the same delta"
+    );
+
+    // Pooled run: workers do the materializing, caller gets the credit.
+    let pool = ThreadPool::new(4);
+    let g0 = mem::global();
+    let t0 = mem::thread();
+    let par = pool.run_indexed(N, work_item);
+    let par_global = mem::global().since(g0);
+    let par_thread = mem::thread().since(t0);
+
+    assert_eq!(par, seq, "pooled results must match sequential");
+    assert_eq!(
+        par_global, seq_global,
+        "global counters are thread-agnostic and must match the sequential sum"
+    );
+    assert_eq!(
+        par_thread, seq_thread,
+        "worker deltas must drain into the calling thread's counters"
+    );
+
+    // Second pooled round: drains must not double-credit or leak across
+    // scopes (each scope transfers exactly its own jobs' bytes).
+    let t0 = mem::thread();
+    let _ = pool.run_indexed(N, work_item);
+    assert_eq!(
+        mem::thread().since(t0),
+        seq_thread,
+        "repeat run credits exactly one round of bytes"
+    );
+}

@@ -1,0 +1,235 @@
+//! Determinism property suite for the morsel-parallel data-plane kernels:
+//! at **every** pool size, the parallel sort / join / filter / groupby
+//! must be bit-identical to their sequential twins — not merely equal as
+//! multisets. The shapes are the ones that stress morsel splitting
+//! hardest: a Zipf-style hot key (one bucket/partition dominates),
+//! all-equal keys (one bucket owns everything), empty sides, and NaN
+//! float payloads (bit-compared, so "identical" really means identical).
+//!
+//! Sizes deliberately straddle the implicit-dispatch threshold
+//! (`PAR_MIN_ROWS` = 4096) so both the sequential fallback and the real
+//! multi-morsel path run at each pool size.
+
+use radical_cylon::df::{ChunkedTable, Column, DataType, Schema, Table};
+use radical_cylon::ops::local::{
+    filter_view_expr, filter_view_expr_par, groupby_agg, groupby_agg_hashmap,
+    groupby_agg_par, hash_join_hashmap, hash_join_par, sort_table_comparator,
+    sort_table_par, AggFn, JoinType, SortKey,
+};
+use radical_cylon::plan::expr::{col, lit};
+use radical_cylon::util::pool::ThreadPool;
+use radical_cylon::util::testkit;
+use radical_cylon::util::Rng;
+
+/// Mirrors `ops::local::sort::PAR_MIN_ROWS` (crate-private): the row
+/// count above which the kernels split into multiple morsels.
+const PAR_MIN_ROWS: usize = 4096;
+
+const POOL_SIZES: [usize; 4] = [1, 2, 4, 8];
+
+fn kv(keys: Vec<i64>) -> Table {
+    let vals: Vec<i64> = (0..keys.len() as i64).collect();
+    Table::new(
+        Schema::of(&[("key", DataType::Int64), ("v", DataType::Int64)]),
+        vec![Column::from_i64(keys), Column::from_i64(vals)],
+    )
+    .unwrap()
+}
+
+fn kv_f64(keys: Vec<i64>, vals: Vec<f64>) -> Table {
+    Table::new(
+        Schema::of(&[("key", DataType::Int64), ("val", DataType::Float64)]),
+        vec![Column::from_i64(keys), Column::from_f64(vals)],
+    )
+    .unwrap()
+}
+
+/// ~80% of rows share one hot key (the Zipf-head shape).
+fn hot_keys(rng: &mut Rng, n: usize) -> Vec<i64> {
+    (0..n)
+        .map(|_| if rng.gen_range(10) < 8 { 7 } else { rng.gen_i64(0, 50) })
+        .collect()
+}
+
+/// Float payloads with NaNs sprinkled in — ties under a duplicate-heavy
+/// sort key, so any instability or reordering shows up in the bits.
+fn nan_vals(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| if i % 97 == 0 { f64::NAN } else { rng.gen_f64() })
+        .collect()
+}
+
+/// Bitwise table equality: float columns are compared by `to_bits`, so
+/// two NaNs with the same payload are equal and anything else is not
+/// (plain `assert_eq!` would call every NaN unequal to itself).
+fn assert_bit_identical(a: &Table, b: &Table, ctx: &str) {
+    assert_eq!(a.num_rows(), b.num_rows(), "{ctx}: row count");
+    assert_eq!(a.num_columns(), b.num_columns(), "{ctx}: column count");
+    for c in 0..a.num_columns() {
+        match (a.column(c).as_i64(), b.column(c).as_i64()) {
+            (Ok(x), Ok(y)) => assert_eq!(x, y, "{ctx}: int col {c}"),
+            _ => {
+                let bits = |t: &Table| -> Vec<u64> {
+                    let v = t.column(c).as_f64().unwrap();
+                    v.iter().map(|v| v.to_bits()).collect()
+                };
+                assert_eq!(bits(a), bits(b), "{ctx}: float col {c} (bitwise)");
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_sort_bit_identical_at_every_pool_size() {
+    testkit::check("parallel radix sort == comparator", 4, |rng| {
+        for &threads in &POOL_SIZES {
+            let pool = ThreadPool::new(threads);
+            for n in [0usize, 1, 700, PAR_MIN_ROWS, 3 * PAR_MIN_ROWS] {
+                let shapes: [Vec<i64>; 3] = [
+                    vec![-9; n],                   // all equal: ties everywhere
+                    hot_keys(rng, n),              // Zipf hot key
+                    (0..n as i64).rev().collect(), // reverse-sorted
+                ];
+                for keys in shapes {
+                    let t = kv_f64(keys, nan_vals(rng, n));
+                    for key in [SortKey::asc(0), SortKey::desc(0)] {
+                        let par = sort_table_par(&t, key, &pool).unwrap();
+                        let seq = sort_table_comparator(&t, &[key]).unwrap();
+                        assert_bit_identical(
+                            &par,
+                            &seq,
+                            &format!(
+                                "sort n={n} threads={threads} asc={}",
+                                key.ascending
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn parallel_join_bit_identical_at_every_pool_size() {
+    testkit::check("parallel csr join == hashmap oracle", 4, |rng| {
+        for &threads in &POOL_SIZES {
+            let pool = ThreadPool::new(threads);
+            for n in [0usize, 64, PAR_MIN_ROWS, 2 * PAR_MIN_ROWS] {
+                // Right sides stay narrow so skewed shapes keep output
+                // linear in n (all-equal × all-equal would be n²).
+                let shapes: [(Vec<i64>, Vec<i64>); 3] = [
+                    // All-equal probe side: every morsel hits one bucket.
+                    (vec![3; n], vec![3, 3, 3, 3, 9, 11]),
+                    // Zipf-hot probe against a small dense build side.
+                    (hot_keys(rng, n), (0..32).flat_map(|k| [k, k]).collect()),
+                    // Sparse probe, hot build side.
+                    ((0..n as i64).collect(), vec![7; 16]),
+                ];
+                for (kl, kr) in shapes {
+                    let (l, r) = (kv(kl), kv(kr));
+                    for how in [JoinType::Inner, JoinType::Left] {
+                        let par =
+                            hash_join_par(&l, &r, 0, 0, how, &pool).unwrap();
+                        let seq = hash_join_hashmap(&l, &r, 0, 0, how).unwrap();
+                        assert_eq!(
+                            par, seq,
+                            "join n={n} threads={threads} {how:?}"
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn parallel_join_empty_sides_match_at_every_pool_size() {
+    let empty = kv(vec![]);
+    let big = kv((0..(PAR_MIN_ROWS as i64 * 2)).map(|i| i % 100).collect());
+    for &threads in &POOL_SIZES {
+        let pool = ThreadPool::new(threads);
+        for (l, r) in [(&empty, &big), (&big, &empty), (&empty, &empty)] {
+            for how in [JoinType::Inner, JoinType::Left] {
+                let par = hash_join_par(l, r, 0, 0, how, &pool).unwrap();
+                let seq = hash_join_hashmap(l, r, 0, 0, how).unwrap();
+                assert_eq!(par, seq, "threads={threads} {how:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_groupby_bit_identical_at_every_pool_size() {
+    testkit::check("parallel csr groupby == sequential", 4, |rng| {
+        for &threads in &POOL_SIZES {
+            let pool = ThreadPool::new(threads);
+            for n in [0usize, 300, PAR_MIN_ROWS, 2 * PAR_MIN_ROWS] {
+                for keys in [vec![0; n], hot_keys(rng, n)] {
+                    // NaN values: every agg must propagate them with the
+                    // exact sequential accumulation order.
+                    let t = kv_f64(keys.clone(), nan_vals(rng, n));
+                    for agg in [
+                        AggFn::Sum,
+                        AggFn::Count,
+                        AggFn::Min,
+                        AggFn::Max,
+                        AggFn::Mean,
+                    ] {
+                        let par =
+                            groupby_agg_par(&t, 0, 1, agg, &pool).unwrap();
+                        let seq = groupby_agg(&t, 0, 1, agg).unwrap();
+                        assert_bit_identical(
+                            &par,
+                            &seq,
+                            &format!("groupby n={n} threads={threads} {agg:?}"),
+                        );
+                    }
+                    // Clean values: the hashmap oracle must agree too.
+                    let clean: Vec<f64> =
+                        (0..n).map(|_| rng.gen_f64()).collect();
+                    let t = kv_f64(keys, clean);
+                    let par =
+                        groupby_agg_par(&t, 0, 1, AggFn::Sum, &pool).unwrap();
+                    let legacy =
+                        groupby_agg_hashmap(&t, 0, 1, AggFn::Sum).unwrap();
+                    assert_eq!(par, legacy, "n={n} threads={threads}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn parallel_filter_bit_identical_at_every_pool_size() {
+    testkit::check("parallel chunked filter == sequential", 4, |rng| {
+        let pred = col("key").ge(lit(3)).and(col("val").lt(lit(0.5)));
+        for &threads in &POOL_SIZES {
+            let pool = ThreadPool::new(threads);
+            for nchunks in [1usize, 3, 16] {
+                let schema = Schema::of(&[
+                    ("key", DataType::Int64),
+                    ("val", DataType::Float64),
+                ]);
+                let mut ct = ChunkedTable::empty(schema);
+                for _ in 0..nchunks {
+                    let rows = 1 + rng.gen_range(1000) as usize;
+                    ct.push(kv_f64(hot_keys(rng, rows), nan_vals(rng, rows)))
+                        .unwrap();
+                }
+                let par = filter_view_expr_par(&ct, &pred, &pool).unwrap();
+                let seq = filter_view_expr(&ct, &pred).unwrap();
+                assert_eq!(
+                    par.num_chunks(),
+                    seq.num_chunks(),
+                    "chunk structure must survive parallel filtering"
+                );
+                assert_bit_identical(
+                    &par.compact(),
+                    &seq.compact(),
+                    &format!("filter nchunks={nchunks} threads={threads}"),
+                );
+            }
+        }
+    });
+}

@@ -21,6 +21,13 @@
 # pairs only the ratio < 1.0 rule is enforced (budget is clamped to 1.0)
 # so an estimate can never fail a genuinely-faster kernel; run with
 # --update on real hardware to replace the seeds and arm the full gate.
+#
+# Thread-scaling rows (extra carries `scale_baseline` + `cores`, see the
+# kernel_hotpaths thread-scaling section) are gated *leniently*: shared
+# runners rarely deliver linear scaling, so the only hard rule is that a
+# 4-worker row beats its own 1-worker baseline (speedup > 1.0); other
+# core counts just need speedup > 0.5 (sanity — parallelism must never
+# cost 2x). The strict old-vs-new ratio gate does not apply to them.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -88,6 +95,29 @@ for new_label, old_label in PAIRS:
         failures.append(
             f"{new_label} regressed: ratio {ratio_cur:.3f} > "
             f"snapshot {ratio_base:.3f} * {tol} = {budget:.3f}")
+
+# Lenient thread-scaling gate: rows pairing themselves with their own
+# 1-worker run via `extra.scale_baseline`. Hard requirement only at 4
+# cores (speedup > 1.0); elsewhere a 0.5 sanity floor.
+SCALE = sorted(
+    (label, row["extra"]["scale_baseline"], int(row["extra"].get("cores", 0)))
+    for label, row in cur.items()
+    if isinstance(row.get("extra"), dict) and "scale_baseline" in row["extra"]
+)
+if SCALE:
+    print(f"\n{'scaling row':<34} {'cores':>6} {'speedup':>9} {'floor':>7}")
+    for label, base_label, cores in SCALE:
+        if base_label not in cur:
+            failures.append(
+                f"scale baseline '{base_label}' missing from {current_path}")
+            continue
+        speedup = cur[base_label]["wall_s"]["mean"] / cur[label]["wall_s"]["mean"]
+        floor = 1.0 if cores == 4 else 0.5
+        print(f"{label:<34} {cores:>6} {speedup:>8.2f}x {floor:>7.1f}")
+        if speedup <= floor:
+            failures.append(
+                f"{label} ({cores} cores) speedup {speedup:.2f}x vs "
+                f"{base_label} is not above the {floor:.1f}x floor")
 
 if failures:
     print("\nbench_check FAILED:", file=sys.stderr)
