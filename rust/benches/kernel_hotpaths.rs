@@ -20,30 +20,39 @@
 //!
 //! A **thread-scaling** section follows the pairs: the morsel-parallel
 //! sort/join/groupby run at 1/2/4/8 pool workers
-//! (`<kernel>/par-t{n}` rows). Each scaled row carries `cores` and
-//! `scale_baseline` extras so `scripts/bench_check.sh` can apply its
-//! lenient speedup-vs-cores gate (strict old-vs-new ratios make no sense
-//! for self-scaling rows).
+//! (`<kernel>/par-t{n}` rows), and the **distributed data plane** joins
+//! them: `dist-sort/par-t{n}` (per-rank local sorts + splitter-parallel
+//! k-way merge — dist_sort's compute) and `dist-join/par-t{n}` (routing
+//! plan + counting scatter + pooled per-destination gathers + CSR join of
+//! one co-located pair — dist_hash_join's per-rank compute). The dist ops
+//! dispatch these stages to the global pool; the bench drives the same
+//! kernels on explicit pools so one process can sweep worker counts.
+//! Each scaled row carries `cores` and `scale_baseline` extras so
+//! `scripts/bench_check.sh` can apply its lenient speedup-vs-cores gate
+//! (strict old-vs-new ratios make no sense for self-scaling rows).
 //!
 //! Acceptance (asserted below): every new kernel's output is
 //! **bit-identical** to its legacy oracle, every new kernel's mean
 //! wall time is **strictly below** the legacy implementation's, and the
-//! parallel sort and join beat their own 1-worker runs at 4 workers.
+//! parallel sort, join, and both dist compositions beat their own
+//! 1-worker runs at 4 workers.
 //!
 //! Run with `cargo bench --bench kernel_hotpaths` (RC_BENCH_ITERS to raise
 //! samples, RC_BENCH_JSON=<path> to archive; `scripts/bench_check.sh`
 //! gates the archived JSON against the committed `BENCH_kernels.json`).
 
 use radical_cylon::df::{gen_table, GenSpec, Table};
-use radical_cylon::ops::dist::{counting_scatter, destination_lists};
+use radical_cylon::ops::dist::{
+    counting_scatter, counting_scatter_par, destination_lists,
+};
 use radical_cylon::ops::local::{
     groupby_agg, groupby_agg_hashmap, groupby_agg_par, hash_join,
-    hash_join_hashmap, hash_join_par, merge_sorted, merge_sorted_per_row,
-    sort_table, sort_table_comparator, sort_table_par, AggFn, JoinType,
-    SortKey,
+    hash_join_hashmap, hash_join_par, merge_sorted, merge_sorted_par,
+    merge_sorted_per_row, sort_table, sort_table_comparator, sort_table_par,
+    AggFn, JoinType, SortKey,
 };
 use radical_cylon::util::bench_harness::{bench_iters, BenchSet};
-use radical_cylon::util::hash::partition_ids;
+use radical_cylon::util::hash::{partition_ids, partition_ids_par};
 use radical_cylon::util::pool::ThreadPool;
 
 const JOIN_ROWS: usize = 1_000_000;
@@ -55,6 +64,9 @@ const GROUPBY_KEYS: i64 = 1 << 16;
 const MERGE_PARTS: usize = 8;
 const MERGE_ROWS_PER_PART: usize = 1 << 18; // 2M rows total
 const MERGE_KEYS: i64 = 2_000; // ~130-row duplicate runs per part
+const DIST_RANKS: usize = 4;
+const DIST_ROWS_PER_RANK: usize = 1 << 18; // 4 ranks -> 1M+ rows total
+const DIST_KEYS: i64 = 4_000; // duplicate-heavy: long merge runs
 
 /// The old-vs-new label pairs the acceptance gate walks. Each new row's
 /// JSON carries its partner as a `baseline` extra, and
@@ -210,6 +222,21 @@ fn main() {
     // `scale_baseline` extra (their own t1 row) instead of `baseline`:
     // bench_check.sh applies the lenient speedup-vs-cores rule to them,
     // not the strict "must beat the legacy kernel" ratio rule.
+
+    // Distributed data-plane inputs: DIST_RANKS rank partitions whose
+    // duplicate-heavy keys produce the long merge runs dist_sort sees.
+    let dist_parts: Vec<Table> = (0..DIST_RANKS)
+        .map(|p| {
+            gen_table(&GenSpec::uniform(DIST_ROWS_PER_RANK, DIST_KEYS, 0xD157), p)
+        })
+        .collect();
+    let dist_oracle = {
+        let runs: Vec<Table> = dist_parts
+            .iter()
+            .map(|t| sort_table(t, SortKey::asc(0)).unwrap())
+            .collect();
+        merge_sorted_per_row(&runs, 0).unwrap()
+    };
     for threads in [1usize, 2, 4, 8] {
         let pool = ThreadPool::new(threads);
         {
@@ -230,6 +257,16 @@ fn main() {
             assert_eq!(
                 par, seq,
                 "parallel groupby (t={threads}) must be bit-identical"
+            );
+            // dist_sort's compute at this pool size == the per-row oracle.
+            let runs: Vec<Table> = dist_parts
+                .iter()
+                .map(|t| sort_table_par(t, SortKey::asc(0), &pool).unwrap())
+                .collect();
+            let merged = merge_sorted_par(&runs, 0, &pool).unwrap();
+            assert_eq!(
+                merged, dist_oracle,
+                "dist sort compute (t={threads}) must be bit-identical"
             );
         }
         let mut scaled = |row: &mut radical_cylon::util::bench_harness::BenchRow,
@@ -257,6 +294,40 @@ fn main() {
             None
         });
         scaled(row, "groupby/par-t1");
+        // dist_sort compute: per-rank local sorts + splitter-parallel
+        // k-way merge of the sorted runs (the exchange itself ships O(1)
+        // views and is not wall-clock-relevant).
+        let row = set.bench_mem(&format!("dist-sort/par-t{threads}"), 1, iters, || {
+            let runs: Vec<Table> = dist_parts
+                .iter()
+                .map(|t| sort_table_par(t, SortKey::asc(0), &pool).unwrap())
+                .collect();
+            let m = merge_sorted_par(&runs, 0, &pool).unwrap();
+            assert_eq!(m.num_rows(), DIST_RANKS * DIST_ROWS_PER_RANK);
+            None
+        });
+        scaled(row, "dist-sort/par-t1");
+        // dist_hash_join compute: routing plan + counting scatter + pooled
+        // per-destination gathers for both sides, then the CSR join of one
+        // co-located destination pair.
+        let row = set.bench_mem(&format!("dist-join/par-t{threads}"), 1, iters, || {
+            let route = |t: &Table| -> Vec<Table> {
+                let keys = t.column(0).as_i64().unwrap();
+                let ids = partition_ids_par(keys, DIST_RANKS as u32, &pool);
+                let (rows, offsets) =
+                    counting_scatter_par(&ids, DIST_RANKS, &pool);
+                pool.run_indexed(DIST_RANKS, |d| {
+                    t.take_u32(&rows[offsets[d]..offsets[d + 1]])
+                })
+            };
+            let (ls, rs) = (route(&l), route(&r));
+            let j =
+                hash_join_par(&ls[0], &rs[0], 0, 0, JoinType::Inner, &pool)
+                    .unwrap();
+            assert!(j.num_rows() > 0);
+            None
+        });
+        scaled(row, "dist-join/par-t1");
     }
 
     // ---- speedup columns + acceptance assertions ------------------------
@@ -282,7 +353,9 @@ fn main() {
         // its gate list instead of duplicating PAIRS.
         row.extra.push(("baseline".into(), old_label.to_string()));
     }
-    for kernel in ["sort-asc/par", "join/par", "groupby/par"] {
+    for kernel in
+        ["sort-asc/par", "join/par", "groupby/par", "dist-sort/par", "dist-join/par"]
+    {
         let t1 = wall_of(&set, &format!("{kernel}-t1"));
         for threads in [2usize, 4, 8] {
             let label = format!("{kernel}-t{threads}");
@@ -298,11 +371,13 @@ fn main() {
     set.report();
     set.maybe_write_json();
 
-    // Thread-scaling acceptance: at 4 workers the morsel-parallel sort and
-    // join must actually be faster than their own 1-worker runs (groupby
-    // is reported but not hard-gated here — its parallel region is a
-    // smaller fraction of the kernel).
-    for kernel in ["sort-asc/par", "join/par", "groupby/par"] {
+    // Thread-scaling acceptance: at 4 workers the morsel-parallel sort,
+    // join, and both distributed compositions must actually be faster than
+    // their own 1-worker runs (groupby is reported but not hard-gated here
+    // — its parallel region is a smaller fraction of the kernel).
+    for kernel in
+        ["sort-asc/par", "join/par", "groupby/par", "dist-sort/par", "dist-join/par"]
+    {
         let t1 = wall_of(&set, &format!("{kernel}-t1"));
         let t4 = wall_of(&set, &format!("{kernel}-t4"));
         println!(
@@ -311,7 +386,10 @@ fn main() {
             t4 * 1e3,
             t1 / t4
         );
-        if matches!(kernel, "sort-asc/par" | "join/par") {
+        if matches!(
+            kernel,
+            "sort-asc/par" | "join/par" | "dist-sort/par" | "dist-join/par"
+        ) {
             assert!(
                 t4 < t1,
                 "{kernel} must show >1.0x speedup at 4 workers \

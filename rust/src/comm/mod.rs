@@ -421,11 +421,31 @@ impl Communicator {
             self.size(),
             "alltoall requires one payload per rank"
         );
-        let total: usize = sends.iter().map(|s| s.approx_bytes()).sum();
-        self.charge(self.world.netmodel.alltoall(self.size(), total));
+        let mut sends: Vec<Option<T>> = sends.into_iter().map(Some).collect();
+        self.alltoall_with(|d| sends[d].take().expect("alltoall slot"))
+    }
+
+    /// [`Communicator::alltoall`] with compute/exchange overlap: `make(d)`
+    /// builds the payload for rank `d`, and each payload is posted to its
+    /// destination's mailbox **as soon as it exists** instead of after the
+    /// whole send set is assembled. A receiver whose partition happens to
+    /// be carved first can pick it up while this rank is still gathering
+    /// the later ones — that is the shuffle's compute/exchange overlap.
+    ///
+    /// NetModel accounting is schedule-independent: the collective charges
+    /// once, by total payload bytes, exactly as [`Communicator::alltoall`]
+    /// does — *when* a payload was produced or posted never changes the
+    /// simulated clock.
+    pub fn alltoall_with<T: CommData>(
+        &self,
+        mut make: impl FnMut(usize) -> T,
+    ) -> Vec<T> {
         let tag = self.next_tag();
         let mut mine: Option<T> = None;
-        for (dst, payload) in sends.into_iter().enumerate() {
+        let mut total = 0usize;
+        for dst in 0..self.size() {
+            let payload = make(dst);
+            total += payload.approx_bytes();
             if dst == self.my_rank {
                 mine = Some(payload);
             } else {
@@ -434,6 +454,7 @@ impl Communicator {
                     .put((self.ctx, self.my_rank, tag), Box::new(payload));
             }
         }
+        self.charge(self.world.netmodel.alltoall(self.size(), total));
         let world_me = self.ranks[self.my_rank];
         (0..self.size())
             .map(|src| {
@@ -710,6 +731,32 @@ mod tests {
             .unwrap();
         for clk in clocks {
             assert!(clk > 0.0);
+        }
+    }
+
+    #[test]
+    fn alltoall_with_matches_alltoall_and_charges_identically() {
+        // The overlap entry point must return the same payloads AND the
+        // same simulated clock as the assemble-then-send baseline: the
+        // model charges by bytes, never by when work was scheduled.
+        let w = CommWorld::new(4, NetModel::new(Backend::Mpi, 1.0));
+        let out = w
+            .run(|c| {
+                let sends: Vec<Vec<u8>> = (0..4)
+                    .map(|d| vec![c.rank() as u8; (d + 1) * 64])
+                    .collect();
+                let eager = c.alltoall(sends.clone());
+                let clk_after_first = c.sim_clock();
+                let lazy = c.alltoall_with(|d| sends[d].clone());
+                let clk_after_second = c.sim_clock();
+                (eager == lazy, clk_after_first, clk_after_second)
+            })
+            .unwrap();
+        for (same, first, second) in out {
+            assert!(same, "alltoall_with must deliver identical payloads");
+            assert!(first > 0.0);
+            // The second collective added exactly the first one's cost.
+            assert!(((second - first) - first).abs() < 1e-12);
         }
     }
 

@@ -54,6 +54,11 @@ pub struct ExperimentConfig {
     /// (one worker per available core), `1` = sequential. Distinct from
     /// `parallelisms`, which sweeps simulated *rank* counts.
     pub parallelism: usize,
+    /// Morsel threshold: kernels dispatch to their parallel twins only
+    /// at or above this many rows. Defaults to
+    /// [`crate::util::pool::DEFAULT_PAR_MIN_ROWS`]; tests lower it to
+    /// force the parallel path on small fixtures.
+    pub par_min_rows: usize,
 }
 
 impl ExperimentConfig {
@@ -108,13 +113,21 @@ impl ExperimentConfig {
                     Error::Config("key 'parallelism' is not an integer".into())
                 })?,
             },
+            par_min_rows: match sec.get("par_min_rows") {
+                None => crate::util::pool::DEFAULT_PAR_MIN_ROWS,
+                Some(s) => s.parse().map_err(|_| {
+                    Error::Config("key 'par_min_rows' is not an integer".into())
+                })?,
+            },
         })
     }
 
     /// Size the global thread pool from this config's `parallelism` knob
-    /// (first caller wins — the pool is process-global).
+    /// and latch the morsel threshold from `par_min_rows` (first caller
+    /// wins for both — they are process-global).
     pub fn apply_parallelism(&self) {
         crate::util::pool::configure(self.parallelism);
+        crate::util::pool::configure_par_min_rows(self.par_min_rows);
     }
 
     /// Rows per rank at a given parallelism under this config's scaling.
@@ -194,6 +207,29 @@ iterations = 5
         let doc = parse_ini(&bad).unwrap();
         let err = ExperimentConfig::from_ini(&doc).unwrap_err().to_string();
         assert!(err.contains("parallelism"), "{err}");
+    }
+
+    #[test]
+    fn par_min_rows_knob_defaults_and_parses() {
+        let doc = parse_ini(SAMPLE).unwrap();
+        let c = ExperimentConfig::from_ini(&doc).unwrap();
+        assert_eq!(
+            c.par_min_rows,
+            crate::util::pool::DEFAULT_PAR_MIN_ROWS,
+            "absent key means the built-in morsel threshold"
+        );
+
+        let with_knob =
+            SAMPLE.replace("iterations = 5", "iterations = 5\npar_min_rows = 64");
+        let doc = parse_ini(&with_knob).unwrap();
+        let c = ExperimentConfig::from_ini(&doc).unwrap();
+        assert_eq!(c.par_min_rows, 64);
+
+        let bad =
+            SAMPLE.replace("iterations = 5", "iterations = 5\npar_min_rows = tiny");
+        let doc = parse_ini(&bad).unwrap();
+        let err = ExperimentConfig::from_ini(&doc).unwrap_err().to_string();
+        assert!(err.contains("par_min_rows"), "{err}");
     }
 
     #[test]

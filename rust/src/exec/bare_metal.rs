@@ -11,9 +11,12 @@ use crate::raptor::run_cylon_task_full;
 
 use super::{Engine, EngineKind, SuiteResult};
 
-/// Bare-metal engine: per-task `srun`-style launch (tasks run sequentially,
-/// each on a fresh full-width communicator; each launch pays the machine's
-/// dispatch latency, but there is no pilot/RAPTOR overhead).
+/// Bare-metal engine: per-task `srun`-style launch (suite tasks run
+/// sequentially, each on a fresh full-width communicator; each launch pays
+/// the machine's dispatch latency, but there is no pilot/RAPTOR overhead).
+/// Plan DAGs go through [`Engine::run_plan`]'s pooled default, which
+/// overlaps independent launches on the driver host when a thread pool is
+/// configured.
 pub struct BareMetalEngine {
     machine: MachineSpec,
     backend: KernelBackend,

@@ -17,7 +17,9 @@ use super::{Engine, EngineKind, SuiteResult};
 /// LSF-script-style batch engine. Jobs are serialized against the same
 /// resource budget (the paper holds total resources equal between batch and
 /// heterogeneous execution), so the makespan is the sum of per-job queue
-/// latency + execution time.
+/// latency + execution time. Plan DAGs go through [`Engine::run_plan`]'s
+/// pooled default — independent jobs overlap on the driver host, while the
+/// modeled makespan stays a per-job sum.
 pub struct BatchEngine {
     machine: MachineSpec,
     backend: KernelBackend,

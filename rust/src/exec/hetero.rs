@@ -150,7 +150,10 @@ impl Engine for HeterogeneousEngine {
 
     /// Lower the plan and drive it through the event-driven dataflow
     /// scheduler on one pilot (piped handoff, immediate rank reuse) —
-    /// overriding the sequential default.
+    /// overriding the default independent-launch walk. Tasks here are
+    /// **not** run sequentially: the RAPTOR master overlaps every ready
+    /// node on free pilot ranks, and inside each task the rank loop and
+    /// the data-plane kernels are morsel-parallel on the shared pool.
     fn run_plan(&self, plan: &Plan) -> Result<PlanRun> {
         let lowered = plan.lower()?;
         let suite = self.run_pipeline(&lowered.pipeline)?;

@@ -22,9 +22,11 @@
 //!
 //! Logical plans ([`crate::plan::Plan`]) run on **any** engine through
 //! [`Engine::run_plan`]: the default lowers the plan and executes the DAG
-//! serially (one independent launch per node, handoff threaded across
-//! launches), while the heterogeneous engine overrides it with the
-//! dataflow scheduler on one pilot.
+//! through the pooled dependency-counting executor when a thread pool is
+//! configured (independent launches overlap on the driver host; handoff
+//! threaded across launches), degrading to the serial topological walk at
+//! parallelism 1 — identical results either way. The heterogeneous engine
+//! overrides it with the dataflow scheduler on one pilot.
 
 mod bare_metal;
 mod batch;
@@ -104,8 +106,8 @@ pub struct PlanRun {
     /// [`Plan::collect`].
     pub output: Option<Arc<ChunkedTable>>,
     /// Scheduler accounting — `Some` on engines that drive the DAG through
-    /// a pipeline executor (heterogeneous), `None` on the sequential
-    /// bare-metal/batch path.
+    /// a pilot pipeline executor (heterogeneous), `None` on the
+    /// independent-launch bare-metal/batch path (pooled or serial).
     pub metrics: Option<PipelineMetrics>,
 }
 
@@ -124,17 +126,35 @@ pub trait Engine {
 
     /// Lower a logical [`Plan`] and execute it on this engine.
     ///
-    /// The default drives the lowered DAG **serially in topological
-    /// order** through [`Engine::run_task`], threading the table handoff
-    /// across launches ([`crate::pipeline::Pipeline::run_sequential`]) —
-    /// the right model for engines where every task is an independent
-    /// launch (bare-metal, batch). The heterogeneous engine overrides this
-    /// with the event-driven dataflow scheduler on one pilot.
-    fn run_plan(&self, plan: &Plan) -> Result<PlanRun> {
+    /// With a thread pool configured (`pool::parallelism() > 1`), the
+    /// default drives the lowered DAG through the dependency-counting
+    /// pooled executor ([`crate::pipeline::Pipeline::run_pooled`]):
+    /// independent branches launch concurrently through
+    /// [`Engine::run_task`], each still an independent launch with the
+    /// table handoff wired on the scheduler thread — the right model for
+    /// engines without a shared pilot (bare-metal, batch) on a
+    /// multi-core driver host. At parallelism 1 it falls back to the
+    /// serial topological walk
+    /// ([`crate::pipeline::Pipeline::run_sequential`]); both paths return
+    /// node-id-ordered results, so a deterministic engine yields identical
+    /// `PlanRun`s either way. The heterogeneous engine overrides this with
+    /// the event-driven dataflow scheduler on one pilot.
+    fn run_plan(&self, plan: &Plan) -> Result<PlanRun>
+    where
+        Self: Sync,
+    {
         let lowered = plan.lower()?;
-        let results = lowered
-            .pipeline
-            .run_sequential(|td| self.run_task(&td))?;
+        let results = if crate::util::pool::parallelism() > 1 {
+            lowered.pipeline.run_pooled(
+                crate::util::pool::global(),
+                crate::raptor::ReadyPolicy::Fifo,
+                |td| self.run_task(&td),
+            )?
+        } else {
+            lowered
+                .pipeline
+                .run_sequential(|td| self.run_task(&td))?
+        };
         let output = results[lowered.sink].output.clone();
         Ok(PlanRun { results, output, metrics: None })
     }

@@ -26,10 +26,12 @@ use crate::comm::Communicator;
 use crate::df::{ChunkedTable, DataType, Schema, Table};
 use crate::error::Result;
 use crate::ops::local::{
-    groupby_agg, hash_join, merge_sorted, sort_table, AggFn, JoinType, SortKey,
+    groupby_agg, hash_join, merge_sorted, morsel_ranges, sort_table, AggFn,
+    JoinType, SortKey,
 };
 use crate::runtime::{KernelService, SORT_BLOCK};
-use crate::util::hash::partition_ids;
+use crate::util::hash::{partition_ids, partition_ids_par};
+use crate::util::pool::{self, SharedSlice, ThreadPool};
 
 /// Data-plane kernel selection for the distributed operators.
 #[derive(Clone)]
@@ -55,14 +57,22 @@ impl std::fmt::Debug for KernelBackend {
     }
 }
 
-/// Partition ids for `keys` over `nparts` buckets via the selected backend.
+/// Partition ids for `keys` over `nparts` buckets via the selected
+/// backend. The native path hashes morsels on the global pool above the
+/// morsel threshold (bit-identical — the hash is per-row pure).
 fn partition_plan(
     keys: &[i64],
     nparts: u32,
     backend: &KernelBackend,
 ) -> Result<Vec<i32>> {
     match backend {
-        KernelBackend::Native => Ok(partition_ids(keys, nparts)),
+        KernelBackend::Native => {
+            if keys.len() >= pool::par_min_rows() && pool::parallelism() > 1 {
+                Ok(partition_ids_par(keys, nparts, pool::global()))
+            } else {
+                Ok(partition_ids(keys, nparts))
+            }
+        }
         KernelBackend::Pjrt(svc) => svc.shuffle_plan(keys.to_vec(), nparts),
     }
 }
@@ -111,6 +121,13 @@ fn local_sort(t: &Table, col: usize, backend: &KernelBackend) -> Result<Table> {
 /// `u32` offsets); a fix to the cursor-undo shift in either must be
 /// mirrored in the other.
 pub fn counting_scatter(ids: &[i32], nparts: usize) -> (Vec<u32>, Vec<usize>) {
+    if ids.len() >= pool::par_min_rows() && pool::parallelism() > 1 {
+        return counting_scatter_par(ids, nparts, pool::global());
+    }
+    counting_scatter_seq(ids, nparts)
+}
+
+fn counting_scatter_seq(ids: &[i32], nparts: usize) -> (Vec<u32>, Vec<usize>) {
     assert!(
         ids.len() < u32::MAX as usize,
         "counting_scatter row ids are u32 ({} rows given)",
@@ -139,6 +156,75 @@ pub fn counting_scatter(ids: &[i32], nparts: usize) -> (Vec<u32>, Vec<usize>) {
     (rows, offsets)
 }
 
+/// Morsel-parallel twin of [`counting_scatter`], mirroring
+/// [`crate::util::hash::CsrIndex::build_par`]: per-morsel destination
+/// histograms in parallel, one serial (destination, morsel) prefix sum
+/// assigning every morsel a private absolute write range per destination,
+/// then a parallel scatter through a [`SharedSlice`].
+///
+/// **Determinism:** write ranges are morsel-major within each
+/// destination and morsels are contiguous ascending row ranges, so every
+/// destination receives its rows in ascending row order — exactly what
+/// the sequential stable forward scatter produces, for any morsel split.
+pub fn counting_scatter_par(
+    ids: &[i32],
+    nparts: usize,
+    pool: &ThreadPool,
+) -> (Vec<u32>, Vec<usize>) {
+    let nt = pool.size().min(ids.len() / pool::par_min_rows()).max(1);
+    if nt <= 1 {
+        return counting_scatter_seq(ids, nparts);
+    }
+    assert!(
+        ids.len() < u32::MAX as usize,
+        "counting_scatter row ids are u32 ({} rows given)",
+        ids.len()
+    );
+    let morsels = morsel_ranges(ids.len(), nt);
+    // Pass 1 (parallel): per-morsel destination histograms.
+    let mut counts: Vec<Vec<usize>> = pool.run_indexed(nt, |t| {
+        let (lo, hi) = morsels[t];
+        let mut c = vec![0usize; nparts];
+        for &d in &ids[lo..hi] {
+            c[d as usize] += 1;
+        }
+        c
+    });
+    // Pass 2 (serial): prefix sum over (destination, morsel) — absolute
+    // disjoint write cursors, morsel-major within each destination.
+    let mut offsets = vec![0usize; nparts + 1];
+    let mut running = 0usize;
+    for d in 0..nparts {
+        offsets[d] = running;
+        for c in counts.iter_mut() {
+            let start = running;
+            running += c[d];
+            c[d] = start; // becomes morsel-local cursor for destination d
+        }
+    }
+    offsets[nparts] = running;
+    // Pass 3 (parallel): scatter row ids through the private cursors.
+    let mut rows = vec![0u32; ids.len()];
+    {
+        let shared = SharedSlice::new(&mut rows);
+        let cursors: Vec<std::sync::Mutex<Vec<usize>>> =
+            counts.into_iter().map(std::sync::Mutex::new).collect();
+        pool.run_indexed(nt, |t| {
+            let (lo, hi) = morsels[t];
+            let mut cur = cursors[t].lock().unwrap();
+            for (i, &d) in ids[lo..hi].iter().enumerate() {
+                let d = d as usize;
+                // SAFETY: cur[d] ranges over this morsel's private slot
+                // range for destination d (disjoint by the prefix sum);
+                // reads happen only after run_indexed joins.
+                unsafe { shared.write(cur[d], (lo + i) as u32) };
+                cur[d] += 1;
+            }
+        });
+    }
+    (rows, offsets)
+}
+
 /// Pre-scatter destination routing: one push-grown `Vec<usize>` per
 /// destination. Kept as the `kernel_hotpaths` bench baseline and oracle
 /// for [`counting_scatter`] (identical per-destination row lists).
@@ -156,6 +242,15 @@ pub fn destination_lists(ids: &[i32], nparts: usize) -> Vec<Vec<usize>> {
 /// `splitmix64(key) % p`, so all rows sharing a key land on one rank.
 /// Row routing is a flat [`counting_scatter`] plan; each destination's
 /// gather slices it without reallocation.
+///
+/// **Parallelism:** above the morsel threshold the routing plan and the
+/// counting scatter run morsel-parallel on the global pool, and the
+/// per-destination gathers become pool morsels (one slice carve per
+/// destination). Below it, the gathers overlap with the exchange instead:
+/// each destination's partition is posted to the simulated wire the moment
+/// it is gathered ([`Communicator::alltoall_with`]), so downstream ranks'
+/// receives are already staged while later gathers still run. Both paths
+/// are bit-identical to the sequential gather-then-exchange schedule.
 /// Collective — every rank of `comm` must call with its own partition.
 pub fn shuffle_by_key_chunked(
     comm: &Communicator,
@@ -172,17 +267,25 @@ pub fn shuffle_by_key_chunked(
     let ids = partition_plan(keys, p as u32, backend)?;
     // The gather per destination is the one unavoidable materialization of
     // a hash shuffle (arbitrary row routing); everything after is views.
-    let sends: Vec<Table> = if ids.len() < u32::MAX as usize {
+    let parts: Vec<Table> = if ids.len() < u32::MAX as usize {
         let (rows, offsets) = counting_scatter(&ids, p);
-        (0..p)
-            .map(|d| t.take_u32(&rows[offsets[d]..offsets[d + 1]]))
-            .collect()
+        if ids.len() >= pool::par_min_rows() && pool::parallelism() > 1 {
+            // Pool morsels: each destination's gather is an independent
+            // slice carve of the flat plan — disjoint reads, no sync.
+            let sends = pool::global()
+                .run_indexed(p, |d| t.take_u32(&rows[offsets[d]..offsets[d + 1]]));
+            comm.alltoall(sends)
+        } else {
+            // Small input: overlap each gather with the exchange instead
+            // of batching all p gathers before the first send.
+            comm.alltoall_with(|d| t.take_u32(&rows[offsets[d]..offsets[d + 1]]))
+        }
     } else {
         // Row ids no longer fit the flat u32 plan; degrade to the legacy
         // lists like sort/groupby fall back on oversized inputs.
-        destination_lists(&ids, p).iter().map(|idx| t.take(idx)).collect()
+        let dest = destination_lists(&ids, p);
+        comm.alltoall_with(|d| t.take(&dest[d]))
     };
-    let parts = comm.alltoall(sends);
     ChunkedTable::from_tables(parts)
 }
 
@@ -204,6 +307,16 @@ pub fn shuffle_by_key(
 /// The range exchange sends **O(1) slice views** of the locally-sorted
 /// table (zero row copies before the wire), and the k-way merge consumes
 /// the received parts directly — no intermediate concat on either side.
+///
+/// **Parallelism:** the local sort runs morsel-parallel above the morsel
+/// threshold (see [`sort_table`]); each range is posted to the wire the
+/// moment it is carved ([`Communicator::alltoall_with`] — the carves are
+/// O(1) views, but posting early lets receivers' merges see staged parts
+/// sooner in the simulated schedule); and the final k-way merge splits the
+/// received runs into disjoint global key ranges merged independently on
+/// the pool ([`merge_sorted`] dispatching to
+/// [`crate::ops::local::merge_sorted_par`]). All bit-identical to the
+/// sequential schedule.
 pub fn dist_sort(
     comm: &Communicator,
     t: &Table,
@@ -236,18 +349,18 @@ pub fn dist_sort(
     }
 
     // Carve the locally-sorted table into p contiguous key ranges — pure
-    // window views over the sorted table's buffers.
-    let mut sends = Vec::with_capacity(p);
+    // window views over the sorted table's buffers — and post each range
+    // the moment it is carved (compute/exchange overlap).
     let mut start = 0usize;
-    for r in 0..p {
+    let parts = comm.alltoall_with(|r| {
         let end = match splitters.get(r) {
             Some(&s) => keys.partition_point(|&k| k <= s).max(start),
             None => keys.len(), // last range (or empty global input)
         };
-        sends.push(sorted.slice(start, end - start));
+        let send = sorted.slice(start, end - start);
         start = end;
-    }
-    let parts = comm.alltoall(sends);
+        send
+    });
     merge_sorted(&parts, col)
 }
 
@@ -281,6 +394,11 @@ pub fn dist_hash_join(
 /// merges partials — the standard pre-aggregation optimization. `Mean` is
 /// not decomposable by a single combine and falls back to shuffle-then-
 /// aggregate.
+///
+/// **Parallelism:** both the partial and the final/combine stage go
+/// through [`groupby_agg`], which dispatches to its morsel-parallel twin
+/// above the morsel threshold — so each stage is pool-parallel with no
+/// extra wiring here, and bit-identical to the sequential stages.
 pub fn dist_groupby(
     comm: &Communicator,
     t: &Table,
@@ -466,6 +584,29 @@ mod tests {
         let (rows, offsets) = counting_scatter(&[], 4);
         assert!(rows.is_empty());
         assert_eq!(offsets, vec![0; 5]);
+    }
+
+    #[test]
+    fn counting_scatter_par_is_bit_identical_to_sequential() {
+        let pmr = pool::par_min_rows();
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            for n in [0usize, 100, pmr, 3 * pmr] {
+                let keys: Vec<i64> = (0..n as i64).map(|i| i * 17 % 97).collect();
+                for nparts in [1usize, 2, 7, 16] {
+                    let ids =
+                        crate::util::hash::partition_ids(&keys, nparts as u32);
+                    let par = counting_scatter_par(&ids, nparts, &pool);
+                    let seq = counting_scatter_seq(&ids, nparts);
+                    assert_eq!(par, seq, "threads={threads} n={n} p={nparts}");
+                }
+                // Skew: every row routes to one destination.
+                let ids = vec![2i32; n];
+                let par = counting_scatter_par(&ids, 4, &pool);
+                let seq = counting_scatter_seq(&ids, 4);
+                assert_eq!(par, seq, "all-one-destination threads={threads} n={n}");
+            }
+        }
     }
 
     #[test]

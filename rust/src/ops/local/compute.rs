@@ -37,7 +37,7 @@ use crate::error::{Error, Result};
 use crate::plan::expr::{Expr, Scalar};
 use crate::util::pool::{self, ThreadPool};
 
-use super::sort::PAR_MIN_ROWS;
+use super::sort::par_min_rows;
 
 /// Binary arithmetic over numeric columns (elementwise).
 ///
@@ -583,7 +583,7 @@ pub fn eval_predicate(t: &Table, expr: &Expr) -> Result<Vec<bool>> {
 /// as maximal zero-copy runs ([`filter_view`]) — no chunk is ever
 /// concatenated, so the filter materializes only the masks.
 pub fn filter_view_expr(ct: &ChunkedTable, pred: &Expr) -> Result<ChunkedTable> {
-    if ct.num_rows() >= PAR_MIN_ROWS
+    if ct.num_rows() >= par_min_rows()
         && ct.num_chunks() > 1
         && pool::parallelism() > 1
     {

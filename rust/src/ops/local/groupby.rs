@@ -13,7 +13,7 @@ use crate::error::{Error, Result};
 use crate::util::hash::CsrIndex;
 use crate::util::pool::{self, ThreadPool};
 
-use super::sort::{morsel_ranges, PAR_MIN_ROWS};
+use super::sort::{morsel_ranges, par_min_rows};
 
 /// Aggregations over a float64 value column.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -126,7 +126,7 @@ pub fn groupby_agg(
         // limit.
         return groupby_agg_hashmap(t, key_col, val_col, agg);
     }
-    if keys.len() >= PAR_MIN_ROWS && pool::parallelism() > 1 {
+    if keys.len() >= par_min_rows() && pool::parallelism() > 1 {
         return groupby_agg_par(t, key_col, val_col, agg, pool::global());
     }
 
@@ -210,7 +210,7 @@ pub fn groupby_agg_par(
         return groupby_agg_hashmap(t, key_col, val_col, agg);
     }
     let index = CsrIndex::build_par(keys, pool);
-    let nt = pool.size().min(keys.len() / PAR_MIN_ROWS).max(1);
+    let nt = pool.size().min(keys.len() / par_min_rows()).max(1);
     let (gkeys, accs) = if nt <= 1 {
         sweep_buckets(&index, keys, vals, 0, index.num_buckets())
     } else {
@@ -327,9 +327,10 @@ mod tests {
 
     #[test]
     fn parallel_groupby_is_bit_identical_to_sequential() {
+        let pmr = par_min_rows();
         for threads in [1usize, 2, 4] {
             let pool = ThreadPool::new(threads);
-            for n in [0usize, 100, PAR_MIN_ROWS, 3 * PAR_MIN_ROWS] {
+            for n in [0usize, 100, pmr, 3 * pmr] {
                 // Irrational-step values make float-sum order observable.
                 let keys: Vec<i64> =
                     (0..n as i64).map(|i| (i * 31) % 257).collect();

@@ -16,7 +16,7 @@ use crate::error::{Error, Result};
 use crate::util::hash::{CsrIndex, SplitMixBuild};
 use crate::util::pool::{self, ThreadPool};
 
-use super::sort::{morsel_ranges, sort_table, SortKey, PAR_MIN_ROWS};
+use super::sort::{morsel_ranges, par_min_rows, sort_table, SortKey};
 
 /// Miss sentinel in right-side probe index vectors: the row had no match
 /// and takes the [`FillPolicy`] values. Real row ids are `< MISS`, which
@@ -212,7 +212,7 @@ pub fn hash_join_filled(
     how: JoinType,
     fill: &FillPolicy,
 ) -> Result<Table> {
-    if left.num_rows().max(right.num_rows()) >= PAR_MIN_ROWS
+    if left.num_rows().max(right.num_rows()) >= par_min_rows()
         && pool::parallelism() > 1
     {
         return hash_join_filled_par(
@@ -285,7 +285,7 @@ pub fn hash_join_filled_par(
     let lk = key_col(left, left_key)?;
     let rk = key_col(right, right_key)?;
     let index = CsrIndex::build_par(rk, pool);
-    let nt = pool.size().min(lk.len() / PAR_MIN_ROWS).max(1);
+    let nt = pool.size().min(lk.len() / par_min_rows()).max(1);
     let (pairs_l, pairs_r) = if nt <= 1 {
         probe_pairs(lk, rk, &index, how, 0)
     } else {
@@ -588,9 +588,10 @@ mod tests {
     fn parallel_join_is_bit_identical_to_sequential() {
         // Straddle the morsel threshold; duplicate-heavy keys make the
         // pair order observable.
+        let pmr = par_min_rows();
         for threads in [1usize, 2, 4] {
             let pool = ThreadPool::new(threads);
-            for n in [0usize, 64, PAR_MIN_ROWS, 3 * PAR_MIN_ROWS] {
+            for n in [0usize, 64, pmr, 3 * pmr] {
                 // ~6 duplicates per key at the largest n (order matters)
                 // without exploding the inner-join output size.
                 let keys_l: Vec<i64> =

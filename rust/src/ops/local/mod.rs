@@ -1,5 +1,7 @@
 //! Local operators: execute solely on locally accessible data (paper §3.2).
 
+pub(crate) use sort::{morsel_ranges, par_min_rows};
+
 mod compute;
 mod groupby;
 mod join;
@@ -17,7 +19,8 @@ pub use join::{
     hash_join_par, nested_loop_join, sort_merge_join, FillPolicy, JoinType,
 };
 pub use sort::{
-    is_sorted_by_key, merge_sorted, merge_sorted_per_row, sort_table,
-    sort_table_comparator, sort_table_multi, sort_table_par, SortKey,
+    is_sorted_by_key, merge_sorted, merge_sorted_par, merge_sorted_per_row,
+    sort_table, sort_table_comparator, sort_table_multi, sort_table_par,
+    SortKey,
 };
-pub use unique::{unique_by_key, unique_rows};
+pub use unique::{unique_by_key, unique_by_key_par, unique_rows};

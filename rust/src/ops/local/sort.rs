@@ -15,8 +15,13 @@ use crate::util::pool::{self, SharedSlice, ThreadPool};
 
 /// Below this row count the parallel kernels fall back to their
 /// sequential twins: morsel scheduling and per-thread histogram merges
-/// don't amortize on small inputs.
-pub(crate) const PAR_MIN_ROWS: usize = 4096;
+/// don't amortize on small inputs. Resolved once per process from the
+/// `par_min_rows` config knob / `RC_PAR_MIN_ROWS` env variable (default
+/// 4096) — see [`pool::par_min_rows`]. Tests lower it to force the
+/// parallel path on small fixtures.
+pub(crate) fn par_min_rows() -> usize {
+    pool::par_min_rows()
+}
 
 /// Split `0..n` into `nt` contiguous morsels (last may be short).
 pub(crate) fn morsel_ranges(n: usize, nt: usize) -> Vec<(usize, usize)> {
@@ -154,7 +159,7 @@ fn radix_sort_rows_par(
     pool: &ThreadPool,
 ) -> Vec<u32> {
     let n = keys.len();
-    let nt = pool.size().min(n / PAR_MIN_ROWS).max(1);
+    let nt = pool.size().min(n / par_min_rows()).max(1);
     if nt <= 1 {
         return radix_sort_rows(keys, ascending);
     }
@@ -262,7 +267,7 @@ pub fn sort_table_multi(t: &Table, keys: &[SortKey]) -> Result<Table> {
             if v.len() < u32::MAX as usize {
                 let s = v.as_slice();
                 let order =
-                    if s.len() >= PAR_MIN_ROWS && pool::parallelism() > 1 {
+                    if s.len() >= par_min_rows() && pool::parallelism() > 1 {
                         radix_sort_rows_par(s, k.ascending, pool::global())
                     } else {
                         radix_sort_rows(s, k.ascending)
@@ -448,11 +453,198 @@ fn gather_interleave(parts: &[Table], order: &[(u32, u32)]) -> Result<Table> {
 
 /// K-way merge of tables each already sorted ascending on int64 `col`
 /// (the merge phase of distributed sample-sort). Duplicate-key runs on a
-/// part advance in a single heap operation.
+/// part advance in a single heap operation. Large merges dispatch to the
+/// splitter-parallel twin [`merge_sorted_par`] when the global pool has
+/// more than one worker — bit-identical either way.
 pub fn merge_sorted(parts: &[Table], col: usize) -> Result<Table> {
+    let total: usize = parts.iter().map(|p| p.num_rows()).sum();
+    if total >= par_min_rows() && parts.len() > 1 && pool::parallelism() > 1 {
+        return merge_sorted_par(parts, col, pool::global());
+    }
     let keys = merge_prep(parts, col)?;
     let order = merge_order_runs(&keys);
     gather_interleave(parts, &order)
+}
+
+/// Splitter-parallel twin of [`merge_sorted`]: the k sorted runs are cut
+/// into `nt` disjoint global key ranges by binary-searching one common
+/// splitter set in every run (`partition_point(key <= splitter)`), each
+/// range is merged independently on the pool, and the per-range outputs
+/// are concatenated in range order.
+///
+/// **Determinism:** a `key <= splitter` cut puts every duplicate of a
+/// splitter key on the same side in *every* run, so no duplicate-key run
+/// straddles a range boundary. When the sequential merge first emits a
+/// key above a cut, it has already emitted every row at or below it (the
+/// heap pops keys in ascending order), so each run's cursor sits exactly
+/// at that cut — the global merge restricted to a key range *is* the
+/// range's own merge, part-index tie-break included. Concatenating the
+/// ranges in order is therefore bit-identical to [`merge_sorted`] for
+/// any splitter set; the split only chooses where the seams fall.
+pub fn merge_sorted_par(
+    parts: &[Table],
+    col: usize,
+    pool: &ThreadPool,
+) -> Result<Table> {
+    let keys = merge_prep(parts, col)?;
+    let total: usize = keys.iter().map(|k| k.len()).sum();
+    let nt = pool.size().min(total / par_min_rows()).max(1);
+    if nt <= 1 || parts.len() <= 1 {
+        let order = merge_order_runs(&keys);
+        return gather_interleave(parts, &order);
+    }
+    // Regular sampling of every non-empty run -> one common splitter
+    // set. Sample quality only affects balance, never correctness.
+    let mut cand: Vec<i64> = Vec::with_capacity(keys.len() * (nt - 1));
+    for k in &keys {
+        if k.is_empty() {
+            continue;
+        }
+        for i in 1..nt {
+            cand.push(k[(i * k.len() / nt).min(k.len() - 1)]);
+        }
+    }
+    cand.sort_unstable();
+    let splitters: Vec<i64> = (1..nt)
+        .map(|i| cand[(i * cand.len() / nt).min(cand.len() - 1)])
+        .collect();
+    // cuts[j][r] = first row of run j belonging to range r; range r
+    // holds keys in (splitter[r-1], splitter[r]] (open-ended outermost).
+    let cuts: Vec<Vec<usize>> = keys
+        .iter()
+        .map(|k| {
+            let mut c = Vec::with_capacity(nt + 1);
+            c.push(0usize);
+            for &s in &splitters {
+                c.push(k.partition_point(|&v| v <= s));
+            }
+            c.push(k.len());
+            c
+        })
+        .collect();
+    // Merge each key range independently; row ids are globalized by the
+    // run's cut offset so the per-range orders index the full tables.
+    let orders: Vec<Vec<(u32, u32)>> = pool.run_indexed(nt, |r| {
+        let subs: Vec<&[i64]> = keys
+            .iter()
+            .enumerate()
+            .map(|(j, k)| &k[cuts[j][r]..cuts[j][r + 1]])
+            .collect();
+        merge_order_runs(&subs)
+            .into_iter()
+            .map(|(pi, ri)| (pi, ri + cuts[pi as usize][r] as u32))
+            .collect()
+    });
+    gather_interleave_par(parts, &orders, pool)
+}
+
+/// Parallel gather for [`merge_sorted_par`]: fixed-width columns scatter
+/// per-range through a [`SharedSlice`] into one preallocated buffer
+/// (ranges own disjoint output spans, so writes never collide); the
+/// variable-width Utf8 arena appends ranges in order on the caller.
+/// Materialized bytes equal the sequential [`gather_interleave`] exactly:
+/// both count one output buffer per column at its final size.
+fn gather_interleave_par(
+    parts: &[Table],
+    orders: &[Vec<(u32, u32)>],
+    pool: &ThreadPool,
+) -> Result<Table> {
+    let total: usize = orders.iter().map(|o| o.len()).sum();
+    let mut starts = Vec::with_capacity(orders.len());
+    let mut acc = 0usize;
+    for o in orders {
+        starts.push(acc);
+        acc += o.len();
+    }
+    let ncols = parts[0].num_columns();
+    let mut out_cols: Vec<Column> = Vec::with_capacity(ncols);
+    for j in 0..ncols {
+        let col = match parts[0].column(j) {
+            Column::Int64(_) => {
+                let srcs: Vec<&[i64]> =
+                    parts.iter().map(|p| p.column(j).as_i64().unwrap()).collect();
+                let mut v = vec![0i64; total];
+                {
+                    let shared = SharedSlice::new(&mut v);
+                    pool.run_indexed(orders.len(), |r| {
+                        let base = starts[r];
+                        for (off, &(pi, ri)) in orders[r].iter().enumerate() {
+                            // SAFETY: range r owns output span
+                            // [base, base + len) — disjoint across r;
+                            // reads only after the join.
+                            unsafe {
+                                shared.write(
+                                    base + off,
+                                    srcs[pi as usize][ri as usize],
+                                )
+                            };
+                        }
+                    });
+                }
+                Column::from_i64(v)
+            }
+            Column::Float64(_) => {
+                let srcs: Vec<&[f64]> =
+                    parts.iter().map(|p| p.column(j).as_f64().unwrap()).collect();
+                let mut v = vec![0f64; total];
+                {
+                    let shared = SharedSlice::new(&mut v);
+                    pool.run_indexed(orders.len(), |r| {
+                        let base = starts[r];
+                        for (off, &(pi, ri)) in orders[r].iter().enumerate() {
+                            // SAFETY: disjoint spans, reads after join.
+                            unsafe {
+                                shared.write(
+                                    base + off,
+                                    srcs[pi as usize][ri as usize],
+                                )
+                            };
+                        }
+                    });
+                }
+                Column::from_f64(v)
+            }
+            Column::Utf8(_) => {
+                let srcs: Vec<&crate::df::Utf8Buffer> = parts
+                    .iter()
+                    .map(|p| p.column(j).as_utf8().unwrap())
+                    .collect();
+                let bytes: usize = srcs.iter().map(|s| s.str_bytes()).sum();
+                let mut b = Utf8Builder::with_capacity(total, bytes);
+                for o in orders {
+                    for &(pi, ri) in o {
+                        b.push(srcs[pi as usize].get(ri as usize));
+                    }
+                }
+                Column::Utf8(b.finish())
+            }
+            Column::Bool(_) => {
+                let srcs: Vec<&[bool]> = parts
+                    .iter()
+                    .map(|p| p.column(j).as_bool().unwrap())
+                    .collect();
+                let mut v = vec![false; total];
+                {
+                    let shared = SharedSlice::new(&mut v);
+                    pool.run_indexed(orders.len(), |r| {
+                        let base = starts[r];
+                        for (off, &(pi, ri)) in orders[r].iter().enumerate() {
+                            // SAFETY: disjoint spans, reads after join.
+                            unsafe {
+                                shared.write(
+                                    base + off,
+                                    srcs[pi as usize][ri as usize],
+                                )
+                            };
+                        }
+                    });
+                }
+                Column::from_bool(v)
+            }
+        };
+        out_cols.push(col);
+    }
+    Table::new(parts[0].schema().clone(), out_cols)
 }
 
 /// [`merge_sorted`]'s one-heap-operation-per-row predecessor — kept as
@@ -573,11 +765,13 @@ mod tests {
 
     #[test]
     fn parallel_radix_is_bit_identical_to_sequential() {
-        // Straddle the nt>1 threshold (needs n >= 2 * PAR_MIN_ROWS) and
-        // include duplicate-heavy keys so stability is observable.
+        // Straddle the nt>1 threshold (needs n >= 2 * the morsel
+        // threshold) and include duplicate-heavy keys so stability is
+        // observable.
+        let pmr = par_min_rows();
         for threads in [1usize, 2, 4] {
             let pool = ThreadPool::new(threads);
-            for n in [0usize, 100, PAR_MIN_ROWS, 3 * PAR_MIN_ROWS] {
+            for n in [0usize, 100, pmr, 3 * pmr] {
                 let keys: Vec<i64> =
                     (0..n as i64).map(|i| (i * 37) % 11 - 5).collect();
                 let vals: Vec<f64> = (0..n).map(|i| i as f64).collect();
@@ -623,6 +817,52 @@ mod tests {
             let oracle = merge_sorted_per_row(&parts, 0).unwrap();
             assert_eq!(fast, oracle);
         });
+    }
+
+    #[test]
+    fn parallel_merge_is_bit_identical_to_sequential() {
+        // Straddle the morsel threshold; interleaved duplicate keys make
+        // the part-index tie-break observable, and one part stays empty.
+        let pmr = par_min_rows();
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            for per_part in [0usize, 50, pmr, 2 * pmr] {
+                let parts: Vec<Table> = (0..4)
+                    .map(|p| {
+                        let n = if p == 3 { 0 } else { per_part };
+                        let mut keys: Vec<i64> = (0..n as i64)
+                            .map(|i| (i * 13 + p) % 97)
+                            .collect();
+                        keys.sort_unstable();
+                        let vals: Vec<f64> =
+                            (0..n).map(|i| i as f64 + p as f64 * 0.5).collect();
+                        table(keys, vals)
+                    })
+                    .collect();
+                let par = merge_sorted_par(&parts, 0, &pool).unwrap();
+                let seq = merge_sorted_per_row(&parts, 0).unwrap();
+                assert_eq!(par, seq, "threads={threads} per_part={per_part}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_merge_handles_all_equal_keys() {
+        // Every splitter collapses onto the single key value: one range
+        // gets everything, the rest are empty — still bit-identical.
+        let pmr = par_min_rows();
+        let pool = ThreadPool::new(4);
+        let parts: Vec<Table> = (0..3)
+            .map(|p| {
+                table(
+                    vec![7i64; pmr],
+                    (0..pmr).map(|i| i as f64 + p as f64).collect(),
+                )
+            })
+            .collect();
+        let par = merge_sorted_par(&parts, 0, &pool).unwrap();
+        let seq = merge_sorted_per_row(&parts, 0).unwrap();
+        assert_eq!(par, seq);
     }
 
     #[test]

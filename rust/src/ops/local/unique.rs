@@ -1,13 +1,38 @@
 //! Duplicate elimination (local) — with the distributed variant composed in
 //! `ops::dist` (shuffle co-locates equal keys, then local dedup is global).
+//!
+//! [`unique_by_key`] dispatches to a morsel-parallel twin above the
+//! morsel threshold: a parallel [`CsrIndex`] build groups equal keys
+//! into buckets (per-thread histogram + disjoint scatter), then bucket
+//! ranges are swept concurrently to mark each key's first occurrence —
+//! buckets partition the rows, so the keep-flag scatter is collision-free
+//! by construction, and the final ascending index scan reproduces the
+//! sequential first-occurrence order exactly.
 
 use std::collections::HashSet;
 
 use crate::df::Table;
 use crate::error::Result;
+use crate::util::hash::CsrIndex;
+use crate::util::pool::{self, SharedSlice, ThreadPool};
+
+use super::sort::{morsel_ranges, par_min_rows};
 
 /// Keep the first row for every distinct key in `key_col` (int64).
+/// Large inputs dispatch to [`unique_by_key_par`] on the global pool —
+/// bit-identical either way.
 pub fn unique_by_key(t: &Table, key_col: usize) -> Result<Table> {
+    let keys = t.column(key_col).as_i64()?;
+    if keys.len() >= par_min_rows()
+        && keys.len() < u32::MAX as usize
+        && pool::parallelism() > 1
+    {
+        return unique_by_key_par(t, key_col, pool::global());
+    }
+    unique_by_key_seq(t, key_col)
+}
+
+fn unique_by_key_seq(t: &Table, key_col: usize) -> Result<Table> {
     let keys = t.column(key_col).as_i64()?;
     let mut seen = HashSet::with_capacity_and_hasher(
         keys.len(),
@@ -19,6 +44,55 @@ pub fn unique_by_key(t: &Table, key_col: usize) -> Result<Table> {
             idx.push(i);
         }
     }
+    Ok(t.take(&idx))
+}
+
+/// [`unique_by_key`] on an explicit thread pool, using the same
+/// per-thread-histogram + disjoint-scatter pattern as
+/// [`CsrIndex::build_par`].
+///
+/// **Determinism:** equal keys always share a CSR bucket, and bucket
+/// rows are ascending, so "no earlier candidate in the bucket carries my
+/// key" is exactly "I am the key's first occurrence". Every row belongs
+/// to one bucket and one sweep morsel, so the keep-flag writes are
+/// disjoint; the final ascending scan over the flags rebuilds the
+/// sequential first-occurrence index list bit-for-bit.
+pub fn unique_by_key_par(
+    t: &Table,
+    key_col: usize,
+    pool: &ThreadPool,
+) -> Result<Table> {
+    let keys = t.column(key_col).as_i64()?;
+    let nt = pool.size().min(keys.len() / par_min_rows()).max(1);
+    if nt <= 1 || keys.len() >= u32::MAX as usize {
+        return unique_by_key_seq(t, key_col);
+    }
+    let index = CsrIndex::build_par(keys, pool);
+    let mut keep = vec![false; keys.len()];
+    {
+        let shared = SharedSlice::new(&mut keep);
+        // 4 morsels per worker: bucket occupancy is uneven under skew.
+        let morsels = morsel_ranges(index.num_buckets(), nt * 4);
+        pool.run_indexed(morsels.len(), |m| {
+            let (lo, hi) = morsels[m];
+            for b in lo..hi {
+                let rows = index.bucket_rows(b);
+                for (i, &r) in rows.iter().enumerate() {
+                    let k = keys[r as usize];
+                    // `all` short-circuits on the first equal key, so a
+                    // long duplicate run costs O(1) per row.
+                    if rows[..i].iter().all(|&p| keys[p as usize] != k) {
+                        // SAFETY: buckets partition the rows and morsels
+                        // partition the buckets, so no two writers share
+                        // an index; reads only after the join.
+                        unsafe { shared.write(r as usize, true) };
+                    }
+                }
+            }
+        });
+    }
+    let idx: Vec<usize> =
+        keep.iter().enumerate().filter(|&(_, &k)| k).map(|(i, _)| i).collect();
     Ok(t.take(&idx))
 }
 
@@ -65,6 +139,28 @@ mod tests {
         let tbl = t(vec![1, 1, 1], vec![10, 10, 11]);
         let u = unique_rows(&tbl).unwrap();
         assert_eq!(u.num_rows(), 2);
+    }
+
+    #[test]
+    fn parallel_unique_is_bit_identical_to_sequential() {
+        // Straddle the morsel threshold; duplicate-heavy and all-equal
+        // keys make the first-occurrence choice observable.
+        let pmr = par_min_rows();
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            for n in [0usize, 100, pmr, 3 * pmr] {
+                let dup: Vec<i64> =
+                    (0..n as i64).map(|i| (i * 37) % 613).collect();
+                let all_equal = vec![7i64; n];
+                for keys in [dup, all_equal] {
+                    let vals: Vec<i64> = (0..n as i64).collect();
+                    let tbl = t(keys, vals);
+                    let par = unique_by_key_par(&tbl, 0, &pool).unwrap();
+                    let seq = unique_by_key_seq(&tbl, 0).unwrap();
+                    assert_eq!(par, seq, "threads={threads} n={n}");
+                }
+            }
+        }
     }
 
     #[test]

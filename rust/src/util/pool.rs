@@ -382,6 +382,45 @@ pub fn parallelism() -> usize {
     global().size()
 }
 
+/// Default morsel threshold: kernels dispatch to their parallel twin
+/// only at or above this many rows (below it, morsel bookkeeping costs
+/// more than it saves).
+pub const DEFAULT_PAR_MIN_ROWS: usize = 4096;
+
+static PAR_MIN_ROWS: OnceLock<usize> = OnceLock::new();
+static PAR_MIN_ROWS_CONFIGURED: AtomicUsize = AtomicUsize::new(0);
+
+/// Pre-set the morsel threshold before first use (e.g. from the
+/// `par_min_rows` config knob). Values are clamped to ≥ 1 so kernels
+/// may divide by the threshold; a no-op once [`par_min_rows`] has run.
+pub fn configure_par_min_rows(rows: usize) {
+    PAR_MIN_ROWS_CONFIGURED.store(rows.max(1), Ordering::Relaxed);
+}
+
+/// The process-wide morsel threshold.
+///
+/// Precedence mirrors the pool size: [`configure_par_min_rows`] if
+/// called first, else the `RC_PAR_MIN_ROWS` environment variable, else
+/// [`DEFAULT_PAR_MIN_ROWS`]. Tests set a small value to force the
+/// parallel kernels on small fixtures instead of building ≥ 8192-row
+/// inputs everywhere.
+pub fn par_min_rows() -> usize {
+    *PAR_MIN_ROWS.get_or_init(|| {
+        let configured = PAR_MIN_ROWS_CONFIGURED.load(Ordering::Relaxed);
+        if configured > 0 {
+            return configured;
+        }
+        match std::env::var("RC_PAR_MIN_ROWS") {
+            Ok(v) => v
+                .trim()
+                .parse::<usize>()
+                .map(|n| n.max(1))
+                .unwrap_or(DEFAULT_PAR_MIN_ROWS),
+            Err(_) => DEFAULT_PAR_MIN_ROWS,
+        }
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -467,6 +506,17 @@ mod tests {
             });
         }
         assert_eq!(buf, (0..64).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn par_min_rows_is_positive_and_stable() {
+        // Whatever the env/config say, the resolved threshold must be
+        // ≥ 1 (kernels divide by it) and identical across calls (it is
+        // latched on first use, like the pool size).
+        let a = par_min_rows();
+        let b = par_min_rows();
+        assert!(a >= 1);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -1,0 +1,507 @@
+//! Determinism property suite for the **distributed** data plane after the
+//! morsel-parallelism pass: shuffle routing, dist_sort, dist_hash_join, and
+//! dist_groupby must be bit-identical to their sequential twins under the
+//! skew shapes that stress morsel splitting hardest — all-equal keys, a
+//! Zipf-style hot key, empty ranks, and NaN float payloads (compared by
+//! `to_bits`, so "identical" really means identical).
+//!
+//! Two layers of coverage:
+//!
+//! * **Explicit pools** ([1, 2, 4, 8]): the parallel kernels the dist ops
+//!   compose — `counting_scatter_par`, `merge_sorted_par`, and the pooled
+//!   per-destination shuffle gathers — run on private `ThreadPool`s of
+//!   every size against sequential oracles, with `mem::thread()` byte
+//!   counters asserted **exactly equal** across pool sizes (the pool
+//!   scope credits worker deltas back to the caller).
+//! * **End-to-end** (ambient global pool): the dist operators run through
+//!   `CommWorld` against oracles that re-derive the routing sequentially
+//!   (`partition_of` + stable selection). CI runs this binary both with
+//!   the pool disabled and with `RC_PARALLELISM=4` (and under TSan), so
+//!   the same fixed expectations pin both schedules to identical bits.
+
+use radical_cylon::comm::{CommWorld, NetModel, ReduceOp};
+use radical_cylon::df::{Column, DataType, Schema, Table};
+use radical_cylon::metrics::mem;
+use radical_cylon::ops::dist::{
+    counting_scatter_par, destination_lists, dist_groupby, dist_hash_join,
+    dist_sort, shuffle_by_key, KernelBackend,
+};
+use radical_cylon::ops::local::{
+    groupby_agg, hash_join, is_sorted_by_key, merge_sorted_par,
+    merge_sorted_per_row, sort_table, AggFn, JoinType, SortKey,
+};
+use radical_cylon::util::hash::{partition_ids, partition_of};
+use radical_cylon::util::pool::ThreadPool;
+use radical_cylon::util::testkit;
+use radical_cylon::util::Rng;
+
+/// The default morsel threshold (`util::pool::DEFAULT_PAR_MIN_ROWS`).
+/// This suite runs without `RC_PAR_MIN_ROWS`, so sizes below/above this
+/// constant exercise both the sequential fallback and the real
+/// multi-morsel path.
+const PAR_MIN_ROWS: usize = radical_cylon::util::pool::DEFAULT_PAR_MIN_ROWS;
+
+const POOL_SIZES: [usize; 4] = [1, 2, 4, 8];
+
+fn world(p: usize) -> CommWorld {
+    CommWorld::new(p, NetModel::disabled())
+}
+
+fn kv_f64(keys: Vec<i64>, vals: Vec<f64>) -> Table {
+    Table::new(
+        Schema::of(&[("key", DataType::Int64), ("val", DataType::Float64)]),
+        vec![Column::from_i64(keys), Column::from_f64(vals)],
+    )
+    .unwrap()
+}
+
+/// ~80% of rows share one hot key (the Zipf-head shape).
+fn hot_keys(rng: &mut Rng, n: usize) -> Vec<i64> {
+    (0..n)
+        .map(|_| if rng.gen_range(10) < 8 { 7 } else { rng.gen_i64(0, 50) })
+        .collect()
+}
+
+/// Float payloads with NaNs sprinkled in — any reordering or accumulation
+/// change shows up in the bits.
+fn nan_vals(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| if i % 97 == 0 { f64::NAN } else { rng.gen_f64() })
+        .collect()
+}
+
+/// Bitwise table equality: float columns compare by `to_bits` (plain
+/// `assert_eq!` would call every NaN unequal to itself).
+fn assert_bit_identical(a: &Table, b: &Table, ctx: &str) {
+    assert_eq!(a.num_rows(), b.num_rows(), "{ctx}: row count");
+    assert_eq!(a.num_columns(), b.num_columns(), "{ctx}: column count");
+    for c in 0..a.num_columns() {
+        match (a.column(c).as_i64(), b.column(c).as_i64()) {
+            (Ok(x), Ok(y)) => assert_eq!(x, y, "{ctx}: int col {c}"),
+            _ => {
+                let bits = |t: &Table| -> Vec<u64> {
+                    let v = t.column(c).as_f64().unwrap();
+                    v.iter().map(|v| v.to_bits()).collect()
+                };
+                assert_eq!(bits(a), bits(b), "{ctx}: float col {c} (bitwise)");
+            }
+        }
+    }
+}
+
+/// The per-rank key shapes the suite sweeps: all-equal, Zipf-hot, empty
+/// ranks (rank 0 owns everything), and a uniform control.
+fn rank_shapes(rng: &mut Rng, p: usize, n: usize) -> Vec<Vec<Vec<i64>>> {
+    vec![
+        (0..p).map(|_| vec![7i64; n]).collect(),
+        (0..p).map(|_| hot_keys(rng, n)).collect(),
+        (0..p)
+            .map(|r| if r == 0 { hot_keys(rng, n * p) } else { Vec::new() })
+            .collect(),
+        (0..p)
+            .map(|r| (0..n as i64).map(|i| i * 13 + r as i64).collect())
+            .collect(),
+    ]
+}
+
+/// Sequential re-derivation of the shuffle: rank `r` receives, from each
+/// sender `s` in rank order, sender `s`'s rows with `partition_of(k) == r`
+/// in their original order.
+fn expected_shuffle(parts: &[Table], key: usize, r: usize) -> Table {
+    let p = parts.len();
+    let chunks: Vec<Table> = parts
+        .iter()
+        .map(|t| {
+            let keys = t.column(key).as_i64().unwrap();
+            let idx: Vec<usize> = keys
+                .iter()
+                .enumerate()
+                .filter(|&(_, &k)| partition_of(k, p as u32) as usize == r)
+                .map(|(i, _)| i)
+                .collect();
+            t.take(&idx)
+        })
+        .collect();
+    Table::concat(&chunks).unwrap()
+}
+
+#[test]
+fn counting_scatter_par_bit_identical_and_mem_equal_across_pool_sizes() {
+    testkit::check("counting scatter par == destination lists", 2, |rng| {
+        for n in [0usize, 500, PAR_MIN_ROWS, 3 * PAR_MIN_ROWS] {
+            for keys in [vec![7i64; n], hot_keys(rng, n)] {
+                for nparts in [1usize, 4, 16] {
+                    let ids = partition_ids(&keys, nparts as u32);
+                    let oracle = destination_lists(&ids, nparts);
+                    let mut deltas = Vec::new();
+                    for &threads in &POOL_SIZES {
+                        let pool = ThreadPool::new(threads);
+                        let before = mem::thread();
+                        let (rows, offsets) =
+                            counting_scatter_par(&ids, nparts, &pool);
+                        deltas.push(mem::thread().since(before));
+                        for d in 0..nparts {
+                            let flat: Vec<usize> = rows
+                                [offsets[d]..offsets[d + 1]]
+                                .iter()
+                                .map(|&r| r as usize)
+                                .collect();
+                            assert_eq!(
+                                flat, oracle[d],
+                                "n={n} nparts={nparts} threads={threads} dest={d}"
+                            );
+                        }
+                    }
+                    for (i, d) in deltas.iter().enumerate() {
+                        assert_eq!(
+                            (d.materialized, d.viewed),
+                            (deltas[0].materialized, deltas[0].viewed),
+                            "mem counters diverge at pool size {} (n={n})",
+                            POOL_SIZES[i]
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn merge_sorted_par_bit_identical_and_mem_equal_across_pool_sizes() {
+    testkit::check("parallel k-way merge == per-row oracle", 2, |rng| {
+        for per_part in [0usize, 60, PAR_MIN_ROWS, 2 * PAR_MIN_ROWS] {
+            let shapes: Vec<Vec<Vec<i64>>> = vec![
+                // All-equal keys: the merge is one long tie-break chain.
+                (0..4).map(|_| vec![7i64; per_part]).collect(),
+                // Hot key + one empty part.
+                (0..4)
+                    .map(|i| {
+                        if i == 3 {
+                            Vec::new()
+                        } else {
+                            let mut k = hot_keys(rng, per_part);
+                            k.sort_unstable();
+                            k
+                        }
+                    })
+                    .collect(),
+                // Interleaved distinct runs.
+                (0..4)
+                    .map(|part| {
+                        (0..per_part as i64).map(|i| i * 3 + part).collect()
+                    })
+                    .collect(),
+            ];
+            for keys_by_part in shapes {
+                let parts: Vec<Table> = keys_by_part
+                    .into_iter()
+                    .map(|k| {
+                        let vals = nan_vals(rng, k.len());
+                        sort_table(&kv_f64(k, vals), SortKey::asc(0)).unwrap()
+                    })
+                    .collect();
+                let oracle = merge_sorted_per_row(&parts, 0).unwrap();
+                let mut deltas = Vec::new();
+                for &threads in &POOL_SIZES {
+                    let pool = ThreadPool::new(threads);
+                    let before = mem::thread();
+                    let merged = merge_sorted_par(&parts, 0, &pool).unwrap();
+                    deltas.push(mem::thread().since(before));
+                    assert_bit_identical(
+                        &merged,
+                        &oracle,
+                        &format!("merge per_part={per_part} threads={threads}"),
+                    );
+                }
+                for (i, d) in deltas.iter().enumerate() {
+                    assert_eq!(
+                        (d.materialized, d.viewed),
+                        (deltas[0].materialized, deltas[0].viewed),
+                        "mem counters diverge at pool size {} (per_part={per_part})",
+                        POOL_SIZES[i]
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn pooled_shuffle_gathers_bit_identical_and_mem_equal_across_pool_sizes() {
+    // The shuffle's send stage in isolation: route with counting_scatter_par,
+    // then gather each destination's partition — sequentially vs as pool
+    // morsels — and require identical bits *and* identical byte counters.
+    testkit::check("pooled destination gathers == sequential", 2, |rng| {
+        let p = 4usize;
+        for n in [600usize, PAR_MIN_ROWS, 2 * PAR_MIN_ROWS] {
+            for keys in [vec![7i64; n], hot_keys(rng, n)] {
+                let t = kv_f64(keys.clone(), nan_vals(rng, n));
+                let ids = partition_ids(&keys, p as u32);
+                let seq_pool = ThreadPool::new(1);
+                let (rows, offsets) = counting_scatter_par(&ids, p, &seq_pool);
+                let before = mem::thread();
+                let oracle: Vec<Table> = (0..p)
+                    .map(|d| t.take_u32(&rows[offsets[d]..offsets[d + 1]]))
+                    .collect();
+                let seq_delta = mem::thread().since(before);
+                for &threads in &POOL_SIZES {
+                    let pool = ThreadPool::new(threads);
+                    let before = mem::thread();
+                    let sends = pool.run_indexed(p, |d| {
+                        t.take_u32(&rows[offsets[d]..offsets[d + 1]])
+                    });
+                    let delta = mem::thread().since(before);
+                    for (d, (got, want)) in
+                        sends.iter().zip(&oracle).enumerate()
+                    {
+                        assert_bit_identical(
+                            got,
+                            want,
+                            &format!("gather n={n} threads={threads} dest={d}"),
+                        );
+                    }
+                    assert_eq!(
+                        (delta.materialized, delta.viewed),
+                        (seq_delta.materialized, seq_delta.viewed),
+                        "gather mem counters diverge at pool size {threads} (n={n})"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn shuffle_routes_bit_identically_to_sequential_routing() {
+    testkit::check("dist shuffle == sequential routing", 2, |rng| {
+        let p = 4usize;
+        for n in [0usize, 300, PAR_MIN_ROWS] {
+            for parts_keys in rank_shapes(rng, p, n) {
+                let parts: Vec<Table> = parts_keys
+                    .into_iter()
+                    .map(|k| {
+                        let vals = nan_vals(rng, k.len());
+                        kv_f64(k, vals)
+                    })
+                    .collect();
+                let parts2 = parts.clone();
+                let out = world(p)
+                    .run(move |c| {
+                        shuffle_by_key(
+                            &c,
+                            &parts2[c.rank()],
+                            0,
+                            &KernelBackend::Native,
+                        )
+                        .unwrap()
+                    })
+                    .unwrap();
+                for (r, got) in out.iter().enumerate() {
+                    let want = expected_shuffle(&parts, 0, r);
+                    assert_bit_identical(
+                        got,
+                        &want,
+                        &format!("shuffle n={n} rank={r}"),
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn dist_sort_bit_identical_to_stable_sort_of_concat() {
+    // Stable local sorts + rank-ordered range exchange + part-index
+    // tie-broken merge == one stable sort of the rank-order concatenation,
+    // bit for bit — at any pool size.
+    testkit::check("dist sort == stable sort oracle", 2, |rng| {
+        for p in [1usize, 3, 4] {
+            for n in [0usize, 400, PAR_MIN_ROWS] {
+                for parts_keys in rank_shapes(rng, p, n) {
+                    let parts: Vec<Table> = parts_keys
+                        .into_iter()
+                        .map(|k| {
+                            let vals = nan_vals(rng, k.len());
+                            kv_f64(k, vals)
+                        })
+                        .collect();
+                    let parts2 = parts.clone();
+                    let out = world(p)
+                        .run(move |c| {
+                            let s = dist_sort(
+                                &c,
+                                &parts2[c.rank()],
+                                0,
+                                &KernelBackend::Native,
+                            )
+                            .unwrap();
+                            assert!(is_sorted_by_key(&s, 0).unwrap());
+                            s
+                        })
+                        .unwrap();
+                    let got = Table::concat(&out).unwrap();
+                    let oracle = sort_table(
+                        &Table::concat(&parts).unwrap(),
+                        SortKey::asc(0),
+                    )
+                    .unwrap();
+                    assert_bit_identical(
+                        &got,
+                        &oracle,
+                        &format!("dist_sort p={p} n={n}"),
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn dist_join_bit_identical_to_sequentially_routed_join() {
+    testkit::check("dist join == sequential-routing twin", 2, |rng| {
+        let p = 4usize;
+        for n in [0usize, 200, PAR_MIN_ROWS] {
+            for left_keys in rank_shapes(rng, p, n) {
+                let lefts: Vec<Table> = left_keys
+                    .into_iter()
+                    .map(|k| {
+                        let vals = nan_vals(rng, k.len());
+                        kv_f64(k, vals)
+                    })
+                    .collect();
+                // Narrow right side keeps skewed outputs linear in n.
+                let rights: Vec<Table> = (0..p)
+                    .map(|r| {
+                        let k: Vec<i64> =
+                            (0..24).map(|i| (i * 5 + r as i64) % 60).collect();
+                        let vals = nan_vals(rng, k.len());
+                        kv_f64(k, vals)
+                    })
+                    .collect();
+                let (l2, r2) = (lefts.clone(), rights.clone());
+                let out = world(p)
+                    .run(move |c| {
+                        dist_hash_join(
+                            &c,
+                            &l2[c.rank()],
+                            &r2[c.rank()],
+                            0,
+                            0,
+                            JoinType::Inner,
+                            &KernelBackend::Native,
+                        )
+                        .unwrap()
+                    })
+                    .unwrap();
+                for (r, got) in out.iter().enumerate() {
+                    let want = hash_join(
+                        &expected_shuffle(&lefts, 0, r),
+                        &expected_shuffle(&rights, 0, r),
+                        0,
+                        0,
+                        JoinType::Inner,
+                    )
+                    .unwrap();
+                    assert_bit_identical(
+                        got,
+                        &want,
+                        &format!("dist_join n={n} rank={r}"),
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn dist_groupby_bit_identical_to_sequential_two_phase_twin() {
+    // Whole-number vals keep float arithmetic exact, so the two-phase
+    // composition is reproducible bit-for-bit by a sequential twin that
+    // re-derives the routing with `partition_of`.
+    testkit::check("dist groupby == sequential two-phase twin", 2, |rng| {
+        let p = 3usize;
+        for n in [0usize, 240, PAR_MIN_ROWS] {
+            for parts_keys in rank_shapes(rng, p, n) {
+                let parts: Vec<Table> = parts_keys
+                    .into_iter()
+                    .map(|k| {
+                        let vals: Vec<f64> =
+                            (0..k.len()).map(|_| rng.gen_i64(0, 9) as f64).collect();
+                        kv_f64(k, vals)
+                    })
+                    .collect();
+                for agg in [AggFn::Sum, AggFn::Count, AggFn::Min, AggFn::Max] {
+                    let parts2 = parts.clone();
+                    let out = world(p)
+                        .run(move |c| {
+                            let g = dist_groupby(
+                                &c,
+                                &parts2[c.rank()],
+                                0,
+                                1,
+                                agg,
+                                &KernelBackend::Native,
+                            )
+                            .unwrap();
+                            let fp = c.allreduce_u64(
+                                g.multiset_fingerprint(),
+                                ReduceOp::Sum,
+                            );
+                            (g, fp)
+                        })
+                        .unwrap();
+                    // Global value oracle: one local aggregation of the
+                    // whole input (exact arithmetic makes orders agree).
+                    let oracle = groupby_agg(
+                        &Table::concat(&parts).unwrap(),
+                        0,
+                        1,
+                        agg,
+                    )
+                    .unwrap();
+                    assert_eq!(
+                        out[0].1,
+                        oracle.multiset_fingerprint(),
+                        "{agg:?} n={n} global fingerprint"
+                    );
+                    // Per-rank bit-oracle: sequential two-phase twin.
+                    let partials: Vec<Table> = parts
+                        .iter()
+                        .map(|t| groupby_agg(t, 0, 1, agg).unwrap())
+                        .collect();
+                    let combine = match agg {
+                        AggFn::Count => AggFn::Sum,
+                        other => other,
+                    };
+                    for (r, (got, _)) in out.iter().enumerate() {
+                        let want = groupby_agg(
+                            &expected_shuffle(&partials, 0, r),
+                            0,
+                            1,
+                            combine,
+                        )
+                        .unwrap();
+                        assert_eq!(
+                            got.column(0).as_i64().unwrap(),
+                            want.column(0).as_i64().unwrap(),
+                            "{agg:?} n={n} rank={r} keys"
+                        );
+                        let bits = |t: &Table| -> Vec<u64> {
+                            t.column(1)
+                                .as_f64()
+                                .unwrap()
+                                .iter()
+                                .map(|v| v.to_bits())
+                                .collect()
+                        };
+                        assert_eq!(
+                            bits(got),
+                            bits(&want),
+                            "{agg:?} n={n} rank={r} values (bitwise)"
+                        );
+                    }
+                }
+            }
+        }
+    });
+}

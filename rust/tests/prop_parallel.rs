@@ -21,9 +21,12 @@ use radical_cylon::util::pool::ThreadPool;
 use radical_cylon::util::testkit;
 use radical_cylon::util::Rng;
 
-/// Mirrors `ops::local::sort::PAR_MIN_ROWS` (crate-private): the row
-/// count above which the kernels split into multiple morsels.
-const PAR_MIN_ROWS: usize = 4096;
+/// The default morsel threshold (`util::pool::DEFAULT_PAR_MIN_ROWS`):
+/// the row count above which the kernels split into multiple morsels.
+/// This suite runs without `RC_PAR_MIN_ROWS`, so sizes below/above this
+/// constant exercise both the sequential fallback and the real
+/// multi-morsel path.
+const PAR_MIN_ROWS: usize = radical_cylon::util::pool::DEFAULT_PAR_MIN_ROWS;
 
 const POOL_SIZES: [usize; 4] = [1, 2, 4, 8];
 
