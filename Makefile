@@ -2,7 +2,7 @@
 # build`); `artifacts` needs a JAX-capable python for the optional PJRT
 # data plane.
 
-.PHONY: artifacts build test check bench-kernels bench-expr clean
+.PHONY: artifacts build test check bench-kernels bench-expr bench-service clean
 
 artifacts:
 	cd python && python -m compile.aot --out ../artifacts
@@ -27,6 +27,12 @@ bench-kernels:
 bench-expr:
 	cd rust && RC_BENCH_JSON=expr_pushdown.json cargo bench --bench expr_pushdown
 	scripts/bench_check.sh rust/expr_pushdown.json
+
+# Multi-tenant query service under Zipf load: result cache on vs off
+# (hot must observe cache hits and be strictly faster, ratio-gated).
+bench-service:
+	cd rust && RC_BENCH_JSON=service_load.json cargo bench --bench service_load
+	scripts/bench_check.sh rust/service_load.json
 
 clean:
 	cd rust && cargo clean

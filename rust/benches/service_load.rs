@@ -1,0 +1,220 @@
+//! Sustained-load benchmark for the multi-tenant [`QueryService`]:
+//! concurrent client threads replay a Zipf-skewed stream over a working
+//! set of distinct plans — a few hot queries dominate, a long tail stays
+//! cold — against two service configurations:
+//!
+//! * `service/cold` — result cache **disabled**: every submission
+//!   executes its DAG on the shared rank pool (plan-cache reuse only).
+//! * `service/hot`  — result cache enabled: repeated collect plans are
+//!   served straight from the LRU result cache.
+//!
+//! Reported per configuration: wall-clock per iteration plus p50/p99
+//! per-query latency and sustained QPS (computed from the raw per-query
+//! samples — the harness `Stats` only carries mean/min/max). Acceptance,
+//! asserted here and ratio-gated in CI against the committed
+//! BENCH_kernels.json seed via `scripts/bench_check.sh`:
+//!
+//! * every query's result fingerprints identically to its solo run —
+//!   concurrency and caching must be invisible in the bytes;
+//! * the hot service observes result-cache hits (counters in
+//!   [`metrics::cache`]);
+//! * the hot service is strictly faster wall-clock than the cold one.
+//!
+//! Run with `cargo bench --bench service_load` (RC_BENCH_ITERS raises
+//! samples, RC_BENCH_JSON=<path> archives the numbers).
+
+use std::sync::Mutex;
+
+use radical_cylon::metrics::cache as cache_metrics;
+use radical_cylon::prelude::*;
+use radical_cylon::util::bench_harness::{bench_iters, BenchSet};
+
+const RANKS: usize = 2;
+const ROWS: usize = 30_000; // per rank, per plan
+const PLANS: usize = 8; // working-set size
+const CLIENTS: usize = 4;
+const QUERIES: usize = 24; // per client per iteration
+
+fn plan_m(m: usize) -> Plan {
+    Plan::generate(RANKS, GenSpec::uniform(ROWS, (ROWS / 2) as i64, 0xD0 + m as u64))
+        .sort("key")
+        .collect()
+}
+
+/// Zipf(s≈1.1) index over the working set from a splitmix-style stream:
+/// rank 0 takes the lion's share, the tail decays polynomially.
+fn zipf_index(state: &mut u64) -> usize {
+    *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    let u = ((*state >> 33) as f64) / ((1u64 << 31) as f64); // [0, 1)
+    let weights: Vec<f64> =
+        (0..PLANS).map(|k| 1.0 / ((k + 1) as f64).powf(1.1)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut acc = 0.0;
+    for (k, w) in weights.iter().enumerate() {
+        acc += w / total;
+        if u < acc {
+            return k;
+        }
+    }
+    PLANS - 1
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+/// One measured iteration: CLIENTS threads each replay QUERIES Zipf
+/// submissions; returns (per-query latencies, fingerprints seen, QPS).
+fn drive(svc: &QueryService, iter_seed: u64) -> (Vec<f64>, Vec<(usize, u64)>, f64) {
+    let lat = Mutex::new(Vec::new());
+    let prints = Mutex::new(Vec::new());
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let lat = &lat;
+            let prints = &prints;
+            s.spawn(move || {
+                let mut rng = iter_seed ^ (0x9E3779B9_7F4A7C15u64.wrapping_mul(c as u64 + 1));
+                for _ in 0..QUERIES {
+                    let m = zipf_index(&mut rng);
+                    let q0 = std::time::Instant::now();
+                    let r = svc
+                        .submit(plan_m(m))
+                        .expect("queue_depth sized for the full offered load")
+                        .join()
+                        .expect("query");
+                    lat.lock().unwrap().push(q0.elapsed().as_secs_f64());
+                    prints.lock().unwrap().push((
+                        m,
+                        r.output.expect("collect plan").multiset_fingerprint(),
+                    ));
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    let qps = (CLIENTS * QUERIES) as f64 / elapsed;
+    (lat.into_inner().unwrap(), prints.into_inner().unwrap(), qps)
+}
+
+fn main() {
+    let iters = bench_iters(3);
+    let mut set = BenchSet::new(
+        "query service under Zipf load: result cache on vs off \
+         (4 clients x 24 queries, 8-plan working set, p=2)",
+    );
+
+    // Solo reference fingerprints (bit-identical acceptance).
+    let solo: Vec<u64> = (0..PLANS)
+        .map(|m| {
+            let eng = HeterogeneousEngine::new(
+                MachineSpec::local(RANKS),
+                KernelBackend::Native,
+                RANKS,
+            );
+            eng.run_plan(&plan_m(m))
+                .unwrap()
+                .output
+                .unwrap()
+                .multiset_fingerprint()
+        })
+        .collect();
+
+    let cfg = |cache_bytes: u64| ServiceConfig {
+        ranks: RANKS,
+        max_inflight: 4,
+        queue_depth: CLIENTS * QUERIES, // never reject under the offered load
+        max_inflight_bytes: 0,
+        result_cache_bytes: cache_bytes,
+        admit: AdmitPolicy::Fifo,
+    };
+
+    let mut mode = |set: &mut BenchSet,
+                    label: &str,
+                    cache_bytes: u64,
+                    solo: &[u64]| {
+        let svc = QueryService::start(cfg(cache_bytes)).unwrap();
+        let before = cache_metrics::snapshot();
+        let mut latencies = Vec::new();
+        let mut qps_samples = Vec::new();
+        let mut seed = 0xA5A5u64;
+        set.bench(label, 1, iters, || {
+            seed = seed.wrapping_add(1);
+            let (lat, prints, qps) = drive(&svc, seed);
+            for (m, fp) in prints {
+                assert_eq!(
+                    fp, solo[m],
+                    "{label}: plan {m} diverged from its solo run"
+                );
+            }
+            latencies.extend(lat);
+            qps_samples.push(qps);
+            None
+        });
+        let delta = cache_metrics::snapshot().since(before);
+        svc.shutdown();
+        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let row = set.rows.iter_mut().find(|r| r.label == label).unwrap();
+        row.extra.push((
+            "p50_ms".into(),
+            format!("{:.2}", percentile(&latencies, 0.50) * 1e3),
+        ));
+        row.extra.push((
+            "p99_ms".into(),
+            format!("{:.2}", percentile(&latencies, 0.99) * 1e3),
+        ));
+        let qps = qps_samples.iter().sum::<f64>() / qps_samples.len() as f64;
+        row.extra.push(("qps".into(), format!("{qps:.1}")));
+        row.extra
+            .push(("result_hits".into(), delta.result_hits.to_string()));
+        row.extra
+            .push(("plan_hits".into(), delta.plan_hits.to_string()));
+        delta
+    };
+
+    let cold = mode(&mut set, "service/cold", 0, &solo);
+    let hot = mode(&mut set, "service/hot", 256 * 1024 * 1024, &solo);
+
+    // ---- acceptance 1: cache behaviour is observable ---------------------
+    assert_eq!(
+        cold.result_hits, 0,
+        "cold service must never hit the result cache"
+    );
+    assert!(
+        hot.result_hits > 0,
+        "hot service must serve repeats from the result cache: {hot:?}"
+    );
+
+    // ---- acceptance 2: hot strictly faster -------------------------------
+    let row_of = |label: &str| {
+        set.rows.iter().find(|r| r.label == label).expect("row").clone()
+    };
+    let (cold_row, hot_row) = (row_of("service/cold"), row_of("service/hot"));
+    println!(
+        "cold {:.4}s/iter vs hot {:.4}s/iter",
+        cold_row.wall.mean, hot_row.wall.mean
+    );
+    assert!(
+        hot_row.wall.mean < cold_row.wall.mean,
+        "result-cache hits must make the hot service strictly faster \
+         ({:.4}s vs {:.4}s)",
+        hot_row.wall.mean,
+        cold_row.wall.mean
+    );
+
+    // Pair the rows for scripts/bench_check.sh's speedup-ratio gate.
+    set.rows
+        .iter_mut()
+        .find(|r| r.label == "service/hot")
+        .expect("row exists")
+        .extra
+        .push(("baseline".into(), "service/cold".into()));
+
+    set.report();
+    set.maybe_write_json();
+    println!("\nservice_load OK");
+}

@@ -6,6 +6,8 @@
 //!                   [--iterations N] [--parallelisms 2,4,8] [--config file.ini]
 //! radical-cylon plan [--ranks N] [--rows N] [--engine bm|batch|rp]
 //!                    [--policy fifo|cpf] [--backend native|pjrt] [--expr]
+//! radical-cylon serve [--clients N] [--queries N] [--rows N] [--ranks N]
+//!                     [--config file.ini]
 //! ```
 //!
 //! `plan --expr` runs the typed-expression demo: a derived column plus a
@@ -13,19 +15,22 @@
 //! fusion, predicate pushdown, projection pruning).
 
 use crate::cluster::MachineSpec;
-use crate::config::{parse_ini, preset, preset_ids, ExperimentConfig, SCALE_NOTE};
+use crate::config::{
+    parse_ini, preset, preset_ids, ExperimentConfig, ServiceConfig, SCALE_NOTE,
+};
 use crate::df::GenSpec;
 use crate::error::{Error, Result};
 use crate::exec::{
     run_hetero_vs_batch, run_scaling, BareMetalEngine, BatchEngine, Engine,
     EngineKind, HeterogeneousEngine, PlanRun,
 };
-use crate::metrics::render_table;
+use crate::metrics::{cache as cache_metrics, render_table};
 use crate::ops::dist::KernelBackend;
 use crate::plan::expr::{col, lit};
 use crate::plan::Plan;
 use crate::raptor::ReadyPolicy;
 use crate::runtime::{ArtifactStore, KernelService};
+use crate::service::{CacheOutcome, QueryService};
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
@@ -309,12 +314,121 @@ fn cmd_plan(args: &Args) -> Result<String> {
     Ok(out)
 }
 
+/// `serve` — boot a [`QueryService`] and drive it with concurrent client
+/// threads submitting a small working set of distinct plans with a hot
+/// head (most clients re-ask the same query), then report throughput and
+/// cache behaviour. This is the service's smoke-test face; the sustained
+/// Zipf-load benchmark lives in `benches/service_load.rs`.
+fn cmd_serve(args: &Args) -> Result<String> {
+    let parse = |key: &str, default: usize| -> Result<usize> {
+        match args.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("bad --{key} '{v}'"))),
+        }
+    };
+    let clients = parse("clients", 4)?.max(1);
+    let queries = parse("queries", 16)?.max(1); // per client
+    let rows = parse("rows", 5_000)?.max(1);
+    let mut cfg = if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)?;
+        ServiceConfig::from_ini(&parse_ini(&text)?)
+    } else {
+        ServiceConfig::from_env()
+    }?;
+    if args.has("ranks") {
+        cfg.ranks = parse("ranks", cfg.ranks)?;
+    }
+    let ranks = cfg.ranks.clamp(1, 2);
+    let svc = QueryService::start(cfg)?;
+    // Working set: 4 distinct sorted-generate plans; index 0 is hot.
+    let plan_for = move |i: usize| {
+        let seed = 0xC11 + i as u64;
+        Plan::generate(ranks, GenSpec::uniform(rows, rows as i64, seed))
+            .sort("key")
+            .collect()
+    };
+    let before = cache_metrics::snapshot();
+    let t0 = std::time::Instant::now();
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let done = AtomicU64::new(0);
+    let rejected = AtomicU64::new(0);
+    let failed = AtomicU64::new(0);
+    let result_hits = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let svc = &svc;
+            let done = &done;
+            let rejected = &rejected;
+            let failed = &failed;
+            let result_hits = &result_hits;
+            s.spawn(move || {
+                for q in 0..queries {
+                    // 3-in-4 submissions hit the hot plan; the rest
+                    // rotate through the cold tail.
+                    let idx = if (c + q) % 4 != 0 { 0 } else { 1 + q % 3 };
+                    match svc.submit(plan_for(idx)) {
+                        Err(Error::Admission(_)) => {
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Ok(h) => match h.join() {
+                            Ok(r) => {
+                                done.fetch_add(1, Ordering::Relaxed);
+                                if r.cache == CacheOutcome::ResultHit {
+                                    result_hits.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                            Err(_) => {
+                                failed.fetch_add(1, Ordering::Relaxed);
+                            }
+                        },
+                    }
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    svc.shutdown();
+    let d = cache_metrics::snapshot().since(before);
+    let completed = done.load(Ordering::Relaxed);
+    let mut out = format!(
+        "query service: {clients} clients x {queries} queries \
+         ({ranks}-rank plans, {rows} rows/rank)\n"
+    );
+    out.push_str(&render_table(
+        &["completed", "rejected", "failed", "elapsed (s)", "QPS"],
+        &[vec![
+            completed.to_string(),
+            rejected.load(Ordering::Relaxed).to_string(),
+            failed.load(Ordering::Relaxed).to_string(),
+            format!("{elapsed:.3}"),
+            format!("{:.1}", completed as f64 / elapsed),
+        ]],
+    ));
+    out.push_str(&format!(
+        "result-cache hits {} (observed {}), misses {}, evictions {}; \
+         plan-cache hits {}, misses {}\n",
+        d.result_hits,
+        result_hits.load(Ordering::Relaxed),
+        d.result_misses,
+        d.result_evictions,
+        d.plan_hits,
+        d.plan_misses,
+    ));
+    Ok(out)
+}
+
 fn cmd_help() -> String {
     "usage:\n  radical-cylon info [--experiments]\n  radical-cylon run --experiment <id> \
      [--engine bm|batch|rp] [--backend native|pjrt] [--iterations N] \
      [--parallelisms 2,4,8] [--config file.ini]\n  radical-cylon plan [--ranks N] \
      [--rows N] [--engine bm|batch|rp] [--policy fifo|cpf] [--backend native|pjrt] \
-     [--expr]\n"
+     [--expr]\n  radical-cylon serve [--clients N] [--queries N] [--rows N] [--ranks N] \
+     [--config file.ini]\n"
         .to_string()
 }
 
@@ -325,6 +439,7 @@ pub fn dispatch(argv: Vec<String>) -> Result<String> {
         "info" => cmd_info(&args),
         "run" => cmd_run(&args),
         "plan" => cmd_plan(&args),
+        "serve" => cmd_serve(&args),
         "help" | "--help" | "-h" => Ok(cmd_help()),
         other => Err(Error::Config(format!(
             "unknown command '{other}'\n{}",
@@ -392,6 +507,18 @@ mod tests {
         assert!(out.contains("result ("), "{out}");
         // The derived column appears in the sink schema.
         assert!(out.contains("boosted"), "{out}");
+    }
+
+    #[test]
+    fn serve_smoke() {
+        let out =
+            dispatch(argv("serve --clients 2 --queries 6 --rows 300 --ranks 2"))
+                .unwrap();
+        assert!(out.contains("QPS"), "{out}");
+        assert!(out.contains("result-cache hits"), "{out}");
+        assert!(out.contains("completed"), "{out}");
+        let e = dispatch(argv("serve --clients zero")).unwrap_err().to_string();
+        assert!(e.contains("bad --clients"), "{e}");
     }
 
     #[test]

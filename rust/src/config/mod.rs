@@ -5,7 +5,7 @@
 mod parser;
 mod presets;
 
-pub use parser::{parse_ini, IniDoc};
+pub use parser::{lookup, parse_ini, IniDoc};
 pub use presets::{
     preset, preset_ids, RIVANNA_PAPER_RANKS, RIVANNA_SCALED_RANKS, SCALE_NOTE,
     SUMMIT_PAPER_RANKS, SUMMIT_SCALED_RANKS,
@@ -149,6 +149,138 @@ impl ExperimentConfig {
     }
 }
 
+/// Query-service knobs: rank-pool width, admission bounds, and cache
+/// budget. Parsed from an optional `[service]` INI section with
+/// per-key environment fallbacks (INI wins, then env, then the default):
+///
+/// | key                  | env                     | default    |
+/// |----------------------|-------------------------|------------|
+/// | `ranks`              | `RC_SERVICE_RANKS`      | 4          |
+/// | `max_inflight`       | `RC_MAX_INFLIGHT`       | 4          |
+/// | `queue_depth`        | `RC_QUEUE_DEPTH`        | 16         |
+/// | `max_inflight_bytes` | `RC_MAX_INFLIGHT_BYTES` | 0 (off)    |
+/// | `result_cache_bytes` | `RC_RESULT_CACHE_BYTES` | 64 MiB     |
+/// | `admit`              | `RC_ADMIT_POLICY`       | `fifo`     |
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// CPU ranks in the service's long-lived pilot (the shared rank pool
+    /// every admitted query's DAG nodes are multiplexed across).
+    pub ranks: usize,
+    /// Queries executing concurrently; further admissions queue.
+    pub max_inflight: usize,
+    /// Queued submissions beyond the in-flight set; a full queue rejects
+    /// with [`Error::Admission`]. `0` = reject-when-busy (no queueing).
+    pub queue_depth: usize,
+    /// Bound on the summed estimated source bytes of in-flight queries
+    /// ([`crate::pipeline::Pipeline::estimated_source_bytes`]); `0`
+    /// disables the byte bound. A single query larger than the bound is
+    /// still admitted when it is alone, so it cannot starve forever.
+    pub max_inflight_bytes: u64,
+    /// LRU result-cache budget (bytes of cached collected tables,
+    /// [`crate::comm::CommData::approx_bytes`]-style window accounting);
+    /// `0` disables result caching.
+    pub result_cache_bytes: u64,
+    /// Queue ordering when capacity frees up.
+    pub admit: crate::service::AdmitPolicy,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        ServiceConfig {
+            ranks: 4,
+            max_inflight: 4,
+            queue_depth: 16,
+            max_inflight_bytes: 0,
+            result_cache_bytes: 64 * 1024 * 1024,
+            admit: crate::service::AdmitPolicy::Fifo,
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// Parse from an INI document's optional `[service]` section, with
+    /// env fallbacks per key (see the type docs), then [`Self::validate`].
+    pub fn from_ini(doc: &IniDoc) -> Result<ServiceConfig> {
+        let d = ServiceConfig::default();
+        let s = "service";
+        let cfg = ServiceConfig {
+            ranks: lookup(doc, s, "ranks", "RC_SERVICE_RANKS", d.ranks)?,
+            max_inflight: lookup(
+                doc,
+                s,
+                "max_inflight",
+                "RC_MAX_INFLIGHT",
+                d.max_inflight,
+            )?,
+            queue_depth: lookup(
+                doc,
+                s,
+                "queue_depth",
+                "RC_QUEUE_DEPTH",
+                d.queue_depth,
+            )?,
+            max_inflight_bytes: lookup(
+                doc,
+                s,
+                "max_inflight_bytes",
+                "RC_MAX_INFLIGHT_BYTES",
+                d.max_inflight_bytes,
+            )?,
+            result_cache_bytes: lookup(
+                doc,
+                s,
+                "result_cache_bytes",
+                "RC_RESULT_CACHE_BYTES",
+                d.result_cache_bytes,
+            )?,
+            admit: match lookup(
+                doc,
+                s,
+                "admit",
+                "RC_ADMIT_POLICY",
+                "fifo".to_string(),
+            )?
+            .as_str()
+            {
+                "fifo" => crate::service::AdmitPolicy::Fifo,
+                "cost" => crate::service::AdmitPolicy::CostAware,
+                other => {
+                    return Err(Error::Config(format!(
+                        "unknown admit policy '{other}' (expected fifo|cost)"
+                    )))
+                }
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Parse from environment fallbacks only (no INI file).
+    pub fn from_env() -> Result<ServiceConfig> {
+        ServiceConfig::from_ini(&IniDoc::default())
+    }
+
+    /// Reject configurations that could never run anything.
+    pub fn validate(&self) -> Result<()> {
+        if self.ranks == 0 {
+            return Err(Error::Config(
+                "service.ranks must be >= 1 (the shared pilot needs a rank \
+                 pool)"
+                    .into(),
+            ));
+        }
+        if self.max_inflight == 0 {
+            return Err(Error::Config(format!(
+                "service.max_inflight must be >= 1: with 0 in-flight slots \
+                 nothing ever executes (queue_depth {} would just fill up \
+                 and reject)",
+                self.queue_depth
+            )));
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -230,6 +362,49 @@ iterations = 5
         let doc = parse_ini(&bad).unwrap();
         let err = ExperimentConfig::from_ini(&doc).unwrap_err().to_string();
         assert!(err.contains("par_min_rows"), "{err}");
+    }
+
+    #[test]
+    fn service_config_defaults_and_parses() {
+        // No [service] section at all -> defaults.
+        let c = ServiceConfig::from_ini(&parse_ini(SAMPLE).unwrap()).unwrap();
+        assert_eq!(c.ranks, 4);
+        assert_eq!(c.max_inflight, 4);
+        assert_eq!(c.queue_depth, 16);
+        assert_eq!(c.max_inflight_bytes, 0);
+        assert_eq!(c.result_cache_bytes, 64 * 1024 * 1024);
+        assert_eq!(c.admit, crate::service::AdmitPolicy::Fifo);
+
+        let ini = "[service]\nranks = 8\nmax_inflight = 2\nqueue_depth = 0\n\
+                   max_inflight_bytes = 1048576\nresult_cache_bytes = 0\n\
+                   admit = cost\n";
+        let c = ServiceConfig::from_ini(&parse_ini(ini).unwrap()).unwrap();
+        assert_eq!(c.ranks, 8);
+        assert_eq!(c.max_inflight, 2);
+        assert_eq!(c.queue_depth, 0, "0 = reject-when-busy is legal");
+        assert_eq!(c.max_inflight_bytes, 1_048_576);
+        assert_eq!(c.result_cache_bytes, 0);
+        assert_eq!(c.admit, crate::service::AdmitPolicy::CostAware);
+    }
+
+    #[test]
+    fn service_config_rejects_nonsense() {
+        // 0 in-flight with 0 queue: nothing could ever run.
+        let ini = "[service]\nmax_inflight = 0\nqueue_depth = 0\n";
+        let err = ServiceConfig::from_ini(&parse_ini(ini).unwrap()).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        assert!(err.to_string().contains("max_inflight"), "{err}");
+        // 0 in-flight with a queue: queued work would never be promoted.
+        let ini = "[service]\nmax_inflight = 0\nqueue_depth = 8\n";
+        assert!(ServiceConfig::from_ini(&parse_ini(ini).unwrap()).is_err());
+        // Zero-rank pool.
+        let ini = "[service]\nranks = 0\n";
+        assert!(ServiceConfig::from_ini(&parse_ini(ini).unwrap()).is_err());
+        // Unknown policy and unparsable numbers are Config errors too.
+        let ini = "[service]\nadmit = lifo\n";
+        assert!(ServiceConfig::from_ini(&parse_ini(ini).unwrap()).is_err());
+        let ini = "[service]\nqueue_depth = deep\n";
+        assert!(ServiceConfig::from_ini(&parse_ini(ini).unwrap()).is_err());
     }
 
     #[test]

@@ -60,9 +60,58 @@ pub fn parse_ini(text: &str) -> Result<IniDoc> {
     Ok(doc)
 }
 
+/// Typed config lookup with environment fallback: the INI value wins,
+/// else the `env` variable, else `default`. A value that is *present* but
+/// unparsable — from either source — is [`Error::Config`], never silently
+/// defaulted (a typo'd `RC_MAX_INFLIGHT=lots` must not mean 4).
+pub fn lookup<T: std::str::FromStr>(
+    doc: &IniDoc,
+    section: &str,
+    key: &str,
+    env: &str,
+    default: T,
+) -> Result<T> {
+    let (raw, origin) = match doc.get(section, key) {
+        Some(v) => (v.to_string(), format!("[{section}] {key}")),
+        None => match std::env::var(env) {
+            Ok(v) => (v, format!("env {env}")),
+            Err(_) => return Ok(default),
+        },
+    };
+    raw.parse().map_err(|_| {
+        Error::Config(format!("{origin} value '{raw}' is not a valid {key}"))
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn lookup_prefers_ini_then_env_then_default() {
+        let doc = parse_ini("[service]\nmax_inflight = 7\n").unwrap();
+        let v: usize =
+            lookup(&doc, "service", "max_inflight", "RC_TEST_NO_SUCH_VAR", 4)
+                .unwrap();
+        assert_eq!(v, 7);
+        // Absent key + absent env -> default.
+        let v: usize =
+            lookup(&doc, "service", "queue_depth", "RC_TEST_NO_SUCH_VAR", 16)
+                .unwrap();
+        assert_eq!(v, 16);
+        // Present-but-garbage INI value errors instead of defaulting.
+        let bad = parse_ini("[service]\nmax_inflight = lots\n").unwrap();
+        let err = lookup::<usize>(
+            &bad,
+            "service",
+            "max_inflight",
+            "RC_TEST_NO_SUCH_VAR",
+            4,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("max_inflight"), "{err}");
+    }
 
     #[test]
     fn sections_and_comments() {

@@ -19,6 +19,10 @@ pub enum Error {
     /// Task execution failed on a worker.
     TaskFailed(String),
 
+    /// Query service admission control rejected a submission (in-flight
+    /// limit + queue saturated, or the query can never be admitted).
+    Admission(String),
+
     /// PJRT runtime / artifact problems.
     Runtime(String),
 
@@ -43,6 +47,7 @@ impl std::fmt::Display for Error {
             Error::Resource(m) => write!(f, "resource error: {m}"),
             Error::Pilot(m) => write!(f, "pilot error: {m}"),
             Error::TaskFailed(m) => write!(f, "task failed: {m}"),
+            Error::Admission(m) => write!(f, "admission rejected: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Compute(m) => write!(f, "compute error: {m}"),

@@ -82,6 +82,7 @@ pub mod pipeline;
 pub mod plan;
 pub mod raptor;
 pub mod runtime;
+pub mod service;
 pub mod util;
 
 /// Convenience re-exports covering the public API surface used by the
@@ -89,7 +90,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::cluster::{MachineSpec, ResourceManager};
     pub use crate::comm::{CommWorld, Communicator, NetModel};
-    pub use crate::config::ExperimentConfig;
+    pub use crate::config::{ExperimentConfig, ServiceConfig};
     pub use crate::df::{
         ChunkedTable, ColRef, Column, DataType, GenSpec, Schema, Table,
     };
@@ -110,4 +111,8 @@ pub mod prelude {
     pub use crate::plan::{LoweredPlan, Plan};
     pub use crate::raptor::{ReadyPolicy, SchedPolicy};
     pub use crate::runtime::ArtifactStore;
+    pub use crate::service::{
+        AdmitPolicy, CacheOutcome, QueryHandle, QueryId, QueryResult,
+        QueryService, QueryState,
+    };
 }

@@ -116,6 +116,96 @@ pub mod mem {
     }
 }
 
+/// Plan/result-cache accounting for the query service.
+///
+/// The [`crate::service::QueryService`] maintains two caches: a plan cache
+/// (fingerprint → lowered DAG, skips re-lowering) and an LRU result cache
+/// (fingerprint → collected output table). Both report hits, misses, and
+/// evictions here as process-wide monotone counters so tests and the
+/// sustained-load bench can observe cache behaviour without reaching into
+/// service internals. Like [`mem`], counters only grow — measure an
+/// operation by delta:
+///
+/// ```
+/// use radical_cylon::metrics::cache;
+/// let before = cache::snapshot();
+/// // ... submit queries ...
+/// let delta = cache::snapshot().since(before);
+/// assert_eq!(delta.result_evictions, 0);
+/// ```
+pub mod cache {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static PLAN_HITS: AtomicU64 = AtomicU64::new(0);
+    static PLAN_MISSES: AtomicU64 = AtomicU64::new(0);
+    static RESULT_HITS: AtomicU64 = AtomicU64::new(0);
+    static RESULT_MISSES: AtomicU64 = AtomicU64::new(0);
+    static RESULT_EVICTIONS: AtomicU64 = AtomicU64::new(0);
+
+    /// Snapshot of the five monotone cache counters.
+    #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+    pub struct CacheCounters {
+        /// Plan-cache hits (lowering skipped).
+        pub plan_hits: u64,
+        /// Plan-cache misses (plan lowered and inserted).
+        pub plan_misses: u64,
+        /// Result-cache hits (execution skipped entirely).
+        pub result_hits: u64,
+        /// Result-cache misses among *cacheable* queries.
+        pub result_misses: u64,
+        /// Result-cache entries evicted to stay under the byte budget.
+        pub result_evictions: u64,
+    }
+
+    impl CacheCounters {
+        /// Delta relative to an earlier snapshot.
+        pub fn since(self, earlier: CacheCounters) -> CacheCounters {
+            CacheCounters {
+                plan_hits: self.plan_hits.wrapping_sub(earlier.plan_hits),
+                plan_misses: self.plan_misses.wrapping_sub(earlier.plan_misses),
+                result_hits: self.result_hits.wrapping_sub(earlier.result_hits),
+                result_misses: self
+                    .result_misses
+                    .wrapping_sub(earlier.result_misses),
+                result_evictions: self
+                    .result_evictions
+                    .wrapping_sub(earlier.result_evictions),
+            }
+        }
+    }
+
+    pub fn record_plan_hit() {
+        PLAN_HITS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_plan_miss() {
+        PLAN_MISSES.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_result_hit() {
+        RESULT_HITS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_result_miss() {
+        RESULT_MISSES.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_result_evictions(n: u64) {
+        RESULT_EVICTIONS.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Process-wide totals since start.
+    pub fn snapshot() -> CacheCounters {
+        CacheCounters {
+            plan_hits: PLAN_HITS.load(Ordering::Relaxed),
+            plan_misses: PLAN_MISSES.load(Ordering::Relaxed),
+            result_hits: RESULT_HITS.load(Ordering::Relaxed),
+            result_misses: RESULT_MISSES.load(Ordering::Relaxed),
+            result_evictions: RESULT_EVICTIONS.load(Ordering::Relaxed),
+        }
+    }
+}
+
 /// Simple scope timer returning seconds.
 pub struct Timer(Instant);
 
@@ -348,6 +438,22 @@ mod tests {
         assert_eq!(d.viewed, 40);
         // Global totals include this thread's contribution.
         assert!(mem::global().materialized >= 100);
+    }
+
+    #[test]
+    fn cache_counters_accumulate() {
+        let before = cache::snapshot();
+        cache::record_plan_hit();
+        cache::record_plan_miss();
+        cache::record_result_hit();
+        cache::record_result_miss();
+        cache::record_result_evictions(3);
+        let d = cache::snapshot().since(before);
+        assert!(d.plan_hits >= 1);
+        assert!(d.plan_misses >= 1);
+        assert!(d.result_hits >= 1);
+        assert!(d.result_misses >= 1);
+        assert!(d.result_evictions >= 3);
     }
 
     #[test]

@@ -61,13 +61,29 @@ impl Pilot {
 
     /// Tear down the agent and release the allocation.
     pub fn shutdown(&self) {
+        self.finish(PilotState::Done);
+    }
+
+    /// Mark the pilot failed: the same teardown as [`Pilot::shutdown`]
+    /// (agent stopped, allocation released), but the pilot lands in
+    /// [`PilotState::Failed`] so task managers and clients can tell an
+    /// aborted pilot from a cleanly retired one.
+    pub fn fail(&self) {
+        self.finish(PilotState::Failed);
+    }
+
+    /// Teardown exactly once. A pilot that is already `Done` **or**
+    /// `Failed` keeps its terminal state and its agent/allocation are
+    /// not touched again — in particular, dropping a failed pilot must
+    /// not re-run agent shutdown or double-release its cores.
+    fn finish(&self, terminal: PilotState) {
         let mut st = self.state.lock().unwrap();
-        if *st == PilotState::Done {
+        if matches!(*st, PilotState::Done | PilotState::Failed) {
             return;
         }
         self.agent.lock().unwrap().shutdown();
         self.rm.release(&self.allocation);
-        *st = PilotState::Done;
+        *st = terminal;
     }
 }
 
@@ -257,6 +273,29 @@ mod tests {
         let pilot = session.pilot_manager().submit(pd).unwrap();
         assert_eq!(session.free_cores(&machine), 518 - 74);
         pilot.shutdown();
+        assert_eq!(session.free_cores(&machine), 518);
+    }
+
+    #[test]
+    fn failed_pilot_releases_once_and_stays_failed() {
+        let session = Session::new("t");
+        let machine = MachineSpec::rivanna();
+        let pd = PilotDescription::new(machine.clone(), 2);
+        let pilot = session.pilot_manager().submit(pd).unwrap();
+        assert_eq!(session.free_cores(&machine), 518 - 74);
+        pilot.fail();
+        assert_eq!(pilot.state(), PilotState::Failed);
+        assert_eq!(session.free_cores(&machine), 518);
+        // Failed is terminal: a later shutdown (or drop) must neither
+        // flip the state to Done nor release the allocation again.
+        pilot.shutdown();
+        assert_eq!(pilot.state(), PilotState::Failed);
+        assert_eq!(session.free_cores(&machine), 518);
+        let tm = session.task_manager(&pilot);
+        assert!(tm
+            .submit(TaskDescription::sort("late", 1, 10, DataDist::Uniform))
+            .is_err());
+        drop(pilot);
         assert_eq!(session.free_cores(&machine), 518);
     }
 

@@ -135,6 +135,28 @@ impl Pipeline {
         self.nodes.is_empty()
     }
 
+    /// Widest private communicator any node requests — a DAG can only run
+    /// on a pilot with at least this many ranks, so the query service
+    /// rejects wider plans at submission instead of failing mid-DAG.
+    pub fn max_ranks(&self) -> usize {
+        self.nodes.iter().map(|n| n.td.ranks).max().unwrap_or(0)
+    }
+
+    /// Rough bytes the DAG's synthetic sources will materialize: Σ over
+    /// source nodes of `rows_per_rank × ranks × 16` (the generated
+    /// `(key: int64, val: float64)` row is 16 bytes — the same accounting
+    /// [`crate::comm::CommData::approx_bytes`] charges for a two-column
+    /// table window). Derived nodes declare no synthetic workload, so
+    /// this is a floor on the query's working set, which is exactly what
+    /// the service's byte-bounded admission controller needs: an
+    /// estimate available *before* anything runs.
+    pub fn estimated_source_bytes(&self) -> u64 {
+        self.nodes
+            .iter()
+            .map(|n| n.td.rows_per_rank as u64 * n.td.ranks as u64 * 16)
+            .sum()
+    }
+
     /// Validate: deps reference earlier nodes only (DAG by construction —
     /// forward refs and self-cycles are impossible to express, so rejecting
     /// them here rejects every cycle), and pipe sources are dependencies.

@@ -364,6 +364,129 @@ impl Plan {
         self
     }
 
+    // ---- introspection --------------------------------------------------
+
+    /// Whether the plan root gathers its output ([`Plan::collect`]) — the
+    /// precondition for the query service's result cache to hold anything
+    /// worth returning.
+    pub fn collects(&self) -> bool {
+        self.collect
+    }
+
+    /// Whether any source node reads external, mutable state
+    /// ([`Plan::scan_csv`] — the file can change between runs). Plans
+    /// whose sources are all deterministic [`Plan::generate`] nodes
+    /// produce identical tables on every execution, which is what makes
+    /// them result-cacheable.
+    pub fn reads_external_sources(&self) -> bool {
+        let mut seen: Vec<*const Plan> = Vec::new();
+        self.reads_external_inner(&mut seen)
+    }
+
+    fn reads_external_inner(&self, seen: &mut Vec<*const Plan>) -> bool {
+        if matches!(self.op, LogicalOp::ScanCsv { .. }) {
+            return true;
+        }
+        for input in &self.inputs {
+            let ptr = Arc::as_ptr(input);
+            if seen.contains(&ptr) {
+                continue;
+            }
+            seen.push(ptr);
+            if input.reads_external_inner(seen) {
+                return true;
+            }
+        }
+        false
+    }
+
+    // ---- fingerprinting -------------------------------------------------
+
+    /// Canonical fingerprint of the **optimized** plan — the query
+    /// service's cache key.
+    ///
+    /// Validates the tree ([`Plan::output_schema`]), applies the
+    /// [`optimize`] passes (which normalize legacy index column refs to
+    /// names, so `idx(1)` and `col("val")` variants of the same plan
+    /// fingerprint identically), then emits the structural-CSE node keys
+    /// from the lowering memo in canonical post-order — *without*
+    /// constructing the physical DAG. Two plans share a fingerprint iff
+    /// they lower to the same pipeline, so a plan-cache hit can reuse the
+    /// cached [`LoweredPlan`] and skip re-lowering entirely.
+    pub fn fingerprint(&self) -> Result<String> {
+        self.output_schema()?;
+        if self.optimize {
+            optimize::optimize(self)?.fingerprint_raw()
+        } else {
+            self.fingerprint_raw()
+        }
+    }
+
+    fn fingerprint_raw(&self) -> Result<String> {
+        let mut keys: Vec<String> = Vec::new();
+        let mut memo: Vec<(String, usize, usize)> = Vec::new();
+        let mut ptr_memo: Vec<(*const Plan, (usize, usize))> = Vec::new();
+        self.fingerprint_into(&mut keys, &mut memo, &mut ptr_memo)?;
+        Ok(keys.join("\n"))
+    }
+
+    /// Mirror of [`Plan::lower_into`]'s memoized walk that accumulates
+    /// the structural keys instead of building pipeline nodes — same id
+    /// assignment, same CSE, so key `i` describes DAG node `i`.
+    fn fingerprint_into(
+        &self,
+        keys: &mut Vec<String>,
+        memo: &mut Vec<(String, usize, usize)>,
+        ptr_memo: &mut Vec<(*const Plan, (usize, usize))>,
+    ) -> Result<(usize, usize)> {
+        let mut child_ids = Vec::with_capacity(self.inputs.len());
+        let mut child_ranks = 0usize;
+        for input in &self.inputs {
+            let ptr = Arc::as_ptr(input);
+            let (id, ranks) = match ptr_memo.iter().find(|(p, _)| *p == ptr) {
+                Some(&(_, hit)) => hit,
+                None => {
+                    let v = input.fingerprint_into(keys, memo, ptr_memo)?;
+                    ptr_memo.push((ptr, v));
+                    v
+                }
+            };
+            child_ids.push(id);
+            child_ranks = child_ranks.max(ranks);
+        }
+        let ranks = self.resolved_ranks(child_ranks)?;
+        let ranks = self.op.handle().plan_ranks(ranks);
+        let key = format!(
+            "{:?}|ranks={ranks}|name={:?}|collect={}|children={child_ids:?}",
+            self.op, self.name, self.collect
+        );
+        if let Some((_, id, r)) = memo.iter().find(|(k, _, _)| *k == key) {
+            return Ok((*id, *r));
+        }
+        let id = keys.len();
+        keys.push(key.clone());
+        memo.push((key, id, ranks));
+        Ok((id, ranks))
+    }
+
+    /// Rank resolution shared by lowering and fingerprinting: explicit
+    /// override, else inherit the max over inputs; sources must be
+    /// explicit and zero is rejected.
+    fn resolved_ranks(&self, child_ranks: usize) -> Result<usize> {
+        match self.ranks {
+            Some(r) if r > 0 => Ok(r),
+            Some(_) => Err(Error::Config(format!(
+                "plan node '{}' requests zero ranks",
+                self.op.op_name()
+            ))),
+            None if child_ranks > 0 => Ok(child_ranks),
+            None => Err(Error::Config(format!(
+                "plan source '{}' needs an explicit rank count",
+                self.op.op_name()
+            ))),
+        }
+    }
+
     // ---- schema propagation ---------------------------------------------
 
     /// The schema this node's output table will carry, computed by
@@ -558,22 +681,7 @@ impl Plan {
             child_ids.push(id);
             child_ranks = child_ranks.max(ranks);
         }
-        let ranks = match self.ranks {
-            Some(r) if r > 0 => r,
-            Some(_) => {
-                return Err(Error::Config(format!(
-                    "plan node '{}' requests zero ranks",
-                    self.op.op_name()
-                )))
-            }
-            None if child_ranks > 0 => child_ranks,
-            None => {
-                return Err(Error::Config(format!(
-                    "plan source '{}' needs an explicit rank count",
-                    self.op.op_name()
-                )))
-            }
-        };
+        let ranks = self.resolved_ranks(child_ranks)?;
         let op = self.op.handle();
         let ranks = op.plan_ranks(ranks);
         // Structural identity: operator parameters + ranks + name + the
@@ -736,6 +844,62 @@ mod tests {
             .filter_scalar(1, CmpOp::Ge, 0.25);
         let lowered = shim.lower().unwrap();
         assert_eq!(lowered.pipeline.len(), 2);
+    }
+
+    #[test]
+    fn fingerprints_are_canonical_and_discriminating() {
+        // Structurally identical plans built twice share a fingerprint.
+        assert_eq!(etl().fingerprint().unwrap(), etl().fingerprint().unwrap());
+        // idx vs name column refs normalize to the same fingerprint (the
+        // optimizer rewrites legacy indices to names before keying).
+        let by_name = Plan::generate(2, GenSpec::uniform(50, 32, 3))
+            .sort("key")
+            .collect();
+        let by_idx =
+            Plan::generate(2, GenSpec::uniform(50, 32, 3)).sort(0).collect();
+        assert_eq!(
+            by_name.fingerprint().unwrap(),
+            by_idx.fingerprint().unwrap()
+        );
+        // Different seeds, ranks, collect flags, and shapes all diverge.
+        let base = Plan::generate(2, GenSpec::uniform(50, 32, 3)).sort("key");
+        let seeds = Plan::generate(2, GenSpec::uniform(50, 32, 4)).sort("key");
+        assert_ne!(
+            base.clone().collect().fingerprint().unwrap(),
+            seeds.collect().fingerprint().unwrap()
+        );
+        assert_ne!(
+            base.clone().collect().fingerprint().unwrap(),
+            base.clone().fingerprint().unwrap(),
+            "collect flag is part of the key"
+        );
+        assert_ne!(
+            base.clone().collect().fingerprint().unwrap(),
+            base.with_ranks(4).collect().fingerprint().unwrap()
+        );
+        // One key line per distinct DAG node, matching the lowered shape.
+        let fp = etl().fingerprint().unwrap();
+        assert_eq!(fp.lines().count(), etl().lower().unwrap().pipeline.len());
+        // Invalid plans fail fingerprinting the same way they fail lower().
+        assert!(Plan::generate(2, GenSpec::uniform(10, 8, 0))
+            .sort("val")
+            .fingerprint()
+            .is_err());
+    }
+
+    #[test]
+    fn external_source_detection() {
+        let gen = Plan::generate(2, GenSpec::uniform(10, 8, 0));
+        assert!(!gen.clone().sort("key").collect().reads_external_sources());
+        let scan = Plan::scan_csv(2, "/tmp/x.csv", GenSpec::schema());
+        assert!(scan.clone().reads_external_sources());
+        assert!(gen.join(scan, "key", "key").reads_external_sources());
+        // Deep shared diamonds stay linear (pointer-dedup, not 2^40 walks).
+        let mut p = Plan::generate(1, GenSpec::uniform(4, 4, 0));
+        for _ in 0..40 {
+            p = p.clone().union(p);
+        }
+        assert!(!p.reads_external_sources());
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! and memory for hot-path parallelism (see EXPERIMENTS.md §Perf).
 
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
@@ -33,6 +34,7 @@ struct Shared {
     tx: Mutex<mpsc::Sender<Request>>,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     pool: usize,
+    closed: AtomicBool,
 }
 
 /// Cloneable handle to the kernel server pool.
@@ -94,7 +96,12 @@ impl KernelService {
                 .map_err(|_| Error::Runtime("kernel server died at startup".into()))??;
         }
         Ok(KernelService {
-            shared: Arc::new(Shared { tx: Mutex::new(tx), workers: Mutex::new(workers), pool }),
+            shared: Arc::new(Shared {
+                tx: Mutex::new(tx),
+                workers: Mutex::new(workers),
+                pool,
+                closed: AtomicBool::new(false),
+            }),
         })
     }
 
@@ -110,19 +117,21 @@ impl KernelService {
         self.shared.pool
     }
 
-    fn send(&self, req: Request) {
-        self.shared
-            .tx
-            .lock()
-            .unwrap()
-            .send(req)
-            .expect("kernel service send");
+    fn send(&self, req: Request) -> Result<()> {
+        if self.shared.closed.load(Ordering::Acquire) {
+            return Err(Error::Runtime(
+                "kernel service is shut down".into(),
+            ));
+        }
+        self.shared.tx.lock().unwrap().send(req).map_err(|_| {
+            Error::Runtime("kernel service workers are gone".into())
+        })
     }
 
     /// Partition ids via the PJRT `shuffle_plan` artifact.
     pub fn shuffle_plan(&self, keys: Vec<i64>, nparts: u32) -> Result<Vec<i32>> {
         let (reply, rx) = mpsc::sync_channel(1);
-        self.send(Request::ShufflePlan { keys, nparts, reply });
+        self.send(Request::ShufflePlan { keys, nparts, reply })?;
         rx.recv()
             .map_err(|_| Error::Runtime("kernel server dropped request".into()))?
     }
@@ -134,15 +143,24 @@ impl KernelService {
         payload: Vec<i32>,
     ) -> Result<(Vec<i64>, Vec<i32>)> {
         let (reply, rx) = mpsc::sync_channel(1);
-        self.send(Request::BlockSort { keys, payload, reply });
+        self.send(Request::BlockSort { keys, payload, reply })?;
         rx.recv()
             .map_err(|_| Error::Runtime("kernel server dropped request".into()))?
     }
 
-    /// Stop the pool (joins all server threads). Subsequent calls error.
+    /// Stop the pool (joins all server threads). Idempotent: the first
+    /// call drains the pool, later calls are no-ops, and any
+    /// [`KernelService::shuffle_plan`] / [`KernelService::block_sort`]
+    /// after shutdown returns [`Error::Runtime`] instead of panicking.
     pub fn shutdown(&self) {
-        for _ in 0..self.shared.pool {
-            self.send(Request::Shutdown);
+        if self.shared.closed.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        {
+            let tx = self.shared.tx.lock().unwrap();
+            for _ in 0..self.shared.pool {
+                let _ = tx.send(Request::Shutdown);
+            }
         }
         let mut workers = self.shared.workers.lock().unwrap();
         for h in workers.drain(..) {
@@ -196,5 +214,23 @@ mod tests {
     #[test]
     fn startup_failure_is_reported() {
         assert!(KernelService::start(Path::new("/no-such-dir"), 1).is_err());
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_post_shutdown_calls_error() {
+        let Some(svc) = service() else { return };
+        svc.shutdown();
+        svc.shutdown(); // second call must be a no-op, not a panic
+        let err = svc.shuffle_plan(vec![1, 2, 3], 2).unwrap_err();
+        assert!(
+            err.to_string().contains("shut down"),
+            "expected typed shutdown error, got: {err}"
+        );
+        let err = svc.block_sort(vec![3, 1], vec![0, 1]).unwrap_err();
+        assert!(err.to_string().contains("shut down"), "{err}");
+        // Clones share the closed flag.
+        let clone = svc.clone();
+        assert!(clone.shuffle_plan(vec![1], 1).is_err());
+        clone.shutdown();
     }
 }

@@ -1,0 +1,834 @@
+//! Always-on multi-tenant query service — the front door for the
+//! "millions of users" trajectory (ROADMAP) and the paper's persistent-
+//! runtime thesis: many analysis tasks share **one** pilot allocation
+//! instead of re-acquiring resources per batch (Deep RC extends exactly
+//! this into a long-lived pipeline-as-a-service shape).
+//!
+//! A [`QueryService`] owns a long-lived [`Session`] + [`Pilot`] (the hot
+//! rank pool) and accepts [`Plan`] submissions from many client threads
+//! concurrently:
+//!
+//! ```text
+//!   submit(Plan) ──► fingerprint ──► plan cache ──► admission ──► pooled DAG
+//!        │               │         (hit: reuse      (in-flight +     (run_pooled
+//!        │               │          LoweredPlan)     byte bounds,     on the shared
+//!        │               ▼                           FIFO/cost        rank pool)
+//!        │          result cache ──────────────────► queue)
+//!        │          (hit: return cached table, no execution)
+//!        ▼
+//!   QueryHandle — status() / poll() / join() / cancel()
+//! ```
+//!
+//! * **Admission** bounds concurrently executing queries
+//!   ([`crate::config::ServiceConfig::max_inflight`]) and their summed
+//!   estimated source bytes
+//!   ([`crate::pipeline::Pipeline::estimated_source_bytes`]); excess work
+//!   queues up to `queue_depth` deep and is promoted under an
+//!   [`AdmitPolicy`] (FIFO vs cost-aware — the admission-side mirror of
+//!   the pipeline's [`ReadyPolicy`] split). A saturated queue rejects
+//!   with the typed [`Error::Admission`] instead of blocking the caller.
+//! * **Plan cache**: [`Plan::fingerprint`] (canonical structural keys of
+//!   the optimized plan) → [`LoweredPlan`]; a hit skips re-lowering.
+//! * **Result cache**: LRU over collected output tables, byte-bounded by
+//!   `result_cache_bytes`. Only plans whose sources are deterministic
+//!   generators qualify ([`Plan::reads_external_sources`] — a CSV file
+//!   can change between runs); a hit completes the query without
+//!   touching the rank pool. Hit/miss/eviction counters live in
+//!   [`crate::metrics::cache`].
+//! * **Execution**: each admitted query drives its lowered DAG through
+//!   [`crate::pipeline::Pipeline::run_pooled`] on the global
+//!   [`ThreadPool`](crate::util::pool::ThreadPool), with every node
+//!   submitted to the shared pilot's RAPTOR master — the master
+//!   multiplexes rank groups across all in-flight queries and queues
+//!   work orders when ranks are busy, so tenants share the pool without
+//!   interfering: a panic or per-node error fails only the owning query
+//!   (contained by `run_pooled`'s catch-unwind), and results are
+//!   bit-identical to a solo [`crate::exec::Engine::run_plan`].
+//!
+//! ```no_run
+//! use radical_cylon::config::ServiceConfig;
+//! use radical_cylon::service::QueryService;
+//! use radical_cylon::plan::Plan;
+//! use radical_cylon::df::GenSpec;
+//!
+//! let svc = QueryService::start(ServiceConfig::default()).unwrap();
+//! let plan = Plan::generate(2, GenSpec::uniform(10_000, 5_000, 7))
+//!     .sort("key")
+//!     .collect();
+//! let handle = svc.submit(plan).unwrap();          // non-blocking
+//! let result = handle.join().unwrap();             // blocking
+//! println!("{} rows", result.output_rows);
+//! svc.shutdown();
+//! ```
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::time::Instant;
+
+use crate::cluster::MachineSpec;
+use crate::config::ServiceConfig;
+use crate::df::ChunkedTable;
+use crate::error::{Error, Result};
+use crate::metrics::cache as cache_metrics;
+use crate::pilot::{Pilot, PilotDescription, Session};
+use crate::plan::{LoweredPlan, Plan};
+use crate::raptor::ReadyPolicy;
+use crate::util::pool;
+
+/// Queue ordering when in-flight capacity frees up — the admission-side
+/// mirror of the pipeline's [`ReadyPolicy`] split.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitPolicy {
+    /// Strict arrival order.
+    Fifo,
+    /// Smallest estimated source bytes first: cheap interactive queries
+    /// jump ahead of bulk work. Arrival order breaks ties, so equal-cost
+    /// queries still run FIFO.
+    CostAware,
+}
+
+/// Monotone per-service query identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct QueryId(pub u64);
+
+impl std::fmt::Display for QueryId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "q{}", self.0)
+    }
+}
+
+/// Query lifecycle — deliberately smaller than the task-level
+/// [`crate::pilot::TaskState`]: a query is Queued (admission or the
+/// admission queue), Running (its DAG is executing), or terminal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueryState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Canceled,
+}
+
+impl QueryState {
+    pub fn is_terminal(self) -> bool {
+        matches!(
+            self,
+            QueryState::Done | QueryState::Failed | QueryState::Canceled
+        )
+    }
+}
+
+/// How the service satisfied a query.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// Lowered fresh, executed on the rank pool.
+    Cold,
+    /// Reused a cached [`LoweredPlan`] (lowering skipped), executed.
+    PlanHit,
+    /// Served straight from the result cache — no execution at all.
+    ResultHit,
+}
+
+/// Final record of a successful query.
+#[derive(Clone, Debug)]
+pub struct QueryResult {
+    pub id: QueryId,
+    /// The sink's gathered output table (plans built with
+    /// [`Plan::collect`]; `None` otherwise).
+    pub output: Option<Arc<ChunkedTable>>,
+    /// Rows in the sink's output, summed over ranks.
+    pub output_rows: u64,
+    pub cache: CacheOutcome,
+    /// Seconds from admission to completion (0 for result-cache hits).
+    pub exec_s: f64,
+    /// Seconds spent queued behind other tenants before admission.
+    pub queue_wait_s: f64,
+}
+
+/// Internal terminal outcome. [`Error`] is not `Clone`, so failures are
+/// stored as their rendered message and re-typed on read.
+#[derive(Clone, Debug)]
+enum Outcome {
+    Ok(QueryResult),
+    Failed(String),
+    Canceled,
+}
+
+struct QueryInner {
+    id: QueryId,
+    state: Mutex<(QueryState, Option<Outcome>)>,
+    cv: Condvar,
+    /// Best-effort cancellation flag, checked before every DAG node.
+    cancel: AtomicBool,
+    /// Back-pointer for queue-slot release on cancel (weak: a handle
+    /// must not keep the whole service alive).
+    svc: Weak<Inner>,
+}
+
+impl QueryInner {
+    /// Queued → Running; `false` if already terminal (canceled).
+    fn begin_running(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.0 != QueryState::Queued {
+            return false;
+        }
+        st.0 = QueryState::Running;
+        self.cv.notify_all();
+        true
+    }
+
+    /// Record the terminal outcome (first writer wins).
+    fn complete(&self, outcome: Outcome) {
+        let mut st = self.state.lock().unwrap();
+        if st.0.is_terminal() {
+            return;
+        }
+        st.0 = match &outcome {
+            Outcome::Ok(_) => QueryState::Done,
+            Outcome::Failed(_) => QueryState::Failed,
+            Outcome::Canceled => QueryState::Canceled,
+        };
+        st.1 = Some(outcome);
+        self.cv.notify_all();
+    }
+
+    /// Queued → Canceled (no effect once running or terminal).
+    fn cancel_if_queued(&self) {
+        let mut st = self.state.lock().unwrap();
+        if st.0 == QueryState::Queued {
+            st.0 = QueryState::Canceled;
+            st.1 = Some(Outcome::Canceled);
+            self.cv.notify_all();
+        }
+    }
+
+    fn to_result(&self, o: &Outcome) -> Result<QueryResult> {
+        match o {
+            Outcome::Ok(r) => Ok(r.clone()),
+            Outcome::Failed(m) => Err(Error::TaskFailed(m.clone())),
+            Outcome::Canceled => Err(Error::TaskFailed(format!(
+                "query {} canceled before completion",
+                self.id
+            ))),
+        }
+    }
+}
+
+/// Shared handle to a submitted query. All accessors are safe from any
+/// thread; `join` blocks, everything else is non-blocking.
+#[derive(Clone)]
+pub struct QueryHandle {
+    inner: Arc<QueryInner>,
+}
+
+impl std::fmt::Debug for QueryHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("QueryHandle")
+            .field("id", &self.inner.id)
+            .field("state", &self.status())
+            .finish()
+    }
+}
+
+impl QueryHandle {
+    pub fn id(&self) -> QueryId {
+        self.inner.id
+    }
+
+    /// Current lifecycle state (non-blocking).
+    pub fn status(&self) -> QueryState {
+        self.inner.state.lock().unwrap().0
+    }
+
+    /// The outcome if the query is terminal, `None` while it is still
+    /// queued or running (non-blocking).
+    pub fn poll(&self) -> Option<Result<QueryResult>> {
+        let st = self.inner.state.lock().unwrap();
+        st.1.as_ref().map(|o| self.inner.to_result(o))
+    }
+
+    /// Block until terminal and return the outcome. Failed queries
+    /// surface as [`Error::TaskFailed`]; canceled queries as a
+    /// `TaskFailed` whose message names the cancellation (check
+    /// [`QueryHandle::status`] to distinguish).
+    pub fn join(&self) -> Result<QueryResult> {
+        let mut st = self.inner.state.lock().unwrap();
+        while st.1.is_none() {
+            st = self.inner.cv.wait(st).unwrap();
+        }
+        self.inner.to_result(st.1.as_ref().expect("terminal outcome"))
+    }
+
+    /// Best-effort cancellation. A still-queued query is removed from
+    /// the admission queue immediately (releasing its slot) and turns
+    /// `Canceled`; a running query stops at its next DAG-node boundary.
+    /// Completed queries are unaffected.
+    pub fn cancel(&self) {
+        self.inner.cancel.store(true, Ordering::Release);
+        if let Some(svc) = self.inner.svc.upgrade() {
+            let mut sched = svc.sched.lock().unwrap();
+            if let Some(pos) = sched
+                .queue
+                .iter()
+                .position(|q| q.query.id == self.inner.id)
+            {
+                sched.queue.remove(pos);
+            }
+        }
+        self.inner.cancel_if_queued();
+    }
+}
+
+/// One admitted-or-queued query, carrying everything execution needs.
+struct Queued {
+    query: Arc<QueryInner>,
+    lowered: Arc<LoweredPlan>,
+    est_bytes: u64,
+    /// `Some(fingerprint)` when the completed output should populate the
+    /// result cache (collect plan over deterministic sources).
+    result_key: Option<Arc<str>>,
+    cache: CacheOutcome,
+    queued_at: Instant,
+    seq: u64,
+}
+
+/// Admission state: the in-flight set and the bounded wait queue.
+struct Sched {
+    inflight: usize,
+    inflight_bytes: u64,
+    queue: VecDeque<Queued>,
+    seq: u64,
+}
+
+struct PlanCache {
+    cap: usize,
+    /// Front = least recently used.
+    entries: VecDeque<(Arc<str>, Arc<LoweredPlan>)>,
+}
+
+impl PlanCache {
+    fn get(&mut self, key: &str) -> Option<Arc<LoweredPlan>> {
+        let pos = self.entries.iter().position(|(k, _)| k.as_ref() == key)?;
+        let e = self.entries.remove(pos).expect("position just found");
+        let hit = e.1.clone();
+        self.entries.push_back(e);
+        Some(hit)
+    }
+
+    fn insert(&mut self, key: Arc<str>, lowered: Arc<LoweredPlan>) {
+        if self.entries.iter().any(|(k, _)| k.as_ref() == key.as_ref()) {
+            return;
+        }
+        if self.entries.len() >= self.cap {
+            self.entries.pop_front();
+        }
+        self.entries.push_back((key, lowered));
+    }
+}
+
+struct ResultEntry {
+    key: Arc<str>,
+    output: Option<Arc<ChunkedTable>>,
+    rows: u64,
+    bytes: u64,
+}
+
+struct ResultCache {
+    budget: u64,
+    bytes: u64,
+    /// Front = least recently used.
+    entries: VecDeque<ResultEntry>,
+}
+
+impl ResultCache {
+    fn get(&mut self, key: &str) -> Option<(Option<Arc<ChunkedTable>>, u64)> {
+        let pos = self.entries.iter().position(|e| e.key.as_ref() == key)?;
+        let e = self.entries.remove(pos).expect("position just found");
+        let hit = (e.output.clone(), e.rows);
+        self.entries.push_back(e);
+        Some(hit)
+    }
+
+    fn insert(
+        &mut self,
+        key: Arc<str>,
+        output: Option<Arc<ChunkedTable>>,
+        rows: u64,
+    ) {
+        if self.budget == 0 {
+            return;
+        }
+        if self.entries.iter().any(|e| e.key.as_ref() == key.as_ref()) {
+            return;
+        }
+        let bytes = output.as_ref().map(|t| t.byte_size() as u64).unwrap_or(0);
+        if bytes > self.budget {
+            // One oversized result must not flush the whole cache.
+            return;
+        }
+        let mut evicted = 0u64;
+        while self.bytes + bytes > self.budget {
+            let Some(e) = self.entries.pop_front() else { break };
+            self.bytes -= e.bytes;
+            evicted += 1;
+        }
+        if evicted > 0 {
+            cache_metrics::record_result_evictions(evicted);
+        }
+        self.bytes += bytes;
+        self.entries.push_back(ResultEntry { key, output, rows, bytes });
+    }
+}
+
+/// Plan-cache capacity (entries). Lowered DAGs are small — a few hundred
+/// bytes per node — so a fixed generous cap beats another config knob.
+const PLAN_CACHE_ENTRIES: usize = 256;
+
+struct Inner {
+    cfg: ServiceConfig,
+    session: Session,
+    pilot: Arc<Pilot>,
+    ready_policy: ReadyPolicy,
+    sched: Mutex<Sched>,
+    /// Signaled whenever `inflight` drops to zero (shutdown drain).
+    idle_cv: Condvar,
+    plan_cache: Mutex<PlanCache>,
+    result_cache: Mutex<ResultCache>,
+    ids: AtomicU64,
+    closed: AtomicBool,
+}
+
+impl Inner {
+    /// Plan-cache lookup, lowering on miss (outside the cache lock).
+    fn lowered_for(
+        &self,
+        plan: &Plan,
+        fp: &Arc<str>,
+    ) -> Result<(Arc<LoweredPlan>, CacheOutcome)> {
+        if let Some(hit) = self.plan_cache.lock().unwrap().get(fp) {
+            cache_metrics::record_plan_hit();
+            return Ok((hit, CacheOutcome::PlanHit));
+        }
+        let lowered = Arc::new(plan.lower()?);
+        cache_metrics::record_plan_miss();
+        self.plan_cache
+            .lock()
+            .unwrap()
+            .insert(fp.clone(), lowered.clone());
+        Ok((lowered, CacheOutcome::Cold))
+    }
+
+    /// Does a query of `est` bytes fit the in-flight byte bound right
+    /// now? An empty in-flight set always fits, so a query larger than
+    /// the whole bound can still run (alone) instead of starving.
+    fn bytes_fit(&self, sched: &Sched, est: u64) -> bool {
+        self.cfg.max_inflight_bytes == 0
+            || sched.inflight == 0
+            || sched.inflight_bytes + est <= self.cfg.max_inflight_bytes
+    }
+
+    /// Run one admitted query's DAG on the shared pool + pilot.
+    fn execute(
+        &self,
+        q: &Queued,
+    ) -> Result<(Option<Arc<ChunkedTable>>, u64)> {
+        let tm = self.session.task_manager(&self.pilot);
+        let cancel = &q.query.cancel;
+        let id = q.query.id;
+        let results = q.lowered.pipeline.run_pooled(
+            pool::global(),
+            self.ready_policy,
+            |td| {
+                if cancel.load(Ordering::Acquire) {
+                    return Err(Error::TaskFailed(format!(
+                        "query {id} canceled"
+                    )));
+                }
+                tm.submit(td)?.wait()
+            },
+        )?;
+        let sink = &results[q.lowered.sink];
+        Ok((sink.output.clone(), sink.output_rows))
+    }
+}
+
+/// Thread-per-admitted-query: the thread drives the DAG (helping the
+/// global pool while its nodes run) and releases its admission slot on
+/// the way out.
+fn spawn_query(inner: Arc<Inner>, q: Queued) {
+    std::thread::Builder::new()
+        .name(format!("svc-{}", q.query.id))
+        .spawn(move || run_query(inner, q))
+        .expect("spawn query thread");
+}
+
+fn run_query(inner: Arc<Inner>, q: Queued) {
+    let queue_wait_s = q.queued_at.elapsed().as_secs_f64();
+    let outcome = if !q.query.begin_running() {
+        // Canceled between admission and startup.
+        Outcome::Canceled
+    } else {
+        let t0 = Instant::now();
+        match inner.execute(&q) {
+            Ok((output, output_rows)) => Outcome::Ok(QueryResult {
+                id: q.query.id,
+                output,
+                output_rows,
+                cache: q.cache,
+                exec_s: t0.elapsed().as_secs_f64(),
+                queue_wait_s,
+            }),
+            Err(_) if q.query.cancel.load(Ordering::Acquire) => {
+                Outcome::Canceled
+            }
+            Err(e) => Outcome::Failed(e.to_string()),
+        }
+    };
+    if let (Outcome::Ok(r), Some(key)) = (&outcome, &q.result_key) {
+        inner.result_cache.lock().unwrap().insert(
+            key.clone(),
+            r.output.clone(),
+            r.output_rows,
+        );
+    }
+    q.query.complete(outcome);
+    retire(&inner, q.est_bytes);
+}
+
+/// Release an admission slot and promote queued work per policy.
+fn retire(inner: &Arc<Inner>, est_bytes: u64) {
+    let mut sched = inner.sched.lock().unwrap();
+    sched.inflight -= 1;
+    sched.inflight_bytes -= est_bytes;
+    promote_locked(inner, &mut sched);
+    if sched.inflight == 0 {
+        inner.idle_cv.notify_all();
+    }
+}
+
+/// Fill freed in-flight slots from the queue. Canceled entries are
+/// dropped; [`AdmitPolicy::CostAware`] picks the smallest estimated
+/// bytes (arrival order on ties), FIFO the front.
+fn promote_locked(inner: &Arc<Inner>, sched: &mut Sched) {
+    while sched.inflight < inner.cfg.max_inflight {
+        sched
+            .queue
+            .retain(|q| !q.query.cancel.load(Ordering::Acquire));
+        let idx = match inner.cfg.admit {
+            AdmitPolicy::Fifo => sched
+                .queue
+                .iter()
+                .position(|q| inner.bytes_fit(sched, q.est_bytes)),
+            AdmitPolicy::CostAware => sched
+                .queue
+                .iter()
+                .enumerate()
+                .filter(|(_, q)| inner.bytes_fit(sched, q.est_bytes))
+                .min_by_key(|(_, q)| (q.est_bytes, q.seq))
+                .map(|(i, _)| i),
+        };
+        let Some(idx) = idx else { break };
+        let q = sched.queue.remove(idx).expect("index just found");
+        sched.inflight += 1;
+        sched.inflight_bytes += q.est_bytes;
+        spawn_query(inner.clone(), q);
+    }
+}
+
+/// The long-lived multi-tenant front door: one shared pilot + thread
+/// pool, many concurrent [`Plan`]s. See the module docs for the full
+/// submission → admission → cache → pooled-DAG walk-through.
+pub struct QueryService {
+    inner: Arc<Inner>,
+}
+
+impl QueryService {
+    /// Boot the service: validate `cfg`, allocate the long-lived pilot
+    /// (`cfg.ranks` cores on a local machine spec), and open admission.
+    pub fn start(cfg: ServiceConfig) -> Result<QueryService> {
+        cfg.validate()?;
+        let session = Session::new("query-service");
+        let pd = PilotDescription::new(MachineSpec::local(cfg.ranks), 1);
+        let pilot = session.pilot_manager().submit(pd)?;
+        let result_budget = cfg.result_cache_bytes;
+        Ok(QueryService {
+            inner: Arc::new(Inner {
+                cfg,
+                session,
+                pilot,
+                ready_policy: ReadyPolicy::Fifo,
+                sched: Mutex::new(Sched {
+                    inflight: 0,
+                    inflight_bytes: 0,
+                    queue: VecDeque::new(),
+                    seq: 0,
+                }),
+                idle_cv: Condvar::new(),
+                plan_cache: Mutex::new(PlanCache {
+                    cap: PLAN_CACHE_ENTRIES,
+                    entries: VecDeque::new(),
+                }),
+                result_cache: Mutex::new(ResultCache {
+                    budget: result_budget,
+                    bytes: 0,
+                    entries: VecDeque::new(),
+                }),
+                ids: AtomicU64::new(1),
+                closed: AtomicBool::new(false),
+            }),
+        })
+    }
+
+    /// [`QueryService::start`] with [`ServiceConfig::default`].
+    pub fn start_default() -> Result<QueryService> {
+        QueryService::start(ServiceConfig::default())
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.inner.cfg
+    }
+
+    /// Queries executing right now (diagnostic).
+    pub fn inflight(&self) -> usize {
+        self.inner.sched.lock().unwrap().inflight
+    }
+
+    /// Queries waiting for admission (diagnostic).
+    pub fn queue_len(&self) -> usize {
+        self.inner.sched.lock().unwrap().queue.len()
+    }
+
+    /// Submit a plan for execution. Non-blocking: returns a
+    /// [`QueryHandle`] once the query is admitted *or queued*, and
+    /// [`Error::Admission`] when the in-flight set and queue are both
+    /// full (typed back-pressure — callers retry or shed load;
+    /// submission never blocks on other tenants). Invalid plans fail
+    /// here with their usual [`Error::Config`] diagnostics, and plans
+    /// wider than the service's rank pool are rejected up front.
+    pub fn submit(&self, plan: Plan) -> Result<QueryHandle> {
+        let inner = &self.inner;
+        if inner.closed.load(Ordering::Acquire) {
+            return Err(Error::Admission("query service is shut down".into()));
+        }
+        let fp: Arc<str> = Arc::from(plan.fingerprint()?);
+        let (lowered, cache) = inner.lowered_for(&plan, &fp)?;
+        let widest = lowered.pipeline.max_ranks();
+        if widest > inner.pilot.cores() {
+            return Err(Error::Admission(format!(
+                "plan needs {widest} ranks but the service pool has {}",
+                inner.pilot.cores()
+            )));
+        }
+        let est_bytes = lowered.pipeline.estimated_source_bytes();
+        let cacheable = plan.collects()
+            && !plan.reads_external_sources()
+            && inner.cfg.result_cache_bytes > 0;
+        let id = QueryId(inner.ids.fetch_add(1, Ordering::Relaxed));
+        let query = Arc::new(QueryInner {
+            id,
+            state: Mutex::new((QueryState::Queued, None)),
+            cv: Condvar::new(),
+            cancel: AtomicBool::new(false),
+            svc: Arc::downgrade(inner),
+        });
+        if cacheable {
+            if let Some((output, rows)) =
+                inner.result_cache.lock().unwrap().get(&fp)
+            {
+                cache_metrics::record_result_hit();
+                query.complete(Outcome::Ok(QueryResult {
+                    id,
+                    output,
+                    output_rows: rows,
+                    cache: CacheOutcome::ResultHit,
+                    exec_s: 0.0,
+                    queue_wait_s: 0.0,
+                }));
+                return Ok(QueryHandle { inner: query });
+            }
+            cache_metrics::record_result_miss();
+        }
+
+        let mut sched = inner.sched.lock().unwrap();
+        let q = Queued {
+            query: query.clone(),
+            lowered,
+            est_bytes,
+            result_key: if cacheable { Some(fp) } else { None },
+            cache,
+            queued_at: Instant::now(),
+            seq: sched.seq,
+        };
+        sched.seq += 1;
+        if sched.inflight < inner.cfg.max_inflight
+            && inner.bytes_fit(&sched, est_bytes)
+        {
+            sched.inflight += 1;
+            sched.inflight_bytes += est_bytes;
+            drop(sched);
+            spawn_query(inner.clone(), q);
+        } else if sched.queue.len() < inner.cfg.queue_depth {
+            sched.queue.push_back(q);
+        } else {
+            return Err(Error::Admission(format!(
+                "{} queries in flight and the queue is full ({} of {})",
+                sched.inflight,
+                sched.queue.len(),
+                inner.cfg.queue_depth
+            )));
+        }
+        Ok(QueryHandle { inner: query })
+    }
+
+    /// Submit and block for the outcome (convenience).
+    pub fn run(&self, plan: Plan) -> Result<QueryResult> {
+        self.submit(plan)?.join()
+    }
+
+    /// Block until no query is in flight and the queue is empty.
+    pub fn drain(&self) {
+        let mut sched = self.inner.sched.lock().unwrap();
+        while sched.inflight > 0 || !sched.queue.is_empty() {
+            sched = self.inner.idle_cv.wait(sched).unwrap();
+        }
+    }
+
+    /// Close admission, cancel queued work, drain in-flight queries,
+    /// and release the pilot. Idempotent; concurrent and subsequent
+    /// [`QueryService::submit`] calls get [`Error::Admission`].
+    pub fn shutdown(&self) {
+        let inner = &self.inner;
+        if inner.closed.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        let mut sched = inner.sched.lock().unwrap();
+        for q in sched.queue.drain(..) {
+            q.query.cancel_if_queued();
+        }
+        while sched.inflight > 0 {
+            sched = inner.idle_cv.wait(sched).unwrap();
+        }
+        drop(sched);
+        inner.pilot.shutdown();
+    }
+}
+
+impl Drop for QueryService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::df::GenSpec;
+    use crate::exec::{Engine, HeterogeneousEngine};
+    use crate::ops::dist::KernelBackend;
+
+    fn small_cfg() -> ServiceConfig {
+        ServiceConfig {
+            ranks: 2,
+            max_inflight: 2,
+            queue_depth: 4,
+            ..ServiceConfig::default()
+        }
+    }
+
+    fn sorted_plan(rows: usize, seed: u64) -> Plan {
+        Plan::generate(2, GenSpec::uniform(rows, rows as i64, seed))
+            .sort("key")
+            .collect()
+    }
+
+    #[test]
+    fn run_matches_solo_engine() {
+        let svc = QueryService::start(small_cfg()).unwrap();
+        let r = svc.run(sorted_plan(500, 7)).unwrap();
+        assert_eq!(r.cache, CacheOutcome::Cold);
+        let engine = HeterogeneousEngine::new(
+            MachineSpec::local(2),
+            KernelBackend::Native,
+            2,
+        );
+        let solo = engine.run_plan(&sorted_plan(500, 7)).unwrap();
+        assert_eq!(
+            r.output.unwrap().multiset_fingerprint(),
+            solo.output.unwrap().multiset_fingerprint()
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn handle_poll_and_status_are_nonblocking() {
+        let svc = QueryService::start(small_cfg()).unwrap();
+        let h = svc.submit(sorted_plan(300, 3)).unwrap();
+        // Whatever the interleaving, poll never blocks and join agrees.
+        let _ = h.status();
+        let _ = h.poll();
+        let r = h.join().unwrap();
+        assert!(r.output_rows > 0);
+        assert!(h.poll().unwrap().is_ok());
+        assert_eq!(h.status(), QueryState::Done);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn second_submission_hits_the_caches() {
+        let svc = QueryService::start(small_cfg()).unwrap();
+        let before = cache_metrics::snapshot();
+        let cold = svc.run(sorted_plan(400, 9)).unwrap();
+        let hot = svc.run(sorted_plan(400, 9)).unwrap();
+        assert_eq!(cold.cache, CacheOutcome::Cold);
+        assert_eq!(hot.cache, CacheOutcome::ResultHit);
+        assert_eq!(
+            cold.output.unwrap().multiset_fingerprint(),
+            hot.output.unwrap().multiset_fingerprint()
+        );
+        let d = cache_metrics::snapshot().since(before);
+        assert!(d.result_hits >= 1, "{d:?}");
+        assert!(d.result_misses >= 1, "{d:?}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn too_wide_plans_rejected_up_front() {
+        let svc = QueryService::start(small_cfg()).unwrap();
+        let wide = Plan::generate(8, GenSpec::uniform(10, 8, 0)).collect();
+        let err = svc.submit(wide).unwrap_err();
+        assert!(matches!(err, Error::Admission(_)), "{err}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_closes_admission() {
+        let svc = QueryService::start(small_cfg()).unwrap();
+        svc.shutdown();
+        svc.shutdown();
+        let err = svc.submit(sorted_plan(10, 0)).unwrap_err();
+        assert!(matches!(err, Error::Admission(_)), "{err}");
+    }
+
+    #[test]
+    fn scan_csv_plans_bypass_the_result_cache() {
+        let svc = QueryService::start(small_cfg()).unwrap();
+        let dir = std::env::temp_dir().join("rc-service-cache-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bypass.csv");
+        std::fs::write(&path, "key,val\n1,0.5\n2,0.25\n").unwrap();
+        let plan = || {
+            Plan::scan_csv(1, path.clone(), GenSpec::schema())
+                .sort("key")
+                .collect()
+        };
+        let a = svc.run(plan()).unwrap();
+        let b = svc.run(plan()).unwrap();
+        // Second run re-executes (plan cache may hit; result cache must
+        // not — the file is external mutable state).
+        assert_ne!(b.cache, CacheOutcome::ResultHit);
+        assert_eq!(a.output_rows, b.output_rows);
+        svc.shutdown();
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -2,7 +2,7 @@
 //! the CLI path (the user-facing config-system contract).
 
 use radical_cylon::cli;
-use radical_cylon::config::{parse_ini, ExperimentConfig};
+use radical_cylon::config::{parse_ini, ExperimentConfig, ServiceConfig};
 
 fn repo_path(rel: &str) -> std::path::PathBuf {
     // tests run from the crate dir (rust/); configs live at the repo root.
@@ -43,6 +43,31 @@ fn smoke_config_runs_through_cli() {
     .unwrap();
     assert!(out.contains("exec time"), "{out}");
     assert!(out.contains("local"), "{out}");
+}
+
+#[test]
+fn smoke_config_service_section_parses_and_serves() {
+    let cfg_path = repo_path("configs/local_smoke.ini");
+    let text = std::fs::read_to_string(&cfg_path).unwrap();
+    let cfg = ServiceConfig::from_ini(&parse_ini(&text).unwrap()).unwrap();
+    assert_eq!(cfg.ranks, 2);
+    assert_eq!(cfg.max_inflight, 2);
+    assert_eq!(cfg.queue_depth, 8);
+    assert_eq!(cfg.result_cache_bytes, 16 * 1024 * 1024);
+    // And the serve subcommand boots a service from the same file.
+    let out = cli::dispatch(vec![
+        "serve".into(),
+        "--config".into(),
+        cfg_path.to_str().unwrap().into(),
+        "--clients".into(),
+        "2".into(),
+        "--queries".into(),
+        "4".into(),
+        "--rows".into(),
+        "300".into(),
+    ])
+    .unwrap();
+    assert!(out.contains("QPS"), "{out}");
 }
 
 #[test]

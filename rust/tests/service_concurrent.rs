@@ -1,0 +1,201 @@
+//! Multi-tenant query-service suite: many client threads share one
+//! [`QueryService`] (one pilot, one thread pool) and their results must
+//! be bit-identical to solo engine runs; admission saturation must
+//! surface as typed [`Error::Admission`] rejections instead of blocking;
+//! canceled queries must release their queue slot; result-cache hits
+//! must return bit-identical tables and bump the [`metrics::cache`]
+//! counters; and a failing query must not take its neighbours down.
+
+use std::sync::Arc;
+
+use radical_cylon::cluster::MachineSpec;
+use radical_cylon::config::ServiceConfig;
+use radical_cylon::df::GenSpec;
+use radical_cylon::error::Error;
+use radical_cylon::exec::{Engine, HeterogeneousEngine};
+use radical_cylon::metrics::cache as cache_metrics;
+use radical_cylon::ops::dist::KernelBackend;
+use radical_cylon::plan::Plan;
+use radical_cylon::service::{CacheOutcome, QueryService, QueryState};
+
+/// The shared working set: `M` distinct sorted-generate plans (seed is
+/// the distinguishing parameter), all 2 ranks wide.
+fn plan_m(m: usize, rows: usize) -> Plan {
+    Plan::generate(2, GenSpec::uniform(rows, rows as i64 / 2, 0x5EED + m as u64))
+        .sort("key")
+        .collect()
+}
+
+fn svc_cfg(max_inflight: usize, queue_depth: usize) -> ServiceConfig {
+    ServiceConfig {
+        ranks: 2,
+        max_inflight,
+        queue_depth,
+        ..ServiceConfig::default()
+    }
+}
+
+/// N client threads x M distinct plans, several repetitions each, against
+/// one service — every outcome must fingerprint identically to a solo
+/// [`HeterogeneousEngine::run_plan`] of the same plan, whether it ran
+/// cold, reused a cached lowering, or came from the result cache.
+#[test]
+fn concurrent_tenants_match_solo_runs() {
+    const N: usize = 4; // client threads
+    const M: usize = 4; // distinct plans
+    const REPS: usize = 3;
+    const ROWS: usize = 800;
+
+    let solo: Vec<u64> = (0..M)
+        .map(|m| {
+            let engine = HeterogeneousEngine::new(
+                MachineSpec::local(2),
+                KernelBackend::Native,
+                2,
+            );
+            let run = engine.run_plan(&plan_m(m, ROWS)).unwrap();
+            run.output.unwrap().multiset_fingerprint()
+        })
+        .collect();
+
+    let before = cache_metrics::snapshot();
+    let svc = QueryService::start(svc_cfg(4, 64)).unwrap();
+    let solo = Arc::new(solo);
+    std::thread::scope(|s| {
+        for t in 0..N {
+            let svc = &svc;
+            let solo = solo.clone();
+            s.spawn(move || {
+                for rep in 0..REPS {
+                    for m in 0..M {
+                        // Stagger the plan order per thread so distinct
+                        // plans genuinely overlap in flight.
+                        let m = (m + t + rep) % M;
+                        let r = svc.submit(plan_m(m, ROWS)).unwrap().join().unwrap();
+                        let got = r.output.expect("collect plan").multiset_fingerprint();
+                        assert_eq!(
+                            got, solo[m],
+                            "thread {t} rep {rep} plan {m}: service result \
+                             diverged from solo run (cache={:?})",
+                            r.cache
+                        );
+                    }
+                }
+            });
+        }
+    });
+    svc.shutdown();
+
+    // N*REPS submissions per plan, but only the first execution of each
+    // plan is cold: the rest must be served by the caches.
+    let d = cache_metrics::snapshot().since(before);
+    assert!(
+        d.result_hits + d.plan_hits >= 1,
+        "repeated identical plans never hit a cache: {d:?}"
+    );
+}
+
+/// With one in-flight slot and no queue, a second submission while a
+/// slow query runs must be rejected with the *typed* admission error —
+/// promptly, not after blocking behind the running query.
+#[test]
+fn saturation_rejects_with_typed_error() {
+    let mut cfg = svc_cfg(1, 0);
+    cfg.result_cache_bytes = 0; // force real execution every time
+    let svc = QueryService::start(cfg).unwrap();
+    // Slow enough that the immediate second submit lands mid-flight.
+    let slow = plan_m(0, 1_500_000);
+    let h = svc.submit(slow).unwrap();
+    // The submit returns a typed rejection rather than blocking behind
+    // the running query — a deadlock here would hang the test.
+    let err = svc.submit(plan_m(1, 100)).unwrap_err();
+    assert!(
+        matches!(err, Error::Admission(_)),
+        "expected Error::Admission, got: {err}"
+    );
+    assert!(h.join().unwrap().output_rows > 0);
+    // Capacity freed: the same submission is admitted now.
+    assert!(svc.submit(plan_m(1, 100)).unwrap().join().is_ok());
+    svc.shutdown();
+}
+
+/// Canceling a queued query releases its queue slot immediately: the
+/// queue refills without waiting for the running query, and the canceled
+/// handle reports `Canceled` with an error from `join`.
+#[test]
+fn cancel_releases_queue_slot() {
+    let mut cfg = svc_cfg(1, 1);
+    cfg.result_cache_bytes = 0;
+    let svc = QueryService::start(cfg).unwrap();
+    let running = svc.submit(plan_m(0, 1_500_000)).unwrap();
+    let queued = svc.submit(plan_m(1, 200)).unwrap();
+    assert_eq!(svc.queue_len(), 1);
+    // Queue is full: a third submission rejects.
+    let err = svc.submit(plan_m(2, 200)).unwrap_err();
+    assert!(matches!(err, Error::Admission(_)), "{err}");
+    // Cancel the queued query: slot releases without any execution.
+    queued.cancel();
+    assert_eq!(svc.queue_len(), 0);
+    assert_eq!(queued.status(), QueryState::Canceled);
+    assert!(queued.join().is_err());
+    // The freed slot admits new work, which eventually completes.
+    let replacement = svc.submit(plan_m(3, 200)).unwrap();
+    assert!(running.join().unwrap().output_rows > 0);
+    let r = replacement.join().unwrap();
+    assert!(r.output_rows > 0);
+    svc.shutdown();
+}
+
+/// Result-cache hits: the second identical collect plan completes as a
+/// `ResultHit`, returns a bit-identical table, and bumps the hit
+/// counter; distinct plans do not alias each other's entries.
+#[test]
+fn result_cache_hits_are_bit_identical_and_counted() {
+    let svc = QueryService::start(svc_cfg(2, 8)).unwrap();
+    let before = cache_metrics::snapshot();
+    let cold = svc.run(plan_m(7, 600)).unwrap();
+    let hot = svc.run(plan_m(7, 600)).unwrap();
+    let other = svc.run(plan_m(8, 600)).unwrap();
+    assert_eq!(cold.cache, CacheOutcome::Cold);
+    assert_eq!(hot.cache, CacheOutcome::ResultHit);
+    assert_eq!(other.cache, CacheOutcome::Cold);
+    assert_eq!(
+        cold.output.as_ref().unwrap().multiset_fingerprint(),
+        hot.output.as_ref().unwrap().multiset_fingerprint()
+    );
+    assert_ne!(
+        cold.output.unwrap().multiset_fingerprint(),
+        other.output.unwrap().multiset_fingerprint(),
+        "distinct plans must not share a cache entry"
+    );
+    let d = cache_metrics::snapshot().since(before);
+    assert!(d.result_hits >= 1, "{d:?}");
+    assert!(d.result_misses >= 2, "{d:?}");
+    svc.shutdown();
+}
+
+/// A query whose task fails (injected via the `__fail__` name
+/// convention) fails alone: concurrent healthy queries complete with
+/// correct results, and the service keeps serving afterwards.
+#[test]
+fn failures_are_contained_to_their_query() {
+    let svc = QueryService::start(svc_cfg(4, 16)).unwrap();
+    let poisoned = Plan::generate(2, GenSpec::uniform(300, 150, 1))
+        .sort("key")
+        .named("__fail__sort")
+        .collect();
+    let bad = svc.submit(poisoned).unwrap();
+    let good: Vec<_> = (0..4)
+        .map(|m| svc.submit(plan_m(m, 400)).unwrap())
+        .collect();
+    let err = bad.join().unwrap_err();
+    assert!(err.to_string().contains("__fail__"), "{err}");
+    assert_eq!(bad.status(), QueryState::Failed);
+    for h in good {
+        let r = h.join().unwrap();
+        assert!(r.output_rows > 0);
+    }
+    // Service still healthy after a tenant failure.
+    assert!(svc.run(plan_m(0, 400)).is_ok());
+    svc.shutdown();
+}
