@@ -17,6 +17,10 @@
 //! * **merge** — run-advancing k-way merge (`merge_sorted`) vs the
 //!   one-heap-op-per-row baseline (`merge_sorted_per_row`), on run-heavy
 //!   input.
+//! * **fault-inject** — the disarmed fault-injection hook (one atomic
+//!   load, the cost every task boundary always pays) vs an armed plan
+//!   whose name filter never matches (the worst case healthy tasks pay
+//!   when chaos testing is on).
 //!
 //! A **thread-scaling** section follows the pairs: the morsel-parallel
 //! sort/join/groupby run at 1/2/4/8 pool workers
@@ -52,6 +56,7 @@ use radical_cylon::ops::local::{
     AggFn, JoinType, SortKey,
 };
 use radical_cylon::util::bench_harness::{bench_iters, BenchSet};
+use radical_cylon::util::faults::{self, FaultPlan, FireMode};
 use radical_cylon::util::hash::{partition_ids, partition_ids_par};
 use radical_cylon::util::pool::ThreadPool;
 
@@ -79,7 +84,11 @@ const PAIRS: &[(&str, &str)] = &[
     ("shuffle-plan/counting-scatter", "shuffle-plan/legacy-nested"),
     ("groupby/csr", "groupby/legacy-hashmap"),
     ("merge/run-advance", "merge/per-row"),
+    ("fault-inject/unarmed", "fault-inject/armed-cold"),
 ];
+
+/// Injection-hook calls per bench iteration (fault-overhead rows).
+const FAULT_CALLS: usize = 1_000_000;
 
 fn main() {
     let iters = bench_iters(3);
@@ -216,6 +225,34 @@ fn main() {
         assert_eq!(m.num_rows(), MERGE_PARTS * MERGE_ROWS_PER_PART);
         None
     });
+
+    // ---- fault-injection hook overhead: unarmed vs armed-cold -----------
+    // The data-plane hot paths call `faults::inject*` at every task and
+    // collective boundary, so the disarmed hook must stay a single atomic
+    // load. `unarmed` measures that fast path; `armed-cold` arms a plan
+    // whose `only` filter never matches (full arm walk + seeded draw,
+    // nothing fires) — the worst case a production run with chaos enabled
+    // pays on healthy tasks. Gated as a PAIRS entry: disarmed must be
+    // strictly cheaper than armed.
+    assert!(!faults::armed(), "bench must start with no fault plan armed");
+    set.bench_mem("fault-inject/unarmed", 1, iters, || {
+        for i in 0..FAULT_CALLS {
+            faults::inject_keyed("agent.task", i as u64, "bench-task").unwrap();
+        }
+        None
+    });
+    faults::arm(
+        FaultPlan::new(1)
+            .with_arm("agent.task", FireMode::Prob(0.0))
+            .with_only("never-fires"),
+    );
+    set.bench_mem("fault-inject/armed-cold", 1, iters, || {
+        for i in 0..FAULT_CALLS {
+            faults::inject_keyed("agent.task", i as u64, "bench-task").unwrap();
+        }
+        None
+    });
+    faults::disarm();
 
     // ---- thread scaling: morsel-parallel kernels at 1/2/4/8 workers -----
     // These rows gate *scaling*, not old-vs-new, so they carry a

@@ -156,7 +156,7 @@ fn main() {
             None
         });
         let delta = cache_metrics::snapshot().since(before);
-        svc.shutdown();
+        svc.shutdown().unwrap();
         latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let row = set.rows.iter_mut().find(|r| r.label == label).unwrap();
         row.extra.push((

@@ -16,7 +16,8 @@
 
 use crate::cluster::MachineSpec;
 use crate::config::{
-    parse_ini, preset, preset_ids, ExperimentConfig, ServiceConfig, SCALE_NOTE,
+    apply_faults, parse_ini, preset, preset_ids, ExperimentConfig,
+    ServiceConfig, SCALE_NOTE,
 };
 use crate::df::GenSpec;
 use crate::error::{Error, Result};
@@ -24,7 +25,9 @@ use crate::exec::{
     run_hetero_vs_batch, run_scaling, BareMetalEngine, BatchEngine, Engine,
     EngineKind, HeterogeneousEngine, PlanRun,
 };
-use crate::metrics::{cache as cache_metrics, render_table};
+use crate::metrics::{
+    cache as cache_metrics, faults as fault_metrics, render_table,
+};
 use crate::ops::dist::KernelBackend;
 use crate::plan::expr::{col, lit};
 use crate::plan::Plan;
@@ -86,7 +89,9 @@ fn backend_from(args: &Args) -> Result<KernelBackend> {
 fn config_from(args: &Args) -> Result<ExperimentConfig> {
     let mut config = if let Some(path) = args.get("config") {
         let text = std::fs::read_to_string(path)?;
-        ExperimentConfig::from_ini(&parse_ini(&text)?)
+        let doc = parse_ini(&text)?;
+        apply_faults(&doc)?;
+        ExperimentConfig::from_ini(&doc)
     } else {
         let id = args
             .get("experiment")
@@ -333,7 +338,9 @@ fn cmd_serve(args: &Args) -> Result<String> {
     let rows = parse("rows", 5_000)?.max(1);
     let mut cfg = if let Some(path) = args.get("config") {
         let text = std::fs::read_to_string(path)?;
-        ServiceConfig::from_ini(&parse_ini(&text)?)
+        let doc = parse_ini(&text)?;
+        apply_faults(&doc)?;
+        ServiceConfig::from_ini(&doc)
     } else {
         ServiceConfig::from_env()
     }?;
@@ -350,6 +357,7 @@ fn cmd_serve(args: &Args) -> Result<String> {
             .collect()
     };
     let before = cache_metrics::snapshot();
+    let faults_before = fault_metrics::snapshot();
     let t0 = std::time::Instant::now();
     use std::sync::atomic::{AtomicU64, Ordering};
     let done = AtomicU64::new(0);
@@ -392,8 +400,9 @@ fn cmd_serve(args: &Args) -> Result<String> {
         }
     });
     let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
-    svc.shutdown();
+    let drain = svc.shutdown();
     let d = cache_metrics::snapshot().since(before);
+    let fd = fault_metrics::snapshot().since(faults_before);
     let completed = done.load(Ordering::Relaxed);
     let mut out = format!(
         "query service: {clients} clients x {queries} queries \
@@ -419,6 +428,19 @@ fn cmd_serve(args: &Args) -> Result<String> {
         d.plan_hits,
         d.plan_misses,
     ));
+    out.push_str(&format!(
+        "faults: injected {}, retried {}, recovered {}, exhausted {}, \
+         timed out {}, quarantined ranks {}\n",
+        fd.injected,
+        fd.retried,
+        fd.recovered,
+        fd.exhausted,
+        fd.timed_out,
+        fd.quarantined_ranks,
+    ));
+    if let Err(e) = drain {
+        out.push_str(&format!("shutdown: {e}\n"));
+    }
     Ok(out)
 }
 
@@ -428,7 +450,9 @@ fn cmd_help() -> String {
      [--parallelisms 2,4,8] [--config file.ini]\n  radical-cylon plan [--ranks N] \
      [--rows N] [--engine bm|batch|rp] [--policy fifo|cpf] [--backend native|pjrt] \
      [--expr]\n  radical-cylon serve [--clients N] [--queries N] [--rows N] [--ranks N] \
-     [--config file.ini]\n"
+     [--config file.ini]\n\nfault injection / retry (chaos testing): add a [faults] section to \
+     --config\n  (sites: agent.task, op.execute, comm.alltoall, comm.send, pool.job), or \
+     set\n  RC_FAULTS=\"agent.task=0.05,seed=7\" RC_RETRY_MAX=3 RC_TASK_DEADLINE_S=5\n"
         .to_string()
 }
 
@@ -517,6 +541,7 @@ mod tests {
         assert!(out.contains("QPS"), "{out}");
         assert!(out.contains("result-cache hits"), "{out}");
         assert!(out.contains("completed"), "{out}");
+        assert!(out.contains("faults: injected"), "{out}");
         let e = dispatch(argv("serve --clients zero")).unwrap_err().to_string();
         assert!(e.contains("bad --clients"), "{e}");
     }

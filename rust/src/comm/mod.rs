@@ -19,11 +19,17 @@ pub use netmodel::{Backend, NetModel};
 
 use std::any::Any;
 use std::cell::Cell;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::df::Table;
 use crate::error::{Error, Result};
+use crate::util::faults;
+// Every comm lock recovers from poison: a rank that panics with an
+// injected fault may still hold a mailbox/barrier lock, and both its
+// blocked peers and the post-failure world reset must keep going (the
+// explicit `poisoned` marks, set before any panic, carry the fault).
+use crate::util::lock_recover;
 
 /// Payloads that can travel through the communicator. `approx_bytes` feeds
 /// the network cost model.
@@ -87,59 +93,110 @@ type MailKey = (u64, usize, u64); // (context, src group-rank, tag)
 type Payload = Box<dyn Any + Send>;
 
 /// One rank's incoming-message store.
+///
+/// Fault propagation: a fired comm fault *poisons* its context in every
+/// mailbox (and barrier) before panicking, so a rank blocked in
+/// [`Mailbox::take`] on that context wakes and panics instead of waiting
+/// forever on a message its peer will never send. Poison marks are never
+/// cleared for private contexts (ids are allocated fresh per task, so a
+/// poisoned id is never reused); [`CommWorld::run`] resets everything
+/// after a failed run so pooled worlds stay reusable.
+#[derive(Default)]
+struct MailState {
+    slots: HashMap<MailKey, VecDeque<Payload>>,
+    /// Contexts poisoned by an injected comm fault.
+    poisoned: HashSet<u64>,
+}
+
 #[derive(Default)]
 struct Mailbox {
-    slots: Mutex<HashMap<MailKey, VecDeque<Payload>>>,
+    state: Mutex<MailState>,
     cv: Condvar,
 }
 
 impl Mailbox {
     fn put(&self, key: MailKey, payload: Payload) {
-        let mut slots = self.slots.lock().unwrap();
-        slots.entry(key).or_default().push_back(payload);
+        let mut st = lock_recover(&self.state);
+        st.slots.entry(key).or_default().push_back(payload);
         self.cv.notify_all();
     }
 
     fn take(&self, key: MailKey) -> Payload {
-        let mut slots = self.slots.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         loop {
-            if let Some(q) = slots.get_mut(&key) {
+            if st.poisoned.contains(&key.0) {
+                panic!("injected fault: communicator ctx {} poisoned", key.0);
+            }
+            if let Some(q) = st.slots.get_mut(&key) {
                 if let Some(p) = q.pop_front() {
                     if q.is_empty() {
-                        slots.remove(&key);
+                        st.slots.remove(&key);
                     }
                     return p;
                 }
             }
-            slots = self.cv.wait(slots).unwrap();
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
+    }
+
+    fn poison(&self, ctx: u64) {
+        let mut st = lock_recover(&self.state);
+        st.poisoned.insert(ctx);
+        self.cv.notify_all();
+    }
+
+    /// Drop all messages and poison marks (only safe with no rank threads
+    /// active — the post-failure reset of [`CommWorld::run`]).
+    fn reset(&self) {
+        let mut st = lock_recover(&self.state);
+        st.slots.clear();
+        st.poisoned.clear();
     }
 }
 
 /// Rendezvous state for one communication context (barrier generations).
 struct GroupShared {
-    barrier: Mutex<(usize, u64)>, // (arrived, generation)
+    barrier: Mutex<BarrierState>,
     cv: Condvar,
+}
+
+#[derive(Default)]
+struct BarrierState {
+    arrived: usize,
+    generation: u64,
+    poisoned: bool,
 }
 
 impl GroupShared {
     fn new() -> GroupShared {
-        GroupShared { barrier: Mutex::new((0, 0)), cv: Condvar::new() }
+        GroupShared {
+            barrier: Mutex::new(BarrierState::default()),
+            cv: Condvar::new(),
+        }
     }
 
     fn wait(&self, group_size: usize) {
-        let mut st = self.barrier.lock().unwrap();
-        let gen = st.1;
-        st.0 += 1;
-        if st.0 == group_size {
-            st.0 = 0;
-            st.1 = st.1.wrapping_add(1);
+        let mut st = lock_recover(&self.barrier);
+        let gen = st.generation;
+        st.arrived += 1;
+        if st.arrived == group_size {
+            st.arrived = 0;
+            st.generation = st.generation.wrapping_add(1);
             self.cv.notify_all();
         } else {
-            while st.1 == gen {
-                st = self.cv.wait(st).unwrap();
+            while st.generation == gen {
+                if st.poisoned {
+                    panic!("injected fault: communicator barrier poisoned");
+                }
+                st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
             }
         }
+    }
+
+    fn poison(&self) {
+        let mut st = lock_recover(&self.barrier);
+        st.poisoned = true;
+        self.cv.notify_all();
     }
 }
 
@@ -153,11 +210,22 @@ struct WorldInner {
 
 impl WorldInner {
     fn group(&self, ctx: u64) -> Arc<GroupShared> {
-        let mut groups = self.groups.lock().unwrap();
+        let mut groups = lock_recover(&self.groups);
         groups
             .entry(ctx)
             .or_insert_with(|| Arc::new(GroupShared::new()))
             .clone()
+    }
+
+    /// Poison `ctx` everywhere: every mailbox and the context's barrier.
+    /// Ranks blocked on the context wake and panic; ranks touching it
+    /// later panic at that touch. Called by a fired comm fault before the
+    /// firing rank panics itself.
+    fn poison_ctx(&self, ctx: u64) {
+        for mb in &self.mailboxes {
+            mb.poison(ctx);
+        }
+        self.group(ctx).poison();
     }
 }
 
@@ -236,7 +304,18 @@ impl CommWorld {
         }
         match failure {
             None => Ok(out),
-            Some(msg) => Err(Error::TaskFailed(msg)),
+            Some(msg) => {
+                // A panicked run can leave undelivered messages, poison
+                // marks, and half-arrived barriers behind. Every rank
+                // thread has been joined, so resetting here is race-free —
+                // and required for pooled worlds that the engines reuse
+                // across queries (a retried run must start clean).
+                for mb in &self.inner.mailboxes {
+                    mb.reset();
+                }
+                lock_recover(&self.inner.groups).clear();
+                Err(Error::TaskFailed(msg))
+            }
         }
     }
 }
@@ -294,9 +373,40 @@ impl Communicator {
         t
     }
 
+    /// Fault-injection seam for the comm sites (`comm.send`,
+    /// `comm.alltoall`). The verdict is keyed so that every rank touching
+    /// the same faulted exchange decides identically; on a failure verdict
+    /// the whole context is poisoned *before* this rank panics, so peers
+    /// blocked anywhere on the context wake and panic instead of hanging.
+    /// Latency verdicts sleep on the initiating side only. One relaxed
+    /// atomic load when no plan is armed.
+    #[inline]
+    fn inject(&self, site: &'static str, key: u64, initiator: bool) {
+        if let Some(delay_ms) = faults::comm_verdict(site, key) {
+            if delay_ms > 0 {
+                if initiator {
+                    std::thread::sleep(std::time::Duration::from_millis(
+                        delay_ms,
+                    ));
+                }
+            } else {
+                self.world.poison_ctx(self.ctx);
+                panic!(
+                    "injected fault at {site}: communicator ctx {} poisoned",
+                    self.ctx
+                );
+            }
+        }
+    }
+
     /// Point-to-point send to a group rank (charges the α–β p2p cost).
     pub fn send<T: CommData>(&self, dst: usize, tag: u64, value: T) {
         debug_assert!(dst < self.size(), "send to rank {dst} of {}", self.size());
+        // Keyed by ctx alone: a fired `comm.send` fails the whole
+        // point-to-point channel of this private communicator, not one
+        // message — see util::faults for why per-message faults could
+        // strand third ranks of the group.
+        self.inject("comm.send", self.ctx, true);
         self.charge(self.world.netmodel.p2p(value.approx_bytes()));
         let world_dst = self.ranks[dst];
         self.world.mailboxes[world_dst].put(
@@ -308,6 +418,9 @@ impl Communicator {
     /// Blocking typed receive from a group rank.
     pub fn recv<T: CommData>(&self, src: usize, tag: u64) -> T {
         debug_assert!(src < self.size());
+        // Same ctx-keyed verdict as `send`: both endpoints of the faulted
+        // channel reach it independently.
+        self.inject("comm.send", self.ctx, false);
         let payload =
             self.world.mailboxes[self.ranks[self.my_rank]].take((self.ctx, src, tag));
         *payload
@@ -441,6 +554,14 @@ impl Communicator {
         mut make: impl FnMut(usize) -> T,
     ) -> Vec<T> {
         let tag = self.next_tag();
+        // Keyed by (ctx, tag): collective call order is symmetric across
+        // the group (MPI contract), so every rank of this alltoall draws
+        // the same verdict at entry, before any payload is posted.
+        self.inject(
+            "comm.alltoall",
+            self.ctx ^ crate::util::splitmix64(tag.wrapping_add(1)),
+            true,
+        );
         let mut mine: Option<T> = None;
         let mut total = 0usize;
         for dst in 0..self.size() {
@@ -538,7 +659,7 @@ impl Communicator {
     /// Drop the context registry entry for a finished task's communicator
     /// (master calls this after collecting results).
     pub fn release_ctx(&self, ctx_id: u64) {
-        self.world.groups.lock().unwrap().remove(&ctx_id);
+        lock_recover(&self.world.groups).remove(&ctx_id);
     }
 }
 

@@ -149,9 +149,82 @@ impl ExperimentConfig {
     }
 }
 
-/// Query-service knobs: rank-pool width, admission bounds, and cache
-/// budget. Parsed from an optional `[service]` INI section with
-/// per-key environment fallbacks (INI wins, then env, then the default):
+/// Apply an optional `[faults]` INI section to the process-global fault
+/// machinery ([`crate::util::faults`]). Three keys are routed to the
+/// retry/deadline knobs rather than the injection plan:
+///
+/// | key                  | effect                                        |
+/// |----------------------|-----------------------------------------------|
+/// | `retry_max_attempts` | [`faults::configure_retry`] `max_attempts`    |
+/// | `retry_base_ms`      | [`faults::configure_retry`] backoff base      |
+/// | `task_deadline_s`    | [`faults::configure_deadline`] (0 = none)     |
+///
+/// Every other key is fed through [`FaultPlan::apply_key`]
+/// (`<site> = <prob>|@N`, `<site>.delay_ms`, `<site>.only`, `seed`), and
+/// if any site ends up armed the plan is installed via [`faults::arm`].
+/// Returns `true` when a plan was armed. With no `[faults]` section this
+/// is a no-op (env fallbacks like `RC_FAULTS` are read lazily by the
+/// faults module itself).
+///
+/// [`faults::configure_retry`]: crate::util::faults::configure_retry
+/// [`faults::configure_deadline`]: crate::util::faults::configure_deadline
+/// [`faults::arm`]: crate::util::faults::arm
+/// [`FaultPlan::apply_key`]: crate::util::faults::FaultPlan::apply_key
+pub fn apply_faults(doc: &IniDoc) -> Result<bool> {
+    use crate::util::faults::{self, FaultPlan};
+    let Some(sec) = doc.section("faults") else { return Ok(false) };
+    let mut plan = FaultPlan::new(0xC4A05);
+    let mut armed_sites = false;
+    let mut retry = faults::retry_policy();
+    let mut retry_touched = false;
+    for (key, value) in sec {
+        match key.as_str() {
+            "retry_max_attempts" => {
+                retry.max_attempts = value.parse().map_err(|_| {
+                    Error::Config(format!(
+                        "[faults] retry_max_attempts value '{value}' is not \
+                         an integer"
+                    ))
+                })?;
+                retry_touched = true;
+            }
+            "retry_base_ms" => {
+                retry.base_ms = value.parse().map_err(|_| {
+                    Error::Config(format!(
+                        "[faults] retry_base_ms value '{value}' is not an \
+                         integer"
+                    ))
+                })?;
+                retry_touched = true;
+            }
+            "task_deadline_s" => {
+                let s: f64 = value.parse().map_err(|_| {
+                    Error::Config(format!(
+                        "[faults] task_deadline_s value '{value}' is not a \
+                         number"
+                    ))
+                })?;
+                faults::configure_deadline(s);
+            }
+            _ => {
+                plan.apply_key(key, value)?;
+                armed_sites = armed_sites || key != "seed";
+            }
+        }
+    }
+    if retry_touched {
+        faults::configure_retry(retry);
+    }
+    if armed_sites {
+        faults::arm(plan);
+    }
+    Ok(armed_sites)
+}
+
+/// Query-service knobs: rank-pool width, admission bounds, cache budget,
+/// and fault-tolerance policy. Parsed from an optional `[service]` INI
+/// section with per-key environment fallbacks (INI wins, then env, then
+/// the default):
 ///
 /// | key                  | env                     | default    |
 /// |----------------------|-------------------------|------------|
@@ -161,6 +234,8 @@ impl ExperimentConfig {
 /// | `max_inflight_bytes` | `RC_MAX_INFLIGHT_BYTES` | 0 (off)    |
 /// | `result_cache_bytes` | `RC_RESULT_CACHE_BYTES` | 64 MiB     |
 /// | `admit`              | `RC_ADMIT_POLICY`       | `fifo`     |
+/// | `retry_max_attempts` | `RC_RETRY_MAX`          | 1 (off)    |
+/// | `shutdown_timeout_s` | `RC_SHUTDOWN_TIMEOUT`   | 0 (forever)|
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
     /// CPU ranks in the service's long-lived pilot (the shared rank pool
@@ -182,6 +257,15 @@ pub struct ServiceConfig {
     pub result_cache_bytes: u64,
     /// Queue ordering when capacity frees up.
     pub admit: crate::service::AdmitPolicy,
+    /// Total attempts (including the first) the service gives a query
+    /// whose failure is transient ([`crate::error::Error::is_transient`]).
+    /// `1` disables query-level retry.
+    pub retry_max_attempts: u32,
+    /// How long [`crate::service::QueryService::shutdown`] waits for
+    /// in-flight queries to drain before cancelling the stragglers and
+    /// returning [`crate::error::Error::Timeout`]. `0` = wait forever
+    /// (the pre-deadline behavior).
+    pub shutdown_timeout_s: f64,
 }
 
 impl Default for ServiceConfig {
@@ -193,6 +277,8 @@ impl Default for ServiceConfig {
             max_inflight_bytes: 0,
             result_cache_bytes: 64 * 1024 * 1024,
             admit: crate::service::AdmitPolicy::Fifo,
+            retry_max_attempts: 1,
+            shutdown_timeout_s: 0.0,
         }
     }
 }
@@ -250,6 +336,20 @@ impl ServiceConfig {
                     )))
                 }
             },
+            retry_max_attempts: lookup(
+                doc,
+                s,
+                "retry_max_attempts",
+                "RC_RETRY_MAX",
+                d.retry_max_attempts,
+            )?,
+            shutdown_timeout_s: lookup(
+                doc,
+                s,
+                "shutdown_timeout_s",
+                "RC_SHUTDOWN_TIMEOUT",
+                d.shutdown_timeout_s,
+            )?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -277,7 +377,31 @@ impl ServiceConfig {
                 self.queue_depth
             )));
         }
+        if self.retry_max_attempts == 0 {
+            return Err(Error::Config(
+                "service.retry_max_attempts must be >= 1 (1 = no retry; 0 \
+                 would mean queries never even run once)"
+                    .into(),
+            ));
+        }
+        if !self.shutdown_timeout_s.is_finite() || self.shutdown_timeout_s < 0.0
+        {
+            return Err(Error::Config(format!(
+                "service.shutdown_timeout_s must be a finite value >= 0 \
+                 (0 = wait forever), got {}",
+                self.shutdown_timeout_s
+            )));
+        }
         Ok(())
+    }
+
+    /// The drain deadline as a `Duration`, `None` when 0 (wait forever).
+    pub fn shutdown_timeout(&self) -> Option<std::time::Duration> {
+        if self.shutdown_timeout_s > 0.0 {
+            Some(std::time::Duration::from_secs_f64(self.shutdown_timeout_s))
+        } else {
+            None
+        }
     }
 }
 
@@ -374,10 +498,14 @@ iterations = 5
         assert_eq!(c.max_inflight_bytes, 0);
         assert_eq!(c.result_cache_bytes, 64 * 1024 * 1024);
         assert_eq!(c.admit, crate::service::AdmitPolicy::Fifo);
+        assert_eq!(c.retry_max_attempts, 1, "retry is off by default");
+        assert_eq!(c.shutdown_timeout_s, 0.0, "drain forever by default");
+        assert_eq!(c.shutdown_timeout(), None);
 
         let ini = "[service]\nranks = 8\nmax_inflight = 2\nqueue_depth = 0\n\
                    max_inflight_bytes = 1048576\nresult_cache_bytes = 0\n\
-                   admit = cost\n";
+                   admit = cost\nretry_max_attempts = 3\n\
+                   shutdown_timeout_s = 2.5\n";
         let c = ServiceConfig::from_ini(&parse_ini(ini).unwrap()).unwrap();
         assert_eq!(c.ranks, 8);
         assert_eq!(c.max_inflight, 2);
@@ -385,6 +513,11 @@ iterations = 5
         assert_eq!(c.max_inflight_bytes, 1_048_576);
         assert_eq!(c.result_cache_bytes, 0);
         assert_eq!(c.admit, crate::service::AdmitPolicy::CostAware);
+        assert_eq!(c.retry_max_attempts, 3);
+        assert_eq!(
+            c.shutdown_timeout(),
+            Some(std::time::Duration::from_millis(2500))
+        );
     }
 
     #[test]
@@ -405,6 +538,55 @@ iterations = 5
         assert!(ServiceConfig::from_ini(&parse_ini(ini).unwrap()).is_err());
         let ini = "[service]\nqueue_depth = deep\n";
         assert!(ServiceConfig::from_ini(&parse_ini(ini).unwrap()).is_err());
+        // 0 retry attempts would mean the first run never happens.
+        let ini = "[service]\nretry_max_attempts = 0\n";
+        assert!(ServiceConfig::from_ini(&parse_ini(ini).unwrap()).is_err());
+        // Negative drain deadlines are nonsense, not "forever".
+        let ini = "[service]\nshutdown_timeout_s = -1\n";
+        assert!(ServiceConfig::from_ini(&parse_ini(ini).unwrap()).is_err());
+    }
+
+    #[test]
+    fn faults_section_arms_plan_and_routes_policy_keys() {
+        use crate::util::faults;
+        let _g = faults::test_guard();
+        // No [faults] section: nothing armed, nothing touched.
+        assert!(!apply_faults(&parse_ini(SAMPLE).unwrap()).unwrap());
+
+        let ini = "[faults]\nseed = 11\nagent.task = 0.25\n\
+                   agent.task.only = chaos\npool.job = @2\n\
+                   retry_max_attempts = 3\nretry_base_ms = 5\n\
+                   task_deadline_s = 1.5\n";
+        let armed = apply_faults(&parse_ini(ini).unwrap()).unwrap();
+        assert!(armed, "site keys present -> plan armed");
+        assert!(faults::armed());
+        let policy = faults::retry_policy();
+        assert_eq!(policy.max_attempts, 3);
+        assert_eq!(policy.base_ms, 5);
+        assert_eq!(
+            faults::default_deadline(),
+            Some(std::time::Duration::from_millis(1500))
+        );
+        // Restore process defaults for neighboring tests.
+        faults::disarm();
+        faults::configure_retry(faults::RetryPolicy::none());
+        faults::configure_deadline(0.0);
+
+        // A seed alone arms nothing; an unknown site is a typed error.
+        assert!(!apply_faults(&parse_ini("[faults]\nseed = 3\n").unwrap())
+            .unwrap());
+        assert!(!faults::armed());
+        let err = apply_faults(
+            &parse_ini("[faults]\nagent.nap = 0.5\n").unwrap(),
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        assert!(err.to_string().contains("unknown fault site"), "{err}");
+        // Policy-key typos are Config errors too, not silent defaults.
+        assert!(apply_faults(
+            &parse_ini("[faults]\nretry_max_attempts = lots\n").unwrap()
+        )
+        .is_err());
     }
 
     #[test]

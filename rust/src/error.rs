@@ -33,10 +33,63 @@ pub enum Error {
     /// division by zero in the expression evaluator).
     Compute(String),
 
+    /// A deadline expired: an overdue task marked failed by the raptor
+    /// watchdog, a query still running at the service's shutdown drain
+    /// deadline, or a `join_timeout` that ran out.
+    Timeout(String),
+
     Io(std::io::Error),
 
     /// Errors bubbling out of the `xla` crate.
     Xla(String),
+}
+
+impl Error {
+    /// Retry taxonomy: is this failure worth re-executing?
+    ///
+    /// * **Transient** — `Comm` (a peer hiccuped), `TaskFailed` (worker
+    ///   panic / injected fault), `Timeout` (overdue, the work itself may
+    ///   be fine): a deterministic re-run can succeed.
+    /// * **Permanent** — everything else (`Config`, `DataFrame`,
+    ///   `Compute`, ...): re-running the same inputs reproduces the same
+    ///   error, so retrying only wastes the pool.
+    pub fn is_transient(&self) -> bool {
+        matches!(
+            self,
+            Error::Comm(_) | Error::TaskFailed(_) | Error::Timeout(_)
+        )
+    }
+
+    /// Recover the typed variant from a rendered [`Display`] message.
+    ///
+    /// The pilot report path carries failures as strings
+    /// (`TaskResult.error`, `service::Outcome::Failed`), which loses the
+    /// variant — and with it [`Error::is_transient`]. Every `Display` arm
+    /// uses a stable `"<kind>: "` prefix, so the variant round-trips;
+    /// unknown prefixes conservatively classify as `TaskFailed`
+    /// (transient), matching the pre-taxonomy behaviour of the report
+    /// path.
+    pub fn classify(message: &str) -> Error {
+        let m = message.to_string();
+        for (prefix, make) in [
+            ("dataframe error: ", Error::DataFrame as fn(String) -> Error),
+            ("communicator error: ", Error::Comm),
+            ("resource error: ", Error::Resource),
+            ("pilot error: ", Error::Pilot),
+            ("task failed: ", Error::TaskFailed),
+            ("admission rejected: ", Error::Admission),
+            ("runtime error: ", Error::Runtime),
+            ("config error: ", Error::Config),
+            ("compute error: ", Error::Compute),
+            ("timeout: ", Error::Timeout),
+            ("xla error: ", Error::Xla),
+        ] {
+            if let Some(rest) = message.strip_prefix(prefix) {
+                return make(rest.to_string());
+            }
+        }
+        Error::TaskFailed(m)
+    }
 }
 
 impl std::fmt::Display for Error {
@@ -51,6 +104,7 @@ impl std::fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Compute(m) => write!(f, "compute error: {m}"),
+            Error::Timeout(m) => write!(f, "timeout: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
         }
@@ -104,5 +158,43 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         let e: Error = io.into();
         assert!(matches!(e, Error::Io(_)));
+    }
+
+    #[test]
+    fn transient_taxonomy() {
+        assert!(Error::Comm("x".into()).is_transient());
+        assert!(Error::TaskFailed("x".into()).is_transient());
+        assert!(Error::Timeout("x".into()).is_transient());
+        assert!(!Error::Config("x".into()).is_transient());
+        assert!(!Error::DataFrame("x".into()).is_transient());
+        assert!(!Error::Compute("x".into()).is_transient());
+        assert!(!Error::Admission("x".into()).is_transient());
+    }
+
+    #[test]
+    fn classify_round_trips_display() {
+        for e in [
+            Error::DataFrame("a".into()),
+            Error::Comm("b".into()),
+            Error::Resource("c".into()),
+            Error::Pilot("d".into()),
+            Error::TaskFailed("e".into()),
+            Error::Admission("f".into()),
+            Error::Runtime("g".into()),
+            Error::Config("h".into()),
+            Error::Compute("i".into()),
+            Error::Timeout("j".into()),
+            Error::Xla("k".into()),
+        ] {
+            let back = Error::classify(&e.to_string());
+            assert_eq!(
+                std::mem::discriminant(&back),
+                std::mem::discriminant(&e),
+                "{e}"
+            );
+            assert_eq!(back.is_transient(), e.is_transient(), "{e}");
+        }
+        // Unknown prefixes stay transient (pre-taxonomy report behaviour).
+        assert!(Error::classify("mystery").is_transient());
     }
 }

@@ -111,6 +111,7 @@ pub mod prelude {
     pub use crate::plan::{LoweredPlan, Plan};
     pub use crate::raptor::{ReadyPolicy, SchedPolicy};
     pub use crate::runtime::ArtifactStore;
+    pub use crate::util::faults::{FaultPlan, FireMode, RetryPolicy};
     pub use crate::service::{
         AdmitPolicy, CacheOutcome, QueryHandle, QueryId, QueryResult,
         QueryService, QueryState,

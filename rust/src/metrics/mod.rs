@@ -206,6 +206,101 @@ pub mod cache {
     }
 }
 
+/// Fault-tolerance accounting (see `util::faults` and ARCHITECTURE.md
+/// §Fault tolerance).
+///
+/// Process-wide monotone counters following the [`cache`] pattern:
+/// injection sites report every fired fault, the retry layers report
+/// retries and their outcomes, and the raptor watchdog reports deadline
+/// kills and quarantined ranks. Measure an operation by delta:
+///
+/// ```
+/// use radical_cylon::metrics::faults;
+/// let before = faults::snapshot();
+/// // ... run a chaos workload ...
+/// let delta = faults::snapshot().since(before);
+/// assert_eq!(delta.exhausted, 0, "every transient fault was recovered");
+/// ```
+pub mod faults {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static INJECTED: AtomicU64 = AtomicU64::new(0);
+    static RETRIED: AtomicU64 = AtomicU64::new(0);
+    static RECOVERED: AtomicU64 = AtomicU64::new(0);
+    static EXHAUSTED: AtomicU64 = AtomicU64::new(0);
+    static TIMED_OUT: AtomicU64 = AtomicU64::new(0);
+    static QUARANTINED_RANKS: AtomicU64 = AtomicU64::new(0);
+
+    /// Snapshot of the six monotone fault counters.
+    #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+    pub struct FaultCounters {
+        /// Faults fired by an armed `FaultPlan` (failures and delays).
+        pub injected: u64,
+        /// Transient failures re-attempted by a `RetryPolicy`.
+        pub retried: u64,
+        /// Retry loops that ended in success after >= 1 retry.
+        pub recovered: u64,
+        /// Retry loops that ran out of attempts on a transient failure.
+        pub exhausted: u64,
+        /// Tasks the raptor watchdog killed at their deadline.
+        pub timed_out: u64,
+        /// Ranks quarantined after hosting a failed/overdue task.
+        pub quarantined_ranks: u64,
+    }
+
+    impl FaultCounters {
+        /// Delta relative to an earlier snapshot.
+        pub fn since(self, earlier: FaultCounters) -> FaultCounters {
+            FaultCounters {
+                injected: self.injected.wrapping_sub(earlier.injected),
+                retried: self.retried.wrapping_sub(earlier.retried),
+                recovered: self.recovered.wrapping_sub(earlier.recovered),
+                exhausted: self.exhausted.wrapping_sub(earlier.exhausted),
+                timed_out: self.timed_out.wrapping_sub(earlier.timed_out),
+                quarantined_ranks: self
+                    .quarantined_ranks
+                    .wrapping_sub(earlier.quarantined_ranks),
+            }
+        }
+    }
+
+    pub fn record_injected() {
+        INJECTED.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_retried() {
+        RETRIED.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_recovered() {
+        RECOVERED.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_exhausted() {
+        EXHAUSTED.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_timed_out() {
+        TIMED_OUT.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_quarantined_ranks(n: u64) {
+        QUARANTINED_RANKS.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Process-wide totals since start.
+    pub fn snapshot() -> FaultCounters {
+        FaultCounters {
+            injected: INJECTED.load(Ordering::Relaxed),
+            retried: RETRIED.load(Ordering::Relaxed),
+            recovered: RECOVERED.load(Ordering::Relaxed),
+            exhausted: EXHAUSTED.load(Ordering::Relaxed),
+            timed_out: TIMED_OUT.load(Ordering::Relaxed),
+            quarantined_ranks: QUARANTINED_RANKS.load(Ordering::Relaxed),
+        }
+    }
+}
+
 /// Simple scope timer returning seconds.
 pub struct Timer(Instant);
 
@@ -281,6 +376,9 @@ pub struct NodeMetric {
     pub exec_s: f64,
     /// Seconds the node sat in the master's queue behind other tasks.
     pub queue_wait_s: f64,
+    /// Execution attempts this node took (1 = clean first run; > 1 means
+    /// the retry layer re-ran it after transient failures).
+    pub attempts: u32,
 }
 
 /// Whole-DAG accounting from a pipeline execution — the observability half
@@ -454,6 +552,24 @@ mod tests {
         assert!(d.result_hits >= 1);
         assert!(d.result_misses >= 1);
         assert!(d.result_evictions >= 3);
+    }
+
+    #[test]
+    fn fault_counters_accumulate() {
+        let before = faults::snapshot();
+        faults::record_injected();
+        faults::record_retried();
+        faults::record_recovered();
+        faults::record_exhausted();
+        faults::record_timed_out();
+        faults::record_quarantined_ranks(2);
+        let d = faults::snapshot().since(before);
+        assert!(d.injected >= 1);
+        assert!(d.retried >= 1);
+        assert!(d.recovered >= 1);
+        assert!(d.exhausted >= 1);
+        assert!(d.timed_out >= 1);
+        assert!(d.quarantined_ranks >= 2);
     }
 
     #[test]

@@ -120,6 +120,17 @@ pub struct TaskDescription {
     /// pipeline handoff. Off by default: gathering costs one extra
     /// collective per task.
     pub keep_output: bool,
+    /// Execution attempt, 1-based. The retry layer bumps this on each
+    /// re-submission so keyed fault-injection sites (`agent.task`,
+    /// `op.execute`) re-draw their decision per attempt — a task that was
+    /// failed by an armed probability can succeed on retry.
+    pub attempt: u32,
+    /// Per-task deadline: once dispatched longer than this, the raptor
+    /// watchdog marks the task `Failed` with `Error::Timeout` and
+    /// quarantines its ranks. `None` falls back to the process default
+    /// (`util::faults::default_deadline`), which is itself off unless
+    /// configured.
+    pub deadline: Option<std::time::Duration>,
 }
 
 impl TaskDescription {
@@ -137,6 +148,8 @@ impl TaskDescription {
             inputs: Vec::new(),
             synthetic_fill: false,
             keep_output: false,
+            attempt: 1,
+            deadline: None,
         }
     }
 
@@ -171,6 +184,14 @@ impl TaskDescription {
     /// Scheduling priority (higher first).
     pub fn with_priority(mut self, priority: i32) -> Self {
         self.priority = priority;
+        self
+    }
+
+    /// Per-task deadline in seconds (watchdog kill + rank quarantine once
+    /// overdue). Non-positive values clear it.
+    pub fn with_deadline_s(mut self, seconds: f64) -> Self {
+        self.deadline = (seconds > 0.0)
+            .then(|| std::time::Duration::from_secs_f64(seconds));
         self
     }
 
@@ -252,5 +273,10 @@ mod tests {
         assert_eq!(TaskDescription::groupby("g", 2, 10).op.name(), "groupby");
         assert!(!td.synthetic_fill);
         assert!(td.inputs.is_empty());
+        assert_eq!(td.attempt, 1);
+        assert!(td.deadline.is_none());
+        let td = td.with_deadline_s(2.5);
+        assert_eq!(td.deadline, Some(std::time::Duration::from_millis(2500)));
+        assert!(td.with_deadline_s(0.0).deadline.is_none());
     }
 }

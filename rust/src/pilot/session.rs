@@ -11,6 +11,7 @@ use crate::error::{Error, Result};
 use crate::metrics::Timer;
 use crate::ops::dist::KernelBackend;
 use crate::raptor::{Agent, MasterMsg, SchedPolicy};
+use crate::util::lock_recover;
 
 use super::description::{PilotDescription, TaskDescription};
 use super::task::{TaskHandle, TaskState};
@@ -37,7 +38,7 @@ pub struct Pilot {
 
 impl Pilot {
     pub fn state(&self) -> PilotState {
-        *self.state.lock().unwrap()
+        *lock_recover(&self.state)
     }
 
     pub fn cores(&self) -> usize {
@@ -52,11 +53,18 @@ impl Pilot {
     /// Resource-usage tracker (paper §4.4): busy rank-seconds accumulated
     /// by the RAPTOR master and completed-task count.
     pub fn utilization(&self) -> std::sync::Arc<crate::raptor::Utilization> {
-        self.agent.lock().unwrap().utilization()
+        lock_recover(&self.agent).utilization()
+    }
+
+    /// World ranks currently quarantined after task-deadline expiries
+    /// (degraded mode): held by a timed-out straggler that has not yet
+    /// reported back. Drops to zero as stragglers recover.
+    pub fn quarantined_ranks(&self) -> u64 {
+        self.utilization().quarantined_ranks()
     }
 
     fn master_tx(&self) -> std::sync::mpsc::Sender<MasterMsg> {
-        self.agent.lock().unwrap().master_tx()
+        lock_recover(&self.agent).master_tx()
     }
 
     /// Tear down the agent and release the allocation.
@@ -77,11 +85,14 @@ impl Pilot {
     /// not touched again — in particular, dropping a failed pilot must
     /// not re-run agent shutdown or double-release its cores.
     fn finish(&self, terminal: PilotState) {
-        let mut st = self.state.lock().unwrap();
+        // lock_recover: a tenant thread that panicked while holding the
+        // state lock (e.g. under fault injection) must not make the
+        // pilot un-shutdownable — teardown releases real resources.
+        let mut st = lock_recover(&self.state);
         if matches!(*st, PilotState::Done | PilotState::Failed) {
             return;
         }
-        self.agent.lock().unwrap().shutdown();
+        lock_recover(&self.agent).shutdown();
         self.rm.release(&self.allocation);
         *st = terminal;
     }
@@ -132,11 +143,7 @@ impl PilotManager {
             agent: Mutex::new(agent),
             rm,
         });
-        self.session
-            .pilots
-            .lock()
-            .unwrap()
-            .push(Arc::downgrade(&pilot));
+        lock_recover(&self.session.pilots).push(Arc::downgrade(&pilot));
         Ok(pilot)
     }
 }
@@ -202,7 +209,7 @@ struct SessionInner {
 
 impl SessionInner {
     fn rm(&self, machine: &MachineSpec) -> Arc<dyn ResourceManager> {
-        let mut rms = self.rms.lock().unwrap();
+        let mut rms = lock_recover(&self.rms);
         rms.entry(machine.name.clone())
             .or_insert_with(|| Arc::from(rm_for(machine.clone())))
             .clone()

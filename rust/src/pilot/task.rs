@@ -2,6 +2,8 @@
 
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::util::lock_recover;
+
 use crate::df::ChunkedTable;
 use crate::error::{Error, Result};
 use crate::metrics::ExecMeasurement;
@@ -30,8 +32,13 @@ impl TaskState {
             (New, Submitted)
                 | (Submitted, AgentScheduling)
                 | (Submitted, Canceled)
+                // A queued task can fail before it ever executes: the
+                // degraded-mode scheduler fails tasks that have become
+                // unschedulable (every healthy rank quarantined).
+                | (Submitted, Failed)
                 | (AgentScheduling, Executing)
                 | (AgentScheduling, Canceled)
+                | (AgentScheduling, Failed)
                 | (Executing, Done)
                 | (Executing, Failed)
         )
@@ -108,7 +115,7 @@ impl TaskHandle {
     }
 
     pub fn state(&self) -> TaskState {
-        self.inner.state.lock().unwrap().0
+        lock_recover(&self.inner.state).0
     }
 
     /// Advance the state machine; panics on illegal transitions (these are
@@ -119,7 +126,7 @@ impl TaskHandle {
     /// callbacks — with the "terminal without result" error — so
     /// completion listeners can never hang on a canceled task.
     pub fn advance(&self, next: TaskState) {
-        let mut st = self.inner.state.lock().unwrap();
+        let mut st = lock_recover(&self.inner.state);
         assert!(
             st.0.can_transition_to(next),
             "illegal task transition {:?} -> {next:?} (task {})",
@@ -137,7 +144,7 @@ impl TaskHandle {
     /// Terminal transition carrying the result; fires `on_terminal`
     /// callbacks after releasing the state lock.
     pub fn finish(&self, result: TaskResult) {
-        let mut st = self.inner.state.lock().unwrap();
+        let mut st = lock_recover(&self.inner.state);
         assert!(
             st.0.can_transition_to(result.state) && result.state.is_terminal(),
             "illegal terminal transition {:?} -> {:?}",
@@ -154,7 +161,7 @@ impl TaskHandle {
     /// What a completion listener receives: the stored result, or the
     /// "terminal without result" error for result-less terminal states.
     fn terminal_outcome(&self) -> Result<TaskResult> {
-        let st = self.inner.state.lock().unwrap();
+        let st = lock_recover(&self.inner.state);
         debug_assert!(st.0.is_terminal());
         st.1.clone().ok_or_else(|| {
             Error::Pilot(format!("task {} terminal without result", self.id))
@@ -165,7 +172,7 @@ impl TaskHandle {
     /// callback runs — callbacks may take locks of their own).
     fn fire_callbacks(&self) {
         let drained: Vec<TerminalCallback> =
-            std::mem::take(&mut *self.inner.callbacks.lock().unwrap());
+            std::mem::take(&mut *lock_recover(&self.inner.callbacks));
         for cb in drained {
             cb(self.terminal_outcome());
         }
@@ -180,9 +187,9 @@ impl TaskHandle {
     /// without parking a waiter thread per node.
     pub fn on_terminal(&self, cb: impl FnOnce(Result<TaskResult>) + Send + 'static) {
         {
-            let st = self.inner.state.lock().unwrap();
+            let st = lock_recover(&self.inner.state);
             if !st.0.is_terminal() {
-                self.inner.callbacks.lock().unwrap().push(Box::new(cb));
+                lock_recover(&self.inner.callbacks).push(Box::new(cb));
                 return;
             }
         }
@@ -191,9 +198,9 @@ impl TaskHandle {
 
     /// Block until the task reaches a terminal state; returns the result.
     pub fn wait(&self) -> Result<TaskResult> {
-        let mut st = self.inner.state.lock().unwrap();
+        let mut st = lock_recover(&self.inner.state);
         while !st.0.is_terminal() {
-            st = self.inner.cv.wait(st).unwrap();
+            st = self.inner.cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
         st.1.clone().ok_or_else(|| {
             Error::Pilot(format!("task {} terminal without result", self.id))

@@ -333,6 +333,7 @@ impl Pipeline {
         submitted_s: &[f64],
         finished_s: &[f64],
         makespan_s: f64,
+        attempts: &[u32],
     ) -> PipelineMetrics {
         let nodes: Vec<NodeMetric> = results
             .iter()
@@ -345,6 +346,7 @@ impl Pipeline {
                 wall_s: r.measurement.wall_s,
                 exec_s: r.measurement.total_s(),
                 queue_wait_s: r.measurement.overhead.queue_wait,
+                attempts: attempts[i],
             })
             .collect();
         // Longest wall-weighted dependency chain (deps precede, so one
@@ -375,8 +377,17 @@ impl Pipeline {
     /// Event-driven dataflow execution: dependency counting + a completion
     /// channel. Each node is submitted the instant its last dependency
     /// finishes; the RAPTOR master overlaps whatever fits on free ranks and
-    /// recycles ranks as nodes retire. A failed node fails the pipeline
-    /// after in-flight nodes drain (fail-fast: nothing new is submitted).
+    /// recycles ranks as nodes retire.
+    ///
+    /// A node that fails with a *transient* error ([`Error::is_transient`]
+    /// on the classified error string) is retried in place — resubmitted
+    /// with a bumped `attempt` so keyed fault-injection sites re-draw —
+    /// up to the ambient [`crate::util::faults::retry_policy`]'s
+    /// `max_attempts`, with deterministic capped-exponential backoff. The
+    /// default policy is a single attempt, so behavior without explicit
+    /// configuration is unchanged. A permanent failure (or an exhausted
+    /// transient one) fails the pipeline after in-flight nodes drain
+    /// (fail-fast: nothing new is submitted).
     pub fn run_dataflow(
         &self,
         tm: &TaskManager,
@@ -410,6 +421,8 @@ impl Pipeline {
         let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
         let mut inflight = 0usize;
         let mut failure: Option<String> = None;
+        let retry = crate::util::faults::retry_policy();
+        let mut attempts = vec![1u32; n];
 
         loop {
             if failure.is_none() {
@@ -423,8 +436,11 @@ impl Pipeline {
                     }),
                 }
                 for i in std::mem::take(&mut ready) {
-                    let td = self.prepared_td(i, &keep, &outputs);
-                    submitted_s[i] = t0.elapsed().as_secs_f64();
+                    let mut td = self.prepared_td(i, &keep, &outputs);
+                    td.attempt = attempts[i];
+                    if attempts[i] == 1 {
+                        submitted_s[i] = t0.elapsed().as_secs_f64();
+                    }
                     match tm.submit(td) {
                         Ok(handle) => {
                             // Completion callback, not a parked waiter
@@ -455,6 +471,9 @@ impl Pipeline {
             match res {
                 Ok(r) => {
                     if r.is_done() {
+                        if attempts[i] > 1 {
+                            crate::metrics::faults::record_recovered();
+                        }
                         outputs[i] = r.output.clone();
                         for &j in &dependents[i] {
                             indeg[j] -= 1;
@@ -462,14 +481,40 @@ impl Pipeline {
                                 ready.push(j);
                             }
                         }
-                    } else if failure.is_none() {
-                        failure = Some(format!(
-                            "pipeline node {i} ('{}') failed: {}",
-                            r.name,
-                            r.error.clone().unwrap_or_default()
-                        ));
+                        results[i] = Some(r);
+                    } else {
+                        let err = r.error.clone().unwrap_or_default();
+                        let transient = Error::classify(&err).is_transient();
+                        if transient
+                            && attempts[i] < retry.max_attempts
+                            && failure.is_none()
+                        {
+                            // Transient failure with budget left: back off
+                            // (deterministically jittered; buffered events
+                            // keep draining once we wake) and resubmit with
+                            // a bumped attempt so keyed fault sites re-draw.
+                            crate::metrics::faults::record_retried();
+                            let ms = retry.backoff_ms(attempts[i], i as u64);
+                            if ms > 0 {
+                                std::thread::sleep(
+                                    std::time::Duration::from_millis(ms),
+                                );
+                            }
+                            attempts[i] += 1;
+                            ready.push(i);
+                        } else {
+                            if transient && retry.max_attempts > 1 {
+                                crate::metrics::faults::record_exhausted();
+                            }
+                            if failure.is_none() {
+                                failure = Some(format!(
+                                    "pipeline node {i} ('{}') failed: {err}",
+                                    r.name,
+                                ));
+                            }
+                            results[i] = Some(r);
+                        }
                     }
-                    results[i] = Some(r);
                 }
                 Err(e) => {
                     if failure.is_none() {
@@ -485,7 +530,13 @@ impl Pipeline {
         let results: Vec<TaskResult> =
             results.into_iter().map(|r| r.expect("node executed")).collect();
         let makespan = t0.elapsed().as_secs_f64();
-        let metrics = self.metrics_from(&results, &submitted_s, &finished_s, makespan);
+        let metrics = self.metrics_from(
+            &results,
+            &submitted_s,
+            &finished_s,
+            makespan,
+            &attempts,
+        );
         Ok(PipelineRun { results, metrics })
     }
 
@@ -505,6 +556,12 @@ impl Pipeline {
     /// A task that panics inside `exec` is caught and surfaced as that
     /// node's failure (fail-fast, like any failed node) — it never wedges
     /// the scheduler or poisons the pool.
+    ///
+    /// Transient node failures (including the `pool.job` fault-injection
+    /// site, which fires at job entry inside the panic containment) are
+    /// retried with the same bump-the-attempt/backoff scheme as
+    /// [`Pipeline::run_dataflow`], bounded by the ambient
+    /// [`crate::util::faults::retry_policy`].
     ///
     /// [`ThreadPool`]: crate::util::pool::ThreadPool
     pub fn run_pooled<F>(
@@ -540,6 +597,8 @@ impl Pipeline {
         let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
         let mut inflight = 0usize;
         let mut failure: Option<String> = None;
+        let retry = crate::util::faults::retry_policy();
+        let mut attempts = vec![1u32; n];
         let exec = &exec;
 
         pool.scope(|s| {
@@ -555,14 +614,19 @@ impl Pipeline {
                         }),
                     }
                     for i in std::mem::take(&mut ready) {
-                        let td = self.prepared_td(i, &keep, &outputs);
+                        let mut td = self.prepared_td(i, &keep, &outputs);
+                        td.attempt = attempts[i];
                         let name = td.name.clone();
                         let tx = tx.clone();
                         s.spawn(move || {
                             // Catch panics *inside* the job so the scope
                             // never re-panics for a task failure and the
                             // scheduler always receives a completion event.
+                            // The `pool.job` fault site fires here — inside
+                            // the containment — as a transient error at job
+                            // entry.
                             let res = match catch_unwind(AssertUnwindSafe(|| {
+                                crate::util::faults::inject("pool.job", &name)?;
                                 exec(td)
                             })) {
                                 Ok(r) => r,
@@ -591,30 +655,63 @@ impl Pipeline {
                 }
                 let (i, res) = rx.recv().expect("pool job sends completion");
                 inflight -= 1;
-                match res {
-                    Ok(r) => {
-                        if r.is_done() {
-                            outputs[i] = r.output.clone();
-                            for &j in &dependents[i] {
-                                indeg[j] -= 1;
-                                if indeg[j] == 0 {
-                                    ready.push(j);
+                let done = matches!(&res, Ok(r) if r.is_done());
+                if done {
+                    let r = res.expect("checked done");
+                    if attempts[i] > 1 {
+                        crate::metrics::faults::record_recovered();
+                    }
+                    outputs[i] = r.output.clone();
+                    for &j in &dependents[i] {
+                        indeg[j] -= 1;
+                        if indeg[j] == 0 {
+                            ready.push(j);
+                        }
+                    }
+                    results[i] = Some(r);
+                } else {
+                    let transient = match &res {
+                        Ok(r) => Error::classify(
+                            r.error.as_deref().unwrap_or_default(),
+                        )
+                        .is_transient(),
+                        Err(e) => e.is_transient(),
+                    };
+                    if transient
+                        && attempts[i] < retry.max_attempts
+                        && failure.is_none()
+                    {
+                        crate::metrics::faults::record_retried();
+                        let ms = retry.backoff_ms(attempts[i], i as u64);
+                        if ms > 0 {
+                            std::thread::sleep(
+                                std::time::Duration::from_millis(ms),
+                            );
+                        }
+                        attempts[i] += 1;
+                        ready.push(i);
+                    } else {
+                        if transient && retry.max_attempts > 1 {
+                            crate::metrics::faults::record_exhausted();
+                        }
+                        match res {
+                            Ok(r) => {
+                                if failure.is_none() {
+                                    failure = Some(format!(
+                                        "pipeline node {i} ('{}') failed: {}",
+                                        r.name,
+                                        r.error.clone().unwrap_or_default()
+                                    ));
+                                }
+                                results[i] = Some(r);
+                            }
+                            Err(e) => {
+                                if failure.is_none() {
+                                    failure = Some(format!(
+                                        "pipeline node {i} failed: {e}"
+                                    ));
                                 }
                             }
-                        } else if failure.is_none() {
-                            failure = Some(format!(
-                                "pipeline node {i} ('{}') failed: {}",
-                                r.name,
-                                r.error.clone().unwrap_or_default()
-                            ));
-                        }
-                        results[i] = Some(r);
-                    }
-                    Err(e) => {
-                        if failure.is_none() {
-                            failure = Some(format!(
-                                "pipeline node {i} failed: {e}"
-                            ));
                         }
                     }
                 }
@@ -692,7 +789,15 @@ impl Pipeline {
         let results: Vec<TaskResult> =
             results.into_iter().map(|r| r.expect("node executed")).collect();
         let makespan = t0.elapsed().as_secs_f64();
-        let metrics = self.metrics_from(&results, &submitted_s, &finished_s, makespan);
+        // Waves is the no-retry baseline: every node ran exactly once.
+        let attempts = vec![1u32; n];
+        let metrics = self.metrics_from(
+            &results,
+            &submitted_s,
+            &finished_s,
+            makespan,
+            &attempts,
+        );
         Ok(PipelineRun { results, metrics })
     }
 }
@@ -1042,7 +1147,97 @@ mod tests {
         assert!((0.0..=1.0).contains(&idle));
         for node in &m.nodes {
             assert!(node.finished_s >= node.submitted_s, "{}", node.name);
+            assert_eq!(node.attempts, 1, "clean run is a single attempt");
         }
+    }
+
+    /// Retry layer, exhaustion path: a node whose fault site fires on
+    /// every attempt is retried `max_attempts` times and then fails the
+    /// pipeline with the transient error surfaced.
+    #[test]
+    fn transient_node_failure_retries_until_exhausted_in_dataflow() {
+        use crate::util::faults::{self, FaultPlan, FireMode, RetryPolicy};
+        let _g = faults::test_guard();
+        faults::configure_retry(RetryPolicy {
+            max_attempts: 3,
+            base_ms: 0,
+            cap_ms: 0,
+            seed: 1,
+        });
+        // Name-filtered arm: lib tests run concurrently, so the armed
+        // plan must not perturb unrelated tasks.
+        faults::arm(
+            FaultPlan::new(11)
+                .with_arm("agent.task", FireMode::Prob(1.0))
+                .with_only("pl-flaky"),
+        );
+        let before = crate::metrics::faults::snapshot();
+        let (s, pilot) = pilot_of(2, "retry-exhaust");
+        let tm = s.task_manager(&pilot);
+        let mut p = Pipeline::new();
+        p.add(td("pl-flaky-sort", 2), &[]);
+        let err = p.run_dataflow(&tm, ReadyPolicy::Fifo).unwrap_err().to_string();
+        pilot.shutdown();
+        faults::disarm();
+        faults::configure_retry(RetryPolicy::none());
+        assert!(err.contains("pl-flaky-sort"), "{err}");
+        assert!(err.contains("agent.task"), "{err}");
+        let d = crate::metrics::faults::snapshot().since(&before);
+        assert!(d.retried >= 2, "{d:?}");
+        assert!(d.exhausted >= 1, "{d:?}");
+    }
+
+    /// Retry layer, recovery path through `run_pooled`: the `pool.job`
+    /// site fires exactly once (`@1`, scoped by name), the retried attempt
+    /// succeeds, and the pipeline result is indistinguishable from a
+    /// clean run.
+    #[test]
+    fn pooled_node_recovers_after_injected_pool_fault() {
+        use crate::metrics::{ExecMeasurement, OverheadBreakdown};
+        use crate::pilot::TaskState;
+        use crate::util::faults::{self, FaultPlan, FireMode, RetryPolicy};
+        let exec = |td: TaskDescription| -> crate::error::Result<TaskResult> {
+            Ok(TaskResult {
+                task_id: 0,
+                name: td.name.clone(),
+                state: TaskState::Done,
+                measurement: ExecMeasurement {
+                    label: td.name,
+                    parallelism: 1,
+                    wall_s: 0.0,
+                    sim_net_s: 0.0,
+                    overhead: OverheadBreakdown::default(),
+                },
+                output_rows: 1,
+                output: None,
+                error: None,
+            })
+        };
+        let _g = faults::test_guard();
+        faults::configure_retry(RetryPolicy {
+            max_attempts: 3,
+            base_ms: 0,
+            cap_ms: 0,
+            seed: 1,
+        });
+        faults::arm(
+            FaultPlan::new(5)
+                .with_arm("pool.job", FireMode::Nth(1))
+                .with_only("pj-flaky"),
+        );
+        let before = crate::metrics::faults::snapshot();
+        let pool = crate::util::pool::ThreadPool::new(2);
+        let mut p = Pipeline::new();
+        let a = p.add(td("pj-flaky-gen", 1), &[]);
+        let _b = p.add(td("clean-child", 1), &[a]);
+        let results = p.run_pooled(&pool, ReadyPolicy::Fifo, exec).unwrap();
+        faults::disarm();
+        faults::configure_retry(RetryPolicy::none());
+        assert!(results.iter().all(|r| r.is_done()));
+        let d = crate::metrics::faults::snapshot().since(&before);
+        assert!(d.injected >= 1, "{d:?}");
+        assert!(d.retried >= 1, "{d:?}");
+        assert!(d.recovered >= 1, "{d:?}");
     }
 
     #[test]

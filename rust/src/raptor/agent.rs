@@ -171,14 +171,48 @@ fn worker_loop(
                     }
                 };
                 let construct = t0.elapsed().as_secs_f64() + sub.sim_clock();
-                let construct_max = sub.allreduce_f64(construct, ReduceOp::Max);
 
                 // --- execute the Cylon task on the private communicator ---
-                let outcome = run_cylon_task_full(&sub, &order.td, &order.backend);
-
-                // All ranks rendezvous before the group dissolves so ctx
-                // release cannot race a straggler's last collective.
-                sub.barrier();
+                //
+                // The whole collective section (stats allreduce, task, and
+                // the dissolve barrier) runs under one catch_unwind: an
+                // injected comm fault fires by panic, and it fires
+                // *symmetrically* — every rank of the group panics at the
+                // same collective point — so when a panic is caught here,
+                // no peer is blocked inside the skipped barrier and the
+                // group can dissolve safely. The caught rank still reports
+                // (rank 0) and recycles instead of killing its worker
+                // thread.
+                let ran = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| {
+                        let construct_max =
+                            sub.allreduce_f64(construct, ReduceOp::Max);
+                        let outcome =
+                            run_cylon_task_full(&sub, &order.td, &order.backend);
+                        // All ranks rendezvous before the group dissolves
+                        // so ctx release cannot race a straggler's last
+                        // collective.
+                        sub.barrier();
+                        (construct_max, outcome)
+                    }),
+                );
+                let (construct_max, outcome) = match ran {
+                    Ok(v) => v,
+                    Err(payload) => {
+                        let msg = payload
+                            .downcast_ref::<String>()
+                            .map(String::as_str)
+                            .or_else(|| payload.downcast_ref::<&str>().copied())
+                            .unwrap_or("opaque panic payload");
+                        (
+                            construct,
+                            Err(crate::error::Error::TaskFailed(format!(
+                                "rank panicked in task '{}': {msg}",
+                                order.td.name
+                            ))),
+                        )
+                    }
+                };
                 if sub.rank() == 0 {
                     let report = match outcome {
                         Ok(o) => RankReport {
@@ -314,5 +348,73 @@ mod tests {
         let mut a = agent(2, SchedPolicy::Fifo);
         a.shutdown();
         a.shutdown();
+    }
+
+    /// Watchdog path end to end: an injected-latency task blows its
+    /// deadline, fails with a transient `timeout:` error, and its ranks
+    /// sit quarantined until the straggler's late report frees them —
+    /// at which point a queued task dispatches and completes.
+    #[test]
+    fn deadline_expiry_quarantines_then_recovers_ranks() {
+        use crate::util::faults::{self, FaultPlan, FireMode};
+        let _g = faults::test_guard();
+        faults::arm(
+            FaultPlan::new(3)
+                .with_arm("agent.task", FireMode::Prob(1.0))
+                .with_delay_ms(600)
+                .with_only("dl-slow"),
+        );
+        let mut a = agent(2, SchedPolicy::Fifo);
+        let td = TaskDescription::sort("dl-slow", 2, 10, DataDist::Uniform)
+            .with_deadline_s(0.05);
+        let h = submit(&a, 1, td);
+        let r = h.wait().unwrap();
+        assert_eq!(r.state, TaskState::Failed);
+        let err = r.error.unwrap();
+        assert!(err.starts_with("timeout: "), "{err}");
+        assert!(crate::error::Error::classify(&err).is_transient());
+        assert_eq!(a.utilization().quarantined_ranks(), 2);
+        // Queued behind a fully-quarantined pool; runs after recovery.
+        let h2 =
+            submit(&a, 2, TaskDescription::sort("after", 2, 10, DataDist::Uniform));
+        let r2 = h2.wait().unwrap();
+        assert!(r2.is_done());
+        assert_eq!(a.utilization().quarantined_ranks(), 0);
+        a.shutdown();
+        faults::disarm();
+    }
+
+    /// Degraded-mode re-planning: with half the pilot quarantined, a
+    /// queued task that wanted the full pilot is narrowed onto the
+    /// healthy survivors instead of waiting for ranks that may never
+    /// come back.
+    #[test]
+    fn replan_narrows_wide_task_onto_survivors() {
+        use crate::util::faults::{self, FaultPlan, FireMode};
+        let _g = faults::test_guard();
+        faults::arm(
+            FaultPlan::new(4)
+                .with_arm("agent.task", FireMode::Prob(1.0))
+                .with_delay_ms(600)
+                .with_only("dl-slow"),
+        );
+        let mut a = agent(4, SchedPolicy::Fifo);
+        let slow = submit(
+            &a,
+            1,
+            TaskDescription::sort("dl-slow-half", 2, 10, DataDist::Uniform)
+                .with_deadline_s(0.05),
+        );
+        let wide =
+            submit(&a, 2, TaskDescription::sort("wide", 4, 40, DataDist::Uniform));
+        assert_eq!(slow.wait().unwrap().state, TaskState::Failed);
+        let rw = wide.wait().unwrap();
+        assert!(rw.is_done());
+        assert_eq!(
+            rw.measurement.parallelism, 2,
+            "wide task must be re-planned onto the 2 healthy ranks"
+        );
+        a.shutdown();
+        faults::disarm();
     }
 }

@@ -15,6 +15,7 @@ use crate::error::{Error, Result};
 use crate::metrics::Timer;
 use crate::ops::dist::{gather_chunked, partition_slice, KernelBackend};
 use crate::pilot::TaskDescription;
+use crate::util::faults;
 
 /// Per-rank statistics aggregated over the task's private communicator.
 #[derive(Clone, Copy, Debug, Default)]
@@ -107,9 +108,13 @@ fn resolve_inputs(
 /// input is synthetic; a *partial* staging is rejected unless the
 /// description opted into [`TaskDescription::allow_synthetic_fill`].
 ///
-/// Failure injection (`name` starting with `__fail__`) errors *before* any
-/// collective so all ranks fail symmetrically — the fault-isolation tests
-/// rely on this.
+/// Failure injection goes through the structured `util::faults` sites:
+/// `agent.task` fires at task entry and `op.execute` around the operator
+/// call, both keyed by (task name, attempt) so every rank of the task
+/// reaches the same verdict *before* any collective — the fault-isolation
+/// tests rely on this symmetry. A task name starting with `__fail__` is
+/// the deprecated shim for the pre-faults test hack: it still fails at
+/// entry unconditionally, without arming anything.
 pub fn run_cylon_task_full(
     comm: &Communicator,
     td: &TaskDescription,
@@ -121,6 +126,8 @@ pub fn run_cylon_task_full(
             td.name
         )));
     }
+    let fault_key = faults::task_key(&td.name, td.attempt);
+    faults::inject_keyed("agent.task", fault_key, &td.name)?;
     comm.reset_sim_clock();
     let spec = GenSpec {
         rows: td.rows_per_rank,
@@ -136,6 +143,7 @@ pub fn run_cylon_task_full(
     // from `td` alone, identical on every rank, so a mis-staged task still
     // fails symmetrically before any collective runs.
     let inputs = resolve_inputs(td, &spec, comm.rank(), comm.size())?;
+    faults::inject_keyed("op.execute", fault_key, &td.name)?;
     let out = td.op.execute(comm, td, inputs, backend)?;
     // The handoff gather is part of the task's measured execution (it holds
     // the ranks), so it runs inside the timer window.
@@ -235,11 +243,53 @@ mod tests {
 
     #[test]
     fn injected_failure_is_symmetric() {
+        // Deprecated `__fail__` shim: still routes to an injected failure
+        // at entry without arming anything.
         let td = TaskDescription::sort("__fail__s", 2, 10, DataDist::Uniform);
         let out = run(td, 2);
         for r in out {
             assert!(r.is_err());
         }
+    }
+
+    #[test]
+    fn structured_fault_sites_fail_symmetrically_and_redraw_on_retry() {
+        let _guard = faults::test_guard();
+        faults::arm(
+            crate::util::FaultPlan::new(3)
+                .with_arm("agent.task", crate::util::faults::FireMode::Prob(1.0))
+                .with_only("cyl-chaos"),
+        );
+        // Armed site: every rank fails, transiently, before any collective.
+        let td = TaskDescription::sort("cyl-chaos-s", 2, 10, DataDist::Uniform);
+        let out = run(td, 2);
+        for r in out {
+            let e = r.unwrap_err();
+            assert!(e.is_transient());
+            assert!(e.to_string().contains("agent.task"), "{e}");
+        }
+        // The `only` filter scopes the arm: other names run clean.
+        let td = TaskDescription::sort("clean", 2, 10, DataDist::Uniform);
+        assert!(run(td, 2).into_iter().all(|r| r.is_ok()));
+        // A p=0.5 arm decides per (name, attempt): some attempt of some
+        // name must survive, some must fail — and re-running the same
+        // (name, attempt) decides identically.
+        faults::arm(
+            crate::util::FaultPlan::new(3)
+                .with_arm("agent.task", crate::util::faults::FireMode::Prob(0.5))
+                .with_only("cyl-chaos"),
+        );
+        let verdict = |attempt: u32| {
+            let mut td =
+                TaskDescription::sort("cyl-chaos-r", 1, 5, DataDist::Uniform);
+            td.attempt = attempt;
+            run(td, 1).pop().unwrap().is_ok()
+        };
+        let first: Vec<bool> = (1..=16).map(verdict).collect();
+        assert!(first.iter().any(|&ok| ok), "{first:?}");
+        assert!(first.iter().any(|&ok| !ok), "{first:?}");
+        assert_eq!(first, (1..=16).map(verdict).collect::<Vec<_>>());
+        faults::disarm();
     }
 
     fn staged_table(keys: Vec<i64>) -> Table {

@@ -1,18 +1,33 @@
 //! The RAPTOR master: task intake, rank grouping, private-communicator
-//! context allocation, dispatch, result collection, rank recycling.
+//! context allocation, dispatch, result collection, rank recycling —
+//! plus the fault-tolerance duties layered on in the same event loop:
+//! per-task **deadlines** (a watchdog scan marks overdue tasks Failed
+//! with a transient [`Error::Timeout`]), **rank quarantine** (the ranks
+//! of a timed-out task stay unavailable until their late report finally
+//! arrives — they may still be wedged inside a collective), and
+//! **re-planning** (a queued task that wants more ranks than are
+//! currently healthy is narrowed onto the survivors via its operator's
+//! `plan_ranks` hook instead of waiting forever).
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use crate::error::Error;
 use crate::metrics::OverheadBreakdown;
 use crate::ops::dist::KernelBackend;
 use crate::pilot::{RankClass, TaskDescription, TaskHandle, TaskState};
+use crate::util::faults;
 
 use super::agent::SchedPolicy;
 use super::cylon_task::RankStats;
+
+/// Watchdog granularity: how often the master wakes to scan for overdue
+/// tasks while any running task carries a deadline. (With no deadlines
+/// armed the master blocks indefinitely — zero idle wakeups.)
+const WATCHDOG_TICK: Duration = Duration::from_millis(25);
 
 /// Shared resource-usage tracker (paper §4.4 "resource tracking"):
 /// busy-rank-nanoseconds accumulated by the master, readable from the
@@ -21,6 +36,8 @@ use super::cylon_task::RankStats;
 pub struct Utilization {
     busy_rank_ns: AtomicU64,
     tasks_done: AtomicU64,
+    /// Ranks currently quarantined after a deadline expiry (gauge).
+    quarantined: AtomicU64,
 }
 
 impl Utilization {
@@ -30,6 +47,12 @@ impl Utilization {
 
     pub fn tasks_done(&self) -> u64 {
         self.tasks_done.load(Ordering::Relaxed)
+    }
+
+    /// Ranks currently quarantined (held by a timed-out task whose late
+    /// report has not yet arrived). Drops back as stragglers report in.
+    pub fn quarantined_ranks(&self) -> u64 {
+        self.quarantined.load(Ordering::Relaxed)
     }
 
     fn record(&self, ranks: usize, busy: std::time::Duration) {
@@ -102,6 +125,9 @@ struct Running {
     ranks: Vec<usize>,
     name: String,
     dispatched: Instant,
+    /// Resolved at dispatch: the description's own deadline, else the
+    /// process default ([`faults::default_deadline`]), else none.
+    deadline: Option<Duration>,
 }
 
 /// Master scheduler state + event loop. Runs on its own thread.
@@ -118,6 +144,13 @@ pub(super) struct Master {
     next_ctx: u64,
     next_seq: u64,
     utilization: Arc<Utilization>,
+    /// World ranks held by timed-out tasks: neither free nor claimable
+    /// until the straggling task finally reports (degraded mode).
+    quarantined: HashSet<usize>,
+    /// Timed-out task id → its quarantined ranks, so a late report can
+    /// be recognized, its ranks recovered, and the (already finished)
+    /// handle left untouched.
+    timed_out: HashMap<u64, Vec<usize>>,
 }
 
 impl Master {
@@ -143,6 +176,8 @@ impl Master {
             next_ctx: 1, // 0 is WORLD_CTX
             next_seq: 0,
             utilization,
+            quarantined: HashSet::new(),
+            timed_out: HashMap::new(),
         }
     }
 
@@ -150,18 +185,31 @@ impl Master {
         self.free
             .iter()
             .zip(&self.classes)
-            .filter(|(&f, &c)| f && c == class)
+            .enumerate()
+            .filter(|(r, (&f, &c))| {
+                f && c == class && !self.quarantined.contains(r)
+            })
             .count()
     }
 
-    /// Pick the lowest `n` free world ranks of the given class.
+    /// Ranks of `class` not quarantined (free or busy): the pool a queued
+    /// task could *eventually* run on, used for degraded-mode re-planning.
+    fn healthy_count(&self, class: RankClass) -> usize {
+        self.classes
+            .iter()
+            .enumerate()
+            .filter(|(r, &c)| c == class && !self.quarantined.contains(r))
+            .count()
+    }
+
+    /// Pick the lowest `n` free, healthy world ranks of the given class.
     fn claim_ranks(&mut self, n: usize, class: RankClass) -> Vec<usize> {
         let mut out = Vec::with_capacity(n);
         for (r, f) in self.free.iter_mut().enumerate() {
             if out.len() == n {
                 break;
             }
-            if *f && self.classes[r] == class {
+            if *f && self.classes[r] == class && !self.quarantined.contains(&r) {
                 *f = false;
                 out.push(r);
             }
@@ -185,6 +233,25 @@ impl Master {
             let mut dispatched = false;
             for &i in &order {
                 let td = &self.queue[i].td;
+                // Degraded-mode re-planning: a task that wants more ranks
+                // than are healthy (quarantine shrank the pool) would
+                // otherwise queue forever. Narrow it onto the survivors
+                // via the operator's plan_ranks hook. With *zero* healthy
+                // ranks nothing can dispatch — the task waits for
+                // stragglers to report back (quarantine is temporary; its
+                // deadline, which covers queue wait too, bounds the wait).
+                let healthy = self.healthy_count(td.rank_class);
+                if healthy == 0 {
+                    if self.policy == SchedPolicy::Fifo {
+                        break;
+                    }
+                    continue;
+                }
+                if td.ranks > healthy {
+                    let narrowed = td.op.plan_ranks(healthy).clamp(1, healthy);
+                    self.queue[i].td.ranks = narrowed;
+                }
+                let td = &self.queue[i].td;
                 let fits = td.ranks <= self.free_count(td.rank_class);
                 if fits {
                     let p = self.queue.remove(i).unwrap();
@@ -199,6 +266,109 @@ impl Master {
                 break;
             }
         }
+    }
+
+    /// Watchdog sweep: finish every overdue running task as Failed with a
+    /// transient [`Error::Timeout`] and quarantine its ranks — they are
+    /// not recycled (the group may be wedged mid-collective) until the
+    /// task's late report arrives in [`Master::complete`]. A task's
+    /// deadline covers **queue wait too**: a queued task past its
+    /// deadline (e.g. parked behind a fully-quarantined pool) is failed
+    /// the same way, so degraded mode can never hang a client that set a
+    /// deadline.
+    fn reap_overdue(&mut self) {
+        let mut overdue_queued: Vec<usize> = (0..self.queue.len())
+            .filter(|&i| {
+                let p = &self.queue[i];
+                p.td.deadline
+                    .or_else(faults::default_deadline)
+                    .is_some_and(|d| p.enqueued.elapsed() > d)
+            })
+            .collect();
+        while let Some(i) = overdue_queued.pop() {
+            let p = self.queue.remove(i).unwrap();
+            crate::metrics::faults::record_timed_out();
+            let err = Error::Timeout(format!(
+                "task '{}' queued past its deadline ({} rank(s) quarantined)",
+                p.td.name,
+                self.quarantined.len(),
+            ));
+            p.handle.finish(crate::pilot::TaskResult {
+                task_id: p.handle.id,
+                name: p.td.name.clone(),
+                state: TaskState::Failed,
+                measurement: crate::metrics::ExecMeasurement {
+                    label: p.td.name.clone(),
+                    parallelism: p.td.ranks,
+                    wall_s: 0.0,
+                    sim_net_s: 0.0,
+                    overhead: OverheadBreakdown {
+                        queue_wait: p.enqueued.elapsed().as_secs_f64(),
+                        ..Default::default()
+                    },
+                },
+                output_rows: 0,
+                output: None,
+                error: Some(err.to_string()),
+            });
+        }
+        for slot in 0..self.running.len() {
+            let overdue = matches!(
+                &self.running[slot],
+                Some(run) if run
+                    .deadline
+                    .is_some_and(|d| run.dispatched.elapsed() > d)
+            );
+            if !overdue {
+                continue;
+            }
+            let run = self.running[slot].take().unwrap();
+            let deadline = run.deadline.unwrap();
+            for &r in &run.ranks {
+                self.quarantined.insert(r);
+            }
+            self.timed_out.insert(run.handle.id, run.ranks.clone());
+            crate::metrics::faults::record_timed_out();
+            crate::metrics::faults::record_quarantined_ranks(run.ranks.len());
+            self.utilization
+                .quarantined
+                .fetch_add(run.ranks.len() as u64, Ordering::Relaxed);
+            let mut overhead = run.overhead;
+            overhead.comm_construction = 0.0;
+            let err = Error::Timeout(format!(
+                "task '{}' exceeded its deadline of {:.3}s on ranks {:?}",
+                run.name,
+                deadline.as_secs_f64(),
+                run.ranks,
+            ));
+            run.handle.finish(crate::pilot::TaskResult {
+                task_id: run.handle.id,
+                name: run.name.clone(),
+                state: TaskState::Failed,
+                measurement: crate::metrics::ExecMeasurement {
+                    label: run.handle.name.clone(),
+                    parallelism: run.parallelism,
+                    wall_s: run.dispatched.elapsed().as_secs_f64(),
+                    sim_net_s: 0.0,
+                    overhead,
+                },
+                output_rows: 0,
+                output: None,
+                error: Some(err.to_string()),
+            });
+        }
+        // Freed nothing, but re-planning may now let queued tasks fit the
+        // shrunken healthy pool.
+        self.schedule();
+    }
+
+    /// Does any running or queued task carry a deadline? Gates the
+    /// watchdog tick.
+    fn has_deadlines(&self) -> bool {
+        self.running.iter().flatten().any(|run| run.deadline.is_some())
+            || self.queue.iter().any(|p| {
+                p.td.deadline.or_else(faults::default_deadline).is_some()
+            })
     }
 
     fn dispatch(&mut self, p: Pending) {
@@ -232,6 +402,7 @@ impl Master {
             ranks: ranks.clone(),
             name: p.td.name.clone(),
             dispatched: Instant::now(),
+            deadline: p.td.deadline.or_else(faults::default_deadline),
         });
         p.handle.advance(TaskState::Executing);
         for &r in &ranks {
@@ -246,6 +417,20 @@ impl Master {
     }
 
     fn complete(&mut self, report: RankReport) {
+        // A straggler reporting after its deadline expiry: the handle was
+        // already finished by the watchdog, so only recover the resources
+        // — free the quarantined ranks and rescan the queue.
+        if let Some(ranks) = self.timed_out.remove(&report.task_id) {
+            for &r in &ranks {
+                self.quarantined.remove(&r);
+                self.free[r] = true;
+            }
+            self.utilization
+                .quarantined
+                .fetch_sub(ranks.len() as u64, Ordering::Relaxed);
+            self.schedule();
+            return;
+        }
         let slot = self
             .running
             .iter()
@@ -284,9 +469,24 @@ impl Master {
     }
 
     /// The master event loop (paper Fig 4: persistent scheduler daemon).
+    /// While any running task carries a deadline the loop waits with a
+    /// watchdog tick and reaps overdue tasks between messages; otherwise
+    /// it blocks indefinitely (no idle wakeups).
     pub(super) fn run(mut self) {
         loop {
-            match self.rx.recv() {
+            let msg = if self.has_deadlines() {
+                match self.rx.recv_timeout(WATCHDOG_TICK) {
+                    Ok(m) => Ok(m),
+                    Err(RecvTimeoutError::Timeout) => {
+                        self.reap_overdue();
+                        continue;
+                    }
+                    Err(RecvTimeoutError::Disconnected) => Err(()),
+                }
+            } else {
+                self.rx.recv().map_err(|_| ())
+            };
+            match msg {
                 Ok(MasterMsg::Submit { handle, td, description_s }) => {
                     let pool = self
                         .classes
@@ -312,7 +512,7 @@ impl Master {
                     self.schedule();
                 }
                 Ok(MasterMsg::TaskComplete(report)) => self.complete(report),
-                Ok(MasterMsg::Shutdown) | Err(_) => break,
+                Ok(MasterMsg::Shutdown) | Err(()) => break,
             }
         }
         for w in &self.workers {

@@ -44,6 +44,14 @@
 //!   interfering: a panic or per-node error fails only the owning query
 //!   (contained by `run_pooled`'s catch-unwind), and results are
 //!   bit-identical to a solo [`crate::exec::Engine::run_plan`].
+//! * **Fault tolerance**: a query whose failure classifies as transient
+//!   ([`Error::is_transient`] — worker panics, injected faults, comm
+//!   hiccups, deadline expiries) is re-executed up to
+//!   [`ServiceConfig::retry_max_attempts`] times with the process backoff
+//!   policy ([`crate::util::faults::retry_policy`]); deterministic plans
+//!   re-run bit-identically. [`QueryService::shutdown`] drains in-flight
+//!   work up to [`ServiceConfig::shutdown_timeout_s`], then cancels
+//!   stragglers and reports them via [`Error::Timeout`].
 //!
 //! ```no_run
 //! use radical_cylon::config::ServiceConfig;
@@ -58,23 +66,25 @@
 //! let handle = svc.submit(plan).unwrap();          // non-blocking
 //! let result = handle.join().unwrap();             // blocking
 //! println!("{} rows", result.output_rows);
-//! svc.shutdown();
+//! svc.shutdown().unwrap();
 //! ```
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, Weak};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::cluster::MachineSpec;
 use crate::config::ServiceConfig;
 use crate::df::ChunkedTable;
 use crate::error::{Error, Result};
 use crate::metrics::cache as cache_metrics;
+use crate::metrics::faults as fault_metrics;
 use crate::pilot::{Pilot, PilotDescription, Session};
 use crate::plan::{LoweredPlan, Plan};
 use crate::raptor::ReadyPolicy;
-use crate::util::pool;
+use crate::util::faults;
+use crate::util::{lock_recover, pool};
 
 /// Queue ordering when in-flight capacity frees up — the admission-side
 /// mirror of the pipeline's [`ReadyPolicy`] split.
@@ -169,7 +179,7 @@ struct QueryInner {
 impl QueryInner {
     /// Queued → Running; `false` if already terminal (canceled).
     fn begin_running(&self) -> bool {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         if st.0 != QueryState::Queued {
             return false;
         }
@@ -180,7 +190,7 @@ impl QueryInner {
 
     /// Record the terminal outcome (first writer wins).
     fn complete(&self, outcome: Outcome) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         if st.0.is_terminal() {
             return;
         }
@@ -195,7 +205,7 @@ impl QueryInner {
 
     /// Queued → Canceled (no effect once running or terminal).
     fn cancel_if_queued(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         if st.0 == QueryState::Queued {
             st.0 = QueryState::Canceled;
             st.1 = Some(Outcome::Canceled);
@@ -238,13 +248,13 @@ impl QueryHandle {
 
     /// Current lifecycle state (non-blocking).
     pub fn status(&self) -> QueryState {
-        self.inner.state.lock().unwrap().0
+        lock_recover(&self.inner.state).0
     }
 
     /// The outcome if the query is terminal, `None` while it is still
     /// queued or running (non-blocking).
     pub fn poll(&self) -> Option<Result<QueryResult>> {
-        let st = self.inner.state.lock().unwrap();
+        let st = lock_recover(&self.inner.state);
         st.1.as_ref().map(|o| self.inner.to_result(o))
     }
 
@@ -253,9 +263,37 @@ impl QueryHandle {
     /// `TaskFailed` whose message names the cancellation (check
     /// [`QueryHandle::status`] to distinguish).
     pub fn join(&self) -> Result<QueryResult> {
-        let mut st = self.inner.state.lock().unwrap();
+        let mut st = lock_recover(&self.inner.state);
         while st.1.is_none() {
-            st = self.inner.cv.wait(st).unwrap();
+            st = self.inner.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        self.inner.to_result(st.1.as_ref().expect("terminal outcome"))
+    }
+
+    /// [`QueryHandle::join`] with a deadline: block until the query is
+    /// terminal or `timeout` elapses, whichever comes first. A timeout
+    /// returns [`Error::Timeout`] and leaves the query running — call
+    /// [`QueryHandle::cancel`] to stop it, or `join_timeout` again to
+    /// keep waiting.
+    pub fn join_timeout(&self, timeout: Duration) -> Result<QueryResult> {
+        let t0 = Instant::now();
+        let mut st = lock_recover(&self.inner.state);
+        while st.1.is_none() {
+            let elapsed = t0.elapsed();
+            if elapsed >= timeout {
+                return Err(Error::Timeout(format!(
+                    "query {} still {:?} after {:.3}s",
+                    self.inner.id,
+                    st.0,
+                    timeout.as_secs_f64()
+                )));
+            }
+            let (s, _) = self
+                .inner
+                .cv
+                .wait_timeout(st, timeout - elapsed)
+                .unwrap_or_else(|e| e.into_inner());
+            st = s;
         }
         self.inner.to_result(st.1.as_ref().expect("terminal outcome"))
     }
@@ -267,7 +305,7 @@ impl QueryHandle {
     pub fn cancel(&self) {
         self.inner.cancel.store(true, Ordering::Release);
         if let Some(svc) = self.inner.svc.upgrade() {
-            let mut sched = svc.sched.lock().unwrap();
+            let mut sched = lock_recover(&svc.sched);
             if let Some(pos) = sched
                 .queue
                 .iter()
@@ -299,6 +337,10 @@ struct Sched {
     inflight_bytes: u64,
     queue: VecDeque<Queued>,
     seq: u64,
+    /// The queries executing right now (weak — an abandoned handle must
+    /// not pin the query record). Shutdown uses this to cancel
+    /// stragglers once the drain deadline expires.
+    running: Vec<(QueryId, Weak<QueryInner>)>,
 }
 
 struct PlanCache {
@@ -406,16 +448,13 @@ impl Inner {
         plan: &Plan,
         fp: &Arc<str>,
     ) -> Result<(Arc<LoweredPlan>, CacheOutcome)> {
-        if let Some(hit) = self.plan_cache.lock().unwrap().get(fp) {
+        if let Some(hit) = lock_recover(&self.plan_cache).get(fp) {
             cache_metrics::record_plan_hit();
             return Ok((hit, CacheOutcome::PlanHit));
         }
         let lowered = Arc::new(plan.lower()?);
         cache_metrics::record_plan_miss();
-        self.plan_cache
-            .lock()
-            .unwrap()
-            .insert(fp.clone(), lowered.clone());
+        lock_recover(&self.plan_cache).insert(fp.clone(), lowered.clone());
         Ok((lowered, CacheOutcome::Cold))
     }
 
@@ -470,7 +509,7 @@ fn run_query(inner: Arc<Inner>, q: Queued) {
         Outcome::Canceled
     } else {
         let t0 = Instant::now();
-        match inner.execute(&q) {
+        match execute_with_retry(&inner, &q) {
             Ok((output, output_rows)) => Outcome::Ok(QueryResult {
                 id: q.query.id,
                 output,
@@ -486,21 +525,66 @@ fn run_query(inner: Arc<Inner>, q: Queued) {
         }
     };
     if let (Outcome::Ok(r), Some(key)) = (&outcome, &q.result_key) {
-        inner.result_cache.lock().unwrap().insert(
+        lock_recover(&inner.result_cache).insert(
             key.clone(),
             r.output.clone(),
             r.output_rows,
         );
     }
     q.query.complete(outcome);
-    retire(&inner, q.est_bytes);
+    retire(&inner, q.query.id, q.est_bytes);
+}
+
+/// Query-level retry: re-execute the whole DAG on transient failure, up
+/// to `cfg.retry_max_attempts` total attempts with the process backoff
+/// policy. Cancellation is never retried (a cancel error renders as
+/// transient `TaskFailed`, so the cancel flag gates explicitly), and
+/// deterministic plans re-run bit-identically.
+fn execute_with_retry(
+    inner: &Arc<Inner>,
+    q: &Queued,
+) -> Result<(Option<Arc<ChunkedTable>>, u64)> {
+    let policy = faults::RetryPolicy {
+        max_attempts: inner.cfg.retry_max_attempts.max(1),
+        ..faults::retry_policy()
+    };
+    let mut attempt = 1u32;
+    loop {
+        match inner.execute(q) {
+            Ok(out) => {
+                if attempt > 1 {
+                    fault_metrics::record_recovered();
+                }
+                return Ok(out);
+            }
+            Err(e)
+                if e.is_transient()
+                    && attempt < policy.max_attempts
+                    && !q.query.cancel.load(Ordering::Acquire) =>
+            {
+                fault_metrics::record_retried();
+                let ms = policy.backoff_ms(attempt, q.query.id.0);
+                if ms > 0 {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                attempt += 1;
+            }
+            Err(e) => {
+                if e.is_transient() && attempt > 1 {
+                    fault_metrics::record_exhausted();
+                }
+                return Err(e);
+            }
+        }
+    }
 }
 
 /// Release an admission slot and promote queued work per policy.
-fn retire(inner: &Arc<Inner>, est_bytes: u64) {
-    let mut sched = inner.sched.lock().unwrap();
+fn retire(inner: &Arc<Inner>, id: QueryId, est_bytes: u64) {
+    let mut sched = lock_recover(&inner.sched);
     sched.inflight -= 1;
     sched.inflight_bytes -= est_bytes;
+    sched.running.retain(|(qid, _)| *qid != id);
     promote_locked(inner, &mut sched);
     if sched.inflight == 0 {
         inner.idle_cv.notify_all();
@@ -532,6 +616,7 @@ fn promote_locked(inner: &Arc<Inner>, sched: &mut Sched) {
         let q = sched.queue.remove(idx).expect("index just found");
         sched.inflight += 1;
         sched.inflight_bytes += q.est_bytes;
+        sched.running.push((q.query.id, Arc::downgrade(&q.query)));
         spawn_query(inner.clone(), q);
     }
 }
@@ -563,6 +648,7 @@ impl QueryService {
                     inflight_bytes: 0,
                     queue: VecDeque::new(),
                     seq: 0,
+                    running: Vec::new(),
                 }),
                 idle_cv: Condvar::new(),
                 plan_cache: Mutex::new(PlanCache {
@@ -591,12 +677,12 @@ impl QueryService {
 
     /// Queries executing right now (diagnostic).
     pub fn inflight(&self) -> usize {
-        self.inner.sched.lock().unwrap().inflight
+        lock_recover(&self.inner.sched).inflight
     }
 
     /// Queries waiting for admission (diagnostic).
     pub fn queue_len(&self) -> usize {
-        self.inner.sched.lock().unwrap().queue.len()
+        lock_recover(&self.inner.sched).queue.len()
     }
 
     /// Submit a plan for execution. Non-blocking: returns a
@@ -634,7 +720,7 @@ impl QueryService {
         });
         if cacheable {
             if let Some((output, rows)) =
-                inner.result_cache.lock().unwrap().get(&fp)
+                lock_recover(&inner.result_cache).get(&fp)
             {
                 cache_metrics::record_result_hit();
                 query.complete(Outcome::Ok(QueryResult {
@@ -650,7 +736,7 @@ impl QueryService {
             cache_metrics::record_result_miss();
         }
 
-        let mut sched = inner.sched.lock().unwrap();
+        let mut sched = lock_recover(&inner.sched);
         let q = Queued {
             query: query.clone(),
             lowered,
@@ -666,6 +752,7 @@ impl QueryService {
         {
             sched.inflight += 1;
             sched.inflight_bytes += est_bytes;
+            sched.running.push((q.query.id, Arc::downgrade(&q.query)));
             drop(sched);
             spawn_query(inner.clone(), q);
         } else if sched.queue.len() < inner.cfg.queue_depth {
@@ -688,35 +775,99 @@ impl QueryService {
 
     /// Block until no query is in flight and the queue is empty.
     pub fn drain(&self) {
-        let mut sched = self.inner.sched.lock().unwrap();
+        let mut sched = lock_recover(&self.inner.sched);
         while sched.inflight > 0 || !sched.queue.is_empty() {
-            sched = self.inner.idle_cv.wait(sched).unwrap();
+            sched = self.inner.idle_cv.wait(sched).unwrap_or_else(|e| e.into_inner());
         }
     }
 
     /// Close admission, cancel queued work, drain in-flight queries,
     /// and release the pilot. Idempotent; concurrent and subsequent
     /// [`QueryService::submit`] calls get [`Error::Admission`].
-    pub fn shutdown(&self) {
+    ///
+    /// With [`ServiceConfig::shutdown_timeout_s`] `> 0` the drain is
+    /// bounded: queries still in flight when the deadline expires are
+    /// canceled (they stop at their next DAG-node boundary) and given
+    /// one more window of the same length to unwind, and the call
+    /// returns [`Error::Timeout`] naming the stragglers. The pilot is
+    /// released only once the pool is actually quiet — if a straggler
+    /// outlives even the grace window it is left running (detached) so
+    /// shutdown can never hang. `0` (the default) waits forever, the
+    /// pre-deadline behavior.
+    pub fn shutdown(&self) -> Result<()> {
         let inner = &self.inner;
         if inner.closed.swap(true, Ordering::AcqRel) {
-            return;
+            return Ok(());
         }
-        let mut sched = inner.sched.lock().unwrap();
+        let mut sched = lock_recover(&inner.sched);
         for q in sched.queue.drain(..) {
             q.query.cancel_if_queued();
         }
-        while sched.inflight > 0 {
-            sched = inner.idle_cv.wait(sched).unwrap();
+        let Some(t) = inner.cfg.shutdown_timeout() else {
+            while sched.inflight > 0 {
+                sched =
+                    inner.idle_cv.wait(sched).unwrap_or_else(|e| e.into_inner());
+            }
+            drop(sched);
+            inner.pilot.shutdown();
+            return Ok(());
+        };
+        let t0 = Instant::now();
+        while sched.inflight > 0 && t0.elapsed() < t {
+            let (s, _) = inner
+                .idle_cv
+                .wait_timeout(sched, t - t0.elapsed())
+                .unwrap_or_else(|e| e.into_inner());
+            sched = s;
         }
+        if sched.inflight == 0 {
+            drop(sched);
+            inner.pilot.shutdown();
+            return Ok(());
+        }
+        // Deadline blown: cancel every straggler, then grant one grace
+        // window of the same length for them to reach a node boundary
+        // and unwind.
+        let mut stragglers = Vec::new();
+        for (id, w) in &sched.running {
+            if let Some(q) = w.upgrade() {
+                q.cancel.store(true, Ordering::Release);
+            }
+            stragglers.push(id.to_string());
+        }
+        let t1 = Instant::now();
+        while sched.inflight > 0 && t1.elapsed() < t {
+            let (s, _) = inner
+                .idle_cv
+                .wait_timeout(sched, t - t1.elapsed())
+                .unwrap_or_else(|e| e.into_inner());
+            sched = s;
+        }
+        let drained = sched.inflight == 0;
         drop(sched);
-        inner.pilot.shutdown();
+        if drained {
+            inner.pilot.shutdown();
+        }
+        Err(Error::Timeout(format!(
+            "service shutdown drain deadline ({:.3}s) expired with {} \
+             in flight [{}]; stragglers canceled{}",
+            t.as_secs_f64(),
+            stragglers.len(),
+            stragglers.join(", "),
+            if drained {
+                " and since unwound"
+            } else {
+                "; pilot left running (detached)"
+            },
+        )))
     }
 }
 
 impl Drop for QueryService {
     fn drop(&mut self) {
-        self.shutdown();
+        // A drain-deadline expiry during drop has nowhere to report; the
+        // straggler queries were still canceled and detached.
+        let _ = self.shutdown();
     }
 }
 
@@ -757,7 +908,7 @@ mod tests {
             r.output.unwrap().multiset_fingerprint(),
             solo.output.unwrap().multiset_fingerprint()
         );
-        svc.shutdown();
+        svc.shutdown().unwrap();
     }
 
     #[test]
@@ -771,7 +922,7 @@ mod tests {
         assert!(r.output_rows > 0);
         assert!(h.poll().unwrap().is_ok());
         assert_eq!(h.status(), QueryState::Done);
-        svc.shutdown();
+        svc.shutdown().unwrap();
     }
 
     #[test]
@@ -789,7 +940,7 @@ mod tests {
         let d = cache_metrics::snapshot().since(before);
         assert!(d.result_hits >= 1, "{d:?}");
         assert!(d.result_misses >= 1, "{d:?}");
-        svc.shutdown();
+        svc.shutdown().unwrap();
     }
 
     #[test]
@@ -798,14 +949,14 @@ mod tests {
         let wide = Plan::generate(8, GenSpec::uniform(10, 8, 0)).collect();
         let err = svc.submit(wide).unwrap_err();
         assert!(matches!(err, Error::Admission(_)), "{err}");
-        svc.shutdown();
+        svc.shutdown().unwrap();
     }
 
     #[test]
     fn shutdown_is_idempotent_and_closes_admission() {
         let svc = QueryService::start(small_cfg()).unwrap();
-        svc.shutdown();
-        svc.shutdown();
+        svc.shutdown().unwrap();
+        svc.shutdown().unwrap();
         let err = svc.submit(sorted_plan(10, 0)).unwrap_err();
         assert!(matches!(err, Error::Admission(_)), "{err}");
     }
@@ -828,7 +979,128 @@ mod tests {
         // not — the file is external mutable state).
         assert_ne!(b.cache, CacheOutcome::ResultHit);
         assert_eq!(a.output_rows, b.output_rows);
-        svc.shutdown();
+        svc.shutdown().unwrap();
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn transient_query_failure_retries_and_recovers() {
+        use crate::util::faults::{FaultPlan, FireMode};
+        let _g = faults::test_guard();
+        // The first "svcretry" job fails (counted @1 trigger — names that
+        // don't match the filter don't advance the count); the query-level
+        // re-execution passes.
+        faults::arm(
+            FaultPlan::new(21)
+                .with_arm("pool.job", FireMode::Nth(1))
+                .with_only("svcretry"),
+        );
+        let svc = QueryService::start(ServiceConfig {
+            retry_max_attempts: 3,
+            ..small_cfg()
+        })
+        .unwrap();
+        let before = crate::metrics::faults::snapshot();
+        let plan = Plan::generate(2, GenSpec::uniform(400, 400, 5))
+            .sort("key")
+            .collect()
+            .named("svcretry-sort");
+        let r = svc.run(plan).unwrap();
+        assert!(r.output_rows > 0);
+        let d = crate::metrics::faults::snapshot().since(before);
+        assert!(d.injected >= 1, "{d:?}");
+        assert!(d.retried >= 1, "{d:?}");
+        assert!(d.recovered >= 1, "{d:?}");
+        // The recovered result is bit-identical to a clean solo run.
+        faults::disarm();
+        let clean = svc
+            .run(
+                Plan::generate(2, GenSpec::uniform(400, 400, 5))
+                    .sort("key")
+                    .collect()
+                    .named("clean-twin-sort"),
+            )
+            .unwrap();
+        assert_eq!(
+            r.output.unwrap().multiset_fingerprint(),
+            clean.output.unwrap().multiset_fingerprint()
+        );
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn retry_disabled_surfaces_the_transient_error() {
+        use crate::util::faults::{FaultPlan, FireMode};
+        let _g = faults::test_guard();
+        faults::arm(
+            FaultPlan::new(22)
+                .with_arm("agent.task", FireMode::Prob(1.0))
+                .with_only("svcnoretry"),
+        );
+        let svc = QueryService::start(small_cfg()).unwrap();
+        let plan = Plan::generate(2, GenSpec::uniform(100, 100, 1))
+            .collect()
+            .named("svcnoretry-gen");
+        let err = svc.run(plan).unwrap_err();
+        assert!(err.to_string().contains("injected fault"), "{err}");
+        faults::disarm();
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn join_timeout_times_out_then_joins() {
+        use crate::util::faults::{FaultPlan, FireMode};
+        let _g = faults::test_guard();
+        // Slow the query down (~200ms) so the first join_timeout expires.
+        faults::arm(
+            FaultPlan::new(23)
+                .with_arm("agent.task", FireMode::Prob(1.0))
+                .with_delay_ms(200)
+                .with_only("svcslow"),
+        );
+        let svc = QueryService::start(small_cfg()).unwrap();
+        let plan = Plan::generate(2, GenSpec::uniform(100, 100, 2))
+            .collect()
+            .named("svcslow-gen");
+        let h = svc.submit(plan).unwrap();
+        let err = h.join_timeout(Duration::from_millis(10)).unwrap_err();
+        assert!(matches!(err, Error::Timeout(_)), "{err}");
+        assert!(err.is_transient(), "a join timeout is retryable");
+        let r = h.join_timeout(Duration::from_secs(30)).unwrap();
+        assert!(r.output_rows > 0);
+        faults::disarm();
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn shutdown_deadline_cancels_stragglers() {
+        use crate::util::faults::{FaultPlan, FireMode};
+        let _g = faults::test_guard();
+        // The "svcdrain" source dawdles 150ms but the drain deadline is
+        // 30ms, so shutdown must cancel the query (it stops at the next
+        // node boundary, before the sort) and report it by id.
+        faults::arm(
+            FaultPlan::new(24)
+                .with_arm("agent.task", FireMode::Prob(1.0))
+                .with_delay_ms(150)
+                .with_only("svcdrain"),
+        );
+        let svc = QueryService::start(ServiceConfig {
+            shutdown_timeout_s: 0.03,
+            ..small_cfg()
+        })
+        .unwrap();
+        let plan = Plan::generate(2, GenSpec::uniform(100, 100, 3))
+            .named("svcdrain-gen")
+            .sort("key")
+            .collect();
+        let h = svc.submit(plan).unwrap();
+        let err = svc.shutdown().unwrap_err();
+        assert!(matches!(err, Error::Timeout(_)), "{err}");
+        assert!(err.to_string().contains(&h.id().to_string()), "{err}");
+        // The canceled straggler still reaches a terminal state.
+        let joined = h.join();
+        assert!(joined.is_err(), "canceled or failed, never Ok");
+        faults::disarm();
     }
 }

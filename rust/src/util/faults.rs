@@ -1,0 +1,720 @@
+//! Deterministic fault injection + retry policy — the chaos substrate
+//! behind the fault-tolerance layer (ARCHITECTURE.md §Fault tolerance).
+//!
+//! A seeded [`FaultPlan`] arms **named injection sites** compiled into the
+//! runtime's seams. When no plan is armed the per-site check is a single
+//! relaxed atomic load — effectively free (gated by the `fault-inject`
+//! rows in `BENCH_kernels.json`). Sites:
+//!
+//! | site            | where it fires | semantics |
+//! |-----------------|----------------|-----------|
+//! | `agent.task`    | task entry in the raptor executor | keyed by (task name, attempt) — identical decision on every rank of the task |
+//! | `op.execute`    | around `Operator::execute`        | keyed by (task name, attempt) |
+//! | `comm.alltoall` | entry of `Communicator::alltoall_with` | keyed by (ctx, tag): symmetric across the group |
+//! | `comm.send`     | `send`/`recv` entry               | keyed by ctx: the *whole* private channel fails — every rank panics at its first point-to-point touch, so no peer is ever left blocking on a message that will never arrive |
+//! | `pool.job`      | entry of each pooled pipeline node job (`Pipeline::run_pooled`) | trigger-counted |
+//!
+//! Keyed sites decide from `(seed, site, key)` alone — no shared counter —
+//! which is what keeps collective-adjacent injections *symmetric*: every
+//! rank of a task fails (or survives) together, so a fault can never
+//! deadlock the surviving peers of a collective. (`comm.send` keys on the
+//! communicator context rather than the individual message for the same
+//! reason: a single dropped point-to-point message would strand third
+//! ranks of the group that were waiting on the panicked pair's *other*
+//! traffic; failing the whole channel keeps every rank's first p2p touch
+//! the failure point.) On top of the keying, a fired comm fault
+//! *poisons* the communicator context before panicking — any rank
+//! already blocked on that context wakes and panics too — so comm faults
+//! can never hang a group whatever its traffic pattern.
+//! Trigger-counted sites (`pool.job`) use a per-arm
+//! atomic counter instead — they sit above the collective layer where
+//! asymmetry is already contained.
+//!
+//! Per-arm semantics, configured via the `[faults]` INI section or the
+//! `RC_FAULTS` env var (comma-separated `key=value` spec, same grammar):
+//!
+//! ```text
+//! seed = 42                   # decision stream seed
+//! agent.task = 0.25           # fail with probability 0.25 per decision
+//! pool.job = @3               # fire exactly on the 3rd trigger
+//! op.execute.delay_ms = 50    # inject latency instead of failure
+//! agent.task.only = chaosq    # restrict to task names with this prefix
+//! ```
+//!
+//! On a keyed site `@N` fires for the deterministic 1-in-N subset of keys
+//! (there is no global trigger order across ranks to count). The `only`
+//! name filter applies to the task-name sites (`agent.task`,
+//! `op.execute`); it lets a test arm the process-global plan without
+//! perturbing unrelated concurrent work.
+//!
+//! [`RetryPolicy`] is the consumer side: capped exponential backoff with
+//! deterministic jitter, used at the pipeline-node boundary
+//! (`Pipeline::run_dataflow`/`run_pooled`) and at the query level
+//! (`service::QueryService`). Process defaults come from `[faults]`
+//! `retry_max_attempts`/`retry_base_ms` (env `RC_RETRY_MAX` /
+//! `RC_RETRY_BASE_MS`); the built-in default is 1 attempt — no retry, and
+//! byte-identical behaviour to the pre-fault-tolerance build.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Once};
+
+use crate::error::{Error, Result};
+use crate::metrics;
+
+use super::hash::splitmix64;
+
+/// The injection sites compiled into the runtime. Arming any other name
+/// is rejected at parse time (typo protection).
+pub const SITES: &[&str] =
+    &["agent.task", "op.execute", "comm.alltoall", "comm.send", "pool.job"];
+
+/// When an armed site fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FireMode {
+    /// Fire with this probability per decision.
+    Prob(f64),
+    /// Fire exactly on the Nth trigger (1-based) of a counted site; on a
+    /// keyed site, fire for the deterministic 1-in-N subset of keys.
+    Nth(u64),
+}
+
+/// One armed site.
+#[derive(Debug)]
+pub struct Arm {
+    pub site: String,
+    pub mode: FireMode,
+    /// `> 0`: inject this much latency instead of failing.
+    pub delay_ms: u64,
+    /// Restrict to task names with this prefix (task-name sites only).
+    pub only: Option<String>,
+    count: AtomicU64,
+}
+
+/// A seeded set of armed sites. Decisions are pure functions of
+/// `(seed, site, key-or-trigger)`, so the same plan over the same
+/// workload injects the same faults — the property the chaos suite's
+/// oracle comparison rests on.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub arms: Vec<Arm>,
+}
+
+fn str_hash(s: &str) -> u64 {
+    s.bytes().fold(0xFA17u64, |h, b| splitmix64(h ^ b as u64))
+}
+
+/// Decision key for the task-name sites (`agent.task`, `op.execute`):
+/// every rank of a task computes the same key, and the retry layer's
+/// attempt bump re-draws the decision on each re-submission. The site
+/// name is mixed into the draw separately, so both sites decide
+/// independently from the same key.
+pub fn task_key(name: &str, attempt: u32) -> u64 {
+    splitmix64(str_hash(name) ^ (attempt as u64).rotate_left(32))
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, arms: Vec::new() }
+    }
+
+    /// Arm `site` with the given mode (builder-style; panics on unknown
+    /// site names — config parsing returns typed errors instead).
+    pub fn with_arm(mut self, site: &str, mode: FireMode) -> FaultPlan {
+        assert!(SITES.contains(&site), "unknown fault site '{site}'");
+        self.arms.push(Arm {
+            site: site.to_string(),
+            mode,
+            delay_ms: 0,
+            only: None,
+            count: AtomicU64::new(0),
+        });
+        self
+    }
+
+    /// Turn the most recently added arm into a latency injection.
+    pub fn with_delay_ms(mut self, ms: u64) -> FaultPlan {
+        self.arms.last_mut().expect("with_delay_ms before any arm").delay_ms =
+            ms;
+        self
+    }
+
+    /// Restrict the most recently added arm to task names with `prefix`.
+    pub fn with_only(mut self, prefix: &str) -> FaultPlan {
+        self.arms.last_mut().expect("with_only before any arm").only =
+            Some(prefix.to_string());
+        self
+    }
+
+    /// Parse the `key=value` spec grammar (shared by `RC_FAULTS` and the
+    /// `[faults]` INI section — see the module docs for the grammar).
+    pub fn parse_spec(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::new(0xC4A05);
+        for item in spec.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let Some((key, value)) = item.split_once('=') else {
+                return Err(Error::Config(format!(
+                    "fault spec item '{item}' is not key=value"
+                )));
+            };
+            plan.apply_key(key.trim(), value.trim())?;
+        }
+        Ok(plan)
+    }
+
+    /// Apply one `key = value` pair (also the `[faults]` INI entry point;
+    /// `retry_*`/`task_deadline_s` keys are handled by the config layer,
+    /// not here).
+    pub fn apply_key(&mut self, key: &str, value: &str) -> Result<()> {
+        let bad = |what: &str| {
+            Error::Config(format!("fault key '{key}': bad {what} '{value}'"))
+        };
+        if key == "seed" {
+            self.seed = value.parse().map_err(|_| bad("seed"))?;
+            return Ok(());
+        }
+        if let Some(site) = key.strip_suffix(".delay_ms") {
+            let ms: u64 = value.parse().map_err(|_| bad("delay"))?;
+            self.arm_entry(site)?.delay_ms = ms;
+            return Ok(());
+        }
+        if let Some(site) = key.strip_suffix(".only") {
+            self.arm_entry(site)?.only = Some(value.to_string());
+            return Ok(());
+        }
+        let mode = if let Some(n) = value.strip_prefix('@') {
+            let n: u64 = n.parse().map_err(|_| bad("@N trigger"))?;
+            if n == 0 {
+                return Err(bad("@N trigger (must be >= 1)"));
+            }
+            FireMode::Nth(n)
+        } else {
+            let p: f64 = value.parse().map_err(|_| bad("probability"))?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(bad("probability (want [0,1])"));
+            }
+            FireMode::Prob(p)
+        };
+        self.arm_entry(key)?.mode = mode;
+        Ok(())
+    }
+
+    fn arm_entry(&mut self, site: &str) -> Result<&mut Arm> {
+        if !SITES.contains(&site) {
+            return Err(Error::Config(format!(
+                "unknown fault site '{site}' (known: {})",
+                SITES.join(", ")
+            )));
+        }
+        if let Some(i) = self.arms.iter().position(|a| a.site == site) {
+            return Ok(&mut self.arms[i]);
+        }
+        self.arms.push(Arm {
+            site: site.to_string(),
+            // A site first mentioned via `.delay_ms`/`.only` defaults to
+            // firing always; a base `site = <mode>` key overwrites this.
+            mode: FireMode::Prob(1.0),
+            delay_ms: 0,
+            only: None,
+            count: AtomicU64::new(0),
+        });
+        Ok(self.arms.last_mut().unwrap())
+    }
+
+    /// Decide whether `site` fires for `trigger` (a symmetric key on keyed
+    /// sites, a 0-based trigger index on counted sites).
+    fn fires(&self, arm: &Arm, trigger: u64, keyed: bool) -> bool {
+        let draw = splitmix64(
+            self.seed ^ str_hash(&arm.site).rotate_left(17) ^ trigger,
+        );
+        match arm.mode {
+            FireMode::Prob(p) => {
+                ((draw >> 11) as f64 * (1.0 / (1u64 << 53) as f64)) < p
+            }
+            FireMode::Nth(n) if keyed => draw % n == 0,
+            FireMode::Nth(n) => trigger + 1 == n,
+        }
+    }
+
+    fn check(&self, site: &str, trigger: impl Fn(&Arm) -> (u64, bool), name: &str) -> Option<u64> {
+        for arm in self.arms.iter().filter(|a| a.site == site) {
+            if let Some(prefix) = &arm.only {
+                if !name.starts_with(prefix.as_str()) {
+                    continue;
+                }
+            }
+            let (t, keyed) = trigger(arm);
+            if self.fires(arm, t, keyed) {
+                return Some(arm.delay_ms);
+            }
+        }
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-global arming.
+//
+// `ARMED` is the fast-path gate: when false (the default), every inject
+// call is one relaxed load + branch. The plan itself lives behind a
+// mutex so tests can arm/disarm repeatedly; the mutex is only touched
+// when armed. `ENV_INIT` reads `RC_FAULTS` (and the retry/deadline env
+// knobs) exactly once, on the first inject/retry-policy call.
+// ---------------------------------------------------------------------------
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<Arc<FaultPlan>>> = Mutex::new(None);
+static ENV_INIT: Once = Once::new();
+
+static RETRY_MAX: AtomicU64 = AtomicU64::new(1);
+static RETRY_BASE_MS: AtomicU64 = AtomicU64::new(10);
+static RETRY_CAP_MS: AtomicU64 = AtomicU64::new(500);
+static RETRY_SEED: AtomicU64 = AtomicU64::new(0x9E37);
+/// Default per-task deadline in milliseconds; 0 = none.
+static DEADLINE_MS: AtomicU64 = AtomicU64::new(0);
+
+fn env_init() {
+    ENV_INIT.call_once(|| {
+        if let Ok(spec) = std::env::var("RC_FAULTS") {
+            if !spec.is_empty() {
+                match FaultPlan::parse_spec(&spec) {
+                    Ok(plan) => arm(plan),
+                    Err(e) => eprintln!("ignoring bad RC_FAULTS: {e}"),
+                }
+            }
+        }
+        let env_u64 = |k: &str| -> Option<u64> {
+            std::env::var(k).ok().and_then(|v| v.parse().ok())
+        };
+        if let Some(n) = env_u64("RC_RETRY_MAX") {
+            RETRY_MAX.store(n.max(1), Ordering::Relaxed);
+        }
+        if let Some(ms) = env_u64("RC_RETRY_BASE_MS") {
+            RETRY_BASE_MS.store(ms, Ordering::Relaxed);
+        }
+        if let Some(s) = std::env::var("RC_TASK_DEADLINE_S")
+            .ok()
+            .and_then(|v| v.parse::<f64>().ok())
+        {
+            if s > 0.0 {
+                DEADLINE_MS.store((s * 1e3) as u64, Ordering::Relaxed);
+            }
+        }
+    });
+}
+
+static TEST_GUARD: Mutex<()> = Mutex::new(());
+
+/// Serialize tests that arm/disarm the process-global plan: hold the
+/// returned guard for the whole armed section. Production code never
+/// needs this — arming is a test/chaos-harness operation.
+pub fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    lock_recover(&TEST_GUARD)
+}
+
+/// Arm `plan` process-wide (replacing any armed plan). Tests that arm and
+/// disarm must serialize with each other (see [`test_guard`]) — the plan
+/// is global state.
+pub fn arm(plan: FaultPlan) {
+    let mut slot = lock_recover(&PLAN);
+    *slot = Some(Arc::new(plan));
+    ARMED.store(true, Ordering::Release);
+}
+
+/// Disarm: every site reverts to the free no-op path.
+pub fn disarm() {
+    ARMED.store(false, Ordering::Release);
+    *lock_recover(&PLAN) = None;
+}
+
+/// Is a fault plan currently armed?
+pub fn armed() -> bool {
+    env_init();
+    ARMED.load(Ordering::Relaxed)
+}
+
+fn current_plan() -> Option<Arc<FaultPlan>> {
+    lock_recover(&PLAN).clone()
+}
+
+/// Lock a mutex, recovering the guard from a poisoned lock. Used on
+/// shared state whose invariants hold at every await-free lock release
+/// (counters, queues with external latches, state machines) — a tenant
+/// panicking while holding such a lock must not wedge every other tenant
+/// behind a `PoisonError`.
+pub fn lock_recover<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[inline]
+fn fault_err(site: &str, name: &str) -> Error {
+    if name.is_empty() {
+        Error::TaskFailed(format!("injected fault at {site}"))
+    } else {
+        Error::TaskFailed(format!("injected fault at {site} in '{name}'"))
+    }
+}
+
+fn apply(delay_ms: u64, site: &str, name: &str) -> Result<()> {
+    metrics::faults::record_injected();
+    if delay_ms > 0 {
+        std::thread::sleep(std::time::Duration::from_millis(delay_ms));
+        return Ok(());
+    }
+    Err(fault_err(site, name))
+}
+
+/// Trigger-counted injection (e.g. `pool.job`). Free when unarmed.
+#[inline]
+pub fn inject(site: &str, name: &str) -> Result<()> {
+    if !armed() {
+        return Ok(());
+    }
+    inject_slow(site, None, name)
+}
+
+/// Keyed injection: the decision is a pure function of the armed plan and
+/// `key`, so every caller presenting the same key — every rank of a task,
+/// both endpoints of a send — reaches the same verdict. Free when
+/// unarmed.
+#[inline]
+pub fn inject_keyed(site: &str, key: u64, name: &str) -> Result<()> {
+    if !armed() {
+        return Ok(());
+    }
+    inject_slow(site, Some(key), name)
+}
+
+#[cold]
+fn inject_slow(site: &str, key: Option<u64>, name: &str) -> Result<()> {
+    let Some(plan) = current_plan() else { return Ok(()) };
+    let delay = plan.check(
+        site,
+        |arm| match key {
+            Some(k) => (k, true),
+            None => (arm.count.fetch_add(1, Ordering::Relaxed), false),
+        },
+        name,
+    );
+    match delay {
+        Some(ms) => apply(ms, site, name),
+        None => Ok(()),
+    }
+}
+
+/// Comm-layer check. The communicator's `send`/`recv`/`alltoall` return
+/// values, not `Result`s, so a fired failure there propagates by
+/// **panic** — but the communicator must first poison the faulted context
+/// so every peer blocked on it wakes and panics too (no rank is ever left
+/// waiting on a message that will never arrive). This hook therefore only
+/// renders the verdict; the caller applies it:
+///
+/// * `None` — no fault; proceed.
+/// * `Some(0)` — fail: poison the context, then panic.
+/// * `Some(ms)` — latency arm: sleep `ms` on the initiating side.
+///
+/// Records the injection counter on every `Some`. Free when unarmed.
+#[inline]
+pub fn comm_verdict(site: &str, key: u64) -> Option<u64> {
+    if !armed() {
+        return None;
+    }
+    comm_verdict_slow(site, key)
+}
+
+#[cold]
+fn comm_verdict_slow(site: &str, key: u64) -> Option<u64> {
+    let plan = current_plan()?;
+    let delay_ms = plan.check(site, |_| (key, true), "")?;
+    metrics::faults::record_injected();
+    Some(delay_ms)
+}
+
+/// Default per-task deadline the raptor master applies when a
+/// `TaskDescription` carries none. Configured via `[faults]`
+/// `task_deadline_s` or `RC_TASK_DEADLINE_S`; `None` by default.
+pub fn default_deadline() -> Option<std::time::Duration> {
+    env_init();
+    match DEADLINE_MS.load(Ordering::Relaxed) {
+        0 => None,
+        ms => Some(std::time::Duration::from_millis(ms)),
+    }
+}
+
+/// Set the process-default task deadline (0 or negative clears it).
+pub fn configure_deadline(seconds: f64) {
+    env_init();
+    let ms = if seconds > 0.0 { (seconds * 1e3) as u64 } else { 0 };
+    DEADLINE_MS.store(ms, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Retry policy
+// ---------------------------------------------------------------------------
+
+/// Bounded retry with capped exponential backoff and deterministic
+/// jitter. `max_attempts = 1` means "no retry" — the default, keeping
+/// un-configured builds byte-identical to the pre-retry executor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (>= 1).
+    pub max_attempts: u32,
+    /// Backoff before attempt 2, doubling per attempt.
+    pub base_ms: u64,
+    /// Backoff ceiling.
+    pub cap_ms: u64,
+    /// Jitter stream seed.
+    pub seed: u64,
+}
+
+impl RetryPolicy {
+    /// Single attempt, no retry.
+    pub fn none() -> RetryPolicy {
+        RetryPolicy { max_attempts: 1, base_ms: 0, cap_ms: 0, seed: 0 }
+    }
+
+    pub fn new(max_attempts: u32, base_ms: u64) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: max_attempts.max(1),
+            base_ms,
+            cap_ms: 500,
+            seed: 0x9E37,
+        }
+    }
+
+    /// Backoff before attempt `attempt + 1` (attempts are 1-based):
+    /// `base * 2^(attempt-1)` capped at `cap_ms`, jittered to
+    /// `[half, full]` by a draw that is a pure function of
+    /// `(seed, key, attempt)` — deterministic, but decorrelated across
+    /// tasks so retry storms do not synchronize.
+    pub fn backoff_ms(&self, attempt: u32, key: u64) -> u64 {
+        if self.base_ms == 0 {
+            return 0;
+        }
+        let exp = self
+            .base_ms
+            .saturating_mul(1u64 << (attempt.saturating_sub(1)).min(16))
+            .min(self.cap_ms.max(self.base_ms));
+        let half = exp / 2;
+        let span = exp - half + 1;
+        let draw = splitmix64(self.seed ^ splitmix64(key) ^ attempt as u64);
+        half + draw % span
+    }
+
+    /// Run `f(attempt)` (1-based) until it succeeds, exhausts
+    /// `max_attempts`, or fails permanently ([`Error::is_transient`] is
+    /// the gate). Sleeps `backoff_ms` between attempts and keeps the
+    /// `metrics::faults` retried/recovered/exhausted counters.
+    pub fn run<T>(
+        &self,
+        key: u64,
+        mut f: impl FnMut(u32) -> Result<T>,
+    ) -> Result<T> {
+        let mut attempt = 1u32;
+        loop {
+            match f(attempt) {
+                Ok(v) => {
+                    if attempt > 1 {
+                        metrics::faults::record_recovered();
+                    }
+                    return Ok(v);
+                }
+                Err(e) if e.is_transient() && attempt < self.max_attempts => {
+                    metrics::faults::record_retried();
+                    let ms = self.backoff_ms(attempt, key);
+                    if ms > 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(
+                            ms,
+                        ));
+                    }
+                    attempt += 1;
+                }
+                Err(e) => {
+                    if e.is_transient() && attempt > 1 {
+                        metrics::faults::record_exhausted();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+    }
+}
+
+/// The process-default retry policy used at the pipeline-node boundary.
+/// Configured via [`configure_retry`], `[faults]` retry keys, or env
+/// (`RC_RETRY_MAX`, `RC_RETRY_BASE_MS`); defaults to no retry.
+pub fn retry_policy() -> RetryPolicy {
+    env_init();
+    RetryPolicy {
+        max_attempts: RETRY_MAX.load(Ordering::Relaxed) as u32,
+        base_ms: RETRY_BASE_MS.load(Ordering::Relaxed),
+        cap_ms: RETRY_CAP_MS.load(Ordering::Relaxed),
+        seed: RETRY_SEED.load(Ordering::Relaxed),
+    }
+}
+
+/// Install `policy` as the process default.
+pub fn configure_retry(policy: RetryPolicy) {
+    env_init();
+    RETRY_MAX.store(policy.max_attempts.max(1) as u64, Ordering::Relaxed);
+    RETRY_BASE_MS.store(policy.base_ms, Ordering::Relaxed);
+    RETRY_CAP_MS.store(policy.cap_ms, Ordering::Relaxed);
+    RETRY_SEED.store(policy.seed, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_spec_grammar() {
+        let p = FaultPlan::parse_spec(
+            "seed=7, agent.task=0.5, pool.job=@3, \
+             op.execute.delay_ms=20, agent.task.only=chaos",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 7);
+        let task = p.arms.iter().find(|a| a.site == "agent.task").unwrap();
+        assert_eq!(task.mode, FireMode::Prob(0.5));
+        assert_eq!(task.only.as_deref(), Some("chaos"));
+        let job = p.arms.iter().find(|a| a.site == "pool.job").unwrap();
+        assert_eq!(job.mode, FireMode::Nth(3));
+        let op = p.arms.iter().find(|a| a.site == "op.execute").unwrap();
+        assert_eq!(op.delay_ms, 20);
+        assert_eq!(op.mode, FireMode::Prob(1.0)); // delay-only arm fires always
+    }
+
+    #[test]
+    fn parse_spec_rejects_nonsense() {
+        for bad in [
+            "nope.site=0.5",
+            "agent.task=1.5",
+            "agent.task=-0.1",
+            "pool.job=@0",
+            "agent.task",
+            "seed=zebra",
+        ] {
+            assert!(
+                FaultPlan::parse_spec(bad).is_err(),
+                "'{bad}' should be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn keyed_decisions_are_deterministic_and_symmetric() {
+        let plan = FaultPlan::new(42).with_arm("agent.task", FireMode::Prob(0.5));
+        let again = FaultPlan::new(42).with_arm("agent.task", FireMode::Prob(0.5));
+        let mut fired = 0;
+        for key in 0..200u64 {
+            let a = plan.check("agent.task", |_| (key, true), "t").is_some();
+            let b = again.check("agent.task", |_| (key, true), "t").is_some();
+            assert_eq!(a, b, "same plan+key must decide identically");
+            fired += a as u32;
+        }
+        // ~50% of keys fire; the draw is uniform.
+        assert!((60..140).contains(&fired), "{fired}");
+        // A different seed gives a different subset.
+        let other = FaultPlan::new(43).with_arm("agent.task", FireMode::Prob(0.5));
+        let differs = (0..200u64).any(|key| {
+            plan.check("agent.task", |_| (key, true), "t").is_some()
+                != other.check("agent.task", |_| (key, true), "t").is_some()
+        });
+        assert!(differs);
+    }
+
+    #[test]
+    fn nth_counted_fires_exactly_once() {
+        let plan = FaultPlan::new(1).with_arm("pool.job", FireMode::Nth(3));
+        let arm = &plan.arms[0];
+        let fires: Vec<bool> = (0..6)
+            .map(|_| {
+                let t = arm.count.fetch_add(1, Ordering::Relaxed);
+                plan.fires(arm, t, false)
+            })
+            .collect();
+        assert_eq!(fires, vec![false, false, true, false, false, false]);
+    }
+
+    #[test]
+    fn only_filter_scopes_by_name() {
+        let plan = FaultPlan::new(9)
+            .with_arm("agent.task", FireMode::Prob(1.0))
+            .with_only("chaos");
+        assert!(plan.check("agent.task", |_| (1, true), "chaos-sort").is_some());
+        assert!(plan.check("agent.task", |_| (1, true), "normal").is_none());
+    }
+
+    #[test]
+    fn arm_disarm_round_trip() {
+        let _guard = test_guard();
+        assert!(inject_keyed("agent.task", 5, "t").is_ok());
+        arm(FaultPlan::new(2).with_arm("agent.task", FireMode::Prob(1.0)));
+        let err = inject_keyed("agent.task", 5, "t").unwrap_err();
+        assert!(err.is_transient());
+        assert!(err.to_string().contains("agent.task"), "{err}");
+        disarm();
+        assert!(inject_keyed("agent.task", 5, "t").is_ok());
+    }
+
+    #[test]
+    fn retry_recovers_then_exhausts() {
+        let policy = RetryPolicy { max_attempts: 3, base_ms: 0, cap_ms: 0, seed: 1 };
+        // Fails twice, succeeds on the 3rd attempt.
+        let mut calls = 0;
+        let out = policy.run(7, |attempt| {
+            calls += 1;
+            if attempt < 3 {
+                Err(Error::TaskFailed("flaky".into()))
+            } else {
+                Ok(attempt)
+            }
+        });
+        assert_eq!(out.unwrap(), 3);
+        assert_eq!(calls, 3);
+        // Permanent errors do not retry.
+        let mut calls = 0;
+        let out: Result<()> = policy.run(7, |_| {
+            calls += 1;
+            Err(Error::Config("bad".into()))
+        });
+        assert!(out.is_err());
+        assert_eq!(calls, 1);
+        // Transient errors exhaust at max_attempts.
+        let mut calls = 0;
+        let out: Result<()> = policy.run(7, |_| {
+            calls += 1;
+            Err(Error::Timeout("slow".into()))
+        });
+        assert!(matches!(out, Err(Error::Timeout(_))));
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn backoff_caps_and_jitters_deterministically() {
+        let p = RetryPolicy { max_attempts: 9, base_ms: 10, cap_ms: 80, seed: 5 };
+        for attempt in 1..9 {
+            let exp = (10u64 << (attempt - 1) as u64).min(80);
+            let ms = p.backoff_ms(attempt, 42);
+            assert!(ms >= exp / 2 && ms <= exp, "attempt {attempt}: {ms}");
+            assert_eq!(ms, p.backoff_ms(attempt, 42), "deterministic");
+        }
+        assert_eq!(RetryPolicy::none().backoff_ms(1, 0), 0);
+    }
+
+    #[test]
+    fn lock_recover_survives_poison() {
+        let m = std::sync::Arc::new(Mutex::new(17u64));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*lock_recover(&m), 17);
+    }
+}

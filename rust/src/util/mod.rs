@@ -3,12 +3,14 @@
 //! `proptest`, and `criterion` — see DESIGN.md §2).
 
 pub mod bench_harness;
+pub mod faults;
 pub mod hash;
 pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod testkit;
 
+pub use faults::{lock_recover, FaultPlan, RetryPolicy};
 pub use hash::splitmix64;
 pub use rng::Rng;
 pub use stats::Stats;

@@ -40,6 +40,8 @@ use std::time::Duration;
 
 use crate::metrics::mem;
 
+use super::faults::lock_recover;
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 struct Queue {
@@ -49,19 +51,19 @@ struct Queue {
 
 impl Queue {
     fn push(&self, job: Job) {
-        let mut guard = self.jobs.lock().unwrap();
+        let mut guard = lock_recover(&self.jobs);
         guard.0.push_back(job);
         drop(guard);
         self.ready.notify_one();
     }
 
     fn try_pop(&self) -> Option<Job> {
-        self.jobs.lock().unwrap().0.pop_front()
+        lock_recover(&self.jobs).0.pop_front()
     }
 
     /// Blocking pop for workers; `None` means the pool is shutting down.
     fn pop(&self) -> Option<Job> {
-        let mut guard = self.jobs.lock().unwrap();
+        let mut guard = lock_recover(&self.jobs);
         loop {
             if let Some(job) = guard.0.pop_front() {
                 return Some(job);
@@ -69,12 +71,12 @@ impl Queue {
             if guard.1 {
                 return None;
             }
-            guard = self.ready.wait(guard).unwrap();
+            guard = self.ready.wait(guard).unwrap_or_else(|e| e.into_inner());
         }
     }
 
     fn shutdown(&self) {
-        self.jobs.lock().unwrap().1 = true;
+        lock_recover(&self.jobs).1 = true;
         self.ready.notify_all();
     }
 }
@@ -151,21 +153,21 @@ impl ThreadPool {
         // wait on the queue's condvar and the latch's at once, so help
         // opportunistically and fall back to a short timed latch wait.
         loop {
-            if *latch.state.lock().unwrap() == 0 {
+            if *lock_recover(&latch.state) == 0 {
                 break;
             }
             if let Some(job) = self.queue.try_pop() {
                 let _ = catch_unwind(AssertUnwindSafe(job));
                 continue;
             }
-            let guard = latch.state.lock().unwrap();
+            let guard = lock_recover(&latch.state);
             if *guard == 0 {
                 break;
             }
             let _ = latch
                 .done
                 .wait_timeout(guard, Duration::from_millis(1))
-                .unwrap();
+                .unwrap_or_else(|e| e.into_inner());
         }
         // Credit memory recorded on worker threads back to the caller,
         // so `mem::thread()` matches the sequential run.
@@ -201,7 +203,7 @@ impl ThreadPool {
                     break;
                 }
                 let out = scope_f(i);
-                *slots[i].lock().unwrap() = Some(out);
+                *lock_recover(&slots[i]) = Some(out);
             }
         };
         self.scope(|s| {
@@ -214,7 +216,9 @@ impl ThreadPool {
         slots
             .into_iter()
             .map(|slot| {
-                slot.into_inner().unwrap().expect("run_indexed slot filled")
+                slot.into_inner()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .expect("run_indexed slot filled")
             })
             .collect()
     }
@@ -255,7 +259,7 @@ impl<'env> Scope<'env> {
     where
         F: FnOnce() + Send + 'env,
     {
-        *self.latch.state.lock().unwrap() += 1;
+        *lock_recover(&self.latch.state) += 1;
         let latch = Arc::clone(&self.latch);
         let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
             let before = mem::thread();
@@ -273,7 +277,7 @@ impl<'env> Scope<'env> {
             if result.is_err() {
                 latch.panicked.store(true, Ordering::Relaxed);
             }
-            let mut pending = latch.state.lock().unwrap();
+            let mut pending = lock_recover(&latch.state);
             *pending -= 1;
             if *pending == 0 {
                 latch.done.notify_all();

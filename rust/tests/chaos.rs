@@ -1,0 +1,424 @@
+//! Chaos property suite: seeded fault plans driven through the whole
+//! stack — engine runs, the multi-tenant query service, raw collectives,
+//! and the task-deadline watchdog — asserting the recovery invariant
+//! from the fault-tolerance design:
+//!
+//! > Under any deterministic fault plan, a run either completes with a
+//! > result **bit-identical** to the clean run (multiset fingerprint),
+//! > or surfaces a *typed, transient* error. It never hangs, never
+//! > corrupts shared state, and never takes a neighbouring query down.
+//!
+//! The fault plan is process-global, so every test serializes on
+//! [`faults::test_guard`], and `comm.*` arms (which cannot be scoped by
+//! task name) live **only** in this file — the other integration suites
+//! run tests in parallel and must never see an unfiltered arm.
+//!
+//! Every scenario runs under a watchdog thread: a wedged fault path
+//! fails the test with a "hung" panic instead of stalling CI. The CI
+//! chaos matrix pins the seed sweep per leg via `RC_CHAOS_SEED`.
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use radical_cylon::cluster::MachineSpec;
+use radical_cylon::comm::{CommWorld, NetModel, ReduceOp};
+use radical_cylon::config::ServiceConfig;
+use radical_cylon::df::{GenSpec, KeyDist};
+use radical_cylon::exec::{Engine, HeterogeneousEngine};
+use radical_cylon::metrics::faults as fault_metrics;
+use radical_cylon::ops::dist::KernelBackend;
+use radical_cylon::plan::Plan;
+use radical_cylon::service::QueryService;
+use radical_cylon::util::faults::{self, FaultPlan, FireMode, RetryPolicy};
+
+/// Upper bound on any single chaos scenario. Generous: the point is to
+/// distinguish "slow under injected delays" from "wedged forever".
+const HANG_GUARD: Duration = Duration::from_secs(120);
+
+/// Run `f` on its own thread and fail loudly if it neither finishes nor
+/// panics within [`HANG_GUARD`]. A scenario panic propagates through
+/// `join` so assertion messages stay intact.
+fn with_watchdog<R: Send + 'static>(
+    name: &str,
+    f: impl FnOnce() -> R + Send + 'static,
+) -> R {
+    let (tx, rx) = mpsc::channel();
+    let h = std::thread::Builder::new()
+        .name(format!("chaos-{name}"))
+        .spawn(move || {
+            let r = f();
+            let _ = tx.send(());
+            r
+        })
+        .expect("spawn chaos scenario");
+    match rx.recv_timeout(HANG_GUARD) {
+        // Finished (Ok) or panicked (Disconnected): join either way so a
+        // scenario failure surfaces with its own message.
+        Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+            h.join().unwrap_or_else(|p| std::panic::resume_unwind(p))
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => panic!(
+            "chaos scenario '{name}' hung past {HANG_GUARD:?} — an injected \
+             fault wedged the stack instead of surfacing as an error"
+        ),
+    }
+}
+
+/// Seeds to sweep. CI runs one seed per matrix leg (`RC_CHAOS_SEED=n`);
+/// a bare local `cargo test --test chaos` sweeps a small default set.
+fn chaos_seeds() -> Vec<u64> {
+    match std::env::var("RC_CHAOS_SEED") {
+        Ok(s) => vec![s.trim().parse().expect("RC_CHAOS_SEED must be a u64")],
+        Err(_) => vec![1, 2, 3],
+    }
+}
+
+/// The chaos workload: generate (skewed keys, so redistribution is
+/// non-trivial) → sort → collect, with every node named under the
+/// `chaos` prefix so fault arms can scope to this plan alone.
+fn chaos_plan(rows: usize, gen_seed: u64) -> Plan {
+    Plan::generate(
+        2,
+        GenSpec {
+            rows,
+            key_space: (rows as i64 / 3).max(1),
+            dist: KeyDist::Skewed { exponent: 1.1 },
+            seed: gen_seed,
+        },
+    )
+    .named("chaos-gen")
+    .sort("key")
+    .named("chaos-sort")
+    .collect()
+}
+
+fn engine() -> HeterogeneousEngine {
+    HeterogeneousEngine::new(MachineSpec::local(2), KernelBackend::Native, 2)
+}
+
+/// Restore every process-global knob a chaos scenario may have touched.
+fn restore_globals() {
+    faults::disarm();
+    faults::configure_retry(RetryPolicy::none());
+    faults::configure_deadline(0.0);
+}
+
+/// Engine-level sweep: for each chaos seed, arm probabilistic faults on
+/// both pilot sites (`agent.task` fires in the agent before execution,
+/// `op.execute` inside the operator) with node-boundary retry enabled,
+/// and check the recovery invariant — every outcome is either
+/// bit-identical to the clean oracle or a typed transient error. After
+/// the sweep, a disarmed run must still match the oracle (no state
+/// corruption leaks out of the faulted runs).
+#[test]
+fn engine_chaos_sweep_is_bit_identical_or_typed() {
+    let _g = faults::test_guard();
+    with_watchdog("engine-sweep", || {
+        let oracle = engine()
+            .run_plan(&chaos_plan(900, 0xA11))
+            .expect("clean oracle run")
+            .output
+            .expect("collect plan")
+            .multiset_fingerprint();
+
+        let before = fault_metrics::snapshot();
+        for seed in chaos_seeds() {
+            faults::arm(
+                FaultPlan::new(seed)
+                    .with_arm("agent.task", FireMode::Prob(0.25))
+                    .with_only("chaos")
+                    .with_arm("op.execute", FireMode::Prob(0.10))
+                    .with_only("chaos"),
+            );
+            // Zero backoff keeps the sweep fast; 4 attempts per node give
+            // the probabilistic arms room to clear on a redraw.
+            faults::configure_retry(RetryPolicy {
+                max_attempts: 4,
+                base_ms: 0,
+                cap_ms: 0,
+                seed,
+            });
+            let outcome = engine().run_plan(&chaos_plan(900, 0xA11));
+            restore_globals();
+            match outcome {
+                Ok(run) => {
+                    let got = run
+                        .output
+                        .expect("collect plan")
+                        .multiset_fingerprint();
+                    assert_eq!(
+                        got, oracle,
+                        "seed {seed}: recovered run diverged from clean run"
+                    );
+                }
+                Err(e) => assert!(
+                    e.is_transient(),
+                    "seed {seed}: chaos surfaced a non-transient error: {e}"
+                ),
+            }
+        }
+
+        // Bookkeeping stays coherent across the sweep: each recovery or
+        // exhaustion is preceded by at least one recorded retry.
+        let d = fault_metrics::snapshot().since(before);
+        assert!(
+            d.recovered + d.exhausted <= d.retried,
+            "fault counters inconsistent after sweep: {d:?}"
+        );
+
+        // The world is clean again: no quarantine, poison, or pool damage
+        // survives into a disarmed run.
+        let clean = engine()
+            .run_plan(&chaos_plan(900, 0xA11))
+            .expect("post-chaos clean run")
+            .output
+            .expect("collect plan")
+            .multiset_fingerprint();
+        assert_eq!(clean, oracle, "chaos leaked state into a clean run");
+    });
+}
+
+/// Service-level sweep: concurrent tenants under probabilistic faults
+/// with whole-query retry. Every query either matches its clean
+/// fingerprint or fails transiently; the service survives the sweep and
+/// shuts down cleanly.
+#[test]
+fn service_chaos_sweep_recovers_under_retry() {
+    let _g = faults::test_guard();
+    with_watchdog("service-sweep", || {
+        const TENANTS: usize = 4;
+        let oracles: Vec<u64> = (0..TENANTS)
+            .map(|t| {
+                engine()
+                    .run_plan(&chaos_plan(500, 0xB0 + t as u64))
+                    .expect("clean oracle run")
+                    .output
+                    .expect("collect plan")
+                    .multiset_fingerprint()
+            })
+            .collect();
+
+        for seed in chaos_seeds() {
+            faults::arm(
+                FaultPlan::new(seed)
+                    .with_arm("pool.job", FireMode::Prob(0.15))
+                    .with_only("chaos")
+                    .with_arm("agent.task", FireMode::Prob(0.10))
+                    .with_only("chaos"),
+            );
+            let cfg = ServiceConfig {
+                ranks: 2,
+                max_inflight: 2,
+                queue_depth: 16,
+                result_cache_bytes: 0, // force real execution every time
+                retry_max_attempts: 5,
+                ..ServiceConfig::default()
+            };
+            let svc = QueryService::start(cfg).expect("service starts armed");
+            let handles: Vec<_> = (0..TENANTS)
+                .map(|t| svc.submit(chaos_plan(500, 0xB0 + t as u64)).unwrap())
+                .collect();
+            for (t, h) in handles.into_iter().enumerate() {
+                match h.join_timeout(Duration::from_secs(60)) {
+                    Ok(r) => {
+                        let got = r
+                            .output
+                            .expect("collect plan")
+                            .multiset_fingerprint();
+                        assert_eq!(
+                            got, oracles[t],
+                            "seed {seed} tenant {t}: retried query diverged \
+                             from clean run"
+                        );
+                    }
+                    Err(e) => assert!(
+                        e.is_transient(),
+                        "seed {seed} tenant {t}: non-transient error: {e}"
+                    ),
+                }
+            }
+            faults::disarm();
+            // Disarmed, the same service keeps serving correct results.
+            let r = svc.run(chaos_plan(500, 0xB0)).expect("post-chaos query");
+            assert_eq!(
+                r.output.expect("collect plan").multiset_fingerprint(),
+                oracles[0]
+            );
+            svc.shutdown().expect("armed sweep left queries in flight");
+        }
+        restore_globals();
+    });
+}
+
+/// Deterministic single-fault recovery: a counted `pool.job` arm with
+/// `Nth(1)` fires exactly once (name-filtered misses don't advance the
+/// count), the query-level retry absorbs it, and the result is
+/// bit-identical to the clean run — the recovery invariant in its
+/// sharpest form, with the `retried`/`recovered` counters as witnesses.
+#[test]
+fn single_fault_recovery_is_bit_identical() {
+    let _g = faults::test_guard();
+    with_watchdog("single-fault", || {
+        let plan = || {
+            Plan::generate(2, GenSpec::uniform(700, 350, 0xD0))
+                .sort("key")
+                .named("chaosdet-sort")
+                .collect()
+        };
+        let oracle = engine()
+            .run_plan(&plan())
+            .expect("clean oracle run")
+            .output
+            .expect("collect plan")
+            .multiset_fingerprint();
+
+        faults::arm(
+            FaultPlan::new(77)
+                .with_arm("pool.job", FireMode::Nth(1))
+                .with_only("chaosdet"),
+        );
+        let cfg = ServiceConfig {
+            ranks: 2,
+            result_cache_bytes: 0,
+            retry_max_attempts: 3,
+            ..ServiceConfig::default()
+        };
+        let before = fault_metrics::snapshot();
+        let svc = QueryService::start(cfg).unwrap();
+        let r = svc.run(plan()).expect("retry absorbs the single fault");
+        assert_eq!(
+            r.output.expect("collect plan").multiset_fingerprint(),
+            oracle,
+            "recovered query diverged from clean run"
+        );
+        let d = fault_metrics::snapshot().since(before);
+        assert!(d.injected >= 1, "arm never fired: {d:?}");
+        assert!(d.retried >= 1, "no retry recorded: {d:?}");
+        assert!(d.recovered >= 1, "no recovery recorded: {d:?}");
+        svc.shutdown().unwrap();
+        restore_globals();
+    });
+}
+
+/// A fired `comm.send` fault poisons the whole context before the rank
+/// panics, so peers blocked in `recv`/`barrier` wake up and the world
+/// surfaces one typed failure instead of hanging. After `CommWorld::run`
+/// resets the mailboxes, the *same* world must serve a clean collective
+/// — the pooled-engine reuse guarantee.
+#[test]
+fn comm_send_fault_wakes_peers_and_world_resets() {
+    let _g = faults::test_guard();
+    with_watchdog("comm-send", || {
+        let w = CommWorld::new(4, NetModel::disabled());
+        faults::arm(
+            FaultPlan::new(5).with_arm("comm.send", FireMode::Prob(1.0)),
+        );
+        // Ring exchange: every rank both sends and blocks on a receive,
+        // so a hang here would mean poison propagation failed.
+        let err = w
+            .run(|c| {
+                let (r, n) = (c.rank(), c.size());
+                c.send((r + 1) % n, 7, vec![(r as i64, 1i64)]);
+                let from_prev: Vec<(i64, i64)> = c.recv((r + n - 1) % n, 7);
+                from_prev[0].0
+            })
+            .expect_err("armed send must fail the world");
+        assert!(err.to_string().contains("injected fault"), "{err}");
+        assert!(err.is_transient(), "comm faults classify transient: {err}");
+
+        faults::disarm();
+        // Same world, post-reset: the ring runs clean end to end.
+        let out = w
+            .run(|c| {
+                let (r, n) = (c.rank(), c.size());
+                c.send((r + 1) % n, 9, vec![(r as i64, 1i64)]);
+                let from_prev: Vec<(i64, i64)> = c.recv((r + n - 1) % n, 9);
+                from_prev[0].0
+            })
+            .expect("world reset after a comm fault");
+        for (rank, got) in out.iter().enumerate() {
+            assert_eq!(*got, ((rank + 3) % 4) as i64, "ring value at {rank}");
+        }
+        restore_globals();
+    });
+}
+
+/// Same contract for the shuffle workhorse: an armed `comm.alltoall`
+/// fails the collective symmetrically on every rank (the verdict is
+/// drawn from the shared `(ctx, tag)` key before any payload is posted),
+/// and the reset world then completes both a clean alltoall — with every
+/// payload routed correctly — and an allreduce.
+#[test]
+fn comm_alltoall_fault_poisons_and_recovers() {
+    let _g = faults::test_guard();
+    with_watchdog("comm-alltoall", || {
+        let w = CommWorld::new(4, NetModel::disabled());
+        faults::arm(
+            FaultPlan::new(11).with_arm("comm.alltoall", FireMode::Prob(1.0)),
+        );
+        let err = w
+            .run(|c| {
+                let (r, n) = (c.rank(), c.size());
+                let sends: Vec<Vec<(i64, i64)>> =
+                    (0..n).map(|d| vec![(r as i64, d as i64)]).collect();
+                c.alltoall(sends).len()
+            })
+            .expect_err("armed alltoall must fail the world");
+        assert!(err.to_string().contains("injected fault"), "{err}");
+
+        faults::disarm();
+        let out = w
+            .run(|c| {
+                let (r, n) = (c.rank(), c.size());
+                let sends: Vec<Vec<(i64, i64)>> =
+                    (0..n).map(|d| vec![(r as i64, d as i64)]).collect();
+                let recvd = c.alltoall(sends);
+                // recvd[s] is what rank s addressed to us.
+                for (s, part) in recvd.iter().enumerate() {
+                    assert_eq!(part.as_slice(), &[(s as i64, r as i64)]);
+                }
+                c.allreduce_u64(1, ReduceOp::Sum)
+            })
+            .expect("world reset after an alltoall fault");
+        assert!(out.iter().all(|&n| n == 4), "allreduce after reset: {out:?}");
+        restore_globals();
+    });
+}
+
+/// The per-task deadline watchdog bounds a stuck task: an injected stall
+/// far past the configured deadline surfaces as a transient timeout
+/// (naming the deadline) instead of wedging the run, and clearing the
+/// deadline restores normal completion.
+#[test]
+fn deadline_bounds_stuck_tasks() {
+    let _g = faults::test_guard();
+    with_watchdog("deadline", || {
+        let plan = || {
+            Plan::generate(2, GenSpec::uniform(400, 200, 0xE0))
+                .named("chaosstuck-gen")
+                .sort("key")
+                .collect()
+        };
+        faults::arm(
+            FaultPlan::new(3)
+                .with_arm("agent.task", FireMode::Prob(1.0))
+                .with_delay_ms(800)
+                .with_only("chaosstuck"),
+        );
+        faults::configure_deadline(0.2);
+        let before = fault_metrics::snapshot();
+        let err = engine()
+            .run_plan(&plan())
+            .expect_err("0.2s deadline must cut the 800ms stall short");
+        assert!(err.to_string().contains("deadline"), "{err}");
+        assert!(err.is_transient(), "timeouts classify transient: {err}");
+        let d = fault_metrics::snapshot().since(before);
+        assert!(d.timed_out >= 1, "watchdog never recorded a timeout: {d:?}");
+
+        restore_globals();
+        assert!(
+            engine().run_plan(&plan()).is_ok(),
+            "clearing the deadline restores completion"
+        );
+    });
+}

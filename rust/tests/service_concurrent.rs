@@ -84,7 +84,7 @@ fn concurrent_tenants_match_solo_runs() {
             });
         }
     });
-    svc.shutdown();
+    svc.shutdown().unwrap();
 
     // N*REPS submissions per plan, but only the first execution of each
     // plan is cold: the rest must be served by the caches.
@@ -116,7 +116,7 @@ fn saturation_rejects_with_typed_error() {
     assert!(h.join().unwrap().output_rows > 0);
     // Capacity freed: the same submission is admitted now.
     assert!(svc.submit(plan_m(1, 100)).unwrap().join().is_ok());
-    svc.shutdown();
+    svc.shutdown().unwrap();
 }
 
 /// Canceling a queued query releases its queue slot immediately: the
@@ -143,7 +143,7 @@ fn cancel_releases_queue_slot() {
     assert!(running.join().unwrap().output_rows > 0);
     let r = replacement.join().unwrap();
     assert!(r.output_rows > 0);
-    svc.shutdown();
+    svc.shutdown().unwrap();
 }
 
 /// Result-cache hits: the second identical collect plan completes as a
@@ -171,7 +171,7 @@ fn result_cache_hits_are_bit_identical_and_counted() {
     let d = cache_metrics::snapshot().since(before);
     assert!(d.result_hits >= 1, "{d:?}");
     assert!(d.result_misses >= 2, "{d:?}");
-    svc.shutdown();
+    svc.shutdown().unwrap();
 }
 
 /// A query whose task fails (injected via the `__fail__` name
@@ -197,5 +197,45 @@ fn failures_are_contained_to_their_query() {
     }
     // Service still healthy after a tenant failure.
     assert!(svc.run(plan_m(0, 400)).is_ok());
-    svc.shutdown();
+    svc.shutdown().unwrap();
+}
+
+/// The structured twin of [`failures_are_contained_to_their_query`]: the
+/// poisoned query fails through a seeded `agent.task` fault arm (scoped
+/// by name prefix) instead of the deprecated `__fail__` name hack, with
+/// the same containment guarantees.
+#[test]
+fn injected_faults_are_contained_to_their_query() {
+    use radical_cylon::util::faults::{self, FaultPlan, FireMode};
+    let _g = faults::test_guard();
+    faults::arm(
+        FaultPlan::new(31)
+            .with_arm("agent.task", FireMode::Prob(1.0))
+            .with_only("svcfault"),
+    );
+    let svc = QueryService::start(svc_cfg(4, 16)).unwrap();
+    let poisoned = Plan::generate(2, GenSpec::uniform(300, 150, 1))
+        .sort("key")
+        .named("svcfault-sort")
+        .collect();
+    let bad = svc.submit(poisoned).unwrap();
+    let good: Vec<_> = (0..4)
+        .map(|m| svc.submit(plan_m(m, 400)).unwrap())
+        .collect();
+    let err = bad.join().unwrap_err();
+    assert!(err.to_string().contains("injected fault"), "{err}");
+    assert!(err.to_string().contains("svcfault-sort"), "{err}");
+    assert_eq!(bad.status(), QueryState::Failed);
+    for h in good {
+        let r = h.join().unwrap();
+        assert!(r.output_rows > 0);
+    }
+    faults::disarm();
+    // Disarmed, the same plan runs clean.
+    let healed = Plan::generate(2, GenSpec::uniform(300, 150, 1))
+        .sort("key")
+        .named("svcfault-sort")
+        .collect();
+    assert!(svc.run(healed).is_ok());
+    svc.shutdown().unwrap();
 }
