@@ -77,6 +77,23 @@ impl CommData for Vec<Table> {
     }
 }
 
+/// Charges the chunk's **logical** bytes whether it is resident or
+/// spilled: the receiver will eventually restore and read all of it, so
+/// the cost model sees the real payload. (In-process transfer itself is
+/// an `Arc` move either way — a spilled chunk travels as a file handle
+/// and stays on disk across the hop.)
+impl CommData for crate::df::Chunk {
+    fn approx_bytes(&self) -> usize {
+        self.byte_size()
+    }
+}
+
+impl CommData for Vec<crate::df::Chunk> {
+    fn approx_bytes(&self) -> usize {
+        self.iter().map(|c| c.byte_size()).sum()
+    }
+}
+
 impl<A: CommData, B: CommData> CommData for (A, B) {
     fn approx_bytes(&self) -> usize {
         self.0.approx_bytes() + self.1.approx_bytes()

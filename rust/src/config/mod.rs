@@ -233,9 +233,14 @@ pub fn apply_faults(doc: &IniDoc) -> Result<bool> {
 /// | `queue_depth`        | `RC_QUEUE_DEPTH`        | 16         |
 /// | `max_inflight_bytes` | `RC_MAX_INFLIGHT_BYTES` | 0 (off)    |
 /// | `result_cache_bytes` | `RC_RESULT_CACHE_BYTES` | 64 MiB     |
+/// | `mem_budget_bytes`   | `RC_MEM_BUDGET`         | 0 (unbounded)|
 /// | `admit`              | `RC_ADMIT_POLICY`       | `fifo`     |
 /// | `retry_max_attempts` | `RC_RETRY_MAX`          | 1 (off)    |
 /// | `shutdown_timeout_s` | `RC_SHUTDOWN_TIMEOUT`   | 0 (forever)|
+///
+/// `mem_budget_bytes` accepts byte-size suffixes (`256M`, `4G`, `512K`,
+/// plain integers) via [`crate::spill::parse_byte_size`]; it feeds the
+/// process-global spill governor, not a per-service knob.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
     /// CPU ranks in the service's long-lived pilot (the shared rank pool
@@ -255,6 +260,11 @@ pub struct ServiceConfig {
     /// [`crate::comm::CommData::approx_bytes`]-style window accounting);
     /// `0` disables result caching.
     pub result_cache_bytes: u64,
+    /// Process-wide materialized-memory budget for the out-of-core data
+    /// plane ([`crate::spill::MemoryBudget`]). `0` = unbounded (never
+    /// spill). [`Self::apply_memory_budget`] latches it into the global
+    /// governor (first caller wins — it is process-global).
+    pub mem_budget_bytes: u64,
     /// Queue ordering when capacity frees up.
     pub admit: crate::service::AdmitPolicy,
     /// Total attempts (including the first) the service gives a query
@@ -276,6 +286,7 @@ impl Default for ServiceConfig {
             queue_depth: 16,
             max_inflight_bytes: 0,
             result_cache_bytes: 64 * 1024 * 1024,
+            mem_budget_bytes: 0,
             admit: crate::service::AdmitPolicy::Fifo,
             retry_max_attempts: 1,
             shutdown_timeout_s: 0.0,
@@ -319,6 +330,23 @@ impl ServiceConfig {
                 "RC_RESULT_CACHE_BYTES",
                 d.result_cache_bytes,
             )?,
+            mem_budget_bytes: {
+                // Unlike the plain-integer knobs this one accepts byte
+                // suffixes ("256M"), so route the raw string through
+                // `spill::parse_byte_size` instead of `FromStr`.
+                let raw =
+                    lookup(doc, s, "mem_budget_bytes", "RC_MEM_BUDGET", String::new())?;
+                if raw.is_empty() {
+                    d.mem_budget_bytes
+                } else {
+                    crate::spill::parse_byte_size(&raw).ok_or_else(|| {
+                        Error::Config(format!(
+                            "service.mem_budget_bytes value '{raw}' is not a \
+                             byte size (try 268435456, 256M, or 4G)"
+                        ))
+                    })?
+                }
+            },
             admit: match lookup(
                 doc,
                 s,
@@ -393,6 +421,18 @@ impl ServiceConfig {
             )));
         }
         Ok(())
+    }
+
+    /// Latch this config's `mem_budget_bytes` into the process-global
+    /// spill governor ([`crate::spill::configure`], first caller wins).
+    /// A `0` budget is a no-op: the governor stays on its lazy
+    /// `RC_MEM_BUDGET` env default instead of being pinned unbounded.
+    /// Returns whether this call installed the limit.
+    pub fn apply_memory_budget(&self) -> bool {
+        if self.mem_budget_bytes == 0 {
+            return false;
+        }
+        crate::spill::configure(self.mem_budget_bytes)
     }
 
     /// The drain deadline as a `Duration`, `None` when 0 (wait forever).
@@ -504,20 +544,44 @@ iterations = 5
 
         let ini = "[service]\nranks = 8\nmax_inflight = 2\nqueue_depth = 0\n\
                    max_inflight_bytes = 1048576\nresult_cache_bytes = 0\n\
-                   admit = cost\nretry_max_attempts = 3\n\
-                   shutdown_timeout_s = 2.5\n";
+                   mem_budget_bytes = 256M\nadmit = cost\n\
+                   retry_max_attempts = 3\nshutdown_timeout_s = 2.5\n";
         let c = ServiceConfig::from_ini(&parse_ini(ini).unwrap()).unwrap();
         assert_eq!(c.ranks, 8);
         assert_eq!(c.max_inflight, 2);
         assert_eq!(c.queue_depth, 0, "0 = reject-when-busy is legal");
         assert_eq!(c.max_inflight_bytes, 1_048_576);
         assert_eq!(c.result_cache_bytes, 0);
+        assert_eq!(c.mem_budget_bytes, 256 << 20, "byte suffixes accepted");
         assert_eq!(c.admit, crate::service::AdmitPolicy::CostAware);
         assert_eq!(c.retry_max_attempts, 3);
         assert_eq!(
             c.shutdown_timeout(),
             Some(std::time::Duration::from_millis(2500))
         );
+    }
+
+    #[test]
+    fn mem_budget_parses_plain_and_suffixed_and_rejects_garbage() {
+        // INI wins over any env fallback, so these are deterministic even
+        // under a low-memory CI leg that exports RC_MEM_BUDGET.
+        for (raw, want) in
+            [("4096", 4096u64), ("512K", 512 << 10), ("2G", 2 << 30)]
+        {
+            let ini = format!("[service]\nmem_budget_bytes = {raw}\n");
+            let c = ServiceConfig::from_ini(&parse_ini(&ini).unwrap()).unwrap();
+            assert_eq!(c.mem_budget_bytes, want, "{raw}");
+        }
+        // An explicit 0 means unbounded and must not latch the governor.
+        let ini = "[service]\nmem_budget_bytes = 0\n";
+        let c = ServiceConfig::from_ini(&parse_ini(ini).unwrap()).unwrap();
+        assert_eq!(c.mem_budget_bytes, 0);
+        assert!(!c.apply_memory_budget(), "0 budget leaves the governor be");
+        let ini = "[service]\nmem_budget_bytes = plenty\n";
+        let err =
+            ServiceConfig::from_ini(&parse_ini(ini).unwrap()).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        assert!(err.to_string().contains("mem_budget_bytes"), "{err}");
     }
 
     #[test]

@@ -1,27 +1,191 @@
-//! [`ChunkedTable`]: a logical table made of row-disjoint [`Table`]
-//! chunks — the zero-copy form of concat/gather.
+//! [`ChunkedTable`]: a logical table made of row-disjoint chunks — the
+//! zero-copy form of concat/gather, and the unit of out-of-core handoff.
 //!
 //! Shuffle receives, gathered pipeline outputs, and per-rank input
 //! partitions are all naturally *lists* of tables. Historically every one
 //! of those lists was immediately flattened with [`Table::concat`], deep-
 //! copying each row once per hop. A `ChunkedTable` keeps the parts as
-//! they arrived (each an `Arc`-backed view) and defers the copy to
-//! [`ChunkedTable::compact`], which runs only when an operator genuinely
-//! needs contiguous column access — and is skipped entirely when the view
-//! already has a single chunk.
+//! they arrived and defers the copy to [`ChunkedTable::compact`], which
+//! runs only when an operator genuinely needs contiguous column access —
+//! and is skipped entirely when the view already has a single chunk.
+//!
+//! Since the spill subsystem landed, a chunk is a [`Chunk`]: either
+//! resident ([`Chunk::Ram`], an `Arc`-backed [`Table`] view) or
+//! disk-backed ([`Chunk::Spilled`], a [`SpilledTable`] run restored
+//! lazily on first access and cached). Metadata — schema, row count,
+//! byte size — is always resident, so admission control, the network
+//! model, and slicing never touch disk. [`ChunkedTable::spill_over`]
+//! converts resident chunks to spilled ones until the view fits a
+//! [`MemoryBudget`]; content is unchanged, so every fingerprint and
+//! ordering property is trivially preserved.
 //!
 //! Row order is chunk order then in-chunk order, so slicing by global row
 //! index is well-defined and O(#chunks).
+//!
+//! **Lazy-restore failure policy:** infallible accessors ([`Chunk::table`],
+//! [`ChunkedTable::compact`], [`ChunkedTable::multiset_fingerprint`])
+//! panic if the spill run cannot be read back (deleted tmpdir, disk
+//! corruption). The pipeline executor contains node panics to per-node
+//! errors, so this surfaces as a failed task, not a crashed process.
+//! Operators that want a typed error use [`Chunk::load`] /
+//! [`ChunkedTable::load_chunk`].
+
+use std::sync::{Arc, OnceLock};
 
 use super::schema::Schema;
 use super::table::Table;
 use crate::error::{Error, Result};
+use crate::spill::{spill_table, MemoryBudget, SpilledTable};
+
+/// A disk-backed chunk: the run handle plus a lazy restore cache and
+/// optional sort-key metadata (min/max of the run's key column, kept by
+/// budgeted sort so distributed splitters can be chosen without restoring).
+#[derive(Debug)]
+pub struct SpilledChunk {
+    spilled: SpilledTable,
+    cache: OnceLock<Table>,
+    key_range: Option<(i64, i64)>,
+}
+
+/// One chunk of a [`ChunkedTable`]: resident rows, or a spill run
+/// restored lazily on first access.
+#[derive(Clone, Debug)]
+pub enum Chunk {
+    /// Resident rows (an `Arc`-backed zero-copy view).
+    Ram(Table),
+    /// Rows living in a spill run; `Arc`-shared so clones and slices of
+    /// the chunked view keep one cache and one temp file.
+    Spilled(Arc<SpilledChunk>),
+}
+
+impl Chunk {
+    /// Wrap a spill run as a chunk.
+    pub fn spilled(st: SpilledTable, key_range: Option<(i64, i64)>) -> Chunk {
+        Chunk::Spilled(Arc::new(SpilledChunk {
+            spilled: st,
+            cache: OnceLock::new(),
+            key_range,
+        }))
+    }
+
+    pub fn schema(&self) -> &Schema {
+        match self {
+            Chunk::Ram(t) => t.schema(),
+            Chunk::Spilled(s) => s.spilled.schema(),
+        }
+    }
+
+    pub fn num_rows(&self) -> usize {
+        match self {
+            Chunk::Ram(t) => t.num_rows(),
+            Chunk::Spilled(s) => s.spilled.num_rows(),
+        }
+    }
+
+    /// Payload bytes of the chunk's visible window — resident metadata
+    /// for both variants (never restores).
+    pub fn byte_size(&self) -> usize {
+        match self {
+            Chunk::Ram(t) => t.byte_size(),
+            Chunk::Spilled(s) => s.spilled.byte_size(),
+        }
+    }
+
+    /// Bytes this chunk holds in RAM right now. Spilled chunks report 0
+    /// even when a lazy restore has populated their cache: the governor
+    /// charges restores at the access site (reservations), not here, so
+    /// spill decisions stay stable.
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            Chunk::Ram(t) => t.byte_size(),
+            Chunk::Spilled(_) => 0,
+        }
+    }
+
+    pub fn is_spilled(&self) -> bool {
+        matches!(self, Chunk::Spilled(_))
+    }
+
+    /// Sort-key min/max metadata, if the producer recorded it.
+    pub fn key_range(&self) -> Option<(i64, i64)> {
+        match self {
+            Chunk::Ram(_) => None,
+            Chunk::Spilled(s) => s.key_range,
+        }
+    }
+
+    /// The underlying spill run, when disk-backed (streaming access).
+    pub fn spilled_table(&self) -> Option<&SpilledTable> {
+        match self {
+            Chunk::Spilled(s) => Some(&s.spilled),
+            Chunk::Ram(_) => None,
+        }
+    }
+
+    /// Resident access: restores a spilled chunk on first call and caches
+    /// the result for the chunk's lifetime. Panics on spill-read failure
+    /// (see module docs); use [`Chunk::load`] for a typed error.
+    pub fn table(&self) -> &Table {
+        match self {
+            Chunk::Ram(t) => t,
+            Chunk::Spilled(s) => s.cache.get_or_init(|| {
+                s.spilled.restore().expect("restore spilled chunk")
+            }),
+        }
+    }
+
+    /// Non-caching access: clones a resident chunk's view (cheap `Arc`
+    /// bumps) or restores a spilled chunk **without** populating the
+    /// cache — the caller's copy is freed when dropped, so streaming
+    /// consumers never pin more than the chunk in flight.
+    pub fn load(&self) -> Result<Table> {
+        match self {
+            Chunk::Ram(t) => Ok(t.clone()),
+            Chunk::Spilled(s) => match s.cache.get() {
+                Some(t) => Ok(t.clone()),
+                None => s.spilled.restore(),
+            },
+        }
+    }
+
+    /// Owning form of [`Chunk::table`] (no clone for resident chunks).
+    pub fn into_table(self) -> Table {
+        match self {
+            Chunk::Ram(t) => t,
+            Chunk::Spilled(s) => match s.cache.get() {
+                Some(t) => t.clone(),
+                None => s.spilled.restore().expect("restore spilled chunk"),
+            },
+        }
+    }
+
+    /// Order-insensitive content fingerprint; uncached spilled chunks
+    /// stream block-by-block instead of restoring.
+    pub fn multiset_fingerprint(&self) -> u64 {
+        match self {
+            Chunk::Ram(t) => t.multiset_fingerprint(),
+            Chunk::Spilled(s) => match s.cache.get() {
+                Some(t) => t.multiset_fingerprint(),
+                None => s
+                    .spilled
+                    .fingerprint_streamed()
+                    .expect("fingerprint spilled chunk"),
+            },
+        }
+    }
+}
+
+impl From<Table> for Chunk {
+    fn from(t: Table) -> Chunk {
+        Chunk::Ram(t)
+    }
+}
 
 /// Row-disjoint chunks sharing one schema; concat deferred until needed.
 #[derive(Clone, Debug, Default)]
 pub struct ChunkedTable {
     schema: Schema,
-    chunks: Vec<Table>,
+    chunks: Vec<Chunk>,
     nrows: usize,
 }
 
@@ -38,34 +202,61 @@ impl ChunkedTable {
             return Err(Error::DataFrame("chunked table of zero parts".into()));
         };
         let schema = first.schema().clone();
+        ChunkedTable::from_chunk_list(
+            schema,
+            parts.into_iter().map(Chunk::Ram).collect(),
+        )
+    }
+
+    /// Adopt a list of chunks (resident or spilled) under an explicit
+    /// schema — the out-of-core constructor (an empty list is fine, the
+    /// schema travels separately).
+    pub fn from_chunk_list(
+        schema: Schema,
+        chunks: Vec<Chunk>,
+    ) -> Result<ChunkedTable> {
         let mut nrows = 0;
-        for p in &parts {
-            if p.schema() != &schema {
+        for c in &chunks {
+            if c.schema() != &schema {
                 return Err(Error::DataFrame(format!(
                     "chunk schema mismatch: {} vs {}",
-                    p.schema(),
+                    c.schema(),
                     schema
                 )));
             }
-            nrows += p.num_rows();
+            nrows += c.num_rows();
         }
-        Ok(ChunkedTable { schema, chunks: parts, nrows })
+        Ok(ChunkedTable { schema, chunks, nrows })
     }
 
-    /// Append one chunk (zero-copy).
+    /// Append one resident chunk (zero-copy).
     pub fn push(&mut self, t: Table) -> Result<()> {
+        self.push_chunk(Chunk::Ram(t))
+    }
+
+    /// Append one chunk, resident or spilled.
+    pub fn push_chunk(&mut self, c: Chunk) -> Result<()> {
         if self.chunks.is_empty() && self.schema.is_empty() {
-            self.schema = t.schema().clone();
-        } else if t.schema() != &self.schema {
+            self.schema = c.schema().clone();
+        } else if c.schema() != &self.schema {
             return Err(Error::DataFrame(format!(
                 "chunk schema mismatch: {} vs {}",
-                t.schema(),
+                c.schema(),
                 self.schema
             )));
         }
-        self.nrows += t.num_rows();
-        self.chunks.push(t);
+        self.nrows += c.num_rows();
+        self.chunks.push(c);
         Ok(())
+    }
+
+    /// Append a spill run as a disk-backed chunk.
+    pub fn push_spilled(
+        &mut self,
+        st: SpilledTable,
+        key_range: Option<(i64, i64)>,
+    ) -> Result<()> {
+        self.push_chunk(Chunk::spilled(st, key_range))
     }
 
     pub fn schema(&self) -> &Schema {
@@ -80,16 +271,36 @@ impl ChunkedTable {
         self.chunks.len()
     }
 
-    pub fn chunks(&self) -> &[Table] {
+    /// Resident access to every chunk (restores and caches spilled ones —
+    /// use [`ChunkedTable::chunk_list`] / [`ChunkedTable::load_chunk`] on
+    /// the out-of-core path).
+    pub fn chunks(&self) -> Vec<&Table> {
+        self.chunks.iter().map(|c| c.table()).collect()
+    }
+
+    /// The chunk list itself — metadata-only, never restores.
+    pub fn chunk_list(&self) -> &[Chunk] {
         &self.chunks
+    }
+
+    /// Resident access to chunk `i` (restores + caches if spilled).
+    pub fn chunk(&self, i: usize) -> &Table {
+        self.chunks[i].table()
+    }
+
+    /// Non-caching load of chunk `i` (see [`Chunk::load`]).
+    pub fn load_chunk(&self, i: usize) -> Result<Table> {
+        self.chunks[i].load()
     }
 
     pub fn is_empty(&self) -> bool {
         self.nrows == 0
     }
 
-    /// O(#chunks) zero-copy row window `[start, start+len)`: overlapping
-    /// chunks are sliced (views), non-overlapping ones dropped.
+    /// O(#chunks) zero-copy row window `[start, start+len)`: fully
+    /// covered chunks are kept as-is (spilled ones stay on disk, sharing
+    /// the run), partially covered ones are sliced (restoring a spilled
+    /// boundary chunk if needed), non-overlapping ones dropped.
     pub fn slice(&self, start: usize, len: usize) -> ChunkedTable {
         assert!(
             start + len <= self.nrows,
@@ -109,47 +320,101 @@ impl ChunkedTable {
                 break;
             }
             let take = (n - skip).min(want);
-            out.push(c.slice(skip, take));
+            if skip == 0 && take == n {
+                out.push(c.clone());
+            } else {
+                let t = c.load().expect("restore spilled chunk");
+                out.push(Chunk::Ram(t.slice(skip, take)));
+            }
             want -= take;
             skip = 0;
         }
         ChunkedTable { schema: self.schema.clone(), chunks: out, nrows: len }
     }
 
-    /// Contiguous form. Zero-copy when a single chunk already is the whole
-    /// view (column `Arc` clones); otherwise materializes one fresh table.
+    /// Contiguous form. Zero-copy when a single resident chunk already is
+    /// the whole view (column `Arc` clones); otherwise materializes.
     pub fn compact(&self) -> Table {
         match self.chunks.len() {
             0 => Table::empty(self.schema.clone()),
-            1 => self.chunks[0].clone(),
-            _ => Table::concat(&self.chunks).expect("chunk schemas validated"),
+            1 => self.chunks[0].load().expect("restore spilled chunk"),
+            _ => {
+                let parts: Vec<Table> = self
+                    .chunks
+                    .iter()
+                    .map(|c| c.load().expect("restore spilled chunk"))
+                    .collect();
+                Table::concat(&parts).expect("chunk schemas validated")
+            }
         }
     }
 
-    /// Take ownership of the chunk list (zero-copy; the schema is dropped,
-    /// so an empty view yields an empty list).
+    /// Take ownership of the chunk list as resident tables (restores
+    /// spilled chunks; legacy callers — the out-of-core path uses
+    /// [`ChunkedTable::into_chunk_list`]).
     pub fn into_chunks(self) -> Vec<Table> {
+        self.chunks.into_iter().map(Chunk::into_table).collect()
+    }
+
+    /// Take ownership of the chunk list without restoring anything.
+    pub fn into_chunk_list(self) -> Vec<Chunk> {
         self.chunks
     }
 
     /// Consuming [`ChunkedTable::compact`] (skips the clone on the
-    /// single-chunk fast path).
+    /// single-resident-chunk fast path).
     pub fn into_table(mut self) -> Table {
         match self.chunks.len() {
             0 => Table::empty(self.schema),
-            1 => self.chunks.pop().expect("one chunk"),
-            _ => Table::concat(&self.chunks).expect("chunk schemas validated"),
+            1 => self.chunks.pop().expect("one chunk").into_table(),
+            _ => self.compact(),
         }
     }
 
-    /// Payload bytes of all visible windows (drives the network model).
+    /// Payload bytes of all visible windows, resident or not (drives the
+    /// network model; resident metadata, never restores).
     pub fn byte_size(&self) -> usize {
         self.chunks.iter().map(|c| c.byte_size()).sum()
     }
 
+    /// Bytes currently held in RAM (spilled chunks count 0).
+    pub fn resident_bytes(&self) -> usize {
+        self.chunks.iter().map(|c| c.resident_bytes()).sum()
+    }
+
+    /// Convert resident chunks to spilled ones, front to back, until the
+    /// resident footprint fits `budget` (no-op when unbounded). Content
+    /// and chunk order are unchanged — only residency moves — so every
+    /// fingerprint/order property is preserved by construction. Returns
+    /// the bytes moved to disk.
+    pub fn spill_over(&mut self, budget: &MemoryBudget) -> Result<u64> {
+        let Some(limit) = budget.limit() else {
+            return Ok(0);
+        };
+        let mut resident: u64 = self.resident_bytes() as u64;
+        let mut moved = 0u64;
+        for c in self.chunks.iter_mut() {
+            if resident <= limit {
+                break;
+            }
+            if let Chunk::Ram(t) = c {
+                let bytes = t.byte_size() as u64;
+                if bytes == 0 {
+                    continue;
+                }
+                let st = spill_table(t)?;
+                *c = Chunk::spilled(st, None);
+                resident -= bytes;
+                moved += bytes;
+            }
+        }
+        Ok(moved)
+    }
+
     /// Order-insensitive content fingerprint. [`Table::multiset_fingerprint`]
     /// is additive over disjoint row sets, so summing per-chunk values
-    /// equals the compacted table's fingerprint.
+    /// equals the compacted table's fingerprint. Uncached spilled chunks
+    /// are streamed, never restored whole.
     pub fn multiset_fingerprint(&self) -> u64 {
         self.chunks
             .iter()
@@ -161,7 +426,7 @@ impl From<Table> for ChunkedTable {
     fn from(t: Table) -> ChunkedTable {
         let schema = t.schema().clone();
         let nrows = t.num_rows();
-        ChunkedTable { schema, chunks: vec![t], nrows }
+        ChunkedTable { schema, chunks: vec![Chunk::Ram(t)], nrows }
     }
 }
 
@@ -242,5 +507,74 @@ mod tests {
         assert_eq!(e.num_rows(), 0);
         assert_eq!(e.compact().num_rows(), 0);
         assert_eq!(e.multiset_fingerprint(), 0);
+        // The chunk-list constructor accepts an empty list.
+        let e2 =
+            ChunkedTable::from_chunk_list(t(vec![]).schema().clone(), vec![])
+                .unwrap();
+        assert_eq!(e2.num_rows(), 0);
+    }
+
+    #[test]
+    fn spilled_chunks_restore_lazily_and_identically() {
+        let a = t(vec![1, 2, 3]);
+        let b = t(vec![4, 5]);
+        let mut ct = ChunkedTable::from(a.clone());
+        ct.push_spilled(
+            crate::spill::spill_table(&b).unwrap(),
+            Some((4, 5)),
+        )
+        .unwrap();
+        assert_eq!(ct.num_rows(), 5);
+        assert_eq!(ct.byte_size(), a.byte_size() + b.byte_size());
+        assert_eq!(ct.resident_bytes(), a.byte_size());
+        assert!(ct.chunk_list()[1].is_spilled());
+        assert_eq!(ct.chunk_list()[1].key_range(), Some((4, 5)));
+        // Fingerprint streams the spilled chunk; equals the flat table's.
+        let flat = Table::concat(&[a, b]).unwrap();
+        assert_eq!(ct.multiset_fingerprint(), flat.multiset_fingerprint());
+        // Resident access restores bit-identically.
+        assert_eq!(keys_of(&ct.compact()), vec![1, 2, 3, 4, 5]);
+        assert_eq!(keys_of(ct.chunk(1)), vec![4, 5]);
+    }
+
+    #[test]
+    fn spill_over_moves_bytes_until_budget_fits() {
+        let parts = vec![t(vec![1, 2]), t(vec![3, 4]), t(vec![5, 6])];
+        let chunk_bytes = parts[0].byte_size() as u64;
+        let mut ct = ChunkedTable::from_tables(parts).unwrap();
+        let fp = ct.multiset_fingerprint();
+
+        // Unbounded budget: no-op.
+        let b = MemoryBudget::unbounded();
+        assert_eq!(ct.spill_over(&b).unwrap(), 0);
+        assert_eq!(ct.resident_bytes() as u64, 3 * chunk_bytes);
+
+        // Budget of one chunk: two chunks move to disk, front first.
+        let b = MemoryBudget::new(chunk_bytes);
+        let moved = ct.spill_over(&b).unwrap();
+        assert_eq!(moved, 2 * chunk_bytes);
+        assert!(ct.chunk_list()[0].is_spilled());
+        assert!(ct.chunk_list()[1].is_spilled());
+        assert!(!ct.chunk_list()[2].is_spilled());
+        assert!(ct.resident_bytes() as u64 <= chunk_bytes);
+        // Content and order are untouched.
+        assert_eq!(ct.multiset_fingerprint(), fp);
+        assert_eq!(keys_of(&ct.compact()), vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn slice_keeps_covered_spilled_chunks_on_disk() {
+        let mut ct = ChunkedTable::from(t(vec![0, 1]));
+        ct.push_spilled(
+            crate::spill::spill_table(&t(vec![2, 3, 4])).unwrap(),
+            None,
+        )
+        .unwrap();
+        // Rows 1..5: partial first chunk, whole (spilled) second chunk.
+        let s = ct.slice(1, 4);
+        assert_eq!(s.num_rows(), 4);
+        assert!(!s.chunk_list()[0].is_spilled());
+        assert!(s.chunk_list()[1].is_spilled(), "covered chunk stays on disk");
+        assert_eq!(keys_of(&s.compact()), vec![1, 2, 3, 4]);
     }
 }

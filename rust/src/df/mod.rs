@@ -15,7 +15,7 @@ mod schema;
 mod table;
 
 pub use buffer::{Buffer, Utf8Buffer, Utf8Builder};
-pub use chunked::ChunkedTable;
+pub use chunked::{Chunk, ChunkedTable, SpilledChunk};
 pub use column::{Column, DataType};
 pub use csv::{read_csv, write_csv};
 pub use gen::{gen_table, gen_two_tables, GenSpec, KeyDist};

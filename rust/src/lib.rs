@@ -83,6 +83,7 @@ pub mod plan;
 pub mod raptor;
 pub mod runtime;
 pub mod service;
+pub mod spill;
 pub mod util;
 
 /// Convenience re-exports covering the public API surface used by the
@@ -92,7 +93,7 @@ pub mod prelude {
     pub use crate::comm::{CommWorld, Communicator, NetModel};
     pub use crate::config::{ExperimentConfig, ServiceConfig};
     pub use crate::df::{
-        ChunkedTable, ColRef, Column, DataType, GenSpec, Schema, Table,
+        Chunk, ChunkedTable, ColRef, Column, DataType, GenSpec, Schema, Table,
     };
     pub use crate::error::{Error, Result};
     pub use crate::exec::{
@@ -111,6 +112,7 @@ pub mod prelude {
     pub use crate::plan::{LoweredPlan, Plan};
     pub use crate::raptor::{ReadyPolicy, SchedPolicy};
     pub use crate::runtime::ArtifactStore;
+    pub use crate::spill::{MemoryBudget, Reservation, SpilledTable};
     pub use crate::util::faults::{FaultPlan, FireMode, RetryPolicy};
     pub use crate::service::{
         AdmitPolicy, CacheOutcome, QueryHandle, QueryId, QueryResult,

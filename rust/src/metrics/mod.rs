@@ -301,6 +301,85 @@ pub mod faults {
     }
 }
 
+/// Out-of-core spill accounting (see `crate::spill` and ARCHITECTURE.md
+/// §Out-of-core execution).
+///
+/// Process-wide monotone counters following the [`cache`] pattern: the
+/// run writer reports every block spilled, the run reader reports every
+/// block restored, and run seal time accumulates in nanoseconds. Like
+/// the other scopes, measure an operation by delta:
+///
+/// ```
+/// use radical_cylon::metrics::spill;
+/// let before = spill::snapshot();
+/// // ... run a budgeted sort/join ...
+/// let delta = spill::snapshot().since(before);
+/// assert_eq!(delta.runs, 0, "stayed in RAM");
+/// ```
+pub mod spill {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static BYTES_SPILLED: AtomicU64 = AtomicU64::new(0);
+    static BYTES_RESTORED: AtomicU64 = AtomicU64::new(0);
+    static RUNS: AtomicU64 = AtomicU64::new(0);
+    static SPILL_NANOS: AtomicU64 = AtomicU64::new(0);
+
+    /// Snapshot of the four monotone spill counters.
+    #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+    pub struct SpillCounters {
+        /// In-memory payload bytes written out as spill blocks.
+        pub bytes_spilled: u64,
+        /// In-memory payload bytes rebuilt from spill blocks.
+        pub bytes_restored: u64,
+        /// Spill runs sealed (one per finished `RunWriter`).
+        pub runs: u64,
+        /// Nanoseconds from run creation to seal (write-side time).
+        pub spill_nanos: u64,
+    }
+
+    impl SpillCounters {
+        /// Delta relative to an earlier snapshot.
+        pub fn since(self, earlier: SpillCounters) -> SpillCounters {
+            SpillCounters {
+                bytes_spilled: self
+                    .bytes_spilled
+                    .wrapping_sub(earlier.bytes_spilled),
+                bytes_restored: self
+                    .bytes_restored
+                    .wrapping_sub(earlier.bytes_restored),
+                runs: self.runs.wrapping_sub(earlier.runs),
+                spill_nanos: self.spill_nanos.wrapping_sub(earlier.spill_nanos),
+            }
+        }
+    }
+
+    pub fn record_spilled(bytes: u64) {
+        BYTES_SPILLED.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn record_restored(bytes: u64) {
+        BYTES_RESTORED.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn record_run() {
+        RUNS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_spill_nanos(nanos: u64) {
+        SPILL_NANOS.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    /// Process-wide totals since start.
+    pub fn snapshot() -> SpillCounters {
+        SpillCounters {
+            bytes_spilled: BYTES_SPILLED.load(Ordering::Relaxed),
+            bytes_restored: BYTES_RESTORED.load(Ordering::Relaxed),
+            runs: RUNS.load(Ordering::Relaxed),
+            spill_nanos: SPILL_NANOS.load(Ordering::Relaxed),
+        }
+    }
+}
+
 /// Simple scope timer returning seconds.
 pub struct Timer(Instant);
 
@@ -570,6 +649,20 @@ mod tests {
         assert!(d.exhausted >= 1);
         assert!(d.timed_out >= 1);
         assert!(d.quarantined_ranks >= 2);
+    }
+
+    #[test]
+    fn spill_counters_accumulate() {
+        let before = spill::snapshot();
+        spill::record_spilled(512);
+        spill::record_restored(512);
+        spill::record_run();
+        spill::record_spill_nanos(1_000);
+        let d = spill::snapshot().since(before);
+        assert!(d.bytes_spilled >= 512);
+        assert!(d.bytes_restored >= 512);
+        assert!(d.runs >= 1);
+        assert!(d.spill_nanos >= 1_000);
     }
 
     #[test]

@@ -23,13 +23,15 @@
 //!   by `tests/integration_runtime.rs`).
 
 use crate::comm::Communicator;
-use crate::df::{ChunkedTable, DataType, Schema, Table};
+use crate::df::{Chunk, ChunkedTable, DataType, Schema, Table};
 use crate::error::Result;
 use crate::ops::local::{
-    groupby_agg, hash_join, merge_sorted, morsel_ranges, sort_table, AggFn,
-    JoinType, SortKey,
+    groupby_agg, hash_join, hash_join_budgeted, merge_block_streams,
+    merge_sorted, morsel_ranges, sort_table, sort_table_budgeted, AggFn,
+    BlockStream, FillPolicy, JoinType, MergeSpec, SortKey,
 };
 use crate::runtime::{KernelService, SORT_BLOCK};
+use crate::spill::{self, MemoryBudget};
 use crate::util::hash::{partition_ids, partition_ids_par};
 use crate::util::pool::{self, SharedSlice, ThreadPool};
 
@@ -364,6 +366,215 @@ pub fn dist_sort(
     merge_sorted(&parts, col)
 }
 
+/// Out-of-core [`dist_sort`] over chunked (possibly disk-backed) inputs,
+/// consulting the global [`spill`] budget: local sort goes through
+/// [`sort_table_budgeted`] (external sample-sort past the budget), the
+/// range exchange ships **whole spilled chunks as file handles** (only
+/// splitter-straddling chunks are restored to carve), and the receive-side
+/// k-way merge streams one block per sender with spilled outputs — so a
+/// paper-scale sort never holds more than budget + one morsel in RAM.
+///
+/// **Bit-identity with [`dist_sort`]'s global output:** range carves never
+/// split an equal-key group across ranks (`k <= splitter` boundaries on
+/// the locally-sorted runs), so the concatenation of all ranks' outputs is
+/// sorted by `(key, sender rank, local position)` — the same total order
+/// [`dist_sort`] produces — regardless of where the splitters land. Only
+/// per-rank partition *sizes* may differ (chunk-metadata sampling vs exact
+/// row sampling).
+///
+/// The PJRT backend's block-sort artifact has no external path, so it
+/// stays on the in-memory pipeline (documented boundary).
+pub fn dist_sort_chunked(
+    comm: &Communicator,
+    t: &ChunkedTable,
+    col: usize,
+    backend: &KernelBackend,
+) -> Result<ChunkedTable> {
+    dist_sort_chunked_with(comm, t, col, backend, spill::global())
+}
+
+/// [`dist_sort_chunked`] with an explicit budget (tests and benches).
+pub fn dist_sort_chunked_with(
+    comm: &Communicator,
+    t: &ChunkedTable,
+    col: usize,
+    backend: &KernelBackend,
+    budget: &MemoryBudget,
+) -> Result<ChunkedTable> {
+    let limit = match (budget.limit(), backend) {
+        (Some(l), KernelBackend::Native) => l,
+        _ => {
+            return dist_sort(comm, &t.compact(), col, backend)
+                .map(ChunkedTable::from)
+        }
+    };
+    let sorted = sort_table_budgeted(t, SortKey::asc(col), budget)?;
+    let p = comm.size();
+    if p == 1 {
+        return Ok(sorted);
+    }
+    let n = sorted.num_rows();
+
+    // Regular sampling from chunk metadata: the min key of the chunk
+    // containing each target row (key_range for spilled chunks, first key
+    // for resident ones — no restores). Splitters only move rank seams;
+    // the bit-identity argument above is splitter-independent.
+    let mut samples = Vec::with_capacity(p);
+    if n > 0 {
+        let list = sorted.chunk_list();
+        let mut starts = Vec::with_capacity(list.len());
+        let mut mins = Vec::with_capacity(list.len());
+        let mut acc = 0usize;
+        for c in list {
+            starts.push(acc);
+            acc += c.num_rows();
+            mins.push(chunk_key_bounds(c, col)?.0);
+        }
+        for i in 0..p {
+            let target = i * n / p;
+            let ci = starts.partition_point(|&s| s <= target).saturating_sub(1);
+            samples.push(mins[ci]);
+        }
+    }
+    let mut flat: Vec<i64> =
+        comm.allgather(samples).into_iter().flatten().collect();
+    flat.sort_unstable();
+    let mut splitters = Vec::with_capacity(p.saturating_sub(1));
+    if !flat.is_empty() {
+        for i in 1..p {
+            splitters.push(flat[(i * flat.len() / p).min(flat.len() - 1)]);
+        }
+    }
+
+    // Row boundaries per destination (k <= splitter), resolved against
+    // chunk key bounds so fully-in-range spilled chunks never restore.
+    let mut bounds = Vec::with_capacity(p);
+    let mut prev = 0usize;
+    for r in 0..p {
+        let end = match splitters.get(r) {
+            Some(&s) => rows_leq(&sorted, col, s)?.max(prev),
+            None => n,
+        };
+        bounds.push((prev, end));
+        prev = end;
+    }
+    // Exchange chunk lists: covered spilled chunks travel as file handles.
+    let parts: Vec<Vec<Chunk>> = comm.alltoall_with(|r| {
+        let (lo, hi) = bounds[r];
+        sorted.slice(lo, hi - lo).into_chunk_list()
+    });
+
+    let total_bytes: usize = parts.iter().flatten().map(Chunk::byte_size).sum();
+    let total_rows: usize = parts.iter().flatten().map(Chunk::num_rows).sum();
+    let avg_row = (total_bytes / total_rows.max(1)).max(1);
+    let spec = MergeSpec {
+        key_col: col,
+        strip_key: false,
+        out_chunk_rows: ((limit / 8) as usize / avg_row).max(1),
+        spill_outputs: true,
+    };
+    let schema = sorted.schema().clone();
+    drop(sorted);
+    let streams: Vec<BlockStream> = parts
+        .into_iter()
+        .map(|chunks| BlockStream::Chunks(chunks.into_iter()))
+        .collect();
+    merge_block_streams(&schema, streams, &spec, budget)
+}
+
+/// `(min, max)` key of a chunk without restoring it when metadata
+/// suffices: spilled chunks carry their sorted key range; resident chunks
+/// of a sorted table read their first/last key in place.
+fn chunk_key_bounds(c: &Chunk, col: usize) -> Result<(i64, i64)> {
+    if let Some(r) = c.key_range() {
+        return Ok(r);
+    }
+    let t = c.load()?;
+    let keys = t.column(col).as_i64()?;
+    Ok((
+        keys.first().copied().unwrap_or(i64::MAX),
+        keys.last().copied().unwrap_or(i64::MIN),
+    ))
+}
+
+/// Global row count with key `<= s` in a sorted chunked table. Whole
+/// chunks resolve from their key bounds; only the single straddling chunk
+/// (if any) is loaded for an exact `partition_point`.
+fn rows_leq(sorted: &ChunkedTable, col: usize, s: i64) -> Result<usize> {
+    let mut acc = 0usize;
+    for c in sorted.chunk_list() {
+        if c.num_rows() == 0 {
+            continue;
+        }
+        let (lo, hi) = chunk_key_bounds(c, col)?;
+        if hi <= s {
+            acc += c.num_rows();
+            continue;
+        }
+        if lo > s {
+            break;
+        }
+        let t = c.load()?;
+        let keys = t.column(col).as_i64()?;
+        return Ok(acc + keys.partition_point(|&k| k <= s));
+    }
+    Ok(acc)
+}
+
+/// Out-of-core [`dist_hash_join`] consulting the global [`spill`] budget:
+/// shuffled receives are spilled back under budget
+/// ([`ChunkedTable::spill_over`]) and the local join goes through the
+/// grace [`hash_join_budgeted`]. The hash shuffle itself routes individual
+/// rows, so each side is resident for its exchange — that compact is the
+/// honest out-of-core boundary of the in-process data plane.
+#[allow(clippy::too_many_arguments)]
+pub fn dist_hash_join_chunked(
+    comm: &Communicator,
+    left: &ChunkedTable,
+    right: &ChunkedTable,
+    left_key: usize,
+    right_key: usize,
+    how: JoinType,
+    backend: &KernelBackend,
+) -> Result<ChunkedTable> {
+    dist_hash_join_chunked_with(
+        comm,
+        left,
+        right,
+        left_key,
+        right_key,
+        how,
+        backend,
+        spill::global(),
+    )
+}
+
+/// [`dist_hash_join_chunked`] with an explicit budget (tests and benches).
+#[allow(clippy::too_many_arguments)]
+pub fn dist_hash_join_chunked_with(
+    comm: &Communicator,
+    left: &ChunkedTable,
+    right: &ChunkedTable,
+    left_key: usize,
+    right_key: usize,
+    how: JoinType,
+    backend: &KernelBackend,
+    budget: &MemoryBudget,
+) -> Result<ChunkedTable> {
+    let fill = FillPolicy::zeros();
+    if comm.size() == 1 {
+        return hash_join_budgeted(
+            left, right, left_key, right_key, how, &fill, budget,
+        );
+    }
+    let mut ls = shuffle_by_key_chunked(comm, &left.compact(), left_key, backend)?;
+    ls.spill_over(budget)?;
+    let mut rs =
+        shuffle_by_key_chunked(comm, &right.compact(), right_key, backend)?;
+    rs.spill_over(budget)?;
+    hash_join_budgeted(&ls, &rs, left_key, right_key, how, &fill, budget)
+}
+
 /// Distributed hash join: co-locate both sides by key hash, then join
 /// locally. Key columns keep their positions through the shuffle, so
 /// `left_key`/`right_key` refer to the original tables. The local hash
@@ -451,21 +662,20 @@ pub fn gather_table_chunked(
 /// all chunk lists in rank order — the fully zero-copy producer gather:
 /// a rank whose output is already a list of windows (run-sliced filters,
 /// projections, unions) ships those windows as-is; nothing is flattened
-/// on either side. Collective; non-roots receive `None`.
+/// on either side. Disk-backed chunks travel as spill-file handles and
+/// stay on disk across the hop — the root restores them lazily on first
+/// access. Collective; non-roots receive `None`.
 pub fn gather_chunked(
     comm: &Communicator,
     t: ChunkedTable,
 ) -> Result<Option<ChunkedTable>> {
     let schema = t.schema().clone();
-    match comm.gather(0, t.into_chunks()) {
+    match comm.gather(0, t.into_chunk_list()) {
         Some(lists) => {
-            let parts: Vec<Table> = lists.into_iter().flatten().collect();
-            if parts.is_empty() {
-                // Every rank produced an empty view; keep the schema.
-                Ok(Some(ChunkedTable::empty(schema)))
-            } else {
-                Ok(Some(ChunkedTable::from_tables(parts)?))
-            }
+            let chunks: Vec<Chunk> = lists.into_iter().flatten().collect();
+            // An all-empty gather keeps the schema (from_chunk_list
+            // accepts an empty list).
+            Ok(Some(ChunkedTable::from_chunk_list(schema, chunks)?))
         }
         None => Ok(None),
     }
@@ -762,6 +972,124 @@ mod tests {
             }
             assert_eq!(out[0].2, oracle.schema().field(1).name, "{agg:?} schema");
         }
+    }
+
+    #[test]
+    fn dist_sort_chunked_spills_and_matches_dist_sort() {
+        let p = 3;
+        let out = world(p)
+            .run(move |c| {
+                let t = gen_table(&GenSpec::uniform(400, 5_000, 11), c.rank());
+                // Four resident chunks per rank.
+                let parts: Vec<Table> =
+                    (0..4).map(|i| t.slice(i * 100, 100)).collect();
+                let chunked = ChunkedTable::from_tables(parts).unwrap();
+                let budget = MemoryBudget::new(t.byte_size() as u64 / 4);
+                let s = dist_sort_chunked_with(
+                    &c, &chunked, 0, &KernelBackend::Native, &budget,
+                )
+                .unwrap();
+                let spilled = s.chunk_list().iter().any(|ch| ch.is_spilled());
+                let local = s.compact();
+                assert!(is_sorted_by_key(&local, 0).unwrap());
+                // Per-rank partitions may differ from dist_sort (metadata
+                // sampling); the *global* concatenation must be identical.
+                let base = dist_sort(&c, &t, 0, &KernelBackend::Native).unwrap();
+                let g =
+                    gather_table(&c, local).unwrap().map(|g| (g, spilled));
+                let gb = gather_table(&c, base).unwrap();
+                (g, gb)
+            })
+            .unwrap();
+        let (got, spilled) = out[0].0.clone().unwrap();
+        let base = out[0].1.clone().unwrap();
+        assert!(spilled, "a quarter budget must spill the sorted output");
+        assert_eq!(got, base, "global sorted output must be bit-identical");
+    }
+
+    #[test]
+    fn dist_sort_chunked_unbounded_falls_back() {
+        let out = world(2)
+            .run(|c| {
+                let t = gen_table(&GenSpec::uniform(200, 500, 3), c.rank());
+                let s = dist_sort_chunked_with(
+                    &c,
+                    &ChunkedTable::from(t.clone()),
+                    0,
+                    &KernelBackend::Native,
+                    &MemoryBudget::unbounded(),
+                )
+                .unwrap();
+                let base = dist_sort(&c, &t, 0, &KernelBackend::Native).unwrap();
+                s.compact() == base
+            })
+            .unwrap();
+        assert!(out.iter().all(|&ok| ok));
+    }
+
+    #[test]
+    fn dist_join_chunked_matches_dist_join() {
+        let p = 2;
+        let spec = GenSpec::uniform(300, 60, 21);
+        let out = world(p)
+            .run(move |c| {
+                let (l, r) = gen_two_tables(&spec, c.rank());
+                let budget = MemoryBudget::new(
+                    (l.byte_size() + r.byte_size()) as u64 / 4,
+                );
+                let j = dist_hash_join_chunked_with(
+                    &c,
+                    &ChunkedTable::from(l.clone()),
+                    &ChunkedTable::from(r.clone()),
+                    0,
+                    0,
+                    JoinType::Inner,
+                    &KernelBackend::Native,
+                    &budget,
+                )
+                .unwrap();
+                // Shuffle routes identically, so the per-rank result must
+                // be bit-identical to the in-memory distributed join.
+                let base = dist_hash_join(
+                    &c, &l, &r, 0, 0,
+                    JoinType::Inner,
+                    &KernelBackend::Native,
+                )
+                .unwrap();
+                let spilled = j.chunk_list().iter().any(|ch| ch.is_spilled());
+                (j.compact() == base, spilled)
+            })
+            .unwrap();
+        assert!(out.iter().all(|(ok, _)| *ok));
+        assert!(
+            out.iter().any(|(_, spilled)| *spilled),
+            "a quarter budget must take the grace path somewhere"
+        );
+    }
+
+    #[test]
+    fn gather_chunked_keeps_spilled_chunks_on_disk() {
+        use crate::spill::spill_table;
+        let out = world(2)
+            .run(|c| {
+                let t = int_table(
+                    vec![c.rank() as i64, 10 + c.rank() as i64],
+                    vec![0.0; 2],
+                );
+                let st = spill_table(&t).unwrap();
+                let mut v = ChunkedTable::empty(t.schema().clone());
+                v.push_spilled(st, None);
+                gather_chunked(&c, v).unwrap()
+            })
+            .unwrap();
+        let root = out[0].as_ref().unwrap();
+        assert_eq!(root.num_chunks(), 2);
+        assert!(root.chunk_list().iter().all(|ch| ch.is_spilled()));
+        assert_eq!(root.resident_bytes(), 0, "nothing restored by the gather");
+        assert_eq!(
+            root.compact().column(0).as_i64().unwrap(),
+            &[0, 10, 1, 11]
+        );
     }
 
     #[test]

@@ -11,12 +11,16 @@
 
 use std::collections::HashMap;
 
-use crate::df::{Column, Table, Utf8Builder};
+use crate::df::{ChunkedTable, Column, DataType, Schema, Table, Utf8Builder};
 use crate::error::{Error, Result};
-use crate::util::hash::{CsrIndex, SplitMixBuild};
+use crate::spill::{MemoryBudget, RunWriter, SpilledTable};
+use crate::util::hash::{splitmix64, CsrIndex, SplitMixBuild};
 use crate::util::pool::{self, ThreadPool};
 
-use super::sort::{morsel_ranges, par_min_rows, sort_table, SortKey};
+use super::sort::{
+    merge_block_streams, morsel_ranges, par_min_rows, sort_table,
+    spill_in_blocks, BlockStream, MergeSpec, SortKey, MIN_BLOCK_BYTES,
+};
 
 /// Miss sentinel in right-side probe index vectors: the row had no match
 /// and takes the [`FillPolicy`] values. Real row ids are `< MISS`, which
@@ -432,6 +436,234 @@ pub fn nested_loop_join(
     assemble(left, right, right_key, pairs_l, pairs_r, &FillPolicy::zeros())
 }
 
+/// Merge-key column the grace join prepends to its left partitions: the
+/// global left row id, used to restore the in-memory probe's emission
+/// order after partition-wise joins. Reserved — inputs may not use it.
+const LROW: &str = "__lrow";
+
+/// Budget-aware hash join over chunked inputs: joins in memory when the
+/// sides fit the [`MemoryBudget`], and falls back to an out-of-core
+/// **grace hash join** when they don't — hash-partition both sides into
+/// spilled buckets, join bucket-pairs with the in-memory CSR kernel, and
+/// k-way-merge the partition outputs back into global order.
+///
+/// **Bit-identity (partition-order argument).** The in-memory probe emits
+/// left rows in ascending order, each with its matches in ascending
+/// original right-row order (stable CSR bucket order). The grace path
+/// reproduces that exactly:
+///
+/// 1. All matches of a left row live in exactly **one** partition (both
+///    sides are partitioned by the same key hash).
+/// 2. Partitioning is stable, so each partition holds its rows in
+///    ascending original order on both sides; the partition-local CSR
+///    bucket order therefore equals the global sub-order restricted to
+///    the partition, and each per-partition join emits its rows in
+///    ascending `__lrow` with matches in ascending original right order.
+/// 3. The final k-way merge keyed on `__lrow` (unique per left row, and
+///    present on [`JoinType::Left`] fill rows too) interleaves the
+///    partition outputs back into ascending global left-row order; a
+///    left row's contiguous match group never ties across streams, so
+///    its internal order survives the merge untouched.
+///
+/// Hence the output is bit-identical to
+/// [`hash_join_filled`]`(left.compact(), right.compact(), ..)` for every
+/// budget, which the property tests assert.
+///
+/// Skew caveat: partitions are not recursively re-split, so an all-equal
+/// key column degenerates to one partition and the budget is overdrafted
+/// (recorded honestly in the peak) — the same rows would be resident for
+/// the cross-product output anyway.
+pub fn hash_join_budgeted(
+    left: &ChunkedTable,
+    right: &ChunkedTable,
+    left_key: usize,
+    right_key: usize,
+    how: JoinType,
+    fill: &FillPolicy,
+    budget: &MemoryBudget,
+) -> Result<ChunkedTable> {
+    for (side, key) in [(left, left_key), (right, right_key)] {
+        if key >= side.schema().len() {
+            return Err(Error::DataFrame(format!(
+                "join key column {key} out of range"
+            )));
+        }
+        if side.schema().field(key).dtype != DataType::Int64 {
+            return Err(Error::DataFrame(format!(
+                "join key column {key} must be Int64, got {}",
+                side.schema().field(key).dtype
+            )));
+        }
+    }
+    let l_bytes = left.byte_size() as u64;
+    let r_bytes = right.byte_size() as u64;
+    // Trip to grace when the build side alone would eat a quarter of the
+    // budget, or both sides together half — the join also materializes
+    // its output and the CSR index, so "fits" needs real headroom.
+    let grace = match budget.limit() {
+        Some(limit) => 4 * r_bytes > limit || 2 * (l_bytes + r_bytes) > limit,
+        None => false,
+    };
+    if !grace {
+        let _res = budget.reserve(2 * (l_bytes + r_bytes));
+        let lt = left.compact();
+        let rt = right.compact();
+        return hash_join_filled(&lt, &rt, left_key, right_key, how, fill)
+            .map(ChunkedTable::from);
+    }
+    grace_hash_join(left, right, left_key, right_key, how, fill, budget)
+}
+
+/// Hash-partition one side into per-partition spilled runs, streaming the
+/// input chunk-by-chunk (one resident chunk plus its partition copies at
+/// a time). `with_lrow` prepends the global row id column for the left
+/// side; partitioning is stable (ascending row order within each chunk,
+/// chunks in order), which the bit-identity argument relies on.
+fn grace_partition_side(
+    side: &ChunkedTable,
+    key: usize,
+    out_schema: &Schema,
+    with_lrow: bool,
+    npart: usize,
+    budget: &MemoryBudget,
+) -> Result<Vec<Option<SpilledTable>>> {
+    let mask = (npart - 1) as u64;
+    let mut writers: Vec<Option<RunWriter>> = (0..npart).map(|_| None).collect();
+    let mut base = 0i64;
+    for i in 0..side.chunk_list().len() {
+        let t = side.load_chunk(i)?;
+        // The chunk plus its partition sub-tables (~one copy of the chunk).
+        let _res = budget.reserve(2 * t.byte_size() as u64);
+        let keys = key_col(&t, key)?;
+        let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); npart];
+        for (row, &k) in keys.iter().enumerate() {
+            buckets[(splitmix64(k as u64) & mask) as usize].push(row as u32);
+        }
+        for (p, rows) in buckets.iter().enumerate() {
+            if rows.is_empty() {
+                continue;
+            }
+            let sub = t.take_u32(rows);
+            let part = if with_lrow {
+                let lrow: Vec<i64> =
+                    rows.iter().map(|&r| base + r as i64).collect();
+                let mut cols = vec![Column::from_i64(lrow)];
+                cols.extend(sub.columns().iter().cloned());
+                Table::new(out_schema.clone(), cols)?
+            } else {
+                sub
+            };
+            if writers[p].is_none() {
+                writers[p] = Some(RunWriter::create(out_schema.clone())?);
+            }
+            writers[p].as_mut().expect("just created").write_table(&part)?;
+        }
+        base += t.num_rows() as i64;
+    }
+    writers
+        .into_iter()
+        .map(|w| w.map(RunWriter::finish).transpose())
+        .collect()
+}
+
+fn grace_hash_join(
+    left: &ChunkedTable,
+    right: &ChunkedTable,
+    left_key: usize,
+    right_key: usize,
+    how: JoinType,
+    fill: &FillPolicy,
+    budget: &MemoryBudget,
+) -> Result<ChunkedTable> {
+    for s in [left.schema(), right.schema()] {
+        if s.fields().iter().any(|f| f.name == LROW) {
+            return Err(Error::DataFrame(format!(
+                "grace join reserves the column name {LROW:?}"
+            )));
+        }
+    }
+    let limit = budget.limit().expect("grace path requires a bounded budget");
+    let l_bytes = left.byte_size() as u64;
+    let r_bytes = right.byte_size() as u64;
+    // Size partitions so a bucket pair (~(l+r)/npart) fits in a quarter of
+    // the budget, leaving room for the CSR index and the pair's output.
+    let npart = (4 * (l_bytes + r_bytes))
+        .div_ceil(limit.max(1))
+        .next_power_of_two()
+        .clamp(2, 256) as usize;
+
+    // Left partition schema: global row id prepended.
+    let mut lfields: Vec<(&str, DataType)> = vec![(LROW, DataType::Int64)];
+    for f in left.schema().fields() {
+        lfields.push((f.name.as_str(), f.dtype));
+    }
+    let lschema = Schema::of(&lfields);
+    let rschema = right.schema().clone();
+
+    let lruns =
+        grace_partition_side(left, left_key, &lschema, true, npart, budget)?;
+    let rruns =
+        grace_partition_side(right, right_key, &rschema, false, npart, budget)?;
+
+    // Per-partition join output schema (before the merge strips `__lrow`):
+    // identical to what `hash_join_filled` produces for each bucket pair.
+    let rm_fields: Vec<(&str, DataType)> = rschema
+        .fields()
+        .iter()
+        .enumerate()
+        .filter(|(j, _)| *j != right_key)
+        .map(|(_, f)| (f.name.as_str(), f.dtype))
+        .collect();
+    let joined_schema = lschema.join(&Schema::of(&rm_fields));
+
+    let out_block = (limit / (4 * npart as u64)).max(MIN_BLOCK_BYTES);
+    let mut out_runs: Vec<SpilledTable> = Vec::new();
+    let mut out_rows = 0u64;
+    let mut out_bytes = 0u64;
+    for p in 0..npart {
+        // No left rows → no output rows (both join types are left-driven).
+        let lst = match &lruns[p] {
+            Some(st) => st,
+            None => continue,
+        };
+        if how == JoinType::Inner && rruns[p].is_none() {
+            continue;
+        }
+        let pair_bytes = lst.byte_size()
+            + rruns[p].as_ref().map_or(0, SpilledTable::byte_size);
+        let mut res = budget.reserve(pair_bytes as u64);
+        let lp = lst.restore()?;
+        let rp = match &rruns[p] {
+            Some(st) => st.restore()?,
+            None => Table::empty(rschema.clone()),
+        };
+        check_u32_rows(&lp, &rp)?;
+        let joined =
+            hash_join_filled(&lp, &rp, left_key + 1, right_key, how, fill)?;
+        res.grow(joined.byte_size() as u64);
+        if joined.num_rows() > 0 {
+            // Already ascending in `__lrow`: the probe walks left rows in
+            // partition order, which is ascending global order (stability).
+            out_rows += joined.num_rows() as u64;
+            out_bytes += joined.byte_size() as u64;
+            out_runs.push(spill_in_blocks(&joined, out_block)?);
+        }
+    }
+
+    let avg_row = (out_bytes / out_rows.max(1)).max(1);
+    let spec = MergeSpec {
+        key_col: 0,
+        strip_key: true,
+        out_chunk_rows: ((limit / 8) / avg_row).max(1) as usize,
+        spill_outputs: true,
+    };
+    let streams = out_runs
+        .into_iter()
+        .map(|st| st.reader().map(BlockStream::Reader))
+        .collect::<Result<Vec<_>>>()?;
+    merge_block_streams(&joined_schema, streams, &spec, budget)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -616,5 +848,160 @@ mod tests {
         let (l, r) = gen_two_tables(&spec, 0);
         let j = hash_join(&l, &r, 0, 0, JoinType::Inner).unwrap();
         assert!(j.num_rows() > 0, "overlapping key space must produce matches");
+    }
+
+    /// `chunks` chunks of `rows` rows with keys `(global_row * step) % modulus`
+    /// — duplicate-heavy for small moduli, near-unique for large ones.
+    fn chunked(step: i64, modulus: i64, chunks: usize, rows: usize) -> ChunkedTable {
+        let parts: Vec<Table> = (0..chunks)
+            .map(|c| {
+                let base = (c * rows) as i64;
+                let keys: Vec<i64> = (0..rows as i64)
+                    .map(|i| ((base + i) * step) % modulus)
+                    .collect();
+                let vals: Vec<i64> = (0..rows as i64).map(|i| base + i).collect();
+                t(keys, vals)
+            })
+            .collect();
+        ChunkedTable::from_tables(parts).unwrap()
+    }
+
+    #[test]
+    fn budgeted_join_graces_and_matches_in_memory() {
+        let l = chunked(7, 97, 8, 64);
+        let r = chunked(5, 97, 8, 64);
+        let total = (l.byte_size() + r.byte_size()) as u64;
+        let fill = FillPolicy::sentinels();
+        for how in [JoinType::Inner, JoinType::Left] {
+            let base = hash_join_filled(
+                &l.compact(), &r.compact(), 0, 0, how, &fill,
+            )
+            .unwrap();
+            // Unbounded: stays on the in-memory path, resident output.
+            let unbounded = MemoryBudget::unbounded();
+            let out =
+                hash_join_budgeted(&l, &r, 0, 0, how, &fill, &unbounded).unwrap();
+            assert!(out.chunk_list().iter().all(|c| !c.is_spilled()));
+            assert_eq!(out.compact(), base, "{how:?} unbounded");
+            // Bounded: the grace path must spill and stay bit-identical.
+            for frac in [4u64, 16] {
+                let budget = MemoryBudget::new(total / frac);
+                let out =
+                    hash_join_budgeted(&l, &r, 0, 0, how, &fill, &budget)
+                        .unwrap();
+                assert!(
+                    out.chunk_list().iter().any(|c| c.is_spilled()),
+                    "{how:?} 1/{frac} budget should spill its output"
+                );
+                assert_eq!(out.compact(), base, "{how:?} 1/{frac} budget");
+            }
+        }
+    }
+
+    #[test]
+    fn budgeted_join_edge_shapes() {
+        let fill = FillPolicy::zeros();
+        let tight = MemoryBudget::new(64);
+
+        // Empty left side: grace trips (right alone busts the budget) but
+        // the output is empty with the joined schema intact.
+        let schema =
+            Schema::of(&[("key", DataType::Int64), ("v", DataType::Int64)]);
+        let empty = ChunkedTable::empty(schema);
+        let r = chunked(5, 97, 4, 32);
+        let out = hash_join_budgeted(
+            &empty, &r, 0, 0, JoinType::Inner, &fill, &tight,
+        )
+        .unwrap();
+        assert_eq!(out.num_rows(), 0);
+        let names: Vec<&str> = out
+            .schema()
+            .fields()
+            .iter()
+            .map(|f| f.name.as_str())
+            .collect();
+        assert_eq!(names, vec!["key", "v", "v_right"]);
+
+        // All-equal keys collapse to one partition (documented overdraft)
+        // but the cross product still matches the in-memory join exactly.
+        let l1 = chunked(0, 97, 4, 32); // every key = 0
+        let r1 = chunked(0, 97, 4, 32);
+        let budget =
+            MemoryBudget::new((l1.byte_size() + r1.byte_size()) as u64 / 8);
+        let out = hash_join_budgeted(
+            &l1, &r1, 0, 0, JoinType::Inner, &fill, &budget,
+        )
+        .unwrap();
+        let base = hash_join(&l1.compact(), &r1.compact(), 0, 0, JoinType::Inner)
+            .unwrap();
+        assert_eq!(out.num_rows(), 128 * 128);
+        assert_eq!(out.compact(), base);
+
+        // The merge-key column name is reserved on the grace path only.
+        let clash = ChunkedTable::from(
+            Table::new(
+                Schema::of(&[("key", DataType::Int64), (LROW, DataType::Int64)]),
+                vec![Column::from_i64(vec![1; 64]), Column::from_i64(vec![2; 64])],
+            )
+            .unwrap(),
+        );
+        let r2 = chunked(5, 97, 2, 32);
+        assert!(hash_join_budgeted(
+            &clash, &r2, 0, 0, JoinType::Inner, &fill, &tight
+        )
+        .is_err());
+        assert!(hash_join_budgeted(
+            &clash,
+            &r2,
+            0,
+            0,
+            JoinType::Inner,
+            &fill,
+            &MemoryBudget::unbounded()
+        )
+        .is_ok());
+
+        // Key validation happens before any spilling.
+        let f = ChunkedTable::from(
+            Table::new(
+                Schema::of(&[("key", DataType::Float64)]),
+                vec![Column::from_f64(vec![1.0])],
+            )
+            .unwrap(),
+        );
+        assert!(
+            hash_join_budgeted(&f, &r2, 0, 0, JoinType::Inner, &fill, &tight)
+                .is_err()
+        );
+        assert!(
+            hash_join_budgeted(&r2, &r2, 9, 0, JoinType::Inner, &fill, &tight)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn budgeted_join_peak_stays_under_ceiling() {
+        // Near-unique keys keep partitions uniform so the ceiling is the
+        // design's promise, not skew luck: budget + ~two input chunks of
+        // working slack (resident chunk + its partition copies).
+        let l = chunked(7, 4096, 8, 64);
+        let r = chunked(5, 4096, 8, 64);
+        let chunk_bytes = l.chunk(0).byte_size() as u64;
+        let total = (l.byte_size() + r.byte_size()) as u64;
+        let limit = total / 4;
+        let budget = MemoryBudget::new(limit);
+        let out = hash_join_budgeted(
+            &l, &r, 0, 0, JoinType::Inner, &FillPolicy::zeros(), &budget,
+        )
+        .unwrap();
+        let base = hash_join(&l.compact(), &r.compact(), 0, 0, JoinType::Inner)
+            .unwrap();
+        assert_eq!(out.compact(), base);
+        assert!(
+            budget.peak() <= limit + 2 * chunk_bytes,
+            "peak {} exceeds ceiling {} (limit {limit} + 2x chunk {chunk_bytes})",
+            budget.peak(),
+            limit + 2 * chunk_bytes
+        );
     }
 }

@@ -1,6 +1,9 @@
 //! Local operators: execute solely on locally accessible data (paper §3.2).
 
-pub(crate) use sort::{morsel_ranges, par_min_rows};
+pub(crate) use sort::{
+    merge_block_streams, morsel_ranges, par_min_rows, BlockStream, MergeSpec,
+    MIN_BLOCK_BYTES,
+};
 
 mod compute;
 mod groupby;
@@ -15,12 +18,13 @@ pub use compute::{
 };
 pub use groupby::{groupby_agg, groupby_agg_hashmap, groupby_agg_par, AggFn};
 pub use join::{
-    hash_join, hash_join_filled, hash_join_filled_par, hash_join_hashmap,
-    hash_join_par, nested_loop_join, sort_merge_join, FillPolicy, JoinType,
+    hash_join, hash_join_budgeted, hash_join_filled, hash_join_filled_par,
+    hash_join_hashmap, hash_join_par, nested_loop_join, sort_merge_join,
+    FillPolicy, JoinType,
 };
 pub use sort::{
     is_sorted_by_key, merge_sorted, merge_sorted_par, merge_sorted_per_row,
-    sort_table, sort_table_comparator, sort_table_multi, sort_table_par,
-    SortKey,
+    sort_table, sort_table_budgeted, sort_table_comparator, sort_table_multi,
+    sort_table_par, SortKey,
 };
 pub use unique::{unique_by_key, unique_by_key_par, unique_rows};

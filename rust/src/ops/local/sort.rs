@@ -9,8 +9,13 @@
 //! operation; its one-pop-per-row predecessor survives as
 //! [`merge_sorted_per_row`].
 
-use crate::df::{Column, Table, Utf8Builder};
+use crate::df::{
+    Chunk, ChunkedTable, Column, DataType, Schema, Table, Utf8Builder,
+};
 use crate::error::{Error, Result};
+use crate::spill::{
+    spill_table, MemoryBudget, Reservation, RunReader, RunWriter, SpilledTable,
+};
 use crate::util::pool::{self, SharedSlice, ThreadPool};
 
 /// Below this row count the parallel kernels fall back to their
@@ -656,6 +661,464 @@ pub fn merge_sorted_per_row(parts: &[Table], col: usize) -> Result<Table> {
     gather_interleave(parts, &order)
 }
 
+// ---------------------------------------------------------------------------
+// Out-of-core: external sample-sort + streaming k-way block merge
+// ---------------------------------------------------------------------------
+
+/// A source of sorted table blocks for the streaming merge: either a
+/// spill-run reader (one block resident at a time) or a chunk list whose
+/// members load lazily (spilled chunks restore per-access, resident ones
+/// clone `Arc` views). Empty blocks are skipped transparently.
+pub(crate) enum BlockStream {
+    Reader(RunReader),
+    Chunks(std::vec::IntoIter<Chunk>),
+}
+
+impl BlockStream {
+    fn next_block(&mut self) -> Result<Option<Table>> {
+        loop {
+            let t = match self {
+                BlockStream::Reader(r) => r.next_block()?,
+                BlockStream::Chunks(it) => match it.next() {
+                    Some(c) => Some(c.load()?),
+                    None => None,
+                },
+            };
+            match t {
+                Some(t) if t.num_rows() == 0 => continue,
+                other => return Ok(other),
+            }
+        }
+    }
+}
+
+/// How [`merge_block_streams`] shapes its output.
+pub(crate) struct MergeSpec {
+    /// Int64 key column index in the incoming block schema; every stream
+    /// must be globally sorted ascending on it.
+    pub key_col: usize,
+    /// Drop the key column from the output (grace join strips its
+    /// `__lrow` merge key after restoring global emission order).
+    pub strip_key: bool,
+    /// Rows per output chunk before a flush.
+    pub out_chunk_rows: usize,
+    /// Spill flushed output chunks instead of keeping them resident.
+    pub spill_outputs: bool,
+}
+
+/// Per-column value appender for the streaming merge's output batches.
+enum ColApp {
+    I64(Vec<i64>),
+    F64(Vec<f64>),
+    Bool(Vec<bool>),
+    Utf8(Utf8Builder),
+}
+
+impl ColApp {
+    fn new(dt: DataType) -> ColApp {
+        match dt {
+            DataType::Int64 => ColApp::I64(Vec::new()),
+            DataType::Float64 => ColApp::F64(Vec::new()),
+            DataType::Bool => ColApp::Bool(Vec::new()),
+            DataType::Utf8 => ColApp::Utf8(Utf8Builder::new()),
+        }
+    }
+
+    fn push(&mut self, col: &Column, i: usize) {
+        match (self, col) {
+            (ColApp::I64(v), Column::Int64(c)) => v.push(c[i]),
+            (ColApp::F64(v), Column::Float64(c)) => v.push(c[i]),
+            (ColApp::Bool(v), Column::Bool(c)) => v.push(c[i]),
+            (ColApp::Utf8(b), Column::Utf8(c)) => b.push(c.get(i)),
+            _ => unreachable!("merge schemas validated identical"),
+        }
+    }
+
+    fn finish(self) -> Column {
+        match self {
+            ColApp::I64(v) => Column::from_i64(v),
+            ColApp::F64(v) => Column::from_f64(v),
+            ColApp::Bool(v) => Column::from_bool(v),
+            ColApp::Utf8(b) => Column::Utf8(b.finish()),
+        }
+    }
+}
+
+fn new_appenders(schema: &Schema, kept: &[usize], src: &Schema) -> Vec<ColApp> {
+    debug_assert_eq!(schema.len(), kept.len());
+    kept.iter().map(|&j| ColApp::new(src.field(j).dtype)).collect()
+}
+
+/// Approximate payload bytes of one row restricted to `kept` columns
+/// (reservation accounting for the pending output chunk).
+fn row_payload_bytes(t: &Table, row: usize, kept: &[usize]) -> u64 {
+    kept.iter()
+        .map(|&j| match t.column(j) {
+            Column::Int64(_) | Column::Float64(_) => 8u64,
+            Column::Bool(_) => 1,
+            Column::Utf8(v) => 4 + v.get(row).len() as u64,
+        })
+        .sum()
+}
+
+/// One merge cursor: the stream, its current resident block (with the
+/// key column copied out so the heap never re-borrows the table), and a
+/// reservation covering exactly that block.
+struct MergeCursor<'b> {
+    stream: BlockStream,
+    block: Table,
+    keys: Vec<i64>,
+    pos: usize,
+    budget: &'b MemoryBudget,
+    res: Option<Reservation<'b>>,
+}
+
+impl<'b> MergeCursor<'b> {
+    fn load_next(&mut self, key_col: usize) -> Result<bool> {
+        self.res = None; // release the old block before loading the next
+        match self.stream.next_block()? {
+            Some(t) => {
+                let budget: &'b MemoryBudget = self.budget;
+                self.res = Some(budget.reserve(t.byte_size() as u64));
+                self.keys = t.column(key_col).as_i64()?.to_vec();
+                self.block = t;
+                self.pos = 0;
+                Ok(true)
+            }
+            None => {
+                self.keys.clear();
+                self.pos = 0;
+                Ok(false)
+            }
+        }
+    }
+}
+
+/// Streaming k-way merge over block streams, each globally sorted
+/// ascending on `spec.key_col`. Never holds more than one block per
+/// stream plus one pending output chunk in RAM; every resident piece is
+/// covered by a reservation against `budget`.
+///
+/// **Bit-identity:** the heap pops `(key, stream_index)` pairs, and after
+/// a pop the *whole duplicate-key run* of that stream is emitted —
+/// continuing across the stream's block boundaries — before the first
+/// differing key re-enters the heap. Equal keys on other streams
+/// tie-break on the larger stream index and pop afterwards either way.
+/// These are exactly the semantics of [`merge_sorted`]'s
+/// `merge_order_runs` with parts in stream order, so the merged row order
+/// equals the in-memory k-way merge of the fully-restored streams.
+pub(crate) fn merge_block_streams(
+    schema: &Schema,
+    streams: Vec<BlockStream>,
+    spec: &MergeSpec,
+    budget: &MemoryBudget,
+) -> Result<ChunkedTable> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    if spec.key_col >= schema.len() {
+        return Err(Error::DataFrame(format!(
+            "merge key column {} out of range ({} columns)",
+            spec.key_col,
+            schema.len()
+        )));
+    }
+    let kept: Vec<usize> = (0..schema.len())
+        .filter(|&j| !(spec.strip_key && j == spec.key_col))
+        .collect();
+    let out_schema = Schema::of(
+        &kept
+            .iter()
+            .map(|&j| {
+                let f = schema.field(j);
+                (f.name.as_str(), f.dtype)
+            })
+            .collect::<Vec<_>>(),
+    );
+
+    let mut cursors: Vec<MergeCursor<'_>> = streams
+        .into_iter()
+        .map(|s| MergeCursor {
+            stream: s,
+            block: Table::empty(schema.clone()),
+            keys: Vec::new(),
+            pos: 0,
+            budget,
+            res: None,
+        })
+        .collect();
+    let mut heap: BinaryHeap<Reverse<(i64, usize)>> = BinaryHeap::new();
+    for (si, c) in cursors.iter_mut().enumerate() {
+        if c.load_next(spec.key_col)? {
+            heap.push(Reverse((c.keys[0], si)));
+        }
+    }
+
+    let mut out: Vec<Chunk> = Vec::new();
+    let mut apps = new_appenders(&out_schema, &kept, schema);
+    let mut pending_rows = 0usize;
+    let mut pending_bytes = 0u64;
+    let mut key_range: Option<(i64, i64)> = None;
+    let mut out_res = budget.reserve(0);
+
+    let mut flush = |apps: &mut Vec<ColApp>,
+                     pending_rows: &mut usize,
+                     pending_bytes: &mut u64,
+                     key_range: &mut Option<(i64, i64)>,
+                     out_res: &mut Reservation<'_>,
+                     out: &mut Vec<Chunk>|
+     -> Result<()> {
+        if *pending_rows == 0 {
+            return Ok(());
+        }
+        let cols: Vec<Column> =
+            std::mem::replace(apps, new_appenders(&out_schema, &kept, schema))
+                .into_iter()
+                .map(ColApp::finish)
+                .collect();
+        let t = Table::new(out_schema.clone(), cols)?;
+        if spec.spill_outputs {
+            let st = spill_table(&t)?;
+            out.push(Chunk::spilled(st, *key_range));
+        } else {
+            out.push(Chunk::Ram(t));
+        }
+        out_res.shrink(*pending_bytes);
+        *pending_rows = 0;
+        *pending_bytes = 0;
+        *key_range = None;
+        Ok(())
+    };
+
+    while let Some(Reverse((key, si))) = heap.pop() {
+        let cur = &mut cursors[si];
+        loop {
+            while cur.pos < cur.keys.len() && cur.keys[cur.pos] == key {
+                for (app, &cj) in apps.iter_mut().zip(&kept) {
+                    app.push(cur.block.column(cj), cur.pos);
+                }
+                let rb = row_payload_bytes(&cur.block, cur.pos, &kept);
+                out_res.grow(rb);
+                pending_bytes += rb;
+                pending_rows += 1;
+                key_range = Some(match key_range {
+                    None => (key, key),
+                    Some((lo, _)) => (lo, key),
+                });
+                cur.pos += 1;
+            }
+            if cur.pos < cur.keys.len() {
+                heap.push(Reverse((cur.keys[cur.pos], si)));
+                break;
+            }
+            // Block exhausted mid-run: the run may continue in the
+            // stream's next block.
+            if !cur.load_next(spec.key_col)? {
+                break;
+            }
+        }
+        if pending_rows >= spec.out_chunk_rows {
+            flush(
+                &mut apps,
+                &mut pending_rows,
+                &mut pending_bytes,
+                &mut key_range,
+                &mut out_res,
+                &mut out,
+            )?;
+        }
+    }
+    flush(
+        &mut apps,
+        &mut pending_rows,
+        &mut pending_bytes,
+        &mut key_range,
+        &mut out_res,
+        &mut out,
+    )?;
+    ChunkedTable::from_chunk_list(out_schema, out)
+}
+
+/// Floor for a sorted run's target size: below this, sort+spill overhead
+/// dwarfs the IO it saves (also keeps pathological budgets from emitting
+/// a run per row).
+pub(crate) const MIN_RUN_BYTES: u64 = 4 << 10;
+
+/// Floor for an individual spill block. Deliberately tiny: the merge
+/// holds one block per run resident, so its working set is
+/// `num_runs * block_bytes` — a large floor would multiply by the run
+/// count and blow the ceiling the whole design promises. 256 bytes keeps
+/// per-block header overhead ~5% worst case while letting the working
+/// set track `run_budget` even for many-run merges.
+pub(crate) const MIN_BLOCK_BYTES: u64 = 256;
+
+/// Spill `t` as one run of ~`block_bytes` blocks (row count derived from
+/// the table's average row width), so downstream merges stream it one
+/// block at a time.
+pub(crate) fn spill_in_blocks(t: &Table, block_bytes: u64) -> Result<SpilledTable> {
+    let n = t.num_rows();
+    let row_bytes = (t.byte_size() / n.max(1)).max(1);
+    let rows_per_block = ((block_bytes as usize) / row_bytes).max(1);
+    let mut w = RunWriter::create(t.schema().clone())?;
+    let mut start = 0usize;
+    while start < n {
+        let len = rows_per_block.min(n - start);
+        w.write_table(&t.slice(start, len))?;
+        start += len;
+    }
+    w.finish()
+}
+
+/// Budget-aware stable sort of a chunked input by one key.
+///
+/// Dispatch: unbounded budget, inputs no larger than half the limit, or
+/// key shapes outside the external kernel's coverage (non-int64 or
+/// descending — the paper's at-scale workload is ascending int64) sort
+/// in memory via [`sort_table`], with the transient input+output copy
+/// reserved against the budget. Everything else runs external
+/// sample-sort: sorted runs generated with the radix/morsel-parallel
+/// kernel, spilled in blocks, then streamed through
+/// [`merge_block_streams`] — peak residency is one run batch (plus its
+/// sorted copy) during run generation, and one block per run plus one
+/// output chunk during the merge, all tracked by reservations so
+/// `budget.peak()` is the machine-checked ceiling.
+pub fn sort_table_budgeted(
+    input: &ChunkedTable,
+    key: SortKey,
+    budget: &MemoryBudget,
+) -> Result<ChunkedTable> {
+    if key.col >= input.schema().len() {
+        return Err(Error::DataFrame(format!(
+            "sort key column {} out of range ({} columns)",
+            key.col,
+            input.schema().len()
+        )));
+    }
+    let total = input.byte_size() as u64;
+    let external = match budget.limit() {
+        None => false,
+        Some(limit) => total > limit / 2,
+    };
+    let i64_asc = key.ascending
+        && input.schema().field(key.col).dtype == DataType::Int64;
+    if !external || !i64_asc {
+        let _res = budget.reserve(2 * total); // input + sorted copy
+        let flat = input.compact();
+        return Ok(ChunkedTable::from(sort_table(&flat, key)?));
+    }
+    sort_table_external(input, key, budget)
+}
+
+/// Seal the accumulated batch as one sorted spilled run.
+fn spill_sorted_run(
+    runs: &mut Vec<SpilledTable>,
+    batch: &mut Vec<Table>,
+    batch_bytes: &mut u64,
+    key: SortKey,
+    block_bytes: u64,
+    res: &mut Reservation<'_>,
+) -> Result<()> {
+    if batch.is_empty() {
+        return Ok(());
+    }
+    let flat = if batch.len() == 1 {
+        batch.pop().expect("one part")
+    } else {
+        let t = Table::concat(batch)?;
+        batch.clear();
+        t
+    };
+    res.grow(*batch_bytes); // the sorted copy (take_u32 materializes)
+    let sorted = sort_table(&flat, key)?;
+    drop(flat);
+    runs.push(spill_in_blocks(&sorted, block_bytes)?);
+    res.shrink(2 * *batch_bytes);
+    *batch_bytes = 0;
+    Ok(())
+}
+
+/// External sample-sort (ascending int64 key, bounded budget): generate
+/// sorted runs of about half the budget each, spill them in blocks sized
+/// so the merge's one-block-per-run working set also fits half the
+/// budget, and stream the k-way merge over run readers. Output chunks
+/// are spilled with their key ranges, so downstream distributed sorts
+/// can pick splitters from metadata alone.
+///
+/// **Bit-identity vs the in-memory sort:** runs cover contiguous input
+/// windows in input order and are sorted with the same stable kernel, so
+/// within a run equal keys keep input order; the merge's
+/// `(key, run_index)` tie-break orders equal keys across runs by input
+/// position (runs are in input order); and whole equal-key runs advance
+/// per heap pop exactly as `merge_order_runs` does. The merged order is
+/// therefore the stable global sort order — bit-identical to
+/// `sort_table(&input.compact(), key)`.
+fn sort_table_external(
+    input: &ChunkedTable,
+    key: SortKey,
+    budget: &MemoryBudget,
+) -> Result<ChunkedTable> {
+    let limit = budget
+        .limit()
+        .expect("external sort dispatched only under a bounded budget");
+    let total = input.byte_size() as u64;
+    let run_budget = (limit / 2).max(MIN_RUN_BYTES);
+    let est_runs = total.div_ceil(run_budget).max(1);
+    let block_bytes = (run_budget / est_runs).max(MIN_BLOCK_BYTES);
+
+    // --- Run generation: batch input chunks up to ~run_budget, sort,
+    // spill. The reservation tracks batch + sorted copy.
+    let mut runs: Vec<SpilledTable> = Vec::new();
+    let mut batch: Vec<Table> = Vec::new();
+    let mut batch_bytes = 0u64;
+    let mut res = budget.reserve(0);
+    for (i, c) in input.chunk_list().iter().enumerate() {
+        let next_bytes = c.byte_size() as u64;
+        if batch_bytes > 0 && batch_bytes + next_bytes > run_budget {
+            spill_sorted_run(
+                &mut runs,
+                &mut batch,
+                &mut batch_bytes,
+                key,
+                block_bytes,
+                &mut res,
+            )?;
+        }
+        let t = input.load_chunk(i)?;
+        res.grow(next_bytes);
+        batch_bytes += next_bytes;
+        batch.push(t);
+    }
+    spill_sorted_run(
+        &mut runs,
+        &mut batch,
+        &mut batch_bytes,
+        key,
+        block_bytes,
+        &mut res,
+    )?;
+    drop(res);
+
+    // --- Merge: one block per run + one pending output chunk resident.
+    let row_bytes =
+        (input.byte_size() / input.num_rows().max(1)).max(1);
+    let out_chunk_rows = ((block_bytes as usize) / row_bytes).max(1);
+    let streams: Vec<BlockStream> = runs
+        .iter()
+        .map(|r| r.reader().map(BlockStream::Reader))
+        .collect::<Result<_>>()?;
+    merge_block_streams(
+        input.schema(),
+        streams,
+        &MergeSpec {
+            key_col: key.col,
+            strip_key: false,
+            out_chunk_rows,
+            spill_outputs: true,
+        },
+        budget,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -873,6 +1336,110 @@ mod tests {
         assert!(sort_table_comparator(&t, &[]).is_err());
         assert!(merge_sorted(&[], 0).is_err());
         assert!(merge_sorted_per_row(&[], 0).is_err());
+    }
+
+    #[test]
+    fn budgeted_sort_spills_and_matches_in_memory() {
+        // 8 chunks of 64 rows with wrapped duplicate-heavy keys; stability
+        // observable through the value column.
+        let mut parts = Vec::new();
+        for c in 0..8i64 {
+            let keys: Vec<i64> = (0..64).map(|i| (i * 7 + c) % 23).collect();
+            let vals: Vec<f64> =
+                (0..64).map(|i| (c * 64 + i) as f64).collect();
+            parts.push(table(keys, vals));
+        }
+        let input = ChunkedTable::from_tables(parts).unwrap();
+        let expect = sort_table(&input.compact(), SortKey::asc(0)).unwrap();
+        let total = input.byte_size() as u64;
+        for frac in [4u64, 16] {
+            let budget = MemoryBudget::new((total / frac).max(1));
+            let out =
+                sort_table_budgeted(&input, SortKey::asc(0), &budget).unwrap();
+            assert!(
+                out.chunk_list().iter().any(Chunk::is_spilled),
+                "budget {total}/{frac} must force spilling"
+            );
+            assert_eq!(out.compact(), expect, "frac={frac}");
+            // Spilled output chunks carry ascending key ranges.
+            let ranges: Vec<(i64, i64)> = out
+                .chunk_list()
+                .iter()
+                .filter_map(Chunk::key_range)
+                .collect();
+            assert!(ranges.windows(2).all(|w| w[0].1 <= w[1].0));
+        }
+        // Unbounded: stays in RAM, same output.
+        let out = sort_table_budgeted(
+            &input,
+            SortKey::asc(0),
+            &MemoryBudget::unbounded(),
+        )
+        .unwrap();
+        assert!(out.chunk_list().iter().all(|c| !c.is_spilled()));
+        assert_eq!(out.compact(), expect);
+    }
+
+    #[test]
+    fn budgeted_sort_edge_shapes() {
+        // Empty input.
+        let empty = ChunkedTable::empty(
+            table(vec![], vec![]).schema().clone(),
+        );
+        let b = MemoryBudget::new(1);
+        let out = sort_table_budgeted(&empty, SortKey::asc(0), &b).unwrap();
+        assert_eq!(out.num_rows(), 0);
+        // All-equal keys: stability across runs (values keep input order).
+        let parts: Vec<Table> = (0..4)
+            .map(|c| {
+                table(
+                    vec![5i64; 32],
+                    (0..32).map(|i| (c * 32 + i) as f64).collect(),
+                )
+            })
+            .collect();
+        let input = ChunkedTable::from_tables(parts).unwrap();
+        let budget = MemoryBudget::new(input.byte_size() as u64 / 8);
+        let out = sort_table_budgeted(&input, SortKey::asc(0), &budget).unwrap();
+        let vals: Vec<f64> =
+            out.compact().column(1).as_f64().unwrap().to_vec();
+        let expect: Vec<f64> = (0..128).map(|i| i as f64).collect();
+        assert_eq!(vals, expect, "equal keys must keep input order");
+        // Descending key: falls back to in-memory, still correct.
+        let desc =
+            sort_table_budgeted(&input, SortKey::desc(0), &budget).unwrap();
+        assert_eq!(
+            desc.compact(),
+            sort_table(&input.compact(), SortKey::desc(0)).unwrap()
+        );
+        // Errors propagate.
+        assert!(sort_table_budgeted(&input, SortKey::asc(9), &b).is_err());
+    }
+
+    #[test]
+    fn budgeted_sort_peak_stays_under_ceiling() {
+        let mut parts = Vec::new();
+        for c in 0..16i64 {
+            let keys: Vec<i64> = (0..128).map(|i| (i * 31 + c * 7) % 257).collect();
+            parts.push(table(keys, vec![0.25; 128]));
+        }
+        let input = ChunkedTable::from_tables(parts).unwrap();
+        let chunk_bytes = input.chunk_list()[0].byte_size() as u64;
+        let limit = input.byte_size() as u64 / 4;
+        let budget = MemoryBudget::new(limit);
+        let out = sort_table_budgeted(&input, SortKey::asc(0), &budget).unwrap();
+        assert_eq!(out.num_rows(), input.num_rows());
+        // Ceiling: budget + slack (run batching may overshoot by up to
+        // 2x one input chunk: the chunk that trips the flush plus its
+        // sorted copy). Sized so the MIN_RUN_BYTES floor equals
+        // limit / 2 here and MIN_BLOCK_BYTES doesn't bind.
+        assert!(
+            budget.peak() <= limit + 2 * chunk_bytes,
+            "peak {} > limit {} + 2*chunk {}",
+            budget.peak(),
+            limit,
+            chunk_bytes
+        );
     }
 
     #[test]

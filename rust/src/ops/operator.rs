@@ -16,8 +16,8 @@
 //! |------------|--------|--------|
 //! | `generate` | 0      | deterministic synthetic partition ([`gen_table`]) |
 //! | `scan-csv` | 0      | parallel CSV scan, per-rank window (zero-copy slice) |
-//! | `join`     | 2      | [`dist_hash_join`] |
-//! | `sort`     | 1      | [`dist_sort`] (sample-sort) |
+//! | `join`     | 2      | [`dist_hash_join_chunked`] (grace hash join past the spill budget) |
+//! | `sort`     | 1      | [`dist_sort_chunked`] (sample-sort; external past the spill budget) |
 //! | `groupby`  | 1      | [`dist_groupby`] (two-phase) |
 //! | `filter`   | 1      | [`Expr`] predicate mask + zero-copy run-sliced [`filter_view`] (rank-local) |
 //! | `project`  | 1      | zero-copy [`Table::project`] (rank-local) |
@@ -73,7 +73,9 @@ use std::sync::{Arc, Mutex, OnceLock};
 use crate::comm::Communicator;
 use crate::df::{gen_table, read_csv, ChunkedTable, ColRef, GenSpec, Schema, Table};
 use crate::error::{Error, Result};
-use crate::ops::dist::{dist_groupby, dist_hash_join, dist_sort, KernelBackend};
+use crate::ops::dist::{
+    dist_groupby, dist_hash_join_chunked, dist_sort_chunked, KernelBackend,
+};
 use crate::ops::local::{
     eval_expr, eval_mask, filter_view, with_column, AggFn, CmpOp, JoinType,
 };
@@ -168,8 +170,17 @@ impl Operator for JoinOp {
         // symmetric across the collective.
         let lk = self.left_key.resolve(l.schema())?;
         let rk = self.right_key.resolve(r.schema())?;
-        dist_hash_join(comm, &l, &r, lk, rk, self.how, backend)
-            .map(ChunkedTable::from)
+        // Budget-aware: consults the global spill governor; unbounded
+        // budgets take the classic in-memory dist_hash_join path.
+        dist_hash_join_chunked(
+            comm,
+            &ChunkedTable::from(l),
+            &ChunkedTable::from(r),
+            lk,
+            rk,
+            self.how,
+            backend,
+        )
     }
 }
 
@@ -197,7 +208,10 @@ impl Operator for SortOp {
         backend: &KernelBackend,
     ) -> Result<ChunkedTable> {
         let key = self.key.resolve(inputs[0].schema())?;
-        dist_sort(comm, &inputs[0], key, backend).map(ChunkedTable::from)
+        // Budget-aware: consults the global spill governor; unbounded
+        // budgets take the classic in-memory dist_sort path.
+        let input = ChunkedTable::from(inputs.into_iter().next().expect("arity"));
+        dist_sort_chunked(comm, &input, key, backend)
     }
 }
 

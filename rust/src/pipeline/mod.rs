@@ -877,6 +877,13 @@ mod tests {
 
     #[test]
     fn failed_node_fails_pipeline() {
+        use crate::util::faults::{self, FaultPlan, FireMode};
+        let _guard = faults::test_guard();
+        faults::arm(
+            FaultPlan::new(41)
+                .with_arm("agent.task", FireMode::Prob(1.0))
+                .with_only("pfail"),
+        );
         let session = Session::new("pipe");
         let pilot = session
             .pilot_manager()
@@ -884,23 +891,32 @@ mod tests {
             .unwrap();
         let tm = session.task_manager(&pilot);
         let mut p = Pipeline::new();
-        let a = p.add(td("__fail__x", 2), &[]);
+        let a = p.add(td("pfail-x", 2), &[]);
         let _b = p.add(td("never", 2), &[a]);
         let err = p.execute(&tm).unwrap_err().to_string();
-        assert!(err.contains("__fail__x"), "{err}");
+        assert!(err.contains("pfail-x"), "{err}");
         pilot.shutdown();
+        faults::disarm();
     }
 
     #[test]
     fn failed_node_fails_wave_pipeline() {
+        use crate::util::faults::{self, FaultPlan, FireMode};
+        let _guard = faults::test_guard();
+        faults::arm(
+            FaultPlan::new(43)
+                .with_arm("agent.task", FireMode::Prob(1.0))
+                .with_only("pfail"),
+        );
         let (_s, pilot) = pilot_of(2, "pipe-waves");
         let tm = _s.task_manager(&pilot);
         let mut p = Pipeline::new();
-        let a = p.add(td("__fail__w", 2), &[]);
+        let a = p.add(td("pfail-w", 2), &[]);
         let _b = p.add(td("never", 2), &[a]);
         let err = p.execute_waves(&tm).unwrap_err().to_string();
-        assert!(err.contains("__fail__w"), "{err}");
+        assert!(err.contains("pfail-w"), "{err}");
         pilot.shutdown();
+        faults::disarm();
     }
 
     /// The acceptance property of the dataflow scheduler: an independent

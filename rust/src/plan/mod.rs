@@ -374,10 +374,11 @@ impl Plan {
     }
 
     /// Whether any source node reads external, mutable state
-    /// ([`Plan::scan_csv`] — the file can change between runs). Plans
-    /// whose sources are all deterministic [`Plan::generate`] nodes
-    /// produce identical tables on every execution, which is what makes
-    /// them result-cacheable.
+    /// ([`Plan::scan_csv`] — the file can change between runs).
+    /// Diagnostic only: the query service's result cache no longer gates
+    /// on this, because [`Plan::fingerprint`] folds each scanned file's
+    /// content identity (length + mtime) into the key, so a changed file
+    /// misses the cache naturally.
     pub fn reads_external_sources(&self) -> bool {
         let mut seen: Vec<*const Plan> = Vec::new();
         self.reads_external_inner(&mut seen)
@@ -430,6 +431,30 @@ impl Plan {
         Ok(keys.join("\n"))
     }
 
+    /// Content-identity suffix for a scan-csv fingerprint key: the
+    /// source file's byte length and mtime, so the same path with
+    /// different contents yields a different fingerprint and the query
+    /// service's result cache invalidates when the file changes. An
+    /// unreadable file gets the distinct `src=?` marker (never equal to
+    /// any readable identity) instead of an error — the scan itself
+    /// still surfaces the real IO failure at execution time.
+    fn csv_identity(path: &std::path::Path) -> String {
+        match std::fs::metadata(path) {
+            Ok(md) => {
+                let mtime = md
+                    .modified()
+                    .ok()
+                    .and_then(|t| {
+                        t.duration_since(std::time::UNIX_EPOCH).ok()
+                    })
+                    .map(|d| d.as_nanos())
+                    .unwrap_or(0);
+                format!("|src={}:{mtime}", md.len())
+            }
+            Err(_) => "|src=?".to_string(),
+        }
+    }
+
     /// Mirror of [`Plan::lower_into`]'s memoized walk that accumulates
     /// the structural keys instead of building pipeline nodes — same id
     /// assignment, same CSE, so key `i` describes DAG node `i`.
@@ -456,10 +481,13 @@ impl Plan {
         }
         let ranks = self.resolved_ranks(child_ranks)?;
         let ranks = self.op.handle().plan_ranks(ranks);
-        let key = format!(
+        let mut key = format!(
             "{:?}|ranks={ranks}|name={:?}|collect={}|children={child_ids:?}",
             self.op, self.name, self.collect
         );
+        if let LogicalOp::ScanCsv { path, .. } = &self.op {
+            key.push_str(&Self::csv_identity(path));
+        }
         if let Some((_, id, r)) = memo.iter().find(|(k, _, _)| *k == key) {
             return Ok((*id, *r));
         }
@@ -900,6 +928,31 @@ mod tests {
             p = p.clone().union(p);
         }
         assert!(!p.reads_external_sources());
+    }
+
+    #[test]
+    fn scan_csv_fingerprint_tracks_file_content_identity() {
+        let dir = std::env::temp_dir().join("rc-plan-fp-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fp.csv");
+        std::fs::write(&path, "key,val\n1,0.5\n").unwrap();
+        let plan =
+            || Plan::scan_csv(1, path.clone(), GenSpec::schema()).collect();
+        let a = plan().fingerprint().unwrap();
+        assert_eq!(a, plan().fingerprint().unwrap(), "same file, same key");
+        assert!(a.contains("|src="), "{a}");
+        // Rewriting the file (different length) changes the fingerprint.
+        std::fs::write(&path, "key,val\n1,0.5\n2,0.25\n").unwrap();
+        let b = plan().fingerprint().unwrap();
+        assert_ne!(a, b, "changed file must change the cache key");
+        // A missing file fingerprints distinctly rather than erroring.
+        let gone = Plan::scan_csv(1, dir.join("nope.csv"), GenSpec::schema())
+            .collect()
+            .fingerprint()
+            .unwrap();
+        assert!(gone.contains("|src=?"), "{gone}");
+        assert_ne!(gone, b);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -312,11 +312,18 @@ mod tests {
     #[test]
     fn failed_task_isolated_from_others() {
         // Paper §3.3: failures are contained; remaining tasks execute.
+        use crate::util::faults::{self, FaultPlan, FireMode};
+        let _guard = faults::test_guard();
+        faults::arm(
+            FaultPlan::new(47)
+                .with_arm("agent.task", FireMode::Prob(1.0))
+                .with_only("afail"),
+        );
         let mut a = agent(4, SchedPolicy::Fifo);
         let bad = submit(
             &a,
             1,
-            TaskDescription::sort("__fail__bad", 2, 10, DataDist::Uniform),
+            TaskDescription::sort("afail-bad", 2, 10, DataDist::Uniform),
         );
         let good = submit(&a, 2, TaskDescription::sort("ok", 2, 50, DataDist::Uniform));
         let rb = bad.wait().unwrap();
@@ -325,6 +332,7 @@ mod tests {
         assert!(rb.error.as_ref().unwrap().contains("injected"));
         assert!(rg.is_done());
         a.shutdown();
+        faults::disarm();
     }
 
     #[test]

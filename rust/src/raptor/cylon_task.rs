@@ -112,20 +112,13 @@ fn resolve_inputs(
 /// `agent.task` fires at task entry and `op.execute` around the operator
 /// call, both keyed by (task name, attempt) so every rank of the task
 /// reaches the same verdict *before* any collective — the fault-isolation
-/// tests rely on this symmetry. A task name starting with `__fail__` is
-/// the deprecated shim for the pre-faults test hack: it still fails at
-/// entry unconditionally, without arming anything.
+/// tests rely on this symmetry. (The magic `__fail__` task-name shim is
+/// gone; arm a scoped `agent.task` fault instead.)
 pub fn run_cylon_task_full(
     comm: &Communicator,
     td: &TaskDescription,
     backend: &KernelBackend,
 ) -> Result<TaskOutcome> {
-    if td.name.starts_with("__fail__") {
-        return Err(Error::TaskFailed(format!(
-            "injected failure in task '{}'",
-            td.name
-        )));
-    }
     let fault_key = faults::task_key(&td.name, td.attempt);
     faults::inject_keyed("agent.task", fault_key, &td.name)?;
     comm.reset_sim_clock();
@@ -151,8 +144,16 @@ pub fn run_cylon_task_full(
     let output = if td.keep_output {
         // Collective; Some at group rank 0 only. Chunked: the per-rank
         // parts (and any sub-windows a zero-copy operator produced) are
-        // adopted as-is, no flattening copy.
-        gather_chunked(comm, out)?
+        // adopted as-is, no flattening copy — disk-backed chunks stay on
+        // disk through the gather.
+        let mut gathered = gather_chunked(comm, out)?;
+        if let Some(g) = gathered.as_mut() {
+            // The root now holds every rank's output; push resident chunks
+            // back out under the global budget so the stage handoff never
+            // re-accumulates more than the governor allows.
+            g.spill_over(crate::spill::global())?;
+        }
+        gathered
     } else {
         None
     };
@@ -243,13 +244,20 @@ mod tests {
 
     #[test]
     fn injected_failure_is_symmetric() {
-        // Deprecated `__fail__` shim: still routes to an injected failure
-        // at entry without arming anything.
-        let td = TaskDescription::sort("__fail__s", 2, 10, DataDist::Uniform);
+        // Scoped fault arm (the replacement for the old `__fail__`
+        // task-name shim): every rank fails at entry, symmetrically.
+        let _guard = faults::test_guard();
+        faults::arm(
+            crate::util::FaultPlan::new(11)
+                .with_arm("agent.task", crate::util::faults::FireMode::Prob(1.0))
+                .with_only("cyl-inject"),
+        );
+        let td = TaskDescription::sort("cyl-inject-s", 2, 10, DataDist::Uniform);
         let out = run(td, 2);
         for r in out {
             assert!(r.is_err());
         }
+        faults::disarm();
     }
 
     #[test]

@@ -30,11 +30,12 @@
 //! * **Plan cache**: [`Plan::fingerprint`] (canonical structural keys of
 //!   the optimized plan) → [`LoweredPlan`]; a hit skips re-lowering.
 //! * **Result cache**: LRU over collected output tables, byte-bounded by
-//!   `result_cache_bytes`. Only plans whose sources are deterministic
-//!   generators qualify ([`Plan::reads_external_sources`] — a CSV file
-//!   can change between runs); a hit completes the query without
-//!   touching the rank pool. Hit/miss/eviction counters live in
-//!   [`crate::metrics::cache`].
+//!   `result_cache_bytes`; a hit completes the query without touching
+//!   the rank pool. Every collecting plan qualifies: CSV scans no longer
+//!   bypass the cache because [`Plan::fingerprint`] folds the source
+//!   file's content identity (byte length + mtime) into the key, so
+//!   editing the file changes the fingerprint and invalidates naturally.
+//!   Hit/miss/eviction counters live in [`crate::metrics::cache`].
 //! * **Execution**: each admitted query drives its lowered DAG through
 //!   [`crate::pipeline::Pipeline::run_pooled`] on the global
 //!   [`ThreadPool`](crate::util::pool::ThreadPool), with every node
@@ -460,11 +461,20 @@ impl Inner {
 
     /// Does a query of `est` bytes fit the in-flight byte bound right
     /// now? An empty in-flight set always fits, so a query larger than
-    /// the whole bound can still run (alone) instead of starving.
+    /// the whole bound can still run (alone) instead of starving. When
+    /// the process-global spill governor is bounded
+    /// ([`crate::spill::global`]), admission additionally holds work
+    /// whose estimated source bytes exceed the governor's *current*
+    /// headroom — in-flight out-of-core operators release their
+    /// reservations as they spill, so held queries are promoted on the
+    /// next scheduling pass rather than starving.
     fn bytes_fit(&self, sched: &Sched, est: u64) -> bool {
-        self.cfg.max_inflight_bytes == 0
-            || sched.inflight == 0
-            || sched.inflight_bytes + est <= self.cfg.max_inflight_bytes
+        if sched.inflight == 0 {
+            return true;
+        }
+        let cap_ok = self.cfg.max_inflight_bytes == 0
+            || sched.inflight_bytes + est <= self.cfg.max_inflight_bytes;
+        cap_ok && est <= crate::spill::global().headroom()
     }
 
     /// Run one admitted query's DAG on the shared pool + pilot.
@@ -633,6 +643,7 @@ impl QueryService {
     /// (`cfg.ranks` cores on a local machine spec), and open admission.
     pub fn start(cfg: ServiceConfig) -> Result<QueryService> {
         cfg.validate()?;
+        cfg.apply_memory_budget();
         let session = Session::new("query-service");
         let pd = PilotDescription::new(MachineSpec::local(cfg.ranks), 1);
         let pilot = session.pilot_manager().submit(pd)?;
@@ -707,9 +718,9 @@ impl QueryService {
             )));
         }
         let est_bytes = lowered.pipeline.estimated_source_bytes();
-        let cacheable = plan.collects()
-            && !plan.reads_external_sources()
-            && inner.cfg.result_cache_bytes > 0;
+        // CSV-backed plans are cacheable too: the fingerprint carries the
+        // source file's length + mtime, so a changed file misses.
+        let cacheable = plan.collects() && inner.cfg.result_cache_bytes > 0;
         let id = QueryId(inner.ids.fetch_add(1, Ordering::Relaxed));
         let query = Arc::new(QueryInner {
             id,
@@ -962,12 +973,12 @@ mod tests {
     }
 
     #[test]
-    fn scan_csv_plans_bypass_the_result_cache() {
+    fn scan_csv_plans_hit_the_result_cache_until_the_file_changes() {
         let svc = QueryService::start(small_cfg()).unwrap();
         let dir = std::env::temp_dir().join("rc-service-cache-test");
         std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("bypass.csv");
-        std::fs::write(&path, "key,val\n1,0.5\n2,0.25\n").unwrap();
+        let path = dir.join("content-id.csv");
+        std::fs::write(&path, "key,val\n2,0.25\n1,0.5\n").unwrap();
         let plan = || {
             Plan::scan_csv(1, path.clone(), GenSpec::schema())
                 .sort("key")
@@ -975,10 +986,17 @@ mod tests {
         };
         let a = svc.run(plan()).unwrap();
         let b = svc.run(plan()).unwrap();
-        // Second run re-executes (plan cache may hit; result cache must
-        // not — the file is external mutable state).
-        assert_ne!(b.cache, CacheOutcome::ResultHit);
+        // The fingerprint carries the file's content identity, so an
+        // unchanged file is served straight from the result cache.
+        assert_eq!(b.cache, CacheOutcome::ResultHit);
         assert_eq!(a.output_rows, b.output_rows);
+        // Rewriting the file changes the fingerprint: the next run must
+        // re-execute (a cold/plan-level outcome, never a stale hit) and
+        // see the new contents.
+        std::fs::write(&path, "key,val\n3,0.125\n2,0.25\n1,0.5\n").unwrap();
+        let c = svc.run(plan()).unwrap();
+        assert_ne!(c.cache, CacheOutcome::ResultHit);
+        assert_eq!(c.output_rows, 3);
         svc.shutdown().unwrap();
         let _ = std::fs::remove_file(&path);
     }

@@ -1,0 +1,921 @@
+//! Out-of-core execution substrate: a process-wide memory-budget
+//! governor and a columnar on-disk run format.
+//!
+//! The paper's headline experiments sort and join 35M–3.5B rows; holding
+//! a working set that size in RAM is exactly what a bounded machine
+//! cannot do. This module gives the data plane a disk tier:
+//!
+//! * [`MemoryBudget`] — a byte governor (config key `mem_budget_bytes`,
+//!   env `RC_MEM_BUDGET`, default unbounded). Out-of-core operators
+//!   **reserve** bytes before materializing ([`MemoryBudget::reserve`] /
+//!   [`MemoryBudget::try_reserve`]); the RAII [`Reservation`] releases on
+//!   drop and the governor tracks a high-water mark ([`MemoryBudget::peak`])
+//!   that benches assert against (`benches/out_of_core.rs`).
+//! * [`RunWriter`] / [`RunReader`] — length-prefixed, CRC-checked column
+//!   blocks (the `RCSP` format below) that round-trip a [`Table`]
+//!   **bit-identically**, including NaN payloads (f64 travels as raw
+//!   bit patterns) and Utf8 arenas (per-row strings, rebuilt into a fresh
+//!   arena on restore).
+//! * [`SpilledTable`] — a handle to a run on disk: schema + row count +
+//!   byte sizes stay in RAM, rows live in a temp file that is deleted
+//!   when the last handle drops.
+//!
+//! Spill traffic is accounted in [`crate::metrics::spill`]
+//! (bytes_spilled / bytes_restored / runs / spill time), alongside the
+//! existing bytes-materialized accounting in [`crate::metrics::mem`]
+//! (restores rebuild columns through the normal builders, so they are
+//! counted as materializations like any other copy).
+//!
+//! ## On-disk run format
+//!
+//! A run is a sequence of blocks, each holding a row range of one table:
+//!
+//! ```text
+//! block   := magic:u32 ("RCSP") ncols:u32 nrows:u64 column*
+//! column  := dtype_tag:u8 payload_len:u64 payload crc32:u32
+//! payload := i64/f64: raw LE words of the visible window
+//!            bool:    one byte per row (0/1)
+//!            utf8:    len_i:u32 per row, then the concatenated bytes
+//! ```
+//!
+//! All integers are little-endian. The CRC covers the payload only; a
+//! mismatch (or a tag/arity mismatch against the expected schema) is a
+//! typed error, never silent corruption. End-of-run is a clean EOF at a
+//! block boundary.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+use crate::df::{Column, DataType, Schema, Table, Utf8Builder};
+use crate::error::{Error, Result};
+use crate::metrics::spill as spill_metrics;
+
+/// Block magic: "RCSP" (radical-cylon spill).
+const MAGIC: u32 = 0x5243_5350;
+
+// ---------------------------------------------------------------------------
+// Memory budget governor
+// ---------------------------------------------------------------------------
+
+/// Byte governor for out-of-core operators. `limit == 0` means
+/// unbounded (the default — nothing spills until a budget is set).
+///
+/// The governor is **advisory by protocol**: operators call
+/// [`MemoryBudget::reserve`] before materializing a batch, run, bucket,
+/// or output chunk, and the [`Reservation`] releases the bytes when the
+/// allocation dies. [`MemoryBudget::peak`] is the resulting high-water
+/// mark — the number the out-of-core bench hard-asserts stays under
+/// budget + one morsel of slack.
+#[derive(Debug)]
+pub struct MemoryBudget {
+    limit: u64,
+    in_use: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl MemoryBudget {
+    /// Budget of `limit` bytes; `0` = unbounded.
+    pub fn new(limit: u64) -> MemoryBudget {
+        MemoryBudget {
+            limit,
+            in_use: AtomicU64::new(0),
+            peak: AtomicU64::new(0),
+        }
+    }
+
+    /// The unbounded governor (never trips).
+    pub fn unbounded() -> MemoryBudget {
+        MemoryBudget::new(0)
+    }
+
+    /// `Some(bytes)` when bounded, `None` when unbounded.
+    pub fn limit(&self) -> Option<u64> {
+        (self.limit > 0).then_some(self.limit)
+    }
+
+    /// Currently reserved bytes.
+    pub fn in_use(&self) -> u64 {
+        self.in_use.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of reserved bytes since creation (or the last
+    /// [`MemoryBudget::reset_peak`]).
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Reset the high-water mark to the current reservation level (bench
+    /// scoping between phases).
+    pub fn reset_peak(&self) {
+        self.peak.store(self.in_use(), Ordering::Relaxed);
+    }
+
+    /// Would reserving `bytes` more stay within the limit?
+    pub fn would_fit(&self, bytes: u64) -> bool {
+        self.limit == 0 || self.in_use().saturating_add(bytes) <= self.limit
+    }
+
+    /// Bytes left under the limit (`u64::MAX` when unbounded).
+    pub fn headroom(&self) -> u64 {
+        if self.limit == 0 {
+            u64::MAX
+        } else {
+            self.limit.saturating_sub(self.in_use())
+        }
+    }
+
+    /// Reserve `bytes` unconditionally (overdraft allowed — the caller
+    /// has decided it must materialize; the peak records the overdraft
+    /// honestly). Prefer [`MemoryBudget::try_reserve`] when the caller
+    /// can spill instead.
+    pub fn reserve(&self, bytes: u64) -> Reservation<'_> {
+        self.charge(bytes);
+        Reservation { budget: self, bytes }
+    }
+
+    /// Reserve `bytes` only if they fit under the limit; `None` means
+    /// the caller should spill.
+    pub fn try_reserve(&self, bytes: u64) -> Option<Reservation<'_>> {
+        if self.limit == 0 {
+            return Some(self.reserve(bytes));
+        }
+        let mut cur = self.in_use.load(Ordering::Relaxed);
+        loop {
+            if cur.saturating_add(bytes) > self.limit {
+                return None;
+            }
+            match self.in_use.compare_exchange_weak(
+                cur,
+                cur + bytes,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.peak.fetch_max(cur + bytes, Ordering::Relaxed);
+                    return Some(Reservation { budget: self, bytes });
+                }
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    fn charge(&self, bytes: u64) {
+        let now = self.in_use.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    fn release(&self, bytes: u64) {
+        self.in_use.fetch_sub(bytes, Ordering::Relaxed);
+    }
+}
+
+/// RAII byte reservation against a [`MemoryBudget`]; releases on drop.
+#[derive(Debug)]
+pub struct Reservation<'a> {
+    budget: &'a MemoryBudget,
+    bytes: u64,
+}
+
+impl Reservation<'_> {
+    /// Bytes currently held by this reservation.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Grow the reservation by `more` bytes (overdraft allowed).
+    pub fn grow(&mut self, more: u64) {
+        self.budget.charge(more);
+        self.bytes += more;
+    }
+
+    /// Return `less` bytes to the budget (saturating at zero).
+    pub fn shrink(&mut self, less: u64) {
+        let less = less.min(self.bytes);
+        self.budget.release(less);
+        self.bytes -= less;
+    }
+}
+
+impl Drop for Reservation<'_> {
+    fn drop(&mut self) {
+        self.budget.release(self.bytes);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-global budget (config `mem_budget_bytes` / env RC_MEM_BUDGET)
+// ---------------------------------------------------------------------------
+
+static GLOBAL: OnceLock<MemoryBudget> = OnceLock::new();
+
+/// Latch the process-global budget. First caller wins (same contract as
+/// [`crate::util::pool::configure`]); returns `false` when the budget was
+/// already resolved, in which case the earlier value stays in force.
+pub fn configure(limit_bytes: u64) -> bool {
+    GLOBAL.set(MemoryBudget::new(limit_bytes)).is_ok()
+}
+
+/// The process-global budget. Resolved once: an explicit [`configure`]
+/// wins, else the `RC_MEM_BUDGET` env variable (sizes like `268435456`,
+/// `256M`, `1G`), else unbounded.
+pub fn global() -> &'static MemoryBudget {
+    GLOBAL.get_or_init(|| {
+        let limit = std::env::var("RC_MEM_BUDGET")
+            .ok()
+            .and_then(|s| parse_byte_size(&s))
+            .unwrap_or(0);
+        MemoryBudget::new(limit)
+    })
+}
+
+/// Parse a human byte size: a plain integer, optionally suffixed with
+/// `K`/`M`/`G`/`T` (binary multiples) and an optional trailing `B`, case
+/// insensitive: `4096`, `64K`, `256M`, `1gb`. Returns `None` on
+/// malformed input (the caller falls back to unbounded).
+pub fn parse_byte_size(s: &str) -> Option<u64> {
+    let t = s.trim().to_ascii_uppercase();
+    if t.is_empty() {
+        return None;
+    }
+    let t = t.strip_suffix('B').unwrap_or(&t);
+    let (digits, mult) = match t.as_bytes().last()? {
+        b'K' => (&t[..t.len() - 1], 1u64 << 10),
+        b'M' => (&t[..t.len() - 1], 1u64 << 20),
+        b'G' => (&t[..t.len() - 1], 1u64 << 30),
+        b'T' => (&t[..t.len() - 1], 1u64 << 40),
+        _ => (t, 1u64),
+    };
+    digits.trim().parse::<u64>().ok().map(|v| v.saturating_mul(mult))
+}
+
+// ---------------------------------------------------------------------------
+// Spill files
+// ---------------------------------------------------------------------------
+
+static FILE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Directory spill runs land in: `RC_SPILL_DIR` if set, else the system
+/// temp directory.
+pub fn spill_dir() -> PathBuf {
+    std::env::var_os("RC_SPILL_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(std::env::temp_dir)
+}
+
+/// A temp file owned by the spill subsystem; deleted when the last
+/// handle drops. Shared as `Arc<SpillFile>` so readers and spilled
+/// chunks keep the file alive independently.
+#[derive(Debug)]
+pub struct SpillFile {
+    path: PathBuf,
+}
+
+impl SpillFile {
+    fn fresh() -> SpillFile {
+        let seq = FILE_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = spill_dir().join(format!(
+            "rc-spill-{}-{}.run",
+            std::process::id(),
+            seq
+        ));
+        SpillFile { path }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for SpillFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Run writer
+// ---------------------------------------------------------------------------
+
+fn dtype_tag(dt: DataType) -> u8 {
+    match dt {
+        DataType::Int64 => 0,
+        DataType::Float64 => 1,
+        DataType::Bool => 2,
+        DataType::Utf8 => 3,
+    }
+}
+
+fn tag_dtype(tag: u8) -> Option<DataType> {
+    match tag {
+        0 => Some(DataType::Int64),
+        1 => Some(DataType::Float64),
+        2 => Some(DataType::Bool),
+        3 => Some(DataType::Utf8),
+        _ => None,
+    }
+}
+
+/// Writes a run: a sequence of schema-identical table blocks. Create with
+/// the run's schema, feed blocks with [`RunWriter::write_table`], then
+/// [`RunWriter::finish`] into a [`SpilledTable`] handle. Dropping an
+/// unfinished writer deletes the partial file.
+pub struct RunWriter {
+    w: BufWriter<File>,
+    file: SpillFile,
+    schema: Schema,
+    nrows: u64,
+    mem_bytes: u64,
+    file_bytes: u64,
+    blocks: u32,
+    started: Instant,
+}
+
+impl RunWriter {
+    pub fn create(schema: Schema) -> Result<RunWriter> {
+        let file = SpillFile::fresh();
+        let w = BufWriter::new(File::create(file.path())?);
+        Ok(RunWriter {
+            w,
+            file,
+            schema,
+            nrows: 0,
+            mem_bytes: 0,
+            file_bytes: 0,
+            blocks: 0,
+            started: Instant::now(),
+        })
+    }
+
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    /// Rows written so far.
+    pub fn num_rows(&self) -> u64 {
+        self.nrows
+    }
+
+    /// Append one block. Empty tables are skipped (a run's schema is
+    /// carried by the handle, not the file). The block is serialized
+    /// window-aware: only the visible rows of each column travel.
+    pub fn write_table(&mut self, t: &Table) -> Result<()> {
+        if t.schema() != &self.schema {
+            return Err(Error::DataFrame(format!(
+                "spill: block schema mismatch: {} vs {}",
+                t.schema(),
+                self.schema
+            )));
+        }
+        if t.num_rows() == 0 {
+            return Ok(());
+        }
+        let mut written = 0u64;
+        let mut buf = [0u8; 16];
+        buf[..4].copy_from_slice(&MAGIC.to_le_bytes());
+        buf[4..8].copy_from_slice(&(t.num_columns() as u32).to_le_bytes());
+        buf[8..16].copy_from_slice(&(t.num_rows() as u64).to_le_bytes());
+        self.w.write_all(&buf)?;
+        written += 16;
+        for col in t.columns() {
+            let payload = serialize_column(col);
+            self.w.write_all(&[dtype_tag(col.dtype())])?;
+            self.w.write_all(&(payload.len() as u64).to_le_bytes())?;
+            self.w.write_all(&payload)?;
+            self.w.write_all(&crc32(&payload).to_le_bytes())?;
+            written += 1 + 8 + payload.len() as u64 + 4;
+        }
+        self.nrows += t.num_rows() as u64;
+        self.mem_bytes += t.byte_size() as u64;
+        self.file_bytes += written;
+        self.blocks += 1;
+        spill_metrics::record_spilled(t.byte_size() as u64);
+        Ok(())
+    }
+
+    /// Flush and seal the run, returning the disk-backed handle.
+    pub fn finish(mut self) -> Result<SpilledTable> {
+        self.w.flush()?;
+        spill_metrics::record_run();
+        spill_metrics::record_spill_nanos(
+            self.started.elapsed().as_nanos() as u64
+        );
+        Ok(SpilledTable {
+            file: Arc::new(self.file),
+            schema: self.schema,
+            nrows: self.nrows as usize,
+            mem_bytes: self.mem_bytes as usize,
+            file_bytes: self.file_bytes,
+            blocks: self.blocks,
+        })
+    }
+}
+
+/// Serialize one column's visible window into a payload buffer.
+fn serialize_column(col: &Column) -> Vec<u8> {
+    match col {
+        Column::Int64(v) => {
+            let s = v.as_slice();
+            let mut out = Vec::with_capacity(s.len() * 8);
+            for &x in s {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            out
+        }
+        Column::Float64(v) => {
+            let s = v.as_slice();
+            let mut out = Vec::with_capacity(s.len() * 8);
+            for &x in s {
+                // Raw bit pattern: NaNs round-trip bit-identically.
+                out.extend_from_slice(&x.to_bits().to_le_bytes());
+            }
+            out
+        }
+        Column::Bool(v) => v.as_slice().iter().map(|&b| b as u8).collect(),
+        Column::Utf8(v) => {
+            let mut out =
+                Vec::with_capacity(v.len() * 4 + v.str_bytes());
+            for s in v.iter() {
+                out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+            }
+            for s in v.iter() {
+                out.extend_from_slice(s.as_bytes());
+            }
+            out
+        }
+    }
+}
+
+fn deserialize_column(
+    dt: DataType,
+    nrows: usize,
+    payload: &[u8],
+) -> Result<Column> {
+    let bad = |what: &str| {
+        Err(Error::DataFrame(format!(
+            "spill: corrupt {dt} payload ({what}; {} bytes, {nrows} rows)",
+            payload.len()
+        )))
+    };
+    match dt {
+        DataType::Int64 => {
+            if payload.len() != nrows * 8 {
+                return bad("length");
+            }
+            let v: Vec<i64> = payload
+                .chunks_exact(8)
+                .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            Ok(Column::from_i64(v))
+        }
+        DataType::Float64 => {
+            if payload.len() != nrows * 8 {
+                return bad("length");
+            }
+            let v: Vec<f64> = payload
+                .chunks_exact(8)
+                .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+                .collect();
+            Ok(Column::from_f64(v))
+        }
+        DataType::Bool => {
+            if payload.len() != nrows {
+                return bad("length");
+            }
+            Ok(Column::from_bool(payload.iter().map(|&b| b != 0).collect()))
+        }
+        DataType::Utf8 => {
+            if payload.len() < nrows * 4 {
+                return bad("offset header");
+            }
+            let (lens, mut rest) = payload.split_at(nrows * 4);
+            let mut b = Utf8Builder::with_capacity(
+                nrows,
+                payload.len() - nrows * 4,
+            );
+            for c in lens.chunks_exact(4) {
+                let len = u32::from_le_bytes(c.try_into().unwrap()) as usize;
+                if rest.len() < len {
+                    return bad("string bytes");
+                }
+                let (s, tail) = rest.split_at(len);
+                let s = std::str::from_utf8(s).map_err(|_| {
+                    Error::DataFrame("spill: non-utf8 string payload".into())
+                })?;
+                b.push(s);
+                rest = tail;
+            }
+            if !rest.is_empty() {
+                return bad("trailing bytes");
+            }
+            Ok(Column::Utf8(b.finish()))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Run reader
+// ---------------------------------------------------------------------------
+
+/// Streams a run's blocks back as [`Table`]s, validating magic, arity,
+/// dtype tags, and per-column CRCs. Holds the file alive via its
+/// `Arc<SpillFile>`.
+pub struct RunReader {
+    r: BufReader<File>,
+    schema: Schema,
+    _file: Arc<SpillFile>,
+}
+
+impl RunReader {
+    fn open(file: Arc<SpillFile>, schema: Schema) -> Result<RunReader> {
+        let r = BufReader::new(File::open(file.path())?);
+        Ok(RunReader { r, schema, _file: file })
+    }
+
+    /// The next block, or `None` at a clean end-of-run.
+    pub fn next_block(&mut self) -> Result<Option<Table>> {
+        let mut head = [0u8; 16];
+        match read_exact_or_eof(&mut self.r, &mut head)? {
+            false => return Ok(None),
+            true => {}
+        }
+        let magic = u32::from_le_bytes(head[..4].try_into().unwrap());
+        if magic != MAGIC {
+            return Err(Error::DataFrame(format!(
+                "spill: bad block magic {magic:#x}"
+            )));
+        }
+        let ncols = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
+        let nrows = u64::from_le_bytes(head[8..16].try_into().unwrap()) as usize;
+        if ncols != self.schema.len() {
+            return Err(Error::DataFrame(format!(
+                "spill: block has {ncols} columns, schema {} expects {}",
+                self.schema,
+                self.schema.len()
+            )));
+        }
+        let mut cols = Vec::with_capacity(ncols);
+        for i in 0..ncols {
+            let mut tag = [0u8; 1];
+            self.r.read_exact(&mut tag)?;
+            let dt = tag_dtype(tag[0]).ok_or_else(|| {
+                Error::DataFrame(format!("spill: unknown dtype tag {}", tag[0]))
+            })?;
+            let expect = self.schema.field(i).dtype;
+            if dt != expect {
+                return Err(Error::DataFrame(format!(
+                    "spill: column {i} is {dt}, schema expects {expect}"
+                )));
+            }
+            let mut len = [0u8; 8];
+            self.r.read_exact(&mut len)?;
+            let len = u64::from_le_bytes(len) as usize;
+            let mut payload = vec![0u8; len];
+            self.r.read_exact(&mut payload)?;
+            let mut crc = [0u8; 4];
+            self.r.read_exact(&mut crc)?;
+            if u32::from_le_bytes(crc) != crc32(&payload) {
+                return Err(Error::DataFrame(format!(
+                    "spill: CRC mismatch on column {i}"
+                )));
+            }
+            cols.push(deserialize_column(dt, nrows, &payload)?);
+        }
+        let t = Table::new(self.schema.clone(), cols)?;
+        spill_metrics::record_restored(t.byte_size() as u64);
+        Ok(Some(t))
+    }
+}
+
+/// `Ok(true)` when `buf` was filled, `Ok(false)` on EOF before the first
+/// byte; a partial read mid-buffer is a corruption error.
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> Result<bool> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        let n = r.read(&mut buf[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(false);
+            }
+            return Err(Error::DataFrame(
+                "spill: truncated block header".into(),
+            ));
+        }
+        got += n;
+    }
+    Ok(true)
+}
+
+// ---------------------------------------------------------------------------
+// Spilled tables
+// ---------------------------------------------------------------------------
+
+/// A table whose rows live in a spill run on disk. Schema and sizes are
+/// resident metadata; [`SpilledTable::restore`] reads the rows back
+/// (bit-identical to what was written) and
+/// [`SpilledTable::fingerprint_streamed`] folds the content fingerprint
+/// one block at a time without ever holding more than one block.
+#[derive(Clone, Debug)]
+pub struct SpilledTable {
+    file: Arc<SpillFile>,
+    schema: Schema,
+    nrows: usize,
+    mem_bytes: usize,
+    file_bytes: u64,
+    blocks: u32,
+}
+
+impl SpilledTable {
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.nrows
+    }
+
+    /// In-memory payload bytes of the original visible windows — what
+    /// restoring will materialize.
+    pub fn byte_size(&self) -> usize {
+        self.mem_bytes
+    }
+
+    /// Bytes the run occupies on disk (headers + payloads + CRCs).
+    pub fn file_bytes(&self) -> u64 {
+        self.file_bytes
+    }
+
+    pub fn num_blocks(&self) -> u32 {
+        self.blocks
+    }
+
+    /// Stream the run block by block.
+    pub fn reader(&self) -> Result<RunReader> {
+        RunReader::open(self.file.clone(), self.schema.clone())
+    }
+
+    /// Read the whole run back into one contiguous table.
+    pub fn restore(&self) -> Result<Table> {
+        let mut r = self.reader()?;
+        let mut parts = Vec::new();
+        while let Some(t) = r.next_block()? {
+            parts.push(t);
+        }
+        match parts.len() {
+            0 => Ok(Table::empty(self.schema.clone())),
+            1 => Ok(parts.pop().expect("one part")),
+            _ => Table::concat(&parts),
+        }
+    }
+
+    /// Order-insensitive content fingerprint, folded one block at a time
+    /// ([`Table::multiset_fingerprint`] is additive over disjoint row
+    /// sets) — never holds more than one block in RAM.
+    pub fn fingerprint_streamed(&self) -> Result<u64> {
+        let mut r = self.reader()?;
+        let mut acc = 0u64;
+        while let Some(t) = r.next_block()? {
+            acc = acc.wrapping_add(t.multiset_fingerprint());
+        }
+        Ok(acc)
+    }
+}
+
+/// Spill one table as a single-block run.
+pub fn spill_table(t: &Table) -> Result<SpilledTable> {
+    let mut w = RunWriter::create(t.schema().clone())?;
+    w.write_table(t)?;
+    w.finish()
+}
+
+// ---------------------------------------------------------------------------
+// CRC-32 (IEEE), nibble-table variant — zero dependencies
+// ---------------------------------------------------------------------------
+
+const CRC_TABLE: [u32; 16] = {
+    let mut table = [0u32; 16];
+    let mut i = 0;
+    while i < 16 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 4 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 (IEEE 802.3 polynomial) over `data`.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &b in data {
+        crc = (crc >> 4) ^ CRC_TABLE[((crc ^ b as u32) & 0xF) as usize];
+        crc = (crc >> 4) ^ CRC_TABLE[((crc ^ (b as u32 >> 4)) & 0xF) as usize];
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::spill as m;
+
+    fn mixed_table(n: usize) -> Table {
+        let keys: Vec<i64> = (0..n as i64).map(|i| i * 37 % 101 - 50).collect();
+        let vals: Vec<f64> = (0..n)
+            .map(|i| if i % 7 == 0 { f64::NAN } else { i as f64 * 0.5 })
+            .collect();
+        let strs: Vec<String> =
+            (0..n).map(|i| if i % 3 == 0 { String::new() } else { format!("s{i}") }).collect();
+        let bools: Vec<bool> = (0..n).map(|i| i % 2 == 0).collect();
+        Table::new(
+            Schema::of(&[
+                ("k", DataType::Int64),
+                ("f", DataType::Float64),
+                ("s", DataType::Utf8),
+                ("b", DataType::Bool),
+            ]),
+            vec![
+                Column::from_i64(keys),
+                Column::from_f64(vals),
+                Column::from_utf8(&strs),
+                Column::from_bool(bools),
+            ],
+        )
+        .unwrap()
+    }
+
+    /// Bit-level equality (PartialEq treats NaN != NaN; compare bits).
+    fn bits_equal(a: &Table, b: &Table) -> bool {
+        if a.schema() != b.schema() || a.num_rows() != b.num_rows() {
+            return false;
+        }
+        for j in 0..a.num_columns() {
+            for i in 0..a.num_rows() {
+                if a.column(j).value_hash(i) != b.column(j).value_hash(i) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    #[test]
+    fn parse_byte_sizes() {
+        assert_eq!(parse_byte_size("4096"), Some(4096));
+        assert_eq!(parse_byte_size("64K"), Some(64 << 10));
+        assert_eq!(parse_byte_size("256M"), Some(256 << 20));
+        assert_eq!(parse_byte_size("1G"), Some(1 << 30));
+        assert_eq!(parse_byte_size("2tb"), Some(2u64 << 40));
+        assert_eq!(parse_byte_size(" 8 MB "), Some(8 << 20));
+        assert_eq!(parse_byte_size(""), None);
+        assert_eq!(parse_byte_size("x12"), None);
+        assert_eq!(parse_byte_size("12Q"), None);
+    }
+
+    #[test]
+    fn budget_reserve_release_peak() {
+        let b = MemoryBudget::new(100);
+        assert_eq!(b.limit(), Some(100));
+        assert!(b.would_fit(100));
+        {
+            let mut r = b.reserve(60);
+            assert_eq!(b.in_use(), 60);
+            assert_eq!(b.headroom(), 40);
+            assert!(b.try_reserve(50).is_none(), "over limit must refuse");
+            let r2 = b.try_reserve(40).expect("fits exactly");
+            assert_eq!(b.in_use(), 100);
+            drop(r2);
+            r.grow(70); // overdraft allowed, recorded in peak
+            assert_eq!(b.in_use(), 130);
+            r.shrink(100);
+            assert_eq!(b.in_use(), 30);
+        }
+        assert_eq!(b.in_use(), 0);
+        assert_eq!(b.peak(), 130);
+        b.reset_peak();
+        assert_eq!(b.peak(), 0);
+        // Unbounded never refuses.
+        let u = MemoryBudget::unbounded();
+        assert_eq!(u.limit(), None);
+        assert!(u.try_reserve(u64::MAX / 2).is_some());
+        assert_eq!(u.headroom(), u64::MAX);
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // The classic IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn run_round_trips_bit_identically() {
+        let t = mixed_table(500);
+        let before = m::snapshot();
+        let st = spill_table(&t).unwrap();
+        assert_eq!(st.num_rows(), 500);
+        assert_eq!(st.byte_size(), t.byte_size());
+        assert!(st.file_bytes() > 0);
+        let back = st.restore().unwrap();
+        assert!(bits_equal(&t, &back), "restore must be bit-identical");
+        assert_eq!(
+            st.fingerprint_streamed().unwrap(),
+            t.multiset_fingerprint()
+        );
+        let d = m::snapshot().since(before);
+        assert!(d.bytes_spilled >= t.byte_size() as u64);
+        assert!(d.bytes_restored >= t.byte_size() as u64);
+        assert!(d.runs >= 1);
+    }
+
+    #[test]
+    fn multi_block_runs_stream_in_order() {
+        let t = mixed_table(300);
+        let mut w = RunWriter::create(t.schema().clone()).unwrap();
+        for start in (0..300).step_by(100) {
+            w.write_table(&t.slice(start, 100)).unwrap();
+        }
+        assert_eq!(w.num_rows(), 300);
+        let st = w.finish().unwrap();
+        assert_eq!(st.num_blocks(), 3);
+        let mut r = st.reader().unwrap();
+        let mut rows = 0usize;
+        while let Some(block) = r.next_block().unwrap() {
+            assert!(bits_equal(&t.slice(rows, block.num_rows()), &block));
+            rows += block.num_rows();
+        }
+        assert_eq!(rows, 300);
+        // Blocks concatenated == original.
+        assert!(bits_equal(&st.restore().unwrap(), &t));
+    }
+
+    #[test]
+    fn empty_and_sliced_tables_round_trip() {
+        let t = mixed_table(10);
+        let empty = t.slice(0, 0);
+        let st = spill_table(&empty).unwrap();
+        assert_eq!(st.num_rows(), 0);
+        assert_eq!(st.restore().unwrap().num_rows(), 0);
+        // A mid-table window serializes only its visible rows.
+        let win = t.slice(3, 4);
+        let st = spill_table(&win).unwrap();
+        assert!(bits_equal(&st.restore().unwrap(), &win));
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let t = mixed_table(64);
+        let st = spill_table(&t).unwrap();
+        // Flip one payload byte (first i64 column byte, after the 16-byte
+        // block header + 9-byte column header).
+        let path = st.file.path().to_path_buf();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[16 + 9] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = st.restore().unwrap_err().to_string();
+        assert!(err.contains("CRC mismatch"), "{err}");
+        // Truncation is a typed error too.
+        bytes.truncate(bytes.len() - 3);
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(st.restore().is_err());
+    }
+
+    #[test]
+    fn schema_is_validated_on_write_and_read() {
+        let t = mixed_table(8);
+        let mut w = RunWriter::create(t.schema().clone()).unwrap();
+        let other = Table::new(
+            Schema::of(&[("x", DataType::Int64)]),
+            vec![Column::from_i64(vec![1])],
+        )
+        .unwrap();
+        assert!(w.write_table(&other).is_err());
+        w.write_table(&t).unwrap();
+        let st = w.finish().unwrap();
+        // Reading under a wrong schema fails fast on arity/tag checks.
+        let wrong = RunReader::open(
+            st.file.clone(),
+            Schema::of(&[("x", DataType::Int64)]),
+        )
+        .unwrap();
+        let mut wrong = wrong;
+        assert!(wrong.next_block().is_err());
+    }
+
+    #[test]
+    fn spill_file_deleted_on_drop() {
+        let t = mixed_table(4);
+        let st = spill_table(&t).unwrap();
+        let path = st.file.path().to_path_buf();
+        assert!(path.exists());
+        drop(st);
+        assert!(!path.exists(), "temp run must be deleted with its handle");
+    }
+}

@@ -89,6 +89,13 @@ fn mixed_width_saturation() {
 /// pilot, concurrent tasks, or subsequent submissions.
 #[test]
 fn failure_isolation_across_many_tasks() {
+    use radical_cylon::util::faults::{self, FaultPlan, FireMode};
+    let _guard = faults::test_guard();
+    faults::arm(
+        FaultPlan::new(53)
+            .with_arm("agent.task", FireMode::Prob(1.0))
+            .with_only("stackfail"),
+    );
     let session = Session::new("faults");
     let pilot = session
         .pilot_manager()
@@ -97,7 +104,7 @@ fn failure_isolation_across_many_tasks() {
     let tm = session.task_manager(&pilot);
     let mut handles = Vec::new();
     for i in 0..9 {
-        let name = if i % 3 == 1 { format!("__fail__{i}") } else { format!("ok{i}") };
+        let name = if i % 3 == 1 { format!("stackfail{i}") } else { format!("ok{i}") };
         handles.push(
             tm.submit(TaskDescription::sort(&name, 2, 100, DataDist::Uniform))
                 .unwrap(),
@@ -114,6 +121,7 @@ fn failure_isolation_across_many_tasks() {
         .unwrap();
     assert!(h.wait().unwrap().is_done());
     pilot.shutdown();
+    faults::disarm();
 }
 
 /// ETL-style DAG across heterogeneous ops, verifying wave overlap.

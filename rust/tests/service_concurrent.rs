@@ -174,36 +174,11 @@ fn result_cache_hits_are_bit_identical_and_counted() {
     svc.shutdown().unwrap();
 }
 
-/// A query whose task fails (injected via the `__fail__` name
-/// convention) fails alone: concurrent healthy queries complete with
-/// correct results, and the service keeps serving afterwards.
-#[test]
-fn failures_are_contained_to_their_query() {
-    let svc = QueryService::start(svc_cfg(4, 16)).unwrap();
-    let poisoned = Plan::generate(2, GenSpec::uniform(300, 150, 1))
-        .sort("key")
-        .named("__fail__sort")
-        .collect();
-    let bad = svc.submit(poisoned).unwrap();
-    let good: Vec<_> = (0..4)
-        .map(|m| svc.submit(plan_m(m, 400)).unwrap())
-        .collect();
-    let err = bad.join().unwrap_err();
-    assert!(err.to_string().contains("__fail__"), "{err}");
-    assert_eq!(bad.status(), QueryState::Failed);
-    for h in good {
-        let r = h.join().unwrap();
-        assert!(r.output_rows > 0);
-    }
-    // Service still healthy after a tenant failure.
-    assert!(svc.run(plan_m(0, 400)).is_ok());
-    svc.shutdown().unwrap();
-}
-
-/// The structured twin of [`failures_are_contained_to_their_query`]: the
-/// poisoned query fails through a seeded `agent.task` fault arm (scoped
-/// by name prefix) instead of the deprecated `__fail__` name hack, with
-/// the same containment guarantees.
+/// A query whose task fails (through a seeded `agent.task` fault arm,
+/// scoped by name prefix) fails alone: concurrent healthy queries
+/// complete with correct results, and the service keeps serving
+/// afterwards. (This is the scoped replacement for the removed
+/// `__fail__` task-name shim.)
 #[test]
 fn injected_faults_are_contained_to_their_query() {
     use radical_cylon::util::faults::{self, FaultPlan, FireMode};
